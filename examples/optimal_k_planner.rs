@@ -1,0 +1,68 @@
+//! §IV planner: how many packet copies to send, and on how many nodes.
+//!
+//! ```bash
+//! cargo run --release --example optimal_k_planner [-- --p 0.1 --w 10]
+//! ```
+//!
+//! For a grid operator: given measured loss, bandwidth and RTT, sweep the
+//! packet-copy count k and the node count n for every communication class
+//! and print the best operating points under both §IV criteria
+//! (min k·ρ̂^k and max S_E), plus the §II closed-form node optima.
+
+use lbsp::model::conceptual::optimal_n_closed_form;
+use lbsp::model::lbsp::{optimal_k_min_krho, optimal_k_speedup};
+use lbsp::model::{Comm, LbspParams};
+use lbsp::util::cli::Args;
+use lbsp::util::tables::{fmt_num, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let p: f64 = args.get_parsed_or("p", 0.045);
+    let w_hours: f64 = args.get_parsed_or("w", 10.0);
+    let kmax: u32 = args.get_parsed_or("kmax", 12u32);
+
+    println!("planner inputs: p={p}, W={w_hours}h, alpha/beta from Table II defaults\n");
+
+    let mut t = Table::new(vec![
+        "c(n)",
+        "best n (closed form, Sec II)",
+        "k* (min k*rho^k)",
+        "k* (max S_E)",
+        "S_E at best k",
+    ]);
+    for comm in Comm::figure_classes() {
+        // Evaluate at the paper's largest grid unless an optimum binds.
+        let n_closed = optimal_n_closed_form(p, 1, comm);
+        let n_eval = n_closed.unwrap_or(131072.0).min(131072.0).max(2.0);
+        let base = LbspParams {
+            w: w_hours * 3600.0,
+            n: n_eval,
+            p,
+            comm,
+            ..Default::default()
+        };
+        let (k_mk, _) = optimal_k_min_krho(p, comm.eval(n_eval), kmax);
+        let (k_s, s) = optimal_k_speedup(&base, kmax);
+        t.row(vec![
+            comm.label(),
+            n_closed.map(fmt_num).unwrap_or_else(|| "monotone/numeric".into()),
+            k_mk.to_string(),
+            k_s.to_string(),
+            fmt_num(s),
+        ]);
+    }
+    println!("{}", t.ascii());
+
+    // Detail for one class: the full k sweep (Fig 10's underlying data).
+    let comm = Comm::Quadratic;
+    let base = LbspParams { w: w_hours * 3600.0, n: 4096.0, p, comm, ..Default::default() };
+    println!("k sweep at n=4096, {}:", comm.label());
+    for k in 1..=kmax {
+        let m = LbspParams { k, ..base };
+        println!(
+            "  k={k:<2} rho^k={:<9} S_E={}",
+            fmt_num(m.rho()),
+            fmt_num(m.speedup())
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! The synthetic PlanetLab measurement campaign (paper §I-A, Figs 1–3).
+//!
+//! ```bash
+//! cargo run --release --example planetlab_campaign [-- --pairs 100]
+//! ```
+//!
+//! Probes random node pairs over the simulated WAN, exactly as the paper
+//! probed `.edu` PlanetLab pairs, and prints the three figure series plus
+//! the derived model parameters (p, α, β) a grid scheduler would feed
+//! into the L-BSP planner.
+
+use lbsp::measure::{run_campaign, CampaignConfig};
+use lbsp::report::fig1_3;
+use lbsp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = CampaignConfig {
+        n_pairs: args.get_parsed_or("pairs", 100usize),
+        probes: args.get_parsed_or("probes", 300usize),
+        seed: args.get_parsed_or("seed", 0x9_1ABu64),
+        ..Default::default()
+    };
+
+    for artifact in fig1_3(&cfg) {
+        artifact.print();
+    }
+
+    // Derive the model triple the rest of the pipeline consumes.
+    let points = run_campaign(&cfg);
+    let mid = &points[points.len() / 2];
+    println!("derived L-BSP parameters at packet size {} B:", mid.size);
+    println!("  p     = {:.4}", mid.loss.mean());
+    println!(
+        "  alpha = {:.6} s  ({} B / {:.1} MB/s)",
+        mid.size as f64 / (mid.bandwidth_mbytes.mean() * 1e6),
+        mid.size,
+        mid.bandwidth_mbytes.mean()
+    );
+    println!("  beta  = {:.4} s", mid.rtt.mean());
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the L-BSP model in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API top-down: per-round success probabilities, the
+//! eq (3) retransmission expectation, the eq (6) speedup, the optimal
+//! packet-copy planner, and one simulated lossy communication phase.
+
+use lbsp::model::lbsp::optimal_k_speedup;
+use lbsp::model::rho::{rho_selective_pk, round_success};
+use lbsp::model::{Comm, LbspParams};
+use lbsp::net::link::Link;
+use lbsp::net::protocol::{run_phase, PhaseConfig, Transfer};
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+
+fn main() {
+    // 1. A PlanetLab-like operating point (paper Figs 1–3): 4.5% loss,
+    //    17.5 MB/s, 69 ms RTT, 64 KiB packets.
+    let p = 0.045;
+    println!("per-round success, k=1: {:.4}", round_success(p, 1));
+    println!("per-round success, k=3: {:.6}", round_success(p, 3));
+
+    // 2. Expected transmissions for a 1024-packet phase (eq 3).
+    let rho = rho_selective_pk(p, 1, 1024.0);
+    println!("rho_hat(p=0.045, c=1024) = {rho:.3}");
+
+    // 3. Expected speedup of a W = 4 h job on 4096 nodes with c(n) = n
+    //    communication (eq 6).
+    let m = LbspParams {
+        w: 4.0 * 3600.0,
+        n: 4096.0,
+        p,
+        k: 1,
+        comm: Comm::Linear,
+        ..Default::default()
+    };
+    println!(
+        "S_E(n=4096, c(n)=n, W=4h) = {:.1}  (granularity G = {:.1})",
+        m.speedup(),
+        m.granularity()
+    );
+
+    // 4. How many packet copies should we send? (§IV)
+    let (k_star, s_star) = optimal_k_speedup(&m, 12);
+    println!("optimal k = {k_star}  -> S_E = {s_star:.1}");
+
+    // 5. Run one reliable communication phase over the simulated lossy
+    //    WAN and watch the paper's protocol at work.
+    let topo = Topology::uniform(8, Link::from_mbytes(17.5, 0.069), p);
+    let mut net = Network::new(topo, 42);
+    let transfers: Vec<Transfer> = (1..8).map(|dst| Transfer { src: 0, dst, bytes: 1 << 16 }).collect();
+    let report = run_phase(
+        &mut net,
+        &transfers,
+        &PhaseConfig { copies: k_star, timeout_s: 0.2, ..Default::default() },
+    );
+    println!(
+        "simulated phase: rounds={} data_packets={} completed={}",
+        report.rounds, report.data_packets_sent, report.completed
+    );
+}

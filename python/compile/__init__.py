@@ -1,0 +1,7 @@
+"""Build-time compile package for the L-BSP reproduction.
+
+Layer 1 (Pallas kernels) and Layer 2 (JAX model graphs) live here.
+Python is NEVER on the request path: `aot.py` lowers every entrypoint to
+HLO text once (`make artifacts`) and the rust coordinator loads the
+artifacts via PJRT.
+"""

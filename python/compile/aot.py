@@ -1,0 +1,119 @@
+"""AOT lowering: every Layer-2 entrypoint -> HLO *text* artifact.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 rust crate links) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/gen_hlo.py.
+
+Each artifact is lowered with ``return_tuple=True``; the rust runtime
+unwraps with ``to_tuple1()``.  A ``manifest.txt`` records the interface
+(name, input shapes/dtypes, output shape) and is parsed by
+``rust/src/runtime/artifacts.rs`` for validation.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT shapes. The coordinator pads/batches to these.
+GRID_N = 8192          # parameter-grid points per execute
+JACOBI_TILE = (128, 128)
+MATMUL_BLOCK = (256, 256)
+BITONIC_N = 512        # keys per node list
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big dense constants as `constant({...})`, which the HLO text parser
+    # on the rust side (xla_extension 0.5.1) silently turns into garbage —
+    # the bitonic stage masks were the first victim.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def entrypoints():
+    """(name, wrapped-fn, example-arg-specs) for every artifact."""
+    g = _spec((GRID_N,))
+
+    def rho_entry(ps, c):
+        return (model.rho_hat_grid(ps, c),)
+
+    def surface_entry(n, c, p, k, w, alpha, beta):
+        return (model.speedup_surface(n, c, p, k, w, alpha, beta),)
+
+    def jacobi_entry(x):
+        return (model.jacobi_superstep(x, sweeps=1),)
+
+    def matmul_entry(c_acc, a, b):
+        return (model.matmul_superstep(c_acc, a, b),)
+
+    def bitonic_entry(mine, theirs, keep_low):
+        return (model.bitonic_merge_step(mine, theirs, keep_low),)
+
+    return [
+        ("rho_hat", rho_entry, [g, g]),
+        ("speedup_surface", surface_entry, [g] * 7),
+        ("jacobi_step", jacobi_entry, [_spec(JACOBI_TILE)]),
+        ("matmul_block", matmul_entry, [_spec(MATMUL_BLOCK)] * 3),
+        (
+            "bitonic_merge",
+            bitonic_entry,
+            [_spec((BITONIC_N,)), _spec((BITONIC_N,)), _spec(())],
+        ),
+    ]
+
+
+def _iface_line(name, specs, out_specs) -> str:
+    def fmt(s):
+        dims = ",".join(str(d) for d in s.shape)
+        return f"f32[{dims}]"
+
+    ins = ";".join(fmt(s) for s in specs)
+    outs = ";".join(fmt(s) for s in out_specs)
+    return f"{name} inputs={ins} output={outs}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs in entrypoints():
+        lowered = jax.jit(fn).lower(*specs)
+        text = _to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = [
+            jax.ShapeDtypeStruct(o.shape, o.dtype)
+            for o in jax.eval_shape(fn, *specs)
+        ]
+        manifest.append(_iface_line(name, specs, out_specs))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the L-BSP reproduction.
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpec structure is still written for TPU
+idiom — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .rho_hat import rho_hat
+from .jacobi import jacobi_step
+from .matmul_block import matmul_block
+from .bitonic import compare_swap, bitonic_sort
+
+__all__ = [
+    "rho_hat",
+    "jacobi_step",
+    "matmul_block",
+    "compare_swap",
+    "bitonic_sort",
+]

@@ -1,0 +1,82 @@
+"""Pallas kernel: bitonic compare-exchange stage (paper §V-B local compute).
+
+Batcher's bitonic mergesort does log2(P)(log2(P)+1)/2 merge steps across
+nodes; inside a node each step is a sequence of compare-exchange stages.
+The L1 kernel is one stage: given the values, their stage partners and a
+keep-min mask it performs the elementwise min/max select.  Layer 2
+(`bitonic_sort`) unrolls the full stage schedule; the partner permutation
+``i ^ d`` is realised as reshape→reverse→reshape (swapping the halves of
+every 2d-block), NOT as a gather — the xla_extension 0.5.1 runtime the
+rust side links miscompiles constant-index gathers (see DESIGN.md §Perf
+notes), and reverse also maps better onto TPU lane shuffles.
+
+TPU adaptation: compare-exchange is pure VPU select work on (8, 128)
+lanes; the block-reverse is a lane shuffle, never an HBM gather.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _cswap_kernel(x_ref, y_ref, m_ref, o_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    keep_min = m_ref[...] > 0.5
+    o_ref[...] = jnp.where(keep_min, jnp.minimum(x, y), jnp.maximum(x, y))
+
+
+def compare_swap(x: jax.Array, y: jax.Array, keep_min: jax.Array) -> jax.Array:
+    """Elementwise bitonic compare-exchange: min where mask, else max.
+
+    ``keep_min`` is an f32 0/1 mask so every kernel operand shares one
+    dtype (simplifies the AOT artifact interface).
+    """
+    if not (x.shape == y.shape == keep_min.shape):
+        raise ValueError(
+            f"shape mismatch: {x.shape}, {y.shape}, {keep_min.shape}"
+        )
+    return pl.pallas_call(
+        _cswap_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        keep_min.astype(jnp.float32),
+    )
+
+
+def _stage_constants(n: int):
+    """Static (distance, keep-min mask) pairs for a full bitonic sort."""
+    stages = []
+    lanes = np.arange(n)
+    log_n = int(np.log2(n))
+    for stage in range(1, log_n + 1):
+        for sub in range(stage, 0, -1):
+            d = 1 << (sub - 1)
+            descending = ((lanes >> stage) & 1).astype(bool)
+            is_lower = (lanes & d) == 0
+            keep_min = np.where(descending, ~is_lower, is_lower)
+            stages.append((d, keep_min.astype(np.float32)))
+    return stages
+
+
+def _partner(x: jax.Array, d: int) -> jax.Array:
+    """y[i] = x[i ^ d] via reshape→reverse→reshape (gather-free)."""
+    n = x.shape[0]
+    return x.reshape(n // (2 * d), 2, d)[:, ::-1, :].reshape(n)
+
+
+def bitonic_sort(x: jax.Array) -> jax.Array:
+    """Full ascending bitonic sort of a power-of-two length-N vector."""
+    (n,) = x.shape
+    if n & (n - 1):
+        raise ValueError(f"N={n} must be a power of two")
+    if n == 1:
+        return x.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    for d, keep_min in _stage_constants(n):
+        x = compare_swap(x, _partner(x, d), jnp.asarray(keep_min))
+    return x

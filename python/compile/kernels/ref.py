@@ -1,0 +1,63 @@
+"""Pure-numpy / pure-jnp oracles for every Layer-1 kernel.
+
+These are the CORE correctness signal: pytest compares each Pallas kernel
+against the oracle here, and the oracles themselves are checked against
+closed forms where one exists (rho_hat at c=1 equals 1/p_s, Jacobi fixes
+harmonic functions, bitonic matches np.sort).
+Double precision throughout so truncation/accumulation error of the f32
+kernels is visible, not masked.
+"""
+
+import numpy as np
+
+
+def rho_hat_ref(q, c, i_max: int = 4096) -> np.ndarray:
+    """Eq. (3) via the tail-sum identity, float64, generous truncation.
+
+    ``q`` is the per-packet failure probability 1 - p_s, matching the
+    kernel interface (see rho_hat.py for the f32 cancellation rationale).
+    """
+    q = np.asarray(q, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    acc = np.ones_like(q)  # i = 0 term
+    qi = q.copy()
+    for _ in range(1, i_max):
+        term = -np.expm1(c * np.log1p(-qi))
+        acc += term
+        qi *= q
+        if np.all(term < 1e-15):
+            break
+    return acc
+
+
+def speedup_surface_ref(n, c, p, k, w, alpha, beta) -> np.ndarray:
+    """Paper eq. (6): S_E = n / (1 + 2k rho c alpha / w + 2 n beta rho / w)."""
+    n = np.asarray(n, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    p = np.asarray(p, dtype=np.float64)
+    k = np.asarray(k, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    alpha = np.asarray(alpha, dtype=np.float64)
+    beta = np.asarray(beta, dtype=np.float64)
+    pk = p**k
+    q = pk * (2.0 - pk)
+    rho = rho_hat_ref(q, c)
+    return n / (1.0 + 2.0 * k * rho * c * alpha / w + 2.0 * n * beta * rho / w)
+
+
+def jacobi_ref(x) -> np.ndarray:
+    """One Jacobi sweep, Dirichlet boundary held."""
+    x = np.asarray(x, dtype=np.float64)
+    out = x.copy()
+    out[1:-1, 1:-1] = 0.25 * (
+        x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, :-2] + x[1:-1, 2:]
+    )
+    return out
+
+
+def matmul_ref(a, b) -> np.ndarray:
+    return np.asarray(a, dtype=np.float64) @ np.asarray(b, dtype=np.float64)
+
+
+def sort_ref(x) -> np.ndarray:
+    return np.sort(np.asarray(x, dtype=np.float64))

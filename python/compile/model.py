@@ -1,0 +1,77 @@
+"""Layer-2 JAX model graphs for the L-BSP reproduction.
+
+Each function here is an AOT entrypoint: jitted, lowered to HLO text by
+`aot.py`, and executed from the rust coordinator via PJRT.  They call the
+Layer-1 Pallas kernels so kernel + surrounding math lower into one HLO
+module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic_sort, jacobi_step, matmul_block, rho_hat
+
+
+def rho_hat_grid(q: jax.Array, c: jax.Array) -> jax.Array:
+    """rho_hat over a parameter grid — the eq.(3) numeric evaluator.
+
+    ``q`` is the per-packet failure probability 1 - p_s (see kernel doc
+    for why the failure side is the numerically safe interface).
+    """
+    return rho_hat(q, c)
+
+
+def speedup_surface(
+    n: jax.Array,
+    c: jax.Array,
+    p: jax.Array,
+    k: jax.Array,
+    w: jax.Array,
+    alpha: jax.Array,
+    beta: jax.Array,
+) -> jax.Array:
+    """Paper eq. (6): expected L-BSP speedup with k packet copies.
+
+        S_E = n / (1 + 2 k rho^k c(n) alpha / w + 2 n beta rho^k / w)
+
+    All seven parameters are per-point arrays of one shape so a single
+    artifact evaluates any figure: sweeps are batched by the coordinator.
+    """
+    pk = p**k
+    # q = 1 - (1 - p^k)^2 = p^k (2 - p^k), formed without cancellation.
+    q = pk * (2.0 - pk)
+    rho = rho_hat(q, c)
+    return n / (1.0 + 2.0 * k * rho * c * alpha / w + 2.0 * n * beta * rho / w)
+
+
+def jacobi_superstep(x: jax.Array, sweeps: int) -> jax.Array:
+    """`sweeps` Jacobi sweeps on a node-local tile (one L-BSP superstep
+    of §V-D local compute between halo exchanges)."""
+    for _ in range(sweeps):
+        x = jacobi_step(x)
+    return x
+
+
+def matmul_superstep(c_acc: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """One §V-A superstep: C += A_ik @ B_kj on node-local submatrices."""
+    return c_acc + matmul_block(a, b)
+
+
+def bitonic_local_sort(x: jax.Array) -> jax.Array:
+    """§V-B phase 1: node-local ascending sort producing bitonic input."""
+    return bitonic_sort(x)
+
+
+def bitonic_merge_step(mine: jax.Array, theirs: jax.Array, keep_low: jax.Array
+                       ) -> jax.Array:
+    """§V-B merge step j of stage S: merge the local list with the
+    partner's list and keep the lower or upper half.
+
+    ``keep_low`` is a scalar f32 flag (1.0 = keep the lower half, i.e.
+    this node's rank bit for the stage is 0).
+    """
+    n = mine.shape[0]
+    merged = bitonic_sort(jnp.concatenate([mine, theirs]))
+    low = merged[:n]
+    high = merged[n:]
+    return jnp.where(keep_low > 0.5, low, high)

@@ -1,0 +1,135 @@
+"""Jacobi stencil, blocked matmul and bitonic kernels vs oracles."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import (
+    bitonic_sort,
+    compare_swap,
+    jacobi_step,
+    matmul_block,
+)
+from compile.kernels.ref import jacobi_ref, matmul_ref, sort_ref
+
+rng = np.random.default_rng(0x1B5B)
+
+
+# ---------------------------------------------------------------- Jacobi
+def test_jacobi_matches_oracle():
+    x = rng.normal(size=(16, 24)).astype(np.float32)
+    got = np.asarray(jacobi_step(x))
+    np.testing.assert_allclose(got, jacobi_ref(x), rtol=1e-5, atol=1e-6)
+
+
+def test_jacobi_preserves_harmonic_function():
+    # f(x, y) = x + y is harmonic: a sweep must be a fixed point.
+    i, j = np.meshgrid(np.arange(12.0), np.arange(12.0), indexing="ij")
+    f = (i + j).astype(np.float32)
+    got = np.asarray(jacobi_step(f))
+    np.testing.assert_allclose(got, f, rtol=1e-5, atol=1e-5)
+
+
+def test_jacobi_boundary_fixed():
+    x = rng.normal(size=(9, 9)).astype(np.float32)
+    got = np.asarray(jacobi_step(x))
+    np.testing.assert_array_equal(got[0, :], x[0, :])
+    np.testing.assert_array_equal(got[-1, :], x[-1, :])
+    np.testing.assert_array_equal(got[:, 0], x[:, 0])
+    np.testing.assert_array_equal(got[:, -1], x[:, -1])
+
+
+def test_jacobi_superstep_composes():
+    x = rng.normal(size=(8, 8)).astype(np.float32)
+    got = np.asarray(model.jacobi_superstep(x, sweeps=3))
+    want = jacobi_ref(jacobi_ref(jacobi_ref(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(min_value=3, max_value=40),
+    w=st.integers(min_value=3, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_jacobi_hypothesis_shapes(h, w, seed):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(h, w)).astype(np.float32)
+    got = np.asarray(jacobi_step(x))
+    np.testing.assert_allclose(got, jacobi_ref(x), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- Matmul
+def test_matmul_block_matches_oracle():
+    a = rng.normal(size=(256, 128)).astype(np.float32)
+    b = rng.normal(size=(128, 384)).astype(np.float32)
+    got = np.asarray(matmul_block(a, b))
+    np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-3, atol=1e-2)
+
+
+def test_matmul_identity():
+    a = np.eye(128, dtype=np.float32)
+    b = rng.normal(size=(128, 128)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(matmul_block(a, b)), b, rtol=1e-5)
+
+
+def test_matmul_superstep_accumulates():
+    c0 = rng.normal(size=(128, 128)).astype(np.float32)
+    a = rng.normal(size=(128, 128)).astype(np.float32)
+    b = rng.normal(size=(128, 128)).astype(np.float32)
+    got = np.asarray(model.matmul_superstep(c0, a, b))
+    np.testing.assert_allclose(
+        got, c0 + matmul_ref(a, b), rtol=1e-3, atol=1e-2
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    mi=st.integers(min_value=1, max_value=3),
+    ni=st.integers(min_value=1, max_value=3),
+    ki=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matmul_hypothesis_block_multiples(mi, ni, ki, seed):
+    r = np.random.default_rng(seed)
+    a = r.normal(size=(128 * mi, 128 * ki)).astype(np.float32)
+    b = r.normal(size=(128 * ki, 128 * ni)).astype(np.float32)
+    got = np.asarray(matmul_block(a, b))
+    np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-3, atol=5e-2)
+
+
+# ---------------------------------------------------------------- Bitonic
+def test_bitonic_sort_matches_np_sort():
+    x = rng.normal(size=512).astype(np.float32)
+    got = np.asarray(bitonic_sort(x))
+    np.testing.assert_allclose(got, sort_ref(x), rtol=0, atol=0)
+
+
+def test_compare_swap_minmax():
+    x = np.array([3.0, 1.0, 5.0, 2.0], dtype=np.float32)
+    y = np.array([1.0, 3.0, 2.0, 5.0], dtype=np.float32)
+    m = np.array([1.0, 1.0, 0.0, 0.0], dtype=np.float32)
+    got = np.asarray(compare_swap(x, y, m))
+    np.testing.assert_array_equal(got, [1.0, 1.0, 5.0, 5.0])
+
+
+def test_bitonic_merge_step_low_high_halves():
+    mine = rng.normal(size=64).astype(np.float32)
+    theirs = rng.normal(size=64).astype(np.float32)
+    both = np.concatenate([mine, theirs])
+    low = np.asarray(model.bitonic_merge_step(mine, theirs, np.float32(1.0)))
+    high = np.asarray(model.bitonic_merge_step(mine, theirs, np.float32(0.0)))
+    np.testing.assert_array_equal(low, np.sort(both)[:64])
+    np.testing.assert_array_equal(high, np.sort(both)[64:])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    log_n=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_bitonic_hypothesis_sizes(log_n, seed):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=2**log_n).astype(np.float32)
+    got = np.asarray(bitonic_sort(x))
+    np.testing.assert_array_equal(got, np.sort(x))

@@ -1,0 +1,105 @@
+"""Kernel-vs-oracle tests for the eq.(3) rho_hat series.
+
+The kernel interface is the per-packet failure probability
+q = 1 - p_s = p^k (2 - p^k); helpers here convert from the paper's
+(p, k) parameterization in float64 before casting down.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rho_hat
+from compile.kernels.ref import rho_hat_ref
+
+BLOCK = 1024
+
+
+def q_of(p, k=1):
+    pk = np.asarray(p, dtype=np.float64) ** k
+    return pk * (2.0 - pk)
+
+
+def _pad(a, n=BLOCK):
+    out = np.full(n, a[0] if len(a) else 0.5, dtype=np.float32)
+    out[: len(a)] = a
+    return out
+
+
+def run_kernel(q, c):
+    q = np.atleast_1d(np.asarray(q, dtype=np.float32))
+    c = np.atleast_1d(np.asarray(c, dtype=np.float32))
+    k = np.asarray(rho_hat(_pad(q), _pad(c)))
+    return k[: len(q)]
+
+
+def test_matches_oracle_grid():
+    q_vals = q_of([0.0005, 0.01, 0.045, 0.1, 0.15, 0.3])
+    c_vals = [1.0, 10.0, 1024.0, 2.0**17, 2.0**25]
+    q, c = np.meshgrid(q_vals, c_vals)
+    got = run_kernel(q.ravel(), c.ravel())
+    want = rho_hat_ref(q.ravel(), c.ravel())
+    np.testing.assert_allclose(got, want, rtol=2e-4)
+
+
+def test_closed_form_c_equals_1():
+    # For a single packet rho_hat is the geometric mean 1/p_s.
+    ps = np.array([0.25, 0.5, 0.81, 0.9025, 0.999], dtype=np.float64)
+    got = run_kernel(1.0 - ps, np.ones_like(ps))
+    np.testing.assert_allclose(got, 1.0 / ps, rtol=2e-4)
+
+
+def test_perfect_delivery_is_one_transmission():
+    got = run_kernel([0.0, 0.0], [1.0, 2.0**20])
+    np.testing.assert_allclose(got, [1.0, 1.0], rtol=1e-6)
+
+
+def test_total_loss_saturates_at_truncation():
+    # q = 1 (p_s = 0) means the system never terminates; the kernel
+    # saturates after the i=0 term plus I_MAX more (the while_loop's
+    # safety bound) — callers treat values ~I_MAX as "fails to operate".
+    got = run_kernel([1.0], [4.0])
+    assert got[0] == pytest.approx(513.0, rel=1e-5)
+
+
+def test_monotone_in_c_and_loss():
+    # More packets per phase, or lossier links, can only add transmissions.
+    got_c = run_kernel([0.19] * 3, [1.0, 100.0, 10000.0])
+    assert got_c[0] < got_c[1] < got_c[2]
+    got_q = run_kernel([0.05, 0.19, 0.51], [128.0] * 3)
+    assert got_q[0] < got_q[1] < got_q[2]
+
+
+def test_tiny_q_has_full_relative_precision():
+    # The reason q (not p_s) is the interface: q = 1.36e-6 must not lose
+    # precision. rho - 1 ~ q * H(c) here, so check the excess over 1.
+    q = np.array([1.36e-6])
+    c = np.array([1.0e5])
+    got = run_kernel(q, c)
+    want = rho_hat_ref(q, c)
+    np.testing.assert_allclose(got - 1.0, want - 1.0, rtol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    p=st.floats(min_value=0.0005, max_value=0.4),
+    c=st.floats(min_value=1.0, max_value=2.0**26),
+    k=st.integers(min_value=1, max_value=7),
+)
+def test_hypothesis_matches_oracle(p, c, k):
+    q = q_of(p, k)
+    got = run_kernel([q], [c])
+    want = rho_hat_ref([q], [c])
+    np.testing.assert_allclose(got, want, rtol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    p=st.floats(min_value=0.001, max_value=0.3),
+    c=st.floats(min_value=1.0, max_value=2.0**20),
+    k=st.integers(min_value=2, max_value=7),
+)
+def test_packet_copies_reduce_retransmissions(p, c, k):
+    # Paper §II eq.(2): k copies never hurt.
+    got = run_kernel([q_of(p, 1), q_of(p, k)], [c, c])
+    assert got[1] <= got[0] + 1e-3

@@ -1,0 +1,67 @@
+"""Edge-of-envelope tests for the while_loop early-exit in rho_hat.
+
+The §Perf pass replaced the fixed 512-trip series with a stripe-wide
+convergence check; these tests pin the behaviours that change could
+plausibly break: mixed fast/slow lanes in one stripe, extreme (q, c)
+corners, and agreement with the generous-truncation float64 oracle.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rho_hat
+from compile.kernels.ref import rho_hat_ref
+
+BLOCK = 1024
+
+
+def run(q, c):
+    q = np.asarray(q, dtype=np.float32)
+    c = np.asarray(c, dtype=np.float32)
+    n = len(q)
+    qp = np.zeros(BLOCK, dtype=np.float32)
+    cp = np.ones(BLOCK, dtype=np.float32)
+    qp[:n] = q
+    cp[:n] = c
+    return np.asarray(rho_hat(qp, cp))[:n]
+
+
+def test_mixed_convergence_lanes_in_one_stripe():
+    # One slow lane (q=0.8, needs ~80 terms) next to fast lanes (q=1e-6):
+    # the stripe-wide exit must not truncate the slow lane early.
+    q = np.array([1e-6, 0.8, 1e-6, 0.5])
+    c = np.array([10.0, 1e4, 1e6, 1e4])
+    got = run(q, c)
+    want = rho_hat_ref(q, c)
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_all_fast_lanes_still_exact():
+    # Everything converges in a couple of terms; early exit must not
+    # change the value.
+    q = np.full(16, 1e-5)
+    c = np.full(16, 100.0)
+    got = run(q, c)
+    want = rho_hat_ref(q, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_heavy_tail_lane_near_saturation():
+    # q = 0.95: series needs ~hundreds of terms; I_MAX=512 must cover it.
+    got = run([0.95], [8.0])
+    want = rho_hat_ref([0.95], [8.0])
+    np.testing.assert_allclose(got, want, rtol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q_slow=st.floats(min_value=0.3, max_value=0.9),
+    q_fast=st.floats(min_value=1e-7, max_value=1e-3),
+    c=st.floats(min_value=1.0, max_value=2.0**24),
+)
+def test_hypothesis_mixed_stripes(q_slow, q_fast, c):
+    q = np.array([q_slow, q_fast])
+    cc = np.array([c, c])
+    got = run(q, cc)
+    want = rho_hat_ref(q, cc)
+    np.testing.assert_allclose(got, want, rtol=2e-3)

@@ -1,0 +1,72 @@
+"""Layer-2 speedup surface (paper eq. 6) vs float64 oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import speedup_surface_ref
+
+GRID = 1024
+
+
+def run_surface(n, c, p, k, w, alpha, beta):
+    arrs = [
+        np.asarray(a, dtype=np.float32) for a in (n, c, p, k, w, alpha, beta)
+    ]
+    m = len(arrs[0])
+    padded = []
+    for a in arrs:
+        out = np.ones(GRID, dtype=np.float32)
+        out[:m] = a
+        padded.append(out)
+    got = np.asarray(model.speedup_surface(*padded))
+    return got[:m]
+
+
+def test_matches_oracle_figure8_point():
+    # A Fig. 8-style operating point: W = 4 h, alpha/beta from Figs 2-3.
+    n = np.array([2.0, 64.0, 1024.0, 131072.0])
+    c = n  # c(n) = n panel
+    p = np.full(4, 0.045)
+    k = np.ones(4)
+    w = np.full(4, 4 * 3600.0)
+    alpha = np.full(4, 0.0037)
+    beta = np.full(4, 0.069)
+    got = run_surface(n, c, p, k, w, alpha, beta)
+    want = speedup_surface_ref(n, c, p, k, w, alpha, beta)
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_zero_loss_reduces_to_rho_one():
+    # p = 0: S_E = n / (1 + 2 k c alpha / w + 2 n beta / w).
+    n = np.array([16.0])
+    c = np.array([16.0])
+    got = run_surface(n, c, [0.0], [1.0], [3600.0], [0.001], [0.05])
+    want = 16.0 / (1.0 + 2 * 16 * 0.001 / 3600 + 2 * 16 * 0.05 / 3600)
+    np.testing.assert_allclose(got, [want], rtol=1e-4)
+
+
+def test_speedup_bounded_by_n():
+    n = np.array([2.0, 256.0, 65536.0])
+    got = run_surface(
+        n, n * np.log2(n), [0.045] * 3, [2.0] * 3, [36000.0] * 3,
+        [0.0037] * 3, [0.069] * 3,
+    )
+    assert np.all(got <= n + 1e-3)
+    assert np.all(got > 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=17),
+    p=st.floats(min_value=0.0005, max_value=0.3),
+    k=st.integers(min_value=1, max_value=7),
+    w_hours=st.floats(min_value=0.1, max_value=100.0),
+)
+def test_hypothesis_matches_oracle(s, p, k, w_hours):
+    n = float(2**s)
+    c = n * np.log2(n)
+    args = ([n], [c], [p], [float(k)], [w_hours * 3600.0], [0.0037], [0.069])
+    got = run_surface(*args)
+    want = speedup_surface_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=2e-3)

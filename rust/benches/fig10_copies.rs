@@ -1,0 +1,38 @@
+//! FIG10 — speedup vs packet copies k (W = 10 h).
+//!
+//! Paper shape: for c(n) ∈ {n, n·log n, n²} speedup *deteriorates* as k
+//! grows past the optimum (k-linear α overhead); for the β-bound classes
+//! extra copies are nearly free and only help.
+
+use lbsp::coordinator::SweepCoordinator;
+use lbsp::model::lbsp::optimal_k_speedup;
+use lbsp::model::{Comm, LbspParams};
+use lbsp::report::fig10;
+use lbsp::util::bench::{bench_units, black_box};
+
+fn main() {
+    println!("=== Fig 10: speedup vs packet copies (W=10h, n=4096) ===\n");
+    let mut sweeper = SweepCoordinator::native(4);
+    for artifact in fig10(&mut sweeper, 4096) {
+        artifact.print();
+    }
+
+    println!("optimal k per class (p=0.1, n=4096, W=10h):");
+    for comm in Comm::figure_classes() {
+        let base = LbspParams {
+            w: 10.0 * 3600.0,
+            n: 4096.0,
+            p: 0.1,
+            comm,
+            ..Default::default()
+        };
+        let (k_star, s) = optimal_k_speedup(&base, 12);
+        println!("  {:<16} k* = {k_star:<3} S_E = {s:.2}", comm.label());
+    }
+
+    let pts = sweeper.metrics.points as f64;
+    bench_units("fig10 sweep, native backend", 1, 10, Some(pts), || {
+        let mut s = SweepCoordinator::native(4);
+        black_box(fig10(&mut s, 4096));
+    });
+}

@@ -1,0 +1,28 @@
+//! FIG11/FIG12 — speedup vs work size at n = 2 and n = 131072 (k = 1).
+//!
+//! Paper shape: as per-superstep work grows, speedup approaches n for
+//! every loss probability (granularity washes out the loss term); at
+//! n = 131072 the β term keeps small jobs far from linear.
+
+use lbsp::coordinator::SweepCoordinator;
+use lbsp::report::{fig11, fig12};
+use lbsp::util::bench::{bench_units, black_box};
+
+fn main() {
+    println!("=== Fig 11: speedup vs work size, n=2 ===\n");
+    let mut sweeper = SweepCoordinator::native(4);
+    for artifact in fig11(&mut sweeper) {
+        artifact.print();
+    }
+    println!("=== Fig 12: speedup vs work size, n=131072 ===\n");
+    for artifact in fig12(&mut sweeper) {
+        artifact.print();
+    }
+
+    let pts = sweeper.metrics.points as f64 / 2.0;
+    bench_units("fig11+fig12 sweeps, native backend", 1, 10, Some(pts), || {
+        let mut s = SweepCoordinator::native(4);
+        black_box(fig11(&mut s));
+        black_box(fig12(&mut s));
+    });
+}

@@ -1,0 +1,24 @@
+//! FIG1/FIG2/FIG3 — regenerate the PlanetLab measurement figures and
+//! time the campaign.
+//!
+//! Paper reference bands: loss 5–15 % (flat to 10 KB, rising toward
+//! 15 % at 25 KB), bandwidth 30–50 MB/s, RTT 0.05–0.1 s.
+
+use lbsp::measure::CampaignConfig;
+use lbsp::report::fig1_3;
+use lbsp::util::bench::bench_n;
+
+fn main() {
+    println!("=== Figs 1-3: UDP measurements over the simulated VLSG ===\n");
+    let cfg = CampaignConfig::default();
+    for artifact in fig1_3(&cfg) {
+        artifact.print();
+    }
+
+    // Timing: the full 100-pair, 7-size campaign.
+    let small = CampaignConfig { n_pairs: 20, probes: 150, ..Default::default() };
+    bench_n("measurement campaign (20 pairs x 7 sizes)", 1, 5, || {
+        let pts = lbsp::measure::run_campaign(&small);
+        assert_eq!(pts.len(), 7);
+    });
+}

@@ -1,0 +1,36 @@
+//! FIG7 — the conceptual model's speedup panels (k = 2), plus the §II
+//! closed-form optima annotated per class.
+//!
+//! Paper shape: c(n)=1 linear; c(n)=log n monotone; log²n, n, n·log n,
+//! n² each peak at an interior optimum that shrinks with p.
+
+use lbsp::model::conceptual::{optimal_n_closed_form, optimal_n_numeric};
+use lbsp::model::Comm;
+use lbsp::report::{fig7, FIGURE_PS};
+use lbsp::util::bench::{bench_units, black_box};
+
+fn main() {
+    println!("=== Fig 7: conceptual-model speedup vs n (k=2) ===\n");
+    for artifact in fig7() {
+        artifact.print();
+    }
+
+    println!("closed-form vs numeric optima (k=2):");
+    for comm in [Comm::LogSq, Comm::Linear, Comm::Quadratic] {
+        for p in FIGURE_PS {
+            let closed = optimal_n_closed_form(p, 2, comm);
+            let (n_num, _) = optimal_n_numeric(p, 2, comm, 1 << 17);
+            println!(
+                "  {} p={p}: closed {:?}, exact argmax {}",
+                comm.label(),
+                closed,
+                n_num
+            );
+        }
+    }
+
+    let points = 18 * FIGURE_PS.len() * 6;
+    bench_units("fig7 full panel generation", 1, 10, Some(points as f64), || {
+        black_box(fig7());
+    });
+}

@@ -1,0 +1,31 @@
+//! FIG8 — L-BSP speedup panels (W = 4 h, k = 1) on both evaluation
+//! backends; the PJRT artifact and the native series must agree.
+
+use lbsp::coordinator::SweepCoordinator;
+use lbsp::report::fig8;
+use lbsp::runtime::Runtime;
+use lbsp::util::bench::{bench_units, black_box};
+
+fn main() {
+    println!("=== Fig 8: L-BSP speedup (W=4h, k=1) ===\n");
+    let mut native = SweepCoordinator::native(4);
+    for artifact in fig8(&mut native) {
+        artifact.print();
+    }
+
+    let points = native.metrics.points as f64;
+    bench_units("fig8 sweep, native backend", 1, 10, Some(points), || {
+        let mut s = SweepCoordinator::native(4);
+        black_box(fig8(&mut s));
+    });
+
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let mut s = SweepCoordinator::pjrt(rt);
+            bench_units("fig8 sweep, pjrt backend", 1, 5, Some(points), || {
+                black_box(fig8(&mut s));
+            });
+        }
+        Err(e) => println!("(pjrt backend skipped: {e})"),
+    }
+}

@@ -1,0 +1,35 @@
+//! FIG9 — limits of speedup for different loss probabilities (W = 10 h).
+//!
+//! Paper shape: lower p → higher attainable speedup; high-complexity
+//! classes deteriorate fastest; even n=2 stays near-linear at high
+//! granularity.
+
+use lbsp::coordinator::SweepCoordinator;
+use lbsp::model::{Comm, LbspParams};
+use lbsp::report::fig9;
+use lbsp::util::bench::{bench_units, black_box};
+
+fn main() {
+    println!("=== Fig 9: speedup limits (W=10h, k=1) ===\n");
+    let mut sweeper = SweepCoordinator::native(4);
+    for artifact in fig9(&mut sweeper) {
+        artifact.print();
+    }
+
+    // The §III closing observation, checked numerically: n=2 with c(n)=n²
+    // and heavy loss still achieves near-linear speedup at high G.
+    let m = LbspParams {
+        w: 1000.0 * 3600.0,
+        n: 2.0,
+        p: 0.15,
+        comm: Comm::Quadratic,
+        ..Default::default()
+    };
+    println!("n=2, p=0.15, c(n)=n², W=1000h: S_E = {:.4} (linear = 2)", m.speedup());
+
+    let pts = sweeper.metrics.points as f64;
+    bench_units("fig9 sweep, native backend", 1, 10, Some(pts), || {
+        let mut s = SweepCoordinator::native(4);
+        black_box(fig9(&mut s));
+    });
+}

@@ -1,0 +1,144 @@
+//! §Perf — the whole-stack hot-path microbenches driving the
+//! optimization pass (EXPERIMENTS.md §Perf records before/after).
+//!
+//! L3: DES event throughput, phase protocol throughput, sweep backends.
+//! L2/L1 (through PJRT): rho_hat artifact latency/throughput, surface
+//! artifact throughput, compute-kernel artifact latencies.
+
+use lbsp::coordinator::SweepCoordinator;
+use lbsp::model::rho::rho_selective;
+use lbsp::model::{Comm, LbspParams};
+use lbsp::net::link::Link;
+use lbsp::net::packet::Packet;
+use lbsp::net::protocol::{run_phase, PhaseConfig, Transfer};
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::runtime::{surface, Runtime};
+use lbsp::util::bench::{bench_units, black_box};
+use lbsp::util::prng::Rng;
+
+fn sweep_points(n: usize) -> Vec<LbspParams> {
+    let mut rng = Rng::new(7);
+    (0..n)
+        .map(|_| LbspParams {
+            n: (1u64 << rng.range(0, 18)) as f64,
+            p: rng.range_f64(0.0005, 0.2),
+            k: rng.range(1, 8) as u32,
+            w: rng.range_f64(0.5, 100.0) * 3600.0,
+            comm: Comm::figure_classes()[rng.range(0, 6)],
+            ..Default::default()
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== perf hot paths ===\n-- L3: discrete-event simulator --");
+
+    // Raw transport event throughput: fire-and-drain N packets.
+    let n_pkts = 200_000u64;
+    bench_units("DES transport send+deliver", 1, 10, Some(n_pkts as f64), || {
+        let topo = Topology::uniform(2, Link::from_mbytes(1000.0, 0.001), 0.05);
+        let mut net = Network::new(topo, 1);
+        for i in 0..n_pkts {
+            net.send(Packet::data(0, 1, i, 0, 1024));
+        }
+        while net.step().is_some() {}
+        black_box(net.stats.data_delivered);
+    });
+
+    // Protocol phase throughput (packets acked end-to-end).
+    bench_units("protocol phase c=1024 p=0.1", 1, 10, Some(1024.0), || {
+        let topo = Topology::uniform(4, Link::from_mbytes(100.0, 0.01), 0.1);
+        let mut net = Network::new(topo, 2);
+        let transfers: Vec<Transfer> = (0..1024)
+            .map(|i| Transfer { src: (i % 3) as usize, dst: 3, bytes: 1024 })
+            .collect();
+        black_box(run_phase(&mut net, &transfers, &PhaseConfig::default()));
+    });
+
+    // Native rho series.
+    bench_units("native rho_selective x10k (mixed c)", 1, 10, Some(10_000.0), || {
+        for i in 0..10_000u64 {
+            black_box(rho_selective(0.087975, (1 + i * 13 % 100_000) as f64));
+        }
+    });
+
+    // Sweep backends.
+    let pts = sweep_points(50_000);
+    for workers in [1usize, 2, 4, 8] {
+        bench_units(
+            &format!("sweep 50k points, native x{workers}"),
+            1,
+            5,
+            Some(pts.len() as f64),
+            || {
+                let mut s = SweepCoordinator::native(workers);
+                black_box(s.speedups(&pts));
+            },
+        );
+    }
+
+    println!("\n-- L2/L1 through PJRT --");
+    match Runtime::load_default() {
+        Err(e) => println!("(pjrt benches skipped: {e})"),
+        Ok(rt) => {
+            let grid = rt.spec("rho_hat").unwrap().inputs[0][0];
+            let q = vec![0.0879f64; grid];
+            let c: Vec<f64> = (0..grid).map(|i| 1.0 + (i * 37 % 100_000) as f64).collect();
+            bench_units(
+                &format!("pjrt rho_hat execute ({grid}-point grid)"),
+                2,
+                10,
+                Some(grid as f64),
+                || {
+                    black_box(surface::rho_hat_batch(&rt, &q, &c).unwrap());
+                },
+            );
+
+            // NB: construct the coordinator once — compiling the artifact
+            // registry inside the timing loop would dominate the figure.
+            let mut surface_sweeper =
+                SweepCoordinator::pjrt(Runtime::load_default().expect("artifacts"));
+            bench_units("pjrt speedup_surface sweep 50k", 1, 5, Some(pts.len() as f64), || {
+                black_box(surface_sweeper.speedups(&pts));
+            });
+
+            let (h, w) = surface::jacobi_tile_shape(&rt).unwrap();
+            let tile = vec![1.0f32; h * w];
+            bench_units(
+                &format!("pjrt jacobi_step ({h}x{w} tile)"),
+                2,
+                20,
+                Some((h * w) as f64),
+                || {
+                    black_box(surface::jacobi_step(&rt, &tile).unwrap());
+                },
+            );
+
+            let e = surface::matmul_edge(&rt).unwrap();
+            let m = vec![0.5f32; e * e];
+            bench_units(
+                &format!("pjrt matmul_block ({e}x{e}, C+=A*B)"),
+                2,
+                20,
+                Some(2.0 * (e as f64).powi(3)),
+                || {
+                    black_box(surface::matmul_block(&rt, &m, &m, &m).unwrap());
+                },
+            );
+
+            let bw = surface::bitonic_width(&rt).unwrap();
+            let mut rng = Rng::new(3);
+            let keys: Vec<f32> = (0..bw).map(|_| rng.f64() as f32).collect();
+            bench_units(
+                &format!("pjrt bitonic_merge ({bw}+{bw} keys)"),
+                2,
+                20,
+                Some(2.0 * bw as f64),
+                || {
+                    black_box(surface::bitonic_merge(&rt, &keys, &keys, true).unwrap());
+                },
+            );
+        }
+    }
+}

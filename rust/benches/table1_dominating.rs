@@ -1,0 +1,32 @@
+//! TAB1 — Table I: dominating denominator term per communication class,
+//! with the numeric growth-rate verification.
+
+use lbsp::model::{Comm, LbspParams};
+use lbsp::report::table1;
+use lbsp::util::bench::{bench_n, black_box};
+
+fn main() {
+    println!("=== Table I: dominating terms ===\n");
+    table1().print();
+
+    // The underlying A/B ratios at two scales, for the record.
+    let base = LbspParams { p: 1.0e-5, k: 1, w: 36000.0, ..Default::default() };
+    println!("A/B ratio (alpha term / beta term):");
+    for comm in Comm::figure_classes() {
+        let r = |n: f64| {
+            let m = LbspParams { n, comm, ..base };
+            let (a, b) = m.denominator_terms();
+            a / b
+        };
+        println!(
+            "  {:<16} n=1e5: {:>12.4e}   n=1e10: {:>12.4e}",
+            comm.label(),
+            r(1.0e5),
+            r(1.0e10)
+        );
+    }
+
+    bench_n("table1 generation (incl. numeric verify)", 1, 10, || {
+        black_box(table1());
+    });
+}

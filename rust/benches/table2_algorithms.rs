@@ -1,0 +1,46 @@
+//! TAB2 — Table II: the four §V algorithm analyses at the paper's exact
+//! parameters, plus the full (N, P) sweeps the paper ran to find them.
+//!
+//! Paper headline speedups: matmul 4740.89, bitonic 4.72, 2D-FFT 773.4,
+//! Laplace 12439.43.
+
+use lbsp::model::algorithms::{bitonic, fft, laplace, matmul};
+use lbsp::report::table2;
+use lbsp::util::bench::{bench_n, black_box};
+
+fn main() {
+    println!("=== Table II: algorithm analyses ===\n");
+    table2().print();
+
+    println!("full sweeps (P = 2^s, sizes as in §V):");
+    let best = matmul::paper_sweep();
+    println!(
+        "  matmul : best S_E = {:>10.2} at N={} P={}",
+        best.speedup, best.size, best.processors
+    );
+    let best = bitonic::paper_sweep();
+    println!(
+        "  bitonic: best S_E = {:>10.2} at N={} P={}",
+        best.speedup, best.size, best.processors
+    );
+    let best = fft::paper_sweep();
+    println!(
+        "  fft2d  : best S_E = {:>10.2} at N={} P={}",
+        best.speedup, best.size, best.processors
+    );
+    let best = laplace::paper_sweep();
+    println!(
+        "  laplace: best S_E = {:>10.2} at m={} P={}",
+        best.speedup, best.size, best.processors
+    );
+
+    bench_n("table2 generation", 1, 10, || {
+        black_box(table2());
+    });
+    bench_n("table2 full (N,P) sweeps", 1, 5, || {
+        black_box(matmul::paper_sweep());
+        black_box(bitonic::paper_sweep());
+        black_box(fft::paper_sweep());
+        black_box(laplace::paper_sweep());
+    });
+}

@@ -1,0 +1,61 @@
+//! Ablation: TCP vs UDP + k-copies on lossy WANs — the paper's §I claim.
+//!
+//! For a phase of c packets at the PlanetLab operating point (α from
+//! 17.5 MB/s / 64 KiB packets, β = 69 ms), compare:
+//!   * TCP: Padhye steady-state model + the flow-level AIMD simulation,
+//!   * UDP: the L-BSP communication charge ρ̂·2τ_k at the optimal k.
+//!
+//! Paper shape to reproduce: the UDP advantage GROWS with loss; at
+//! PlanetLab-band loss (5–15 %) TCP is not competitive.
+
+use lbsp::model::lbsp::optimal_k_min_krho;
+use lbsp::model::tcp::{padhye_throughput, tcp_phase_time, udp_phase_time, PadhyeParams};
+use lbsp::net::tcp::{mean_tcp_transfer_time, TcpParams};
+use lbsp::util::bench::bench_n;
+use lbsp::util::tables::{fmt_num, Table};
+
+fn main() {
+    println!("=== TCP vs UDP+k-copies: phase completion time (c=1024, n=64) ===\n");
+    let c = 1024.0;
+    let n = 64.0;
+    let (alpha, beta) = (0.0037, 0.069);
+    let padhye = PadhyeParams { rtt_s: beta, ..Default::default() };
+    let sim = TcpParams { rtt_s: beta, alpha_s: alpha, ..Default::default() };
+
+    let mut t = Table::new(vec![
+        "loss p",
+        "TCP padhye (s)",
+        "TCP sim (s)",
+        "UDP k=1 (s)",
+        "UDP k* (s)",
+        "k*",
+        "TCP/UDP ratio",
+    ]);
+    for &p in &[0.0005f64, 0.005, 0.015, 0.045, 0.1, 0.15, 0.3] {
+        let tcp_an = tcp_phase_time(c, p, &padhye);
+        let tcp_sim = mean_tcp_transfer_time(c as u64, p, &sim, 60, 9);
+        let udp1 = udp_phase_time(c, p, 1, alpha, beta, n);
+        let (k_star, _) = optimal_k_min_krho(p, c, 12);
+        let udpk = udp_phase_time(c, p, k_star, alpha, beta, n);
+        t.row(vec![
+            format!("{p}"),
+            fmt_num(tcp_an),
+            fmt_num(tcp_sim),
+            fmt_num(udp1),
+            fmt_num(udpk),
+            k_star.to_string(),
+            fmt_num(tcp_an / udpk),
+        ]);
+    }
+    println!("{}", t.ascii());
+    println!("(TCP sim is the flow-level AIMD DES; padhye is ref [37]'s formula)\n");
+
+    println!("steady-state TCP throughput (segments/s):");
+    for &p in &[0.001f64, 0.01, 0.05, 0.15] {
+        println!("  p={p:<6} B(p) = {:.1}", padhye_throughput(p, &padhye));
+    }
+
+    bench_n("tcp flow sim (c=1024, p=0.1, 60 trials)", 1, 5, || {
+        std::hint::black_box(mean_tcp_transfer_time(1024, 0.1, &sim, 60, 9));
+    });
+}

@@ -1,0 +1,20 @@
+//! The BSP superstep runtime over the lossy network.
+//!
+//! Programs implement [`BspProgram`]; the [`BspRuntime`] executes them as
+//! the paper's Fig 5/6 loop: per superstep every node computes locally,
+//! emits messages, and the runtime runs one reliable communication phase
+//! (`net::protocol`) with the configured retransmission discipline and
+//! packet-copy count. Virtual time follows the L-BSP accounting:
+//!
+//! * compute: the barrier waits for the slowest node (`max` over nodes);
+//! * communication: `rounds × 2τ_k` (the model charge) — the DES supplies
+//!   the `rounds` sample;
+//! * WholeRound discipline additionally re-charges the compute on every
+//!   failed round (§II's penalty).
+
+mod program;
+pub mod replication;
+mod runtime;
+
+pub use program::{BspProgram, Outgoing};
+pub use runtime::{BspRuntime, RunReport, StepReport};

@@ -1,0 +1,42 @@
+//! The BSP program interface.
+
+use crate::net::NodeId;
+
+/// A message emitted during a superstep.
+#[derive(Clone, Debug)]
+pub struct Outgoing<M> {
+    pub dst: NodeId,
+    pub payload: M,
+    /// Wire size in bytes (drives serialization cost α and γ).
+    pub bytes: u64,
+}
+
+/// A bulk-synchronous program over `n` virtual nodes.
+///
+/// The runtime drives: for each superstep, `compute` on every node
+/// (collecting messages + local compute seconds), one reliable lossy
+/// communication phase, then `deliver` for every message. `done` is
+/// polled after each superstep so iterative programs can converge early.
+pub trait BspProgram {
+    /// Message payload carried between nodes.
+    type Msg: Clone;
+
+    /// Number of virtual nodes.
+    fn n_nodes(&self) -> usize;
+
+    /// Upper bound on supersteps (the runtime stops earlier if `done`).
+    fn max_supersteps(&self) -> usize;
+
+    /// Local computation for `node` at `step`. Returns the outgoing
+    /// messages and the modeled compute cost in seconds.
+    fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<Self::Msg>>, f64);
+
+    /// Deliver one message (called after the phase completes — the
+    /// protocol guarantees delivery or aborts the run).
+    fn deliver(&mut self, node: NodeId, from: NodeId, payload: Self::Msg);
+
+    /// Convergence test, polled after each superstep.
+    fn done(&self, _completed_steps: usize) -> bool {
+        false
+    }
+}

@@ -1,0 +1,215 @@
+//! Compute replication for fault tolerance — the paper's §VI future work.
+//!
+//! "Other features such as replication of parallel program for fault
+//! tolerance and reliability are being considered."  This module provides
+//! that extension: each logical node's per-superstep computation runs on
+//! `r` replicas; the superstep's compute succeeds if *any* replica
+//! survives, exactly mirroring how k packet copies lift the per-round
+//! delivery probability.
+//!
+//! Model: with per-superstep, per-replica crash probability `f`, the
+//! probability that a logical node loses the step is `f^r`; a lost step
+//! is recomputed in the next window (geometric retry, like §II's
+//! whole-round penalty but for compute). Expected compute charge per
+//! superstep is therefore `w/n · ρ_f` with `ρ_f = 1/(1 − F)` and
+//! `F = 1 − (1−f^r)^n` the probability that at least one logical node
+//! lost the step. The replication-aware speedup composes this with the
+//! usual L-BSP communication term.
+
+use crate::model::lbsp::LbspParams;
+use crate::util::prng::Rng;
+
+/// Fault model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultParams {
+    /// Per-superstep, per-replica crash probability.
+    pub f: f64,
+    /// Replicas per logical node (r ≥ 1; r = 1 is no replication).
+    pub replicas: u32,
+}
+
+impl Default for FaultParams {
+    fn default() -> Self {
+        FaultParams { f: 0.01, replicas: 1 }
+    }
+}
+
+impl FaultParams {
+    /// Probability a logical node loses a superstep: `f^r`.
+    pub fn node_loss(&self) -> f64 {
+        self.f.powi(self.replicas as i32)
+    }
+
+    /// Probability at least one of `n` logical nodes loses the step.
+    pub fn step_failure(&self, n: f64) -> f64 {
+        // 1 − (1 − f^r)^n, in ln-space for large n.
+        -(n * (-self.node_loss()).ln_1p()).exp_m1()
+    }
+
+    /// Expected compute repetitions per superstep: `1 / (1 − F)`.
+    pub fn compute_inflation(&self, n: f64) -> f64 {
+        let fail = self.step_failure(n);
+        if fail >= 1.0 {
+            return f64::INFINITY;
+        }
+        1.0 / (1.0 - fail)
+    }
+}
+
+/// L-BSP speedup with replicated compute: the denominator gains the
+/// compute-inflation factor on the `1` (compute) term; communication is
+/// unchanged (replicas compute redundantly, one representative sends).
+pub fn speedup_with_replication(m: &LbspParams, faults: &FaultParams) -> f64 {
+    let rho = m.rho();
+    if !rho.is_finite() {
+        return 0.0;
+    }
+    let inflation = faults.compute_inflation(m.n);
+    if !inflation.is_finite() {
+        return 0.0;
+    }
+    let denom = inflation
+        + 2.0 * m.k as f64 * rho * m.c() * m.alpha / m.w
+        + 2.0 * m.n * m.beta * rho / m.w;
+    m.n / denom
+}
+
+/// Optimal replica count. Replication costs *machines*, not time (the
+/// replicas compute concurrently), so raw speedup is non-decreasing in r
+/// and its argmax is trivially `r_max`. The planner therefore maximizes
+/// the machine-normalized speedup `S_E(r) / r` — the paper's efficiency
+/// axis — which has an interior optimum: the first replicas rescue the
+/// stalled computation, further ones only burn machines.
+pub fn optimal_replicas(m: &LbspParams, f: f64, r_max: u32) -> (u32, f64) {
+    let mut best = (1u32, f64::NEG_INFINITY);
+    for r in 1..=r_max {
+        let s = speedup_with_replication(m, &FaultParams { f, replicas: r });
+        let per_machine = s / r as f64;
+        if per_machine > best.1 {
+            best = (r, per_machine);
+        }
+    }
+    best
+}
+
+/// Monte-Carlo cross-check: simulate `supersteps` rounds of n logical
+/// nodes × r replicas crashing iid, count compute windows consumed.
+pub fn simulate_compute_windows(
+    n: u64,
+    faults: &FaultParams,
+    supersteps: u64,
+    rng: &mut Rng,
+) -> u64 {
+    let mut windows = 0u64;
+    for _ in 0..supersteps {
+        loop {
+            windows += 1;
+            let mut step_ok = true;
+            'nodes: for _ in 0..n {
+                let mut node_ok = false;
+                for _ in 0..faults.replicas {
+                    if !rng.bernoulli(faults.f) {
+                        node_ok = true;
+                        break;
+                    }
+                }
+                if !node_ok {
+                    step_ok = false;
+                    break 'nodes;
+                }
+            }
+            if step_ok {
+                break;
+            }
+        }
+    }
+    windows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Comm;
+
+    #[test]
+    fn no_faults_recovers_plain_lbsp() {
+        let m = LbspParams { n: 256.0, p: 0.045, comm: Comm::Linear, ..Default::default() };
+        let s = speedup_with_replication(&m, &FaultParams { f: 0.0, replicas: 1 });
+        assert!((s - m.speedup()).abs() / m.speedup() < 1e-12);
+    }
+
+    #[test]
+    fn replication_lifts_speedup_under_faults() {
+        // 1% per-step crash over 4096 nodes: F ≈ 1 − 0.99^4096 ≈ 1, the
+        // unreplicated system stalls; r = 2 brings f^r to 1e-4 and F to
+        // ~0.33; r = 3 to ~4e-3.
+        let m = LbspParams {
+            n: 4096.0,
+            p: 0.045,
+            w: 10.0 * 3600.0,
+            comm: Comm::Linear,
+            ..Default::default()
+        };
+        let s1 = speedup_with_replication(&m, &FaultParams { f: 0.01, replicas: 1 });
+        let s2 = speedup_with_replication(&m, &FaultParams { f: 0.01, replicas: 2 });
+        let s3 = speedup_with_replication(&m, &FaultParams { f: 0.01, replicas: 3 });
+        assert!(s1 < 1.0, "unreplicated should stall: {s1}");
+        assert!(s2 > 100.0 * s1, "{s2} vs {s1}");
+        assert!(s3 > s2, "{s3} vs {s2}");
+    }
+
+    #[test]
+    fn optimal_replicas_interior_on_per_machine_basis() {
+        let m = LbspParams {
+            n: 4096.0,
+            p: 0.045,
+            w: 10.0 * 3600.0,
+            comm: Comm::Linear,
+            ..Default::default()
+        };
+        // Raw speedup is non-decreasing in r…
+        let mut prev = 0.0;
+        for r in 1..=8 {
+            let s = speedup_with_replication(&m, &FaultParams { f: 0.01, replicas: r });
+            assert!(s >= prev - 1e-9, "r={r}");
+            prev = s;
+        }
+        // …but per-machine speedup peaks at a small interior r.
+        let (r_star, s_per_machine) = optimal_replicas(&m, 0.01, 8);
+        assert!((2..=4).contains(&r_star), "r* = {r_star}");
+        assert!(s_per_machine * r_star as f64 > 0.5 * m.speedup());
+        // With no faults the planner keeps r = 1.
+        let (r0, _) = optimal_replicas(&m, 0.0, 8);
+        assert_eq!(r0, 1);
+    }
+
+    #[test]
+    fn monte_carlo_matches_inflation() {
+        let faults = FaultParams { f: 0.05, replicas: 2 };
+        let n = 64u64;
+        let mut rng = Rng::new(0xFA57);
+        let steps = 20_000u64;
+        let windows = simulate_compute_windows(n, &faults, steps, &mut rng);
+        let mc = windows as f64 / steps as f64;
+        let analytic = faults.compute_inflation(n as f64);
+        assert!(
+            (mc - analytic).abs() / analytic < 0.02,
+            "MC {mc} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn step_failure_monotone_in_n_and_f() {
+        let f1 = FaultParams { f: 0.01, replicas: 2 };
+        assert!(f1.step_failure(10.0) < f1.step_failure(1000.0));
+        let f2 = FaultParams { f: 0.05, replicas: 2 };
+        assert!(f1.step_failure(100.0) < f2.step_failure(100.0));
+    }
+
+    #[test]
+    fn certain_crash_gives_zero_speedup() {
+        let m = LbspParams::default();
+        let s = speedup_with_replication(&m, &FaultParams { f: 1.0, replicas: 3 });
+        assert_eq!(s, 0.0);
+    }
+}

@@ -1,0 +1,352 @@
+//! The superstep driver.
+
+use crate::net::protocol::{run_phase, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer};
+use crate::net::transport::Network;
+
+use super::program::{BspProgram, Outgoing};
+
+/// Per-superstep accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct StepReport {
+    pub step: usize,
+    pub compute_s: f64,
+    pub phase: PhaseReport,
+    pub messages: usize,
+}
+
+/// Whole-run accounting.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Modeled total time: Σ (compute barrier + rounds·2τ_k), with the
+    /// §II compute re-charge under WholeRound.
+    pub total_time_s: f64,
+    pub total_compute_s: f64,
+    pub total_comm_s: f64,
+    pub total_rounds: u64,
+    pub supersteps: usize,
+    pub data_packets: u64,
+    pub ack_packets: u64,
+    pub completed: bool,
+    pub steps: Vec<StepReport>,
+}
+
+impl RunReport {
+    /// Speedup against a given sequential time.
+    pub fn speedup(&self, sequential_s: f64) -> f64 {
+        sequential_s / self.total_time_s
+    }
+}
+
+/// Drives a [`BspProgram`] over a lossy [`Network`].
+pub struct BspRuntime {
+    net: Network,
+    /// Packet copies `k`.
+    pub copies: u32,
+    pub policy: RetransmitPolicy,
+    /// Timeout override; `None` derives `2τ_k` per phase from the mean
+    /// link parameters and the phase's packet population (paper formula).
+    pub timeout_override_s: Option<f64>,
+    pub max_rounds: u32,
+}
+
+impl BspRuntime {
+    pub fn new(net: Network) -> BspRuntime {
+        BspRuntime {
+            net,
+            copies: 1,
+            policy: RetransmitPolicy::Selective,
+            timeout_override_s: None,
+            max_rounds: 10_000,
+        }
+    }
+
+    pub fn with_copies(mut self, k: u32) -> Self {
+        self.copies = k;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: RetransmitPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// The paper's timeout for a phase: `2τ_k = 2(k·(c/n)·α + β)` with α
+    /// from the mean packet size and per-pair bandwidth, β the mean RTT.
+    fn phase_timeout(&self, transfers: &[Transfer], n: usize) -> f64 {
+        if let Some(t) = self.timeout_override_s {
+            return t;
+        }
+        if transfers.is_empty() {
+            return 0.0;
+        }
+        let mut alpha_sum = 0.0;
+        let mut beta_sum = 0.0;
+        for tr in transfers {
+            let link = self.net.topology().link(tr.src, tr.dst);
+            alpha_sum += link.alpha(tr.bytes);
+            beta_sum += link.rtt_s;
+        }
+        let alpha_mean = alpha_sum / transfers.len() as f64;
+        let beta_mean = beta_sum / transfers.len() as f64;
+        let c = transfers.len() as f64;
+        2.0 * (self.copies as f64 * c / n as f64 * alpha_mean + beta_mean)
+    }
+
+    /// Run the program to completion (or abort on a failed phase).
+    pub fn run<P: BspProgram>(&mut self, prog: &mut P) -> RunReport {
+        let n = prog.n_nodes();
+        let mut report = RunReport::default();
+        for step in 0..prog.max_supersteps() {
+            // --- compute phase: barrier waits for the slowest node.
+            let mut barrier_s: f64 = 0.0;
+            let mut outgoing: Vec<(usize, Outgoing<P::Msg>)> = Vec::new();
+            for node in 0..n {
+                let (msgs, cost) = prog.compute(node, step);
+                barrier_s = barrier_s.max(cost);
+                outgoing.extend(msgs.into_iter().map(|m| (node, m)));
+            }
+
+            // --- communication phase over the lossy network.
+            let transfers: Vec<Transfer> = outgoing
+                .iter()
+                .map(|(src, m)| Transfer { src: *src, dst: m.dst, bytes: m.bytes })
+                .collect();
+            let phase = if transfers.is_empty() {
+                PhaseReport {
+                    rounds: 0,
+                    completion_s: 0.0,
+                    model_duration_s: 0.0,
+                    data_packets_sent: 0,
+                    ack_packets_sent: 0,
+                    completed: true,
+                }
+            } else {
+                let timeout = self.phase_timeout(&transfers, n);
+                let cfg = PhaseConfig {
+                    copies: self.copies,
+                    timeout_s: timeout,
+                    policy: self.policy,
+                    max_rounds: self.max_rounds,
+                };
+                run_phase(&mut self.net, &transfers, &cfg)
+            };
+
+            // --- L-BSP time accounting.
+            let step_time = match self.policy {
+                RetransmitPolicy::Selective => barrier_s + phase.model_duration_s,
+                // §II penalty: every round redoes the computation.
+                RetransmitPolicy::WholeRound => {
+                    phase.rounds.max(1) as f64 * barrier_s + phase.model_duration_s
+                }
+            };
+            report.total_time_s += step_time;
+            report.total_compute_s += barrier_s;
+            report.total_comm_s += phase.model_duration_s;
+            report.total_rounds += phase.rounds as u64;
+            report.data_packets += phase.data_packets_sent;
+            report.ack_packets += phase.ack_packets_sent;
+            report.supersteps = step + 1;
+            report.steps.push(StepReport {
+                step,
+                compute_s: barrier_s,
+                phase,
+                messages: outgoing.len(),
+            });
+
+            if !phase.completed {
+                report.completed = false;
+                return report;
+            }
+
+            // --- delivery (reliable after the phase).
+            for (src, m) in outgoing {
+                prog.deliver(m.dst, src, m.payload);
+            }
+
+            if prog.done(step + 1) {
+                break;
+            }
+        }
+        report.completed = true;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::Link;
+    use crate::net::topology::Topology;
+    use crate::net::NodeId;
+
+    /// Toy program: every node sends its value to the right neighbour for
+    /// `steps` supersteps and accumulates what it receives.
+    struct RingPass {
+        n: usize,
+        steps: usize,
+        values: Vec<u64>,
+        received: Vec<Vec<u64>>,
+    }
+
+    impl RingPass {
+        fn new(n: usize, steps: usize) -> Self {
+            RingPass {
+                n,
+                steps,
+                values: (0..n as u64).collect(),
+                received: vec![Vec::new(); n],
+            }
+        }
+    }
+
+    impl BspProgram for RingPass {
+        type Msg = u64;
+
+        fn n_nodes(&self) -> usize {
+            self.n
+        }
+
+        fn max_supersteps(&self) -> usize {
+            self.steps
+        }
+
+        fn compute(&mut self, node: NodeId, _step: usize) -> (Vec<Outgoing<u64>>, f64) {
+            (
+                vec![Outgoing {
+                    dst: (node + 1) % self.n,
+                    payload: self.values[node],
+                    bytes: 1024,
+                }],
+                0.001,
+            )
+        }
+
+        fn deliver(&mut self, node: NodeId, _from: NodeId, payload: u64) {
+            self.received[node].push(payload);
+            self.values[node] = payload; // forward next step
+        }
+    }
+
+    fn net(n: usize, p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.02), p), seed)
+    }
+
+    #[test]
+    fn ring_pass_delivers_everything_lossless() {
+        let mut rt = BspRuntime::new(net(4, 0.0, 1));
+        let mut prog = RingPass::new(4, 4);
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        assert_eq!(rep.supersteps, 4);
+        assert_eq!(rep.total_rounds, 4); // 1 round per lossless phase
+        // After 4 steps around a 4-ring every node got 4 messages and its
+        // own value returned home.
+        for node in 0..4 {
+            assert_eq!(prog.received[node].len(), 4);
+            assert_eq!(prog.values[node], node as u64);
+        }
+    }
+
+    #[test]
+    fn ring_pass_survives_heavy_loss() {
+        let mut rt = BspRuntime::new(net(4, 0.3, 2));
+        let mut prog = RingPass::new(4, 4);
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        assert!(rep.total_rounds > 4, "retransmissions expected");
+        for node in 0..4 {
+            assert_eq!(prog.received[node].len(), 4, "reliability violated");
+        }
+    }
+
+    #[test]
+    fn whole_round_charges_compute_per_round() {
+        let seed = 77;
+        let mut rt = BspRuntime::new(net(2, 0.4, seed)).with_policy(RetransmitPolicy::WholeRound);
+        let mut prog = RingPass::new(2, 1);
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        let rounds = rep.total_rounds as f64;
+        // compute charge must be rounds × 0.001.
+        assert!((rep.total_time_s - (rounds * 0.001 + rep.total_comm_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn selective_charges_compute_once() {
+        let mut rt = BspRuntime::new(net(2, 0.4, 5));
+        let mut prog = RingPass::new(2, 1);
+        let rep = rt.run(&mut prog);
+        assert!((rep.total_time_s - (0.001 + rep.total_comm_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn copies_cut_rounds_under_loss() {
+        let mut r1_total = 0u64;
+        let mut r3_total = 0u64;
+        for seed in 0..20 {
+            let mut rt = BspRuntime::new(net(4, 0.35, 900 + seed));
+            let rep = rt.run(&mut RingPass::new(4, 2));
+            r1_total += rep.total_rounds;
+            let mut rt = BspRuntime::new(net(4, 0.35, 900 + seed)).with_copies(3);
+            let rep = rt.run(&mut rt_prog());
+            r3_total += rep.total_rounds;
+        }
+        fn rt_prog() -> RingPass {
+            RingPass::new(4, 2)
+        }
+        assert!(r3_total < r1_total, "k=3 {r3_total} vs k=1 {r1_total}");
+    }
+
+    #[test]
+    fn aborts_on_dead_network() {
+        let mut rt = BspRuntime::new(net(2, 1.0, 9));
+        rt.max_rounds = 4;
+        let rep = rt.run(&mut RingPass::new(2, 3));
+        assert!(!rep.completed);
+        assert_eq!(rep.supersteps, 1); // failed in the first phase
+    }
+
+    #[test]
+    fn done_stops_early() {
+        struct EarlyStop(RingPass);
+        impl BspProgram for EarlyStop {
+            type Msg = u64;
+            fn n_nodes(&self) -> usize {
+                self.0.n_nodes()
+            }
+            fn max_supersteps(&self) -> usize {
+                100
+            }
+            fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<u64>>, f64) {
+                self.0.compute(node, step)
+            }
+            fn deliver(&mut self, node: NodeId, from: NodeId, payload: u64) {
+                self.0.deliver(node, from, payload)
+            }
+            fn done(&self, completed: usize) -> bool {
+                completed >= 3
+            }
+        }
+        let mut rt = BspRuntime::new(net(3, 0.1, 10));
+        let rep = rt.run(&mut EarlyStop(RingPass::new(3, 100)));
+        assert!(rep.completed);
+        assert_eq!(rep.supersteps, 3);
+    }
+
+    #[test]
+    fn derived_timeout_matches_tau_formula() {
+        let rt = BspRuntime::new(net(4, 0.0, 1)).with_copies(2);
+        let transfers = vec![
+            Transfer { src: 0, dst: 1, bytes: 1_000_000 },
+            Transfer { src: 1, dst: 2, bytes: 1_000_000 },
+        ];
+        // alpha = 1e6/100e6 = 0.01 s, beta = 0.02, c=2, n=4, k=2:
+        // 2(k·(c/n)·α + β) = 2(2·0.5·0.01 + 0.02) = 0.06.
+        let t = rt.phase_timeout(&transfers, 4);
+        assert!((t - 0.06).abs() < 1e-12, "{t}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Collective-communication schedules (§V-E broadcast, §V-F all-gather).
+//!
+//! Each collective is expressed as a [`Schedule`]: a list of supersteps,
+//! each a list of `(src, dst, fragment)` transfers. Schedules are pure
+//! data, so they can be (a) analyzed against the model's cost formulas,
+//! (b) verified set-theoretically ([`simulate_holdings`]), and (c) run on
+//! the lossy network through [`CollectiveProgram`].
+//!
+//! Implemented: binomial-tree broadcast, Van de Geijn (scatter + ring
+//! all-gather) broadcast, ring all-gather, recursive-doubling all-gather,
+//! Bruck all-gather, and the naive all-to-all (`c(n) = n²` class).
+
+mod programs;
+mod schedules;
+
+pub use programs::CollectiveProgram;
+pub use schedules::{
+    binomial_broadcast, bruck_allgather, naive_all_to_all, recursive_doubling_allgather,
+    ring_allgather, simulate_holdings, van_de_geijn_broadcast, Fragment, Schedule, Xfer,
+};

@@ -1,0 +1,131 @@
+//! Run a collective [`Schedule`] as a BSP program over the lossy network.
+//!
+//! Payloads are real: each fragment is a byte tag, and holdings are
+//! tracked per node so reliability violations surface as missing data,
+//! not just as counters.
+
+use std::collections::BTreeSet;
+
+use crate::bsp::{BspProgram, Outgoing};
+use crate::net::NodeId;
+
+use super::schedules::{Fragment, Schedule};
+
+/// Executes a schedule step per superstep; nodes hold fragment sets.
+pub struct CollectiveProgram {
+    schedule: Schedule,
+    holdings: Vec<BTreeSet<Fragment>>,
+    fragment_bytes: u64,
+}
+
+impl CollectiveProgram {
+    pub fn new(
+        n: usize,
+        schedule: Schedule,
+        initial: impl Fn(NodeId) -> Vec<Fragment>,
+        fragment_bytes: u64,
+    ) -> Self {
+        CollectiveProgram {
+            schedule,
+            holdings: (0..n).map(|i| initial(i).into_iter().collect()).collect(),
+            fragment_bytes,
+        }
+    }
+
+    pub fn holdings(&self) -> &[BTreeSet<Fragment>] {
+        &self.holdings
+    }
+
+    /// True if every node holds all of `frags`.
+    pub fn all_hold(&self, frags: &[Fragment]) -> bool {
+        self.holdings.iter().all(|h| frags.iter().all(|f| h.contains(f)))
+    }
+}
+
+impl BspProgram for CollectiveProgram {
+    type Msg = Fragment;
+
+    fn n_nodes(&self) -> usize {
+        self.holdings.len()
+    }
+
+    fn max_supersteps(&self) -> usize {
+        self.schedule.steps.len()
+    }
+
+    fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<Fragment>>, f64) {
+        let out = self.schedule.steps[step]
+            .iter()
+            .filter(|x| x.src == node)
+            .map(|x| {
+                assert!(
+                    self.holdings[node].contains(&x.frag),
+                    "node {node} scheduled to send fragment {} it lacks",
+                    x.frag
+                );
+                Outgoing { dst: x.dst, payload: x.frag, bytes: self.fragment_bytes }
+            })
+            .collect();
+        // Collectives are pure data movement; compute cost is negligible.
+        (out, 0.0)
+    }
+
+    fn deliver(&mut self, node: NodeId, _from: NodeId, payload: Fragment) {
+        self.holdings[node].insert(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::BspRuntime;
+    use crate::collectives::schedules::{binomial_broadcast, ring_allgather};
+    use crate::net::link::Link;
+    use crate::net::topology::Topology;
+    use crate::net::transport::Network;
+
+    fn net(n: usize, p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.01), p), seed)
+    }
+
+    #[test]
+    fn broadcast_over_lossy_network_delivers() {
+        let n = 16;
+        let mut prog = CollectiveProgram::new(
+            n,
+            binomial_broadcast(n, 0),
+            |i| if i == 0 { vec![0] } else { vec![] },
+            65536,
+        );
+        let mut rt = BspRuntime::new(net(n, 0.15, 21)).with_copies(2);
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        assert!(prog.all_hold(&[0]));
+        assert_eq!(rep.supersteps, 4);
+    }
+
+    #[test]
+    fn ring_allgather_over_lossy_network_delivers() {
+        let n = 8;
+        let mut prog = CollectiveProgram::new(n, ring_allgather(n), |i| vec![i], 4096);
+        let mut rt = BspRuntime::new(net(n, 0.2, 22));
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        let all: Vec<usize> = (0..n).collect();
+        assert!(prog.all_hold(&all));
+        // Lossy: some superstep needed retransmission.
+        assert!(rep.total_rounds >= (n as u64 - 1));
+    }
+
+    #[test]
+    fn packet_accounting_matches_schedule() {
+        let n = 8;
+        let sched = ring_allgather(n);
+        let total = sched.total_packets() as u64;
+        let mut prog = CollectiveProgram::new(n, sched, |i| vec![i], 4096);
+        let mut rt = BspRuntime::new(net(n, 0.0, 23));
+        let rep = rt.run(&mut prog);
+        // Lossless: exactly one wire packet per scheduled transfer.
+        assert_eq!(rep.data_packets, total);
+    }
+}

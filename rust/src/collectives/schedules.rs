@@ -1,0 +1,320 @@
+//! Schedule construction + set-theoretic verification.
+
+use std::collections::BTreeSet;
+
+use crate::net::NodeId;
+
+/// A data fragment identifier. For broadcast there is a single fragment
+/// (0); for all-gather, fragment `i` is node i's contribution.
+pub type Fragment = usize;
+
+/// One transfer within a superstep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Xfer {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub frag: Fragment,
+}
+
+/// A collective schedule: supersteps of concurrent transfers.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub steps: Vec<Vec<Xfer>>,
+}
+
+impl Schedule {
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total packets injected (the model's Σ c per phase).
+    pub fn total_packets(&self) -> usize {
+        self.steps.iter().map(|s| s.len()).sum()
+    }
+
+    /// Max packets in one step (the per-phase c(n) the model charges).
+    pub fn max_step_packets(&self) -> usize {
+        self.steps.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+}
+
+/// Binomial-tree broadcast (§V-E short messages): root `r` sends to
+/// `r + P/2`, both recurse in their halves — ⌈log₂P⌉ steps.
+pub fn binomial_broadcast(n: usize, root: NodeId) -> Schedule {
+    assert!(root < n);
+    let mut steps = Vec::new();
+    // Work in root-relative rank space: relative rank 0 is the root.
+    let mut have = 1usize; // ranks [0, have) hold the data
+    while have < n {
+        let mut xfers = Vec::new();
+        for r in 0..have.min(n.saturating_sub(have)) {
+            let peer = r + have;
+            if peer < n {
+                xfers.push(Xfer {
+                    src: (root + r) % n,
+                    dst: (root + peer) % n,
+                    frag: 0,
+                });
+            }
+        }
+        steps.push(xfers);
+        have *= 2;
+    }
+    Schedule { steps }
+}
+
+/// Ring all-gather (§V-F): step t, node i forwards the fragment it
+/// received at t−1 to i+1; P−1 steps, `c = P` packets per step.
+pub fn ring_allgather(n: usize) -> Schedule {
+    let mut steps = Vec::new();
+    for t in 0..n.saturating_sub(1) {
+        let mut xfers = Vec::new();
+        for i in 0..n {
+            // At step t node i sends fragment (i − t) mod n.
+            let frag = (i + n - t % n) % n;
+            xfers.push(Xfer { src: i, dst: (i + 1) % n, frag });
+        }
+        steps.push(xfers);
+    }
+    Schedule { steps }
+}
+
+/// Recursive-doubling all-gather: ⌈log₂P⌉ steps; at step s, partner is
+/// `i ^ 2^s` and nodes exchange everything gathered so far. Requires a
+/// power-of-two node count.
+pub fn recursive_doubling_allgather(n: usize) -> Schedule {
+    assert!(n.is_power_of_two(), "recursive doubling needs 2^m nodes");
+    let mut steps = Vec::new();
+    let mut block = 1usize;
+    while block < n {
+        let mut xfers = Vec::new();
+        for i in 0..n {
+            let partner = i ^ block;
+            // i holds fragments of its current block of size `block`.
+            let base = (i / block) * block;
+            for frag in base..base + block {
+                xfers.push(Xfer { src: i, dst: partner, frag });
+            }
+        }
+        steps.push(xfers);
+        block *= 2;
+    }
+    Schedule { steps }
+}
+
+/// Bruck all-gather: ⌈log₂P⌉ steps; at step s node i sends its first
+/// 2^s gathered fragments to node i−2^s (mod n). Works for any n.
+pub fn bruck_allgather(n: usize) -> Schedule {
+    let mut steps = Vec::new();
+    let mut have = 1usize;
+    while have < n {
+        let send = have.min(n - have);
+        let mut xfers = Vec::new();
+        for i in 0..n {
+            let dst = (i + n - have % n) % n;
+            // Node i's gathered prefix is fragments i, i+1, …, i+have−1
+            // (its own plus the ones pulled from the right).
+            for f in 0..send {
+                xfers.push(Xfer { src: i, dst, frag: (i + f) % n });
+            }
+        }
+        steps.push(xfers);
+        have += send;
+    }
+    Schedule { steps }
+}
+
+/// Van de Geijn broadcast (§V-E long messages): scatter the message as P
+/// fragments down the binomial tree, then ring all-gather.
+pub fn van_de_geijn_broadcast(n: usize, root: NodeId) -> Schedule {
+    assert!(root < n);
+    // Scatter: recursive halving, top-down. Each holder of a relative-rank
+    // range [start, start+len) passes the upper half to the node at the
+    // midpoint. Fragment `f` (absolute id) homes at absolute node f, i.e.
+    // relative rank (f + n − root) % n.
+    let mut steps = Vec::new();
+    let mut ranges: Vec<(usize, usize, usize)> = vec![(0, 0, n)]; // (owner_rel, start, len)
+    loop {
+        let mut xfers = Vec::new();
+        let mut next = Vec::new();
+        let mut split_any = false;
+        for (owner, start, len) in ranges {
+            if len <= 1 {
+                next.push((owner, start, len));
+                continue;
+            }
+            split_any = true;
+            let keep = len.div_ceil(2);
+            let mid = start + keep;
+            for rel in mid..start + len {
+                xfers.push(Xfer {
+                    src: (root + owner) % n,
+                    dst: (root + mid) % n,
+                    frag: (root + rel) % n,
+                });
+            }
+            next.push((owner, start, keep));
+            next.push((mid, mid, len - keep));
+        }
+        if !split_any {
+            break;
+        }
+        steps.push(xfers);
+        ranges = next;
+    }
+    // All-gather the scattered fragments with the ring (node i now holds
+    // exactly fragment i, the ring's precondition).
+    let ring = ring_allgather(n);
+    steps.extend(ring.steps);
+    Schedule { steps }
+}
+
+/// Naive all-to-all: every node sends one (distinct) fragment to every
+/// other node in a single step — `c(n) = n(n−1)`, the paper's n² class.
+pub fn naive_all_to_all(n: usize) -> Schedule {
+    let mut xfers = Vec::new();
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                // Fragment id encodes the (src, dst) pair.
+                xfers.push(Xfer { src: i, dst: j, frag: i * n + j });
+            }
+        }
+    }
+    Schedule { steps: vec![xfers] }
+}
+
+/// Set-theoretic execution: which fragments each node holds after the
+/// schedule, given initial holdings. A transfer of a fragment the source
+/// does not hold panics — schedules must be causally valid.
+pub fn simulate_holdings(
+    n: usize,
+    schedule: &Schedule,
+    initial: impl Fn(NodeId) -> Vec<Fragment>,
+) -> Vec<BTreeSet<Fragment>> {
+    let mut hold: Vec<BTreeSet<Fragment>> =
+        (0..n).map(|i| initial(i).into_iter().collect()).collect();
+    for (t, step) in schedule.steps.iter().enumerate() {
+        // Sends read the state at the start of the step (BSP semantics).
+        let snapshot = hold.clone();
+        for x in step {
+            assert!(
+                snapshot[x.src].contains(&x.frag),
+                "step {t}: node {} sends fragment {} it does not hold",
+                x.src,
+                x.frag
+            );
+            hold[x.dst].insert(x.frag);
+        }
+    }
+    hold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_all_hold(n: usize, hold: &[BTreeSet<Fragment>], frags: &[Fragment]) {
+        for i in 0..n {
+            for f in frags {
+                assert!(hold[i].contains(f), "node {i} missing fragment {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_broadcast_reaches_everyone() {
+        for n in [1usize, 2, 3, 5, 8, 16, 33, 100] {
+            for root in [0, n / 2, n - 1] {
+                let s = binomial_broadcast(n, root);
+                let hold = simulate_holdings(n, &s, |i| if i == root { vec![0] } else { vec![] });
+                assert_all_hold(n, &hold, &[0]);
+                assert_eq!(s.n_steps(), (n as f64).log2().ceil() as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_broadcast_total_packets_is_n_minus_1() {
+        for n in [2usize, 7, 16, 31] {
+            assert_eq!(binomial_broadcast(n, 0).total_packets(), n - 1);
+        }
+    }
+
+    #[test]
+    fn ring_allgather_gathers_everything() {
+        for n in [2usize, 3, 8, 17] {
+            let s = ring_allgather(n);
+            let hold = simulate_holdings(n, &s, |i| vec![i]);
+            let all: Vec<usize> = (0..n).collect();
+            assert_all_hold(n, &hold, &all);
+            assert_eq!(s.n_steps(), n - 1);
+            assert_eq!(s.max_step_packets(), n); // the paper's c(P) = P
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_gathers_in_log_steps() {
+        for n in [2usize, 4, 16, 64] {
+            let s = recursive_doubling_allgather(n);
+            let hold = simulate_holdings(n, &s, |i| vec![i]);
+            let all: Vec<usize> = (0..n).collect();
+            assert_all_hold(n, &hold, &all);
+            assert_eq!(s.n_steps(), n.trailing_zeros() as usize);
+        }
+    }
+
+    #[test]
+    fn bruck_gathers_for_non_powers_of_two() {
+        for n in [2usize, 3, 5, 12, 17, 31] {
+            let s = bruck_allgather(n);
+            let hold = simulate_holdings(n, &s, |i| vec![i]);
+            let all: Vec<usize> = (0..n).collect();
+            assert_all_hold(n, &hold, &all);
+            assert_eq!(s.n_steps(), (n as f64).log2().ceil() as usize);
+        }
+    }
+
+    #[test]
+    fn van_de_geijn_broadcast_delivers_all_fragments() {
+        for n in [2usize, 4, 8, 16] {
+            for root in [0, 1] {
+                let s = van_de_geijn_broadcast(n, root);
+                let all: Vec<usize> = (0..n).collect();
+                let hold =
+                    simulate_holdings(n, &s, |i| if i == root { all.clone() } else { vec![] });
+                assert_all_hold(n, &hold, &all);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_is_quadratic() {
+        let s = naive_all_to_all(8);
+        assert_eq!(s.total_packets(), 56);
+        assert_eq!(s.n_steps(), 1);
+        let hold = simulate_holdings(8, &s, |i| (0..8).map(|j| i * 8 + j).collect());
+        for j in 0..8 {
+            for i in 0..8 {
+                if i != j {
+                    assert!(hold[j].contains(&(i * 8 + j)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn causally_invalid_schedule_panics() {
+        let s = Schedule { steps: vec![vec![Xfer { src: 0, dst: 1, frag: 9 }]] };
+        simulate_holdings(2, &s, |_| vec![]);
+    }
+
+    #[test]
+    fn ring_matches_model_packet_count() {
+        // §V-F: c(P) = P per step, P−1 steps.
+        let n = 16;
+        let s = ring_allgather(n);
+        assert_eq!(s.total_packets(), n * (n - 1));
+    }
+}

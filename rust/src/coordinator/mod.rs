@@ -1,0 +1,20 @@
+//! Leader/worker sweep orchestration.
+//!
+//! Figures 7–12 are parameter sweeps over up to ~10⁵ operating points;
+//! the coordinator batches them onto evaluation backends:
+//!
+//! * [`Backend::Native`] — the float64 series on a pool of worker threads
+//!   (leader/worker over a chunked work queue with ordered reassembly).
+//! * [`Backend::Pjrt`] — the AOT `speedup_surface` artifact; the PJRT
+//!   client is not `Send`, so executes run on the leader thread in
+//!   grid-sized batches while (in mixed mode) native workers take the
+//!   remainder.
+//!
+//! [`queue`] is the generic work-queue substrate; [`sweep`] the
+//! L-BSP-specific sweep API with throughput metrics.
+
+pub mod queue;
+pub mod sweep;
+
+pub use queue::WorkQueue;
+pub use sweep::{Backend, SweepCoordinator, SweepMetrics};

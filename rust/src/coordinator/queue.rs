@@ -1,0 +1,134 @@
+//! Generic leader/worker work queue with ordered results and bounded
+//! in-flight chunks (backpressure).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A chunked work queue: the leader enqueues `(index, T)` chunks, workers
+/// map them through `f`, results are reassembled in index order.
+pub struct WorkQueue;
+
+impl WorkQueue {
+    /// Process `items` in `chunk_size` chunks on `workers` threads.
+    /// `f` must be pure per chunk. Result order matches input order.
+    ///
+    /// Backpressure: at most `workers * 4` chunks are in flight; the
+    /// leader blocks otherwise (bounded channel).
+    pub fn map_chunked<T, R, F>(
+        items: Vec<T>,
+        chunk_size: usize,
+        workers: usize,
+        f: F,
+    ) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&[T]) -> Vec<R> + Sync,
+    {
+        assert!(chunk_size > 0);
+        let workers = workers.max(1);
+        let n_items = items.len();
+        if n_items == 0 {
+            return Vec::new();
+        }
+
+        // Chunk with indices; feed through a shared pull queue.
+        let chunks: Vec<(usize, Vec<T>)> = {
+            let mut out = Vec::new();
+            let mut items = items;
+            let mut idx = 0;
+            while !items.is_empty() {
+                let take = chunk_size.min(items.len());
+                let rest = items.split_off(take);
+                out.push((idx, items));
+                items = rest;
+                idx += 1;
+            }
+            out
+        };
+        let n_chunks = chunks.len();
+        let source = Arc::new(Mutex::new(chunks.into_iter()));
+        // Bounded result channel provides the backpressure.
+        let (tx, rx) = mpsc::sync_channel::<(usize, Vec<R>)>(workers * 4);
+
+        let mut by_index: BTreeMap<usize, Vec<R>> = BTreeMap::new();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let source = Arc::clone(&source);
+                let tx = tx.clone();
+                let f = &f;
+                scope.spawn(move || loop {
+                    let next = source.lock().unwrap().next();
+                    match next {
+                        Some((idx, chunk)) => {
+                            let result = f(&chunk);
+                            if tx.send((idx, result)).is_err() {
+                                return;
+                            }
+                        }
+                        None => return,
+                    }
+                });
+            }
+            drop(tx);
+            while let Ok((idx, result)) = rx.recv() {
+                by_index.insert(idx, result);
+            }
+        });
+
+        assert_eq!(by_index.len(), n_chunks, "lost chunks");
+        let mut out = Vec::with_capacity(n_items);
+        for (_, mut chunk) in by_index {
+            out.append(&mut chunk);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..10_000).collect();
+        let out = WorkQueue::map_chunked(items.clone(), 37, 8, |chunk| {
+            chunk.iter().map(|x| x * 2).collect()
+        });
+        let want: Vec<u64> = items.iter().map(|x| x * 2).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn single_worker_single_chunk() {
+        let out = WorkQueue::map_chunked(vec![1, 2, 3], 100, 1, |c| c.to_vec());
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u32> = WorkQueue::map_chunked(Vec::<u32>::new(), 8, 4, |c| c.to_vec());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_tail_chunk() {
+        let items: Vec<u32> = (0..103).collect();
+        let out = WorkQueue::map_chunked(items.clone(), 10, 3, |c| c.to_vec());
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn work_actually_parallelizes() {
+        // Smoke check that all workers make progress (no deadlock with
+        // backpressure at play): many more chunks than the channel bound.
+        let items: Vec<u64> = (0..100_000).collect();
+        let out = WorkQueue::map_chunked(items, 100, 4, |chunk| {
+            chunk.iter().map(|x| x + 1).collect()
+        });
+        assert_eq!(out.len(), 100_000);
+        assert_eq!(out[0], 1);
+        assert_eq!(out[99_999], 100_000);
+    }
+}

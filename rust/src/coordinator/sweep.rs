@@ -1,0 +1,156 @@
+//! The L-BSP sweep coordinator: evaluate speedup surfaces at scale.
+
+use std::time::Instant;
+
+use crate::model::LbspParams;
+use crate::runtime::{surface, Runtime};
+
+use super::queue::WorkQueue;
+
+/// Where speedup evaluations run.
+pub enum Backend {
+    /// float64 eq-(3)/(6) series on worker threads.
+    Native { workers: usize },
+    /// The AOT `speedup_surface` PJRT artifact (leader-thread batches).
+    Pjrt(Runtime),
+}
+
+/// Throughput accounting for a sweep.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepMetrics {
+    pub points: usize,
+    pub elapsed_s: f64,
+    pub points_per_sec: f64,
+}
+
+/// Batches operating points onto a backend and tracks metrics.
+pub struct SweepCoordinator {
+    backend: Backend,
+    pub metrics: SweepMetrics,
+    /// Native chunk size (tuned in the §Perf pass; see EXPERIMENTS.md).
+    pub chunk_size: usize,
+}
+
+impl SweepCoordinator {
+    pub fn native(workers: usize) -> Self {
+        SweepCoordinator {
+            backend: Backend::Native { workers },
+            metrics: SweepMetrics::default(),
+            chunk_size: 512,
+        }
+    }
+
+    pub fn pjrt(rt: Runtime) -> Self {
+        SweepCoordinator {
+            backend: Backend::Pjrt(rt),
+            metrics: SweepMetrics::default(),
+            chunk_size: 512,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Native { .. } => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Evaluate eq (6) speedups for every point, in order.
+    pub fn speedups(&mut self, points: &[LbspParams]) -> Vec<f64> {
+        let start = Instant::now();
+        let out = match &self.backend {
+            Backend::Native { workers } => WorkQueue::map_chunked(
+                points.to_vec(),
+                self.chunk_size,
+                *workers,
+                |chunk| chunk.iter().map(|m| m.speedup()).collect(),
+            ),
+            Backend::Pjrt(rt) => {
+                surface::speedup_surface_batch(rt, points).expect("pjrt sweep failed")
+            }
+        };
+        let elapsed = start.elapsed().as_secs_f64();
+        self.metrics.points += points.len();
+        self.metrics.elapsed_s += elapsed;
+        self.metrics.points_per_sec = self.metrics.points as f64 / self.metrics.elapsed_s;
+        out
+    }
+
+    /// Evaluate ρ̂ for (q, c) pairs (figure plumbing + validation).
+    pub fn rhos(&mut self, qs: &[f64], cs: &[f64]) -> Vec<f64> {
+        assert_eq!(qs.len(), cs.len());
+        let start = Instant::now();
+        let out = match &self.backend {
+            Backend::Native { workers } => {
+                let pairs: Vec<(f64, f64)> =
+                    qs.iter().copied().zip(cs.iter().copied()).collect();
+                WorkQueue::map_chunked(pairs, self.chunk_size, *workers, |chunk| {
+                    chunk
+                        .iter()
+                        .map(|&(q, c)| crate::model::rho_selective(q, c))
+                        .collect()
+                })
+            }
+            Backend::Pjrt(rt) => {
+                surface::rho_hat_batch(rt, qs, cs).expect("pjrt rho sweep failed")
+            }
+        };
+        let elapsed = start.elapsed().as_secs_f64();
+        self.metrics.points += qs.len();
+        self.metrics.elapsed_s += elapsed;
+        self.metrics.points_per_sec = self.metrics.points as f64 / self.metrics.elapsed_s;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Comm;
+
+    fn points() -> Vec<LbspParams> {
+        let mut pts = Vec::new();
+        for s in 1..=17 {
+            for &p in &[0.0005, 0.045, 0.15] {
+                pts.push(LbspParams {
+                    n: (1u64 << s) as f64,
+                    p,
+                    comm: Comm::Linear,
+                    ..Default::default()
+                });
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn native_sweep_matches_direct_evaluation() {
+        let pts = points();
+        let mut c = SweepCoordinator::native(4);
+        let got = c.speedups(&pts);
+        for (m, g) in pts.iter().zip(&got) {
+            assert_eq!(*g, m.speedup());
+        }
+        assert_eq!(c.metrics.points, pts.len());
+        assert!(c.metrics.points_per_sec > 0.0);
+    }
+
+    #[test]
+    fn native_rho_sweep() {
+        let mut c = SweepCoordinator::native(2);
+        let qs = vec![0.01, 0.1, 0.3];
+        let cs = vec![10.0, 100.0, 1000.0];
+        let got = c.rhos(&qs, &cs);
+        for i in 0..3 {
+            assert_eq!(got[i], crate::model::rho_selective(qs[i], cs[i]));
+        }
+    }
+
+    #[test]
+    fn single_worker_equals_multi_worker() {
+        let pts = points();
+        let a = SweepCoordinator::native(1).speedups(&pts);
+        let b = SweepCoordinator::native(8).speedups(&pts);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,44 @@
+//! # lbsp — Lossy Bulk Synchronous Parallel for Very Large Scale Grids
+//!
+//! Full reproduction of *"Lossy Bulk Synchronous Parallel Processing Model
+//! for Very Large Scale Grids"* (Sundararajan, Harwood, Ramamohanarao, 2006):
+//! a BSP variant whose fundamental parameter is the UDP packet-loss
+//! probability `p` of wide-area links.
+//!
+//! The crate is organised in layers (see `DESIGN.md`):
+//!
+//! * [`util`] — in-tree substrates: PRNG, statistics, CLI/config parsing,
+//!   table emission (the sandbox has no external crates beyond `xla`).
+//! * [`simcore`] — a generic discrete-event simulation engine.
+//! * [`net`] — the lossy datagram network: loss models, links, the
+//!   ack/k-copies/timeout protocol, plus the slotted *rounds* simulator that
+//!   matches the paper's stochastic abstraction exactly.
+//! * [`measure`] — the synthetic PlanetLab measurement campaign (Figs 1–3).
+//! * [`model`] — the analytic library: conceptual model (§II), L-BSP (§III),
+//!   optimal packet copies (§IV), dominating terms (Table I) and the §V
+//!   algorithm analyses (Table II).
+//! * [`bsp`] — the superstep runtime over [`net`], with the paper's three
+//!   retransmission disciplines.
+//! * [`collectives`] — broadcast/all-gather/all-to-all schedules (§V-E/F).
+//! * [`workloads`] — BSP programs with real data: matmul, bitonic sort,
+//!   2D FFT (transpose method), Laplace/Jacobi.
+//! * [`runtime`] — PJRT wrapper loading the AOT HLO artifacts produced by
+//!   `python/compile/aot.py`; the request path never touches Python.
+//! * [`coordinator`] — leader/worker sweep orchestration and batching of
+//!   model evaluations onto the PJRT surface artifact.
+//! * [`report`] — figure/table regeneration (paper evaluation section).
+
+pub mod bsp;
+pub mod collectives;
+pub mod coordinator;
+pub mod measure;
+pub mod model;
+pub mod net;
+pub mod report;
+pub mod runtime;
+pub mod simcore;
+pub mod util;
+pub mod workloads;
+
+/// Average per-node performance assumed throughout the paper's Table II.
+pub const AVG_FLOPS: f64 = 0.5e9;

@@ -1,0 +1,380 @@
+//! `lbsp` — the L-BSP reproduction launcher.
+//!
+//! ```text
+//! lbsp measure [--pairs N] [--probes N] [--seed S]      Figs 1–3
+//! lbsp figure 7|8|9|10|11|12|all [--backend native|pjrt] [--csv]
+//! lbsp table 1|2|all
+//! lbsp plan --p P [--c C | --comm n|nlogn|n2|...] [--w HOURS] [--kmax K]
+//! lbsp run laplace|matmul|sort|fft [--nodes N] [--loss P] [--copies K]
+//!          [--backend native|pjrt] [--seed S]
+//! lbsp simval [--trials N]                              MC vs analytic
+//! lbsp sweep [--points N] [--backend native|pjrt] [--workers W]
+//! ```
+//!
+//! The `pjrt` backend loads the AOT artifacts from `./artifacts`
+//! (override with `LBSP_ARTIFACTS`); build them once with `make artifacts`.
+
+use lbsp::bsp::BspRuntime;
+use lbsp::coordinator::SweepCoordinator;
+use lbsp::measure::CampaignConfig;
+use lbsp::model::lbsp::{optimal_k_min_krho, optimal_k_speedup};
+use lbsp::model::rho::rho_selective_pk;
+use lbsp::model::{Comm, LbspParams};
+use lbsp::net::link::Link;
+use lbsp::net::protocol::RetransmitPolicy;
+use lbsp::net::rounds::estimate_rho;
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::report;
+use lbsp::runtime::Runtime;
+use lbsp::util::cfg::Config;
+use lbsp::util::cli::Args;
+use lbsp::util::prng::Rng;
+use lbsp::util::tables::fmt_num;
+use lbsp::workloads::{laplace, matmul, sort as wsort, ComputeBackend};
+
+/// Layered option resolution: CLI `--key` wins, then the `[section]` of
+/// the `--config` TOML file, then the built-in default.
+struct Opts<'a> {
+    args: &'a Args,
+    cfg: Config,
+    section: &'a str,
+}
+
+impl<'a> Opts<'a> {
+    fn new(args: &'a Args, section: &'a str) -> Opts<'a> {
+        let cfg = match args.get("config") {
+            Some(path) => Config::load(std::path::Path::new(path))
+                .unwrap_or_else(|e| panic!("--config {path}: {e}")),
+            None => Config::default(),
+        };
+        Opts { args, cfg, section }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.args
+            .get(key)
+            .map(|s| s.parse().unwrap_or_else(|e| panic!("--{key}: {e}")))
+            .unwrap_or_else(|| self.cfg.f64_or(self.section, key, default))
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.args
+            .get(key)
+            .map(|s| s.parse().unwrap_or_else(|e| panic!("--{key}: {e}")))
+            .unwrap_or_else(|| self.cfg.usize_or(self.section, key, default))
+    }
+
+    fn str(&self, key: &str, default: &'a str) -> String {
+        self.args
+            .get(key)
+            .map(str::to_string)
+            .unwrap_or_else(|| self.cfg.str_or(self.section, key, default).to_string())
+    }
+}
+
+fn comm_by_name(name: &str) -> Comm {
+    match name {
+        "1" | "one" | "const" => Comm::One,
+        "log" | "logn" => Comm::Log,
+        "log2" | "logsq" => Comm::LogSq,
+        "n" | "linear" => Comm::Linear,
+        "nlogn" => Comm::NLogN,
+        "n2" | "quadratic" => Comm::Quadratic,
+        "matmul" => Comm::MatmulDirect,
+        "alltoall" => Comm::AllToAll,
+        "halo" => Comm::Halo,
+        other => panic!("unknown comm class {other:?}"),
+    }
+}
+
+fn sweeper_for(args: &Args) -> SweepCoordinator {
+    match args.get_or("backend", "native") {
+        "native" => SweepCoordinator::native(args.get_parsed_or("workers", 4usize)),
+        "pjrt" => SweepCoordinator::pjrt(
+            Runtime::load_default().expect("run `make artifacts` first"),
+        ),
+        other => panic!("unknown backend {other:?}"),
+    }
+}
+
+fn print_artifacts(arts: &[report::Artifact], csv: bool) {
+    for a in arts {
+        if csv {
+            println!("# {}", a.title);
+            print!("{}", a.table.csv());
+        } else {
+            a.print();
+        }
+    }
+}
+
+fn cmd_measure(args: &Args) {
+    let o = Opts::new(args, "measure");
+    let cfg = CampaignConfig {
+        n_pairs: o.usize("pairs", 100),
+        probes: o.usize("probes", 300),
+        seed: o.usize("seed", 0x9_1AB) as u64,
+        ..Default::default()
+    };
+    print_artifacts(&report::fig1_3(&cfg), args.flag("csv"));
+}
+
+fn cmd_figure(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let csv = args.flag("csv");
+    let mut sweeper = sweeper_for(args);
+    let mut arts: Vec<report::Artifact> = Vec::new();
+    let all = which == "all";
+    if all || which == "1" || which == "2" || which == "3" {
+        arts.extend(report::fig1_3(&CampaignConfig::default()));
+    }
+    if all || which == "7" {
+        arts.extend(report::fig7());
+    }
+    if all || which == "8" {
+        arts.extend(report::fig8(&mut sweeper));
+    }
+    if all || which == "9" {
+        arts.extend(report::fig9(&mut sweeper));
+    }
+    if all || which == "10" {
+        arts.extend(report::fig10(&mut sweeper, args.get_parsed_or("n", 4096u64)));
+    }
+    if all || which == "11" {
+        arts.extend(report::fig11(&mut sweeper));
+    }
+    if all || which == "12" {
+        arts.extend(report::fig12(&mut sweeper));
+    }
+    if arts.is_empty() {
+        panic!("unknown figure {which:?}");
+    }
+    print_artifacts(&arts, csv);
+    eprintln!(
+        "[{} backend: {} points, {:.0} points/s]",
+        sweeper.backend_name(),
+        sweeper.metrics.points,
+        sweeper.metrics.points_per_sec
+    );
+}
+
+fn cmd_table(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let csv = args.flag("csv");
+    match which {
+        "1" => print_artifacts(&[report::table1()], csv),
+        "2" => print_artifacts(&[report::table2()], csv),
+        "all" => print_artifacts(&[report::table1(), report::table2()], csv),
+        other => panic!("unknown table {other:?}"),
+    }
+}
+
+fn cmd_plan(args: &Args) {
+    let o = Opts::new(args, "plan");
+    let p: f64 = o.f64("p", 0.045);
+    let w_hours: f64 = o.f64("w", 10.0);
+    let kmax: u32 = o.usize("kmax", 12) as u32;
+    let n: f64 = o.f64("n", 4096.0);
+    let comm = comm_by_name(&o.str("comm", "n2"));
+    let c: f64 = o.f64("c", comm.eval(n));
+
+    println!("L-BSP planner: p={p}, c(n)={c}, n={n}, W={w_hours}h");
+    let (k_mk, obj) = optimal_k_min_krho(p, c, kmax);
+    println!("  min k*rho^k criterion:  k = {k_mk}  (k*rho^k = {})", fmt_num(obj));
+    let base = LbspParams { w: w_hours * 3600.0, n, p, comm, ..Default::default() };
+    let (k_s, s) = optimal_k_speedup(&base, kmax);
+    println!("  max speedup criterion:  k = {k_s}  (S_E = {})", fmt_num(s));
+    for k in 1..=kmax {
+        let m = LbspParams { k, ..base };
+        println!(
+            "    k={k:<2} rho^k={:<10} S_E={:<10} G={}",
+            fmt_num(m.rho()),
+            fmt_num(m.speedup()),
+            fmt_num(m.granularity())
+        );
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let o = Opts::new(args, "run");
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("laplace");
+    let loss: f64 = o.f64("loss", 0.1);
+    let copies: u32 = o.usize("copies", 2) as u32;
+    let seed: u64 = o.usize("seed", 7) as u64;
+    let backend_name = &o.str("backend", "pjrt");
+    let rt;
+    let backend = match backend_name.as_str() {
+        "native" => ComputeBackend::Native,
+        "pjrt" => {
+            rt = Runtime::load_default().expect("run `make artifacts` first");
+            ComputeBackend::Pjrt(&rt)
+        }
+        other => panic!("unknown backend {other:?}"),
+    };
+
+    let net = |n: usize| {
+        Network::new(Topology::uniform(n, Link::from_mbytes(50.0, 0.05), loss), seed)
+    };
+    let mut rng = Rng::new(seed);
+    match which {
+        "laplace" => {
+            let p_nodes: usize = o.usize("nodes", 4);
+            let (h, w) = (128usize, 128usize);
+            let steps: usize = o.usize("steps", 8);
+            let rows = p_nodes * (h - 2) + 2;
+            let g: Vec<f32> = (0..rows * w).map(|_| rng.f64() as f32).collect();
+            let mut prog = laplace::JacobiGrid::from_global(&g, p_nodes, h, w, steps, backend);
+            let rep = BspRuntime::new(net(p_nodes)).with_copies(copies).run(&mut prog);
+            let want = laplace::jacobi_seq(&g, rows, w, steps);
+            let got = prog.to_global();
+            let worst = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            println!(
+                "laplace: nodes={p_nodes} mesh={rows}x{w} steps={steps} loss={loss} k={copies} backend={backend_name}"
+            );
+            println!(
+                "  completed={} rounds={} data_packets={} model_time={:.3}s max|err|={worst:.2e}",
+                rep.completed, rep.total_rounds, rep.data_packets, rep.total_time_s
+            );
+        }
+        "matmul" => {
+            let q: usize = o.usize("q", 2);
+            let e: usize = if matches!(backend, ComputeBackend::Pjrt(_)) {
+                256
+            } else {
+                o.usize("block", 64)
+            };
+            let n = q * e;
+            let a: Vec<f32> = (0..n * n).map(|_| (rng.f64() as f32) - 0.5).collect();
+            let b: Vec<f32> = (0..n * n).map(|_| (rng.f64() as f32) - 0.5).collect();
+            let mut prog = matmul::SummaMatmul::from_global(&a, &b, q, e, backend);
+            let rep = BspRuntime::new(net(q * q)).with_copies(copies).run(&mut prog);
+            let want = matmul::matmul_seq(&a, &b, n);
+            let got = prog.c_global();
+            let worst = got
+                .iter()
+                .zip(&want)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            println!(
+                "matmul: {n}x{n} over {q}x{q} grid, loss={loss} k={copies} backend={backend_name}"
+            );
+            println!(
+                "  completed={} rounds={} data_packets={} model_time={:.3}s max|err|={worst:.2e}",
+                rep.completed, rep.total_rounds, rep.data_packets, rep.total_time_s
+            );
+        }
+        "sort" => {
+            let p_nodes: usize = o.usize("nodes", 4);
+            let n_local: usize =
+                if matches!(backend, ComputeBackend::Pjrt(_)) { 512 } else { 1024 };
+            let keys: Vec<Vec<f32>> = (0..p_nodes)
+                .map(|_| (0..n_local).map(|_| (rng.f64() * 1e4) as f32).collect())
+                .collect();
+            let mut want: Vec<f32> = keys.iter().flatten().copied().collect();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut prog = wsort::BitonicSort::new(keys, backend);
+            let rep = BspRuntime::new(net(p_nodes)).with_copies(copies).run(&mut prog);
+            let sorted = prog.gathered() == want;
+            println!(
+                "sort: {} keys over {p_nodes} nodes, loss={loss} k={copies} backend={backend_name}",
+                p_nodes * n_local
+            );
+            println!(
+                "  completed={} rounds={} data_packets={} model_time={:.3}s globally_sorted={sorted}",
+                rep.completed, rep.total_rounds, rep.data_packets, rep.total_time_s
+            );
+        }
+        "fft" => {
+            use lbsp::workloads::fft::Fft2dTm;
+            use lbsp::workloads::fftcore::{fft2d_seq, Cpx};
+            let p_nodes: usize = o.usize("nodes", 4);
+            let n: usize = o.usize("size", 64);
+            let grid: Vec<Cpx> =
+                (0..n * n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            let mut prog = Fft2dTm::from_global(&grid, n, p_nodes);
+            let rep = BspRuntime::new(net(p_nodes)).with_copies(copies).run(&mut prog);
+            let mut want: Vec<Vec<Cpx>> =
+                (0..n).map(|i| grid[i * n..(i + 1) * n].to_vec()).collect();
+            fft2d_seq(&mut want);
+            let got = prog.result_global();
+            let mut worst = 0.0f64;
+            for i in 0..n {
+                for j in 0..n {
+                    worst = worst.max(got[i * n + j].sub(want[i][j]).norm());
+                }
+            }
+            println!("fft: {n}x{n} over {p_nodes} nodes, loss={loss} k={copies} (native radix-2)");
+            println!(
+                "  completed={} rounds={} data_packets={} model_time={:.3}s max|err|={worst:.2e}",
+                rep.completed, rep.total_rounds, rep.data_packets, rep.total_time_s
+            );
+        }
+        other => panic!("unknown workload {other:?}"),
+    }
+}
+
+fn cmd_simval(args: &Args) {
+    let trials: u64 = args.get_parsed_or("trials", 40_000u64);
+    println!("Monte-Carlo vs analytic rho (selective):");
+    for &(p, k, c) in
+        &[(0.045f64, 1u32, 64u64), (0.045, 2, 1024), (0.1, 1, 256), (0.15, 3, 4096)]
+    {
+        let sel_mc = estimate_rho(p, k, c, RetransmitPolicy::Selective, trials, 1);
+        let sel_an = rho_selective_pk(p, k, c as f64);
+        println!(
+            "  p={p:<6} k={k} c={c:<5} selective: MC {} vs eq(3) {}",
+            fmt_num(sel_mc),
+            fmt_num(sel_an)
+        );
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    let n_points: usize = args.get_parsed_or("points", 100_000usize);
+    let mut sweeper = sweeper_for(args);
+    let mut rng = Rng::new(42);
+    let points: Vec<LbspParams> = (0..n_points)
+        .map(|_| LbspParams {
+            n: (1u64 << rng.range(0, 18)) as f64,
+            p: rng.range_f64(0.0005, 0.2),
+            k: rng.range(1, 8) as u32,
+            w: rng.range_f64(0.5, 100.0) * 3600.0,
+            comm: Comm::figure_classes()[rng.range(0, 6)],
+            ..Default::default()
+        })
+        .collect();
+    let speedups = sweeper.speedups(&points);
+    let best = speedups.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "sweep: {} points on {} backend, {:.0} points/s (best S_E = {})",
+        n_points,
+        sweeper.backend_name(),
+        sweeper.metrics.points_per_sec,
+        fmt_num(best)
+    );
+}
+
+const USAGE: &str = "usage: lbsp <measure|figure|table|plan|run|simval|sweep> [options]
+  (see `rust/src/main.rs` doc header for details)";
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("measure") => cmd_measure(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("table") => cmd_table(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("run") => cmd_run(&args),
+        Some("simval") => cmd_simval(&args),
+        Some("sweep") => cmd_sweep(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

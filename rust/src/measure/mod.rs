@@ -1,0 +1,17 @@
+//! The synthetic PlanetLab measurement campaign (paper §I-A, Figs 1–3).
+//!
+//! The paper probed ~160 `.edu` PlanetLab nodes: 100 random pairs, UDP
+//! probe trains per packet size, reporting average loss (Fig 1),
+//! bandwidth (Fig 2) and round-trip time (Fig 3). PlanetLab is
+//! unavailable here, so the campaign runs the same *methodology* against
+//! the [`crate::net`] simulator with per-pair parameters drawn from the
+//! paper's empirical bands — the substitution preserves exactly the
+//! marginals the model consumes (see DESIGN.md §2).
+//!
+//! One physical effect is modeled explicitly because Fig 1 shows it:
+//! datagrams above the path MTU fragment, and a datagram dies if any
+//! fragment dies, so loss creeps up for >10 KB packets ([`frag_factor`]).
+
+mod campaign;
+
+pub use campaign::{frag_factor, run_campaign, CampaignConfig, SizePoint, MTU};

@@ -1,0 +1,66 @@
+//! §V-F — all-gather cost under L-BSP.
+//!
+//! Ring method: every node forwards the fragment it received in the
+//! previous step, P−1 steps, `c(P) = P` packets in flight per step:
+//! `t_allgather = (kα + β)(P−1) ρ̂^k` — the paper's formula verbatim.
+//!
+//! Recursive doubling and the Bruck algorithm halve the step count to
+//! ⌈log₂P⌉ at the cost of doubling fragment sizes per step; both are
+//! referenced in §II as `c(n) = log₂n`-class algorithms and are provided
+//! here for the crossover analysis (and exercised as real schedules in
+//! `collectives/`).
+
+use crate::model::rho::rho_selective_pk;
+
+use super::NetParams;
+
+/// Ring all-gather (paper formula): `(kα + β)(P−1)ρ̂^k`.
+pub fn t_ring(processors: u64, net: &NetParams) -> f64 {
+    let p = processors as f64;
+    let rho = rho_selective_pk(net.p, net.k, p);
+    (net.k as f64 * net.alpha() + net.beta) * (p - 1.0) * rho
+}
+
+/// Recursive doubling: ⌈log₂P⌉ steps; step i moves 2^i fragments, so the
+/// α term telescopes to (P−1)/P of the full gathered payload per node.
+pub fn t_recursive_doubling(processors: u64, net: &NetParams) -> f64 {
+    let p = processors as f64;
+    let lg = p.log2().ceil();
+    let rho = rho_selective_pk(net.p, net.k, lg.max(1.0));
+    (net.k as f64 * net.alpha() * (p - 1.0) / p.max(1.0) + net.beta * lg) * rho
+}
+
+/// Bruck algorithm: same ⌈log₂P⌉ step count as recursive doubling with a
+/// final local rotation; identical wire cost at this abstraction level.
+pub fn t_bruck(processors: u64, net: &NetParams) -> f64 {
+    t_recursive_doubling(processors, net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_formula_verbatim() {
+        let net = NetParams::default();
+        let p = 64u64;
+        let rho = rho_selective_pk(net.p, net.k, 64.0);
+        let manual = (net.k as f64 * net.alpha() + net.beta) * 63.0 * rho;
+        assert!((t_ring(p, &net) - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_scales_linearly_in_p() {
+        let net = NetParams { p: 0.0, ..Default::default() };
+        let t64 = t_ring(64, &net);
+        let t128 = t_ring(128, &net);
+        assert!((t128 / t64 - 127.0 / 63.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn doubling_beats_ring_at_scale_for_short_messages() {
+        // β-bound regime: log steps beat linear steps.
+        let net = NetParams::default();
+        assert!(t_recursive_doubling(1024, &net) < t_ring(1024, &net));
+    }
+}

@@ -1,0 +1,81 @@
+//! §V-B — Batcher's bitonic mergesort.
+//!
+//! Each node sorts `N/P` keys locally, then `log₂P` merge stages (stage S
+//! has S steps) exchange whole local lists between partners: a total of
+//! `log₂P(log₂P+1)/2` steps, each injecting `c(P) = P` packets.
+//!
+//! Compute: `(N/P)·log₂(N/P) + [log₂P(log₂P+1)/2]·(2N/P − 1)` FLOPs.
+//! Communication: `γ·log₂P(log₂P+1)·(kα+β)·ρ̂^k` seconds.
+
+use super::{Evaluation, NetParams};
+
+/// Evaluate one (N keys total, P) configuration.
+pub fn evaluate(n_keys: f64, processors: u64, net: NetParams) -> Evaluation {
+    let p = processors as f64;
+    let lg = p.log2();
+    let c = p; // per step
+    let rho = net.rho(c);
+    let w_s = n_keys * n_keys.log2() / net.flops;
+    let local = n_keys / p;
+    let flops_par =
+        local * local.log2().max(0.0) + lg * (lg + 1.0) / 2.0 * (2.0 * local - 1.0);
+    let w_p = flops_par / net.flops;
+    let comm = net.gamma() * lg * (lg + 1.0) * (net.k as f64 * net.alpha() + net.beta) * rho;
+    Evaluation::finish("bitonic", n_keys, processors, net, c, rho, w_s, w_p, comm)
+}
+
+/// Table II bitonic column: N = 2^31 keys, P = 2^17, k = 6, p = 0.045.
+pub fn paper_column() -> Evaluation {
+    let net = NetParams {
+        bandwidth_mbytes: 17.5,
+        p: 0.045,
+        k: 6,
+        packet_bytes: 1 << 16,
+        message_bytes: 1 << 16,
+        beta: 0.069,
+        ..Default::default()
+    };
+    evaluate((1u64 << 31) as f64, 1 << 17, net)
+}
+
+/// §V-B sweep: N = 2^20..2^31, P = 2^s (s ≤ 17).
+pub fn paper_sweep() -> Evaluation {
+    let net = paper_column().net;
+    super::sweep_best(
+        |n, p| evaluate(n, p, net),
+        &[20u32, 24, 28, 29, 30, 31].map(|e| (1u64 << e) as f64),
+        &(1..=17).map(|s| 1u64 << s).collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_column_reproduces_table2() {
+        let e = paper_column();
+        // Sequential 133.14 s, rho 1.002, comm 28.18 s, total 28.194 s,
+        // speedup 4.72, efficiency 3.6e-5.
+        assert!((e.w_s - 133.14).abs() / 133.14 < 1e-3, "w_s {}", e.w_s);
+        assert!((e.rho - 1.002).abs() < 0.005, "rho {}", e.rho);
+        assert!((e.comm_s - 28.18).abs() / 28.18 < 0.05, "comm {}", e.comm_s);
+        assert!((e.speedup - 4.72).abs() / 4.72 < 0.05, "S {}", e.speedup);
+        assert!(e.efficiency < 1e-4, "eff {}", e.efficiency);
+    }
+
+    #[test]
+    fn communication_dominates_at_scale() {
+        // The paper's point: sorting is communication-bound on a VLSG.
+        let e = paper_column();
+        assert!(e.comm_s > 100.0 * e.w_p);
+    }
+
+    #[test]
+    fn fewer_nodes_beat_many_for_small_inputs() {
+        let net = paper_column().net;
+        let few = evaluate((1u64 << 24) as f64, 1 << 4, net);
+        let many = evaluate((1u64 << 24) as f64, 1 << 17, net);
+        assert!(few.speedup > many.speedup);
+    }
+}

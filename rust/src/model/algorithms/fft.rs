@@ -1,0 +1,89 @@
+//! §V-C — 2D FFT, transpose method (FFT-TM).
+//!
+//! Multiple 1D FFTs per direction with an all-to-all transpose in between:
+//! each node ships `N/P²` of its `N/P` points to every other node, so
+//! `c(P) = P(P−1)` packets of `Nb/P²` bytes (b = 16-byte complex datum).
+//!
+//! Compute: sequential `5N·log₂N` FLOPs, parallel `10(N/P)·log₂(N/P)`.
+//! Communication: `4γρ̂^k (kα(P−1) + β)` seconds (two all-to-alls, data
+//! and acknowledgment directions).
+
+use super::{Evaluation, NetParams};
+
+/// Complex datum size in bytes (§V-C).
+pub const DATUM_BYTES: f64 = 16.0;
+
+/// Evaluate one (N data points, P) configuration.
+pub fn evaluate(n_points: f64, processors: u64, net: NetParams) -> Evaluation {
+    let p = processors as f64;
+    let c = p * (p - 1.0);
+    let rho = net.rho(c);
+    let w_s = 5.0 * n_points * n_points.log2() / net.flops;
+    let local = n_points / p;
+    let w_p = 10.0 * local * local.log2().max(0.0) / net.flops;
+    let comm =
+        4.0 * net.gamma() * rho * (net.k as f64 * net.alpha() * (p - 1.0) + net.beta);
+    Evaluation::finish("fft2d", n_points, processors, net, c, rho, w_s, w_p, comm)
+}
+
+/// Table II FFT column: N = 2^34, P = 2^15, k = 3, p = 0.0005,
+/// 17.07 MB/s, packet 2^8 B (= the N/P² fragment of 16-byte data), β=0.05.
+pub fn paper_column() -> Evaluation {
+    let net = NetParams {
+        bandwidth_mbytes: 17.07,
+        p: 0.0005,
+        k: 3,
+        packet_bytes: 1 << 8,
+        message_bytes: 1 << 8,
+        beta: 0.05,
+        ..Default::default()
+    };
+    evaluate((1u64 << 34) as f64, 1 << 15, net)
+}
+
+/// §V-C sweep: N = 2^30..2^38, P = 2^s (s ≤ 15).
+pub fn paper_sweep() -> Evaluation {
+    let net = paper_column().net;
+    super::sweep_best(
+        |n, p| evaluate(n, p, net),
+        &[30u32, 32, 34, 36, 38].map(|e| (1u64 << e) as f64),
+        &(1..=15).map(|s| 1u64 << s).collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_column_reproduces_table2() {
+        let e = paper_column();
+        // Sequential 5841.15 s, rho 1.24, comm 7.35 s, total 7.55 s,
+        // speedup 773.4, efficiency 0.02.
+        assert!((e.w_s - 5841.15).abs() / 5841.15 < 1e-3, "w_s {}", e.w_s);
+        assert!((e.rho - 1.24).abs() < 0.05, "rho {}", e.rho);
+        assert!((e.comm_s - 7.35).abs() / 7.35 < 0.06, "comm {}", e.comm_s);
+        assert!((e.speedup - 773.4).abs() / 773.4 < 0.05, "S {}", e.speedup);
+        assert!((e.efficiency - 0.02).abs() < 0.005, "eff {}", e.efficiency);
+    }
+
+    #[test]
+    fn alpha_matches_table2() {
+        let e = paper_column();
+        assert!((e.net.alpha() - 1.5e-5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn packet_size_is_the_fragment_size() {
+        // N/P² data of 16 B each: 2^34/2^30 × 16 = 256 B = 2^8.
+        let n: f64 = (1u64 << 34) as f64;
+        let p: f64 = (1u64 << 15) as f64;
+        assert_eq!(n / (p * p) * DATUM_BYTES, 256.0);
+    }
+
+    #[test]
+    fn all_to_all_count() {
+        let e = evaluate(1.0e6, 8, NetParams::default());
+        assert_eq!(e.c, 56.0); // 8·7
+    }
+}

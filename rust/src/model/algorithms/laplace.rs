@@ -1,0 +1,100 @@
+//! §V-D — Laplace's equation by Jacobi iteration.
+//!
+//! Finite differences on an m×m mesh give a pentadiagonal system of
+//! (m−1)² unknowns; each node owns `(m−1)²/P` points and exchanges at
+//! most 3 newly computed unknowns (24 bytes) with its neighbours per
+//! iteration, `c(P) = 2(P−1)` packets per phase. The paper charges
+//! `log₂P` rounds to convergence for the diagonally dominant system.
+//!
+//! Compute: `2d·log₂P·(m−1)²` FLOPs sequential (d = 5 diagonals),
+//! 1/P-th of that in parallel.
+//! Communication: `2·log₂P·ρ̂^k (kα·2(P−1)/P + β)` seconds.
+
+use super::{Evaluation, NetParams};
+
+/// Diagonals in the pentadiagonal Laplace system.
+pub const DIAGONALS: f64 = 5.0;
+
+/// Evaluate one (m mesh dimension, P) configuration.
+pub fn evaluate(m_dim: f64, processors: u64, net: NetParams) -> Evaluation {
+    let p = processors as f64;
+    let lg = p.log2();
+    let c = 2.0 * (p - 1.0);
+    let rho = net.rho(c);
+    let unknowns = (m_dim - 1.0) * (m_dim - 1.0);
+    let flops_seq = 2.0 * DIAGONALS * lg * unknowns;
+    let w_s = flops_seq / net.flops;
+    let w_p = flops_seq / p / net.flops;
+    let comm = 2.0
+        * lg
+        * rho
+        * (net.k as f64 * net.alpha() * 2.0 * (p - 1.0) / p + net.beta);
+    Evaluation::finish("laplace", m_dim, processors, net, c, rho, w_s, w_p, comm)
+}
+
+/// Table II Laplace column: m = 2^18, P = 2^17, k = 5, p = 0.0005,
+/// 24 MB/s, packet 24 B (3 values × 8 B), β = 0.05.
+pub fn paper_column() -> Evaluation {
+    let net = NetParams {
+        bandwidth_mbytes: 24.0,
+        p: 0.0005,
+        k: 5,
+        packet_bytes: 24,
+        message_bytes: 24,
+        beta: 0.05,
+        ..Default::default()
+    };
+    evaluate((1u64 << 18) as f64, 1 << 17, net)
+}
+
+/// §V-D sweep: m = 2^14..2^18, P = 2^s (s ≤ 17).
+pub fn paper_sweep() -> Evaluation {
+    let net = paper_column().net;
+    super::sweep_best(
+        |m, p| evaluate(m, p, net),
+        &[14u32, 15, 16, 17, 18].map(|e| (1u64 << e) as f64),
+        &(1..=17).map(|s| 1u64 << s).collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_column_reproduces_table2() {
+        let e = paper_column();
+        // Sequential 23364.44 s, rho 1.0, comm 1.7 s, total 1.8783 s,
+        // speedup 12439.43, efficiency 0.095.
+        assert!((e.w_s - 23364.44).abs() / 23364.44 < 1e-3, "w_s {}", e.w_s);
+        assert!((e.rho - 1.0).abs() < 1e-4, "rho {}", e.rho);
+        assert!((e.comm_s - 1.7).abs() / 1.7 < 0.02, "comm {}", e.comm_s);
+        assert!(
+            (e.total_parallel_s - 1.8783).abs() / 1.8783 < 0.02,
+            "total {}",
+            e.total_parallel_s
+        );
+        assert!((e.speedup - 12439.43).abs() / 12439.43 < 0.02, "S {}", e.speedup);
+        assert!((e.efficiency - 0.095).abs() < 0.005, "eff {}", e.efficiency);
+    }
+
+    #[test]
+    fn alpha_matches_table2() {
+        // 24 B at 24 MB/s → 1e-6 s.
+        let e = paper_column();
+        assert!((e.net.alpha() - 1.0e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn halo_packet_count() {
+        let e = evaluate(1024.0, 16, NetParams::default());
+        assert_eq!(e.c, 30.0); // 2(P−1)
+    }
+
+    #[test]
+    fn best_in_sweep_is_paper_config() {
+        let best = paper_sweep();
+        assert_eq!(best.size, (1u64 << 18) as f64);
+        assert_eq!(best.processors, 1 << 17);
+    }
+}

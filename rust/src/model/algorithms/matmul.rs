@@ -1,0 +1,98 @@
+//! §V-A — direct parallel matrix multiplication.
+//!
+//! A and B are distributed as √P × √P submatrices; computing block C_ij
+//! needs the row of A-blocks and column of B-blocks, so
+//! `c(P) = 2(P^{3/2} − P)` packets enter the network per phase and each
+//! node's per-phase exchange costs `2γρ̂^k (2(√P−1)kα + β)` seconds.
+//!
+//! Sequential cost `2N³ − N²` FLOPs; parallel compute `(2N³ − N²)/P`.
+
+use super::{Evaluation, NetParams};
+
+/// Evaluate one (N, P) configuration.
+pub fn evaluate(n_dim: f64, processors: u64, net: NetParams) -> Evaluation {
+    let p = processors as f64;
+    let c = 2.0 * (p.powf(1.5) - p);
+    let rho = net.rho(c);
+    let flops_seq = 2.0 * n_dim.powi(3) - n_dim.powi(2);
+    let w_s = flops_seq / net.flops;
+    let w_p = flops_seq / p / net.flops;
+    let comm = 2.0
+        * net.gamma()
+        * rho
+        * (2.0 * (p.sqrt() - 1.0) * net.k as f64 * net.alpha() + net.beta);
+    Evaluation::finish("matmul", n_dim, processors, net, c, rho, w_s, w_p, comm)
+}
+
+/// The paper's Table II matmul column: N = 2^15, k = 7, p = 0.045,
+/// 17.5 MB/s, β = 0.069, message = packet = 2^16 B.
+///
+/// Paper quirk (recorded in EXPERIMENTS.md): the table header row says
+/// "No. of processors 2^16" while the §V-A text says the best speedup was
+/// at P = 2^17. The table's own numbers (comm 27.54 s, total 29.69 s,
+/// S = 4740.89) only reproduce with **P = 2^16**, so that is what we pin.
+pub fn paper_column() -> Evaluation {
+    let net = NetParams {
+        bandwidth_mbytes: 17.5,
+        p: 0.045,
+        k: 7,
+        packet_bytes: 1 << 16,
+        message_bytes: 1 << 16,
+        beta: 0.069,
+        ..Default::default()
+    };
+    evaluate((1u64 << 15) as f64, 1 << 16, net)
+}
+
+/// The §V-A sweep: P = 2^s (s ≤ 17), N = 2^11..2^15.
+pub fn paper_sweep() -> Evaluation {
+    let net = paper_column().net;
+    super::sweep_best(
+        |n, p| evaluate(n, p, net),
+        &[2048.0, 4096.0, 8192.0, 16384.0, 32768.0],
+        &(1..=17).map(|s| 1u64 << s).collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_column_reproduces_table2() {
+        let e = paper_column();
+        // Sequential compute 140765.34 s.
+        assert!((e.w_s - 140765.34).abs() / 140765.34 < 1e-3, "w_s {}", e.w_s);
+        // rho^k = 1.025.
+        assert!((e.rho - 1.025).abs() < 0.01, "rho {}", e.rho);
+        // Communication cost 27.54 s (paper rounds; we allow 5%).
+        assert!((e.comm_s - 27.54).abs() / 27.54 < 0.05, "comm {}", e.comm_s);
+        // Total parallel 29.69 s.
+        assert!((e.total_parallel_s - 29.69).abs() / 29.69 < 0.05, "total {}", e.total_parallel_s);
+        // Speedup 4740.89, efficiency 0.072.
+        assert!((e.speedup - 4740.89).abs() / 4740.89 < 0.05, "S {}", e.speedup);
+        assert!((e.efficiency - 0.072).abs() < 0.01, "eff {}", e.efficiency);
+    }
+
+    #[test]
+    fn packet_count_matches_section_5a() {
+        let e = evaluate(1024.0, 16, NetParams::default());
+        assert_eq!(e.c, 96.0); // 2(16^1.5 − 16) = 96
+    }
+
+    #[test]
+    fn speedup_improves_with_bigger_matrices() {
+        let net = NetParams::default();
+        let small = evaluate(2048.0, 4096, net);
+        let large = evaluate(32768.0, 4096, net);
+        assert!(large.speedup > small.speedup);
+        assert!(large.efficiency > small.efficiency);
+    }
+
+    #[test]
+    fn sweep_best_is_at_large_n() {
+        let best = paper_sweep();
+        assert_eq!(best.size, 32768.0);
+        assert!(best.speedup >= 4500.0, "best {}", best.speedup);
+    }
+}

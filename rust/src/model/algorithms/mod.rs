@@ -1,0 +1,169 @@
+//! §V — fundamental parallel algorithms analyzed under the L-BSP model.
+//!
+//! Each submodule reproduces one Table II column (plus §V-E/F collective
+//! cost formulas): given the paper's parameters it computes sequential
+//! work `w_s`, parallel work `w_p`, communication cost, total parallel
+//! time, speedup and efficiency. The module-level [`table2_rows`] emits
+//! the full Table II reproduction.
+
+pub mod allgather;
+pub mod bitonic;
+pub mod broadcast;
+pub mod fft;
+pub mod laplace;
+pub mod matmul;
+
+use crate::model::rho::rho_selective_pk;
+use crate::AVG_FLOPS;
+
+/// Network-side parameters shared by every §V analysis.
+#[derive(Clone, Copy, Debug)]
+pub struct NetParams {
+    /// End-to-end bandwidth in MBytes/s (paper Fig 2 band).
+    pub bandwidth_mbytes: f64,
+    /// Packet loss probability `p`.
+    pub p: f64,
+    /// Packet copies `k`.
+    pub k: u32,
+    /// Packet size in bytes.
+    pub packet_bytes: u64,
+    /// Message size in bytes (γ = ⌈message/packet⌉ supersteps).
+    pub message_bytes: u64,
+    /// Round-trip delay β (s).
+    pub beta: f64,
+    /// Average node performance in FLOPS (paper: 0.5 GFLOPS).
+    pub flops: f64,
+}
+
+impl NetParams {
+    /// α = packet size / bandwidth, in seconds.
+    pub fn alpha(&self) -> f64 {
+        self.packet_bytes as f64 / (self.bandwidth_mbytes * 1.0e6)
+    }
+
+    /// γ = ⌈message size / packet size⌉ communication supersteps (§V).
+    pub fn gamma(&self) -> f64 {
+        (self.message_bytes as f64 / self.packet_bytes as f64).ceil().max(1.0)
+    }
+
+    /// Selective ρ̂^k for a phase of `c` packets.
+    pub fn rho(&self, c: f64) -> f64 {
+        rho_selective_pk(self.p, self.k, c)
+    }
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        NetParams {
+            bandwidth_mbytes: 17.5,
+            p: 0.045,
+            k: 1,
+            packet_bytes: 1 << 16,
+            message_bytes: 1 << 16,
+            beta: 0.069,
+            flops: AVG_FLOPS,
+        }
+    }
+}
+
+/// A fully evaluated algorithm configuration (one Table II column).
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub algorithm: &'static str,
+    /// Problem size N (matrix dim, keys, data points, or mesh dim).
+    pub size: f64,
+    pub processors: u64,
+    pub net: NetParams,
+    pub c: f64,
+    pub rho: f64,
+    pub w_s: f64,
+    pub w_p: f64,
+    pub comm_s: f64,
+    pub total_parallel_s: f64,
+    pub speedup: f64,
+    pub efficiency: f64,
+}
+
+impl Evaluation {
+    pub(crate) fn finish(
+        algorithm: &'static str,
+        size: f64,
+        processors: u64,
+        net: NetParams,
+        c: f64,
+        rho: f64,
+        w_s: f64,
+        w_p: f64,
+        comm_s: f64,
+    ) -> Evaluation {
+        let total = w_p + comm_s;
+        Evaluation {
+            algorithm,
+            size,
+            processors,
+            net,
+            c,
+            rho,
+            w_s,
+            w_p,
+            comm_s,
+            total_parallel_s: total,
+            speedup: w_s / total,
+            efficiency: w_s / total / processors as f64,
+        }
+    }
+}
+
+/// Sweep helper: argmax of speedup over `(size, processors)` grids.
+pub fn sweep_best(
+    eval: impl Fn(f64, u64) -> Evaluation,
+    sizes: &[f64],
+    processors: &[u64],
+) -> Evaluation {
+    let mut best: Option<Evaluation> = None;
+    for &size in sizes {
+        for &p in processors {
+            let e = eval(size, p);
+            if best.as_ref().map(|b| e.speedup > b.speedup).unwrap_or(true) {
+                best = Some(e);
+            }
+        }
+    }
+    best.expect("empty sweep")
+}
+
+/// The four Table II columns with the paper's exact parameters.
+pub fn table2_rows() -> Vec<Evaluation> {
+    vec![
+        matmul::paper_column(),
+        bitonic::paper_column(),
+        fft::paper_column(),
+        laplace::paper_column(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_gamma_defaults_match_paper() {
+        let n = NetParams::default();
+        assert!((n.alpha() - 0.0037).abs() < 1e-4);
+        assert_eq!(n.gamma(), 1.0);
+    }
+
+    #[test]
+    fn gamma_ceils() {
+        let n = NetParams { message_bytes: 100_000, packet_bytes: 65536, ..Default::default() };
+        assert_eq!(n.gamma(), 2.0);
+    }
+
+    #[test]
+    fn table2_has_four_columns() {
+        let rows = table2_rows();
+        assert_eq!(rows.len(), 4);
+        let names: Vec<&str> = rows.iter().map(|r| r.algorithm).collect();
+        assert_eq!(names, vec!["matmul", "bitonic", "fft2d", "laplace"]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Communication complexity classes c(n).
+//!
+//! The paper sweeps six canonical classes (§II Fig 7, §III Fig 8–9) and
+//! uses per-algorithm counts in §V. `Comm` is the closed set used by the
+//! figure harness; arbitrary counts enter via [`Comm::Custom`].
+
+/// c(n): packets injected per communication phase as a function of nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Comm {
+    /// c(n) = 1 — a single point-to-point message per round.
+    One,
+    /// c(n) = log₂ n — binomial tree / recursive doubling.
+    Log,
+    /// c(n) = log₂² n.
+    LogSq,
+    /// c(n) = n — Van de Geijn broadcast, ring all-gather.
+    Linear,
+    /// c(n) = n log₂ n.
+    NLogN,
+    /// c(n) = n² — naive all-to-all.
+    Quadratic,
+    /// c(n) = 2(n^{3/2} − n) — §V-A direct matrix multiplication.
+    MatmulDirect,
+    /// c(n) = n(n−1) — §V-C FFT transpose all-to-all.
+    AllToAll,
+    /// c(n) = 2(n−1) — §V-D Laplace halo exchange.
+    Halo,
+    /// A fixed custom count (n-independent).
+    Custom(f64),
+}
+
+impl Comm {
+    /// Evaluate c(n). `n` is real-valued so optimizers can differentiate.
+    pub fn eval(&self, n: f64) -> f64 {
+        debug_assert!(n >= 1.0);
+        match self {
+            Comm::One => 1.0,
+            Comm::Log => n.log2().max(1.0),
+            Comm::LogSq => {
+                let l = n.log2().max(1.0);
+                l * l
+            }
+            Comm::Linear => n,
+            Comm::NLogN => n * n.log2().max(1.0),
+            Comm::Quadratic => n * n,
+            Comm::MatmulDirect => 2.0 * (n.powf(1.5) - n),
+            Comm::AllToAll => n * (n - 1.0),
+            Comm::Halo => 2.0 * (n - 1.0),
+            Comm::Custom(c) => *c,
+        }
+    }
+
+    /// The six canonical classes of the paper's figures, in figure order.
+    pub fn figure_classes() -> [Comm; 6] {
+        [Comm::One, Comm::Log, Comm::LogSq, Comm::Linear, Comm::NLogN, Comm::Quadratic]
+    }
+
+    /// Display label matching the paper's figure legends.
+    pub fn label(&self) -> String {
+        match self {
+            Comm::One => "c(n)=1".into(),
+            Comm::Log => "c(n)=log2(n)".into(),
+            Comm::LogSq => "c(n)=log2^2(n)".into(),
+            Comm::Linear => "c(n)=n".into(),
+            Comm::NLogN => "c(n)=nlog2(n)".into(),
+            Comm::Quadratic => "c(n)=n^2".into(),
+            Comm::MatmulDirect => "c(n)=2(n^1.5-n)".into(),
+            Comm::AllToAll => "c(n)=n(n-1)".into(),
+            Comm::Halo => "c(n)=2(n-1)".into(),
+            Comm::Custom(c) => format!("c(n)={c}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_values() {
+        assert_eq!(Comm::One.eval(1024.0), 1.0);
+        assert_eq!(Comm::Log.eval(1024.0), 10.0);
+        assert_eq!(Comm::LogSq.eval(1024.0), 100.0);
+        assert_eq!(Comm::Linear.eval(1024.0), 1024.0);
+        assert_eq!(Comm::NLogN.eval(1024.0), 10240.0);
+        assert_eq!(Comm::Quadratic.eval(1024.0), 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn matmul_count_matches_section5a() {
+        // c(P) = 2(P^{3/2} − P) at P = 16: 2(64 − 16) = 96.
+        assert_eq!(Comm::MatmulDirect.eval(16.0), 96.0);
+    }
+
+    #[test]
+    fn log_classes_clamp_below_two_nodes() {
+        // n=1 gives log2(1)=0; clamp keeps c >= 1 so p_f is well-defined.
+        assert_eq!(Comm::Log.eval(1.0), 1.0);
+        assert_eq!(Comm::LogSq.eval(1.0), 1.0);
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        let labels: Vec<String> =
+            Comm::figure_classes().iter().map(|c| c.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+}

@@ -1,0 +1,268 @@
+//! §II — the conceptual (zero-communication-cost) model.
+//!
+//! PRAM-like: communication is free, but a failed round (any packet lost)
+//! costs a full recomputation of `w` plus retransmission of all `c(n)`
+//! packets. Expected speedup `S_E = n · p_s(n,p)` with
+//! `p_s(n,p) = (1 − p^k)^{2c(n)}`; the exponential approximation
+//! `p_s ≈ e^{−2 p^k c(n)}` yields closed-form optimal node counts.
+
+use super::comm::Comm;
+
+/// Phase success probability `p_s(n, p) = (1 − p^k)^{2 c(n)}` (ln-space so
+/// huge c(n) underflows to 0 rather than NaN).
+pub fn phase_success(n: f64, p: f64, k: u32, comm: Comm) -> f64 {
+    let c = comm.eval(n);
+    let pk = p.powi(k as i32);
+    (2.0 * c * (-pk).ln_1p()).exp()
+}
+
+/// §II expected speedup `S_E = n · p_s(n, p)`.
+pub fn speedup(n: f64, p: f64, k: u32, comm: Comm) -> f64 {
+    n * phase_success(n, p, k, comm)
+}
+
+/// The exponential approximation `S_E ≈ n e^{−2 p^k c(n)}` (used for the
+/// closed-form optima; accurate for small `p^k`).
+pub fn speedup_approx(n: f64, p: f64, k: u32, comm: Comm) -> f64 {
+    let pk = p.powi(k as i32);
+    n * (-2.0 * pk * comm.eval(n)).exp()
+}
+
+/// Closed-form optimal node count for the three classes the paper solves
+/// analytically (§II): `⌊e^{ln²2 / 4p^k}⌋` for `log²n`, `⌊1/2p^k⌋` for
+/// `n`, `⌊1/(2√(p^k))⌋` for `n²`. Returns `None` for classes with no
+/// closed form (`1` and `log n` are monotone; `n log n` needs numerics).
+pub fn optimal_n_closed_form(p: f64, k: u32, comm: Comm) -> Option<f64> {
+    optimal_n_closed_form_real(p, k, comm).map(f64::floor)
+}
+
+/// The closed forms before the paper's final ⌊·⌋ (used to compare against
+/// continuous argmax scans without the floor quantization).
+pub fn optimal_n_closed_form_real(p: f64, k: u32, comm: Comm) -> Option<f64> {
+    let pk = p.powi(k as i32);
+    if pk <= 0.0 {
+        return None; // lossless: more nodes always help
+    }
+    match comm {
+        Comm::LogSq => {
+            let ln2 = std::f64::consts::LN_2;
+            Some((ln2 * ln2 / (4.0 * pk)).exp())
+        }
+        Comm::Linear => Some(1.0 / (2.0 * pk)),
+        Comm::Quadratic => Some(1.0 / (2.0 * pk.sqrt())),
+        _ => None,
+    }
+}
+
+/// Numeric argmax of the §II speedup over `n ∈ {1, …, n_max}` (integer
+/// nodes, matching the paper's figures). Returns `(n*, S_E(n*))`.
+pub fn optimal_n_numeric(p: f64, k: u32, comm: Comm, n_max: u64) -> (u64, f64) {
+    let mut best = (1u64, speedup(1.0, p, k, comm));
+    for n in 2..=n_max {
+        let s = speedup(n as f64, p, k, comm);
+        if s > best.1 {
+            best = (n, s);
+        }
+    }
+    best
+}
+
+/// §II's `c(n) = n·log₂n` case: "no analytical solution exists but a
+/// numerical solution can be found". Solves `d/dn [n·e^{−2p^k·n·log₂n}]
+/// = 0`, i.e. `2p^k·(n/ln2 + n·log₂n) = 1`, by bisection on the
+/// monotone left-hand side. Returns `None` for p^k = 0 (monotone case).
+pub fn optimal_n_nlogn_numeric(p: f64, k: u32) -> Option<f64> {
+    let pk = p.powi(k as i32);
+    if pk <= 0.0 {
+        return None;
+    }
+    let ln2 = std::f64::consts::LN_2;
+    // g(n) = 2 p^k n (1/ln2 + log2 n) − 1, increasing for n >= 1.
+    let g = |n: f64| 2.0 * pk * n * (1.0 / ln2 + n.log2()) - 1.0;
+    let (mut lo, mut hi) = (1.0f64, 1.0f64);
+    if g(lo) > 0.0 {
+        return Some(1.0); // optimum at (or below) a single node
+    }
+    while g(hi) < 0.0 {
+        hi *= 2.0;
+        if hi > 1.0e300 {
+            return None;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+/// As [`optimal_n_numeric`] but over the exponential approximation on a
+/// continuous grid — used to verify the closed forms, which were derived
+/// from the approximation.
+pub fn optimal_n_numeric_approx(p: f64, k: u32, comm: Comm, n_max: f64) -> (f64, f64) {
+    // Geometric grid: the optimum location is scale-free.
+    let mut best = (1.0f64, speedup_approx(1.0, p, k, comm));
+    let steps = 200_000;
+    for i in 0..=steps {
+        let n = (n_max.ln() * i as f64 / steps as f64).exp();
+        let s = speedup_approx(n, p, k, comm);
+        if s > best.1 {
+            best = (n, s);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::{forall_cases, gens};
+
+    #[test]
+    fn zero_loss_speedup_is_linear() {
+        for n in [1.0, 16.0, 131072.0] {
+            assert_eq!(speedup(n, 0.0, 1, Comm::Quadratic), n);
+        }
+    }
+
+    #[test]
+    fn constant_comm_speedup_nearly_linear() {
+        // Fig 7 panel c(n)=1: S = n (1-p^k)^2 — linear in n.
+        let s1 = speedup(1000.0, 0.1, 2, Comm::One);
+        let s2 = speedup(2000.0, 0.1, 2, Comm::One);
+        assert!((s2 / s1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quadratic_comm_has_interior_optimum() {
+        // Fig 7: c(n)=n² speedup rises then falls.
+        let p = 0.01;
+        let (n_star, s_star) = optimal_n_numeric(p, 2, Comm::Quadratic, 1 << 17);
+        assert!(n_star > 1 && n_star < 1 << 17);
+        assert!(s_star > speedup(1.0, p, 2, Comm::Quadratic));
+        assert!(s_star > speedup((1 << 17) as f64, p, 2, Comm::Quadratic));
+    }
+
+    #[test]
+    fn closed_form_linear_matches_numeric_argmax() {
+        // c(n)=n: n* = 1/(2 p^k).
+        for &(p, k) in &[(0.01f64, 1u32), (0.05, 1), (0.1, 2)] {
+            let want = optimal_n_closed_form_real(p, k, Comm::Linear).unwrap();
+            let (got, _) = optimal_n_numeric_approx(p, k, Comm::Linear, 1.0e7);
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "p={p} k={k}: numeric {got} vs closed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_quadratic_matches_numeric_argmax() {
+        for &(p, k) in &[(0.01f64, 1u32), (0.001, 1), (0.1, 2)] {
+            let want = optimal_n_closed_form_real(p, k, Comm::Quadratic).unwrap();
+            let (got, _) = optimal_n_numeric_approx(p, k, Comm::Quadratic, 1.0e5);
+            assert!(
+                (got - want).abs() / want.max(1.0) < 0.05,
+                "p={p} k={k}: numeric {got} vs closed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_logsq_matches_numeric_argmax() {
+        // n* = e^{ln²2/4p^k}; keep p large enough that n* is reachable.
+        for &(p, k) in &[(0.05f64, 1u32), (0.1, 1)] {
+            let want = optimal_n_closed_form_real(p, k, Comm::LogSq).unwrap();
+            let (got, _) = optimal_n_numeric_approx(p, k, Comm::LogSq, 1.0e7);
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "p={p} k={k}: numeric {got} vs closed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn floored_closed_form_is_paper_shape() {
+        // ⌊1/(2p^k)⌋ etc. — the exact expressions printed in §II.
+        assert_eq!(optimal_n_closed_form(0.01, 1, Comm::Linear), Some(50.0));
+        assert_eq!(optimal_n_closed_form(0.01, 1, Comm::Quadratic), Some(5.0));
+        let ln2 = std::f64::consts::LN_2;
+        let want = (ln2 * ln2 / 0.04).exp().floor();
+        assert_eq!(optimal_n_closed_form(0.01, 1, Comm::LogSq), Some(want));
+    }
+
+    #[test]
+    fn more_copies_never_reduce_speedup() {
+        // Paper eq (2): p_s^k is non-decreasing in k.
+        forall_cases(
+            "copies help (conceptual)",
+            gens::pair(gens::f64_in(0.001, 0.4), gens::pow2(1, 17)),
+            64,
+            |&(p, n)| {
+                let s1 = speedup(n as f64, p, 1, Comm::NLogN);
+                let s3 = speedup(n as f64, p, 3, Comm::NLogN);
+                s3 >= s1 - 1e-12
+            },
+        );
+    }
+
+    #[test]
+    fn speedup_bounded_by_n() {
+        forall_cases(
+            "S_E <= n",
+            gens::pair(gens::f64_in(0.0, 0.5), gens::pow2(0, 17)),
+            64,
+            |&(p, n)| speedup(n as f64, p, 2, Comm::Linear) <= n as f64 + 1e-9,
+        );
+    }
+
+    #[test]
+    fn approximation_close_for_small_p() {
+        // The approximation replaces ln(1−p^k) with −p^k, so the log-space
+        // error is bounded by c(n)·p^{2k}: compare in log space.
+        let p = 0.001;
+        for n in [16.0, 1024.0, 65536.0] {
+            let exact = speedup(n, p, 1, Comm::Linear);
+            let approx = speedup_approx(n, p, 1, Comm::Linear);
+            let log_err = (exact.ln() - approx.ln()).abs();
+            let bound = 1.1 * n * p * p;
+            assert!(log_err <= bound.max(1e-6), "n={n}: log err {log_err} > {bound}");
+        }
+    }
+
+    #[test]
+    fn nlogn_bisection_matches_grid_argmax() {
+        for &(p, k) in &[(0.01f64, 1u32), (0.05, 1), (0.02, 2)] {
+            let n_star = optimal_n_nlogn_numeric(p, k).unwrap();
+            let (grid, _) = optimal_n_numeric_approx(p, k, Comm::NLogN, 1.0e7);
+            assert!(
+                (n_star - grid).abs() / grid < 0.02,
+                "p={p} k={k}: bisection {n_star} vs grid {grid}"
+            );
+        }
+    }
+
+    #[test]
+    fn nlogn_bisection_handles_extremes() {
+        assert!(optimal_n_nlogn_numeric(0.0, 1).is_none());
+        // Heavy loss: optimum collapses to one node.
+        assert_eq!(optimal_n_nlogn_numeric(0.49, 1), Some(1.0));
+    }
+
+    #[test]
+    fn log_comm_is_monotone_increasing() {
+        // Fig 7: c(n)=log₂n speedup is monotone (O(n^{1−2p^k})).
+        let p = 0.1;
+        let mut prev = 0.0;
+        for s in 1..=17 {
+            let n = (1u64 << s) as f64;
+            let cur = speedup(n, p, 2, Comm::Log);
+            assert!(cur > prev, "n={n}");
+            prev = cur;
+        }
+    }
+}

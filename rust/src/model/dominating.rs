@@ -1,0 +1,112 @@
+//! Table I — which denominator term of eq (6) dominates as n → ∞.
+//!
+//! The denominator is `1 + A(n) + B(n)` with the bandwidth term
+//! `A = 2kρ̂c(n)α/w` and the delay term `B = 2nβρ̂/w`:
+//!
+//! | Case | c(n)        | dominating term |
+//! |------|-------------|-----------------|
+//! | I    | n²          | A               |
+//! | II   | n log₂ n    | A               |
+//! | III  | n           | A + B (both grow linearly) |
+//! | IV   | log₂² n     | B               |
+//! | V    | log₂ n      | B               |
+//! | VI   | 1           | B               |
+
+use super::comm::Comm;
+use super::lbsp::LbspParams;
+
+/// Which term of the eq (6) denominator dominates asymptotically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dominating {
+    /// Bandwidth term `2kρ̂c(n)α/w`.
+    Alpha,
+    /// Delay term `2nβρ̂/w`.
+    Beta,
+    /// Both grow at the same rate (c(n) = n).
+    Both,
+}
+
+impl Dominating {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dominating::Alpha => "2k rho c(n) a / w",
+            Dominating::Beta => "2 n b rho / w",
+            Dominating::Both => "both (same order)",
+        }
+    }
+}
+
+/// Table I classification (analytic: compare growth orders of c(n) vs n).
+pub fn classify(comm: Comm) -> Dominating {
+    match comm {
+        Comm::Quadratic | Comm::NLogN | Comm::MatmulDirect | Comm::AllToAll => {
+            Dominating::Alpha
+        }
+        Comm::Linear | Comm::Halo => Dominating::Both,
+        Comm::One | Comm::Log | Comm::LogSq | Comm::Custom(_) => Dominating::Beta,
+    }
+}
+
+/// Numeric verification: evaluate the ratio A/B at `n` and `n²`. Squaring
+/// `n` multiplies the ratio by exactly the factor separating the classes
+/// (`c(n)/n`): ×n for n², ×2 for n·log n (the extra log doubles), ×1 for
+/// n, → 0 for the sub-linear classes. Growth above 1.5 ⇒ α dominates,
+/// below 2/3 ⇒ β dominates, else both grow at the same rate.
+pub fn classify_numeric(comm: Comm, base: &LbspParams) -> Dominating {
+    let ratio_at = |n: f64| {
+        let m = LbspParams { n, comm, ..*base };
+        let (a, b) = m.denominator_terms();
+        a / b
+    };
+    let r1 = ratio_at(1.0e5);
+    let r2 = ratio_at(1.0e10);
+    let growth = r2 / r1;
+    if growth > 1.5 {
+        Dominating::Alpha
+    } else if growth < 2.0 / 3.0 {
+        Dominating::Beta
+    } else {
+        Dominating::Both
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_classification() {
+        assert_eq!(classify(Comm::Quadratic), Dominating::Alpha);
+        assert_eq!(classify(Comm::NLogN), Dominating::Alpha);
+        assert_eq!(classify(Comm::Linear), Dominating::Both);
+        assert_eq!(classify(Comm::LogSq), Dominating::Beta);
+        assert_eq!(classify(Comm::Log), Dominating::Beta);
+        assert_eq!(classify(Comm::One), Dominating::Beta);
+    }
+
+    #[test]
+    fn numeric_agrees_with_analytic_for_all_table1_rows() {
+        // Small p so rho stays finite at huge c(n).
+        let base = LbspParams { p: 1.0e-5, k: 1, w: 36000.0, ..Default::default() };
+        for comm in Comm::figure_classes() {
+            assert_eq!(
+                classify_numeric(comm, &base),
+                classify(comm),
+                "{}",
+                comm.label()
+            );
+        }
+    }
+
+    #[test]
+    fn linear_ratio_is_constant() {
+        // For c(n)=n, A/B = k α / β independent of n.
+        let base = LbspParams { p: 1.0e-5, k: 3, ..Default::default() };
+        let m1 = LbspParams { n: 1.0e4, comm: Comm::Linear, ..base };
+        let m2 = LbspParams { n: 1.0e6, comm: Comm::Linear, ..base };
+        let (a1, b1) = m1.denominator_terms();
+        let (a2, b2) = m2.denominator_terms();
+        assert!(((a1 / b1) - (a2 / b2)).abs() < 1e-6);
+        assert!((a1 / b1 - 3.0 * 0.0037 / 0.069).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,276 @@
+//! §III–§IV — the Lossy BSP model proper.
+//!
+//! Timeout `2τ_k` with `τ_k = k·(c(n)/n)·α + β`; granularity
+//! `G = w / (2 n τ_k)`; selective retransmission with expectation ρ̂ from
+//! eq (3). Expected speedup, eq (4) ≡ eq (6):
+//!
+//! ```text
+//! S_E = G·n / (G + ρ̂)  =  n / (1 + 2kρ̂c(n)α/w + 2nβρ̂/w)
+//! ```
+//!
+//! §IV adds the packet-copies dimension: the optimal `k` is found either
+//! by the paper's `min k·ρ̂^k` criterion (which isolates the α term) or by
+//! direct argmax of the full speedup expression.
+
+use super::comm::Comm;
+use super::rho::{rho_selective, round_failure_q};
+
+/// One operating point of the L-BSP model.
+#[derive(Clone, Copy, Debug)]
+pub struct LbspParams {
+    /// Total sequential work `w` in seconds (figures quote hours).
+    pub w: f64,
+    /// Number of grid nodes `n`.
+    pub n: f64,
+    /// Per-packet loss probability `p`.
+    pub p: f64,
+    /// Packet copies `k ≥ 1`.
+    pub k: u32,
+    /// Serialization cost of one packet: `packet size / bandwidth` (s).
+    pub alpha: f64,
+    /// Round-trip delay β (s).
+    pub beta: f64,
+    /// Communication complexity class.
+    pub comm: Comm,
+}
+
+impl Default for LbspParams {
+    /// The paper's canonical operating point (Figs 8–12): α and β from the
+    /// PlanetLab measurements via Table II's matmul column.
+    fn default() -> Self {
+        LbspParams {
+            w: 4.0 * 3600.0,
+            n: 1024.0,
+            p: 0.045,
+            k: 1,
+            alpha: 0.0037,
+            beta: 0.069,
+            comm: Comm::Linear,
+        }
+    }
+}
+
+impl LbspParams {
+    /// Packets per communication phase, `c(n)`.
+    pub fn c(&self) -> f64 {
+        self.comm.eval(self.n)
+    }
+
+    /// `τ_k = k·(c(n)/n)·α + β` — half the round timeout.
+    pub fn tau_k(&self) -> f64 {
+        self.k as f64 * self.c() / self.n * self.alpha + self.beta
+    }
+
+    /// Granularity `G = w / (2 n τ_k)` (computation : communication).
+    pub fn granularity(&self) -> f64 {
+        self.w / (2.0 * self.n * self.tau_k())
+    }
+
+    /// Per-round failure probability `q = p^k (2 − p^k)`.
+    pub fn q(&self) -> f64 {
+        round_failure_q(self.p, self.k)
+    }
+
+    /// Selective-retransmission expectation ρ̂(p_s^k, c(n)) — eq (3).
+    pub fn rho(&self) -> f64 {
+        rho_selective(self.q(), self.c())
+    }
+
+    /// Expected speedup, eq (4)/(6), with ρ̂ from the native series.
+    pub fn speedup(&self) -> f64 {
+        self.speedup_with_rho(self.rho())
+    }
+
+    /// Expected speedup for an externally supplied ρ̂ (PJRT artifact or
+    /// Monte-Carlo estimate).
+    pub fn speedup_with_rho(&self, rho: f64) -> f64 {
+        if !rho.is_finite() {
+            return 0.0; // system fails to operate
+        }
+        let denom = 1.0
+            + 2.0 * self.k as f64 * rho * self.c() * self.alpha / self.w
+            + 2.0 * self.n * self.beta * rho / self.w;
+        self.n / denom
+    }
+
+    /// The two denominator terms `(A, B)` of eq (6):
+    /// `A = 2kρ̂c(n)α/w` (bandwidth term), `B = 2nβρ̂/w` (delay term).
+    /// Used by the Table I dominating-term analysis.
+    pub fn denominator_terms(&self) -> (f64, f64) {
+        let rho = self.rho();
+        (
+            2.0 * self.k as f64 * rho * self.c() * self.alpha / self.w,
+            2.0 * self.n * self.beta * rho / self.w,
+        )
+    }
+
+    /// §IV limit: as α → 0 and k → ∞, `S_E → n / (2nβ/w + 1)`.
+    pub fn limit_speedup_alpha_zero(&self) -> f64 {
+        self.n / (2.0 * self.n * self.beta / self.w + 1.0)
+    }
+
+    /// Efficiency `S_E / n`.
+    pub fn efficiency(&self) -> f64 {
+        self.speedup() / self.n
+    }
+}
+
+/// §IV: the paper's optimal-copies criterion — minimize `k·ρ̂^k` over
+/// `k ∈ {1..k_max}`. Returns `(k*, k*·ρ̂^{k*})`.
+pub fn optimal_k_min_krho(p: f64, c: f64, k_max: u32) -> (u32, f64) {
+    let mut best = (1u32, f64::INFINITY);
+    for k in 1..=k_max {
+        let v = k as f64 * rho_selective(round_failure_q(p, k), c);
+        if v < best.1 {
+            best = (k, v);
+        }
+    }
+    best
+}
+
+/// Direct argmax of the full eq (6) speedup over `k`. Returns `(k*, S_E)`.
+pub fn optimal_k_speedup(base: &LbspParams, k_max: u32) -> (u32, f64) {
+    let mut best = (1u32, f64::NEG_INFINITY);
+    for k in 1..=k_max {
+        let s = LbspParams { k, ..*base }.speedup();
+        if s > best.1 {
+            best = (k, s);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::{forall_cases, gens};
+
+    #[test]
+    fn zero_loss_speedup_matches_closed_form() {
+        let m = LbspParams { p: 0.0, n: 16.0, w: 3600.0, k: 1, ..Default::default() };
+        // rho = 1: S = n / (1 + 2 c α/w + 2 n β/w), c = n.
+        let want = 16.0
+            / (1.0 + 2.0 * 16.0 * 0.0037 / 3600.0 + 2.0 * 16.0 * 0.069 / 3600.0);
+        assert!((m.speedup() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq4_equals_eq6() {
+        // G n/(G + rho) must equal the expanded form for all points.
+        forall_cases(
+            "eq4 == eq6",
+            gens::pair(gens::f64_in(0.0005, 0.3), gens::pow2(1, 17)),
+            64,
+            |&(p, n)| {
+                let m = LbspParams { p, n: n as f64, k: 2, comm: Comm::NLogN, ..Default::default() };
+                let g = m.granularity();
+                let rho = m.rho();
+                let eq4 = g * m.n / (g + rho);
+                let eq6 = m.speedup();
+                (eq4 - eq6).abs() / eq6.max(1e-30) < 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn high_granularity_approaches_linear() {
+        // Paper: "speedup approaches linearity when G >> rho" (even n=2
+        // with c(n)=n² and heavy loss — §III closing remark).
+        let m = LbspParams {
+            w: 1000.0 * 3600.0,
+            n: 2.0,
+            p: 0.15,
+            k: 1,
+            comm: Comm::Quadratic,
+            ..Default::default()
+        };
+        assert!(m.granularity() > 1.0e5);
+        assert!((m.speedup() - 2.0).abs() < 0.01, "S = {}", m.speedup());
+    }
+
+    #[test]
+    fn speedup_bounded_by_n_and_positive() {
+        forall_cases(
+            "0 < S <= n",
+            gens::pair(gens::f64_in(0.0, 0.4), gens::pow2(0, 17)),
+            128,
+            |&(p, n)| {
+                let m = LbspParams { p, n: n as f64, comm: Comm::Quadratic, ..Default::default() };
+                let s = m.speedup();
+                s >= 0.0 && s <= n as f64 + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn higher_loss_never_helps() {
+        forall_cases(
+            "S decreasing in p",
+            gens::pair(gens::f64_in(0.001, 0.2), gens::pow2(1, 14)),
+            64,
+            |&(p, n)| {
+                let lo = LbspParams { p, n: n as f64, comm: Comm::NLogN, ..Default::default() };
+                let hi = LbspParams { p: p * 1.5, ..lo };
+                hi.speedup() <= lo.speedup() + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn alpha_zero_limit() {
+        // With alpha=0 and large k, speedup approaches n/(2nβ/w + 1).
+        let m = LbspParams {
+            alpha: 0.0,
+            k: 12,
+            n: 256.0,
+            p: 0.1,
+            w: 3600.0,
+            comm: Comm::Quadratic,
+            ..Default::default()
+        };
+        let s = m.speedup();
+        let lim = m.limit_speedup_alpha_zero();
+        assert!((s - lim).abs() / lim < 1e-3, "{s} vs {lim}");
+    }
+
+    #[test]
+    fn optimal_k_interior_for_lossy_bandwidth_bound_case() {
+        // Fig 10: with c(n)=n² and real α, large k hurts (α term grows
+        // k-linearly) while k=1 suffers retransmissions — optimum interior.
+        let base = LbspParams {
+            w: 10.0 * 3600.0,
+            n: 4096.0,
+            p: 0.1,
+            comm: Comm::Quadratic,
+            ..Default::default()
+        };
+        let (k_star, s_star) = optimal_k_speedup(&base, 12);
+        let s1 = LbspParams { k: 1, ..base }.speedup();
+        let s12 = LbspParams { k: 12, ..base }.speedup();
+        assert!(k_star > 1, "k* = {k_star}");
+        assert!(k_star < 12);
+        assert!(s_star >= s1 && s_star >= s12);
+    }
+
+    #[test]
+    fn min_krho_criterion_prefers_more_copies_when_lossy() {
+        let (k_lossy, _) = optimal_k_min_krho(0.15, 1.0e6, 12);
+        let (k_clean, _) = optimal_k_min_krho(0.0005, 1.0e6, 12);
+        assert!(k_lossy >= k_clean, "{k_lossy} vs {k_clean}");
+        assert!(k_lossy >= 2);
+    }
+
+    #[test]
+    fn granularity_definition() {
+        let m = LbspParams { w: 7200.0, n: 100.0, k: 2, ..Default::default() };
+        let tau = 2.0 * 100.0 / 100.0 * 0.0037 + 0.069;
+        assert!((m.tau_k() - tau).abs() < 1e-12);
+        assert!((m.granularity() - 7200.0 / (2.0 * 100.0 * tau)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn divergent_rho_gives_zero_speedup() {
+        let m = LbspParams { p: 1.0, ..Default::default() };
+        assert_eq!(m.speedup(), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! The analytic L-BSP model library.
+//!
+//! Everything the paper derives in closed form or numerically lives here:
+//!
+//! * [`comm`] — the communication-complexity classes `c(n)` the paper
+//!   sweeps (1, log n, log² n, n, n log n, n², and the §V per-algorithm
+//!   counts).
+//! * [`rho`] — the expected-retransmission machinery: per-round success
+//!   `p_s^k`, eq (1) for whole-round retransmission, the eq (3) series for
+//!   selective retransmission.
+//! * [`conceptual`] — §II: zero-communication-cost speedup `S_E = n·p_s`,
+//!   the exponential approximation, closed-form optimal `n`.
+//! * [`lbsp`] — §III/§IV: `τ_k`, granularity `G`, speedup eq (4)/(6),
+//!   optimal packet copies `k`.
+//! * [`dominating`] — Table I: which denominator term dominates as n→∞.
+//! * [`algorithms`] — §V: matmul, bitonic mergesort, 2D FFT-TM, Laplace
+//!   (Jacobi), broadcast, all-gather — the Table II reproduction.
+
+pub mod algorithms;
+pub mod comm;
+pub mod conceptual;
+pub mod dominating;
+pub mod lbsp;
+pub mod rho;
+pub mod tcp;
+
+pub use comm::Comm;
+pub use lbsp::LbspParams;
+pub use rho::{rho_selective, rho_whole_round, round_failure_q, round_success};

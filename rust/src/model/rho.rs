@@ -1,0 +1,179 @@
+//! Expected number of transmissions ρ̂ — the model's stochastic heart.
+//!
+//! * Whole-round retransmission (§II): all `c` packets are resent until a
+//!   round where every one succeeds — eq (1): `ρ̂ = 1 / p_s(n,p)` with
+//!   `p_s(n,p) = (1-p^k)^{2c}`.
+//! * Selective retransmission (§III): only lost packets are resent —
+//!   eq (3), evaluated through the tail-sum identity
+//!   `ρ̂ = Σ_{i≥0} [1 − (1 − q^i)^c]`, `q = 1 − p_s`, which is the same
+//!   series the L1 Pallas kernel computes (see
+//!   `python/compile/kernels/rho_hat.py`); this is the float64 native
+//!   implementation used for tests, sweeps without PJRT, and oracle
+//!   cross-checks against the artifact.
+
+/// Per-round failure probability of one packet with `k` copies in each
+/// direction: `q = 1 − (1−p^k)² = p^k (2 − p^k)`, formed cancellation-free.
+pub fn round_failure_q(p: f64, k: u32) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&p), "loss {p}");
+    debug_assert!(k >= 1);
+    let pk = p.powi(k as i32);
+    pk * (2.0 - pk)
+}
+
+/// Per-round success probability `p_s^k = (1−p^k)²`.
+pub fn round_success(p: f64, k: u32) -> f64 {
+    1.0 - round_failure_q(p, k)
+}
+
+/// Maximum series terms before declaring divergence (q → 1).
+pub const RHO_MAX_TERMS: usize = 1 << 22;
+
+/// Relative tail threshold for truncation.
+const RHO_TOL: f64 = 1e-13;
+
+/// Eq (1): whole-round ρ̂ = (1 − q)^{−c}. Returns `f64::INFINITY` when the
+/// probability that a round succeeds underflows (system fails to operate).
+pub fn rho_whole_round(q: f64, c: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&q));
+    debug_assert!(c >= 0.0);
+    // p_s(n,p) = (1-q)^c; rho = 1/p_s. ln-space for huge c.
+    let log_ps = c * (-q).ln_1p();
+    if log_ps < -700.0 {
+        return f64::INFINITY;
+    }
+    (-log_ps).exp()
+}
+
+/// Eq (3): selective ρ̂ via the tail-sum series, float64.
+///
+/// `q` is the per-round failure probability of a single packet, `c` the
+/// (real-valued) packet count. Truncates when the term falls below
+/// `RHO_TOL`; saturates at [`RHO_MAX_TERMS`] for q → 1.
+pub fn rho_selective(q: f64, c: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&q), "q={q}");
+    debug_assert!(c >= 0.0, "c={c}");
+    if q == 0.0 {
+        return 1.0;
+    }
+    if q >= 1.0 {
+        return f64::INFINITY;
+    }
+    let mut acc = 1.0; // i = 0 term
+    let mut qi = q;
+    for _ in 1..RHO_MAX_TERMS {
+        // term_i = 1 − (1 − q^i)^c = −expm1(c · ln1p(−q^i)).
+        let term = -(c * (-qi).ln_1p()).exp_m1();
+        acc += term;
+        if term < RHO_TOL {
+            return acc;
+        }
+        qi *= q;
+    }
+    f64::INFINITY
+}
+
+/// Convenience: selective ρ̂ from the paper's (p, k, c) parameterization.
+pub fn rho_selective_pk(p: f64, k: u32, c: f64) -> f64 {
+    rho_selective(round_failure_q(p, k), c)
+}
+
+/// Convenience: whole-round ρ̂ from (p, k, c).
+pub fn rho_whole_round_pk(p: f64, k: u32, c: f64) -> f64 {
+    rho_whole_round(round_failure_q(p, k), c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_is_cancellation_free() {
+        // k=7, p=0.045: p^k = 4.37e-10; naive (1-(1-p^k)^2) loses all
+        // precision in f32 and several digits in f64.
+        let q = round_failure_q(0.045, 7);
+        let pk = 0.045f64.powi(7);
+        assert!((q - pk * (2.0 - pk)).abs() < 1e-25);
+        assert!(q > 0.0);
+    }
+
+    #[test]
+    fn success_plus_failure_is_one() {
+        for &(p, k) in &[(0.1f64, 1u32), (0.045, 2), (0.3, 5)] {
+            assert!((round_success(p, k) + round_failure_q(p, k) - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn selective_c1_is_geometric_mean() {
+        for q in [0.01, 0.1, 0.5, 0.9] {
+            let got = rho_selective(q, 1.0);
+            let want = 1.0 / (1.0 - q);
+            assert!((got - want).abs() / want < 1e-10, "q={q}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn whole_round_matches_eq1() {
+        // rho = (1-p)^{-2c} with q = 1-(1-p)^2.
+        let p: f64 = 0.05;
+        let c = 64.0;
+        let q = round_failure_q(p, 1);
+        let got = rho_whole_round(q, c);
+        let want = (1.0 - p).powf(-2.0 * c);
+        assert!((got - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn whole_round_diverges_gracefully() {
+        assert!(rho_whole_round(0.5, 1.0e6).is_infinite());
+    }
+
+    #[test]
+    fn selective_below_whole_round() {
+        for &(q, c) in &[(0.1, 16.0), (0.3, 64.0), (0.05, 1024.0)] {
+            assert!(rho_selective(q, c) <= rho_whole_round(q, c) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn selective_grows_logarithmically_in_c() {
+        // rho ~ ln(c)/(-ln q): doubling c adds ~ ln2/(-ln q).
+        let q: f64 = 0.25;
+        let r1 = rho_selective(q, 1.0e4);
+        let r2 = rho_selective(q, 2.0e4);
+        let growth = r2 - r1;
+        let expect = std::f64::consts::LN_2 / -(q.ln());
+        assert!((growth - expect).abs() < 0.05, "growth {growth} vs {expect}");
+    }
+
+    #[test]
+    fn selective_monotone_in_q_and_c() {
+        assert!(rho_selective(0.1, 100.0) < rho_selective(0.2, 100.0));
+        assert!(rho_selective(0.1, 100.0) < rho_selective(0.1, 200.0));
+    }
+
+    #[test]
+    fn zero_loss_is_single_transmission() {
+        assert_eq!(rho_selective(0.0, 1.0e9), 1.0);
+        assert_eq!(rho_whole_round(0.0, 1.0e9), 1.0);
+    }
+
+    #[test]
+    fn table2_rho_values_reproduce() {
+        // Paper Table II "Average No. of transmission ρ̂^k" rows.
+        // Matmul: p=0.045, k=7, c = 2(P^1.5 − P), P = 2^16 → 1.025.
+        let c = 2.0 * ((65536.0f64).powf(1.5) - 65536.0);
+        let got = rho_selective_pk(0.045, 7, c);
+        assert!((got - 1.025).abs() < 0.01, "matmul rho {got}");
+        // Bitonic: p=0.045, k=6, c = P = 2^17 → 1.002.
+        let got = rho_selective_pk(0.045, 6, 131072.0);
+        assert!((got - 1.002).abs() < 0.005, "bitonic rho {got}");
+        // FFT: p=0.0005, k=3, c = P(P−1), P = 2^15 → 1.24.
+        let p15 = 32768.0f64;
+        let got = rho_selective_pk(0.0005, 3, p15 * (p15 - 1.0));
+        assert!((got - 1.24).abs() < 0.05, "fft rho {got}");
+        // Laplace: p=0.0005, k=5, c = 2(P−1), P = 2^17 → 1.0.
+        let got = rho_selective_pk(0.0005, 5, 2.0 * (131072.0 - 1.0));
+        assert!((got - 1.0).abs() < 1e-6, "laplace rho {got}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Padhye et al. steady-state TCP throughput model (paper ref [37]).
+//!
+//! The paper's future work points at "detailed packet loss model for
+//! TCP"; we include it as the analytic counterpart to the flow-level
+//! simulation in [`crate::net::tcp`], closing the UDP-vs-TCP comparison
+//! the introduction motivates:
+//!
+//! ```text
+//! B(p) ≈ min( Wmax/RTT,
+//!             1 / ( RTT·√(2bp/3) + t_RTO·min(1, 3√(3bp/8))·p·(1+32p²) ) )
+//! ```
+//!
+//! in segments/second, with `b` acked-per-ack (delayed acks: 2).
+
+/// Parameters for the Padhye throughput formula.
+#[derive(Clone, Copy, Debug)]
+pub struct PadhyeParams {
+    pub rtt_s: f64,
+    pub rto_s: f64,
+    /// Max window in segments.
+    pub wmax: f64,
+    /// Segments acknowledged per ACK (delayed acks → 2).
+    pub b: f64,
+}
+
+impl Default for PadhyeParams {
+    fn default() -> Self {
+        PadhyeParams { rtt_s: 0.069, rto_s: 1.0, wmax: 64.0, b: 2.0 }
+    }
+}
+
+/// Steady-state TCP throughput in segments/second for loss rate `p`.
+pub fn padhye_throughput(p: f64, params: &PadhyeParams) -> f64 {
+    assert!(p >= 0.0 && p < 1.0);
+    if p == 0.0 {
+        return params.wmax / params.rtt_s;
+    }
+    let wlimit = params.wmax / params.rtt_s;
+    let fr_term = params.rtt_s * (2.0 * params.b * p / 3.0).sqrt();
+    let to_term = params.rto_s
+        * (1.0f64).min(3.0 * (3.0 * params.b * p / 8.0).sqrt())
+        * p
+        * (1.0 + 32.0 * p * p);
+    (1.0 / (fr_term + to_term)).min(wlimit)
+}
+
+/// Time to move a phase of `c` segments through one TCP flow, at the
+/// steady-state rate (optimistic for short flows — no slow-start charge).
+pub fn tcp_phase_time(c: f64, p: f64, params: &PadhyeParams) -> f64 {
+    c / padhye_throughput(p, params) + params.rtt_s
+}
+
+/// Phase time for the paper's UDP/k-copies protocol at the same operating
+/// point: `ρ̂(p_s^k, c)·2τ_k` (the L-BSP communication charge).
+pub fn udp_phase_time(c: f64, p: f64, k: u32, alpha: f64, beta: f64, n: f64) -> f64 {
+    let rho = crate::model::rho::rho_selective_pk(p, k, c);
+    let tau_k = k as f64 * c / n * alpha + beta;
+    rho * 2.0 * tau_k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_is_window_limited() {
+        let p = PadhyeParams::default();
+        assert!((padhye_throughput(0.0, &p) - 64.0 / 0.069).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_decreasing_in_p() {
+        let params = PadhyeParams::default();
+        let mut prev = f64::INFINITY;
+        for p in [0.0001, 0.001, 0.01, 0.05, 0.1, 0.2] {
+            let b = padhye_throughput(p, &params);
+            assert!(b < prev, "p={p}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn sqrt_law_in_fast_retransmit_regime() {
+        // For small p (timeout term negligible, below window limit):
+        // B(p)/B(4p) ≈ 2.
+        let params = PadhyeParams { wmax: 1.0e9, ..Default::default() };
+        let r = padhye_throughput(0.0004, &params) / padhye_throughput(0.0016, &params);
+        assert!((r - 2.0).abs() < 0.1, "ratio {r}");
+    }
+
+    #[test]
+    fn udp_with_copies_beats_tcp_at_planetlab_loss() {
+        // The paper's core claim at its measured operating point:
+        // p = 0.1, c = 1024-packet phase, n = 64 senders.
+        let c = 1024.0;
+        let (alpha, beta, n) = (0.0037, 0.069, 64.0);
+        let tcp = tcp_phase_time(c, 0.1, &PadhyeParams::default());
+        let udp = udp_phase_time(c, 0.1, 2, alpha, beta, n);
+        assert!(
+            udp < tcp / 5.0,
+            "udp {udp} should be well under tcp {tcp} at 10% loss"
+        );
+    }
+
+    #[test]
+    fn tcp_competitive_when_lossless() {
+        // At p → 0 TCP is window-limited but respectable; the UDP
+        // advantage must come from loss, not from an unfair model.
+        let c = 1024.0;
+        let tcp = tcp_phase_time(c, 0.0, &PadhyeParams::default());
+        let udp = udp_phase_time(c, 0.0, 1, 0.0037, 0.069, 64.0);
+        assert!(tcp < 10.0 * udp, "tcp {tcp} vs udp {udp}");
+    }
+
+    #[test]
+    fn simulated_tcp_matches_padhye_within_factor_two() {
+        // Flow-level sim vs closed form, moderate loss, long flow.
+        use crate::net::tcp::{mean_tcp_transfer_time, TcpParams};
+        let p = 0.02;
+        let c = 50_000u64;
+        let sim_params = TcpParams { max_window: 10_000, ..Default::default() };
+        let t = mean_tcp_transfer_time(c, p, &sim_params, 3, 11);
+        let sim_thr = c as f64 / t;
+        let an_thr = padhye_throughput(
+            p,
+            &PadhyeParams { wmax: 1.0e9, ..Default::default() },
+        );
+        let ratio = sim_thr / an_thr;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "sim {sim_thr} vs padhye {an_thr} (ratio {ratio})"
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Point-to-point link parameters.
+//!
+//! The paper's timing model: `τ = (c(n)/n)·α + β` where `α = packet size /
+//! bandwidth` is the serialization cost of one packet and `β` is the
+//! round-trip time. A [`Link`] carries the raw `(bandwidth, rtt)` pair and
+//! derives α for a given packet size.
+
+/// Directed link characteristics (loss lives in `topology`, per-pair).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// Bytes per second.
+    pub bandwidth_bps: f64,
+    /// Round-trip time in seconds (the paper's β).
+    pub rtt_s: f64,
+}
+
+impl Link {
+    pub fn new(bandwidth_bps: f64, rtt_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0 && rtt_s >= 0.0);
+        Link { bandwidth_bps, rtt_s }
+    }
+
+    /// From the paper's units: MBytes/s bandwidth.
+    pub fn from_mbytes(bandwidth_mbytes: f64, rtt_s: f64) -> Self {
+        Link::new(bandwidth_mbytes * 1.0e6, rtt_s)
+    }
+
+    /// α for a packet of `bytes`: serialization time in seconds.
+    pub fn alpha(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth_bps
+    }
+
+    /// One-way propagation delay (the model folds processing into β/2).
+    pub fn one_way_delay(&self) -> f64 {
+        self.rtt_s / 2.0
+    }
+
+    /// Latency for one packet to arrive: serialization + one-way delay.
+    pub fn packet_latency(&self, bytes: u64) -> f64 {
+        self.alpha(bytes) + self.one_way_delay()
+    }
+}
+
+impl Default for Link {
+    /// Paper Table II "matrix multiplication" column: 17.5 MB/s, β=0.069 s.
+    fn default() -> Self {
+        Link::from_mbytes(17.5, 0.069)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_matches_paper_table2() {
+        // Table II: packet 2^16 B at 17.5 MB/s → α = 0.0037 s.
+        let l = Link::from_mbytes(17.5, 0.069);
+        assert!((l.alpha(1 << 16) - 0.0037).abs() < 1e-4);
+        // FFT column: 2^8 B at 17.07 MB/s → α = 1.5e-5 s.
+        let l = Link::from_mbytes(17.07, 0.05);
+        assert!((l.alpha(1 << 8) - 1.5e-5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_composition() {
+        let l = Link::from_mbytes(10.0, 0.1);
+        let lat = l.packet_latency(1_000_000);
+        assert!((lat - (0.1 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_panics() {
+        Link::new(0.0, 0.1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Packet-loss models.
+//!
+//! The paper's model is iid Bernoulli loss with identical probability for
+//! data and ack packets. [`GilbertElliott`] adds the classic two-state
+//! bursty channel as an ablation: same average loss, correlated in time.
+
+use crate::util::prng::Rng;
+
+/// A loss process: each call decides the fate of one packet transmission.
+pub trait LossModel {
+    /// Returns `true` if the packet is LOST.
+    fn lose(&mut self, rng: &mut Rng) -> bool;
+
+    /// Long-run average loss probability (for reporting / validation).
+    fn mean_loss(&self) -> f64;
+}
+
+/// iid Bernoulli loss with probability `p` — the paper's model.
+#[derive(Clone, Copy, Debug)]
+pub struct Bernoulli {
+    pub p: f64,
+}
+
+impl Bernoulli {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "loss probability {p}");
+        Bernoulli { p }
+    }
+}
+
+impl LossModel for Bernoulli {
+    fn lose(&mut self, rng: &mut Rng) -> bool {
+        rng.bernoulli(self.p)
+    }
+
+    fn mean_loss(&self) -> f64 {
+        self.p
+    }
+}
+
+/// A lossless link (protocol sanity baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Perfect;
+
+impl LossModel for Perfect {
+    fn lose(&mut self, _rng: &mut Rng) -> bool {
+        false
+    }
+
+    fn mean_loss(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Gilbert–Elliott two-state Markov loss channel.
+///
+/// In the Good state packets are lost with `loss_good`, in Bad with
+/// `loss_bad`; the chain moves G→B with `p_gb` and B→G with `p_bg` per
+/// packet. Stationary Bad probability is `p_gb / (p_gb + p_bg)`.
+#[derive(Clone, Copy, Debug)]
+pub struct GilbertElliott {
+    pub p_gb: f64,
+    pub p_bg: f64,
+    pub loss_good: f64,
+    pub loss_bad: f64,
+    in_bad: bool,
+}
+
+impl GilbertElliott {
+    pub fn new(p_gb: f64, p_bg: f64, loss_good: f64, loss_bad: f64) -> Self {
+        for v in [p_gb, p_bg, loss_good, loss_bad] {
+            assert!((0.0..=1.0).contains(&v), "probability {v}");
+        }
+        GilbertElliott { p_gb, p_bg, loss_good, loss_bad, in_bad: false }
+    }
+
+    /// Construct a bursty channel with a target mean loss and burst factor:
+    /// Bad-state dwell ~ `burst_len` packets, calibrated so the stationary
+    /// loss equals `mean_loss`. `loss_bad` is fixed at 1.0 (outage bursts).
+    pub fn with_mean_loss(mean_loss: f64, burst_len: f64) -> Self {
+        assert!(burst_len >= 1.0);
+        assert!((0.0..1.0).contains(&mean_loss));
+        // Stationary: pi_bad = p_gb/(p_gb+p_bg); loss = pi_bad * 1.0.
+        let p_bg = 1.0 / burst_len;
+        // mean = p_gb / (p_gb + p_bg)  =>  p_gb = mean * p_bg / (1 - mean).
+        let p_gb = mean_loss * p_bg / (1.0 - mean_loss);
+        GilbertElliott::new(p_gb.min(1.0), p_bg, 0.0, 1.0)
+    }
+
+    pub fn stationary_bad(&self) -> f64 {
+        self.p_gb / (self.p_gb + self.p_bg)
+    }
+}
+
+impl LossModel for GilbertElliott {
+    fn lose(&mut self, rng: &mut Rng) -> bool {
+        // Transition first, then emit from the current state.
+        if self.in_bad {
+            if rng.bernoulli(self.p_bg) {
+                self.in_bad = false;
+            }
+        } else if rng.bernoulli(self.p_gb) {
+            self.in_bad = true;
+        }
+        let p = if self.in_bad { self.loss_bad } else { self.loss_good };
+        rng.bernoulli(p)
+    }
+
+    fn mean_loss(&self) -> f64 {
+        let pi_bad = self.stationary_bad();
+        pi_bad * self.loss_bad + (1.0 - pi_bad) * self.loss_good
+    }
+}
+
+/// Boxed loss model for heterogeneous per-link configuration.
+pub type BoxedLoss = Box<dyn LossModel + Send>;
+
+/// Construct a boxed loss model by name (used by config/CLI plumbing).
+pub fn by_name(name: &str, p: f64, burst_len: f64) -> BoxedLoss {
+    match name {
+        "bernoulli" => Box::new(Bernoulli::new(p)),
+        "gilbert" | "gilbert-elliott" => {
+            Box::new(GilbertElliott::with_mean_loss(p, burst_len))
+        }
+        "perfect" | "none" => Box::new(Perfect),
+        other => panic!("unknown loss model {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bernoulli_long_run_rate() {
+        let mut m = Bernoulli::new(0.15);
+        let mut rng = Rng::new(100);
+        let n = 200_000;
+        let lost = (0..n).filter(|_| m.lose(&mut rng)).count();
+        let rate = lost as f64 / n as f64;
+        assert!((rate - 0.15).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn perfect_never_loses() {
+        let mut m = Perfect;
+        let mut rng = Rng::new(1);
+        assert!((0..1000).all(|_| !m.lose(&mut rng)));
+    }
+
+    #[test]
+    fn gilbert_elliott_mean_loss_calibration() {
+        let ge = GilbertElliott::with_mean_loss(0.1, 8.0);
+        assert!((ge.mean_loss() - 0.1).abs() < 1e-12);
+        let mut m = ge;
+        let mut rng = Rng::new(2);
+        let n = 400_000;
+        let lost = (0..n).filter(|_| m.lose(&mut rng)).count();
+        let rate = lost as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn gilbert_elliott_is_bursty() {
+        // Consecutive-loss run lengths should exceed the iid expectation.
+        let mut ge = GilbertElliott::with_mean_loss(0.1, 16.0);
+        let mut be = Bernoulli::new(0.1);
+        let mut rng_a = Rng::new(3);
+        let mut rng_b = Rng::new(3);
+        let run_len = |losses: &[bool]| {
+            let mut runs = Vec::new();
+            let mut cur = 0u64;
+            for &l in losses {
+                if l {
+                    cur += 1;
+                } else if cur > 0 {
+                    runs.push(cur);
+                    cur = 0;
+                }
+            }
+            if cur > 0 {
+                runs.push(cur);
+            }
+            runs.iter().sum::<u64>() as f64 / runs.len().max(1) as f64
+        };
+        let n = 200_000;
+        let ge_losses: Vec<bool> = (0..n).map(|_| ge.lose(&mut rng_a)).collect();
+        let be_losses: Vec<bool> = (0..n).map(|_| be.lose(&mut rng_b)).collect();
+        assert!(
+            run_len(&ge_losses) > 2.0 * run_len(&be_losses),
+            "GE runs {} vs Bernoulli runs {}",
+            run_len(&ge_losses),
+            run_len(&be_losses)
+        );
+    }
+
+    #[test]
+    fn by_name_constructs() {
+        assert_eq!(by_name("bernoulli", 0.2, 1.0).mean_loss(), 0.2);
+        assert_eq!(by_name("perfect", 0.2, 1.0).mean_loss(), 0.0);
+        assert!((by_name("gilbert", 0.2, 4.0).mean_loss() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_probability_panics() {
+        Bernoulli::new(1.5);
+    }
+}

@@ -1,0 +1,29 @@
+//! The lossy datagram network substrate.
+//!
+//! Two simulators share the same loss/link abstractions:
+//!
+//! * [`rounds`] — a *slotted* simulator that matches the paper's stochastic
+//!   abstraction exactly (each timeout window `2τ` is one Bernoulli round).
+//!   Used to validate the analytic ρ̂ series (eq 1 and eq 3) by Monte Carlo.
+//! * [`transport`]/[`protocol`] — a packet-level discrete-event simulator
+//!   with bandwidth serialization, propagation delay, per-packet loss, the
+//!   ack path, k-copy duplication and per-packet timeout machinery. Drives
+//!   the BSP runtime and the end-to-end workloads.
+//!
+//! Loss models live in [`loss`]: the paper's iid Bernoulli process plus a
+//! Gilbert–Elliott bursty channel as an ablation (the paper assumes
+//! independence; the ablation quantifies what burstiness does to ρ̂).
+
+pub mod link;
+pub mod loss;
+pub mod packet;
+pub mod protocol;
+pub mod rounds;
+pub mod tcp;
+pub mod topology;
+pub mod transport;
+
+pub use link::Link;
+pub use loss::{Bernoulli, GilbertElliott, LossModel, Perfect};
+pub use packet::{NodeId, Packet, PacketKind};
+pub use topology::Topology;

@@ -1,0 +1,59 @@
+//! Packet and addressing types.
+
+/// Index of a grid node (virtual process).
+pub type NodeId = usize;
+
+/// What a datagram carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PacketKind {
+    /// Application payload packet (identified by `seq` within a phase).
+    Data,
+    /// Acknowledgment for the data packet with the same `seq`.
+    Ack,
+}
+
+/// A UDP-like datagram in flight.
+///
+/// Payload bytes are not carried here — the BSP layer moves real data
+/// through its own buffers keyed by `(phase, seq)`; the network simulates
+/// timing and loss of the *transmission*, which is all the model needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Packet {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub kind: PacketKind,
+    /// Sequence number of the data packet within its communication phase.
+    pub seq: u64,
+    /// Which duplicate this is (0..k). Duplicates share `seq`.
+    pub copy: u32,
+    /// Size on the wire in bytes (data: payload size; ack: small).
+    pub size_bytes: u64,
+}
+
+/// Size used for acknowledgment packets (header-only datagram).
+pub const ACK_BYTES: u64 = 64;
+
+impl Packet {
+    pub fn data(src: NodeId, dst: NodeId, seq: u64, copy: u32, size_bytes: u64) -> Packet {
+        Packet { src, dst, kind: PacketKind::Data, seq, copy, size_bytes }
+    }
+
+    pub fn ack(src: NodeId, dst: NodeId, seq: u64, copy: u32) -> Packet {
+        Packet { src, dst, kind: PacketKind::Ack, seq, copy, size_bytes: ACK_BYTES }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let d = Packet::data(1, 2, 7, 0, 65536);
+        assert_eq!(d.kind, PacketKind::Data);
+        assert_eq!((d.src, d.dst, d.seq, d.copy), (1, 2, 7, 0));
+        let a = Packet::ack(2, 1, 7, 3);
+        assert_eq!(a.kind, PacketKind::Ack);
+        assert_eq!(a.size_bytes, ACK_BYTES);
+    }
+}

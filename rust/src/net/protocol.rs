@@ -1,0 +1,346 @@
+//! The paper's reliable-phase protocol over UDP (Fig 6).
+//!
+//! One BSP communication phase injects a set of data packets; the protocol
+//! adds the paper's light-weight reliability: per-packet acknowledgments,
+//! `k`-copy duplication (both directions, matching `p_s^k = (1-p^k)^2`),
+//! a global round timeout of `2τ_k`, and one of two retransmission
+//! disciplines:
+//!
+//! * [`RetransmitPolicy::WholeRound`] — §II conceptual model: if any packet
+//!   of the round is unacknowledged, *all* packets are retransmitted (and
+//!   the compute `w` is charged again by the BSP layer).
+//! * [`RetransmitPolicy::Selective`] — §III L-BSP: only unacknowledged
+//!   packets are retransmitted (`c(n), p·c(n), p²·c(n), …`).
+//!
+//! Rounds are globally synchronized (BSP supersteps): round `r` starts at
+//! `t0 + r·timeout`. The empirical round count is the Monte-Carlo
+//! counterpart of the analytic ρ̂ (eq 1 for WholeRound, eq 3 for
+//! Selective) — `rust/tests/sim_vs_model.rs` pins them together.
+
+use super::packet::{NodeId, Packet, PacketKind};
+use super::transport::{NetEvent, Network};
+
+/// Retransmission discipline for lost packets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetransmitPolicy {
+    /// Retransmit every packet of the phase when any is missing (§II).
+    WholeRound,
+    /// Retransmit only the missing packets (§III).
+    Selective,
+}
+
+/// One logical transfer in the phase (one data packet on the wire).
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+}
+
+/// Phase configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseConfig {
+    /// Packet copies `k` (data and ack are both duplicated `k×`, giving
+    /// the paper's `p_s^k = (1 - p^k)^2` per round).
+    pub copies: u32,
+    /// Round timeout `2τ_k` in seconds.
+    pub timeout_s: f64,
+    pub policy: RetransmitPolicy,
+    /// Abort threshold: a phase that exceeds this many rounds reports
+    /// `completed = false` ("the system fails to operate", §II).
+    pub max_rounds: u32,
+}
+
+impl Default for PhaseConfig {
+    fn default() -> Self {
+        PhaseConfig {
+            copies: 1,
+            timeout_s: 0.2,
+            policy: RetransmitPolicy::Selective,
+            max_rounds: 10_000,
+        }
+    }
+}
+
+/// What a phase run reports back to the BSP layer.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseReport {
+    /// Rounds used (the Monte-Carlo ρ̂ sample).
+    pub rounds: u32,
+    /// Virtual time from phase start to the last acknowledgment arriving.
+    pub completion_s: f64,
+    /// Model-timing duration: `rounds × timeout` (what L-BSP charges).
+    pub model_duration_s: f64,
+    pub data_packets_sent: u64,
+    pub ack_packets_sent: u64,
+    pub completed: bool,
+}
+
+/// Monotonically increasing phase identifier; packets/timers carry it in
+/// their upper sequence bits so stale events from earlier phases on the
+/// same [`Network`] are ignored.
+static PHASE_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+fn tag(phase: u64, idx: u64) -> u64 {
+    (phase << 24) | idx
+}
+
+fn untag(seq: u64) -> (u64, u64) {
+    (seq >> 24, seq & 0xFF_FFFF)
+}
+
+/// Run one reliable communication phase to completion (or abort).
+pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -> PhaseReport {
+    assert!(cfg.copies >= 1, "k must be >= 1");
+    assert!(transfers.len() < (1 << 24), "phase too large for seq tagging");
+    let phase = PHASE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let t0 = net.now();
+    let data0 = net.stats.data_sent;
+    let acks0 = net.stats.acks_sent;
+
+    let mut unacked: Vec<bool> = vec![true; transfers.len()];
+    let mut n_unacked = transfers.len();
+    // Receiver-side: last round in which each seq was acknowledged
+    // (re-acks in later rounds cover lost acks without ack explosions).
+    // Dense per-seq vector — this is the protocol hot loop (§Perf).
+    let mut acked_in_round: Vec<u64> = vec![u64::MAX; transfers.len()];
+    let mut round: u64 = 0;
+    let mut last_ack_time = t0;
+
+    let send_round = |net: &mut Network, unacked: &[bool], round: u64| {
+        for (idx, tr) in transfers.iter().enumerate() {
+            let resend = match cfg.policy {
+                RetransmitPolicy::WholeRound => true,
+                RetransmitPolicy::Selective => unacked[idx],
+            };
+            if !resend {
+                continue;
+            }
+            for copy in 0..cfg.copies {
+                net.send(Packet::data(tr.src, tr.dst, tag(phase, idx as u64), copy, tr.bytes));
+            }
+        }
+        // One global round timer. node 0 is arbitrary; the token encodes
+        // (phase, round) for staleness filtering.
+        net.arm_timer(0, tag(phase, round), cfg.timeout_s);
+    };
+
+    send_round(net, &unacked, round);
+
+    while n_unacked > 0 {
+        let Some((now, ev)) = net.step() else {
+            // Queue exhausted without completion — can only happen with a
+            // total-loss link and no timer; treat as failure.
+            break;
+        };
+        match ev {
+            NetEvent::Deliver(pkt) => {
+                let (ph, idx) = untag(pkt.seq);
+                if ph != phase {
+                    continue; // stale packet from a previous phase
+                }
+                match pkt.kind {
+                    PacketKind::Data => {
+                        // Ack once per round per seq (dedups the k copies).
+                        let e = &mut acked_in_round[idx as usize];
+                        if *e != round {
+                            *e = round;
+                            let tr = &transfers[idx as usize];
+                            for copy in 0..cfg.copies {
+                                net.send(Packet::ack(tr.dst, tr.src, pkt.seq, copy));
+                            }
+                        }
+                    }
+                    PacketKind::Ack => {
+                        let i = idx as usize;
+                        if unacked[i] {
+                            unacked[i] = false;
+                            n_unacked -= 1;
+                            last_ack_time = now;
+                        }
+                    }
+                }
+            }
+            NetEvent::Timer { token, .. } => {
+                let (ph, r) = untag(token);
+                if ph != phase || r != round {
+                    continue; // stale timer
+                }
+                if n_unacked == 0 {
+                    break;
+                }
+                round += 1;
+                if round as u32 >= cfg.max_rounds {
+                    return PhaseReport {
+                        rounds: cfg.max_rounds,
+                        completion_s: (net.now().saturating_sub(t0)).as_secs_f64(),
+                        model_duration_s: cfg.max_rounds as f64 * cfg.timeout_s,
+                        data_packets_sent: net.stats.data_sent - data0,
+                        ack_packets_sent: net.stats.acks_sent - acks0,
+                        completed: false,
+                    };
+                }
+                send_round(net, &unacked, round);
+            }
+        }
+    }
+
+    let rounds = (round + 1) as u32;
+    PhaseReport {
+        rounds,
+        completion_s: (last_ack_time.saturating_sub(t0)).as_secs_f64(),
+        model_duration_s: rounds as f64 * cfg.timeout_s,
+        data_packets_sent: net.stats.data_sent - data0,
+        ack_packets_sent: net.stats.acks_sent - acks0,
+        completed: n_unacked == 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::Link;
+    use crate::net::topology::Topology;
+    use crate::util::stats::Online;
+
+    fn net_with_loss(n: usize, p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.01), p), seed)
+    }
+
+    fn all_pairs_phase(n: usize) -> Vec<Transfer> {
+        let mut v = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    v.push(Transfer { src: i, dst: j, bytes: 1024 });
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn lossless_phase_completes_in_one_round() {
+        let mut net = net_with_loss(4, 0.0, 1);
+        let r = run_phase(&mut net, &all_pairs_phase(4), &PhaseConfig::default());
+        assert!(r.completed);
+        assert_eq!(r.rounds, 1);
+        assert_eq!(r.data_packets_sent, 12);
+    }
+
+    #[test]
+    fn lossy_phase_eventually_completes() {
+        let mut net = net_with_loss(4, 0.3, 2);
+        let r = run_phase(&mut net, &all_pairs_phase(4), &PhaseConfig::default());
+        assert!(r.completed);
+        assert!(r.rounds >= 2, "p=0.3 over 12 packets almost surely retries");
+        assert!(r.data_packets_sent > 12);
+    }
+
+    #[test]
+    fn selective_sends_fewer_data_packets_than_whole_round() {
+        let mut sel_sent = 0u64;
+        let mut whole_sent = 0u64;
+        for seed in 0..20 {
+            let mut net = net_with_loss(4, 0.25, 100 + seed);
+            let r = run_phase(
+                &mut net,
+                &all_pairs_phase(4),
+                &PhaseConfig { policy: RetransmitPolicy::Selective, ..Default::default() },
+            );
+            sel_sent += r.data_packets_sent;
+            let mut net = net_with_loss(4, 0.25, 100 + seed);
+            let r = run_phase(
+                &mut net,
+                &all_pairs_phase(4),
+                &PhaseConfig { policy: RetransmitPolicy::WholeRound, ..Default::default() },
+            );
+            whole_sent += r.data_packets_sent;
+        }
+        assert!(
+            sel_sent < whole_sent,
+            "selective {sel_sent} vs whole-round {whole_sent}"
+        );
+    }
+
+    #[test]
+    fn copies_reduce_rounds_on_lossy_links() {
+        let mut rounds_k1 = Online::new();
+        let mut rounds_k3 = Online::new();
+        for seed in 0..40 {
+            let mut net = net_with_loss(2, 0.4, 500 + seed);
+            let r = run_phase(
+                &mut net,
+                &[Transfer { src: 0, dst: 1, bytes: 1024 }; 8],
+                &PhaseConfig { copies: 1, ..Default::default() },
+            );
+            rounds_k1.push(r.rounds as f64);
+            let mut net = net_with_loss(2, 0.4, 500 + seed);
+            let r = run_phase(
+                &mut net,
+                &[Transfer { src: 0, dst: 1, bytes: 1024 }; 8],
+                &PhaseConfig { copies: 3, ..Default::default() },
+            );
+            rounds_k3.push(r.rounds as f64);
+        }
+        assert!(
+            rounds_k3.mean() < rounds_k1.mean(),
+            "k=3 mean {} vs k=1 mean {}",
+            rounds_k3.mean(),
+            rounds_k1.mean()
+        );
+    }
+
+    #[test]
+    fn total_loss_aborts_at_max_rounds() {
+        let mut net = net_with_loss(2, 1.0, 3);
+        let r = run_phase(
+            &mut net,
+            &[Transfer { src: 0, dst: 1, bytes: 1024 }],
+            &PhaseConfig { max_rounds: 5, ..Default::default() },
+        );
+        assert!(!r.completed);
+        assert_eq!(r.rounds, 5);
+    }
+
+    #[test]
+    fn empirical_rounds_match_geometric_expectation_single_packet() {
+        // One packet, k=1: rounds ~ Geometric(p_s) with p_s = (1-p)^2.
+        let p: f64 = 0.3;
+        let ps = (1.0 - p) * (1.0 - p);
+        let mut mean_rounds = Online::new();
+        for seed in 0..400 {
+            let mut net = net_with_loss(2, p, 9000 + seed);
+            let r = run_phase(
+                &mut net,
+                &[Transfer { src: 0, dst: 1, bytes: 1024 }],
+                &PhaseConfig::default(),
+            );
+            assert!(r.completed);
+            mean_rounds.push(r.rounds as f64);
+        }
+        let expect = 1.0 / ps;
+        assert!(
+            (mean_rounds.mean() - expect).abs() < 3.0 * mean_rounds.sem().max(0.05),
+            "mean {} vs 1/p_s {}",
+            mean_rounds.mean(),
+            expect
+        );
+    }
+
+    #[test]
+    fn phases_are_isolated_on_shared_network() {
+        // Run two phases back-to-back; stale deliveries from phase 1 must
+        // not corrupt phase 2 bookkeeping.
+        let mut net = net_with_loss(3, 0.2, 42);
+        let r1 = run_phase(&mut net, &all_pairs_phase(3), &PhaseConfig::default());
+        let r2 = run_phase(&mut net, &all_pairs_phase(3), &PhaseConfig::default());
+        assert!(r1.completed && r2.completed);
+    }
+
+    #[test]
+    fn seq_tagging_roundtrips() {
+        let s = tag(77, 123);
+        assert_eq!(untag(s), (77, 123));
+    }
+}

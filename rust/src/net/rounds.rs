@@ -1,0 +1,216 @@
+//! Slotted round simulator: the paper's stochastic abstraction, exactly.
+//!
+//! Strips all timing out of the picture: each timeout window `2τ` is one
+//! round; in a round every outstanding packet independently succeeds with
+//! `p_s^k = (1 - p^k)^2` (data and ack both duplicated `k×`). This is the
+//! fastest possible Monte-Carlo estimator of ρ̂ and the ground truth the
+//! analytic series (eq 1, eq 3) is validated against — the DES in
+//! [`super::protocol`] then confirms the packet-level machinery reduces to
+//! the same process.
+
+use crate::util::prng::Rng;
+
+use super::protocol::RetransmitPolicy;
+
+/// Per-round success probability for one packet with `k` copies in both
+/// directions: `(1 - p^k)²`, computed cancellation-free as `1 - q` with
+/// `q = pk(2 - pk)`.
+pub fn per_round_success(p: f64, k: u32) -> f64 {
+    let pk = p.powi(k as i32);
+    1.0 - pk * (2.0 - pk)
+}
+
+/// Simulate one communication phase of `c` packets; returns the number of
+/// rounds until every packet has been delivered *and* acknowledged.
+///
+/// `max_rounds` bounds divergent cases (`p_s = 0`).
+pub fn simulate_phase_rounds(
+    ps: f64,
+    c: u64,
+    policy: RetransmitPolicy,
+    rng: &mut Rng,
+    max_rounds: u64,
+) -> u64 {
+    assert!((0.0..=1.0).contains(&ps));
+    match policy {
+        RetransmitPolicy::Selective => {
+            // Rounds = max over packets of iid geometrics. Sampling each
+            // geometric directly is O(c) regardless of loss rate.
+            if ps == 0.0 {
+                return max_rounds;
+            }
+            let mut worst = 0u64;
+            for _ in 0..c {
+                worst = worst.max(rng.geometric(ps));
+            }
+            worst.min(max_rounds)
+        }
+        RetransmitPolicy::WholeRound => {
+            // The round must succeed for ALL c packets simultaneously;
+            // rounds ~ Geometric((p_s)^c).
+            let p_all = ps.powf(c as f64);
+            if p_all <= f64::MIN_POSITIVE {
+                return max_rounds;
+            }
+            rng.geometric(p_all).min(max_rounds)
+        }
+    }
+}
+
+/// Monte-Carlo estimate of ρ̂: mean rounds over `trials` phases.
+pub fn estimate_rho(
+    p: f64,
+    k: u32,
+    c: u64,
+    policy: RetransmitPolicy,
+    trials: u64,
+    seed: u64,
+) -> f64 {
+    let ps = per_round_success(p, k);
+    let mut rng = Rng::new(seed);
+    let mut total = 0u64;
+    for _ in 0..trials {
+        total += simulate_phase_rounds(ps, c, policy, &mut rng, 1_000_000);
+    }
+    total as f64 / trials as f64
+}
+
+/// Slotted L-BSP program run: `r` supersteps of (compute `w/n`, lossy
+/// communication phase), returning total virtual time. Mirrors §III's
+/// `T̂(n,p,τ) = T(1)/n + 2rτ·ρ̂` with per-superstep sampled ρ.
+pub struct SlottedRun {
+    pub total_time_s: f64,
+    pub total_rounds: u64,
+    pub supersteps: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn run_slotted_program(
+    w_total_s: f64,
+    supersteps: u64,
+    n: u64,
+    c: u64,
+    p: f64,
+    k: u32,
+    tau_s: f64,
+    policy: RetransmitPolicy,
+    rng: &mut Rng,
+) -> SlottedRun {
+    let ps = per_round_success(p, k);
+    let compute_per_step = w_total_s / supersteps as f64 / n as f64;
+    let mut total_time = 0.0;
+    let mut total_rounds = 0u64;
+    for _ in 0..supersteps {
+        let rounds = simulate_phase_rounds(ps, c, policy, rng, 1_000_000);
+        total_rounds += rounds;
+        match policy {
+            RetransmitPolicy::Selective => {
+                total_time += compute_per_step + rounds as f64 * 2.0 * tau_s;
+            }
+            RetransmitPolicy::WholeRound => {
+                // §II: failed rounds redo the computation as the penalty.
+                total_time += rounds as f64 * (compute_per_step + 2.0 * tau_s);
+            }
+        }
+    }
+    SlottedRun { total_time_s: total_time, total_rounds, supersteps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_round_success_matches_closed_form() {
+        for &(p, k) in &[(0.1f64, 1u32), (0.045, 2), (0.3, 3), (0.0005, 7)] {
+            let direct = (1.0 - p.powi(k as i32)).powi(2);
+            let got = per_round_success(p, k);
+            assert!((got - direct).abs() < 1e-12, "p={p} k={k}");
+        }
+    }
+
+    #[test]
+    fn perfect_link_is_one_round() {
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            assert_eq!(
+                simulate_phase_rounds(1.0, 100, RetransmitPolicy::Selective, &mut rng, 1000),
+                1
+            );
+        }
+    }
+
+    #[test]
+    fn dead_link_saturates() {
+        let mut rng = Rng::new(1);
+        assert_eq!(
+            simulate_phase_rounds(0.0, 5, RetransmitPolicy::Selective, &mut rng, 77),
+            77
+        );
+        assert_eq!(
+            simulate_phase_rounds(0.0, 5, RetransmitPolicy::WholeRound, &mut rng, 77),
+            77
+        );
+    }
+
+    #[test]
+    fn whole_round_estimate_matches_eq1() {
+        // eq (1): rho = 1 / p_s(n,p), p_s = (1-p)^{2c}.
+        let (p, c) = (0.05, 8u64);
+        let got = estimate_rho(p, 1, c, RetransmitPolicy::WholeRound, 60_000, 42);
+        let want = 1.0 / (1.0f64 - p).powf(2.0 * c as f64);
+        assert!(
+            (got - want).abs() / want < 0.03,
+            "MC {got} vs analytic {want}"
+        );
+    }
+
+    #[test]
+    fn selective_estimate_matches_eq3_small_case() {
+        // eq (3) via the float64 tail-sum (same series as the kernel).
+        let (p, c) = (0.15, 16u64);
+        let ps = per_round_success(p, 1);
+        let q = 1.0 - ps;
+        let mut want = 1.0;
+        let mut qi = q;
+        for _ in 1..4096 {
+            // term_i = 1 - (1 - qi)^c = -expm1(c · ln1p(-qi)).
+            want += -((c as f64) * (-qi).ln_1p()).exp_m1();
+            qi *= q;
+            if qi < 1e-18 {
+                break;
+            }
+        }
+        let got = estimate_rho(p, 1, c, RetransmitPolicy::Selective, 60_000, 43);
+        assert!(
+            (got - want).abs() / want < 0.03,
+            "MC {got} vs analytic {want}"
+        );
+    }
+
+    #[test]
+    fn selective_never_exceeds_whole_round_mean() {
+        let got_sel = estimate_rho(0.1, 1, 32, RetransmitPolicy::Selective, 20_000, 7);
+        let got_whole = estimate_rho(0.1, 1, 32, RetransmitPolicy::WholeRound, 20_000, 7);
+        assert!(got_sel <= got_whole, "{got_sel} vs {got_whole}");
+    }
+
+    #[test]
+    fn copies_increase_per_round_success() {
+        assert!(per_round_success(0.1, 2) > per_round_success(0.1, 1));
+        assert!(per_round_success(0.1, 5) > per_round_success(0.1, 2));
+    }
+
+    #[test]
+    fn slotted_program_zero_loss_matches_ideal_time() {
+        let mut rng = Rng::new(9);
+        let run = run_slotted_program(
+            3600.0, 10, 8, 64, 0.0, 1, 0.05,
+            RetransmitPolicy::Selective, &mut rng,
+        );
+        // T = w/n + 2 r tau = 3600/8 + 10 * 2 * 0.05.
+        let want = 3600.0 / 8.0 + 10.0 * 2.0 * 0.05;
+        assert!((run.total_time_s - want).abs() < 1e-9);
+        assert_eq!(run.total_rounds, 10);
+    }
+}

@@ -1,0 +1,192 @@
+//! TCP baseline: the comparator the paper argues against (§I).
+//!
+//! The paper's motivation is that TCP's congestion control collapses on
+//! high-bandwidth, high-delay, lossy WANs, so grids should use UDP with
+//! light-weight reliability. To make that claim testable in this repo,
+//! this module provides a flow-level AIMD TCP simulation over the same
+//! loss process as the UDP protocol: slow start, congestion avoidance,
+//! fast-retransmit window halving, and RTO collapse to one segment.
+//!
+//! The granularity is one RTT round (the standard fluid approximation):
+//! each round transmits `min(cwnd, remaining)` segments, each lost iid
+//! with probability `p`; any loss halves the window (fast retransmit);
+//! a fully lost window costs an RTO. `benches/tcp_vs_udp.rs` compares
+//! phase-completion times against the UDP/k-copies protocol and against
+//! the Padhye steady-state model (`model::tcp`).
+
+use crate::util::prng::Rng;
+
+/// Flow-level TCP parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpParams {
+    /// Round-trip time (the paper's β), seconds.
+    pub rtt_s: f64,
+    /// Serialization time of one segment (α), seconds.
+    pub alpha_s: f64,
+    /// Receiver/cwnd cap in segments.
+    pub max_window: u32,
+    /// Retransmission timeout, seconds (minRTO-style floor applies).
+    pub rto_s: f64,
+    /// Initial slow-start threshold in segments.
+    pub init_ssthresh: u32,
+}
+
+impl Default for TcpParams {
+    fn default() -> Self {
+        TcpParams {
+            rtt_s: 0.069,
+            alpha_s: 0.0037,
+            max_window: 64,
+            rto_s: 1.0, // classic minRTO
+            init_ssthresh: 32,
+        }
+    }
+}
+
+/// Outcome of one simulated transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpTransferReport {
+    /// Virtual completion time, seconds.
+    pub time_s: f64,
+    /// RTT rounds used.
+    pub rounds: u64,
+    /// Total segments put on the wire (incl. retransmissions).
+    pub segments_sent: u64,
+    /// RTO events.
+    pub timeouts: u64,
+}
+
+/// Simulate one reliable transfer of `c` segments under iid loss `p`.
+pub fn simulate_tcp_transfer(
+    c: u64,
+    p: f64,
+    params: &TcpParams,
+    rng: &mut Rng,
+) -> TcpTransferReport {
+    assert!((0.0..1.0).contains(&p), "loss {p}");
+    let mut remaining = c;
+    let mut cwnd: f64 = 1.0;
+    let mut ssthresh = params.init_ssthresh as f64;
+    let mut time = 0.0f64;
+    let mut rounds = 0u64;
+    let mut sent = 0u64;
+    let mut timeouts = 0u64;
+
+    while remaining > 0 {
+        rounds += 1;
+        let window = (cwnd.floor() as u64).clamp(1, params.max_window as u64).min(remaining);
+        sent += window;
+        // Each segment of the round independently survives.
+        let mut delivered = 0u64;
+        for _ in 0..window {
+            if !rng.bernoulli(p) {
+                delivered += 1;
+            }
+        }
+        remaining -= delivered;
+        // A round costs the serialization of its window plus one RTT.
+        time += window as f64 * params.alpha_s + params.rtt_s;
+
+        if delivered == window {
+            // Clean round: slow start below ssthresh, else AIMD +1.
+            if cwnd < ssthresh {
+                cwnd = (cwnd * 2.0).min(ssthresh);
+            } else {
+                cwnd += 1.0;
+            }
+        } else if delivered == 0 {
+            // Whole window gone: RTO, collapse to one segment.
+            timeouts += 1;
+            time += params.rto_s;
+            ssthresh = (cwnd / 2.0).max(1.0);
+            cwnd = 1.0;
+        } else {
+            // Partial loss: fast retransmit, multiplicative decrease.
+            ssthresh = (cwnd / 2.0).max(1.0);
+            cwnd = ssthresh;
+        }
+        cwnd = cwnd.min(params.max_window as f64);
+    }
+
+    TcpTransferReport { time_s: time, rounds, segments_sent: sent, timeouts }
+}
+
+/// Mean transfer time over `trials` runs.
+pub fn mean_tcp_transfer_time(
+    c: u64,
+    p: f64,
+    params: &TcpParams,
+    trials: u64,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    for _ in 0..trials {
+        total += simulate_tcp_transfer(c, p, params, &mut rng).time_s;
+    }
+    total / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_transfer_is_slow_start_bound() {
+        let mut rng = Rng::new(1);
+        let params = TcpParams::default();
+        let rep = simulate_tcp_transfer(63, 0.0, &params, &mut rng);
+        assert_eq!(rep.segments_sent, 63);
+        assert_eq!(rep.timeouts, 0);
+        // 1+2+4+8+16+32 = 63 segments in 6 rounds of doubling.
+        assert_eq!(rep.rounds, 6);
+    }
+
+    #[test]
+    fn loss_inflates_completion_time() {
+        let params = TcpParams::default();
+        let t0 = mean_tcp_transfer_time(512, 0.001, &params, 200, 2);
+        let t5 = mean_tcp_transfer_time(512, 0.05, &params, 200, 3);
+        let t15 = mean_tcp_transfer_time(512, 0.15, &params, 200, 4);
+        assert!(t0 < t5 && t5 < t15, "{t0} {t5} {t15}");
+        // The paper's claim, quantified: 15% loss is catastrophic for TCP
+        // (well over 5x the near-lossless time on this configuration).
+        assert!(t15 > 5.0 * t0, "t15 {t15} vs t0 {t0}");
+    }
+
+    #[test]
+    fn timeouts_appear_under_heavy_loss() {
+        let mut rng = Rng::new(5);
+        let params = TcpParams::default();
+        let mut timeouts = 0;
+        for _ in 0..50 {
+            timeouts += simulate_tcp_transfer(256, 0.3, &params, &mut rng).timeouts;
+        }
+        assert!(timeouts > 0);
+    }
+
+    #[test]
+    fn throughput_tracks_padhye_shape() {
+        // The simulated steady-state throughput must decrease like
+        // ~1/sqrt(p) in the fast-retransmit regime (Padhye), i.e. the
+        // ratio of throughputs at p and 4p should be near 2.
+        let params = TcpParams { max_window: 10_000, ..Default::default() };
+        let c = 200_000u64;
+        let thr = |p: f64, seed| {
+            let t = mean_tcp_transfer_time(c, p, &params, 3, seed);
+            c as f64 / t
+        };
+        let r1 = thr(0.005, 6);
+        let r4 = thr(0.02, 7);
+        let ratio = r1 / r4;
+        assert!((1.5..3.0).contains(&ratio), "sqrt-law ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let params = TcpParams::default();
+        let a = mean_tcp_transfer_time(128, 0.1, &params, 10, 42);
+        let b = mean_tcp_transfer_time(128, 0.1, &params, 10, 42);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,229 @@
+//! Pairwise network topology: link parameters + loss process per node pair.
+//!
+//! A VLSG is islands of clusters joined by WAN links; the model abstracts
+//! this as a complete graph of end-to-end paths with per-pair (bandwidth,
+//! rtt, loss). Two constructors cover the reproduction's needs:
+//!
+//! * [`Topology::uniform`] — every pair identical (the analytic model's
+//!   world, used for model-vs-simulation validation).
+//! * [`Topology::planetlab_like`] — per-pair parameters drawn from the
+//!   empirical ranges measured in the paper's Figs 1–3 (used by the
+//!   measurement campaign and the end-to-end workloads).
+
+use crate::util::prng::Rng;
+
+use super::link::Link;
+use super::loss::{Bernoulli, GilbertElliott, LossModel};
+
+/// Per-pair loss configuration (kept as an enum so `Topology` stays
+/// `Send` + cloneable without boxing).
+#[derive(Clone, Copy, Debug)]
+pub enum PairLoss {
+    Bernoulli(Bernoulli),
+    GilbertElliott(GilbertElliott),
+}
+
+impl PairLoss {
+    pub fn lose(&mut self, rng: &mut Rng) -> bool {
+        match self {
+            PairLoss::Bernoulli(m) => m.lose(rng),
+            PairLoss::GilbertElliott(m) => m.lose(rng),
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        match self {
+            PairLoss::Bernoulli(m) => m.mean_loss(),
+            PairLoss::GilbertElliott(m) => m.mean_loss(),
+        }
+    }
+}
+
+/// Complete-graph topology over `n` nodes.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n: usize,
+    /// Row-major (src * n + dst); diagonal is unused.
+    links: Vec<Link>,
+    loss: Vec<PairLoss>,
+}
+
+/// Empirical parameter ranges from the paper's PlanetLab measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanetLabRanges {
+    /// Mean loss band (Fig 1): 5–15 %.
+    pub loss_lo: f64,
+    pub loss_hi: f64,
+    /// Bandwidth band (Fig 2): 30–50 MB/s... the §V analyses use the
+    /// conservative 17–24 MB/s operating points, so the range is wide.
+    pub bw_lo_mbytes: f64,
+    pub bw_hi_mbytes: f64,
+    /// RTT band (Fig 3): 0.05–0.1 s.
+    pub rtt_lo: f64,
+    pub rtt_hi: f64,
+    /// Fraction of pairs that are high-loss outliers (>15 %, paper: "there
+    /// are cases when packet losses exceed 15%").
+    pub outlier_frac: f64,
+}
+
+impl Default for PlanetLabRanges {
+    fn default() -> Self {
+        PlanetLabRanges {
+            loss_lo: 0.05,
+            loss_hi: 0.15,
+            bw_lo_mbytes: 30.0,
+            bw_hi_mbytes: 50.0,
+            rtt_lo: 0.05,
+            rtt_hi: 0.10,
+            outlier_frac: 0.05,
+        }
+    }
+}
+
+impl Topology {
+    /// Identical links everywhere: Bernoulli(p), given bandwidth/RTT.
+    pub fn uniform(n: usize, link: Link, p: f64) -> Topology {
+        assert!(n >= 1);
+        Topology {
+            n,
+            links: vec![link; n * n],
+            loss: vec![PairLoss::Bernoulli(Bernoulli::new(p)); n * n],
+        }
+    }
+
+    /// Identical links with a bursty Gilbert–Elliott process (ablation).
+    pub fn uniform_bursty(n: usize, link: Link, p: f64, burst_len: f64) -> Topology {
+        let ge = GilbertElliott::with_mean_loss(p, burst_len);
+        Topology {
+            n,
+            links: vec![link; n * n],
+            loss: vec![PairLoss::GilbertElliott(ge); n * n],
+        }
+    }
+
+    /// Per-pair parameters drawn from PlanetLab-like empirical ranges.
+    /// Symmetric: (i,j) and (j,i) share parameters, as end-to-end paths do
+    /// to first order.
+    pub fn planetlab_like(n: usize, ranges: &PlanetLabRanges, rng: &mut Rng) -> Topology {
+        assert!(n >= 1);
+        let mut links = vec![Link::default(); n * n];
+        let mut loss = vec![PairLoss::Bernoulli(Bernoulli::new(0.0)); n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let bw = rng.range_f64(ranges.bw_lo_mbytes, ranges.bw_hi_mbytes);
+                let rtt = rng.range_f64(ranges.rtt_lo, ranges.rtt_hi);
+                let p = if rng.bernoulli(ranges.outlier_frac) {
+                    // Heavy-tail outlier: loaded end systems, bad physical
+                    // links (paper §I-A).
+                    rng.range_f64(ranges.loss_hi, 2.0 * ranges.loss_hi)
+                } else {
+                    rng.range_f64(ranges.loss_lo, ranges.loss_hi)
+                };
+                let link = Link::from_mbytes(bw, rtt);
+                let pl = PairLoss::Bernoulli(Bernoulli::new(p.min(0.99)));
+                links[i * n + j] = link;
+                links[j * n + i] = link;
+                loss[i * n + j] = pl;
+                loss[j * n + i] = pl;
+            }
+        }
+        Topology { n, links, loss }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn link(&self, src: usize, dst: usize) -> &Link {
+        assert!(src != dst, "self-link {src}->{dst}");
+        &self.links[src * self.n + dst]
+    }
+
+    /// Sample the loss process for one packet on (src → dst).
+    pub fn lose(&mut self, src: usize, dst: usize, rng: &mut Rng) -> bool {
+        assert!(src != dst, "self-link {src}->{dst}");
+        self.loss[src * self.n + dst].lose(rng)
+    }
+
+    pub fn mean_loss(&self, src: usize, dst: usize) -> f64 {
+        self.loss[src * self.n + dst].mean_loss()
+    }
+
+    /// Network-wide average of per-pair mean loss (i ≠ j).
+    pub fn global_mean_loss(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    sum += self.loss[i * self.n + j].mean_loss();
+                    cnt += 1;
+                }
+            }
+        }
+        if cnt == 0 { 0.0 } else { sum / cnt as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_topology() {
+        let t = Topology::uniform(4, Link::from_mbytes(20.0, 0.08), 0.1);
+        assert_eq!(t.n(), 4);
+        assert_eq!(t.link(0, 3).rtt_s, 0.08);
+        assert!((t.global_mean_loss() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn planetlab_like_within_ranges() {
+        let mut rng = Rng::new(77);
+        let ranges = PlanetLabRanges::default();
+        let t = Topology::planetlab_like(12, &ranges, &mut rng);
+        for i in 0..12 {
+            for j in 0..12 {
+                if i == j {
+                    continue;
+                }
+                let l = t.link(i, j);
+                assert!(l.bandwidth_bps >= 30.0e6 && l.bandwidth_bps <= 50.0e6);
+                assert!(l.rtt_s >= 0.05 && l.rtt_s <= 0.10);
+                let p = t.mean_loss(i, j);
+                assert!(p >= 0.05 && p <= 0.30, "loss {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn planetlab_like_symmetric() {
+        let mut rng = Rng::new(5);
+        let t = Topology::planetlab_like(8, &PlanetLabRanges::default(), &mut rng);
+        for i in 0..8 {
+            for j in 0..8 {
+                if i != j {
+                    assert_eq!(t.link(i, j), t.link(j, i));
+                    assert_eq!(t.mean_loss(i, j), t.mean_loss(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loss_sampling_matches_configured_rate() {
+        let mut t = Topology::uniform(2, Link::default(), 0.25);
+        let mut rng = Rng::new(9);
+        let n = 100_000;
+        let lost = (0..n).filter(|_| t.lose(0, 1, &mut rng)).count();
+        let rate = lost as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_link_panics() {
+        let t = Topology::uniform(3, Link::default(), 0.0);
+        t.link(1, 1);
+    }
+}

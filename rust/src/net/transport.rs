@@ -1,0 +1,214 @@
+//! Packet-level datagram transport over the discrete-event engine.
+//!
+//! UDP semantics: fire-and-forget `send`, per-packet independent loss, no
+//! ordering guarantees beyond what timing implies. Bandwidth serialization
+//! is modeled per sender (packets queue behind each other on the sender's
+//! uplink, as in the paper where `k·c(n)/n` packets share the outgoing
+//! pipe), propagation is `rtt/2`.
+
+use crate::simcore::{Engine, SimTime, Step};
+use crate::util::prng::Rng;
+
+use super::packet::{NodeId, Packet};
+use super::topology::Topology;
+
+/// Events flowing through the datagram network.
+#[derive(Debug, Clone, Copy)]
+pub enum NetEvent {
+    /// Packet arrives at `pkt.dst`.
+    Deliver(Packet),
+    /// A protocol timer (owner node, opaque token) fires.
+    Timer { node: NodeId, token: u64 },
+}
+
+/// Counters the measurement and validation layers read.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NetStats {
+    pub data_sent: u64,
+    pub data_delivered: u64,
+    pub acks_sent: u64,
+    pub acks_delivered: u64,
+    pub lost: u64,
+}
+
+/// The datagram network: topology + DES engine + per-sender uplink clocks.
+pub struct Network {
+    engine: Engine<NetEvent>,
+    topo: Topology,
+    rng: Rng,
+    /// Time at which each node's uplink becomes free (serialization queue).
+    uplink_free: Vec<SimTime>,
+    pub stats: NetStats,
+}
+
+impl Network {
+    pub fn new(topo: Topology, seed: u64) -> Network {
+        let n = topo.n();
+        Network {
+            engine: Engine::new(),
+            topo,
+            rng: Rng::new(seed),
+            uplink_free: vec![SimTime::ZERO; n],
+            stats: NetStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Send a datagram. Serialization occupies the sender's uplink; the
+    /// packet is then subject to the pair's loss process; survivors are
+    /// delivered after one-way propagation.
+    pub fn send(&mut self, pkt: Packet) {
+        use super::packet::PacketKind;
+        match pkt.kind {
+            PacketKind::Data => self.stats.data_sent += 1,
+            PacketKind::Ack => self.stats.acks_sent += 1,
+        }
+        let link = *self.topo.link(pkt.src, pkt.dst);
+        let ser = SimTime::from_secs_f64(link.alpha(pkt.size_bytes));
+        // Packets queue on the sender's uplink.
+        let start = self.uplink_free[pkt.src].max(self.engine.now());
+        let done_ser = start + ser;
+        self.uplink_free[pkt.src] = done_ser;
+        if self.topo.lose(pkt.src, pkt.dst, &mut self.rng) {
+            self.stats.lost += 1;
+            return; // dropped on the wire — no event.
+        }
+        let arrive = done_ser + SimTime::from_secs_f64(link.one_way_delay());
+        self.engine.schedule_at(arrive, NetEvent::Deliver(pkt));
+    }
+
+    /// Arm a protocol timer owned by `node` firing after `delay_s`.
+    pub fn arm_timer(&mut self, node: NodeId, token: u64, delay_s: f64) {
+        self.engine.schedule_in(delay_s, NetEvent::Timer { node, token });
+    }
+
+    /// Advance to the next event.
+    pub fn step(&mut self) -> Option<(SimTime, NetEvent)> {
+        match self.engine.step() {
+            Step::Event(t, ev) => {
+                if let NetEvent::Deliver(pkt) = ev {
+                    use super::packet::PacketKind;
+                    match pkt.kind {
+                        PacketKind::Data => self.stats.data_delivered += 1,
+                        PacketKind::Ack => self.stats.acks_delivered += 1,
+                    }
+                }
+                Some((t, ev))
+            }
+            Step::Idle => None,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.engine.pending()
+    }
+
+    pub fn events_scheduled(&self) -> u64 {
+        self.engine.scheduled_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::Link;
+
+    fn lossless(n: usize) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(10.0, 0.1), 0.0), 1)
+    }
+
+    #[test]
+    fn delivery_latency_is_serialization_plus_half_rtt() {
+        let mut net = lossless(2);
+        // 1 MB at 10 MB/s = 0.1 s serialize + 0.05 s one-way = 0.15 s.
+        net.send(Packet::data(0, 1, 0, 0, 1_000_000));
+        let (t, ev) = net.step().expect("delivery");
+        assert!((t.as_secs_f64() - 0.15).abs() < 1e-9, "{t}");
+        match ev {
+            NetEvent::Deliver(p) => assert_eq!(p.dst, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn uplink_serialization_queues_packets() {
+        let mut net = lossless(2);
+        // Two packets back-to-back: second starts serializing after first.
+        net.send(Packet::data(0, 1, 0, 0, 1_000_000));
+        net.send(Packet::data(0, 1, 1, 0, 1_000_000));
+        let (t1, _) = net.step().unwrap();
+        let (t2, _) = net.step().unwrap();
+        assert!((t1.as_secs_f64() - 0.15).abs() < 1e-9);
+        assert!((t2.as_secs_f64() - 0.25).abs() < 1e-9, "{t2}");
+    }
+
+    #[test]
+    fn different_senders_do_not_share_uplink() {
+        let mut net = lossless(3);
+        net.send(Packet::data(0, 2, 0, 0, 1_000_000));
+        net.send(Packet::data(1, 2, 1, 0, 1_000_000));
+        let (t1, _) = net.step().unwrap();
+        let (t2, _) = net.step().unwrap();
+        assert!((t1.as_secs_f64() - 0.15).abs() < 1e-9);
+        assert!((t2.as_secs_f64() - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_loss_drops_everything() {
+        let topo = Topology::uniform(2, Link::default(), 1.0);
+        let mut net = Network::new(topo, 7);
+        for seq in 0..50 {
+            net.send(Packet::data(0, 1, seq, 0, 1024));
+        }
+        assert!(net.step().is_none());
+        assert_eq!(net.stats.lost, 50);
+        assert_eq!(net.stats.data_delivered, 0);
+    }
+
+    #[test]
+    fn loss_rate_approximates_p() {
+        let topo = Topology::uniform(2, Link::default(), 0.2);
+        let mut net = Network::new(topo, 11);
+        let n = 20_000;
+        for seq in 0..n {
+            net.send(Packet::data(0, 1, seq, 0, 1024));
+        }
+        while net.step().is_some() {}
+        let rate = net.stats.lost as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn timers_fire() {
+        let mut net = lossless(2);
+        net.arm_timer(0, 42, 1.5);
+        let (t, ev) = net.step().unwrap();
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-9);
+        match ev {
+            NetEvent::Timer { node, token } => {
+                assert_eq!((node, token), (0, 42));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_track_kinds() {
+        let mut net = lossless(2);
+        net.send(Packet::data(0, 1, 0, 0, 1024));
+        net.send(Packet::ack(1, 0, 0, 0));
+        while net.step().is_some() {}
+        assert_eq!(net.stats.data_sent, 1);
+        assert_eq!(net.stats.acks_sent, 1);
+        assert_eq!(net.stats.data_delivered, 1);
+        assert_eq!(net.stats.acks_delivered, 1);
+        assert_eq!(net.stats.lost, 0);
+    }
+}

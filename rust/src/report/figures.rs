@@ -1,0 +1,238 @@
+//! Figure series generators.
+
+use crate::coordinator::SweepCoordinator;
+use crate::measure::{run_campaign, CampaignConfig};
+use crate::model::conceptual;
+use crate::model::{Comm, LbspParams};
+use crate::util::tables::{fmt_num, Table};
+
+use super::{node_axis, Artifact, FIGURE_PS};
+
+/// Figs 1–3: the measurement campaign — loss / bandwidth / RTT vs packet
+/// size, averaged over the probed pairs.
+pub fn fig1_3(cfg: &CampaignConfig) -> Vec<Artifact> {
+    let points = run_campaign(cfg);
+    let mk = |title: &str, col: &str, sel: &dyn Fn(&crate::measure::SizePoint) -> (f64, f64)| {
+        let mut t = Table::new(vec!["packet_bytes", col, "sem"]);
+        for p in &points {
+            let (mean, sem) = sel(p);
+            t.row(vec![p.size.to_string(), fmt_num(mean), fmt_num(sem)]);
+        }
+        Artifact { title: title.to_string(), table: t }
+    };
+    vec![
+        mk("Fig 1: average UDP packet loss vs packet size", "loss_fraction", &|p| {
+            (p.loss.mean(), p.loss.sem())
+        }),
+        mk("Fig 2: average UDP bandwidth vs packet size (MB/s)", "bandwidth_mbytes", &|p| {
+            (p.bandwidth_mbytes.mean(), p.bandwidth_mbytes.sem())
+        }),
+        mk("Fig 3: average round-trip time vs packet size (s)", "rtt_s", &|p| {
+            (p.rtt.mean(), p.rtt.sem())
+        }),
+    ]
+}
+
+/// Fig 7: conceptual-model speedup vs n, k = 2, one table per c(n) class,
+/// one column per loss probability.
+pub fn fig7() -> Vec<Artifact> {
+    let k = 2;
+    Comm::figure_classes()
+        .into_iter()
+        .map(|comm| {
+            let mut header = vec!["n".to_string()];
+            header.extend(FIGURE_PS.iter().map(|p| format!("p={p}")));
+            let mut t = Table::new(header);
+            for n in node_axis() {
+                let mut row = vec![n.to_string()];
+                for p in FIGURE_PS {
+                    row.push(fmt_num(conceptual::speedup(n as f64, p, k, comm)));
+                }
+                t.row(row);
+            }
+            Artifact {
+                title: format!("Fig 7 (conceptual, k=2): speedup, {}", comm.label()),
+                table: t,
+            }
+        })
+        .collect()
+}
+
+fn lbsp_speedup_figure(
+    sweeper: &mut SweepCoordinator,
+    title_prefix: &str,
+    w_seconds: f64,
+    k: u32,
+) -> Vec<Artifact> {
+    Comm::figure_classes()
+        .into_iter()
+        .map(|comm| {
+            let mut header = vec!["n".to_string()];
+            header.extend(FIGURE_PS.iter().map(|p| format!("p={p}")));
+            let mut t = Table::new(header);
+            // Batch all points of the panel through the coordinator.
+            let mut points = Vec::new();
+            for n in node_axis() {
+                for p in FIGURE_PS {
+                    points.push(LbspParams {
+                        w: w_seconds,
+                        n: n as f64,
+                        p,
+                        k,
+                        comm,
+                        ..Default::default()
+                    });
+                }
+            }
+            let speedups = sweeper.speedups(&points);
+            for (i, n) in node_axis().iter().enumerate() {
+                let mut row = vec![n.to_string()];
+                for j in 0..FIGURE_PS.len() {
+                    row.push(fmt_num(speedups[i * FIGURE_PS.len() + j]));
+                }
+                t.row(row);
+            }
+            Artifact {
+                title: format!("{title_prefix}: speedup, {}", comm.label()),
+                table: t,
+            }
+        })
+        .collect()
+}
+
+/// Fig 8: L-BSP speedup, W = 4 h, k = 1, six c(n) panels.
+pub fn fig8(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
+    lbsp_speedup_figure(sweeper, "Fig 8 (L-BSP, W=4h, k=1)", 4.0 * 3600.0, 1)
+}
+
+/// Fig 9: limits of speedup for different p, W = 10 h, k = 1.
+pub fn fig9(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
+    lbsp_speedup_figure(sweeper, "Fig 9 (L-BSP, W=10h, k=1)", 10.0 * 3600.0, 1)
+}
+
+/// Fig 10: speedup vs packet copies k, W = 10 h, one table per c(n),
+/// rows k = 1..12, columns per p, at a representative n.
+pub fn fig10(sweeper: &mut SweepCoordinator, n: u64) -> Vec<Artifact> {
+    Comm::figure_classes()
+        .into_iter()
+        .map(|comm| {
+            let mut header = vec!["k".to_string()];
+            header.extend(FIGURE_PS.iter().map(|p| format!("p={p}")));
+            let mut t = Table::new(header);
+            let mut points = Vec::new();
+            for k in 1..=12u32 {
+                for p in FIGURE_PS {
+                    points.push(LbspParams {
+                        w: 10.0 * 3600.0,
+                        n: n as f64,
+                        p,
+                        k,
+                        comm,
+                        ..Default::default()
+                    });
+                }
+            }
+            let speedups = sweeper.speedups(&points);
+            for k in 1..=12usize {
+                let mut row = vec![k.to_string()];
+                for j in 0..FIGURE_PS.len() {
+                    row.push(fmt_num(speedups[(k - 1) * FIGURE_PS.len() + j]));
+                }
+                t.row(row);
+            }
+            Artifact {
+                title: format!("Fig 10 (L-BSP, W=10h, n={n}): speedup vs k, {}", comm.label()),
+                table: t,
+            }
+        })
+        .collect()
+}
+
+fn work_size_figure(sweeper: &mut SweepCoordinator, fig: &str, n: u64) -> Vec<Artifact> {
+    // Work sizes from minutes to ~4 weeks, log-spaced.
+    let works_h: Vec<f64> =
+        vec![0.1, 0.5, 1.0, 2.0, 4.0, 10.0, 24.0, 72.0, 168.0, 672.0];
+    Comm::figure_classes()
+        .into_iter()
+        .map(|comm| {
+            let mut header = vec!["W_hours".to_string()];
+            header.extend(FIGURE_PS.iter().map(|p| format!("p={p}")));
+            let mut t = Table::new(header);
+            let mut points = Vec::new();
+            for &wh in &works_h {
+                for p in FIGURE_PS {
+                    points.push(LbspParams {
+                        w: wh * 3600.0,
+                        n: n as f64,
+                        p,
+                        k: 1,
+                        comm,
+                        ..Default::default()
+                    });
+                }
+            }
+            let speedups = sweeper.speedups(&points);
+            for (i, wh) in works_h.iter().enumerate() {
+                let mut row = vec![fmt_num(*wh)];
+                for j in 0..FIGURE_PS.len() {
+                    row.push(fmt_num(speedups[i * FIGURE_PS.len() + j]));
+                }
+                t.row(row);
+            }
+            Artifact {
+                title: format!("{fig} (n={n}): speedup vs work size, {}", comm.label()),
+                table: t,
+            }
+        })
+        .collect()
+}
+
+/// Fig 11: speedup vs work size at n = 2.
+pub fn fig11(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
+    work_size_figure(sweeper, "Fig 11", 2)
+}
+
+/// Fig 12: speedup vs work size at n = 131072.
+pub fn fig12(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
+    work_size_figure(sweeper, "Fig 12", 131072)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_has_six_panels_with_full_axes() {
+        let panels = fig7();
+        assert_eq!(panels.len(), 6);
+        for p in &panels {
+            assert_eq!(p.table.n_rows(), 18); // 2^0..2^17
+        }
+    }
+
+    #[test]
+    fn fig8_panels_from_native_sweeper() {
+        let mut sweeper = SweepCoordinator::native(2);
+        let panels = fig8(&mut sweeper);
+        assert_eq!(panels.len(), 6);
+        assert_eq!(sweeper.metrics.points, 6 * 18 * FIGURE_PS.len());
+    }
+
+    #[test]
+    fn fig10_rows_are_k_values() {
+        let mut sweeper = SweepCoordinator::native(2);
+        let panels = fig10(&mut sweeper, 4096);
+        assert_eq!(panels[0].table.n_rows(), 12);
+    }
+
+    #[test]
+    fn fig11_12_differ_only_in_n() {
+        let mut s1 = SweepCoordinator::native(2);
+        let mut s2 = SweepCoordinator::native(2);
+        let a = fig11(&mut s1);
+        let b = fig12(&mut s2);
+        assert_eq!(a.len(), b.len());
+        assert!(a[0].title.contains("n=2"));
+        assert!(b[0].title.contains("n=131072"));
+    }
+}

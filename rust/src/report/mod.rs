@@ -1,0 +1,37 @@
+//! Figure/table regeneration — the paper's evaluation section as code.
+//!
+//! Every public function returns [`Table`]s whose rows/series mirror what
+//! the paper plots; the CLI (`lbsp figure …`, `lbsp table …`) and the
+//! bench harness print them. Absolute values come from this codebase's
+//! own substrate (see DESIGN.md §2 substitutions); the *shape* — who
+//! wins, where optima sit, where curves cross — is the reproduction
+//! target, recorded against the paper in EXPERIMENTS.md.
+
+mod figures;
+mod tables;
+
+pub use figures::{fig10, fig11, fig12, fig1_3, fig7, fig8, fig9};
+pub use tables::{table1, table2};
+
+use crate::util::tables::Table;
+
+/// A titled table (figure series or table reproduction).
+pub struct Artifact {
+    pub title: String,
+    pub table: Table,
+}
+
+impl Artifact {
+    pub fn print(&self) {
+        println!("== {} ==", self.title);
+        println!("{}", self.table.ascii());
+    }
+}
+
+/// The node-count axis used across the paper's figures: n = 2^0 … 2^17.
+pub fn node_axis() -> Vec<u64> {
+    (0..=17).map(|s| 1u64 << s).collect()
+}
+
+/// The loss-probability curves the figures sweep.
+pub const FIGURE_PS: [f64; 5] = [0.0005, 0.01, 0.045, 0.1, 0.15];

@@ -1,0 +1,101 @@
+//! Table I and Table II reproductions.
+
+use crate::model::algorithms::table2_rows;
+use crate::model::dominating::{classify, classify_numeric};
+use crate::model::{Comm, LbspParams};
+use crate::util::tables::{fmt_num, Table};
+
+use super::Artifact;
+
+/// Table I: dominating denominator term per c(n), analytic + numeric.
+pub fn table1() -> Artifact {
+    let mut t = Table::new(vec![
+        "case",
+        "communication c(n)",
+        "dominating term (analytic)",
+        "numeric check",
+    ]);
+    let rows = [
+        ("I", Comm::Quadratic),
+        ("II", Comm::NLogN),
+        ("III", Comm::Linear),
+        ("IV", Comm::LogSq),
+        ("V", Comm::Log),
+        ("VI", Comm::One),
+    ];
+    let base = LbspParams { p: 1.0e-5, k: 1, w: 36000.0, ..Default::default() };
+    for (case, comm) in rows {
+        let analytic = classify(comm);
+        let numeric = classify_numeric(comm, &base);
+        t.row(vec![
+            case.to_string(),
+            comm.label(),
+            analytic.label().to_string(),
+            if numeric == analytic { "agrees".into() } else { format!("DISAGREES: {}", numeric.label()) },
+        ]);
+    }
+    Artifact { title: "Table I: dominating term as n → ∞".to_string(), table: t }
+}
+
+/// Table II: the four §V algorithm columns, paper layout (rows are
+/// parameters/outputs, columns are algorithms).
+pub fn table2() -> Artifact {
+    let evals = table2_rows();
+    let mut header = vec!["row".to_string()];
+    header.extend(evals.iter().map(|e| e.algorithm.to_string()));
+    let mut t = Table::new(header);
+    let mut push = |name: &str, vals: Vec<String>| {
+        let mut row = vec![name.to_string()];
+        row.extend(vals);
+        t.row(row);
+    };
+    push("size N / m", evals.iter().map(|e| fmt_num(e.size)).collect());
+    push("processors n", evals.iter().map(|e| e.processors.to_string()).collect());
+    push(
+        "packet size (bytes)",
+        evals.iter().map(|e| e.net.packet_bytes.to_string()).collect(),
+    );
+    push("packet copies k", evals.iter().map(|e| e.net.k.to_string()).collect());
+    push(
+        "bandwidth (MB/s)",
+        evals.iter().map(|e| fmt_num(e.net.bandwidth_mbytes)).collect(),
+    );
+    push("loss probability p", evals.iter().map(|e| fmt_num(e.net.p)).collect());
+    push("alpha (s)", evals.iter().map(|e| fmt_num(e.net.alpha())).collect());
+    push("delay beta (s)", evals.iter().map(|e| fmt_num(e.net.beta)).collect());
+    push("avg transmissions rho^k", evals.iter().map(|e| fmt_num(e.rho)).collect());
+    push("sequential time w_s (s)", evals.iter().map(|e| fmt_num(e.w_s)).collect());
+    push("communication cost (s)", evals.iter().map(|e| fmt_num(e.comm_s)).collect());
+    push(
+        "total parallel time (s)",
+        evals.iter().map(|e| fmt_num(e.total_parallel_s)).collect(),
+    );
+    push("speedup S_E", evals.iter().map(|e| fmt_num(e.speedup)).collect());
+    push("efficiency", evals.iter().map(|e| fmt_num(e.efficiency)).collect());
+    Artifact {
+        title: "Table II: approximate speedup of parallel algorithms (L-BSP)".to_string(),
+        table: t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_all_rows_agree() {
+        let a = table1();
+        assert_eq!(a.table.n_rows(), 6);
+        assert!(!a.table.ascii().contains("DISAGREES"), "{}", a.table.ascii());
+    }
+
+    #[test]
+    fn table2_has_paper_rows_and_columns() {
+        let a = table2();
+        let text = a.table.ascii();
+        assert_eq!(a.table.n_rows(), 14);
+        for needle in ["matmul", "bitonic", "fft2d", "laplace", "speedup S_E", "rho^k"] {
+            assert!(text.contains(needle), "missing {needle} in\n{text}");
+        }
+    }
+}

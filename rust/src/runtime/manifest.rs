@@ -1,0 +1,167 @@
+//! Parse `artifacts/manifest.txt` — the AOT interface contract.
+//!
+//! Format (one artifact per line, written by `python/compile/aot.py`):
+//!
+//! ```text
+//! rho_hat inputs=f32[8192];f32[8192] output=f32[8192]
+//! bitonic_merge inputs=f32[512];f32[512];f32[] output=f32[512]
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Interface of one artifact: input shapes and output shape (f32 only —
+/// the AOT layer enforces a single dtype across the boundary).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// One dims-vector per input; `[]` is a scalar.
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+/// All artifact specs, in manifest order.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    order: Vec<String>,
+    by_name: HashMap<String, ArtifactSpec>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    let inner = s
+        .strip_prefix("f32[")
+        .and_then(|r| r.strip_suffix(']'))
+        .with_context(|| format!("bad shape {s:?} (want f32[dims])"))?;
+    if inner.is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim in {s:?}")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().context("empty manifest line")?.to_string();
+            let mut inputs = None;
+            let mut output = None;
+            for part in parts {
+                if let Some(v) = part.strip_prefix("inputs=") {
+                    inputs = Some(
+                        v.split(';')
+                            .map(parse_shape)
+                            .collect::<Result<Vec<_>>>()
+                            .with_context(|| format!("line {}", lineno + 1))?,
+                    );
+                } else if let Some(v) = part.strip_prefix("output=") {
+                    let shapes = v
+                        .split(';')
+                        .map(parse_shape)
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(|| format!("line {}", lineno + 1))?;
+                    if shapes.len() != 1 {
+                        bail!("line {}: exactly one output supported", lineno + 1);
+                    }
+                    output = Some(shapes.into_iter().next().unwrap());
+                } else {
+                    bail!("line {}: unknown field {part:?}", lineno + 1);
+                }
+            }
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                inputs: inputs.with_context(|| format!("{name}: missing inputs="))?,
+                output: output.with_context(|| format!("{name}: missing output="))?,
+            };
+            m.order.push(name.clone());
+            m.by_name.insert(name, spec);
+        }
+        if m.order.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    pub fn specs(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.order.iter().map(|n| &self.by_name[n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+rho_hat inputs=f32[8192];f32[8192] output=f32[8192]
+speedup_surface inputs=f32[8192];f32[8192];f32[8192];f32[8192];f32[8192];f32[8192];f32[8192] output=f32[8192]
+jacobi_step inputs=f32[128,128] output=f32[128,128]
+bitonic_merge inputs=f32[512];f32[512];f32[] output=f32[512]
+";
+
+    #[test]
+    fn parses_all_lines_in_order() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 4);
+        let names: Vec<&str> = m.specs().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["rho_hat", "speedup_surface", "jacobi_step", "bitonic_merge"]);
+    }
+
+    #[test]
+    fn shapes_parse() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let rho = m.get("rho_hat").unwrap();
+        assert_eq!(rho.inputs, vec![vec![8192], vec![8192]]);
+        assert_eq!(rho.output, vec![8192]);
+        let jac = m.get("jacobi_step").unwrap();
+        assert_eq!(jac.inputs, vec![vec![128, 128]]);
+        let bm = m.get("bitonic_merge").unwrap();
+        assert_eq!(bm.inputs[2], Vec::<usize>::new()); // scalar
+    }
+
+    #[test]
+    fn seven_input_surface() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.get("speedup_surface").unwrap().inputs.len(), 7);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("name inputs=f32[x] output=f32[1]").is_err());
+        assert!(Manifest::parse("name inputs=f32[8] nonsense=1 output=f32[8]").is_err());
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("name inputs=f32[8]").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = Manifest::parse("# header\n\nrho_hat inputs=f32[8] output=f32[8]\n").unwrap();
+        assert_eq!(m.len(), 1);
+    }
+}

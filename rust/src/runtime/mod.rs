@@ -1,0 +1,122 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them from rust.
+//!
+//! The compile path (`make artifacts` → `python/compile/aot.py`) lowers
+//! every Layer-2 entrypoint to HLO *text*; this module loads the text via
+//! `HloModuleProto::from_text_file`, compiles once on the PJRT CPU client
+//! and caches the loaded executables. Python never runs at request time.
+//!
+//! Submodules:
+//! * [`manifest`] — parse `artifacts/manifest.txt` (interface contracts).
+//! * [`surface`] — typed wrappers over the five artifacts, with batching
+//!   and padding for the fixed AOT shapes.
+
+pub mod manifest;
+pub mod surface;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use manifest::{ArtifactSpec, Manifest};
+
+/// A loaded, compiled artifact registry over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `dir/manifest.txt` onto the CPU
+    /// PJRT client and compile it.
+    pub fn load_dir(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for spec in manifest.specs() {
+            let path = dir.join(format!("{}.hlo.txt", spec.name));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            executables.insert(spec.name.clone(), exe);
+        }
+        Ok(Runtime { client, executables, manifest, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifact location (`$LBSP_ARTIFACTS` or `./artifacts`).
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("LBSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load_dir(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.manifest.specs().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute artifact `name` on f32 inputs; shapes are validated against
+    /// the manifest. Returns the flattened f32 output.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, dims)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let want: usize = dims.iter().product::<usize>().max(1);
+            if data.len() != want {
+                bail!(
+                    "{name} input {i}: expected {want} elements for shape {dims:?}, got {}",
+                    data.len()
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() != 1 {
+                // rank-0 scalars and rank>=2 arrays reshape from vec1.
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64)?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).expect("manifest/exe in sync");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.executables.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}

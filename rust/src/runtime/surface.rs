@@ -1,0 +1,114 @@
+//! Typed wrappers over the AOT artifacts, with batching and padding.
+//!
+//! The artifacts have fixed AOT shapes (the manifest is the source of
+//! truth); these helpers batch arbitrary-length parameter sweeps into
+//! grid-sized executes, pad the tail with benign values and slice the
+//! results back out.
+
+use anyhow::{Context, Result};
+
+use crate::model::LbspParams;
+
+use super::Runtime;
+
+/// Evaluate the eq (3) ρ̂ series on the PJRT `rho_hat` artifact.
+///
+/// `q` per-round failure probabilities, `c` packet counts — any length;
+/// batched into the artifact's grid size.
+pub fn rho_hat_batch(rt: &Runtime, q: &[f64], c: &[f64]) -> Result<Vec<f64>> {
+    assert_eq!(q.len(), c.len());
+    let spec = rt.spec("rho_hat").context("rho_hat artifact missing")?;
+    let grid = spec.inputs[0][0];
+    let mut out = Vec::with_capacity(q.len());
+    for (qs, cs) in q.chunks(grid).zip(c.chunks(grid)) {
+        let mut qb = vec![0.0f32; grid]; // q=0 pads: rho=1, harmless
+        let mut cb = vec![1.0f32; grid];
+        for (dst, &src) in qb.iter_mut().zip(qs) {
+            *dst = src as f32;
+        }
+        for (dst, &src) in cb.iter_mut().zip(cs) {
+            *dst = src as f32;
+        }
+        let res = rt.execute_f32("rho_hat", &[&qb, &cb])?;
+        out.extend(res[..qs.len()].iter().map(|&x| x as f64));
+    }
+    Ok(out)
+}
+
+/// Evaluate eq (6) speedups for a sweep of operating points on the PJRT
+/// `speedup_surface` artifact.
+pub fn speedup_surface_batch(rt: &Runtime, points: &[LbspParams]) -> Result<Vec<f64>> {
+    let spec = rt.spec("speedup_surface").context("speedup_surface artifact missing")?;
+    let grid = spec.inputs[0][0];
+    let mut out = Vec::with_capacity(points.len());
+    for chunk in points.chunks(grid) {
+        // Benign pad point: n=1, c=1, p=0, k=1, w=1, alpha=0, beta=0.
+        let mut cols = vec![
+            vec![1.0f32; grid], // n
+            vec![1.0f32; grid], // c
+            vec![0.0f32; grid], // p
+            vec![1.0f32; grid], // k
+            vec![1.0f32; grid], // w
+            vec![0.0f32; grid], // alpha
+            vec![0.0f32; grid], // beta
+        ];
+        for (i, m) in chunk.iter().enumerate() {
+            cols[0][i] = m.n as f32;
+            cols[1][i] = m.c() as f32;
+            cols[2][i] = m.p as f32;
+            cols[3][i] = m.k as f32;
+            cols[4][i] = m.w as f32;
+            cols[5][i] = m.alpha as f32;
+            cols[6][i] = m.beta as f32;
+        }
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let res = rt.execute_f32("speedup_surface", &refs)?;
+        out.extend(res[..chunk.len()].iter().map(|&x| x as f64));
+    }
+    Ok(out)
+}
+
+/// One Jacobi sweep on a node-local tile via the `jacobi_step` artifact.
+/// Tile must match the AOT shape (manifest-validated).
+pub fn jacobi_step(rt: &Runtime, tile: &[f32]) -> Result<Vec<f32>> {
+    rt.execute_f32("jacobi_step", &[tile])
+}
+
+/// `C + A·B` on node-local submatrices via the `matmul_block` artifact.
+pub fn matmul_block(rt: &Runtime, c_acc: &[f32], a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+    rt.execute_f32("matmul_block", &[c_acc, a, b])
+}
+
+/// §V-B merge step: keep the low or high half of merge(mine, theirs).
+pub fn bitonic_merge(
+    rt: &Runtime,
+    mine: &[f32],
+    theirs: &[f32],
+    keep_low: bool,
+) -> Result<Vec<f32>> {
+    let flag = [if keep_low { 1.0f32 } else { 0.0f32 }];
+    rt.execute_f32("bitonic_merge", &[mine, theirs, &flag])
+}
+
+/// Node-local ascending sort, reusing the merge artifact: merging with a
+/// +∞ partner list leaves sorted(mine) in the low half.
+pub fn bitonic_local_sort(rt: &Runtime, mine: &[f32]) -> Result<Vec<f32>> {
+    let inf = vec![f32::INFINITY; mine.len()];
+    bitonic_merge(rt, mine, &inf, true)
+}
+
+/// The artifact's list length for the bitonic kernels.
+pub fn bitonic_width(rt: &Runtime) -> Result<usize> {
+    Ok(rt.spec("bitonic_merge").context("bitonic_merge missing")?.inputs[0][0])
+}
+
+/// The artifact's (rows, cols) for the Jacobi tile.
+pub fn jacobi_tile_shape(rt: &Runtime) -> Result<(usize, usize)> {
+    let s = rt.spec("jacobi_step").context("jacobi_step missing")?;
+    Ok((s.inputs[0][0], s.inputs[0][1]))
+}
+
+/// The artifact's square edge for matmul blocks.
+pub fn matmul_edge(rt: &Runtime) -> Result<usize> {
+    Ok(rt.spec("matmul_block").context("matmul_block missing")?.inputs[0][0])
+}

@@ -1,0 +1,82 @@
+//! Virtual time: integer nanoseconds.
+//!
+//! Integer time gives a total order with exact tie handling; f64 seconds
+//! are converted at the API boundary only.
+
+pub const NANOS_PER_SEC: u64 = 1_000_000_000;
+
+/// A point in virtual time (nanoseconds since simulation start).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        debug_assert!(s >= 0.0 && s.is_finite(), "bad duration {s}");
+        SimTime((s * NANOS_PER_SEC as f64).round() as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / NANOS_PER_SEC as f64
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl std::ops::Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.6}s", self.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_seconds() {
+        for s in [0.0, 1.0, 0.069, 3600.0, 1e-9] {
+            let t = SimTime::from_secs_f64(s);
+            assert!((t.as_secs_f64() - s).abs() < 1e-9, "{s}");
+        }
+    }
+
+    #[test]
+    fn ordering_is_exact() {
+        let a = SimTime(1);
+        let b = SimTime(2);
+        assert!(a < b);
+        assert_eq!(a + a, b);
+    }
+
+    #[test]
+    fn saturating_sub() {
+        assert_eq!(SimTime(5).saturating_sub(SimTime(7)), SimTime::ZERO);
+        assert_eq!(SimTime(7).saturating_sub(SimTime(5)), SimTime(2));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(format!("{}", SimTime::from_secs_f64(0.05)), "0.050000s");
+    }
+}

@@ -1,0 +1,125 @@
+//! Bench harness (criterion is not vendored).
+//!
+//! A small, honest timing core for the `cargo bench` targets: warmup,
+//! fixed iteration count, median + median-absolute-deviation reporting,
+//! and optional throughput. Benches under `rust/benches/` are
+//! `harness = false` binaries that drive this.
+
+use std::time::Instant;
+
+use super::stats::Sample;
+
+/// One timed result.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+    /// Optional work units per iteration (for ops/s reporting).
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let per_sec = self
+            .units_per_iter
+            .map(|u| format!("  ({:.3e} units/s)", u / self.median_s))
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} median {:>12} ± {:<10} min {:>12}{}",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            fmt_time(self.min_s),
+            per_sec
+        );
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; print + return.
+pub fn bench_n(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchReport {
+    bench_units(name, warmup, iters, None, move || {
+        f();
+    })
+}
+
+/// As [`bench_n`] with a units-per-iteration throughput annotation.
+pub fn bench_units(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units_per_iter: Option<f64>,
+    mut f: impl FnMut(),
+) -> BenchReport {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Sample::new();
+    let mut min_s = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        times.push(dt);
+        min_s = min_s.min(dt);
+    }
+    let report = BenchReport {
+        name: name.to_string(),
+        iters,
+        median_s: times.median(),
+        mad_s: times.mad(),
+        min_s,
+        units_per_iter,
+    };
+    report.print();
+    report
+}
+
+/// Prevent the optimizer from discarding a value (stable `black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_plausible_times() {
+        let r = bench_n("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 us");
+        assert_eq!(fmt_time(2.5e-9), "2.5 ns");
+    }
+}

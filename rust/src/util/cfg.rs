@@ -1,0 +1,218 @@
+//! Configuration files: a TOML subset (sections, key = value, comments).
+//!
+//! The launcher and examples accept `--config path.toml`; values layer as
+//! defaults < config file < CLI options. Only the subset actually needed is
+//! implemented: `[section]` headers, scalar `key = value` pairs, `#`
+//! comments, and homogeneous inline arrays `[a, b, c]` of numbers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed scalar or numeric-array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<f64>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => write!(f, "{xs:?}"),
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("config line {line}: {msg}")]
+pub struct CfgError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Section → key → value.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+fn parse_scalar(raw: &str) -> Value {
+    let raw = raw.trim();
+    if let Some(stripped) = raw.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        return Value::Str(stripped.to_string());
+    }
+    match raw {
+        "true" => return Value::Bool(true),
+        "false" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(x) = raw.parse::<f64>() {
+        return Value::Float(x);
+    }
+    Value::Str(raw.to_string())
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, CfgError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| CfgError {
+                line: lineno + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let value = value.trim();
+            let parsed = if value.starts_with('[') {
+                let inner = value
+                    .strip_prefix('[')
+                    .and_then(|v| v.strip_suffix(']'))
+                    .ok_or_else(|| CfgError {
+                        line: lineno + 1,
+                        msg: format!("unterminated array {value:?}"),
+                    })?;
+                let xs: Result<Vec<f64>, _> = inner
+                    .split(',')
+                    .filter(|p| !p.trim().is_empty())
+                    .map(|p| p.trim().parse::<f64>())
+                    .collect();
+                Value::Array(xs.map_err(|e| CfgError {
+                    line: lineno + 1,
+                    msg: format!("bad array element: {e}"),
+                })?)
+            } else {
+                parse_scalar(value)
+            };
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), parsed);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        match self.get(section, key) {
+            Some(Value::Float(x)) => *x,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        match self.get(section, key) {
+            Some(Value::Int(i)) if *i >= 0 => *i as usize,
+            _ => default,
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => s,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn array_or(&self, section: &str, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(section, key) {
+            Some(Value::Array(xs)) => xs.clone(),
+            _ => default.to_vec(),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# lossy grid config
+[network]
+loss = 0.045          # mean packet loss
+bandwidth_mbps = 17.5
+copies = 2
+bursty = false
+label = "planetlab"
+ps = [0.01, 0.05, 0.1]
+
+[workload]
+nodes = 16
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.f64_or("network", "loss", 0.0), 0.045);
+        assert_eq!(c.f64_or("network", "bandwidth_mbps", 0.0), 17.5);
+        assert_eq!(c.usize_or("network", "copies", 0), 2);
+        assert!(!c.bool_or("network", "bursty", true));
+        assert_eq!(c.str_or("network", "label", ""), "planetlab");
+        assert_eq!(c.usize_or("workload", "nodes", 0), 16);
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.array_or("network", "ps", &[]), vec![0.01, 0.05, 0.1]);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.f64_or("network", "nope", 1.25), 1.25);
+        assert_eq!(c.str_or("zzz", "nope", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn error_has_line_number() {
+        let err = Config::parse("[a]\nbroken line").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("[s]\na = 3\nb = 3.5").unwrap();
+        assert_eq!(c.get("s", "a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("s", "b"), Some(&Value::Float(3.5)));
+    }
+}

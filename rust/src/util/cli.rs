@@ -1,0 +1,145 @@
+//! Minimal command-line argument parser (clap is not vendored).
+//!
+//! Supports the subset the `lbsp` binary and examples need:
+//! `prog SUBCOMMAND [positional…] [--key value] [--flag]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key value` / `--flag`.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (program name already stripped).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a readable message on a
+    /// malformed value (CLI surface, so failing fast is the right call).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => panic!("--{name} {s}: {e}"),
+            },
+        }
+    }
+
+    /// `--key a,b,c` parsed into a vector.
+    pub fn get_list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|part| match part.trim().parse() {
+                    Ok(v) => v,
+                    Err(e) => panic!("--{name} element {part}: {e}"),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["figure", "7", "--nodes", "128", "--verbose"]);
+        assert_eq!(a.positional, vec!["figure", "7"]);
+        assert_eq!(a.get("nodes"), Some("128"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--p=0.045", "--k=2"]);
+        assert_eq!(a.get("p"), Some("0.045"));
+        assert_eq!(a.get("k"), Some("2"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "64", "--p", "0.1"]);
+        assert_eq!(a.get_parsed_or("n", 0usize), 64);
+        assert!((a.get_parsed_or("p", 0.0f64) - 0.1).abs() < 1e-12);
+        assert_eq!(a.get_parsed_or("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn list_getter() {
+        let a = parse(&["--ps", "0.01,0.05, 0.1"]);
+        let ps = a.get_list_or("ps", &[0.0f64]);
+        assert_eq!(ps, vec![0.01, 0.05, 0.1]);
+        assert_eq!(a.get_list_or("qs", &[1u32, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn malformed_value_panics() {
+        let a = parse(&["--n", "abc"]);
+        a.get_parsed_or("n", 0usize);
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree substrates.
+//!
+//! The build environment vendors only the `xla` crate and its transitive
+//! dependencies, so everything a normal project would pull from crates.io
+//! (rand, clap, serde/toml, statrs, prettytable) is implemented here as
+//! small, tested modules.
+
+pub mod bench;
+pub mod cfg;
+pub mod cli;
+pub mod prng;
+pub mod ptest;
+pub mod stats;
+pub mod tables;
+
+pub use prng::Rng;

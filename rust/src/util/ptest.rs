@@ -1,0 +1,230 @@
+//! Property-based testing harness (proptest is not vendored).
+//!
+//! A deliberately small core: composable generators over the in-tree
+//! [`Rng`](super::prng::Rng), a case runner with a fixed default case
+//! count, failure reporting that includes the seed and case index for
+//! deterministic reproduction, and greedy halving-based shrinking for
+//! numeric inputs.
+//!
+//! ```
+//! use lbsp::util::ptest::{forall, gens};
+//!
+//! forall("addition commutes", gens::pair(gens::f64_in(0.0, 1e6), gens::f64_in(0.0, 1e6)),
+//!        |&(a, b)| a + b == b + a);
+//! ```
+
+use super::prng::Rng;
+
+/// Number of cases per property (kept moderate; simulation-backed
+/// properties are not micro-assertions).
+pub const DEFAULT_CASES: usize = 128;
+
+/// A generator of values of type `T`.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    /// Produce "smaller" candidates for shrinking (may be empty).
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { gen: Box::new(gen), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'static) -> Self {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U>
+    where
+        T: 'static,
+    {
+        Gen::new(move |rng| f((self.gen)(rng)))
+    }
+}
+
+/// Run `prop` on `DEFAULT_CASES` generated cases; panic with a reproducible
+/// report (seed, case index, shrunk input) on the first failure.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    forall_cases(name, gen, DEFAULT_CASES, prop)
+}
+
+/// As [`forall`] with an explicit case count.
+pub fn forall_cases<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: Gen<T>,
+    cases: usize,
+    prop: impl Fn(&T) -> bool,
+) {
+    // Derive the master seed from the property name so distinct properties
+    // explore distinct corners but every run is deterministic.
+    let seed = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Greedy shrink: repeatedly take the first shrink candidate that
+        // still fails, up to a bounded number of rounds.
+        let mut worst = input.clone();
+        'shrinking: for _ in 0..64 {
+            for cand in (gen.shrink)(&worst) {
+                if !prop(&cand) {
+                    worst = cand;
+                    continue 'shrinking;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property {name:?} failed at case {case} (seed {seed:#x})\n\
+             original input: {input:?}\n\
+             shrunk input:   {worst:?}"
+        );
+    }
+}
+
+/// Ready-made generators.
+pub mod gens {
+    use super::Gen;
+
+    /// Uniform f64 in [lo, hi), shrinking toward lo.
+    pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+        Gen::new(move |rng| rng.range_f64(lo, hi)).with_shrink(move |&x| {
+            let mid = lo + (x - lo) / 2.0;
+            if (x - lo).abs() > 1e-12 { vec![lo, mid] } else { vec![] }
+        })
+    }
+
+    /// Uniform usize in [lo, hi), shrinking toward lo.
+    pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+        Gen::new(move |rng| rng.range(lo, hi)).with_shrink(move |&x| {
+            if x > lo { vec![lo, lo + (x - lo) / 2] } else { vec![] }
+        })
+    }
+
+    /// Power of two 2^s for s in [lo_exp, hi_exp].
+    pub fn pow2(lo_exp: u32, hi_exp: u32) -> Gen<usize> {
+        Gen::new(move |rng| 1usize << rng.range(lo_exp as usize, hi_exp as usize + 1))
+            .with_shrink(move |&x| {
+                if x > (1 << lo_exp) { vec![x / 2] } else { vec![] }
+            })
+    }
+
+    /// Pair of independent generators.
+    pub fn pair<A: Clone + 'static, B: Clone + 'static>(
+        a: Gen<A>,
+        b: Gen<B>,
+    ) -> Gen<(A, B)> {
+        let shrink_a = a.shrink;
+        let shrink_b = b.shrink;
+        let gen_a = a.gen;
+        let gen_b = b.gen;
+        Gen {
+            gen: Box::new(move |rng| ((gen_a)(rng), (gen_b)(rng))),
+            shrink: Box::new(move |(x, y)| {
+                let mut out: Vec<(A, B)> = Vec::new();
+                for xs in shrink_a(x) {
+                    out.push((xs, y.clone()));
+                }
+                for ys in shrink_b(y) {
+                    out.push((x.clone(), ys));
+                }
+                out
+            }),
+        }
+    }
+
+    /// Triple of independent generators.
+    pub fn triple<A: Clone + 'static, B: Clone + 'static, C: Clone + 'static>(
+        a: Gen<A>,
+        b: Gen<B>,
+        c: Gen<C>,
+    ) -> Gen<((A, B), C)> {
+        pair(pair(a, b), c)
+    }
+
+    /// Vector of f64 with length in [min_len, max_len).
+    pub fn vec_f64(min_len: usize, max_len: usize, lo: f64, hi: f64) -> Gen<Vec<f64>> {
+        Gen::new(move |rng| {
+            let len = rng.range(min_len, max_len);
+            (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+        })
+        .with_shrink(move |xs: &Vec<f64>| {
+            if xs.len() > min_len {
+                vec![xs[..(xs.len() / 2).max(min_len)].to_vec()]
+            } else {
+                vec![]
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_clean() {
+        forall("abs is nonneg", gens::f64_in(-100.0, 100.0), |&x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always less than 50", gens::f64_in(0.0, 100.0), |&x| x < 50.0)
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("shrunk input"), "{msg}");
+    }
+
+    #[test]
+    fn shrink_moves_toward_lo() {
+        // Property fails for x >= 10; shrinking should land near 10 or at lo.
+        let r = std::panic::catch_unwind(|| {
+            forall("below ten", gens::f64_in(0.0, 100.0), |&x| x < 10.0)
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        // The shrunk input is printed after "shrunk input:" — parse it.
+        let shrunk: f64 = msg
+            .split("shrunk input:")
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(shrunk < 25.0, "shrunk only to {shrunk}");
+        assert!(shrunk >= 10.0, "shrunk past the failure boundary: {shrunk}");
+    }
+
+    #[test]
+    fn pair_generator_shrinks_componentwise() {
+        let g = gens::pair(gens::usize_in(0, 100), gens::usize_in(0, 100));
+        let mut rng = crate::util::prng::Rng::new(0);
+        let v = g.sample(&mut rng);
+        assert!(v.0 < 100 && v.1 < 100);
+    }
+
+    #[test]
+    fn pow2_generates_powers() {
+        let g = gens::pow2(0, 17);
+        let mut rng = crate::util::prng::Rng::new(1);
+        for _ in 0..100 {
+            let x = g.sample(&mut rng);
+            assert!(x.is_power_of_two() && x <= 1 << 17);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! ASCII table and CSV emission for the figure/table regeneration harness.
+
+use std::fmt::Write as _;
+
+/// A column-aligned ASCII table with a header row.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with column alignment and a separator under the header.
+    pub fn ascii(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let emit = |out: &mut String, cells: &[String]| {
+            for (i, cell) in cells.iter().enumerate() {
+                let pad = widths[i] - cell.len();
+                let _ = write!(out, "{}{}", cell, " ".repeat(pad));
+                if i + 1 != ncols {
+                    out.push_str("  ");
+                }
+            }
+            out.push('\n');
+        };
+        emit(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            emit(&mut out, row);
+        }
+        out
+    }
+
+    /// Render as CSV (no quoting needed for our numeric content).
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+}
+
+/// Compact scientific-ish formatting for table cells: integers unchanged,
+/// small floats with sensible precision, large in scientific form.
+pub fn fmt_num(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let a = x.abs();
+    if a != 0.0 && (a >= 1e7 || a < 1e-4) {
+        format!("{x:.4e}")
+    } else if (x.fract()).abs() < 1e-9 && a < 1e7 {
+        format!("{}", x as i64)
+    } else if a >= 100.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligns_columns() {
+        let mut t = Table::new(vec!["n", "speedup"]);
+        t.row(vec!["2", "1.99"]);
+        t.row(vec!["131072", "4740.89"]);
+        let s = t.ascii();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("n"));
+        assert!(lines[1].chars().all(|c| c == '-'));
+        // column boundaries align
+        assert_eq!(lines[2].find("1.99"), lines[3].find("4740.89"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        assert_eq!(t.csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn number_formatting() {
+        assert_eq!(fmt_num(4.0), "4");
+        assert_eq!(fmt_num(4740.89), "4740.89");
+        assert_eq!(fmt_num(0.0037), "0.0037");
+        assert_eq!(fmt_num(1.5e-5), "1.5000e-5");
+        assert_eq!(fmt_num(2.0_f64.powi(34)), "1.7180e10");
+        assert_eq!(fmt_num(0.0), "0");
+    }
+}

@@ -1,0 +1,211 @@
+//! §V-C — 2D FFT, transpose method, over the lossy network.
+//!
+//! N×N complex grid, row-block distributed over P nodes (N/P rows each).
+//! Superstep 0: each node FFTs its rows and posts the all-to-all
+//! transpose fragments (`c(P) = P(P−1)` packets — the paper's count).
+//! Superstep 1: each node assembles the transposed rows from the
+//! received fragments and FFTs them. The result is the transpose of the
+//! 2D FFT, exactly as FFT-TM leaves it; `result_global` undoes the
+//! transpose for comparison against the sequential oracle.
+
+use crate::bsp::{BspProgram, Outgoing};
+use crate::net::NodeId;
+use crate::AVG_FLOPS;
+
+use super::fftcore::{fft_inplace, Cpx};
+
+/// A transpose fragment: my rows × destination's column range, already
+/// transposed into (their-row, my-column) order.
+#[derive(Clone, Debug)]
+pub struct Fragment {
+    pub src_node: usize,
+    /// (rows_per_node × rows_per_node) block, row-major in the
+    /// destination's indexing.
+    pub block: Vec<Cpx>,
+}
+
+/// Distributed 2D FFT-TM. (FFT has no AOT artifact — the compute runs on
+/// the in-tree radix-2 substrate; the *communication* is the point here.)
+pub struct Fft2dTm {
+    p: usize,
+    n: usize,
+    rows_per_node: usize,
+    /// Per node: rows_per_node × n, row-major.
+    data: Vec<Vec<Cpx>>,
+    /// Incoming fragments per node, indexed by source.
+    incoming: Vec<Vec<Option<Fragment>>>,
+}
+
+impl Fft2dTm {
+    /// `global`: N×N row-major. P must divide N.
+    pub fn from_global(global: &[Cpx], n: usize, p: usize) -> Self {
+        assert_eq!(global.len(), n * n);
+        assert!(n % p == 0, "P must divide N");
+        let rows_per_node = n / p;
+        let data = (0..p)
+            .map(|b| global[b * rows_per_node * n..(b + 1) * rows_per_node * n].to_vec())
+            .collect();
+        Fft2dTm {
+            p,
+            n,
+            rows_per_node,
+            data,
+            incoming: vec![vec![None; p]; p],
+        }
+    }
+
+    /// The 2D FFT result in global row-major order (undoing the final
+    /// transposed layout of FFT-TM).
+    pub fn result_global(&self) -> Vec<Cpx> {
+        // After phase 2, node j holds transposed rows [j·rpn, (j+1)·rpn):
+        // its row r is column (j·rpn + r) of the true result.
+        let n = self.n;
+        let rpn = self.rows_per_node;
+        let mut out = vec![Cpx::ZERO; n * n];
+        for (j, node_data) in self.data.iter().enumerate() {
+            for r in 0..rpn {
+                let col = j * rpn + r;
+                for i in 0..n {
+                    out[i * n + col] = node_data[r * n + i];
+                }
+            }
+        }
+        out
+    }
+
+    fn fft_rows(&mut self, node: usize) {
+        let n = self.n;
+        for r in 0..self.rows_per_node {
+            fft_inplace(&mut self.data[node][r * n..(r + 1) * n]);
+        }
+    }
+
+    fn fft_cost_s(&self) -> f64 {
+        // 5 N log N FLOPs per full FFT pass over the node's rows (§V-C).
+        let work = 5.0 * (self.rows_per_node * self.n) as f64 * (self.n as f64).log2();
+        work / AVG_FLOPS
+    }
+}
+
+impl BspProgram for Fft2dTm {
+    type Msg = Fragment;
+
+    fn n_nodes(&self) -> usize {
+        self.p
+    }
+
+    fn max_supersteps(&self) -> usize {
+        2
+    }
+
+    fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<Fragment>>, f64) {
+        let rpn = self.rows_per_node;
+        let n = self.n;
+        match step {
+            0 => {
+                self.fft_rows(node);
+                // Post transpose fragments: destination j gets my rows'
+                // columns [j·rpn, (j+1)·rpn), pre-transposed.
+                let mut out = Vec::new();
+                for j in 0..self.p {
+                    let mut block = vec![Cpx::ZERO; rpn * rpn];
+                    for my_r in 0..rpn {
+                        for (bc, their_r) in (j * rpn..(j + 1) * rpn).enumerate() {
+                            // their row index within node j: bc; their col
+                            // = my global row = node·rpn + my_r.
+                            block[bc * rpn + my_r] = self.data[node][my_r * n + their_r];
+                        }
+                    }
+                    let frag = Fragment { src_node: node, block };
+                    if j == node {
+                        self.incoming[node][node] = Some(frag);
+                    } else {
+                        out.push(Outgoing {
+                            dst: j,
+                            payload: frag,
+                            bytes: (rpn * rpn * 16) as u64, // 16-byte datum (§V-C)
+                        });
+                    }
+                }
+                (out, self.fft_cost_s())
+            }
+            1 => {
+                // Assemble transposed rows and FFT them.
+                for src in 0..self.p {
+                    let frag = self.incoming[node][src].take().expect("missing fragment");
+                    for r in 0..rpn {
+                        for c in 0..rpn {
+                            self.data[node][r * n + src * rpn + c] = frag.block[r * rpn + c];
+                        }
+                    }
+                }
+                self.fft_rows(node);
+                (Vec::new(), self.fft_cost_s())
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn deliver(&mut self, node: NodeId, _from: NodeId, frag: Fragment) {
+        let src = frag.src_node;
+        self.incoming[node][src] = Some(frag);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::BspRuntime;
+    use crate::net::link::Link;
+    use crate::net::topology::Topology;
+    use crate::net::transport::Network;
+    use crate::util::prng::Rng;
+    use crate::workloads::fftcore::fft2d_seq;
+
+    fn rand_grid(n: usize, seed: u64) -> Vec<Cpx> {
+        let mut rng = Rng::new(seed);
+        (0..n * n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn net(n: usize, p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.01), p), seed)
+    }
+
+    fn check(n: usize, p: usize, loss: f64, seed: u64) {
+        let grid = rand_grid(n, seed);
+        let mut prog = Fft2dTm::from_global(&grid, n, p);
+        let rep = BspRuntime::new(net(p, loss, seed + 1)).with_copies(2).run(&mut prog);
+        assert!(rep.completed);
+        let got = prog.result_global();
+        let mut want: Vec<Vec<Cpx>> =
+            (0..n).map(|i| grid[i * n..(i + 1) * n].to_vec()).collect();
+        fft2d_seq(&mut want);
+        for i in 0..n {
+            for j in 0..n {
+                let diff = got[i * n + j].sub(want[i][j]).norm();
+                assert!(diff < 1e-6 * n as f64, "({i},{j}): diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft2d_matches_sequential_lossless() {
+        check(8, 2, 0.0, 1);
+        check(16, 4, 0.0, 2);
+    }
+
+    #[test]
+    fn fft2d_matches_sequential_under_loss() {
+        check(16, 4, 0.25, 3);
+        check(32, 8, 0.15, 4);
+    }
+
+    #[test]
+    fn transpose_packet_count_is_p_p_minus_1() {
+        let (n, p) = (16, 4);
+        let grid = rand_grid(n, 9);
+        let mut prog = Fft2dTm::from_global(&grid, n, p);
+        let rep = BspRuntime::new(net(p, 0.0, 10)).run(&mut prog);
+        assert_eq!(rep.data_packets as usize, p * (p - 1)); // §V-C c(P)
+    }
+}

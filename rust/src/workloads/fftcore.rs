@@ -1,0 +1,170 @@
+//! Complex arithmetic + iterative radix-2 FFT (in-tree substrate).
+//!
+//! The 2D FFT-TM workload needs 1D FFTs per node; no FFT crate is
+//! vendored, so here is a compact iterative Cooley–Tukey with bit-reversal
+//! permutation, validated against a naive O(N²) DFT.
+
+/// Complex number, f64.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Cpx {
+        Cpx { re, im }
+    }
+
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn norm(self) -> f64 {
+        (self.re * self.re + self.im * self.im).sqrt()
+    }
+
+    /// e^{-2πi k / n} (forward-transform twiddle).
+    pub fn twiddle(k: usize, n: usize) -> Cpx {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        Cpx::new(ang.cos(), ang.sin())
+    }
+}
+
+/// In-place iterative radix-2 FFT (forward). Length must be a power of 2.
+pub fn fft_inplace(x: &mut [Cpx]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FFT length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) as usize;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            for k in 0..half {
+                let w = Cpx::twiddle(k, len);
+                let a = x[start + k];
+                let b = x[start + k + half].mul(w);
+                x[start + k] = a.add(b);
+                x[start + k + half] = a.sub(b);
+            }
+        }
+        len *= 2;
+    }
+}
+
+/// Naive O(N²) DFT — the oracle.
+pub fn dft_naive(x: &[Cpx]) -> Vec<Cpx> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Cpx::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                acc = acc.add(v.mul(Cpx::twiddle(k * j % n, n)));
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Sequential 2D FFT (rows then columns) — the workload oracle.
+pub fn fft2d_seq(data: &mut Vec<Vec<Cpx>>) {
+    let rows = data.len();
+    let cols = data[0].len();
+    for row in data.iter_mut() {
+        fft_inplace(row);
+    }
+    for j in 0..cols {
+        let mut col: Vec<Cpx> = (0..rows).map(|i| data[i][j]).collect();
+        fft_inplace(&mut col);
+        for (i, v) in col.into_iter().enumerate() {
+            data[i][j] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<Cpx> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        for &n in &[1usize, 2, 4, 8, 64, 256] {
+            let x = rand_signal(n, n as u64);
+            let mut got = x.clone();
+            fft_inplace(&mut got);
+            let want = dft_naive(&x);
+            for i in 0..n {
+                assert!(
+                    got[i].sub(want[i]).norm() < 1e-9 * (n as f64),
+                    "n={n} bin {i}: {:?} vs {:?}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut x = vec![Cpx::ZERO; 16];
+        x[0] = Cpx::new(1.0, 0.0);
+        fft_inplace(&mut x);
+        for v in &x {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_of_constant_is_impulse() {
+        let mut x = vec![Cpx::new(1.0, 0.0); 8];
+        fft_inplace(&mut x);
+        assert!((x[0].re - 8.0).abs() < 1e-12);
+        for v in &x[1..] {
+            assert!(v.norm() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let x = rand_signal(128, 5);
+        let e_time: f64 = x.iter().map(|v| v.norm() * v.norm()).sum();
+        let mut f = x.clone();
+        fft_inplace(&mut f);
+        let e_freq: f64 = f.iter().map(|v| v.norm() * v.norm()).sum::<f64>() / 128.0;
+        assert!((e_time - e_freq).abs() / e_time < 1e-10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_panics() {
+        let mut x = vec![Cpx::ZERO; 3];
+        fft_inplace(&mut x);
+    }
+}

@@ -1,0 +1,251 @@
+//! §V-D — Laplace's equation by Jacobi iteration, ghost-cell scheme.
+//!
+//! The global mesh is `(P·(H−2) + 2) × W`, split into `P` row bands of
+//! `H × W` (two ghost rows each). Per superstep every node runs one
+//! Jacobi sweep on its band — PJRT `jacobi_step` or native — then trades
+//! ghost rows with its neighbours over the lossy network:
+//! `c(P) = 2(P−1)` packets, exactly the paper's halo count.
+
+use crate::bsp::{BspProgram, Outgoing};
+use crate::net::NodeId;
+use crate::runtime::surface;
+use crate::AVG_FLOPS;
+
+use super::ComputeBackend;
+
+/// Which ghost row a halo message refills.
+#[derive(Clone, Debug)]
+pub struct Halo {
+    /// true: this is the sender's top interior row → receiver's bottom
+    /// ghost row; false: the mirror direction.
+    pub from_below: bool,
+    pub row: Vec<f32>,
+}
+
+/// Distributed Jacobi solver over row bands.
+pub struct JacobiGrid<'a> {
+    bands: Vec<Vec<f32>>, // P bands of H×W, row-major
+    h: usize,
+    w: usize,
+    supersteps: usize,
+    backend: ComputeBackend<'a>,
+}
+
+impl<'a> JacobiGrid<'a> {
+    /// Build from a global mesh of `(P·(H−2)+2) × W`; `global` row-major.
+    /// Band i owns global interior rows; ghost rows overlap neighbours.
+    pub fn from_global(
+        global: &[f32],
+        p_nodes: usize,
+        h: usize,
+        w: usize,
+        supersteps: usize,
+        backend: ComputeBackend<'a>,
+    ) -> Self {
+        let interior = h - 2;
+        let global_rows = p_nodes * interior + 2;
+        assert_eq!(global.len(), global_rows * w, "global mesh shape");
+        let mut bands = Vec::with_capacity(p_nodes);
+        for b in 0..p_nodes {
+            // Band b covers global rows [b·interior, b·interior + H).
+            let start = b * interior;
+            let band: Vec<f32> = (start..start + h)
+                .flat_map(|r| global[r * w..(r + 1) * w].iter().copied())
+                .collect();
+            bands.push(band);
+        }
+        JacobiGrid { bands, h, w, supersteps, backend }
+    }
+
+    /// Stitch the bands back into the global mesh.
+    pub fn to_global(&self) -> Vec<f32> {
+        let interior = self.h - 2;
+        let global_rows = self.bands.len() * interior + 2;
+        let mut out = vec![0.0f32; global_rows * self.w];
+        // Global top ghost row comes from band 0's row 0.
+        out[..self.w].copy_from_slice(&self.bands[0][..self.w]);
+        for (b, band) in self.bands.iter().enumerate() {
+            for r in 1..self.h - 1 {
+                let gr = b * interior + r;
+                out[gr * self.w..(gr + 1) * self.w]
+                    .copy_from_slice(&band[r * self.w..(r + 1) * self.w]);
+            }
+        }
+        // Global bottom ghost row from the last band's last row.
+        let last = self.bands.last().unwrap();
+        let gr = global_rows - 1;
+        out[gr * self.w..(gr + 1) * self.w]
+            .copy_from_slice(&last[(self.h - 1) * self.w..]);
+        out
+    }
+
+    fn sweep(&mut self, node: usize) {
+        match self.backend {
+            ComputeBackend::Native => {
+                let band = &mut self.bands[node];
+                let (h, w) = (self.h, self.w);
+                let prev = band.clone();
+                for r in 1..h - 1 {
+                    for c in 1..w - 1 {
+                        band[r * w + c] = 0.25
+                            * (prev[(r - 1) * w + c]
+                                + prev[(r + 1) * w + c]
+                                + prev[r * w + c - 1]
+                                + prev[r * w + c + 1]);
+                    }
+                }
+            }
+            ComputeBackend::Pjrt(rt) => {
+                let (th, tw) = surface::jacobi_tile_shape(rt).expect("jacobi artifact");
+                assert_eq!((th, tw), (self.h, self.w), "band must match AOT tile");
+                let out = surface::jacobi_step(rt, &self.bands[node]).expect("jacobi exec");
+                self.bands[node] = out;
+            }
+        }
+    }
+
+    /// Modeled compute seconds per sweep (paper: 2d FLOPs per point).
+    fn sweep_cost_s(&self) -> f64 {
+        let points = ((self.h - 2) * (self.w - 2)) as f64;
+        2.0 * 5.0 * points / AVG_FLOPS
+    }
+}
+
+impl BspProgram for JacobiGrid<'_> {
+    type Msg = Halo;
+
+    fn n_nodes(&self) -> usize {
+        self.bands.len()
+    }
+
+    fn max_supersteps(&self) -> usize {
+        self.supersteps
+    }
+
+    fn compute(&mut self, node: NodeId, _step: usize) -> (Vec<Outgoing<Halo>>, f64) {
+        self.sweep(node);
+        let mut out = Vec::new();
+        let w = self.w;
+        let h = self.h;
+        let bytes = (w * 4) as u64;
+        if node > 0 {
+            // Send my first interior row up: neighbour's bottom ghost.
+            let row = self.bands[node][w..2 * w].to_vec();
+            out.push(Outgoing {
+                dst: node - 1,
+                payload: Halo { from_below: true, row },
+                bytes,
+            });
+        }
+        if node + 1 < self.bands.len() {
+            // Send my last interior row down: neighbour's top ghost.
+            let row = self.bands[node][(h - 2) * w..(h - 1) * w].to_vec();
+            out.push(Outgoing {
+                dst: node + 1,
+                payload: Halo { from_below: false, row },
+                bytes,
+            });
+        }
+        (out, self.sweep_cost_s())
+    }
+
+    fn deliver(&mut self, node: NodeId, _from: NodeId, halo: Halo) {
+        let w = self.w;
+        let h = self.h;
+        if halo.from_below {
+            // From the band below: refill my bottom ghost row.
+            self.bands[node][(h - 1) * w..h * w].copy_from_slice(&halo.row);
+        } else {
+            self.bands[node][..w].copy_from_slice(&halo.row);
+        }
+    }
+}
+
+/// Sequential reference: `sweeps` Jacobi sweeps on the global mesh.
+pub fn jacobi_seq(global: &[f32], rows: usize, cols: usize, sweeps: usize) -> Vec<f32> {
+    let mut cur = global.to_vec();
+    for _ in 0..sweeps {
+        let prev = cur.clone();
+        for r in 1..rows - 1 {
+            for c in 1..cols - 1 {
+                cur[r * cols + c] = 0.25
+                    * (prev[(r - 1) * cols + c]
+                        + prev[(r + 1) * cols + c]
+                        + prev[r * cols + c - 1]
+                        + prev[r * cols + c + 1]);
+            }
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::BspRuntime;
+    use crate::net::link::Link;
+    use crate::net::topology::Topology;
+    use crate::net::transport::Network;
+    use crate::util::prng::Rng;
+
+    fn global_mesh(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * cols).map(|_| rng.f64() as f32).collect()
+    }
+
+    fn net(n: usize, p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.01), p), seed)
+    }
+
+    #[test]
+    fn distributed_matches_sequential_lossless() {
+        let (p_nodes, h, w, steps) = (4, 10, 12, 6);
+        let rows = p_nodes * (h - 2) + 2;
+        let g = global_mesh(rows, w, 1);
+        let mut prog = JacobiGrid::from_global(&g, p_nodes, h, w, steps, ComputeBackend::Native);
+        let rep = BspRuntime::new(net(p_nodes, 0.0, 2)).run(&mut prog);
+        assert!(rep.completed);
+        let got = prog.to_global();
+        let want = jacobi_seq(&g, rows, w, steps);
+        for i in 0..got.len() {
+            assert!((got[i] - want[i]).abs() < 1e-5, "i={i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn distributed_matches_sequential_under_loss() {
+        // The lossy network must not change the DATA — only the time.
+        let (p_nodes, h, w, steps) = (3, 8, 8, 5);
+        let rows = p_nodes * (h - 2) + 2;
+        let g = global_mesh(rows, w, 3);
+        let mut prog = JacobiGrid::from_global(&g, p_nodes, h, w, steps, ComputeBackend::Native);
+        let rep = BspRuntime::new(net(p_nodes, 0.3, 4)).with_copies(2).run(&mut prog);
+        assert!(rep.completed);
+        assert!(rep.total_rounds > steps as u64, "loss must cost rounds");
+        let got = prog.to_global();
+        let want = jacobi_seq(&g, rows, w, steps);
+        for i in 0..got.len() {
+            assert!((got[i] - want[i]).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn halo_packet_count_matches_paper() {
+        // c(P) = 2(P−1) data packets per superstep.
+        let (p_nodes, h, w) = (5, 6, 6);
+        let rows = p_nodes * (h - 2) + 2;
+        let g = global_mesh(rows, w, 7);
+        let mut prog = JacobiGrid::from_global(&g, p_nodes, h, w, 1, ComputeBackend::Native);
+        let rep = BspRuntime::new(net(p_nodes, 0.0, 8)).run(&mut prog);
+        assert_eq!(rep.data_packets, 2 * (p_nodes as u64 - 1));
+    }
+
+    #[test]
+    fn roundtrip_global_band_global() {
+        let (p_nodes, h, w) = (3, 6, 5);
+        let rows = p_nodes * (h - 2) + 2;
+        let g = global_mesh(rows, w, 9);
+        let prog = JacobiGrid::from_global(&g, p_nodes, h, w, 0, ComputeBackend::Native);
+        assert_eq!(prog.to_global(), g);
+    }
+}

@@ -1,0 +1,45 @@
+//! §V workloads as real BSP programs over the lossy network.
+//!
+//! Unlike `model::algorithms` (closed-form cost analyses), these move
+//! actual data: submatrices, key lists, mesh bands and FFT fragments
+//! travel through the lossy datagram network with acks/copies/timeouts,
+//! and the local compute phase runs either natively or through the AOT
+//! PJRT artifacts (`ComputeBackend`). Every workload validates its output
+//! against a sequential reference, so a reliability bug anywhere in the
+//! stack shows up as wrong *data*, not just odd counters.
+//!
+//! * [`laplace`] — ghost-cell Jacobi on row bands (§V-D), PJRT
+//!   `jacobi_step` per band sweep.
+//! * [`matmul`] — SUMMA-style blocked multiplication (§V-A), PJRT
+//!   `matmul_block` per block product.
+//! * [`sort`] — distributed bitonic mergesort (§V-B), PJRT
+//!   `bitonic_merge` per merge step.
+//! * [`fft`] — 2D FFT transpose method (§V-C) over the in-tree
+//!   [`fftcore`] radix-2 substrate; the all-to-all transpose rides the
+//!   lossy network.
+
+pub mod fft;
+pub mod fftcore;
+pub mod laplace;
+pub mod matmul;
+pub mod sort;
+
+use crate::runtime::Runtime;
+
+/// Where a workload's local compute runs.
+#[derive(Clone, Copy)]
+pub enum ComputeBackend<'a> {
+    /// Pure-rust reference compute.
+    Native,
+    /// The AOT PJRT artifacts (jacobi_step / matmul_block / bitonic_merge).
+    Pjrt(&'a Runtime),
+}
+
+impl ComputeBackend<'_> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeBackend::Native => "native",
+            ComputeBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! §V-B — distributed bitonic mergesort (compare-split on sorted lists).
+//!
+//! Each of P = 2^m nodes holds `n_local` keys. Phase 1 sorts locally;
+//! then stage S (1 ≤ S ≤ log₂P) runs S merge steps: at distance
+//! `d = 2^{j−1}` node i trades its whole list with node `i ^ d` and keeps
+//! the lower or upper half of the merged pair — the keep-min mask logic
+//! is identical to the L1 kernel's stage constants. Every step moves
+//! `c(P) = P` lists, the paper's per-step packet count.
+
+use crate::bsp::{BspProgram, Outgoing};
+use crate::net::NodeId;
+use crate::runtime::surface;
+use crate::AVG_FLOPS;
+
+use super::ComputeBackend;
+
+/// (stage, distance) schedule for P nodes.
+fn steps_for(p: usize) -> Vec<(usize, usize)> {
+    assert!(p.is_power_of_two());
+    let log_p = p.trailing_zeros() as usize;
+    let mut steps = Vec::new();
+    for stage in 1..=log_p {
+        for sub in (1..=stage).rev() {
+            steps.push((stage, 1 << (sub - 1)));
+        }
+    }
+    steps
+}
+
+/// Distributed bitonic sort over the lossy network.
+pub struct BitonicSort<'a> {
+    lists: Vec<Vec<f32>>,
+    steps: Vec<(usize, usize)>,
+    received: Vec<Option<Vec<f32>>>,
+    backend: ComputeBackend<'a>,
+}
+
+impl<'a> BitonicSort<'a> {
+    pub fn new(keys_per_node: Vec<Vec<f32>>, backend: ComputeBackend<'a>) -> Self {
+        let p = keys_per_node.len();
+        assert!(p.is_power_of_two(), "P must be a power of two");
+        let n_local = keys_per_node[0].len();
+        assert!(keys_per_node.iter().all(|l| l.len() == n_local));
+        BitonicSort {
+            steps: steps_for(p),
+            received: vec![None; p],
+            lists: keys_per_node,
+            backend,
+        }
+    }
+
+    pub fn lists(&self) -> &[Vec<f32>] {
+        &self.lists
+    }
+
+    /// All keys in global rank order (node 0's list first).
+    pub fn gathered(&self) -> Vec<f32> {
+        self.lists.iter().flatten().copied().collect()
+    }
+
+    fn local_sort(&mut self, node: usize) {
+        match self.backend {
+            ComputeBackend::Native => {
+                self.lists[node].sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            ComputeBackend::Pjrt(rt) => {
+                let w = surface::bitonic_width(rt).expect("bitonic artifact");
+                assert_eq!(w, self.lists[node].len(), "list must match AOT width");
+                self.lists[node] =
+                    surface::bitonic_local_sort(rt, &self.lists[node]).expect("local sort");
+            }
+        }
+    }
+
+    fn merge_split(&mut self, node: usize, theirs: Vec<f32>, keep_low: bool) {
+        match self.backend {
+            ComputeBackend::Native => {
+                let n = self.lists[node].len();
+                let mut all: Vec<f32> = self.lists[node].iter().chain(&theirs).copied().collect();
+                all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.lists[node] =
+                    if keep_low { all[..n].to_vec() } else { all[n..].to_vec() };
+            }
+            ComputeBackend::Pjrt(rt) => {
+                self.lists[node] =
+                    surface::bitonic_merge(rt, &self.lists[node], &theirs, keep_low)
+                        .expect("merge step");
+            }
+        }
+    }
+
+    fn local_cost_s(&self) -> f64 {
+        let n = self.lists[0].len() as f64;
+        n * n.log2().max(1.0) / AVG_FLOPS
+    }
+
+    fn merge_cost_s(&self) -> f64 {
+        (2.0 * self.lists[0].len() as f64 - 1.0) / AVG_FLOPS
+    }
+}
+
+impl BspProgram for BitonicSort<'_> {
+    type Msg = Vec<f32>;
+
+    fn n_nodes(&self) -> usize {
+        self.lists.len()
+    }
+
+    fn max_supersteps(&self) -> usize {
+        // Step 0: local sort + first exchange; then one superstep per
+        // merge step (merge of step s's data happens in superstep s+1).
+        self.steps.len() + 1
+    }
+
+    fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<Vec<f32>>>, f64) {
+        let mut cost = 0.0;
+        if step == 0 {
+            self.local_sort(node);
+            cost += self.local_cost_s();
+        } else {
+            // Merge the list received for step−1.
+            let (stage, d) = self.steps[step - 1];
+            let theirs = self.received[node].take().expect("partner list missing");
+            let descending = (node >> stage) & 1 == 1;
+            let is_lower = node & d == 0;
+            let keep_low = if descending { !is_lower } else { is_lower };
+            self.merge_split(node, theirs, keep_low);
+            cost += self.merge_cost_s();
+        }
+        // Send my (current) list to the partner for the next step.
+        let mut out = Vec::new();
+        if step < self.steps.len() {
+            let (_, d) = self.steps[step];
+            let partner = node ^ d;
+            out.push(Outgoing {
+                dst: partner,
+                payload: self.lists[node].clone(),
+                bytes: (self.lists[node].len() * 4) as u64,
+            });
+        }
+        (out, cost)
+    }
+
+    fn deliver(&mut self, node: NodeId, _from: NodeId, list: Vec<f32>) {
+        self.received[node] = Some(list);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::BspRuntime;
+    use crate::net::link::Link;
+    use crate::net::topology::Topology;
+    use crate::net::transport::Network;
+    use crate::util::prng::Rng;
+
+    fn keys(p: usize, n_local: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p)
+            .map(|_| (0..n_local).map(|_| (rng.f64() * 1000.0) as f32).collect())
+            .collect()
+    }
+
+    fn net(n: usize, p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.01), p), seed)
+    }
+
+    fn check(p: usize, n_local: usize, loss: f64, seed: u64) {
+        let input = keys(p, n_local, seed);
+        let mut want: Vec<f32> = input.iter().flatten().copied().collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prog = BitonicSort::new(input, ComputeBackend::Native);
+        let rep = BspRuntime::new(net(p, loss, seed + 1)).with_copies(2).run(&mut prog);
+        assert!(rep.completed);
+        let got = prog.gathered();
+        assert_eq!(got, want, "P={p} loss={loss}");
+    }
+
+    #[test]
+    fn sorts_globally_lossless() {
+        check(2, 16, 0.0, 100);
+        check(4, 8, 0.0, 101);
+        check(8, 4, 0.0, 102);
+        check(16, 8, 0.0, 103);
+    }
+
+    #[test]
+    fn sorts_globally_under_loss() {
+        check(4, 16, 0.2, 200);
+        check(8, 8, 0.25, 201);
+    }
+
+    #[test]
+    fn step_schedule_has_binomial_count() {
+        // log₂P(log₂P+1)/2 merge steps (§V-B).
+        for p in [2usize, 4, 8, 16, 64] {
+            let lg = p.trailing_zeros() as usize;
+            assert_eq!(steps_for(p).len(), lg * (lg + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn packets_per_step_is_p() {
+        let p = 8;
+        let mut prog = BitonicSort::new(keys(p, 4, 300), ComputeBackend::Native);
+        let rep = BspRuntime::new(net(p, 0.0, 301)).run(&mut prog);
+        // Every superstep except the last sends P lists.
+        let lg = 3;
+        let n_steps = lg * (lg + 1) / 2;
+        assert_eq!(rep.data_packets as usize, n_steps * p);
+    }
+}

@@ -1,0 +1,80 @@
+//! Coordinator integration: native and PJRT sweep backends agree, and the
+//! leader/worker queue scales without corrupting order.
+
+use std::path::Path;
+
+use lbsp::coordinator::SweepCoordinator;
+use lbsp::model::{Comm, LbspParams};
+use lbsp::runtime::Runtime;
+
+fn figure_points() -> Vec<LbspParams> {
+    let mut pts = Vec::new();
+    for s in 1..=17u32 {
+        for &p in &[0.0005f64, 0.01, 0.045, 0.1, 0.15] {
+            for comm in Comm::figure_classes() {
+                pts.push(LbspParams {
+                    n: (1u64 << s) as f64,
+                    p,
+                    k: 2,
+                    w: 4.0 * 3600.0,
+                    comm,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    pts
+}
+
+#[test]
+fn pjrt_sweep_matches_native_sweep() {
+    let rt = Runtime::load_dir(Path::new("artifacts")).expect("make artifacts");
+    let pts = figure_points();
+    let native = SweepCoordinator::native(4).speedups(&pts);
+    let pjrt = SweepCoordinator::pjrt(rt).speedups(&pts);
+    assert_eq!(native.len(), pjrt.len());
+    for i in 0..pts.len() {
+        let rel = (native[i] - pjrt[i]).abs() / native[i].max(1e-9);
+        assert!(
+            rel < 1e-2,
+            "point {i} (n={}, p={}, {}): native {} vs pjrt {}",
+            pts[i].n,
+            pts[i].p,
+            pts[i].comm.label(),
+            native[i],
+            pjrt[i]
+        );
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let pts = figure_points();
+    let w1 = SweepCoordinator::native(1).speedups(&pts);
+    let w8 = SweepCoordinator::native(8).speedups(&pts);
+    assert_eq!(w1, w8);
+}
+
+#[test]
+fn metrics_accumulate_across_sweeps() {
+    let pts = figure_points();
+    let mut c = SweepCoordinator::native(4);
+    c.speedups(&pts[..100]);
+    c.speedups(&pts[100..200]);
+    assert_eq!(c.metrics.points, 200);
+    assert!(c.metrics.elapsed_s > 0.0);
+    assert!(c.metrics.points_per_sec > 0.0);
+}
+
+#[test]
+fn rho_backends_agree() {
+    let rt = Runtime::load_dir(Path::new("artifacts")).expect("make artifacts");
+    let qs: Vec<f64> = (1..200).map(|i| i as f64 * 0.002).collect();
+    let cs: Vec<f64> = (1..200).map(|i| (i * 37) as f64).collect();
+    let native = SweepCoordinator::native(2).rhos(&qs, &cs);
+    let pjrt = SweepCoordinator::pjrt(rt).rhos(&qs, &cs);
+    for i in 0..qs.len() {
+        let rel = (native[i] - pjrt[i]).abs() / native[i];
+        assert!(rel < 2e-3, "i={i}: {} vs {}", native[i], pjrt[i]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Failure injection: the stack under hostile network conditions.
+//!
+//! Dead links, near-total loss, asymmetric loss, heavy burstiness and
+//! heterogeneous topologies — the runtime must either complete with
+//! correct data or abort explicitly (`completed = false`), never hang or
+//! silently corrupt.
+
+use lbsp::bsp::{BspProgram, BspRuntime, Outgoing};
+use lbsp::net::link::Link;
+use lbsp::net::protocol::{run_phase, PhaseConfig, RetransmitPolicy, Transfer};
+use lbsp::net::topology::{PlanetLabRanges, Topology};
+use lbsp::net::transport::Network;
+use lbsp::net::NodeId;
+use lbsp::util::prng::Rng;
+use lbsp::workloads::sort::BitonicSort;
+use lbsp::workloads::ComputeBackend;
+
+#[test]
+fn near_total_loss_completes_or_aborts_cleanly() {
+    // p = 0.95: p_s ≈ 0.0025 per round; with max_rounds = 50 most runs
+    // abort; either way the call returns and reports honestly.
+    let mut aborted = 0;
+    let mut completed = 0;
+    for seed in 0..30 {
+        let topo = Topology::uniform(2, Link::from_mbytes(100.0, 0.001), 0.95);
+        let mut net = Network::new(topo, seed);
+        let rep = run_phase(
+            &mut net,
+            &[Transfer { src: 0, dst: 1, bytes: 512 }; 4],
+            &PhaseConfig { max_rounds: 50, timeout_s: 0.05, ..Default::default() },
+        );
+        if rep.completed {
+            completed += 1;
+        } else {
+            aborted += 1;
+            assert_eq!(rep.rounds, 50);
+        }
+    }
+    assert!(aborted + completed == 30);
+    assert!(aborted > 0, "p=0.95 with 50 rounds should abort sometimes");
+}
+
+#[test]
+fn heavy_copies_rescue_terrible_links() {
+    // p = 0.7 is hopeless at k=1 within 40 rounds but fine at k=6
+    // (q = 0.7^6·(2−0.7^6) ≈ 0.22).
+    let run = |k: u32, seed: u64| {
+        let topo = Topology::uniform(2, Link::from_mbytes(100.0, 0.001), 0.7);
+        let mut net = Network::new(topo, seed);
+        run_phase(
+            &mut net,
+            &[Transfer { src: 0, dst: 1, bytes: 512 }; 16],
+            &PhaseConfig { copies: k, max_rounds: 40, timeout_s: 0.05, ..Default::default() },
+        )
+    };
+    let k1_done = (0..20).filter(|&s| run(1, s).completed).count();
+    let k6_done = (0..20).filter(|&s| run(6, s).completed).count();
+    assert_eq!(k6_done, 20, "k=6 must always complete");
+    assert!(k1_done < 20, "k=1 should abort at least once at p=0.7");
+}
+
+#[test]
+fn whole_round_policy_survives_loss_too() {
+    let topo = Topology::uniform(3, Link::from_mbytes(100.0, 0.01), 0.3);
+    let mut net = Network::new(topo, 99);
+    let transfers = vec![
+        Transfer { src: 0, dst: 1, bytes: 512 },
+        Transfer { src: 1, dst: 2, bytes: 512 },
+        Transfer { src: 2, dst: 0, bytes: 512 },
+    ];
+    let rep = run_phase(
+        &mut net,
+        &transfers,
+        &PhaseConfig { policy: RetransmitPolicy::WholeRound, ..Default::default() },
+    );
+    assert!(rep.completed);
+    // Whole-round resends everything each round.
+    assert_eq!(rep.data_packets_sent % 3, 0);
+}
+
+#[test]
+fn heterogeneous_planetlab_topology_sorts_correctly() {
+    // Per-pair loss/bandwidth/RTT all different; the sort must still be
+    // globally correct.
+    let mut rng = Rng::new(0xFA11);
+    let topo = Topology::planetlab_like(8, &PlanetLabRanges::default(), &mut rng);
+    let net = Network::new(topo, 0xFA12);
+    let keys: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..32).map(|_| (rng.f64() * 100.0) as f32).collect())
+        .collect();
+    let mut want: Vec<f32> = keys.iter().flatten().copied().collect();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut prog = BitonicSort::new(keys, ComputeBackend::Native);
+    let rep = BspRuntime::new(net).with_copies(2).run(&mut prog);
+    assert!(rep.completed);
+    assert_eq!(prog.gathered(), want);
+}
+
+#[test]
+fn bursty_channel_program_still_correct() {
+    let topo =
+        Topology::uniform_bursty(4, Link::from_mbytes(100.0, 0.01), 0.15, 12.0);
+    let net = Network::new(topo, 5);
+    let mut rng = Rng::new(6);
+    let keys: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..16).map(|_| rng.f64() as f32).collect())
+        .collect();
+    let mut want: Vec<f32> = keys.iter().flatten().copied().collect();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut prog = BitonicSort::new(keys, ComputeBackend::Native);
+    let rep = BspRuntime::new(net).with_copies(2).run(&mut prog);
+    assert!(rep.completed);
+    assert_eq!(prog.gathered(), want);
+}
+
+/// A BSP program whose phase dies mid-run: the runtime reports the abort
+/// at the right superstep and stops calling into the program.
+struct DoomedProgram {
+    computed_steps: std::cell::Cell<usize>,
+}
+
+impl BspProgram for DoomedProgram {
+    type Msg = ();
+
+    fn n_nodes(&self) -> usize {
+        2
+    }
+
+    fn max_supersteps(&self) -> usize {
+        10
+    }
+
+    fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<()>>, f64) {
+        if node == 0 {
+            self.computed_steps.set(step + 1);
+        }
+        (vec![Outgoing { dst: 1 - node, payload: (), bytes: 256 }], 0.0)
+    }
+
+    fn deliver(&mut self, _node: NodeId, _from: NodeId, _p: ()) {}
+}
+
+#[test]
+fn abort_happens_at_first_failed_superstep() {
+    let topo = Topology::uniform(2, Link::from_mbytes(100.0, 0.001), 1.0);
+    let mut rt = BspRuntime::new(Network::new(topo, 1));
+    rt.max_rounds = 3;
+    let mut prog = DoomedProgram { computed_steps: std::cell::Cell::new(0) };
+    let rep = rt.run(&mut prog);
+    assert!(!rep.completed);
+    assert_eq!(rep.supersteps, 1);
+    assert_eq!(prog.computed_steps.get(), 1, "no compute after the abort");
+}
+
+#[test]
+fn zero_byte_phases_and_empty_programs_are_fine() {
+    struct Silent;
+    impl BspProgram for Silent {
+        type Msg = ();
+        fn n_nodes(&self) -> usize {
+            3
+        }
+        fn max_supersteps(&self) -> usize {
+            4
+        }
+        fn compute(&mut self, _n: NodeId, _s: usize) -> (Vec<Outgoing<()>>, f64) {
+            (Vec::new(), 0.001)
+        }
+        fn deliver(&mut self, _n: NodeId, _f: NodeId, _p: ()) {}
+    }
+    let topo = Topology::uniform(3, Link::from_mbytes(100.0, 0.01), 0.5);
+    let rep = BspRuntime::new(Network::new(topo, 2)).run(&mut Silent);
+    assert!(rep.completed);
+    assert_eq!(rep.supersteps, 4);
+    assert_eq!(rep.data_packets, 0);
+    assert!((rep.total_time_s - 0.004).abs() < 1e-12);
+}

@@ -1,0 +1,113 @@
+//! OPTN — §II closed-form optimal node counts against full-series argmax.
+//!
+//! The paper derives `⌊e^{ln²2/4p^k}⌋` (c = log²n), `⌊1/2p^k⌋` (c = n),
+//! `⌊1/(2√(p^k))⌋` (c = n²) from the exponential approximation. Here the
+//! floors are checked against the argmax of the *exact* §II speedup over
+//! integer n, and the §IV optimal-k criteria are exercised.
+
+use lbsp::model::conceptual::{
+    optimal_n_closed_form, optimal_n_numeric, speedup,
+};
+use lbsp::model::lbsp::{optimal_k_min_krho, optimal_k_speedup};
+use lbsp::model::{Comm, LbspParams};
+
+/// The closed forms come from the e^{-2p^k c} approximation; against the
+/// exact p_s the argmax shifts slightly, so assert the speedup at the
+/// closed-form n is within 2% of the true optimum (the form's purpose is
+/// picking a good n, not the exact argmax).
+#[test]
+fn closed_form_n_is_near_optimal_linear() {
+    for &(p, k) in &[(0.01f64, 1u32), (0.05, 1), (0.02, 2)] {
+        let closed = optimal_n_closed_form(p, k, Comm::Linear).unwrap();
+        let (n_star, s_star) = optimal_n_numeric(p, k, Comm::Linear, 1 << 17);
+        let s_closed = speedup(closed, p, k, Comm::Linear);
+        assert!(
+            s_closed >= 0.98 * s_star,
+            "p={p} k={k}: closed n={closed} gives {s_closed}, optimum n={n_star} gives {s_star}"
+        );
+    }
+}
+
+#[test]
+fn closed_form_n_is_near_optimal_quadratic() {
+    for &(p, k) in &[(0.001f64, 1u32), (0.01, 1), (0.05, 2)] {
+        let closed = optimal_n_closed_form(p, k, Comm::Quadratic).unwrap();
+        let (_, s_star) = optimal_n_numeric(p, k, Comm::Quadratic, 4096);
+        let s_closed = speedup(closed.max(1.0), p, k, Comm::Quadratic);
+        assert!(
+            s_closed >= 0.95 * s_star,
+            "p={p} k={k}: closed n={closed} gives {s_closed} vs optimum {s_star}"
+        );
+    }
+}
+
+#[test]
+fn closed_form_n_is_near_optimal_logsq() {
+    for &(p, k) in &[(0.05f64, 1u32), (0.1, 1)] {
+        let closed = optimal_n_closed_form(p, k, Comm::LogSq).unwrap();
+        let (_, s_star) = optimal_n_numeric(p, k, Comm::LogSq, 1 << 20);
+        let s_closed = speedup(closed, p, k, Comm::LogSq);
+        assert!(
+            s_closed >= 0.98 * s_star,
+            "p={p} k={k}: closed n={closed} gives {s_closed} vs optimum {s_star}"
+        );
+    }
+}
+
+#[test]
+fn monotone_classes_have_no_closed_form() {
+    assert!(optimal_n_closed_form(0.1, 1, Comm::One).is_none());
+    assert!(optimal_n_closed_form(0.1, 1, Comm::Log).is_none());
+    assert!(optimal_n_closed_form(0.1, 1, Comm::NLogN).is_none());
+}
+
+#[test]
+fn nlogn_optimum_exists_numerically() {
+    // §II: "no analytical solution exists but a numerical solution can be
+    // found" for c(n) = n log2 n.
+    let (n_star, s_star) = optimal_n_numeric(0.01, 1, Comm::NLogN, 1 << 17);
+    assert!(n_star > 1 && n_star < 1 << 17);
+    assert!(s_star > speedup(1.0, 0.01, 1, Comm::NLogN));
+}
+
+#[test]
+fn optimal_n_grows_with_copies() {
+    // More copies suppress the loss term, so larger grids become optimal.
+    let n1 = optimal_n_closed_form(0.05, 1, Comm::Linear).unwrap();
+    let n2 = optimal_n_closed_form(0.05, 2, Comm::Linear).unwrap();
+    let n3 = optimal_n_closed_form(0.05, 3, Comm::Linear).unwrap();
+    assert!(n1 < n2 && n2 < n3, "{n1} {n2} {n3}");
+}
+
+#[test]
+fn table2_style_optimal_k_matches_min_krho_direction() {
+    // The two §IV criteria (min k·ρ̂^k and argmax S_E) need not agree
+    // exactly, but both must move up under heavier loss.
+    let base = LbspParams {
+        w: 10.0 * 3600.0,
+        n: 4096.0,
+        comm: Comm::Quadratic,
+        ..Default::default()
+    };
+    let (k_mk_lossy, _) = optimal_k_min_krho(0.15, base.c(), 12);
+    let (k_mk_clean, _) = optimal_k_min_krho(0.0005, base.c(), 12);
+    assert!(k_mk_lossy >= k_mk_clean);
+
+    let (k_s_lossy, _) = optimal_k_speedup(&LbspParams { p: 0.15, ..base }, 12);
+    let (k_s_clean, _) = optimal_k_speedup(&LbspParams { p: 0.0005, ..base }, 12);
+    assert!(k_s_lossy >= k_s_clean);
+}
+
+#[test]
+fn paper_table2_k_values_are_reasonable_under_min_krho() {
+    // Table II uses k=7 (matmul, c≈2(P^1.5−P), p=0.045) and k=3 (fft,
+    // c=P(P−1), p=0.0005). The min k·ρ̂^k criterion should land within
+    // ±2 of the paper's picks for those operating points.
+    let c_mm = 2.0 * ((65536.0f64).powf(1.5) - 65536.0);
+    let (k_mm, _) = optimal_k_min_krho(0.045, c_mm, 12);
+    assert!((3..=9).contains(&k_mm), "matmul k* = {k_mm}");
+
+    let p15 = 32768.0f64;
+    let (k_fft, _) = optimal_k_min_krho(0.0005, p15 * (p15 - 1.0), 12);
+    assert!((1..=5).contains(&k_fft), "fft k* = {k_fft}");
+}

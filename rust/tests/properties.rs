@@ -1,0 +1,221 @@
+//! Property-based suite over the whole model surface (in-tree ptest).
+//!
+//! Each property encodes a theorem the paper states or implies; the
+//! generators sweep the full operating envelope (p up to 0.5, n up to
+//! 2^17, every c(n) class, k up to 12).
+
+use lbsp::model::conceptual;
+use lbsp::model::rho::{rho_selective, rho_whole_round, round_failure_q};
+use lbsp::model::{Comm, LbspParams};
+use lbsp::util::ptest::{forall_cases, gens};
+
+fn classes() -> [Comm; 6] {
+    Comm::figure_classes()
+}
+
+#[test]
+fn prop_rho_at_least_one() {
+    forall_cases(
+        "rho >= 1 always",
+        gens::pair(gens::f64_in(0.0, 0.999), gens::f64_in(1.0, 1e9)),
+        256,
+        |&(q, c)| rho_selective(q, c) >= 1.0,
+    );
+}
+
+#[test]
+fn prop_selective_never_exceeds_whole_round() {
+    forall_cases(
+        "eq3 <= eq1",
+        gens::pair(gens::f64_in(0.0, 0.6), gens::f64_in(1.0, 1e4)),
+        256,
+        |&(q, c)| {
+            let sel = rho_selective(q, c);
+            let whole = rho_whole_round(q, c);
+            sel <= whole * (1.0 + 1e-12) || whole.is_infinite()
+        },
+    );
+}
+
+#[test]
+fn prop_rho_monotone_in_q() {
+    forall_cases(
+        "rho monotone in loss",
+        gens::pair(gens::f64_in(0.001, 0.4), gens::f64_in(1.0, 1e6)),
+        256,
+        |&(q, c)| rho_selective(q, c) <= rho_selective((q * 1.25).min(0.999), c) + 1e-9,
+    );
+}
+
+#[test]
+fn prop_rho_monotone_in_c() {
+    forall_cases(
+        "rho monotone in packet count",
+        gens::pair(gens::f64_in(0.001, 0.6), gens::f64_in(1.0, 1e6)),
+        256,
+        |&(q, c)| rho_selective(q, c) <= rho_selective(q, c * 2.0) + 1e-9,
+    );
+}
+
+#[test]
+fn prop_q_is_a_probability() {
+    forall_cases(
+        "q in [0,1] for all (p,k)",
+        gens::pair(gens::f64_in(0.0, 1.0), gens::usize_in(1, 13)),
+        256,
+        |&(p, k)| {
+            let q = round_failure_q(p, k as u32);
+            (0.0..=1.0).contains(&q)
+        },
+    );
+}
+
+#[test]
+fn prop_copies_reduce_q() {
+    forall_cases(
+        "more copies, lower failure",
+        gens::pair(gens::f64_in(0.0001, 0.9), gens::usize_in(1, 12)),
+        256,
+        |&(p, k)| {
+            round_failure_q(p, (k + 1) as u32) <= round_failure_q(p, k as u32) + 1e-15
+        },
+    );
+}
+
+#[test]
+fn prop_lbsp_speedup_in_bounds_all_classes() {
+    for comm in classes() {
+        forall_cases(
+            &format!("0 <= S <= n for {}", comm.label()),
+            gens::triple(
+                gens::f64_in(0.0, 0.5),
+                gens::pow2(0, 17),
+                gens::usize_in(1, 13),
+            ),
+            128,
+            |&((p, n), k)| {
+                let m = LbspParams {
+                    p,
+                    n: n as f64,
+                    k: k as u32,
+                    comm,
+                    ..Default::default()
+                };
+                let s = m.speedup();
+                (0.0..=n as f64 + 1e-9).contains(&s)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_more_work_never_hurts() {
+    forall_cases(
+        "S monotone in w",
+        gens::triple(gens::f64_in(0.001, 0.3), gens::pow2(1, 17), gens::f64_in(0.1, 500.0)),
+        128,
+        |&((p, n), w_hours)| {
+            let base = LbspParams {
+                p,
+                n: n as f64,
+                w: w_hours * 3600.0,
+                comm: Comm::NLogN,
+                ..Default::default()
+            };
+            let bigger = LbspParams { w: base.w * 2.0, ..base };
+            bigger.speedup() >= base.speedup() - 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_granularity_dominance() {
+    // G >> rho  =>  S within 10% of n (the paper's linearity claim).
+    forall_cases(
+        "high granularity implies near-linear speedup",
+        gens::pair(gens::f64_in(0.0005, 0.15), gens::pow2(1, 8)),
+        128,
+        |&(p, n)| {
+            let m = LbspParams {
+                p,
+                n: n as f64,
+                w: 1.0e7, // enormous work
+                comm: Comm::Linear,
+                ..Default::default()
+            };
+            let rho = m.rho();
+            let g = m.granularity();
+            g < 100.0 * rho || m.speedup() > 0.9 * n as f64
+        },
+    );
+}
+
+#[test]
+fn prop_conceptual_speedup_decreasing_in_p() {
+    for comm in classes() {
+        forall_cases(
+            &format!("conceptual S decreasing in p for {}", comm.label()),
+            gens::pair(gens::f64_in(0.001, 0.25), gens::pow2(1, 17)),
+            128,
+            |&(p, n)| {
+                conceptual::speedup(n as f64, p * 1.5, 2, comm)
+                    <= conceptual::speedup(n as f64, p, 2, comm) + 1e-12
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_closed_form_optima_positive_never_nan() {
+    // n* = e^{ln²2/4p^k} legitimately overflows to +inf for tiny p^k
+    // (the optimum lies beyond any feasible grid); it must never be NaN
+    // or below 1 node.
+    forall_cases(
+        "closed-form n* sane",
+        gens::pair(gens::f64_in(0.001, 0.5), gens::usize_in(1, 8)),
+        256,
+        |&(p, k)| {
+            [Comm::LogSq, Comm::Linear, Comm::Quadratic].iter().all(|&c| {
+                match conceptual::optimal_n_closed_form(p, k as u32, c) {
+                    Some(n) => !n.is_nan() && n >= 0.0,
+                    None => false,
+                }
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_denominator_terms_nonnegative() {
+    for comm in classes() {
+        forall_cases(
+            &format!("A,B >= 0 for {}", comm.label()),
+            gens::pair(gens::f64_in(0.0, 0.3), gens::pow2(1, 17)),
+            64,
+            |&(p, n)| {
+                let m = LbspParams { p, n: n as f64, comm, ..Default::default() };
+                let (a, b) = m.denominator_terms();
+                a >= 0.0 && b >= 0.0
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_efficiency_at_most_one() {
+    forall_cases(
+        "efficiency <= 1",
+        gens::triple(gens::f64_in(0.0, 0.3), gens::pow2(0, 17), gens::f64_in(0.1, 1000.0)),
+        128,
+        |&((p, n), wh)| {
+            let m = LbspParams {
+                p,
+                n: n as f64,
+                w: wh * 3600.0,
+                comm: Comm::Log,
+                ..Default::default()
+            };
+            m.efficiency() <= 1.0 + 1e-9
+        },
+    );
+}

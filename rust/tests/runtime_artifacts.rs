@@ -1,0 +1,172 @@
+//! Integration: load the AOT artifacts through PJRT and check numerics
+//! against the native float64 implementations (kernel-vs-oracle at the
+//! rust/python boundary).
+//!
+//! Requires `make artifacts` to have run (the Makefile test target
+//! guarantees this).
+
+use std::path::Path;
+
+use lbsp::model::rho::{rho_selective, round_failure_q};
+use lbsp::model::{Comm, LbspParams};
+use lbsp::runtime::{surface, Runtime};
+
+fn runtime() -> Runtime {
+    // Tests run from the crate root; artifacts/ lives beside Cargo.toml.
+    Runtime::load_dir(Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+#[test]
+fn loads_all_five_artifacts() {
+    let rt = runtime();
+    let mut names = rt.artifact_names();
+    names.sort();
+    assert_eq!(
+        names,
+        vec!["bitonic_merge", "jacobi_step", "matmul_block", "rho_hat", "speedup_surface"]
+    );
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+}
+
+#[test]
+fn rho_hat_artifact_matches_native_series() {
+    let rt = runtime();
+    let mut qs = Vec::new();
+    let mut cs = Vec::new();
+    for &p in &[0.0005f64, 0.01, 0.045, 0.1, 0.15, 0.3] {
+        for &k in &[1u32, 2, 3, 7] {
+            for &c in &[1.0f64, 64.0, 4096.0, 1048576.0] {
+                qs.push(round_failure_q(p, k));
+                cs.push(c);
+            }
+        }
+    }
+    let got = surface::rho_hat_batch(&rt, &qs, &cs).unwrap();
+    for i in 0..qs.len() {
+        let want = rho_selective(qs[i], cs[i]);
+        let rel = (got[i] - want).abs() / want;
+        assert!(rel < 2e-3, "q={} c={}: pjrt {} vs native {}", qs[i], cs[i], got[i], want);
+    }
+}
+
+#[test]
+fn rho_hat_batching_pads_partial_chunks() {
+    let rt = runtime();
+    // 3 points — far below the 8192 grid — and 8193 points (two chunks).
+    let q3 = vec![0.1, 0.2, 0.3];
+    let c3 = vec![10.0, 20.0, 30.0];
+    let got = surface::rho_hat_batch(&rt, &q3, &c3).unwrap();
+    assert_eq!(got.len(), 3);
+    let n = 8193;
+    let qn: Vec<f64> = (0..n).map(|i| 0.05 + 0.2 * (i as f64 / n as f64)).collect();
+    let cn: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+    let got = surface::rho_hat_batch(&rt, &qn, &cn).unwrap();
+    assert_eq!(got.len(), n);
+    // Spot-check the chunk boundary region.
+    for &i in &[0usize, 8191, 8192] {
+        let want = rho_selective(qn[i], cn[i]);
+        assert!((got[i] - want).abs() / want < 2e-3, "i={i}");
+    }
+}
+
+#[test]
+fn speedup_surface_artifact_matches_native_eq6() {
+    let rt = runtime();
+    let mut points = Vec::new();
+    for s in 1..=17u32 {
+        for &p in &[0.0005f64, 0.045, 0.15] {
+            for &k in &[1u32, 2, 7] {
+                points.push(LbspParams {
+                    n: (1u64 << s) as f64,
+                    p,
+                    k,
+                    w: 4.0 * 3600.0,
+                    comm: Comm::NLogN,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    let got = surface::speedup_surface_batch(&rt, &points).unwrap();
+    for (m, g) in points.iter().zip(&got) {
+        let want = m.speedup();
+        let rel = (g - want).abs() / want.max(1e-9);
+        assert!(
+            rel < 5e-3,
+            "n={} p={} k={}: pjrt {g} vs native {want}",
+            m.n,
+            m.p,
+            m.k
+        );
+    }
+}
+
+#[test]
+fn jacobi_artifact_fixes_harmonic_functions() {
+    let rt = runtime();
+    let (h, w) = surface::jacobi_tile_shape(&rt).unwrap();
+    let tile: Vec<f32> = (0..h * w).map(|i| ((i / w) + (i % w)) as f32).collect();
+    let out = surface::jacobi_step(&rt, &tile).unwrap();
+    for i in 0..h * w {
+        assert!((out[i] - tile[i]).abs() < 1e-3, "i={i}: {} vs {}", out[i], tile[i]);
+    }
+}
+
+#[test]
+fn jacobi_artifact_averages_interior() {
+    let rt = runtime();
+    let (h, w) = surface::jacobi_tile_shape(&rt).unwrap();
+    // Delta function in the middle spreads to its 4 neighbours.
+    let mut tile = vec![0.0f32; h * w];
+    let (ci, cj) = (h / 2, w / 2);
+    tile[ci * w + cj] = 4.0;
+    let out = surface::jacobi_step(&rt, &tile).unwrap();
+    assert_eq!(out[ci * w + cj], 0.0);
+    assert_eq!(out[(ci - 1) * w + cj], 1.0);
+    assert_eq!(out[(ci + 1) * w + cj], 1.0);
+    assert_eq!(out[ci * w + cj - 1], 1.0);
+    assert_eq!(out[ci * w + cj + 1], 1.0);
+}
+
+#[test]
+fn matmul_artifact_accumulates() {
+    let rt = runtime();
+    let e = surface::matmul_edge(&rt).unwrap();
+    // A = I, B = pattern, C0 = ones: out = ones + B.
+    let mut a = vec![0.0f32; e * e];
+    for i in 0..e {
+        a[i * e + i] = 1.0;
+    }
+    let b: Vec<f32> = (0..e * e).map(|i| (i % 7) as f32).collect();
+    let c0 = vec![1.0f32; e * e];
+    let out = surface::matmul_block(&rt, &c0, &a, &b).unwrap();
+    for i in 0..e * e {
+        assert!(
+            (out[i] - (1.0 + b[i])).abs() < 1e-3,
+            "i={i}: {} vs {}",
+            out[i],
+            1.0 + b[i]
+        );
+    }
+}
+
+#[test]
+fn bitonic_artifact_sorts() {
+    let rt = runtime();
+    let n = surface::bitonic_width(&rt).unwrap();
+    let mut rng = lbsp::util::Rng::new(0xB170);
+    let mine: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 100.0 - 50.0).collect();
+    let theirs: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 100.0 - 50.0).collect();
+
+    let low = surface::bitonic_merge(&rt, &mine, &theirs, true).unwrap();
+    let high = surface::bitonic_merge(&rt, &mine, &theirs, false).unwrap();
+    let mut all: Vec<f32> = mine.iter().chain(&theirs).copied().collect();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(&low[..], &all[..n]);
+    assert_eq!(&high[..], &all[n..]);
+
+    let sorted = surface::bitonic_local_sort(&rt, &mine).unwrap();
+    let mut want = mine.clone();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(sorted, want);
+}

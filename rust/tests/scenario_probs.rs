@@ -1,0 +1,98 @@
+//! FIG4 — the three packet-loss scenarios and their probabilities.
+//!
+//! Fig 4 of the paper: (i) data + ack both delivered, probability
+//! `(1−p)²`; (ii) data delivered, ack lost, `(1−p)p`; (iii) data lost,
+//! `p`. Verified by Monte Carlo over the packet-level DES.
+
+use lbsp::net::link::Link;
+use lbsp::net::packet::{Packet, PacketKind};
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::{NetEvent, Network};
+
+/// One data/ack exchange; returns (data_delivered, ack_delivered).
+fn one_exchange(p: f64, seed: u64) -> (bool, bool) {
+    let mut net = Network::new(
+        Topology::uniform(2, Link::from_mbytes(50.0, 0.05), p),
+        seed,
+    );
+    net.send(Packet::data(0, 1, 0, 0, 4096));
+    let mut data_ok = false;
+    let mut ack_ok = false;
+    while let Some((_, ev)) = net.step() {
+        if let NetEvent::Deliver(pkt) = ev {
+            match pkt.kind {
+                PacketKind::Data => {
+                    data_ok = true;
+                    net.send(Packet::ack(1, 0, 0, 0));
+                }
+                PacketKind::Ack => ack_ok = true,
+            }
+        }
+    }
+    (data_ok, ack_ok)
+}
+
+#[test]
+fn fig4_scenario_probabilities() {
+    let p = 0.2;
+    let trials = 60_000u64;
+    let mut scenario_success = 0u64; // (i)
+    let mut scenario_ack_lost = 0u64; // (ii)
+    let mut scenario_data_lost = 0u64; // (iii)
+    for seed in 0..trials {
+        match one_exchange(p, seed) {
+            (true, true) => scenario_success += 1,
+            (true, false) => scenario_ack_lost += 1,
+            (false, _) => scenario_data_lost += 1,
+        }
+    }
+    let f = |x: u64| x as f64 / trials as f64;
+    let tol = 0.01;
+    assert!(
+        (f(scenario_success) - (1.0 - p) * (1.0 - p)).abs() < tol,
+        "(i) {} vs {}",
+        f(scenario_success),
+        (1.0 - p) * (1.0 - p)
+    );
+    assert!(
+        (f(scenario_ack_lost) - (1.0 - p) * p).abs() < tol,
+        "(ii) {} vs {}",
+        f(scenario_ack_lost),
+        (1.0 - p) * p
+    );
+    assert!(
+        (f(scenario_data_lost) - p).abs() < tol,
+        "(iii) {} vs {p}",
+        f(scenario_data_lost)
+    );
+}
+
+#[test]
+fn scenarios_partition_probability_space() {
+    let p = 0.35;
+    let trials = 20_000u64;
+    let mut counts = [0u64; 3];
+    for seed in 0..trials {
+        match one_exchange(p, 10_000_000 + seed) {
+            (true, true) => counts[0] += 1,
+            (true, false) => counts[1] += 1,
+            (false, _) => counts[2] += 1,
+        }
+    }
+    assert_eq!(counts.iter().sum::<u64>(), trials);
+}
+
+#[test]
+fn lossless_always_scenario_one() {
+    for seed in 0..200 {
+        assert_eq!(one_exchange(0.0, seed), (true, true));
+    }
+}
+
+#[test]
+fn dead_link_always_scenario_three() {
+    for seed in 0..200 {
+        let (data_ok, _) = one_exchange(1.0, seed);
+        assert!(!data_ok);
+    }
+}

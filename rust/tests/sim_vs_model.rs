@@ -1,0 +1,221 @@
+//! SIMVAL — Monte-Carlo simulation vs the analytic model.
+//!
+//! Pins together the three layers of retransmission machinery:
+//! 1. the analytic series (eq 1 whole-round, eq 3 selective),
+//! 2. the slotted round simulator (`net::rounds`, the paper's abstraction),
+//! 3. the packet-level DES (`net::protocol`).
+//!
+//! and the L-BSP speedup accounting (slotted program vs eq 4/6).
+
+use lbsp::model::rho::{
+    rho_selective, rho_selective_pk, rho_whole_round_pk, round_failure_q, round_success,
+};
+use lbsp::model::{Comm, LbspParams};
+use lbsp::net::link::Link;
+use lbsp::net::protocol::{run_phase, PhaseConfig, RetransmitPolicy, Transfer};
+use lbsp::net::rounds::{estimate_rho, run_slotted_program};
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::util::prng::Rng;
+use lbsp::util::stats::Online;
+
+#[test]
+fn slotted_selective_matches_eq3_grid() {
+    for &(p, k, c) in &[
+        (0.045f64, 1u32, 16u64),
+        (0.045, 2, 256),
+        (0.1, 1, 64),
+        (0.15, 1, 1024),
+        (0.15, 3, 1024),
+        (0.3, 2, 128),
+    ] {
+        let mc = estimate_rho(p, k, c, RetransmitPolicy::Selective, 40_000, 11 + c);
+        let analytic = rho_selective_pk(p, k, c as f64);
+        let rel = (mc - analytic).abs() / analytic;
+        assert!(rel < 0.02, "p={p} k={k} c={c}: MC {mc} vs eq3 {analytic}");
+    }
+}
+
+#[test]
+fn slotted_whole_round_matches_eq1_grid() {
+    for &(p, k, c) in &[(0.02f64, 1u32, 8u64), (0.05, 1, 16), (0.05, 2, 64), (0.1, 2, 32)] {
+        let mc = estimate_rho(p, k, c, RetransmitPolicy::WholeRound, 60_000, 77 + c);
+        let analytic = rho_whole_round_pk(p, k, c as f64);
+        let rel = (mc - analytic).abs() / analytic;
+        assert!(rel < 0.05, "p={p} k={k} c={c}: MC {mc} vs eq1 {analytic}");
+    }
+}
+
+/// The packet-level DES reduces to the slotted process: mean rounds match
+/// the eq (3) expectation.
+#[test]
+fn des_protocol_rounds_match_eq3() {
+    let p = 0.12;
+    let c = 24usize;
+    let k = 1;
+    let mut rounds = Online::new();
+    for seed in 0..500 {
+        let topo = Topology::uniform(2, Link::from_mbytes(100.0, 0.01), p);
+        let mut net = Network::new(topo, 4000 + seed);
+        let transfers = vec![Transfer { src: 0, dst: 1, bytes: 1024 }; c];
+        let rep = run_phase(
+            &mut net,
+            &transfers,
+            &PhaseConfig { copies: k, timeout_s: 0.2, ..Default::default() },
+        );
+        assert!(rep.completed);
+        rounds.push(rep.rounds as f64);
+    }
+    let analytic = rho_selective_pk(p, k, c as f64);
+    let diff = (rounds.mean() - analytic).abs();
+    assert!(
+        diff < 4.0 * rounds.sem().max(0.02),
+        "DES mean {} vs eq3 {analytic} (sem {})",
+        rounds.mean(),
+        rounds.sem()
+    );
+}
+
+/// DES with k copies matches eq (3) with p_s^k = (1−p^k)².
+#[test]
+fn des_protocol_with_copies_matches_eq3() {
+    let p = 0.25;
+    let c = 12usize;
+    let k = 3;
+    let mut rounds = Online::new();
+    for seed in 0..400 {
+        let topo = Topology::uniform(2, Link::from_mbytes(100.0, 0.01), p);
+        let mut net = Network::new(topo, 9000 + seed);
+        let transfers = vec![Transfer { src: 0, dst: 1, bytes: 1024 }; c];
+        let rep = run_phase(
+            &mut net,
+            &transfers,
+            &PhaseConfig { copies: k, timeout_s: 0.2, ..Default::default() },
+        );
+        rounds.push(rep.rounds as f64);
+    }
+    let analytic = rho_selective_pk(p, k, c as f64);
+    let diff = (rounds.mean() - analytic).abs();
+    assert!(
+        diff < 4.0 * rounds.sem().max(0.02),
+        "DES k=3 mean {} vs eq3 {analytic}",
+        rounds.mean()
+    );
+}
+
+/// Slotted L-BSP program total time matches the eq (4)/(6) expectation.
+/// NB: the paper's `w` in eq (6) is the *per-superstep* work — `T(1) =
+/// w·r` and the speedup is independent of r — so the simulated program's
+/// total work is `w·r`.
+#[test]
+fn slotted_program_time_matches_lbsp_speedup() {
+    let m = LbspParams {
+        w: 36.0, // seconds of work per superstep
+        n: 64.0,
+        p: 0.1,
+        k: 1,
+        comm: Comm::Linear,
+        ..Default::default()
+    };
+    let c = m.c() as u64;
+    let tau = m.tau_k();
+    let r = 200u64; // supersteps
+    let mut rng = Rng::new(0xF00D);
+    let mut total = Online::new();
+    for _ in 0..60 {
+        let run = run_slotted_program(
+            m.w * r as f64,
+            r,
+            m.n as u64,
+            c,
+            m.p,
+            m.k,
+            tau,
+            RetransmitPolicy::Selective,
+            &mut rng,
+        );
+        total.push(run.total_time_s);
+    }
+    // Expectation: T = r(w/n + rho·2τ).
+    let rho = m.rho();
+    let want = r as f64 * (m.w / m.n + rho * 2.0 * tau);
+    let rel = (total.mean() - want).abs() / want;
+    assert!(rel < 0.02, "sim {} vs model {want}", total.mean());
+    // And the implied speedup matches eq (6): S = w·r / T.
+    let sim_speedup = m.w * r as f64 / total.mean();
+    let rel = (sim_speedup - m.speedup()).abs() / m.speedup();
+    assert!(rel < 0.02, "sim speedup {sim_speedup} vs eq6 {}", m.speedup());
+}
+
+/// Burstiness ablation: Gilbert–Elliott loss with the same mean is
+/// *better* for whole-phase completion than iid loss: the phase ends when
+/// the LAST packet gets through (max of per-packet attempt counts), and
+/// positively correlated losses concentrate failures in the same rounds,
+/// shrinking the expected maximum. The paper assumes independence — this
+/// quantifies the direction of that modeling error (EXPERIMENTS.md §SIMVAL).
+#[test]
+fn gilbert_elliott_burstiness_changes_rho() {
+    let p = 0.1;
+    let c = 64usize;
+    let mean_rounds = |bursty: bool| {
+        let mut rounds = Online::new();
+        for seed in 0..400 {
+            let link = Link::from_mbytes(100.0, 0.01);
+            let topo = if bursty {
+                Topology::uniform_bursty(2, link, p, 16.0)
+            } else {
+                Topology::uniform(2, link, p)
+            };
+            let mut net = Network::new(topo, 31_000 + seed);
+            let transfers = vec![Transfer { src: 0, dst: 1, bytes: 1024 }; c];
+            let rep = run_phase(
+                &mut net,
+                &transfers,
+                &PhaseConfig { timeout_s: 0.2, max_rounds: 100_000, ..Default::default() },
+            );
+            rounds.push(rep.rounds as f64);
+        }
+        rounds.mean()
+    };
+    let iid = mean_rounds(false);
+    let bursty = mean_rounds(true);
+    let analytic = rho_selective_pk(p, 1, c as f64);
+    // iid tracks the analytic value; correlated loss completes in fewer
+    // rounds, i.e. eq (3) is *conservative* under burstiness.
+    assert!((iid - analytic).abs() / analytic < 0.1, "iid {iid} vs {analytic}");
+    assert!(bursty < iid, "bursty {bursty} vs iid {iid}");
+}
+
+/// Sanity: q and p_s^k agree between model and simulator helper.
+#[test]
+fn per_round_probabilities_consistent() {
+    for &(p, k) in &[(0.045f64, 1u32), (0.1, 2), (0.3, 7)] {
+        let q = round_failure_q(p, k);
+        let ps = round_success(p, k);
+        assert!((q + ps - 1.0).abs() < 1e-15);
+        let sim_ps = lbsp::net::rounds::per_round_success(p, k);
+        assert!((sim_ps - ps).abs() < 1e-15);
+    }
+}
+
+/// rho_selective is the expectation of max of c geometrics — cross-check
+/// by direct simulation without any protocol machinery at all.
+#[test]
+fn eq3_is_expected_max_of_geometrics() {
+    let q = 0.2;
+    let ps = 1.0 - q;
+    let c = 32;
+    let mut rng = Rng::new(0xABCD);
+    let trials = 120_000;
+    let mut sum = 0u64;
+    for _ in 0..trials {
+        let mut worst = 0;
+        for _ in 0..c {
+            worst = worst.max(rng.geometric(ps));
+        }
+        sum += worst;
+    }
+    let mc = sum as f64 / trials as f64;
+    let analytic = rho_selective(q, c as f64);
+    assert!((mc - analytic).abs() / analytic < 0.01, "{mc} vs {analytic}");
+}

@@ -1,0 +1,135 @@
+//! E2E — full-stack workload runs: real data, lossy network, PJRT compute.
+//!
+//! Every layer composes here: AOT artifacts (L1/L2) loaded through PJRT,
+//! the rust BSP runtime + lossy datagram protocol (L3), and sequential
+//! oracles confirming the *data* is right. Requires `make artifacts`.
+
+use std::path::Path;
+
+use lbsp::bsp::BspRuntime;
+use lbsp::net::link::Link;
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::runtime::Runtime;
+use lbsp::util::prng::Rng;
+use lbsp::workloads::laplace::{jacobi_seq, JacobiGrid};
+use lbsp::workloads::matmul::{matmul_seq, SummaMatmul};
+use lbsp::workloads::sort::BitonicSort;
+use lbsp::workloads::ComputeBackend;
+
+fn runtime() -> Runtime {
+    Runtime::load_dir(Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+fn net(n: usize, p: f64, seed: u64) -> Network {
+    Network::new(Topology::uniform(n, Link::from_mbytes(50.0, 0.05), p), seed)
+}
+
+#[test]
+fn laplace_pjrt_over_lossy_grid_matches_sequential() {
+    let rt = runtime();
+    let (p_nodes, h, w, steps) = (3, 128, 128, 4);
+    let rows = p_nodes * (h - 2) + 2;
+    let mut rng = Rng::new(0xE2E1);
+    let g: Vec<f32> = (0..rows * w).map(|_| rng.f64() as f32).collect();
+
+    let mut prog =
+        JacobiGrid::from_global(&g, p_nodes, h, w, steps, ComputeBackend::Pjrt(&rt));
+    let rep = BspRuntime::new(net(p_nodes, 0.15, 0xE2E2)).with_copies(2).run(&mut prog);
+    assert!(rep.completed);
+    assert!(rep.total_rounds >= steps as u64);
+
+    let got = prog.to_global();
+    let want = jacobi_seq(&g, rows, w, steps);
+    for i in 0..got.len() {
+        assert!((got[i] - want[i]).abs() < 1e-4, "i={i}: {} vs {}", got[i], want[i]);
+    }
+}
+
+#[test]
+fn summa_pjrt_over_lossy_grid_matches_sequential() {
+    let rt = runtime();
+    let (q, e) = (2usize, 256usize);
+    let n = q * e;
+    let mut rng = Rng::new(0xE2E3);
+    let a: Vec<f32> = (0..n * n).map(|_| (rng.f64() as f32) - 0.5).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| (rng.f64() as f32) - 0.5).collect();
+
+    let mut prog = SummaMatmul::from_global(&a, &b, q, e, ComputeBackend::Pjrt(&rt));
+    let rep = BspRuntime::new(net(q * q, 0.1, 0xE2E4)).with_copies(2).run(&mut prog);
+    assert!(rep.completed);
+
+    let got = prog.c_global();
+    let want = matmul_seq(&a, &b, n);
+    let mut worst = 0.0f32;
+    for i in 0..got.len() {
+        worst = worst.max((got[i] - want[i]).abs());
+    }
+    // f32 accumulation over K=512: allow loose elementwise tolerance.
+    assert!(worst < 0.05, "worst abs diff {worst}");
+}
+
+#[test]
+fn bitonic_pjrt_over_lossy_grid_sorts_globally() {
+    let rt = runtime();
+    let p = 4usize;
+    let n_local = 512usize; // must match the AOT width
+    let mut rng = Rng::new(0xE2E5);
+    let keys: Vec<Vec<f32>> = (0..p)
+        .map(|_| (0..n_local).map(|_| (rng.f64() * 1e4) as f32).collect())
+        .collect();
+    let mut want: Vec<f32> = keys.iter().flatten().copied().collect();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut prog = BitonicSort::new(keys, ComputeBackend::Pjrt(&rt));
+    let rep = BspRuntime::new(net(p, 0.2, 0xE2E6)).with_copies(2).run(&mut prog);
+    assert!(rep.completed);
+    assert_eq!(prog.gathered(), want);
+}
+
+#[test]
+fn pjrt_and_native_backends_agree_bitwise_for_jacobi() {
+    let rt = runtime();
+    let (p_nodes, h, w, steps) = (2, 128, 128, 2);
+    let rows = p_nodes * (h - 2) + 2;
+    let mut rng = Rng::new(0xE2E7);
+    let g: Vec<f32> = (0..rows * w).map(|_| rng.f64() as f32).collect();
+
+    let run = |backend: ComputeBackend| {
+        let mut prog = JacobiGrid::from_global(&g, p_nodes, h, w, steps, backend);
+        // Same seed → identical loss pattern → identical phase behavior.
+        BspRuntime::new(net(p_nodes, 0.1, 0xE2E8)).run(&mut prog);
+        prog.to_global()
+    };
+    let native = run(ComputeBackend::Native);
+    let pjrt = run(ComputeBackend::Pjrt(&rt));
+    for i in 0..native.len() {
+        assert!(
+            (native[i] - pjrt[i]).abs() < 1e-5,
+            "i={i}: native {} vs pjrt {}",
+            native[i],
+            pjrt[i]
+        );
+    }
+}
+
+/// The lossy network slows the run down but must never corrupt results —
+/// sweep loss rates and check the invariant end to end.
+#[test]
+fn loss_rate_sweep_preserves_correctness() {
+    let rt = runtime();
+    let p = 2usize;
+    let n_local = 512usize;
+    for (i, loss) in [0.0f64, 0.1, 0.3].into_iter().enumerate() {
+        let mut rng = Rng::new(100 + i as u64);
+        let keys: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n_local).map(|_| rng.f64() as f32).collect())
+            .collect();
+        let mut want: Vec<f32> = keys.iter().flatten().copied().collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prog = BitonicSort::new(keys, ComputeBackend::Pjrt(&rt));
+        let rep = BspRuntime::new(net(p, loss, 200 + i as u64)).with_copies(2).run(&mut prog);
+        assert!(rep.completed, "loss={loss}");
+        assert_eq!(prog.gathered(), want, "loss={loss}");
+    }
+}
