@@ -1,41 +1,91 @@
-//! The synthetic PlanetLab measurement campaign (paper §I-A, Figs 1–3).
+//! The synthetic PlanetLab measurement campaign (paper §I-A, Figs 1–3)
+//! plus an end-to-end Monte-Carlo experiment campaign over the measured
+//! operating band.
 //!
 //! ```bash
-//! cargo run --release --example planetlab_campaign [-- --pairs 100]
+//! cargo run --release --example planetlab_campaign [-- --pairs 100 --workers 4]
 //! ```
 //!
-//! Probes random node pairs over the simulated WAN, exactly as the paper
-//! probed `.edu` PlanetLab pairs, and prints the three figure series plus
-//! the derived model parameters (p, α, β) a grid scheduler would feed
-//! into the L-BSP planner.
+//! Part 1 probes random node pairs over the simulated WAN, exactly as the
+//! paper probed `.edu` PlanetLab pairs, and prints the three figure
+//! series plus the derived model parameters (p, α, β) a grid scheduler
+//! would feed into the L-BSP planner.
+//!
+//! Part 2 feeds that band into the campaign engine: a (n × p × k ×
+//! loss-model) grid of replicated L-BSP runs fanned over the worker
+//! pool, demonstrating worker-count scaling with bitwise-identical
+//! aggregates — run with `--workers 1` and `--workers 8` and diff the
+//! stdout (timing and worker details go to stderr so stdout is
+//! byte-identical).
 
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, Workload};
 use lbsp::measure::{run_campaign, CampaignConfig};
-use lbsp::report::fig1_3;
+use lbsp::model::Comm;
+use lbsp::report::{campaign_table, fig1_3_from_points};
 use lbsp::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    let workers = args.get_parsed_or("workers", 4usize);
     let cfg = CampaignConfig {
         n_pairs: args.get_parsed_or("pairs", 100usize),
         probes: args.get_parsed_or("probes", 300usize),
         seed: args.get_parsed_or("seed", 0x9_1ABu64),
+        workers,
         ..Default::default()
     };
 
-    for artifact in fig1_3(&cfg) {
+    // One probe campaign feeds both the figures and the derived triple.
+    let points = run_campaign(&cfg);
+    for artifact in fig1_3_from_points(&points) {
         artifact.print();
     }
-
-    // Derive the model triple the rest of the pipeline consumes.
-    let points = run_campaign(&cfg);
     let mid = &points[points.len() / 2];
+    let p = mid.loss.mean();
+    let beta = mid.rtt.mean();
     println!("derived L-BSP parameters at packet size {} B:", mid.size);
-    println!("  p     = {:.4}", mid.loss.mean());
+    println!("  p     = {p:.4}");
     println!(
         "  alpha = {:.6} s  ({} B / {:.1} MB/s)",
         mid.size as f64 / (mid.bandwidth_mbytes.mean() * 1e6),
         mid.size,
         mid.bandwidth_mbytes.mean()
     );
-    println!("  beta  = {:.4} s", mid.rtt.mean());
+    println!("  beta  = {beta:.4} s");
+
+    // --- Part 2: Monte-Carlo campaign across the measured band.
+    let spec = CampaignSpec {
+        workloads: vec![Workload::Slotted {
+            w_s: 4.0 * 3600.0,
+            supersteps: 20,
+            comm: Comm::Linear,
+            tau_s: beta,
+        }],
+        ns: vec![2, 4, 8, 16, 32],
+        ps: vec![(p * 0.5).max(0.001), p, (p * 1.5).min(0.5)],
+        ks: vec![1, 2, 3, 4],
+        losses: vec![LossSpec::Bernoulli, LossSpec::GilbertElliott { burst_len: 8.0 }],
+        replicas: args.get_parsed_or("replicas", 16usize),
+        ..Default::default()
+    };
+    println!(
+        "\ncampaign: {} cells x {} replicas = {} runs",
+        spec.n_cells(),
+        spec.replicas,
+        spec.n_runs()
+    );
+    let engine = CampaignEngine::new(workers);
+    let t0 = std::time::Instant::now();
+    let summaries = engine.run(&spec);
+    let dt = t0.elapsed().as_secs_f64();
+    campaign_table(&summaries).print();
+    // Run-variant details (workers, wall time) go to stderr so stdout
+    // diffs clean across worker counts.
+    eprintln!(
+        "[{workers} workers: {} runs in {dt:.2}s ({:.0} runs/s); rho cache: {} distinct points, {} hits]",
+        spec.n_runs(),
+        spec.n_runs() as f64 / dt,
+        engine.rho_cache().len(),
+        engine.rho_cache().hits()
+    );
 }

@@ -1,7 +1,10 @@
 """Jacobi stencil, blocked matmul and bitonic kernels vs oracles."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline sandbox: no hypothesis wheel
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile import model
 from compile.kernels import (

@@ -7,7 +7,10 @@ q = 1 - p_s = p^k (2 - p^k); helpers here convert from the paper's
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline sandbox: no hypothesis wheel
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile.kernels import rho_hat
 from compile.kernels.ref import rho_hat_ref

@@ -7,7 +7,10 @@ corners, and agreement with the generous-truncation float64 oracle.
 """
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline sandbox: no hypothesis wheel
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile.kernels import rho_hat
 from compile.kernels.ref import rho_hat_ref

@@ -1,7 +1,10 @@
 """Layer-2 speedup surface (paper eq. 6) vs float64 oracle."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline sandbox: no hypothesis wheel
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile import model
 from compile.kernels.ref import speedup_surface_ref

@@ -1,0 +1,78 @@
+//! CAMPAIGN_SCALING — worker-count scaling of the Monte-Carlo campaign
+//! engine on a 560-cell end-to-end grid, plus the determinism invariant
+//! (aggregates must be bitwise identical at every worker count).
+
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, Workload};
+use lbsp::model::Comm;
+use lbsp::net::protocol::RetransmitPolicy;
+use lbsp::util::bench::{bench_units, black_box};
+
+fn grid() -> CampaignSpec {
+    CampaignSpec {
+        workloads: vec![Workload::Slotted {
+            w_s: 4.0 * 3600.0,
+            supersteps: 20,
+            comm: Comm::Linear,
+            tau_s: 0.08,
+        }],
+        ns: vec![2, 4, 8, 16, 32],
+        ps: vec![0.0005, 0.01, 0.045, 0.075, 0.1, 0.125, 0.15],
+        ks: vec![1, 2, 3, 4],
+        policies: vec![RetransmitPolicy::Selective, RetransmitPolicy::WholeRound],
+        losses: vec![LossSpec::Bernoulli, LossSpec::GilbertElliott { burst_len: 8.0 }],
+        replicas: 4,
+        seed: 0xBE_9C11,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let spec = grid();
+    println!(
+        "=== campaign scaling: {} cells x {} replicas = {} runs ===\n",
+        spec.n_cells(),
+        spec.replicas,
+        spec.n_runs()
+    );
+    assert!(spec.n_cells() >= 500, "grid must exercise a real campaign");
+
+    // Determinism first: the scaling numbers below are only meaningful
+    // because every worker count computes the same campaign.
+    let reference = CampaignEngine::new(1).run(&spec);
+    for workers in [2, 8] {
+        let got = CampaignEngine::new(workers).run(&spec);
+        assert_eq!(reference, got, "aggregates diverged at {workers} workers");
+    }
+    println!("determinism: workers 1 == 2 == 8 (bitwise)\n");
+
+    let runs = spec.n_runs() as f64;
+    let mut medians = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let engine = CampaignEngine::new(workers);
+        let report = bench_units(
+            &format!("campaign {} cells, workers={workers}", spec.n_cells()),
+            1,
+            5,
+            Some(runs),
+            || {
+                black_box(engine.run(&spec));
+            },
+        );
+        medians.push((workers, report.median_s));
+    }
+
+    let t1 = medians[0].1;
+    println!();
+    for &(workers, t) in &medians {
+        println!(
+            "workers={workers}: {:>8.0} runs/s  speedup x{:.2}",
+            runs / t,
+            t1 / t
+        );
+    }
+    let t8 = medians.last().unwrap().1;
+    println!(
+        "\n1 -> 8 worker throughput: x{:.2} (target >= 3.0 on >= 8 hardware threads)",
+        t1 / t8
+    );
+}

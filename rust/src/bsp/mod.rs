@@ -17,4 +17,4 @@ pub mod replication;
 mod runtime;
 
 pub use program::{BspProgram, Outgoing};
-pub use runtime::{BspRuntime, RunReport, StepReport};
+pub use runtime::{BspRuntime, RunOutcome, RunReport, StepReport};

@@ -14,6 +14,24 @@ pub struct StepReport {
     pub messages: usize,
 }
 
+/// How a run ended. `completed` alone cannot distinguish a program whose
+/// `done()` fired from one that silently exhausted `max_supersteps` —
+/// averaging truncated runs into a campaign poisons the aggregates, so
+/// the runtime records the exact exit path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// `done()` returned true: the program converged.
+    Converged,
+    /// All `max_supersteps` ran without `done()` firing. Fixed-length
+    /// programs (the default `done` is `false`) end here by design;
+    /// iterative programs ending here were truncated mid-convergence.
+    #[default]
+    RanAllSupersteps,
+    /// A communication phase exceeded `max_rounds` — the run aborted
+    /// ("the system fails to operate", §II).
+    Aborted,
+}
+
 /// Whole-run accounting.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -26,7 +44,11 @@ pub struct RunReport {
     pub supersteps: usize,
     pub data_packets: u64,
     pub ack_packets: u64,
+    /// Every communication phase completed (`outcome != Aborted`). Kept
+    /// alongside [`RunOutcome`] for the many call sites that only care
+    /// about phase-level reliability.
     pub completed: bool,
+    pub outcome: RunOutcome,
     pub steps: Vec<StepReport>,
 }
 
@@ -34,6 +56,11 @@ impl RunReport {
     /// Speedup against a given sequential time.
     pub fn speedup(&self, sequential_s: f64) -> f64 {
         sequential_s / self.total_time_s
+    }
+
+    /// `done()` fired before the superstep budget ran out.
+    pub fn converged(&self) -> bool {
+        self.outcome == RunOutcome::Converged
     }
 }
 
@@ -96,10 +123,13 @@ impl BspRuntime {
         2.0 * (self.copies as f64 * c / n as f64 * alpha_mean + beta_mean)
     }
 
-    /// Run the program to completion (or abort on a failed phase).
+    /// Run the program to completion (or abort on a failed phase). The
+    /// report's [`RunOutcome`] distinguishes convergence (`done()` fired)
+    /// from exhausting `max_supersteps` from a phase-level abort.
     pub fn run<P: BspProgram>(&mut self, prog: &mut P) -> RunReport {
         let n = prog.n_nodes();
         let mut report = RunReport::default();
+        let mut converged = false;
         for step in 0..prog.max_supersteps() {
             // --- compute phase: barrier waits for the slowest node.
             let mut barrier_s: f64 = 0.0;
@@ -159,6 +189,7 @@ impl BspRuntime {
 
             if !phase.completed {
                 report.completed = false;
+                report.outcome = RunOutcome::Aborted;
                 return report;
             }
 
@@ -168,10 +199,16 @@ impl BspRuntime {
             }
 
             if prog.done(step + 1) {
+                converged = true;
                 break;
             }
         }
         report.completed = true;
+        report.outcome = if converged {
+            RunOutcome::Converged
+        } else {
+            RunOutcome::RanAllSupersteps
+        };
         report
     }
 }
@@ -335,6 +372,77 @@ mod tests {
         let rep = rt.run(&mut EarlyStop(RingPass::new(3, 100)));
         assert!(rep.completed);
         assert_eq!(rep.supersteps, 3);
+        assert_eq!(rep.outcome, RunOutcome::Converged);
+        assert!(rep.converged());
+    }
+
+    /// Iterative program that needs `need` supersteps to converge.
+    struct SlowConverge {
+        inner: RingPass,
+        need: usize,
+        budget: usize,
+    }
+
+    impl BspProgram for SlowConverge {
+        type Msg = u64;
+        fn n_nodes(&self) -> usize {
+            self.inner.n_nodes()
+        }
+        fn max_supersteps(&self) -> usize {
+            self.budget
+        }
+        fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<u64>>, f64) {
+            self.inner.compute(node, step)
+        }
+        fn deliver(&mut self, node: NodeId, from: NodeId, payload: u64) {
+            self.inner.deliver(node, from, payload)
+        }
+        fn done(&self, completed: usize) -> bool {
+            completed >= self.need
+        }
+    }
+
+    #[test]
+    fn truncated_run_is_not_mislabeled_as_converged() {
+        // Needs 10 supersteps, budget is 3: previously this reported the
+        // same `completed = true` as a genuine convergence.
+        let mut rt = BspRuntime::new(net(3, 0.05, 21));
+        let mut prog = SlowConverge { inner: RingPass::new(3, 100), need: 10, budget: 3 };
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed, "all phases delivered");
+        assert_eq!(rep.supersteps, 3);
+        assert_eq!(rep.outcome, RunOutcome::RanAllSupersteps);
+        assert!(!rep.converged());
+    }
+
+    #[test]
+    fn converged_run_is_labeled_converged() {
+        let mut rt = BspRuntime::new(net(3, 0.05, 22));
+        let mut prog = SlowConverge { inner: RingPass::new(3, 100), need: 4, budget: 50 };
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        assert_eq!(rep.supersteps, 4);
+        assert_eq!(rep.outcome, RunOutcome::Converged);
+    }
+
+    #[test]
+    fn aborted_run_is_labeled_aborted() {
+        let mut rt = BspRuntime::new(net(2, 1.0, 23));
+        rt.max_rounds = 4;
+        let rep = rt.run(&mut RingPass::new(2, 3));
+        assert!(!rep.completed);
+        assert_eq!(rep.outcome, RunOutcome::Aborted);
+        assert!(!rep.converged());
+    }
+
+    #[test]
+    fn fixed_length_program_reports_ran_all_supersteps() {
+        // RingPass never implements done(): ending at max_supersteps is
+        // by design, and the outcome says so explicitly.
+        let mut rt = BspRuntime::new(net(4, 0.0, 24));
+        let rep = rt.run(&mut RingPass::new(4, 4));
+        assert!(rep.completed);
+        assert_eq!(rep.outcome, RunOutcome::RanAllSupersteps);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Leader/worker sweep orchestration.
+//! Leader/worker orchestration: sweeps and Monte-Carlo campaigns.
 //!
 //! Figures 7–12 are parameter sweeps over up to ~10⁵ operating points;
 //! the coordinator batches them onto evaluation backends:
@@ -11,10 +11,41 @@
 //!   remainder.
 //!
 //! [`queue`] is the generic work-queue substrate; [`sweep`] the
-//! L-BSP-specific sweep API with throughput metrics.
+//! L-BSP-specific sweep API with throughput metrics; [`campaign`] the
+//! Monte-Carlo campaign engine that fans full end-to-end experiment
+//! grids (workload × n × p × k × policy × loss model × topology ×
+//! replica seed) over the same pool with bitwise worker-count-invariant
+//! aggregates and a memoizing ρ̂ cache.
 
+pub mod campaign;
 pub mod queue;
 pub mod sweep;
 
+pub use campaign::{
+    CampaignEngine, CampaignSpec, CellSpec, CellSummary, LossSpec, RhoCache, TopologySpec,
+    Workload,
+};
 pub use queue::WorkQueue;
 pub use sweep::{Backend, SweepCoordinator, SweepMetrics};
+
+use crate::model::LbspParams;
+
+/// A backend that evaluates eq-(6) speedups for a batch of operating
+/// points. The figure generators are written against this, so they run
+/// unchanged on the [`SweepCoordinator`] (native pool or PJRT artifact)
+/// and on the [`CampaignEngine`] (native pool + ρ̂ memoization).
+pub trait SpeedupEval {
+    fn eval_speedups(&mut self, points: &[LbspParams]) -> Vec<f64>;
+}
+
+impl SpeedupEval for SweepCoordinator {
+    fn eval_speedups(&mut self, points: &[LbspParams]) -> Vec<f64> {
+        self.speedups(points)
+    }
+}
+
+impl SpeedupEval for CampaignEngine {
+    fn eval_speedups(&mut self, points: &[LbspParams]) -> Vec<f64> {
+        self.speedups(points)
+    }
+}

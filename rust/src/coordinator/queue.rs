@@ -13,8 +13,15 @@ impl WorkQueue {
     /// Process `items` in `chunk_size` chunks on `workers` threads.
     /// `f` must be pure per chunk. Result order matches input order.
     ///
-    /// Backpressure: at most `workers * 4` chunks are in flight; the
-    /// leader blocks otherwise (bounded channel).
+    /// Backpressure (what the implementation actually bounds): the
+    /// *result* channel is bounded at `workers * 4`, so at most
+    /// `workers * 4` completed chunks wait unconsumed plus one in-hand
+    /// result per worker blocked on `send` — `workers * 5` total — while
+    /// the leader reassembles. Each worker processes one chunk at a time
+    /// (peak concurrency = `workers`). Input chunks are materialized
+    /// upfront from the caller's `Vec` (no input-side bound): the memory
+    /// ceiling this provides is on *results*, which is what matters when
+    /// `f` expands its input (sweeps returning per-point series).
     pub fn map_chunked<T, R, F>(
         items: Vec<T>,
         chunk_size: usize,
@@ -117,6 +124,41 @@ mod tests {
         let items: Vec<u32> = (0..103).collect();
         let out = WorkQueue::map_chunked(items.clone(), 10, 3, |c| c.to_vec());
         assert_eq!(out, items);
+    }
+
+    #[test]
+    fn order_preserved_with_more_workers_than_chunks_and_jitter() {
+        // 64 workers racing over 300 single-item chunks with per-item
+        // sleep jitter: completion order is thoroughly scrambled, result
+        // order must still match input order exactly.
+        let items: Vec<u64> = (0..300).collect();
+        let out = WorkQueue::map_chunked(items.clone(), 1, 64, |chunk| {
+            let x = chunk[0];
+            std::thread::sleep(std::time::Duration::from_micros((x * 37) % 500));
+            vec![x * 3 + 1]
+        });
+        let want: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn peak_concurrency_never_exceeds_worker_count() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let in_flight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let items: Vec<u64> = (0..2000).collect();
+        let workers = 4;
+        let out = WorkQueue::map_chunked(items, 10, workers, |chunk| {
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(50));
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            chunk.to_vec()
+        });
+        assert_eq!(out.len(), 2000);
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= workers, "peak {peak} > workers {workers}");
+        assert!(peak >= 2, "expected some parallelism, peak {peak}");
     }
 
     #[test]

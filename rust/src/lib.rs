@@ -21,12 +21,22 @@
 //!   retransmission disciplines.
 //! * [`collectives`] — broadcast/all-gather/all-to-all schedules (§V-E/F).
 //! * [`workloads`] — BSP programs with real data: matmul, bitonic sort,
-//!   2D FFT (transpose method), Laplace/Jacobi.
+//!   2D FFT (transpose method), Laplace/Jacobi, plus the synthetic
+//!   exchange probe the campaign engine calibrates against.
 //! * [`runtime`] — PJRT wrapper loading the AOT HLO artifacts produced by
 //!   `python/compile/aot.py`; the request path never touches Python.
-//! * [`coordinator`] — leader/worker sweep orchestration and batching of
-//!   model evaluations onto the PJRT surface artifact.
-//! * [`report`] — figure/table regeneration (paper evaluation section).
+//! * [`coordinator`] — leader/worker orchestration: sweep batching onto
+//!   native/PJRT backends, and the Monte-Carlo **campaign engine**
+//!   ([`coordinator::campaign`]) that fans end-to-end experiment grids
+//!   (workload × n × p × k × policy × loss model × topology × replica
+//!   seed) over the thread pool with bitwise worker-count-invariant
+//!   aggregates and a memoizing ρ̂ cache.
+//! * [`report`] — figure/table regeneration (paper evaluation section);
+//!   Figs 8–12 are built from the campaign grid constructor and run on
+//!   any `SpeedupEval` backend.
+//!
+//! Tier-1 verification is one command: `scripts/tier1.sh` (release build
+//! + tests + `cargo fmt --check` when available).
 
 pub mod bsp;
 pub mod collectives;

@@ -1,7 +1,7 @@
 //! `lbsp` — the L-BSP reproduction launcher.
 //!
 //! ```text
-//! lbsp measure [--pairs N] [--probes N] [--seed S]      Figs 1–3
+//! lbsp measure [--pairs N] [--probes N] [--seed S] [--workers W]   Figs 1–3
 //! lbsp figure 7|8|9|10|11|12|all [--backend native|pjrt] [--csv]
 //! lbsp table 1|2|all
 //! lbsp plan --p P [--c C | --comm n|nlogn|n2|...] [--w HOURS] [--kmax K]
@@ -9,13 +9,15 @@
 //!          [--backend native|pjrt] [--seed S]
 //! lbsp simval [--trials N]                              MC vs analytic
 //! lbsp sweep [--points N] [--backend native|pjrt] [--workers W]
+//! lbsp campaign [--workers W] [--replicas R] [--seed S] [--burst B]
+//!               Monte-Carlo campaign grid (worker-count invariant)
 //! ```
 //!
 //! The `pjrt` backend loads the AOT artifacts from `./artifacts`
 //! (override with `LBSP_ARTIFACTS`); build them once with `make artifacts`.
 
 use lbsp::bsp::BspRuntime;
-use lbsp::coordinator::SweepCoordinator;
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, SweepCoordinator};
 use lbsp::measure::CampaignConfig;
 use lbsp::model::lbsp::{optimal_k_min_krho, optimal_k_speedup};
 use lbsp::model::rho::rho_selective_pk;
@@ -115,6 +117,7 @@ fn cmd_measure(args: &Args) {
         n_pairs: o.usize("pairs", 100),
         probes: o.usize("probes", 300),
         seed: o.usize("seed", 0x9_1AB) as u64,
+        workers: o.usize("workers", 1),
         ..Default::default()
     };
     print_artifacts(&report::fig1_3(&cfg), args.flag("csv"));
@@ -359,7 +362,41 @@ fn cmd_sweep(args: &Args) {
     );
 }
 
-const USAGE: &str = "usage: lbsp <measure|figure|table|plan|run|simval|sweep> [options]
+fn cmd_campaign(args: &Args) {
+    let o = Opts::new(args, "campaign");
+    let workers = o.usize("workers", 4);
+    let spec = CampaignSpec {
+        replicas: o.usize("replicas", 8),
+        seed: o.usize("seed", 0x9_CA4B) as u64,
+        losses: vec![
+            LossSpec::Bernoulli,
+            LossSpec::GilbertElliott { burst_len: o.f64("burst", 8.0) },
+        ],
+        ..Default::default()
+    };
+    // Worker count and timing stay off stdout so output diffs clean
+    // across --workers settings (the aggregates are bitwise invariant).
+    println!(
+        "campaign: {} cells x {} replicas = {} runs",
+        spec.n_cells(),
+        spec.replicas,
+        spec.n_runs()
+    );
+    let engine = CampaignEngine::new(workers);
+    let t0 = std::time::Instant::now();
+    let summaries = engine.run(&spec);
+    let dt = t0.elapsed().as_secs_f64();
+    print_artifacts(&[report::campaign_table(&summaries)], args.flag("csv"));
+    eprintln!(
+        "[{workers} workers: {} runs in {dt:.2}s ({:.0} runs/s); rho cache {} points, {} hits]",
+        spec.n_runs(),
+        spec.n_runs() as f64 / dt,
+        engine.rho_cache().len(),
+        engine.rho_cache().hits()
+    );
+}
+
+const USAGE: &str = "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign> [options]
   (see `rust/src/main.rs` doc header for details)";
 
 fn main() {
@@ -372,6 +409,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("simval") => cmd_simval(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("campaign") => cmd_campaign(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);

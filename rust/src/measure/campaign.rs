@@ -1,5 +1,13 @@
 //! Probe-train measurement over the simulated WAN.
+//!
+//! Parallelism follows the campaign-engine replica pattern
+//! (`coordinator::campaign`): every probed pair gets its own [`Rng`]
+//! stream split from the master generator on the leader in enumeration
+//! order, pairs fan out over [`WorkQueue::map_chunked`], and results
+//! reassemble in input order — so the figures are bitwise identical for
+//! any `workers` setting.
 
+use crate::coordinator::WorkQueue;
 use crate::net::link::Link;
 use crate::net::packet::Packet;
 use crate::net::topology::{PlanetLabRanges, Topology};
@@ -39,6 +47,9 @@ pub struct CampaignConfig {
     pub sizes: Vec<u64>,
     pub ranges: PlanetLabRanges,
     pub seed: u64,
+    /// Worker threads probing pairs concurrently. Results are identical
+    /// for any value (per-pair rng streams are pre-split on the leader).
+    pub workers: usize,
 }
 
 impl Default for CampaignConfig {
@@ -52,6 +63,7 @@ impl Default for CampaignConfig {
             sizes: vec![1024, 2048, 5120, 10_240, 15_360, 20_480, 25_600],
             ranges: PlanetLabRanges::default(),
             seed: 0x9_1AB,
+            workers: 1,
         }
     }
 }
@@ -70,14 +82,21 @@ pub struct SizePoint {
 }
 
 /// Run the campaign: sample pairs from the universe, probe each pair at
-/// each size, aggregate per size.
+/// each size (fanned out over `cfg.workers` threads), aggregate per size.
 pub fn run_campaign(cfg: &CampaignConfig) -> Vec<SizePoint> {
     let mut rng = Rng::new(cfg.seed);
     // Sample the full universe topology once: pairwise parameters are the
     // population; we then probe a subset of pairs.
     let topo = Topology::planetlab_like(cfg.n_universe, &cfg.ranges, &mut rng);
 
-    // Choose n_pairs random distinct (a, b) pairs.
+    // Choose n_pairs random distinct (a, b) pairs, each with a pre-split
+    // probe stream (the campaign-engine replica pattern).
+    #[derive(Clone)]
+    struct PairTask {
+        link: Link,
+        base_p: f64,
+        rng: Rng,
+    }
     let mut pairs = Vec::with_capacity(cfg.n_pairs);
     while pairs.len() < cfg.n_pairs {
         let a = rng.range(0, cfg.n_universe);
@@ -86,6 +105,37 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Vec<SizePoint> {
             pairs.push((a, b));
         }
     }
+    let tasks: Vec<PairTask> = pairs
+        .iter()
+        .map(|&(a, b)| PairTask {
+            link: *topo.link(a, b),
+            base_p: topo.mean_loss(a, b),
+            rng: rng.split(),
+        })
+        .collect();
+
+    // Per-pair probe sweeps are independent; one pair per chunk.
+    let per_pair: Vec<Vec<(f64, f64, f64)>> =
+        WorkQueue::map_chunked(tasks, 1, cfg.workers.max(1), |chunk| {
+            chunk
+                .iter()
+                .map(|t| {
+                    let mut rng = t.rng.clone();
+                    cfg.sizes
+                        .iter()
+                        .map(|&size| {
+                            probe_pair(
+                                t.link,
+                                frag_factor(t.base_p, size),
+                                size,
+                                cfg,
+                                &mut rng,
+                            )
+                        })
+                        .collect()
+                })
+                .collect()
+        });
 
     let mut points: Vec<SizePoint> = cfg
         .sizes
@@ -97,13 +147,8 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Vec<SizePoint> {
             rtt: Online::new(),
         })
         .collect();
-
-    for &(a, b) in &pairs {
-        let link = *topo.link(a, b);
-        let base_p = topo.mean_loss(a, b);
-        for point in &mut points {
-            let (loss, bw, rtt) =
-                probe_pair(link, frag_factor(base_p, point.size), point.size, cfg, &mut rng);
+    for measurements in &per_pair {
+        for (point, &(loss, bw, rtt)) in points.iter_mut().zip(measurements) {
             point.loss.push(loss);
             point.bandwidth_mbytes.push(bw / 1.0e6);
             point.rtt.push(rtt);
@@ -254,5 +299,16 @@ mod tests {
         let b = run_campaign(&small_cfg());
         assert_eq!(a[0].loss.mean(), b[0].loss.mean());
         assert_eq!(a[2].rtt.mean(), b[2].rtt.mean());
+    }
+
+    #[test]
+    fn campaign_is_worker_count_invariant() {
+        let serial = run_campaign(&small_cfg());
+        let parallel = run_campaign(&CampaignConfig { workers: 4, ..small_cfg() });
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.loss.mean(), b.loss.mean());
+            assert_eq!(a.bandwidth_mbytes.mean(), b.bandwidth_mbytes.mean());
+            assert_eq!(a.rtt.mean(), b.rtt.mean());
+        }
     }
 }

@@ -28,7 +28,13 @@ pub fn round_success(p: f64, k: u32) -> f64 {
 /// Maximum series terms before declaring divergence (q → 1).
 pub const RHO_MAX_TERMS: usize = 1 << 22;
 
-/// Relative tail threshold for truncation.
+/// Relative tail threshold for truncation. In the truncation region the
+/// terms decay geometrically with ratio → q, so the dropped tail is
+/// ≈ `term·q/(1−q)`; the cutoff therefore compares `term` against
+/// `RHO_TOL·(1−q)·acc`, which bounds the truncation error at
+/// ~`RHO_TOL` *relative to ρ̂, uniformly in q* — including q → 1 where
+/// a bare `term < RHO_TOL·acc` test would leak a tail `1/(1−q)` times
+/// larger than advertised.
 const RHO_TOL: f64 = 1e-13;
 
 /// Eq (1): whole-round ρ̂ = (1 − q)^{−c}. Returns `f64::INFINITY` when the
@@ -47,8 +53,9 @@ pub fn rho_whole_round(q: f64, c: f64) -> f64 {
 /// Eq (3): selective ρ̂ via the tail-sum series, float64.
 ///
 /// `q` is the per-round failure probability of a single packet, `c` the
-/// (real-valued) packet count. Truncates when the term falls below
-/// `RHO_TOL`; saturates at [`RHO_MAX_TERMS`] for q → 1.
+/// (real-valued) packet count. Truncates once the geometric tail bound
+/// drops below `RHO_TOL × acc` (relative — see [`RHO_TOL`]); saturates
+/// at [`RHO_MAX_TERMS`] for q → 1.
 pub fn rho_selective(q: f64, c: f64) -> f64 {
     debug_assert!((0.0..=1.0).contains(&q), "q={q}");
     debug_assert!(c >= 0.0, "c={c}");
@@ -60,11 +67,12 @@ pub fn rho_selective(q: f64, c: f64) -> f64 {
     }
     let mut acc = 1.0; // i = 0 term
     let mut qi = q;
+    let tail_scale = RHO_TOL * (1.0 - q);
     for _ in 1..RHO_MAX_TERMS {
         // term_i = 1 − (1 − q^i)^c = −expm1(c · ln1p(−q^i)).
         let term = -(c * (-qi).ln_1p()).exp_m1();
         acc += term;
-        if term < RHO_TOL {
+        if term < tail_scale * acc {
             return acc;
         }
         qi *= q;
@@ -156,6 +164,52 @@ mod tests {
     fn zero_loss_is_single_transmission() {
         assert_eq!(rho_selective(0.0, 1.0e9), 1.0);
         assert_eq!(rho_whole_round(0.0, 1.0e9), 1.0);
+    }
+
+    #[test]
+    fn truncation_is_relative_to_accumulator() {
+        // Reference: same series with a far tighter *absolute* cutoff.
+        let reference = |q: f64, c: f64| -> f64 {
+            let mut acc = 1.0;
+            let mut qi = q;
+            for _ in 1..RHO_MAX_TERMS {
+                let term = -(c * (-qi).ln_1p()).exp_m1();
+                acc += term;
+                if term < 1e-18 {
+                    return acc;
+                }
+                qi *= q;
+            }
+            f64::INFINITY
+        };
+        // High q → large ρ̂ (slowly decaying tail); the relative cutoff
+        // must agree with the brute-force sum to ~RHO_TOL precision.
+        for &(q, c) in &[(0.9f64, 1.0e3), (0.99, 1.0e4), (0.999, 1.0e2)] {
+            let got = rho_selective(q, c);
+            let want = reference(q, c);
+            assert!(
+                (got - want).abs() / want < 1e-10,
+                "q={q} c={c}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn high_q_series_matches_monte_carlo() {
+        // Regression for the truncation contract at large ρ̂: pin the
+        // series against the slotted Monte-Carlo estimator. p = 0.6, k=1
+        // gives q = 1 − (1−p)² = 0.84 — deep in the slow-tail regime.
+        use crate::net::protocol::RetransmitPolicy;
+        use crate::net::rounds::{estimate_rho, per_round_success};
+        let (p, c) = (0.6f64, 200u64);
+        let q = 1.0 - per_round_success(p, 1);
+        let analytic = rho_selective(q, c as f64);
+        let mc = estimate_rho(p, 1, c, RetransmitPolicy::Selective, 30_000, 2024);
+        assert!(analytic > 20.0, "expected a large rho, got {analytic}");
+        assert!(
+            (analytic - mc).abs() / analytic < 0.02,
+            "series {analytic} vs MC {mc}"
+        );
     }
 
     #[test]

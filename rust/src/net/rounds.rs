@@ -10,7 +10,12 @@
 
 use crate::util::prng::Rng;
 
+use super::loss::LossModel;
 use super::protocol::RetransmitPolicy;
+
+/// Round cap per slotted phase: beyond this the phase is declared
+/// saturated (`SlottedRun::saturated`) rather than simulated further.
+pub const PHASE_ROUND_CAP: u64 = 1_000_000;
 
 /// Per-round success probability for one packet with `k` copies in both
 /// directions: `(1 - p^k)²`, computed cancellation-free as `1 - q` with
@@ -57,6 +62,70 @@ pub fn simulate_phase_rounds(
     }
 }
 
+/// Simulate one phase under an arbitrary (possibly stateful / bursty)
+/// [`LossModel`], packet by packet — the generalization the closed-form
+/// geometric sampling in [`simulate_phase_rounds`] cannot express.
+///
+/// Each outstanding packet sends `k` data copies through the channel
+/// back-to-back, and (if any survives) the receiver returns `k` ack
+/// copies the same way. Adjacent channel draws is exactly what makes
+/// bursty processes hostile to k-copy duplication: one bad-state dwell
+/// swallows all `k` copies at once, collapsing the `p^k` diversity gain
+/// the paper's iid analysis relies on. For an iid Bernoulli(p) model this
+/// reduces to per-packet success `(1−p^k)²` and matches
+/// [`simulate_phase_rounds`] in distribution.
+pub fn simulate_phase_rounds_model<L: LossModel>(
+    loss: &mut L,
+    k: u32,
+    c: u64,
+    policy: RetransmitPolicy,
+    rng: &mut Rng,
+    max_rounds: u64,
+) -> u64 {
+    assert!(k >= 1);
+    let mut outstanding = c;
+    let mut rounds = 0u64;
+    while outstanding > 0 {
+        if rounds >= max_rounds {
+            return max_rounds;
+        }
+        rounds += 1;
+        let tries = match policy {
+            RetransmitPolicy::Selective => outstanding,
+            RetransmitPolicy::WholeRound => c,
+        };
+        let mut succeeded = 0u64;
+        for _ in 0..tries {
+            let mut data_ok = false;
+            for _ in 0..k {
+                if !loss.lose(rng) {
+                    data_ok = true;
+                }
+            }
+            let mut ack_ok = false;
+            if data_ok {
+                for _ in 0..k {
+                    if !loss.lose(rng) {
+                        ack_ok = true;
+                    }
+                }
+            }
+            if data_ok && ack_ok {
+                succeeded += 1;
+            }
+        }
+        match policy {
+            RetransmitPolicy::Selective => outstanding -= succeeded,
+            RetransmitPolicy::WholeRound => {
+                if succeeded == tries {
+                    outstanding = 0;
+                }
+            }
+        }
+    }
+    rounds
+}
+
 /// Monte-Carlo estimate of ρ̂: mean rounds over `trials` phases.
 pub fn estimate_rho(
     p: f64,
@@ -82,6 +151,45 @@ pub struct SlottedRun {
     pub total_time_s: f64,
     pub total_rounds: u64,
     pub supersteps: u64,
+    /// At least one phase hit the round cap without finishing — "the
+    /// system fails to operate" (§II); the time figure is a capped
+    /// lower bound, not a completion time.
+    pub saturated: bool,
+}
+
+/// As [`run_slotted_program`] but sampling rounds through an arbitrary
+/// [`LossModel`] via [`simulate_phase_rounds_model`] — the campaign
+/// engine's path for Gilbert–Elliott cells. Time accounting is identical.
+#[allow(clippy::too_many_arguments)]
+pub fn run_slotted_program_model<L: LossModel>(
+    w_total_s: f64,
+    supersteps: u64,
+    n: u64,
+    c: u64,
+    k: u32,
+    tau_s: f64,
+    policy: RetransmitPolicy,
+    loss: &mut L,
+    rng: &mut Rng,
+) -> SlottedRun {
+    let compute_per_step = w_total_s / supersteps as f64 / n as f64;
+    let mut total_time = 0.0;
+    let mut total_rounds = 0u64;
+    let mut saturated = false;
+    for _ in 0..supersteps {
+        let rounds = simulate_phase_rounds_model(loss, k, c, policy, rng, PHASE_ROUND_CAP);
+        saturated |= rounds >= PHASE_ROUND_CAP;
+        total_rounds += rounds;
+        match policy {
+            RetransmitPolicy::Selective => {
+                total_time += compute_per_step + rounds as f64 * 2.0 * tau_s;
+            }
+            RetransmitPolicy::WholeRound => {
+                total_time += rounds as f64 * (compute_per_step + 2.0 * tau_s);
+            }
+        }
+    }
+    SlottedRun { total_time_s: total_time, total_rounds, supersteps, saturated }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -100,8 +208,10 @@ pub fn run_slotted_program(
     let compute_per_step = w_total_s / supersteps as f64 / n as f64;
     let mut total_time = 0.0;
     let mut total_rounds = 0u64;
+    let mut saturated = false;
     for _ in 0..supersteps {
-        let rounds = simulate_phase_rounds(ps, c, policy, rng, 1_000_000);
+        let rounds = simulate_phase_rounds(ps, c, policy, rng, PHASE_ROUND_CAP);
+        saturated |= rounds >= PHASE_ROUND_CAP;
         total_rounds += rounds;
         match policy {
             RetransmitPolicy::Selective => {
@@ -113,7 +223,7 @@ pub fn run_slotted_program(
             }
         }
     }
-    SlottedRun { total_time_s: total_time, total_rounds, supersteps }
+    SlottedRun { total_time_s: total_time, total_rounds, supersteps, saturated }
 }
 
 #[cfg(test)]
@@ -199,6 +309,81 @@ mod tests {
     fn copies_increase_per_round_success() {
         assert!(per_round_success(0.1, 2) > per_round_success(0.1, 1));
         assert!(per_round_success(0.1, 5) > per_round_success(0.1, 2));
+    }
+
+    #[test]
+    fn model_based_rounds_match_closed_form_for_iid_loss() {
+        use crate::net::loss::Bernoulli;
+        let (p, k, c) = (0.2f64, 2u32, 32u64);
+        let ps = per_round_success(p, k);
+        let trials = 20_000u64;
+        let mut rng_a = Rng::new(51);
+        let mut rng_b = Rng::new(52);
+        let mut sum_model = 0u64;
+        let mut sum_closed = 0u64;
+        for _ in 0..trials {
+            let mut loss = Bernoulli::new(p);
+            sum_model += simulate_phase_rounds_model(
+                &mut loss, k, c, RetransmitPolicy::Selective, &mut rng_a, 1_000_000,
+            );
+            sum_closed += simulate_phase_rounds(
+                ps, c, RetransmitPolicy::Selective, &mut rng_b, 1_000_000,
+            );
+        }
+        let (a, b) = (sum_model as f64 / trials as f64, sum_closed as f64 / trials as f64);
+        assert!((a - b).abs() / b < 0.03, "model {a} vs closed-form {b}");
+    }
+
+    #[test]
+    fn bursts_collapse_k_copy_diversity() {
+        use crate::net::loss::{Bernoulli, GilbertElliott};
+        // Equal mean loss, k = 3: iid per-packet failure ~ p³ is tiny;
+        // bursts cover all 3 back-to-back copies at once, so the bursty
+        // channel needs strictly more rounds on average.
+        let (p, k, c) = (0.1f64, 3u32, 64u64);
+        let trials = 3_000u64;
+        let mut rng = Rng::new(77);
+        let mut iid_rounds = 0u64;
+        let mut ge_rounds = 0u64;
+        for _ in 0..trials {
+            let mut iid = Bernoulli::new(p);
+            iid_rounds += simulate_phase_rounds_model(
+                &mut iid, k, c, RetransmitPolicy::Selective, &mut rng, 1_000_000,
+            );
+            let mut ge = GilbertElliott::with_mean_loss(p, 8.0);
+            ge_rounds += simulate_phase_rounds_model(
+                &mut ge, k, c, RetransmitPolicy::Selective, &mut rng, 1_000_000,
+            );
+        }
+        assert!(
+            ge_rounds > iid_rounds,
+            "bursty {ge_rounds} rounds vs iid {iid_rounds}"
+        );
+    }
+
+    #[test]
+    fn model_based_whole_round_requires_all_packets() {
+        use crate::net::loss::Perfect;
+        let mut rng = Rng::new(5);
+        let mut loss = Perfect;
+        let r = simulate_phase_rounds_model(
+            &mut loss, 1, 100, RetransmitPolicy::WholeRound, &mut rng, 1000,
+        );
+        assert_eq!(r, 1);
+    }
+
+    #[test]
+    fn slotted_program_model_zero_loss_matches_ideal_time() {
+        use crate::net::loss::Perfect;
+        let mut rng = Rng::new(11);
+        let mut loss = Perfect;
+        let run = run_slotted_program_model(
+            3600.0, 10, 8, 64, 1, 0.05,
+            RetransmitPolicy::Selective, &mut loss, &mut rng,
+        );
+        let want = 3600.0 / 8.0 + 10.0 * 2.0 * 0.05;
+        assert!((run.total_time_s - want).abs() < 1e-9);
+        assert_eq!(run.total_rounds, 10);
     }
 
     #[test]

@@ -105,6 +105,28 @@ impl Topology {
     /// Symmetric: (i,j) and (j,i) share parameters, as end-to-end paths do
     /// to first order.
     pub fn planetlab_like(n: usize, ranges: &PlanetLabRanges, rng: &mut Rng) -> Topology {
+        Self::planetlab_like_impl(n, ranges, None, rng)
+    }
+
+    /// [`Topology::planetlab_like`] with every pair's loss process replaced
+    /// by a Gilbert–Elliott channel calibrated to the same per-pair mean
+    /// loss with `burst_len`-packet outage dwells (campaign ablation:
+    /// PlanetLab heterogeneity × temporal correlation).
+    pub fn planetlab_like_bursty(
+        n: usize,
+        ranges: &PlanetLabRanges,
+        burst_len: f64,
+        rng: &mut Rng,
+    ) -> Topology {
+        Self::planetlab_like_impl(n, ranges, Some(burst_len), rng)
+    }
+
+    fn planetlab_like_impl(
+        n: usize,
+        ranges: &PlanetLabRanges,
+        burst_len: Option<f64>,
+        rng: &mut Rng,
+    ) -> Topology {
         assert!(n >= 1);
         let mut links = vec![Link::default(); n * n];
         let mut loss = vec![PairLoss::Bernoulli(Bernoulli::new(0.0)); n * n];
@@ -120,7 +142,13 @@ impl Topology {
                     rng.range_f64(ranges.loss_lo, ranges.loss_hi)
                 };
                 let link = Link::from_mbytes(bw, rtt);
-                let pl = PairLoss::Bernoulli(Bernoulli::new(p.min(0.99)));
+                let p = p.min(0.99);
+                let pl = match burst_len {
+                    None => PairLoss::Bernoulli(Bernoulli::new(p)),
+                    Some(b) => {
+                        PairLoss::GilbertElliott(GilbertElliott::with_mean_loss(p, b))
+                    }
+                };
                 links[i * n + j] = link;
                 links[j * n + i] = link;
                 loss[i * n + j] = pl;
@@ -206,6 +234,27 @@ mod tests {
                     assert_eq!(t.link(i, j), t.link(j, i));
                     assert_eq!(t.mean_loss(i, j), t.mean_loss(j, i));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn planetlab_like_bursty_same_means_different_process() {
+        // Same rng seed → identical link draws and per-pair mean loss;
+        // only the loss *process* differs.
+        let ranges = PlanetLabRanges::default();
+        let mut rng_a = Rng::new(31);
+        let mut rng_b = Rng::new(31);
+        let iid = Topology::planetlab_like(6, &ranges, &mut rng_a);
+        let ge = Topology::planetlab_like_bursty(6, &ranges, 8.0, &mut rng_b);
+        for i in 0..6 {
+            for j in 0..6 {
+                if i == j {
+                    continue;
+                }
+                assert_eq!(iid.link(i, j), ge.link(i, j));
+                assert!((iid.mean_loss(i, j) - ge.mean_loss(i, j)).abs() < 1e-12);
+                assert!(matches!(ge.loss[i * 6 + j], PairLoss::GilbertElliott(_)));
             }
         }
     }

@@ -1,6 +1,15 @@
 //! Figure series generators.
+//!
+//! Figs 8–12 share one shape: a (row axis × loss axis) grid of eq-(6)
+//! operating points per `c(n)` panel. The grids are built by the
+//! campaign engine's [`lbsp_grid`] constructor and evaluated through the
+//! [`SpeedupEval`] abstraction, so the same generator runs on the
+//! [`crate::coordinator::SweepCoordinator`] (native pool / PJRT
+//! artifact) and on the [`crate::coordinator::CampaignEngine`]
+//! (native pool + memoized ρ̂).
 
-use crate::coordinator::SweepCoordinator;
+use crate::coordinator::campaign::lbsp_grid;
+use crate::coordinator::{CellSummary, SpeedupEval};
 use crate::measure::{run_campaign, CampaignConfig};
 use crate::model::conceptual;
 use crate::model::{Comm, LbspParams};
@@ -11,10 +20,16 @@ use super::{node_axis, Artifact, FIGURE_PS};
 /// Figs 1–3: the measurement campaign — loss / bandwidth / RTT vs packet
 /// size, averaged over the probed pairs.
 pub fn fig1_3(cfg: &CampaignConfig) -> Vec<Artifact> {
-    let points = run_campaign(cfg);
+    fig1_3_from_points(&run_campaign(cfg))
+}
+
+/// [`fig1_3`] over an already-run campaign, for callers that need the
+/// raw [`crate::measure::SizePoint`]s too (the campaign is the
+/// expensive part; don't probe every pair twice).
+pub fn fig1_3_from_points(points: &[crate::measure::SizePoint]) -> Vec<Artifact> {
     let mk = |title: &str, col: &str, sel: &dyn Fn(&crate::measure::SizePoint) -> (f64, f64)| {
         let mut t = Table::new(vec!["packet_bytes", col, "sem"]);
-        for p in &points {
+        for p in points {
             let (mean, sem) = sel(p);
             t.row(vec![p.size.to_string(), fmt_num(mean), fmt_num(sem)]);
         }
@@ -58,148 +73,147 @@ pub fn fig7() -> Vec<Artifact> {
         .collect()
 }
 
-fn lbsp_speedup_figure(
-    sweeper: &mut SweepCoordinator,
-    title_prefix: &str,
-    w_seconds: f64,
-    k: u32,
+/// Shared grid-figure emitter: one c(n) panel per class, each a (row ×
+/// loss) grid built by [`lbsp_grid`] and evaluated in one batch.
+fn grid_figure<E: SpeedupEval>(
+    eval: &mut E,
+    rows: &[f64],
+    row_header: &str,
+    fmt_row: impl Fn(f64) -> String,
+    title: impl Fn(&Comm) -> String,
+    mk: impl Fn(f64, f64, Comm) -> LbspParams,
 ) -> Vec<Artifact> {
     Comm::figure_classes()
         .into_iter()
         .map(|comm| {
-            let mut header = vec!["n".to_string()];
+            let mut header = vec![row_header.to_string()];
             header.extend(FIGURE_PS.iter().map(|p| format!("p={p}")));
             let mut t = Table::new(header);
-            // Batch all points of the panel through the coordinator.
-            let mut points = Vec::new();
-            for n in node_axis() {
-                for p in FIGURE_PS {
-                    points.push(LbspParams {
-                        w: w_seconds,
-                        n: n as f64,
-                        p,
-                        k,
-                        comm,
-                        ..Default::default()
-                    });
-                }
-            }
-            let speedups = sweeper.speedups(&points);
-            for (i, n) in node_axis().iter().enumerate() {
-                let mut row = vec![n.to_string()];
+            let points = lbsp_grid(rows, &FIGURE_PS, |row, p| mk(row, p, comm));
+            let speedups = eval.eval_speedups(&points);
+            for (i, &row_val) in rows.iter().enumerate() {
+                let mut row = vec![fmt_row(row_val)];
                 for j in 0..FIGURE_PS.len() {
                     row.push(fmt_num(speedups[i * FIGURE_PS.len() + j]));
                 }
                 t.row(row);
             }
-            Artifact {
-                title: format!("{title_prefix}: speedup, {}", comm.label()),
-                table: t,
-            }
+            Artifact { title: title(&comm), table: t }
         })
         .collect()
 }
 
+fn lbsp_speedup_figure<E: SpeedupEval>(
+    eval: &mut E,
+    title_prefix: &str,
+    w_seconds: f64,
+    k: u32,
+) -> Vec<Artifact> {
+    let rows: Vec<f64> = node_axis().iter().map(|&n| n as f64).collect();
+    grid_figure(
+        eval,
+        &rows,
+        "n",
+        |n| (n as u64).to_string(),
+        |comm| format!("{title_prefix}: speedup, {}", comm.label()),
+        |n, p, comm| LbspParams { w: w_seconds, n, p, k, comm, ..Default::default() },
+    )
+}
+
 /// Fig 8: L-BSP speedup, W = 4 h, k = 1, six c(n) panels.
-pub fn fig8(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
-    lbsp_speedup_figure(sweeper, "Fig 8 (L-BSP, W=4h, k=1)", 4.0 * 3600.0, 1)
+pub fn fig8<E: SpeedupEval>(eval: &mut E) -> Vec<Artifact> {
+    lbsp_speedup_figure(eval, "Fig 8 (L-BSP, W=4h, k=1)", 4.0 * 3600.0, 1)
 }
 
 /// Fig 9: limits of speedup for different p, W = 10 h, k = 1.
-pub fn fig9(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
-    lbsp_speedup_figure(sweeper, "Fig 9 (L-BSP, W=10h, k=1)", 10.0 * 3600.0, 1)
+pub fn fig9<E: SpeedupEval>(eval: &mut E) -> Vec<Artifact> {
+    lbsp_speedup_figure(eval, "Fig 9 (L-BSP, W=10h, k=1)", 10.0 * 3600.0, 1)
 }
 
 /// Fig 10: speedup vs packet copies k, W = 10 h, one table per c(n),
 /// rows k = 1..12, columns per p, at a representative n.
-pub fn fig10(sweeper: &mut SweepCoordinator, n: u64) -> Vec<Artifact> {
-    Comm::figure_classes()
-        .into_iter()
-        .map(|comm| {
-            let mut header = vec!["k".to_string()];
-            header.extend(FIGURE_PS.iter().map(|p| format!("p={p}")));
-            let mut t = Table::new(header);
-            let mut points = Vec::new();
-            for k in 1..=12u32 {
-                for p in FIGURE_PS {
-                    points.push(LbspParams {
-                        w: 10.0 * 3600.0,
-                        n: n as f64,
-                        p,
-                        k,
-                        comm,
-                        ..Default::default()
-                    });
-                }
-            }
-            let speedups = sweeper.speedups(&points);
-            for k in 1..=12usize {
-                let mut row = vec![k.to_string()];
-                for j in 0..FIGURE_PS.len() {
-                    row.push(fmt_num(speedups[(k - 1) * FIGURE_PS.len() + j]));
-                }
-                t.row(row);
-            }
-            Artifact {
-                title: format!("Fig 10 (L-BSP, W=10h, n={n}): speedup vs k, {}", comm.label()),
-                table: t,
-            }
-        })
-        .collect()
+pub fn fig10<E: SpeedupEval>(eval: &mut E, n: u64) -> Vec<Artifact> {
+    let rows: Vec<f64> = (1..=12).map(|k| k as f64).collect();
+    grid_figure(
+        eval,
+        &rows,
+        "k",
+        |k| (k as u32).to_string(),
+        |comm| format!("Fig 10 (L-BSP, W=10h, n={n}): speedup vs k, {}", comm.label()),
+        |k, p, comm| LbspParams {
+            w: 10.0 * 3600.0,
+            n: n as f64,
+            p,
+            k: k as u32,
+            comm,
+            ..Default::default()
+        },
+    )
 }
 
-fn work_size_figure(sweeper: &mut SweepCoordinator, fig: &str, n: u64) -> Vec<Artifact> {
+fn work_size_figure<E: SpeedupEval>(eval: &mut E, fig: &str, n: u64) -> Vec<Artifact> {
     // Work sizes from minutes to ~4 weeks, log-spaced.
     let works_h: Vec<f64> =
         vec![0.1, 0.5, 1.0, 2.0, 4.0, 10.0, 24.0, 72.0, 168.0, 672.0];
-    Comm::figure_classes()
-        .into_iter()
-        .map(|comm| {
-            let mut header = vec!["W_hours".to_string()];
-            header.extend(FIGURE_PS.iter().map(|p| format!("p={p}")));
-            let mut t = Table::new(header);
-            let mut points = Vec::new();
-            for &wh in &works_h {
-                for p in FIGURE_PS {
-                    points.push(LbspParams {
-                        w: wh * 3600.0,
-                        n: n as f64,
-                        p,
-                        k: 1,
-                        comm,
-                        ..Default::default()
-                    });
-                }
-            }
-            let speedups = sweeper.speedups(&points);
-            for (i, wh) in works_h.iter().enumerate() {
-                let mut row = vec![fmt_num(*wh)];
-                for j in 0..FIGURE_PS.len() {
-                    row.push(fmt_num(speedups[i * FIGURE_PS.len() + j]));
-                }
-                t.row(row);
-            }
-            Artifact {
-                title: format!("{fig} (n={n}): speedup vs work size, {}", comm.label()),
-                table: t,
-            }
-        })
-        .collect()
+    grid_figure(
+        eval,
+        &works_h,
+        "W_hours",
+        fmt_num,
+        |comm| format!("{fig} (n={n}): speedup vs work size, {}", comm.label()),
+        |wh, p, comm| LbspParams {
+            w: wh * 3600.0,
+            n: n as f64,
+            p,
+            k: 1,
+            comm,
+            ..Default::default()
+        },
+    )
 }
 
 /// Fig 11: speedup vs work size at n = 2.
-pub fn fig11(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
-    work_size_figure(sweeper, "Fig 11", 2)
+pub fn fig11<E: SpeedupEval>(eval: &mut E) -> Vec<Artifact> {
+    work_size_figure(eval, "Fig 11", 2)
 }
 
 /// Fig 12: speedup vs work size at n = 131072.
-pub fn fig12(sweeper: &mut SweepCoordinator) -> Vec<Artifact> {
-    work_size_figure(sweeper, "Fig 12", 131072)
+pub fn fig12<E: SpeedupEval>(eval: &mut E) -> Vec<Artifact> {
+    work_size_figure(eval, "Fig 12", 131072)
+}
+
+/// Campaign summary table: one row per cell with Monte-Carlo aggregates
+/// and the analytic prediction where the workload admits one.
+pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
+    let mut t = Table::new(vec![
+        "workload", "topo", "loss", "policy", "n", "p", "k", "S_mean", "S_sem", "S_p50",
+        "rounds", "done%", "rho_pred", "S_pred",
+    ]);
+    for s in cells {
+        t.row(vec![
+            s.cell.workload.label(),
+            s.cell.topology.label().to_string(),
+            s.cell.loss.label(),
+            format!("{:?}", s.cell.policy),
+            s.cell.n.to_string(),
+            fmt_num(s.cell.p),
+            s.cell.k.to_string(),
+            fmt_num(s.speedup.mean),
+            fmt_num(s.speedup.sem),
+            fmt_num(s.speedup.p50),
+            fmt_num(s.rounds.mean),
+            format!("{:.0}", s.completed_frac * 100.0),
+            fmt_num(s.rho_pred),
+            s.speedup_pred.map(fmt_num).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    Artifact { title: format!("Campaign summary ({} cells)", cells.len()), table: t }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{CampaignEngine, SweepCoordinator};
 
     #[test]
     fn fig7_has_six_panels_with_full_axes() {
@@ -234,5 +248,31 @@ mod tests {
         assert_eq!(a.len(), b.len());
         assert!(a[0].title.contains("n=2"));
         assert!(b[0].title.contains("n=131072"));
+    }
+
+    #[test]
+    fn campaign_engine_reproduces_sweeper_figures_exactly() {
+        // Same eq-(6) series underneath: the memoizing engine must emit
+        // byte-identical figure tables.
+        let mut sweeper = SweepCoordinator::native(2);
+        let mut engine = CampaignEngine::new(2);
+        for (a, b) in fig8(&mut sweeper).iter().zip(fig8(&mut engine).iter()) {
+            assert_eq!(a.title, b.title);
+            assert_eq!(a.table.csv(), b.table.csv());
+        }
+        // The W-axis figures revisit (q, c) across rows — the cache must
+        // have absorbed repeats.
+        let _ = fig11(&mut engine);
+        assert!(engine.rho_cache().hits() > 0);
+    }
+
+    #[test]
+    fn campaign_table_has_one_row_per_cell() {
+        use crate::coordinator::CampaignSpec;
+        let spec = CampaignSpec { replicas: 2, ..Default::default() };
+        let summaries = CampaignEngine::new(2).run(&spec);
+        let art = campaign_table(&summaries);
+        assert_eq!(art.table.n_rows(), spec.n_cells());
+        assert!(art.title.contains(&format!("{} cells", spec.n_cells())));
     }
 }

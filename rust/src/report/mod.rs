@@ -10,7 +10,9 @@
 mod figures;
 mod tables;
 
-pub use figures::{fig10, fig11, fig12, fig1_3, fig7, fig8, fig9};
+pub use figures::{
+    campaign_table, fig10, fig11, fig12, fig1_3, fig1_3_from_points, fig7, fig8, fig9,
+};
 pub use tables::{table1, table2};
 
 use crate::util::tables::Table;

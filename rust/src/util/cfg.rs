@@ -32,12 +32,19 @@ impl fmt::Display for Value {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("config line {line}: {msg}")]
+#[derive(Debug)]
 pub struct CfgError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for CfgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for CfgError {}
 
 /// Section → key → value.
 #[derive(Debug, Default, Clone)]

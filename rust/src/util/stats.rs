@@ -123,6 +123,45 @@ impl Sample {
     }
 }
 
+/// Frozen replica aggregate: mean ± SEM plus tail percentiles, computed
+/// once from a retained sample. This is the campaign engine's per-cell
+/// summary unit (speedup / rounds / time over replica seeds); derived
+/// `PartialEq` makes worker-count-invariance testable as plain equality.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: u64,
+    pub mean: f64,
+    pub sem: f64,
+    pub p10: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_values(xs: &[f64]) -> Summary {
+        let mut online = Online::new();
+        let mut sample = Sample::new();
+        for &x in xs {
+            online.push(x);
+            sample.push(x);
+        }
+        Summary {
+            n: online.count(),
+            mean: online.mean(),
+            // A single replica has no spread estimate; report 0 rather
+            // than NaN so summaries stay comparable.
+            sem: if online.count() < 2 { 0.0 } else { online.sem() },
+            p10: sample.percentile(10.0),
+            p50: sample.percentile(50.0),
+            p90: sample.percentile(90.0),
+            min: online.min(),
+            max: online.max(),
+        }
+    }
+}
+
 /// Fixed-width histogram over [lo, hi) with overflow/underflow bins.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -228,6 +267,26 @@ mod tests {
             s.push(3.0);
         }
         assert_eq!(s.mad(), 0.0);
+    }
+
+    #[test]
+    fn summary_from_values() {
+        let s = Summary::from_values(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!(s.sem > 0.0);
+    }
+
+    #[test]
+    fn summary_single_value_has_zero_sem() {
+        let s = Summary::from_values(&[7.0]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.sem, 0.0);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.p90, 7.0);
     }
 
     #[test]

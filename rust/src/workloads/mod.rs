@@ -17,12 +17,17 @@
 //! * [`fft`] — 2D FFT transpose method (§V-C) over the in-tree
 //!   [`fftcore`] radix-2 substrate; the all-to-all transpose rides the
 //!   lossy network.
+//! * [`synthetic`] — dial-a-`c(n)` exchange probe with exact modeled
+//!   sequential time; the campaign engine's DES-fidelity workload.
 
 pub mod fft;
 pub mod fftcore;
 pub mod laplace;
 pub mod matmul;
 pub mod sort;
+pub mod synthetic;
+
+pub use synthetic::SyntheticExchange;
 
 use crate::runtime::Runtime;
 

@@ -1,0 +1,130 @@
+//! Synthetic exchange workload — the campaign engine's calibrated probe.
+//!
+//! Every superstep each node charges a fixed local compute cost and sends
+//! `msgs_per_node` fixed-size messages round-robin across the other nodes,
+//! so `c = n × msgs_per_node` packets enter each communication phase —
+//! a dial-a-`c(n)` program whose modeled sequential time is exact
+//! (`n × supersteps × compute_s`), which is what makes its speedup samples
+//! directly comparable to the analytic eq-(6) prediction. Payloads carry a
+//! (node, step, index) tag and every delivery is counted, so the usual
+//! workload invariant holds: a reliability bug shows up as a wrong
+//! delivered count, not just odd timing.
+
+use crate::bsp::{BspProgram, Outgoing};
+use crate::net::NodeId;
+
+/// See module docs. Construct with [`SyntheticExchange::new`].
+#[derive(Clone, Debug)]
+pub struct SyntheticExchange {
+    n: usize,
+    supersteps: usize,
+    msgs_per_node: usize,
+    bytes: u64,
+    compute_s: f64,
+    /// Messages delivered so far (reliability check).
+    pub delivered: u64,
+}
+
+impl SyntheticExchange {
+    pub fn new(
+        n: usize,
+        supersteps: usize,
+        msgs_per_node: usize,
+        bytes: u64,
+        compute_s: f64,
+    ) -> SyntheticExchange {
+        assert!(n >= 1);
+        SyntheticExchange { n, supersteps, msgs_per_node, bytes, compute_s, delivered: 0 }
+    }
+
+    /// Modeled sequential time: all nodes' compute on one machine.
+    pub fn sequential_s(&self) -> f64 {
+        self.n as f64 * self.supersteps as f64 * self.compute_s
+    }
+
+    /// Messages expected per communication phase (`c` in the model).
+    pub fn phase_messages(&self) -> u64 {
+        if self.n < 2 {
+            return 0;
+        }
+        (self.n * self.msgs_per_node) as u64
+    }
+}
+
+impl BspProgram for SyntheticExchange {
+    type Msg = u64;
+
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn max_supersteps(&self) -> usize {
+        self.supersteps
+    }
+
+    fn compute(&mut self, node: NodeId, step: usize) -> (Vec<Outgoing<u64>>, f64) {
+        if self.n < 2 {
+            return (Vec::new(), self.compute_s);
+        }
+        let mut out = Vec::with_capacity(self.msgs_per_node);
+        for m in 0..self.msgs_per_node {
+            // Round-robin over the n-1 peers; never self.
+            let dst = (node + 1 + m % (self.n - 1)) % self.n;
+            let payload = ((node as u64) << 40) | ((step as u64) << 20) | m as u64;
+            out.push(Outgoing { dst, payload, bytes: self.bytes });
+        }
+        (out, self.compute_s)
+    }
+
+    fn deliver(&mut self, _node: NodeId, _from: NodeId, _payload: u64) {
+        self.delivered += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::BspRuntime;
+    use crate::net::link::Link;
+    use crate::net::topology::Topology;
+    use crate::net::transport::Network;
+
+    fn net(n: usize, p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.02), p), seed)
+    }
+
+    #[test]
+    fn delivers_every_message_under_loss() {
+        let mut prog = SyntheticExchange::new(4, 3, 5, 1024, 0.01);
+        let rep = BspRuntime::new(net(4, 0.25, 9)).run(&mut prog);
+        assert!(rep.completed);
+        // 4 nodes × 5 msgs × 3 supersteps.
+        assert_eq!(prog.delivered, 60);
+        assert_eq!(prog.phase_messages(), 20);
+    }
+
+    #[test]
+    fn destinations_never_self() {
+        let mut prog = SyntheticExchange::new(5, 1, 12, 64, 0.0);
+        for node in 0..5 {
+            let (msgs, _) = prog.compute(node, 0);
+            assert_eq!(msgs.len(), 12);
+            assert!(msgs.iter().all(|m| m.dst != node), "self-send from {node}");
+        }
+    }
+
+    #[test]
+    fn single_node_sends_nothing() {
+        let mut prog = SyntheticExchange::new(1, 2, 5, 64, 0.5);
+        let rep = BspRuntime::new(net(1, 0.0, 1)).run(&mut prog);
+        assert!(rep.completed);
+        assert_eq!(prog.delivered, 0);
+        assert_eq!(prog.sequential_s(), 1.0);
+    }
+
+    #[test]
+    fn sequential_time_is_exact() {
+        let prog = SyntheticExchange::new(8, 10, 2, 1024, 0.25);
+        assert!((prog.sequential_s() - 8.0 * 10.0 * 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,158 @@
+//! Campaign-engine invariants at realistic scale.
+//!
+//! 1. Seed-split correctness: a 100-cell campaign must produce bitwise
+//!    identical aggregates at 1 worker and 8 workers — the replica rng
+//!    streams are assigned on the leader in enumeration order, so worker
+//!    scheduling cannot leak into the statistics.
+//! 2. Burstiness ablation: Gilbert–Elliott loss at equal mean loss must
+//!    degrade speedup vs. iid whenever k-copy diversity is in play
+//!    (back-to-back copies die together inside one burst).
+
+use lbsp::coordinator::{
+    CampaignEngine, CampaignSpec, LossSpec, TopologySpec, Workload,
+};
+use lbsp::model::Comm;
+use lbsp::net::protocol::RetransmitPolicy;
+
+fn hundred_cell_spec() -> CampaignSpec {
+    // 5 × 5 × 2 × 2 = 100 cells exactly.
+    CampaignSpec {
+        workloads: vec![Workload::Slotted {
+            w_s: 4.0 * 3600.0,
+            supersteps: 20,
+            comm: Comm::Linear,
+            tau_s: 0.08,
+        }],
+        ns: vec![2, 4, 8, 16, 32],
+        ps: vec![0.0005, 0.045, 0.075, 0.1, 0.15],
+        ks: vec![1, 3],
+        policies: vec![RetransmitPolicy::Selective],
+        losses: vec![
+            LossSpec::Bernoulli,
+            LossSpec::GilbertElliott { burst_len: 8.0 },
+        ],
+        topologies: vec![TopologySpec::Uniform],
+        replicas: 3,
+        seed: 0xDE7E_2211,
+    }
+}
+
+#[test]
+fn hundred_cell_campaign_is_worker_count_invariant() {
+    let spec = hundred_cell_spec();
+    assert_eq!(spec.n_cells(), 100);
+    let serial = CampaignEngine::new(1).run(&spec);
+    let parallel = CampaignEngine::new(8).run(&spec);
+    assert_eq!(serial.len(), 100);
+    // Bitwise equality of every aggregate — Summary derives PartialEq on
+    // raw f64s, so any scheduling leak into the streams shows up here.
+    assert_eq!(serial, parallel);
+}
+
+#[test]
+fn replica_count_is_respected() {
+    let spec = CampaignSpec { replicas: 5, ..hundred_cell_spec() };
+    let out = CampaignEngine::new(4).run(&spec);
+    assert!(out.iter().all(|s| s.replicas == 5));
+    assert!(out.iter().all(|s| s.speedup.n == 5));
+}
+
+#[test]
+fn bursty_loss_degrades_speedup_vs_iid_at_equal_mean_loss() {
+    // One operating point, two loss processes, same mean loss. k = 3:
+    // under iid the per-packet round failure is q = p³(2−p³) ≈ 2e-3;
+    // under 8-packet bursts all three back-to-back copies share the
+    // outage, so the effective failure stays ~p and rounds pile up.
+    let base = CampaignSpec {
+        workloads: vec![Workload::Slotted {
+            w_s: 4.0 * 3600.0,
+            supersteps: 50,
+            comm: Comm::Linear,
+            tau_s: 0.08,
+        }],
+        ns: vec![16],
+        ps: vec![0.1],
+        ks: vec![3],
+        policies: vec![RetransmitPolicy::Selective],
+        losses: vec![
+            LossSpec::Bernoulli,
+            LossSpec::GilbertElliott { burst_len: 8.0 },
+        ],
+        topologies: vec![TopologySpec::Uniform],
+        replicas: 32,
+        seed: 0xABAD_CAFE,
+    };
+    let out = CampaignEngine::new(4).run(&base);
+    assert_eq!(out.len(), 2);
+    let iid = &out[0];
+    let ge = &out[1];
+    assert_eq!(iid.cell.loss, LossSpec::Bernoulli);
+    assert!(matches!(ge.cell.loss, LossSpec::GilbertElliott { .. }));
+    assert!(
+        ge.speedup.mean < iid.speedup.mean,
+        "bursty {} vs iid {}",
+        ge.speedup.mean,
+        iid.speedup.mean
+    );
+    assert!(
+        ge.rounds.mean > iid.rounds.mean,
+        "bursty rounds {} vs iid {}",
+        ge.rounds.mean,
+        iid.rounds.mean
+    );
+}
+
+#[test]
+fn synthetic_des_campaign_is_worker_count_invariant() {
+    // The packet-level DES path (real BSP program, PlanetLab pairs) obeys
+    // the same reproducibility contract as the slotted path.
+    let spec = CampaignSpec {
+        workloads: vec![Workload::Synthetic {
+            supersteps: 2,
+            msgs_per_node: 2,
+            bytes: 2048,
+            compute_s: 0.05,
+        }],
+        ns: vec![2, 4],
+        ps: vec![0.05, 0.12],
+        ks: vec![1, 2],
+        policies: vec![RetransmitPolicy::Selective],
+        losses: vec![LossSpec::Bernoulli],
+        topologies: vec![TopologySpec::Uniform, TopologySpec::PlanetLabLike],
+        replicas: 3,
+        seed: 77,
+    };
+    let a = CampaignEngine::new(1).run(&spec);
+    let b = CampaignEngine::new(6).run(&spec);
+    assert_eq!(a, b);
+    assert!(a.iter().all(|s| s.completed_frac == 1.0));
+}
+
+#[test]
+fn more_copies_help_under_iid_loss() {
+    // Sanity sweep across the k axis: at p = 0.15 with c = n = 16 the
+    // paper's k* > 1 (retransmission tax beats the duplication tax).
+    let spec = CampaignSpec {
+        ns: vec![16],
+        ps: vec![0.15],
+        ks: vec![1, 2],
+        replicas: 32,
+        seed: 3,
+        ..hundred_cell_spec()
+    };
+    let spec = CampaignSpec {
+        losses: vec![LossSpec::Bernoulli],
+        ..spec
+    };
+    let out = CampaignEngine::new(4).run(&spec);
+    assert_eq!(out.len(), 2);
+    let (k1, k2) = (&out[0], &out[1]);
+    assert_eq!(k1.cell.k, 1);
+    assert_eq!(k2.cell.k, 2);
+    assert!(
+        k2.rounds.mean < k1.rounds.mean,
+        "k=2 rounds {} vs k=1 {}",
+        k2.rounds.mean,
+        k1.rounds.mean
+    );
+}

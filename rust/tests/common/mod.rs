@@ -1,0 +1,26 @@
+//! Shared helpers for the integration-test binaries.
+
+use std::path::Path;
+
+use lbsp::runtime::Runtime;
+
+/// Load the AOT artifact runtime, or skip: the sandbox build vendors an
+/// `xla` stub (no PJRT runtime), and dev machines may not have run
+/// `make artifacts`. One copy of the skip policy for every PJRT-backed
+/// test binary.
+///
+/// Skipping must not mask regressions on machines where the artifacts
+/// are supposed to exist: set `LBSP_REQUIRE_ARTIFACTS=1` (artifact-
+/// equipped CI does) to turn a load failure into a hard test failure.
+pub fn runtime() -> Option<Runtime> {
+    match Runtime::load_dir(Path::new("artifacts")) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            if std::env::var_os("LBSP_REQUIRE_ARTIFACTS").is_some() {
+                panic!("LBSP_REQUIRE_ARTIFACTS set but artifact load failed: {e}");
+            }
+            eprintln!("skipping PJRT-backed test: {e}");
+            None
+        }
+    }
+}

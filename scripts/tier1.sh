@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 verification: one command for CI and humans.
+#
+#   scripts/tier1.sh
+#
+# Runs the release build and the full test suite from the repo root, plus
+# `cargo fmt --check` when rustfmt is installed. Fails fast with a clear
+# message when no Rust toolchain is present (e.g. the compile-only sandbox,
+# which carries the Python/JAX side but no cargo).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found on PATH — cannot run the Rust tier-1 suite." >&2
+    echo "tier1: install a Rust toolchain (rustup.rs) and re-run." >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "(cargo fmt not installed; skipping format check)"
+fi
+
+echo "tier1: OK"

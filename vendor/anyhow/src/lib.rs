@@ -1,0 +1,183 @@
+//! Minimal in-tree substitute for the `anyhow` crate.
+//!
+//! The sandbox vendors no external crates; this implements exactly the
+//! subset the codebase uses — [`Error`], [`Result`], the [`Context`]
+//! extension trait on `Result`/`Option`, and the [`bail!`]/[`anyhow!`]
+//! macros — with the same semantics (context wraps outermost-first, the
+//! original error is kept as `source`). Like real `anyhow`, [`Error`]
+//! deliberately does *not* implement `std::error::Error`, which is what
+//! lets the blanket `From<E: Error>` conversion coexist with it.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// Result alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying boxed error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    fn wrap<C: Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The lowest-level source, if one was captured.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("not a number")?;
+        if v == 0 {
+            bail!("zero is not allowed (got {s:?})");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn ok_path() {
+        assert_eq!(parse("7").unwrap(), 7);
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not a number:"), "{e}");
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse("0").unwrap_err();
+        assert!(e.to_string().contains("zero"), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<u32, std::num::ParseIntError> = "y".parse();
+        let e = r.with_context(|| format!("parsing {:?}", "y")).unwrap_err();
+        assert!(e.to_string().starts_with("parsing \"y\":"), "{e}");
+    }
+}

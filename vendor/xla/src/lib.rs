@@ -1,0 +1,134 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The sandbox ships no PJRT runtime, so [`PjRtClient::cpu`] fails with a
+//! clean, descriptive error and every artifact-backed code path in `lbsp`
+//! degrades to its native fallback (the callers already handle
+//! `Runtime::load_default()` errors by skipping the PJRT backend). The
+//! types and signatures mirror the real bindings so swapping the genuine
+//! crate back in is a one-line `Cargo.toml` change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every fallible operation reports PJRT as unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} unavailable (this build vendors no PJRT runtime; \
+         artifact-backed backends are disabled)"
+    )))
+}
+
+/// PJRT client handle. Construction always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("executable compilation")
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host-side literal value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("literal reshape")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("tuple unwrap")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("literal readback")
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfer")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT"), "{err}");
+    }
+
+    #[test]
+    fn hlo_parsing_fails_cleanly() {
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
