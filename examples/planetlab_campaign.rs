@@ -18,7 +18,7 @@
 //! stdout (timing and worker details go to stderr so stdout is
 //! byte-identical).
 
-use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, Workload};
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, WorkloadSpec};
 use lbsp::measure::{run_campaign, CampaignConfig};
 use lbsp::model::Comm;
 use lbsp::report::{campaign_table, fig1_3_from_points};
@@ -55,7 +55,7 @@ fn main() {
 
     // --- Part 2: Monte-Carlo campaign across the measured band.
     let spec = CampaignSpec {
-        workloads: vec![Workload::Slotted {
+        workloads: vec![WorkloadSpec::Slotted {
             w_s: 4.0 * 3600.0,
             supersteps: 20,
             comm: Comm::Linear,

@@ -1,15 +1,20 @@
 //! CAMPAIGN_SCALING — worker-count scaling of the Monte-Carlo campaign
 //! engine on a 560-cell end-to-end grid, plus the determinism invariant
 //! (aggregates must be bitwise identical at every worker count).
+//!
+//! Besides the stdout report, the bench persists a machine-readable
+//! `BENCH_campaign.json` (override the path with `LBSP_BENCH_OUT`) so
+//! the perf trajectory — runs/s per worker count and the 1→8 scaling
+//! factor — is trackable across PRs.
 
-use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, Workload};
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, WorkloadSpec};
 use lbsp::model::Comm;
 use lbsp::net::protocol::RetransmitPolicy;
 use lbsp::util::bench::{bench_units, black_box};
 
 fn grid() -> CampaignSpec {
     CampaignSpec {
-        workloads: vec![Workload::Slotted {
+        workloads: vec![WorkloadSpec::Slotted {
             w_s: 4.0 * 3600.0,
             supersteps: 20,
             comm: Comm::Linear,
@@ -75,4 +80,34 @@ fn main() {
         "\n1 -> 8 worker throughput: x{:.2} (target >= 3.0 on >= 8 hardware threads)",
         t1 / t8
     );
+
+    // --- machine-readable artifact for cross-PR perf tracking.
+    let cells_per_run = spec.n_cells() as f64;
+    let series: Vec<String> = medians
+        .iter()
+        .map(|&(workers, t)| {
+            format!(
+                "{{\"workers\":{workers},\"median_s\":{t:?},\"runs_per_s\":{:?},\"cells_per_s\":{:?}}}",
+                runs / t,
+                cells_per_run / t
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"campaign_scaling\",\"cells\":{},\"replicas\":{},\"runs\":{},",
+            "\"series\":[{}],\"scaling_1_to_8\":{:?}}}\n"
+        ),
+        spec.n_cells(),
+        spec.replicas,
+        spec.n_runs(),
+        series.join(","),
+        t1 / t8
+    );
+    let out = std::env::var("LBSP_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_campaign.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

@@ -7,27 +7,49 @@
 //! × replica seeds — over the [`WorkQueue`] thread pool and aggregates
 //! each cell into [`Summary`] statistics (mean, SEM, percentiles).
 //!
-//! Reproducibility contract: every replica's [`Rng`] stream is split from
-//! one master generator *on the leader*, in the deterministic
-//! cell-major/replica-minor enumeration order, before any work is
-//! dispatched; [`WorkQueue::map_chunked`] reassembles results in input
-//! order. Aggregates are therefore **bitwise identical for any worker
-//! count** — `workers = 1` and `workers = 8` produce equal
-//! [`CellSummary`] values (see `rust/tests/campaign_engine.rs`).
+//! ## Workload axis
 //!
-//! Two workload fidelities share the grid:
+//! [`WorkloadSpec`] names what one replica runs. Two fidelities share the
+//! grid:
 //!
-//! * [`Workload::Slotted`] — the paper's stochastic round abstraction
+//! * [`WorkloadSpec::Slotted`] — the paper's stochastic round abstraction
 //!   (`net::rounds`): fastest, exact against eq (3)/(6), and the only
 //!   practical choice for 10³+-cell grids.
-//! * [`Workload::Synthetic`] — a real BSP program over the packet-level
-//!   DES ([`workloads::synthetic`]), with acks, k-copy duplication,
-//!   timeouts and per-pair PlanetLab heterogeneity.
+//! * Every other variant — `Synthetic`, `Matmul`, `Sort`, `Fft`,
+//!   `Laplace` — is a **real BSP program over the packet-level DES**,
+//!   instantiated through the [`DistWorkload`] trait
+//!   ([`WorkloadSpec::instantiate`]): acks, k-copy duplication, timeouts,
+//!   per-pair PlanetLab heterogeneity, and per-replica validation of the
+//!   output data against the workload's sequential reference
+//!   ([`CellSummary::validated_frac`]). The §V workloads run as campaign
+//!   cells exactly like the synthetic probe.
+//!
+//! ## Reproducibility contract
+//!
+//! Every replica's [`Rng`] stream is split from one master generator *on
+//! the leader*, in the deterministic cell-major/replica-minor enumeration
+//! order, before any work is dispatched; [`WorkQueue::map_chunked`]
+//! reassembles results in input order. Aggregates are therefore **bitwise
+//! identical for any worker count** — `workers = 1` and `workers = 8`
+//! produce equal [`CellSummary`] values (see
+//! `rust/tests/campaign_engine.rs`), for slotted *and* real-workload
+//! cells, in fixed-replica *and* adaptive mode.
+//!
+//! ## Adaptive replicas
+//!
+//! With [`CampaignSpec::sem_target`] set, the engine re-dispatches
+//! replica batches per cell until the speedup SEM drops to the target or
+//! the [`CampaignSpec::max_replicas`] cap is hit — easy cells stop after
+//! one batch while noisy cells keep sampling. Batch composition depends
+//! only on worker-count-invariant aggregates, so the contract above
+//! still holds. Fixed-replica runs use the original per-replica seeding
+//! and are byte-for-byte unaffected by the adaptive machinery.
 //!
 //! Analytic predictions ride along: each cell carries its eq-(1)/(3) ρ̂,
 //! memoized in a [`RhoCache`] because grids revisit identical `(q, c)`
 //! operating points once per replica while the distinct-key count stays
-//! tiny (|p| × |k| × |n|).
+//! tiny (|p| × |k| × |n|). Campaign output persists through
+//! [`crate::report::artifacts`] (`lbsp campaign --out`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,7 +66,9 @@ use crate::net::topology::{PlanetLabRanges, Topology};
 use crate::net::transport::Network;
 use crate::util::prng::Rng;
 use crate::util::stats::Summary;
-use crate::workloads::SyntheticExchange;
+use crate::workloads::{
+    DistWorkload, FftCell, LaplaceCell, MatmulCell, SortCell, SyntheticExchange,
+};
 
 use super::queue::WorkQueue;
 
@@ -87,10 +111,13 @@ impl TopologySpec {
     }
 }
 
-/// Workload axis of the grid: what one replica actually runs.
+/// Workload axis of the grid: what one replica actually runs. All
+/// variants except [`WorkloadSpec::Slotted`] instantiate a
+/// [`DistWorkload`] over the packet-level DES (the cell's `n` axis is
+/// the node count; workload-shape knobs live here).
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Workload {
-    /// Real BSP program ([`SyntheticExchange`]) over the packet-level DES:
+pub enum WorkloadSpec {
+    /// Real BSP probe ([`SyntheticExchange`]) over the packet-level DES:
     /// `supersteps` × (`compute_s` local work, `n × msgs_per_node`
     /// messages of `bytes` through the reliable phase protocol).
     Synthetic {
@@ -109,16 +136,62 @@ pub enum Workload {
         comm: Comm,
         tau_s: f64,
     },
+    /// §V-A SUMMA matmul: `√n × √n` node grid of `block × block` blocks
+    /// (the cell's `n` must be a perfect square).
+    Matmul { block: usize },
+    /// §V-B distributed bitonic sort: `keys_per_node` keys on each of the
+    /// cell's `n` nodes (`n` must be a power of two).
+    Sort { keys_per_node: usize },
+    /// §V-C 2D FFT-TM: `size × size` complex grid over the cell's `n`
+    /// nodes (`size` a power of two divisible by `n`).
+    Fft { size: usize },
+    /// §V-D Jacobi/Laplace: `n` row bands of `h × w`, `sweeps` sweeps.
+    Laplace { h: usize, w: usize, sweeps: usize },
 }
 
-impl Workload {
+impl WorkloadSpec {
     pub fn label(&self) -> String {
         match self {
-            Workload::Synthetic { supersteps, msgs_per_node, .. } => {
+            WorkloadSpec::Synthetic { supersteps, msgs_per_node, .. } => {
                 format!("synthetic(r={supersteps},m={msgs_per_node})")
             }
-            Workload::Slotted { w_s, comm, .. } => {
+            WorkloadSpec::Slotted { w_s, comm, .. } => {
                 format!("slotted(W={}h,{})", w_s / 3600.0, comm.label())
+            }
+            WorkloadSpec::Matmul { block } => format!("matmul(e={block})"),
+            WorkloadSpec::Sort { keys_per_node } => format!("sort(m={keys_per_node})"),
+            WorkloadSpec::Fft { size } => format!("fft(N={size})"),
+            WorkloadSpec::Laplace { h, w, sweeps } => format!("laplace({h}x{w},s={sweeps})"),
+        }
+    }
+
+    /// The slotted abstraction has no DES instantiation; everything else
+    /// does.
+    pub fn is_slotted(&self) -> bool {
+        matches!(self, WorkloadSpec::Slotted { .. })
+    }
+
+    /// Instantiate the [`DistWorkload`] for one replica at node count
+    /// `n`, drawing input data deterministically from `rng`.
+    ///
+    /// Panics on [`WorkloadSpec::Slotted`] (no DES form) and on node
+    /// counts a workload cannot tile (matmul: non-square; sort: not a
+    /// power of two; fft: `size % n != 0`).
+    pub fn instantiate(&self, n: usize, rng: &mut Rng) -> Box<dyn DistWorkload> {
+        match *self {
+            WorkloadSpec::Synthetic { supersteps, msgs_per_node, bytes, compute_s } => {
+                Box::new(SyntheticExchange::new(n, supersteps, msgs_per_node, bytes, compute_s))
+            }
+            WorkloadSpec::Matmul { block } => Box::new(MatmulCell::sample(n, block, rng)),
+            WorkloadSpec::Sort { keys_per_node } => {
+                Box::new(SortCell::sample(n, keys_per_node, rng))
+            }
+            WorkloadSpec::Fft { size } => Box::new(FftCell::sample(n, size, rng)),
+            WorkloadSpec::Laplace { h, w, sweeps } => {
+                Box::new(LaplaceCell::sample(n, h, w, sweeps, rng))
+            }
+            WorkloadSpec::Slotted { .. } => {
+                panic!("slotted cells have no packet-level DES instantiation")
             }
         }
     }
@@ -127,7 +200,7 @@ impl Workload {
 /// One grid cell — the cross-product point every replica of it shares.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CellSpec {
-    pub workload: Workload,
+    pub workload: WorkloadSpec,
     pub n: usize,
     pub p: f64,
     pub k: u32,
@@ -138,19 +211,35 @@ pub struct CellSpec {
 
 impl CellSpec {
     /// Packets per communication phase, `c`, as the analytic model sees
-    /// it. For Slotted cells this applies the same `round().max(1.0)`
-    /// the simulation uses, so predictions and Monte-Carlo replicas
-    /// describe the identical operating point.
+    /// it — the paper's per-workload `c(P)` family at this cell's `n`.
+    /// For Slotted cells this applies the same `round().max(1.0)` the
+    /// simulation uses, so predictions and Monte-Carlo replicas describe
+    /// the identical operating point; for DES cells it matches
+    /// [`DistWorkload::phase_packets`] of the instantiated workload.
     pub fn phase_packets(&self) -> f64 {
+        let n = self.n;
         match self.workload {
-            Workload::Synthetic { msgs_per_node, .. } => {
-                if self.n < 2 {
+            WorkloadSpec::Synthetic { msgs_per_node, .. } => {
+                if n < 2 {
                     0.0
                 } else {
-                    (self.n * msgs_per_node) as f64
+                    (n * msgs_per_node) as f64
                 }
             }
-            Workload::Slotted { comm, .. } => comm.eval(self.n as f64).round().max(1.0),
+            WorkloadSpec::Slotted { comm, .. } => comm.eval(n as f64).round().max(1.0),
+            WorkloadSpec::Matmul { .. } => {
+                let q = (n as f64).sqrt().round() as usize;
+                (2 * q * q.saturating_sub(1)) as f64
+            }
+            WorkloadSpec::Sort { .. } => {
+                if n < 2 {
+                    0.0
+                } else {
+                    n as f64
+                }
+            }
+            WorkloadSpec::Fft { .. } => (n * n.saturating_sub(1)) as f64,
+            WorkloadSpec::Laplace { .. } => (2 * n.saturating_sub(1)) as f64,
         }
     }
 }
@@ -158,23 +247,32 @@ impl CellSpec {
 /// The full campaign grid: every axis plus replication and the seed.
 #[derive(Clone, Debug)]
 pub struct CampaignSpec {
-    pub workloads: Vec<Workload>,
+    pub workloads: Vec<WorkloadSpec>,
     pub ns: Vec<usize>,
     pub ps: Vec<f64>,
     pub ks: Vec<u32>,
     pub policies: Vec<RetransmitPolicy>,
     pub losses: Vec<LossSpec>,
     pub topologies: Vec<TopologySpec>,
-    /// Independent replica runs per cell.
+    /// Independent replica runs per cell (fixed mode), or the batch size
+    /// per dispatch round (adaptive mode).
     pub replicas: usize,
     pub seed: u64,
+    /// Adaptive-replica mode: keep dispatching `replicas`-sized batches
+    /// per cell until the speedup SEM is ≤ this target (needs ≥ 2
+    /// samples) or `max_replicas` is reached. `None` = fixed mode.
+    pub sem_target: Option<f64>,
+    /// Per-cell replica cap for adaptive mode (ignored in fixed mode).
+    /// Caps below the batch size clamp the batch; a SEM needs at least
+    /// two samples, so values below 2 are treated as 2.
+    pub max_replicas: usize,
 }
 
 impl Default for CampaignSpec {
     /// A PlanetLab-band slotted grid: 4×3×3 = 36 cells × 8 replicas.
     fn default() -> CampaignSpec {
         CampaignSpec {
-            workloads: vec![Workload::Slotted {
+            workloads: vec![WorkloadSpec::Slotted {
                 w_s: 4.0 * 3600.0,
                 supersteps: 20,
                 comm: Comm::Linear,
@@ -188,6 +286,8 @@ impl Default for CampaignSpec {
             topologies: vec![TopologySpec::Uniform],
             replicas: 8,
             seed: 0x9_CA4B,
+            sem_target: None,
+            max_replicas: 256,
         }
     }
 }
@@ -234,6 +334,10 @@ impl CampaignSpec {
             * self.topologies.len()
     }
 
+    /// Total replica runs in fixed mode. Adaptive mode decides per cell
+    /// at runtime (between one batch of `replicas.clamp(2, max_replicas)`
+    /// and `max_replicas` runs each) — sum the per-cell
+    /// [`CellSummary::replicas`] for the actual count.
     pub fn n_runs(&self) -> usize {
         self.n_cells() * self.replicas
     }
@@ -250,6 +354,11 @@ struct ReplicaResult {
     time_s: f64,
     completed: bool,
     converged: bool,
+    /// Output data matched the sequential reference (DES workloads);
+    /// vacuously `completed` for slotted cells, which move no data.
+    validated: bool,
+    /// Distinct protocol-level data packets sent over the run.
+    data_packets: f64,
 }
 
 /// Aggregated statistics for one cell over all its replicas.
@@ -260,23 +369,31 @@ pub struct CellSummary {
     pub speedup: Summary,
     pub rounds: Summary,
     pub time_s: Summary,
+    /// Distinct data packets sent per replica (DES cells count the
+    /// protocol's transfers; slotted cells report the modeled `c·r`).
+    pub data_packets: Summary,
     /// Fraction of replicas whose every phase completed (no aborts, no
     /// round-cap saturation) — the campaign's reliability signal.
     pub completed_frac: f64,
     /// Fraction of replicas whose program *declared* convergence
     /// ([`crate::bsp::RunOutcome::Converged`], i.e. `done()` fired).
-    /// Fixed-length programs — [`SyntheticExchange`] and every
-    /// [`Workload::Slotted`] cell — end at `RanAllSupersteps` by design
-    /// and count 0 here; use `completed_frac` for abort detection. The
-    /// field becomes informative when iterative `done()`-driven
-    /// workloads join the grid: truncated runs then show up as
-    /// `completed_frac = 1` with `converged_frac < 1`.
+    /// Fixed-length programs — every in-tree [`DistWorkload`] and every
+    /// [`WorkloadSpec::Slotted`] cell — end at `RanAllSupersteps` by
+    /// design and count 0 here; use `completed_frac` for abort
+    /// detection. The field becomes informative when iterative
+    /// `done()`-driven workloads join the grid: truncated runs then show
+    /// up as `completed_frac = 1` with `converged_frac < 1`.
     pub converged_frac: f64,
+    /// Fraction of replicas whose output data matched the workload's
+    /// sequential reference — the wrong-data-not-just-counters contract
+    /// from `workloads`. Slotted cells (no data) report their
+    /// `completed_frac`.
+    pub validated_frac: f64,
     /// Analytic ρ̂ at the cell's (q, c): eq (3) for Selective (via the
     /// engine's [`RhoCache`]), eq (1) for WholeRound.
     pub rho_pred: f64,
     /// Analytic expected speedup, where the workload admits a closed
-    /// form (Slotted cells); `None` for DES-backed Synthetic cells.
+    /// form (Slotted cells); `None` for DES-backed cells.
     pub speedup_pred: Option<f64>,
 }
 
@@ -329,6 +446,14 @@ impl RhoCache {
     }
 }
 
+/// One dispatchable replica: a cell plus its pre-split rng stream.
+#[derive(Clone)]
+struct Task {
+    cell_idx: usize,
+    cell: CellSpec,
+    rng: Rng,
+}
+
 /// The engine: a worker count, a chunking policy and a ρ̂ cache.
 pub struct CampaignEngine {
     pub workers: usize,
@@ -350,19 +475,23 @@ impl CampaignEngine {
 
     /// Run the campaign: one [`CellSummary`] per cell, in
     /// [`CampaignSpec::cells`] order, bitwise independent of `workers`.
+    /// Dispatches to the fixed- or adaptive-replica path on
+    /// [`CampaignSpec::sem_target`].
     pub fn run(&self, spec: &CampaignSpec) -> Vec<CellSummary> {
         assert!(spec.replicas >= 1, "campaign needs at least one replica");
+        match spec.sem_target {
+            None => self.run_fixed(spec),
+            Some(target) => self.run_adaptive(spec, target),
+        }
+    }
+
+    /// Fixed-replica path: exactly `spec.replicas` runs per cell.
+    fn run_fixed(&self, spec: &CampaignSpec) -> Vec<CellSummary> {
         let cells = spec.cells();
 
         // Leader-side seed derivation: split one stream per replica task
         // in enumeration order, before any dispatch. This is the whole
         // reproducibility argument — workers never touch the master rng.
-        #[derive(Clone)]
-        struct Task {
-            cell_idx: usize,
-            cell: CellSpec,
-            rng: Rng,
-        }
         let mut master = Rng::new(spec.seed);
         let mut tasks = Vec::with_capacity(spec.n_runs());
         for (cell_idx, &cell) in cells.iter().enumerate() {
@@ -371,27 +500,89 @@ impl CampaignEngine {
             }
         }
 
-        let results: Vec<(usize, ReplicaResult)> = WorkQueue::map_chunked(
-            tasks,
-            self.chunk_size.max(1),
-            self.workers,
-            |chunk| {
-                chunk
-                    .iter()
-                    .map(|t| (t.cell_idx, run_replica(&t.cell, t.rng.clone())))
-                    .collect()
-            },
-        );
+        let results = self.dispatch(tasks);
+        let mut summaries = Vec::with_capacity(cells.len());
+        for (ci, &cell) in cells.iter().enumerate() {
+            let start = ci * spec.replicas;
+            let rs: Vec<ReplicaResult> = results[start..start + spec.replicas]
+                .iter()
+                .map(|&(i, r)| {
+                    debug_assert_eq!(i, ci, "ordering violated");
+                    r
+                })
+                .collect();
+            summaries.push(self.summarize(cell, &rs));
+        }
+        summaries
+    }
 
-        cells
-            .iter()
-            .enumerate()
-            .map(|(ci, &cell)| {
-                let rs = &results[ci * spec.replicas..(ci + 1) * spec.replicas];
-                debug_assert!(rs.iter().all(|&(i, _)| i == ci), "ordering violated");
-                self.summarize(cell, rs)
-            })
-            .collect()
+    /// Adaptive-replica path: re-dispatch `spec.replicas`-sized batches
+    /// per still-active cell until the speedup SEM is ≤ `target` (with
+    /// ≥ 2 samples) or `spec.max_replicas` is reached.
+    ///
+    /// Seeding differs from the fixed path so batch boundaries cannot
+    /// leak into the streams: each cell gets its own master split once
+    /// up front (enumeration order), and replica `i` of a cell is always
+    /// the `i`-th split of that master — identical for every worker
+    /// count and every stopping trajectory.
+    fn run_adaptive(&self, spec: &CampaignSpec, target: f64) -> Vec<CellSummary> {
+        let cells = spec.cells();
+        // SEM needs ≥ 2 samples, so both floor at 2; beyond that the cap
+        // wins — a `max_replicas` below the batch size clamps the batch
+        // rather than silently overshooting the user's bound.
+        let cap = spec.max_replicas.max(2);
+        let batch = spec.replicas.clamp(2, cap);
+
+        let mut master = Rng::new(spec.seed);
+        let mut cell_masters: Vec<Rng> = cells.iter().map(|_| master.split()).collect();
+        let mut samples: Vec<Vec<ReplicaResult>> = vec![Vec::new(); cells.len()];
+        let mut active: Vec<usize> = (0..cells.len()).collect();
+
+        while !active.is_empty() {
+            let mut tasks = Vec::new();
+            for &ci in &active {
+                let take = batch.min(cap - samples[ci].len());
+                for _ in 0..take {
+                    tasks.push(Task {
+                        cell_idx: ci,
+                        cell: cells[ci],
+                        rng: cell_masters[ci].split(),
+                    });
+                }
+            }
+            for (ci, r) in self.dispatch(tasks) {
+                samples[ci].push(r);
+            }
+            active.retain(|&ci| {
+                if samples[ci].len() >= cap {
+                    return false;
+                }
+                let speedups: Vec<f64> = samples[ci].iter().map(|r| r.speedup).collect();
+                match Summary::from_values(&speedups).sem_defined() {
+                    // A 0/1-sample cell has no SEM estimate yet — keep
+                    // sampling (see util::stats::Summary::sem_defined).
+                    None => true,
+                    Some(sem) => sem > target,
+                }
+            });
+        }
+
+        let mut summaries = Vec::with_capacity(cells.len());
+        for (ci, &cell) in cells.iter().enumerate() {
+            summaries.push(self.summarize(cell, &samples[ci]));
+        }
+        summaries
+    }
+
+    /// Fan one batch of replica tasks over the pool; results come back
+    /// in input order (the reassembly [`WorkQueue`] guarantees).
+    fn dispatch(&self, tasks: Vec<Task>) -> Vec<(usize, ReplicaResult)> {
+        WorkQueue::map_chunked(tasks, self.chunk_size.max(1), self.workers, |chunk| {
+            chunk
+                .iter()
+                .map(|t| (t.cell_idx, run_replica(&t.cell, t.rng.clone())))
+                .collect()
+        })
     }
 
     /// Evaluate eq-(6) speedups for a parameter grid on the worker pool,
@@ -417,13 +608,15 @@ impl CampaignEngine {
         })
     }
 
-    fn summarize(&self, cell: CellSpec, rs: &[(usize, ReplicaResult)]) -> CellSummary {
-        let speedups: Vec<f64> = rs.iter().map(|&(_, r)| r.speedup).collect();
-        let rounds: Vec<f64> = rs.iter().map(|&(_, r)| r.rounds).collect();
-        let times: Vec<f64> = rs.iter().map(|&(_, r)| r.time_s).collect();
+    fn summarize(&self, cell: CellSpec, rs: &[ReplicaResult]) -> CellSummary {
+        let speedups: Vec<f64> = rs.iter().map(|r| r.speedup).collect();
+        let rounds: Vec<f64> = rs.iter().map(|r| r.rounds).collect();
+        let times: Vec<f64> = rs.iter().map(|r| r.time_s).collect();
+        let packets: Vec<f64> = rs.iter().map(|r| r.data_packets).collect();
         let n = rs.len() as f64;
-        let completed_frac = rs.iter().filter(|&&(_, r)| r.completed).count() as f64 / n;
-        let converged_frac = rs.iter().filter(|&&(_, r)| r.converged).count() as f64 / n;
+        let completed_frac = rs.iter().filter(|r| r.completed).count() as f64 / n;
+        let converged_frac = rs.iter().filter(|r| r.converged).count() as f64 / n;
+        let validated_frac = rs.iter().filter(|r| r.validated).count() as f64 / n;
 
         let q = round_failure_q(cell.p, cell.k);
         let c = cell.phase_packets();
@@ -432,7 +625,7 @@ impl CampaignEngine {
             RetransmitPolicy::WholeRound => rho_whole_round(q, c),
         };
         let speedup_pred = match cell.workload {
-            Workload::Slotted { w_s, supersteps, tau_s, .. } => {
+            WorkloadSpec::Slotted { w_s, supersteps, tau_s, .. } => {
                 let r = supersteps as f64;
                 let t_pred = match cell.policy {
                     // T = w/n + r·ρ̂·2τ.
@@ -446,7 +639,7 @@ impl CampaignEngine {
                 };
                 Some(if t_pred.is_finite() { w_s / t_pred } else { 0.0 })
             }
-            Workload::Synthetic { .. } => None,
+            _ => None,
         };
 
         CellSummary {
@@ -455,103 +648,111 @@ impl CampaignEngine {
             speedup: Summary::from_values(&speedups),
             rounds: Summary::from_values(&rounds),
             time_s: Summary::from_values(&times),
+            data_packets: Summary::from_values(&packets),
             completed_frac,
             converged_frac,
+            validated_frac,
             rho_pred,
             speedup_pred,
         }
     }
 }
 
-/// Execute one replica of one cell with its own pre-split rng stream.
-fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
-    match cell.workload {
-        Workload::Synthetic { supersteps, msgs_per_node, bytes, compute_s } => {
-            // Mid-band PlanetLab link for uniform topologies (Figs 2–3).
-            let link = Link::from_mbytes(40.0, 0.07);
-            let topo = match (cell.topology, cell.loss) {
-                (TopologySpec::Uniform, LossSpec::Bernoulli) => {
-                    Topology::uniform(cell.n, link, cell.p)
-                }
-                (TopologySpec::Uniform, LossSpec::GilbertElliott { burst_len }) => {
-                    Topology::uniform_bursty(cell.n, link, cell.p, burst_len)
-                }
-                (TopologySpec::PlanetLabLike, loss) => {
-                    let ranges = PlanetLabRanges {
-                        loss_lo: (cell.p * 0.5).min(0.95),
-                        loss_hi: (cell.p * 1.5).min(0.95),
-                        ..Default::default()
-                    };
-                    match loss {
-                        LossSpec::Bernoulli => {
-                            Topology::planetlab_like(cell.n, &ranges, &mut rng)
-                        }
-                        LossSpec::GilbertElliott { burst_len } => {
-                            Topology::planetlab_like_bursty(
-                                cell.n, &ranges, burst_len, &mut rng,
-                            )
-                        }
-                    }
-                }
+/// Build the cell's topology for a DES replica (uniform or
+/// PlanetLab-heterogeneous, iid or bursty), drawing any per-pair
+/// parameters from the replica's stream.
+fn build_topology(cell: &CellSpec, n_nodes: usize, rng: &mut Rng) -> Topology {
+    // Mid-band PlanetLab link for uniform topologies (Figs 2–3).
+    let link = Link::from_mbytes(40.0, 0.07);
+    match (cell.topology, cell.loss) {
+        (TopologySpec::Uniform, LossSpec::Bernoulli) => {
+            Topology::uniform(n_nodes, link, cell.p)
+        }
+        (TopologySpec::Uniform, LossSpec::GilbertElliott { burst_len }) => {
+            Topology::uniform_bursty(n_nodes, link, cell.p, burst_len)
+        }
+        (TopologySpec::PlanetLabLike, loss) => {
+            let ranges = PlanetLabRanges {
+                loss_lo: (cell.p * 0.5).min(0.95),
+                loss_hi: (cell.p * 1.5).min(0.95),
+                ..Default::default()
             };
-            let net = Network::new(topo, rng.next_u64());
-            let mut rt = BspRuntime::new(net)
-                .with_copies(cell.k)
-                .with_policy(cell.policy);
-            let mut prog =
-                SyntheticExchange::new(cell.n, supersteps, msgs_per_node, bytes, compute_s);
-            let rep = rt.run(&mut prog);
-            ReplicaResult {
-                speedup: if rep.completed { rep.speedup(prog.sequential_s()) } else { 0.0 },
-                rounds: rep.total_rounds as f64,
-                time_s: rep.total_time_s,
-                completed: rep.completed,
-                // Strictly done()-fired; SyntheticExchange is fixed-length
-                // so this stays false — see `converged_frac` docs.
-                converged: rep.converged(),
+            match loss {
+                LossSpec::Bernoulli => Topology::planetlab_like(n_nodes, &ranges, rng),
+                LossSpec::GilbertElliott { burst_len } => {
+                    Topology::planetlab_like_bursty(n_nodes, &ranges, burst_len, rng)
+                }
             }
         }
-        Workload::Slotted { w_s, supersteps, tau_s, .. } => {
-            // Same rounding as CellSpec::phase_packets — keep in sync.
-            let c = cell.phase_packets() as u64;
-            let run = match cell.loss {
-                LossSpec::Bernoulli => run_slotted_program(
+    }
+}
+
+/// Execute one replica of one cell with its own pre-split rng stream.
+fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
+    if let WorkloadSpec::Slotted { w_s, supersteps, tau_s, .. } = cell.workload {
+        // Same rounding as CellSpec::phase_packets — keep in sync.
+        let c = cell.phase_packets() as u64;
+        let run = match cell.loss {
+            LossSpec::Bernoulli => run_slotted_program(
+                w_s,
+                supersteps,
+                cell.n as u64,
+                c,
+                cell.p,
+                cell.k,
+                tau_s,
+                cell.policy,
+                &mut rng,
+            ),
+            LossSpec::GilbertElliott { burst_len } => {
+                let mut ge = GilbertElliott::with_mean_loss(cell.p, burst_len);
+                run_slotted_program_model(
                     w_s,
                     supersteps,
                     cell.n as u64,
                     c,
-                    cell.p,
                     cell.k,
                     tau_s,
                     cell.policy,
+                    &mut ge,
                     &mut rng,
-                ),
-                LossSpec::GilbertElliott { burst_len } => {
-                    let mut ge = GilbertElliott::with_mean_loss(cell.p, burst_len);
-                    run_slotted_program_model(
-                        w_s,
-                        supersteps,
-                        cell.n as u64,
-                        c,
-                        cell.k,
-                        tau_s,
-                        cell.policy,
-                        &mut ge,
-                        &mut rng,
-                    )
-                }
-            };
-            // A saturated phase never finished ("the system fails to
-            // operate"): its capped time is a lower bound, not a
-            // completion time — score it as an aborted run.
-            ReplicaResult {
-                speedup: if run.saturated { 0.0 } else { w_s / run.total_time_s },
-                rounds: run.total_rounds as f64,
-                time_s: run.total_time_s,
-                completed: !run.saturated,
-                converged: false,
+                )
             }
-        }
+        };
+        // A saturated phase never finished ("the system fails to
+        // operate"): its capped time is a lower bound, not a
+        // completion time — score it as an aborted run.
+        return ReplicaResult {
+            speedup: if run.saturated { 0.0 } else { w_s / run.total_time_s },
+            rounds: run.total_rounds as f64,
+            time_s: run.total_time_s,
+            completed: !run.saturated,
+            converged: false,
+            // No data moves in the slotted abstraction — vacuously the
+            // completion verdict, so validated_frac stays meaningful
+            // across mixed grids.
+            validated: !run.saturated,
+            data_packets: (c * supersteps) as f64,
+        };
+    }
+
+    // Every DES-backed workload shares one generic path: instantiate the
+    // DistWorkload (drawing its input data), build the cell's topology,
+    // configure the runtime, run + validate.
+    let wl = cell.workload.instantiate(cell.n, &mut rng);
+    let n_nodes = wl.n_nodes();
+    let topo = build_topology(cell, n_nodes, &mut rng);
+    let net = Network::new(topo, rng.next_u64());
+    let mut rt = BspRuntime::new(net).with_copies(cell.k).with_policy(cell.policy);
+    let run = wl.run_replica(&mut rt);
+    ReplicaResult {
+        speedup: run.speedup(),
+        rounds: run.rounds as f64,
+        time_s: run.time_s,
+        completed: run.completed,
+        converged: run.converged,
+        validated: run.validated,
+        data_packets: run.data_packets as f64,
     }
 }
 
@@ -628,6 +829,7 @@ mod tests {
         let summaries = CampaignEngine::new(4).run(&spec);
         for s in &summaries {
             assert_eq!(s.completed_frac, 1.0);
+            assert_eq!(s.validated_frac, 1.0, "slotted cells validate vacuously");
             assert!(s.speedup.mean > 0.0);
             assert!(s.speedup.mean <= s.cell.n as f64 + 1e-9);
             let pred = s.speedup_pred.expect("slotted cells have predictions");
@@ -645,7 +847,7 @@ mod tests {
     #[test]
     fn synthetic_des_cells_run_end_to_end() {
         let spec = CampaignSpec {
-            workloads: vec![Workload::Synthetic {
+            workloads: vec![WorkloadSpec::Synthetic {
                 supersteps: 2,
                 msgs_per_node: 3,
                 bytes: 1024,
@@ -662,10 +864,126 @@ mod tests {
         assert_eq!(summaries.len(), 2);
         for s in &summaries {
             assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+            assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
             assert!(s.speedup.mean > 0.0 && s.speedup.mean <= 3.0 + 1e-9);
             assert!(s.rounds.mean >= 2.0, "at least one round per superstep");
             assert!(s.speedup_pred.is_none());
+            // 2 supersteps × 3 nodes × 3 msgs = 18 distinct data packets.
+            assert_eq!(s.data_packets.mean, 18.0);
         }
+    }
+
+    #[test]
+    fn every_real_workload_runs_as_a_campaign_cell() {
+        // One cell per §V workload through the identical generic engine:
+        // all complete, all validate their data against the sequential
+        // reference, and the analytic c matches the instantiated one.
+        let spec = CampaignSpec {
+            workloads: vec![
+                WorkloadSpec::Synthetic {
+                    supersteps: 2,
+                    msgs_per_node: 2,
+                    bytes: 1024,
+                    compute_s: 0.02,
+                },
+                WorkloadSpec::Matmul { block: 4 },
+                WorkloadSpec::Sort { keys_per_node: 16 },
+                WorkloadSpec::Fft { size: 16 },
+                WorkloadSpec::Laplace { h: 6, w: 8, sweeps: 3 },
+            ],
+            ns: vec![4],
+            ps: vec![0.15],
+            ks: vec![2],
+            replicas: 2,
+            ..Default::default()
+        };
+        let summaries = CampaignEngine::new(3).run(&spec);
+        assert_eq!(summaries.len(), 5);
+        for s in &summaries {
+            assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+            assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
+            assert!(s.speedup.mean > 0.0, "cell {:?}", s.cell);
+            assert!(s.speedup_pred.is_none());
+            assert!(s.data_packets.mean > 0.0);
+        }
+        // Cell-level analytic c agrees with each instantiated workload.
+        let mut rng = Rng::new(7);
+        for cell in spec.cells() {
+            let wl = cell.workload.instantiate(cell.n, &mut rng);
+            assert_eq!(cell.phase_packets(), wl.phase_packets(), "{}", wl.label());
+            assert_eq!(wl.n_nodes(), cell.n);
+        }
+    }
+
+    #[test]
+    fn adaptive_mode_stops_zero_variance_cells_at_one_batch() {
+        // p = 0: every slotted phase is exactly one round, every replica
+        // identical, SEM exactly 0.0 — the first batch satisfies any
+        // non-negative target.
+        let spec = CampaignSpec {
+            ns: vec![4],
+            ps: vec![0.0],
+            ks: vec![1],
+            replicas: 4,
+            sem_target: Some(1e-9),
+            max_replicas: 64,
+            ..Default::default()
+        };
+        let out = CampaignEngine::new(2).run(&spec);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].replicas, 4, "easy cell must stop after one batch");
+        assert_eq!(out[0].speedup.sem, 0.0);
+        // The fixed-mode baseline spends 4× the replicas for the same
+        // (zero-spread) aggregate mean.
+        let fixed = CampaignSpec { sem_target: None, replicas: 16, ..spec };
+        let base = CampaignEngine::new(2).run(&fixed);
+        assert_eq!(base[0].replicas, 16);
+        assert_eq!(base[0].speedup.mean, out[0].speedup.mean);
+        assert_eq!(base[0].speedup.sem, 0.0);
+    }
+
+    #[test]
+    fn adaptive_mode_is_worker_count_invariant() {
+        let spec = CampaignSpec {
+            ns: vec![2, 4],
+            ps: vec![0.1],
+            ks: vec![1],
+            replicas: 3,
+            sem_target: Some(0.02),
+            max_replicas: 24,
+            ..Default::default()
+        };
+        let a = CampaignEngine::new(1).run(&spec);
+        let b = CampaignEngine::new(5).run(&spec);
+        assert_eq!(a, b);
+        for s in &a {
+            assert!(s.replicas >= 3 && s.replicas <= 24);
+        }
+    }
+
+    #[test]
+    fn adaptive_mode_respects_the_replica_cap() {
+        // An unreachable target: every cell must stop exactly at the cap.
+        let spec = CampaignSpec {
+            ns: vec![4],
+            ps: vec![0.15],
+            ks: vec![1],
+            replicas: 3,
+            sem_target: Some(0.0),
+            max_replicas: 10,
+            ..Default::default()
+        };
+        let out = CampaignEngine::new(3).run(&spec);
+        // Cap 10 with batch 3: 3+3+3+1 = 10 (last batch trimmed)
+        // unless the SEM hits exactly 0.0 first (identical samples).
+        assert!(out[0].replicas == 10 || out[0].speedup.sem == 0.0);
+        assert!(out[0].replicas <= 10);
+
+        // A cap below the batch size clamps the batch instead of being
+        // silently overshot.
+        let tight = CampaignSpec { replicas: 8, max_replicas: 4, ..spec };
+        let out = CampaignEngine::new(3).run(&tight);
+        assert_eq!(out[0].replicas, 4);
     }
 
     #[test]

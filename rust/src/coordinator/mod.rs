@@ -15,7 +15,12 @@
 //! Monte-Carlo campaign engine that fans full end-to-end experiment
 //! grids (workload × n × p × k × policy × loss model × topology ×
 //! replica seed) over the same pool with bitwise worker-count-invariant
-//! aggregates and a memoizing ρ̂ cache.
+//! aggregates and a memoizing ρ̂ cache. The campaign's workload axis is
+//! generic over `workloads::DistWorkload`, so the real §V programs
+//! (matmul, sort, fft, laplace) run as cells alongside the slotted
+//! abstraction and the synthetic probe, with optional adaptive
+//! replication (stop at a SEM target) and persisted JSON/CSV artifacts
+//! (`report::artifacts`).
 
 pub mod campaign;
 pub mod queue;
@@ -23,7 +28,7 @@ pub mod sweep;
 
 pub use campaign::{
     CampaignEngine, CampaignSpec, CellSpec, CellSummary, LossSpec, RhoCache, TopologySpec,
-    Workload,
+    WorkloadSpec,
 };
 pub use queue::WorkQueue;
 pub use sweep::{Backend, SweepCoordinator, SweepMetrics};

@@ -91,6 +91,19 @@ impl WorkQueue {
         }
         out
     }
+
+    /// One-item-per-chunk convenience over [`WorkQueue::map_chunked`]:
+    /// the right dispatch shape for heavyweight tasks (whole replica
+    /// simulations, per-pair probe sweeps) where chunking would only
+    /// serialize uneven work. Result order matches input order.
+    pub fn map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        Self::map_chunked(items, 1, workers, |chunk| chunk.iter().map(&f).collect())
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +172,17 @@ mod tests {
         let peak = peak.load(Ordering::SeqCst);
         assert!(peak <= workers, "peak {peak} > workers {workers}");
         assert!(peak >= 2, "expected some parallelism, peak {peak}");
+    }
+
+    #[test]
+    fn map_is_ordered_and_matches_map_chunked() {
+        let items: Vec<u64> = (0..500).collect();
+        let a = WorkQueue::map(items.clone(), 7, |&x| x * x + 1);
+        let b = WorkQueue::map_chunked(items.clone(), 13, 3, |chunk| {
+            chunk.iter().map(|&x| x * x + 1).collect()
+        });
+        assert_eq!(a, b);
+        assert_eq!(a[499], 499 * 499 + 1);
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //! * [`collectives`] — broadcast/all-gather/all-to-all schedules (§V-E/F).
 //! * [`workloads`] — BSP programs with real data: matmul, bitonic sort,
 //!   2D FFT (transpose method), Laplace/Jacobi, plus the synthetic
-//!   exchange probe the campaign engine calibrates against.
+//!   exchange probe — all unified behind the `DistWorkload` trait
+//!   (construct from cell params, run one replica on the DES, validate
+//!   against a sequential reference, report stats).
 //! * [`runtime`] — PJRT wrapper loading the AOT HLO artifacts produced by
 //!   `python/compile/aot.py`; the request path never touches Python.
 //! * [`coordinator`] — leader/worker orchestration: sweep batching onto
@@ -30,13 +32,24 @@
 //!   ([`coordinator::campaign`]) that fans end-to-end experiment grids
 //!   (workload × n × p × k × policy × loss model × topology × replica
 //!   seed) over the thread pool with bitwise worker-count-invariant
-//!   aggregates and a memoizing ρ̂ cache.
+//!   aggregates, generic `DistWorkload` cells, adaptive replication
+//!   (SEM-targeted) and a memoizing ρ̂ cache.
 //! * [`report`] — figure/table regeneration (paper evaluation section);
 //!   Figs 8–12 are built from the campaign grid constructor and run on
-//!   any `SpeedupEval` backend.
+//!   any `SpeedupEval` backend. [`report::artifacts`] persists campaign
+//!   JSON/CSV for cross-PR regression tracking.
 //!
-//! Tier-1 verification is one command: `scripts/tier1.sh` (release build
-//! + tests + `cargo fmt --check` when available).
+//! Tier-1 verification is one command: `scripts/tier1.sh` (fmt check →
+//! release build → tests → clippy, skipping components not installed).
+
+// Style-family clippy lints the codebase consciously keeps (tier1 runs
+// `cargo clippy -D warnings`): fftcore's `Cpx::add/mul/sub` mirror the
+// paper's notation rather than `std::ops`, and index-arithmetic loops
+// over flat row-major buffers are the house style for the kernels.
+#![allow(clippy::should_implement_trait)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
 
 pub mod bsp;
 pub mod collectives;

@@ -9,15 +9,22 @@
 //!          [--backend native|pjrt] [--seed S]
 //! lbsp simval [--trials N]                              MC vs analytic
 //! lbsp sweep [--points N] [--backend native|pjrt] [--workers W]
-//! lbsp campaign [--workers W] [--replicas R] [--seed S] [--burst B]
+//! lbsp campaign [--workload slotted|synthetic|matmul|sort|fft|laplace]
+//!               [--workers W] [--replicas R] [--seed S] [--burst B]
+//!               [--ns 2,4,8] [--ps 0.05,0.1] [--ks 1,2,3]
+//!               [--out out.json]                 persist JSON+CSV artifacts
+//!               [--sem-target X [--max-replicas M]]   adaptive replicas
 //!               Monte-Carlo campaign grid (worker-count invariant)
 //! ```
 //!
 //! The `pjrt` backend loads the AOT artifacts from `./artifacts`
 //! (override with `LBSP_ARTIFACTS`); build them once with `make artifacts`.
 
+// Same conscious lint posture as the library crate (see rust/src/lib.rs).
+#![allow(clippy::too_many_arguments)]
+
 use lbsp::bsp::BspRuntime;
-use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, SweepCoordinator};
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, SweepCoordinator, WorkloadSpec};
 use lbsp::measure::CampaignConfig;
 use lbsp::model::lbsp::{optimal_k_min_krho, optimal_k_speedup};
 use lbsp::model::rho::rho_selective_pk;
@@ -362,35 +369,103 @@ fn cmd_sweep(args: &Args) {
     );
 }
 
+/// `--workload` name → the spec variant plus a default `n` axis that
+/// satisfies the workload's tiling constraints (matmul needs square n,
+/// sort a power of two, fft a divisor of its grid size).
+fn campaign_workload(name: &str, o: &Opts) -> (WorkloadSpec, Vec<usize>) {
+    match name {
+        "slotted" => (
+            WorkloadSpec::Slotted {
+                w_s: o.f64("w", 4.0) * 3600.0,
+                supersteps: o.usize("steps", 20) as u64,
+                comm: comm_by_name(&o.str("comm", "n")),
+                tau_s: o.f64("tau", 0.08),
+            },
+            vec![2, 4, 8, 16],
+        ),
+        "synthetic" => (
+            WorkloadSpec::Synthetic {
+                supersteps: o.usize("steps", 4),
+                msgs_per_node: o.usize("msgs", 4),
+                bytes: o.usize("bytes", 2048) as u64,
+                compute_s: o.f64("compute", 0.05),
+            },
+            vec![2, 4, 8],
+        ),
+        "matmul" => (WorkloadSpec::Matmul { block: o.usize("block", 8) }, vec![4, 16]),
+        "sort" => (WorkloadSpec::Sort { keys_per_node: o.usize("keys", 64) }, vec![2, 4, 8]),
+        "fft" => (WorkloadSpec::Fft { size: o.usize("size", 64) }, vec![2, 4, 8]),
+        "laplace" => (
+            WorkloadSpec::Laplace {
+                h: o.usize("height", 8),
+                w: o.usize("width", 16),
+                sweeps: o.usize("steps", 6),
+            },
+            vec![2, 4, 8],
+        ),
+        other => {
+            panic!("unknown workload {other:?} (slotted|synthetic|matmul|sort|fft|laplace)")
+        }
+    }
+}
+
 fn cmd_campaign(args: &Args) {
     let o = Opts::new(args, "campaign");
     let workers = o.usize("workers", 4);
+    let (workload, default_ns) = campaign_workload(&o.str("workload", "slotted"), &o);
+    let sem_target = args.get("sem-target").map(|s| {
+        s.parse::<f64>().unwrap_or_else(|e| panic!("--sem-target {s}: {e}"))
+    });
     let spec = CampaignSpec {
-        replicas: o.usize("replicas", 8),
-        seed: o.usize("seed", 0x9_CA4B) as u64,
+        workloads: vec![workload],
+        ns: args.get_list_or("ns", &default_ns),
+        ps: args.get_list_or("ps", &[0.05, 0.10, 0.15]),
+        ks: args.get_list_or("ks", &[1u32, 2, 3]),
         losses: vec![
             LossSpec::Bernoulli,
             LossSpec::GilbertElliott { burst_len: o.f64("burst", 8.0) },
         ],
+        replicas: o.usize("replicas", 8),
+        seed: o.usize("seed", 0x9_CA4B) as u64,
+        sem_target,
+        max_replicas: o.usize("max-replicas", 256),
         ..Default::default()
     };
     // Worker count and timing stay off stdout so output diffs clean
     // across --workers settings (the aggregates are bitwise invariant).
-    println!(
-        "campaign: {} cells x {} replicas = {} runs",
-        spec.n_cells(),
-        spec.replicas,
-        spec.n_runs()
-    );
+    match spec.sem_target {
+        None => println!(
+            "campaign: {} cells x {} replicas = {} runs",
+            spec.n_cells(),
+            spec.replicas,
+            spec.n_runs()
+        ),
+        Some(t) => println!(
+            "campaign: {} cells, adaptive replicas (batch {}, SEM <= {t}, cap {})",
+            spec.n_cells(),
+            spec.replicas,
+            spec.max_replicas
+        ),
+    }
     let engine = CampaignEngine::new(workers);
     let t0 = std::time::Instant::now();
     let summaries = engine.run(&spec);
     let dt = t0.elapsed().as_secs_f64();
     print_artifacts(&[report::campaign_table(&summaries)], args.flag("csv"));
+    if let Some(out) = args.get("out") {
+        let (json_path, csv_path) =
+            report::write_campaign(std::path::Path::new(out), &spec, &summaries)
+                .unwrap_or_else(|e| panic!("--out {out}: {e}"));
+        eprintln!(
+            "[artifacts: {} + {}]",
+            json_path.display(),
+            csv_path.display()
+        );
+    }
+    let total_runs: u64 = summaries.iter().map(|s| s.replicas).sum();
     eprintln!(
-        "[{workers} workers: {} runs in {dt:.2}s ({:.0} runs/s); rho cache {} points, {} hits]",
-        spec.n_runs(),
-        spec.n_runs() as f64 / dt,
+        "[{workers} workers: {total_runs} runs in {dt:.2}s ({:.0} runs/s); rho cache {} points, {} hits]",
+        total_runs as f64 / dt,
         engine.rho_cache().len(),
         engine.rho_cache().hits()
     );

@@ -114,25 +114,14 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Vec<SizePoint> {
         })
         .collect();
 
-    // Per-pair probe sweeps are independent; one pair per chunk.
+    // Per-pair probe sweeps are independent; one pair per dispatch.
     let per_pair: Vec<Vec<(f64, f64, f64)>> =
-        WorkQueue::map_chunked(tasks, 1, cfg.workers.max(1), |chunk| {
-            chunk
+        WorkQueue::map(tasks, cfg.workers.max(1), |t| {
+            let mut rng = t.rng.clone();
+            cfg.sizes
                 .iter()
-                .map(|t| {
-                    let mut rng = t.rng.clone();
-                    cfg.sizes
-                        .iter()
-                        .map(|&size| {
-                            probe_pair(
-                                t.link,
-                                frag_factor(t.base_p, size),
-                                size,
-                                cfg,
-                                &mut rng,
-                            )
-                        })
-                        .collect()
+                .map(|&size| {
+                    probe_pair(t.link, frag_factor(t.base_p, size), size, cfg, &mut rng)
                 })
                 .collect()
         });

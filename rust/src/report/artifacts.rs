@@ -1,0 +1,315 @@
+//! Persisted campaign artifacts: JSON + CSV emission for cross-PR
+//! regression tracking (`lbsp campaign --out out.json`).
+//!
+//! No serde is vendored, so both formats are emitted by hand against a
+//! frozen schema (documented in `ROADMAP.md`):
+//!
+//! * **JSON** (`lbsp-campaign/v1`) — one object with the full grid spec
+//!   (every axis, replication policy, seed) and one entry per cell
+//!   carrying the grid coordinates, reliability fractions
+//!   (`completed`/`converged`/`validated`), the four replica [`Summary`]
+//!   blocks (speedup, rounds, time_s, data_packets — each n/mean/sem/
+//!   p10/p50/p90/min/max), and the analytic ρ̂ / S_E predictions.
+//!   Non-finite floats serialize as `null` (JSON has no NaN).
+//! * **CSV** — the same cells flattened to one row each, full-precision
+//!   floats (`{:?}` round-trip formatting), for spreadsheet/pandas use.
+//!
+//! [`write_campaign`] persists both next to each other: `--out out.json`
+//! writes `out.json` and `out.csv`.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{CampaignSpec, CellSummary};
+use crate::util::stats::Summary;
+
+/// Schema tag stamped into every JSON artifact; bump on layout changes.
+pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v1";
+
+/// JSON number: round-trip float formatting, `null` for NaN/±∞.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".into()
+    }
+}
+
+/// JSON string with the minimal escaping our labels can need.
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn jarr<T, F: Fn(&T) -> String>(xs: &[T], f: F) -> String {
+    let inner: Vec<String> = xs.iter().map(f).collect();
+    format!("[{}]", inner.join(","))
+}
+
+fn summary_json(s: &Summary) -> String {
+    format!(
+        "{{\"n\":{},\"mean\":{},\"sem\":{},\"p10\":{},\"p50\":{},\"p90\":{},\"min\":{},\"max\":{}}}",
+        s.n,
+        jnum(s.mean),
+        jnum(s.sem),
+        jnum(s.p10),
+        jnum(s.p50),
+        jnum(s.p90),
+        jnum(s.min),
+        jnum(s.max),
+    )
+}
+
+/// The full JSON artifact: grid spec + one object per cell, in
+/// [`CampaignSpec::cells`] order.
+pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
+    let spec_json = format!(
+        concat!(
+            "{{\"workloads\":{},\"ns\":{},\"ps\":{},\"ks\":{},",
+            "\"policies\":{},\"losses\":{},\"topologies\":{},",
+            "\"replicas\":{},\"seed\":{},\"sem_target\":{},\"max_replicas\":{}}}"
+        ),
+        jarr(&spec.workloads, |w| jstr(&w.label())),
+        jarr(&spec.ns, |n| n.to_string()),
+        jarr(&spec.ps, |p| jnum(*p)),
+        jarr(&spec.ks, |k| k.to_string()),
+        jarr(&spec.policies, |p| jstr(&format!("{p:?}"))),
+        jarr(&spec.losses, |l| jstr(&l.label())),
+        jarr(&spec.topologies, |t| jstr(t.label())),
+        spec.replicas,
+        spec.seed,
+        spec.sem_target.map(jnum).unwrap_or_else(|| "null".into()),
+        spec.max_replicas,
+    );
+
+    let cell_objs: Vec<String> = cells
+        .iter()
+        .map(|s| {
+            format!(
+                concat!(
+                    "{{\"workload\":{},\"topology\":{},\"loss\":{},\"policy\":{},",
+                    "\"n\":{},\"p\":{},\"k\":{},\"replicas\":{},",
+                    "\"completed_frac\":{},\"converged_frac\":{},\"validated_frac\":{},",
+                    "\"speedup\":{},\"rounds\":{},\"time_s\":{},\"data_packets\":{},",
+                    "\"rho_pred\":{},\"speedup_pred\":{}}}"
+                ),
+                jstr(&s.cell.workload.label()),
+                jstr(s.cell.topology.label()),
+                jstr(&s.cell.loss.label()),
+                jstr(&format!("{:?}", s.cell.policy)),
+                s.cell.n,
+                jnum(s.cell.p),
+                s.cell.k,
+                s.replicas,
+                jnum(s.completed_frac),
+                jnum(s.converged_frac),
+                jnum(s.validated_frac),
+                summary_json(&s.speedup),
+                summary_json(&s.rounds),
+                summary_json(&s.time_s),
+                summary_json(&s.data_packets),
+                jnum(s.rho_pred),
+                s.speedup_pred.map(jnum).unwrap_or_else(|| "null".into()),
+            )
+        })
+        .collect();
+
+    format!(
+        "{{\"schema\":{},\"spec\":{},\"cells\":[{}]}}\n",
+        jstr(CAMPAIGN_SCHEMA),
+        spec_json,
+        cell_objs.join(",")
+    )
+}
+
+/// CSV cell value: full-precision round-trip formatting (the ASCII
+/// tables use lossy `fmt_num`; regression artifacts must not).
+fn cnum(x: f64) -> String {
+    format!("{x:?}")
+}
+
+/// Workload labels carry commas (`matmul(q=2,e=8)`); CSV keeps the
+/// unquoted-cell invariant by swapping them for semicolons.
+fn csv_label(s: &str) -> String {
+    s.replace(',', ";")
+}
+
+fn summary_cols(s: &Summary) -> String {
+    format!(
+        "{},{},{},{},{},{},{}",
+        cnum(s.mean),
+        cnum(s.sem),
+        cnum(s.p10),
+        cnum(s.p50),
+        cnum(s.p90),
+        cnum(s.min),
+        cnum(s.max),
+    )
+}
+
+/// One row per cell; see `ROADMAP.md` for the column dictionary.
+pub fn campaign_csv(cells: &[CellSummary]) -> String {
+    let mut out = String::new();
+    out.push_str("workload,topology,loss,policy,n,p,k,replicas,");
+    out.push_str("completed_frac,converged_frac,validated_frac,rho_pred,speedup_pred");
+    for block in ["speedup", "rounds", "time_s", "data_packets"] {
+        for col in ["mean", "sem", "p10", "p50", "p90", "min", "max"] {
+            out.push_str(&format!(",{block}_{col}"));
+        }
+    }
+    out.push('\n');
+    for s in cells {
+        out.push_str(&format!(
+            "{},{},{},{:?},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            csv_label(&s.cell.workload.label()),
+            s.cell.topology.label(),
+            csv_label(&s.cell.loss.label()),
+            s.cell.policy,
+            s.cell.n,
+            cnum(s.cell.p),
+            s.cell.k,
+            s.replicas,
+            cnum(s.completed_frac),
+            cnum(s.converged_frac),
+            cnum(s.validated_frac),
+            cnum(s.rho_pred),
+            s.speedup_pred.map(cnum).unwrap_or_default(),
+            summary_cols(&s.speedup),
+            summary_cols(&s.rounds),
+            summary_cols(&s.time_s),
+            summary_cols(&s.data_packets),
+        ));
+    }
+    out
+}
+
+/// Persist both artifact formats: the JSON at `json_path`, the CSV next
+/// to it with the extension swapped (a `--out x.csv` path gets
+/// `x.summary.csv` so the JSON is never clobbered). Returns the two
+/// written paths.
+pub fn write_campaign(
+    json_path: &Path,
+    spec: &CampaignSpec,
+    cells: &[CellSummary],
+) -> io::Result<(PathBuf, PathBuf)> {
+    let json_path = json_path.to_path_buf();
+    let mut csv_path = json_path.with_extension("csv");
+    if csv_path == json_path {
+        csv_path = json_path.with_extension("summary.csv");
+    }
+    std::fs::write(&json_path, campaign_json(spec, cells))?;
+    std::fs::write(&csv_path, campaign_csv(cells))?;
+    Ok((json_path, csv_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CampaignEngine, WorkloadSpec};
+
+    fn small_run() -> (CampaignSpec, Vec<CellSummary>) {
+        let spec = CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 2,
+                msgs_per_node: 2,
+                bytes: 512,
+                compute_s: 0.02,
+            }],
+            ns: vec![2],
+            ps: vec![0.1],
+            ks: vec![1, 2],
+            replicas: 2,
+            ..Default::default()
+        };
+        let cells = CampaignEngine::new(2).run(&spec);
+        (spec, cells)
+    }
+
+    #[test]
+    fn json_has_schema_spec_and_all_cells() {
+        let (spec, cells) = small_run();
+        let j = campaign_json(&spec, &cells);
+        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v1\""));
+        assert!(j.contains("\"spec\":{\"workloads\":[\"synthetic(r=2,m=2)\"]"));
+        assert!(j.contains("\"sem_target\":null"));
+        assert_eq!(j.matches("\"validated_frac\"").count(), cells.len());
+        assert_eq!(j.matches("\"speedup\":{").count(), cells.len());
+        // DES cells have no closed-form prediction.
+        assert_eq!(j.matches("\"speedup_pred\":null").count(), cells.len());
+        // Balanced braces (cheap well-formedness smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.ends_with("}\n"));
+    }
+
+    #[test]
+    fn json_numbers_are_never_nan() {
+        // jnum maps non-finite to null, so the only "inf"/"NaN" strings
+        // that could leak are raw float formatting after a ':'.
+        let (spec, cells) = small_run();
+        let j = campaign_json(&spec, &cells);
+        assert!(!j.contains(":NaN") && !j.contains(":inf") && !j.contains(":-inf"), "{j}");
+    }
+
+    #[test]
+    fn csv_has_header_plus_one_row_per_cell() {
+        let (_, cells) = small_run();
+        let c = campaign_csv(&cells);
+        let lines: Vec<&str> = c.lines().collect();
+        assert_eq!(lines.len(), cells.len() + 1);
+        let n_cols = lines[0].split(',').count();
+        assert_eq!(n_cols, 13 + 4 * 7);
+        for row in &lines[1..] {
+            assert_eq!(row.split(',').count(), n_cols, "ragged row: {row}");
+        }
+        assert!(
+            lines[1].starts_with("synthetic(r=2;m=2),uniform,iid,Selective,2,"),
+            "commas inside labels must be sanitized: {}",
+            lines[1]
+        );
+    }
+
+    #[test]
+    fn json_string_escaping() {
+        assert_eq!(jstr("plain"), "\"plain\"");
+        assert_eq!(jstr("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(jstr("x\ny"), "\"x\\ny\"");
+        assert_eq!(jnum(f64::NAN), "null");
+        assert_eq!(jnum(f64::INFINITY), "null");
+        assert_eq!(jnum(0.5), "0.5");
+    }
+
+    #[test]
+    fn write_campaign_persists_both_files() {
+        let (spec, cells) = small_run();
+        let dir = std::env::temp_dir().join("lbsp_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("campaign.json");
+        let (j, c) = write_campaign(&json_path, &spec, &cells).unwrap();
+        assert_eq!(c, dir.join("campaign.csv"));
+        let js = std::fs::read_to_string(&j).unwrap();
+        let cs = std::fs::read_to_string(&c).unwrap();
+        assert_eq!(js, campaign_json(&spec, &cells));
+        assert_eq!(cs, campaign_csv(&cells));
+        // A .csv --out path must not let the CSV clobber the JSON.
+        let (j2, c2) = write_campaign(&dir.join("tbl.csv"), &spec, &cells).unwrap();
+        assert_ne!(j2, c2);
+        assert_eq!(c2, dir.join("tbl.summary.csv"));
+        let js2 = std::fs::read_to_string(&j2).unwrap();
+        assert!(js2.starts_with("{\"schema\":"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -186,8 +186,8 @@ pub fn fig12<E: SpeedupEval>(eval: &mut E) -> Vec<Artifact> {
 /// and the analytic prediction where the workload admits one.
 pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
     let mut t = Table::new(vec![
-        "workload", "topo", "loss", "policy", "n", "p", "k", "S_mean", "S_sem", "S_p50",
-        "rounds", "done%", "rho_pred", "S_pred",
+        "workload", "topo", "loss", "policy", "n", "p", "k", "reps", "S_mean", "S_sem",
+        "S_p50", "rounds", "done%", "valid%", "rho_pred", "S_pred",
     ]);
     for s in cells {
         t.row(vec![
@@ -198,11 +198,13 @@ pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
             s.cell.n.to_string(),
             fmt_num(s.cell.p),
             s.cell.k.to_string(),
+            s.replicas.to_string(),
             fmt_num(s.speedup.mean),
             fmt_num(s.speedup.sem),
             fmt_num(s.speedup.p50),
             fmt_num(s.rounds.mean),
             format!("{:.0}", s.completed_frac * 100.0),
+            format!("{:.0}", s.validated_frac * 100.0),
             fmt_num(s.rho_pred),
             s.speedup_pred.map(fmt_num).unwrap_or_else(|| "-".into()),
         ]);

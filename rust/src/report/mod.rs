@@ -2,14 +2,18 @@
 //!
 //! Every public function returns [`Table`]s whose rows/series mirror what
 //! the paper plots; the CLI (`lbsp figure …`, `lbsp table …`) and the
-//! bench harness print them. Absolute values come from this codebase's
+//! bench harness print them. Campaign runs additionally persist
+//! machine-readable JSON/CSV regression artifacts through [`artifacts`]
+//! (`lbsp campaign --out`). Absolute values come from this codebase's
 //! own substrate (see DESIGN.md §2 substitutions); the *shape* — who
 //! wins, where optima sit, where curves cross — is the reproduction
 //! target, recorded against the paper in EXPERIMENTS.md.
 
+pub mod artifacts;
 mod figures;
 mod tables;
 
+pub use artifacts::{campaign_csv, campaign_json, write_campaign, CAMPAIGN_SCHEMA};
 pub use figures::{
     campaign_table, fig10, fig11, fig12, fig1_3, fig1_3_from_points, fig7, fig8, fig9,
 };

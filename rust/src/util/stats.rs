@@ -127,6 +127,18 @@ impl Sample {
 /// once from a retained sample. This is the campaign engine's per-cell
 /// summary unit (speedup / rounds / time over replica seeds); derived
 /// `PartialEq` makes worker-count-invariance testable as plain equality.
+///
+/// Small-sample contract (pinned by unit tests):
+///
+/// * `n == 0` — every statistic is NaN except `sem` (0.0; see below).
+///   An empty summary never compares equal to anything, itself included.
+/// * `n == 1` — mean/percentiles/min/max are all the single value; the
+///   **stored** `sem` is 0.0, NOT because the spread is known to be zero
+///   but because NaN would poison the derived `PartialEq` that the
+///   worker-count-invariance tests rely on. Consumers that *decide*
+///   based on SEM (the adaptive-replica stopper) must use
+///   [`Summary::sem_defined`], which refuses to report a SEM below 2
+///   samples — a 1-sample cell must never satisfy a SEM target.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
     pub n: u64,
@@ -147,17 +159,33 @@ impl Summary {
             online.push(x);
             sample.push(x);
         }
+        let empty = online.count() == 0;
         Summary {
             n: online.count(),
             mean: online.mean(),
-            // A single replica has no spread estimate; report 0 rather
-            // than NaN so summaries stay comparable.
+            // Below 2 samples there is no spread estimate; store 0 rather
+            // than NaN so summaries stay comparable (see type docs and
+            // `sem_defined`).
             sem: if online.count() < 2 { 0.0 } else { online.sem() },
             p10: sample.percentile(10.0),
             p50: sample.percentile(50.0),
             p90: sample.percentile(90.0),
-            min: online.min(),
-            max: online.max(),
+            // Online reports ±∞ over no samples; pin NaN like the rest.
+            min: if empty { f64::NAN } else { online.min() },
+            max: if empty { f64::NAN } else { online.max() },
+        }
+    }
+
+    /// The SEM as a *decision* statistic: `None` until at least two
+    /// samples exist. The stored `sem` field reports 0.0 for 0/1-sample
+    /// summaries (comparability); treating that as "converged" would
+    /// stop an adaptive-replica cell after its first sample, so stopping
+    /// rules must go through this accessor.
+    pub fn sem_defined(&self) -> Option<f64> {
+        if self.n < 2 {
+            None
+        } else {
+            Some(self.sem)
         }
     }
 }
@@ -281,12 +309,55 @@ mod tests {
     }
 
     #[test]
-    fn summary_single_value_has_zero_sem() {
+    fn summary_single_value_has_zero_sem_but_no_defined_sem() {
+        // The 1-sample contract: every location statistic is the value
+        // itself, the stored sem is 0.0 (comparability), and sem_defined
+        // refuses to report — an adaptive stopper must keep sampling.
         let s = Summary::from_values(&[7.0]);
         assert_eq!(s.n, 1);
         assert_eq!(s.sem, 0.0);
+        assert_eq!(s.sem_defined(), None);
         assert_eq!(s.mean, 7.0);
-        assert_eq!(s.p90, 7.0);
+        assert_eq!((s.p10, s.p50, s.p90), (7.0, 7.0, 7.0));
+        assert_eq!((s.min, s.max), (7.0, 7.0));
+        // And the underlying Online accumulator reports the honest NaN.
+        let mut o = Online::new();
+        o.push(7.0);
+        assert!(o.sem().is_nan());
+    }
+
+    #[test]
+    fn summary_empty_is_nan_everywhere_and_never_equal() {
+        let s = Summary::from_values(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+        assert!(s.p10.is_nan() && s.p50.is_nan() && s.p90.is_nan());
+        assert!(s.min.is_nan() && s.max.is_nan());
+        assert_eq!(s.sem, 0.0);
+        assert_eq!(s.sem_defined(), None);
+        // NaN fields: an empty summary is not even equal to a copy of
+        // itself (derived PartialEq over NaN).
+        let copy = s;
+        assert_ne!(s, copy);
+    }
+
+    #[test]
+    fn summary_two_values_defines_sem() {
+        let s = Summary::from_values(&[1.0, 3.0]);
+        assert_eq!(s.n, 2);
+        let sem = s.sem_defined().expect("two samples define a SEM");
+        // std = sqrt(2), sem = sqrt(2)/sqrt(2) = 1.
+        assert!((sem - 1.0).abs() < 1e-12);
+        assert_eq!(sem, s.sem);
+    }
+
+    #[test]
+    fn single_sample_percentile_is_the_sample() {
+        let mut s = Sample::new();
+        s.push(42.0);
+        for q in [0.0, 10.0, 50.0, 99.9, 100.0] {
+            assert_eq!(s.percentile(q), 42.0);
+        }
     }
 
     #[test]

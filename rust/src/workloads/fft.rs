@@ -8,11 +8,13 @@
 //! 2D FFT, exactly as FFT-TM leaves it; `result_global` undoes the
 //! transpose for comparison against the sequential oracle.
 
-use crate::bsp::{BspProgram, Outgoing};
+use crate::bsp::{BspProgram, BspRuntime, Outgoing};
 use crate::net::NodeId;
+use crate::util::prng::Rng;
 use crate::AVG_FLOPS;
 
-use super::fftcore::{fft_inplace, Cpx};
+use super::fftcore::{fft2d_seq, fft_inplace, Cpx};
+use super::{DistWorkload, ReplicaRun};
 
 /// A transpose fragment: my rows × destination's column range, already
 /// transposed into (their-row, my-column) order.
@@ -152,6 +154,69 @@ impl BspProgram for Fft2dTm {
     }
 }
 
+/// A campaign-cell instance of the 2D FFT-TM workload: an `N×N` complex
+/// grid over `P` nodes, inputs drawn from a split rng stream.
+/// Implements [`DistWorkload`] — see `workloads` module docs.
+pub struct FftCell {
+    n: usize,
+    p: usize,
+    grid: Vec<Cpx>,
+}
+
+impl FftCell {
+    /// Sample an `size × size` grid deterministically from `rng`. `size`
+    /// must be a power of two (radix-2 substrate) divisible by `n_nodes`.
+    pub fn sample(n_nodes: usize, size: usize, rng: &mut Rng) -> FftCell {
+        assert!(n_nodes >= 1, "need at least one node");
+        assert!(
+            size.is_power_of_two() && size % n_nodes == 0,
+            "fft cells need a power-of-two size divisible by P, got N={size} P={n_nodes}"
+        );
+        let grid = (0..size * size)
+            .map(|_| Cpx::new(rng.normal(), rng.normal()))
+            .collect();
+        FftCell { n: size, p: n_nodes, grid }
+    }
+}
+
+impl DistWorkload for FftCell {
+    fn label(&self) -> String {
+        format!("fft(N={},P={})", self.n, self.p)
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.p
+    }
+
+    fn phase_packets(&self) -> f64 {
+        // The all-to-all transpose: c(P) = P(P−1) fragments (§V-C).
+        (self.p * (self.p - 1)) as f64
+    }
+
+    fn sequential_s(&self) -> f64 {
+        // Two full FFT passes over the N×N grid: 2 · 5 N² log₂N FLOPs.
+        let n = self.n as f64;
+        2.0 * 5.0 * n * n * n.log2().max(1.0) / AVG_FLOPS
+    }
+
+    fn run_replica(self: Box<Self>, rt: &mut BspRuntime) -> ReplicaRun {
+        let mut prog = Fft2dTm::from_global(&self.grid, self.n, self.p);
+        let rep = rt.run(&mut prog);
+        let validated = rep.completed && {
+            let got = prog.result_global();
+            let mut want: Vec<Vec<Cpx>> = (0..self.n)
+                .map(|i| self.grid[i * self.n..(i + 1) * self.n].to_vec())
+                .collect();
+            fft2d_seq(&mut want);
+            let tol = 1e-6 * self.n as f64;
+            (0..self.n).all(|i| {
+                (0..self.n).all(|j| got[i * self.n + j].sub(want[i][j]).norm() < tol)
+            })
+        };
+        ReplicaRun::from_report(&rep, self.sequential_s(), rt.network().stats, validated)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +263,27 @@ mod tests {
     fn fft2d_matches_sequential_under_loss() {
         check(16, 4, 0.25, 3);
         check(32, 8, 0.15, 4);
+    }
+
+    #[test]
+    fn fft_cell_replica_validates_under_loss() {
+        let mut rng = Rng::new(0xFF7);
+        let cell = FftCell::sample(4, 16, &mut rng);
+        assert_eq!(cell.n_nodes(), 4);
+        assert_eq!(cell.phase_packets(), 12.0);
+        let mut rt = BspRuntime::new(net(4, 0.2, 13)).with_copies(2);
+        let run = Box::new(cell).run_replica(&mut rt);
+        assert!(run.completed);
+        assert!(run.validated, "spectrum must match the sequential oracle");
+        assert_eq!(run.supersteps, 2);
+        assert!(run.speedup() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fft_cell_rejects_indivisible_size() {
+        let mut rng = Rng::new(3);
+        let _ = FftCell::sample(3, 16, &mut rng);
     }
 
     #[test]

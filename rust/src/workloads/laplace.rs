@@ -6,12 +6,13 @@
 //! ghost rows with its neighbours over the lossy network:
 //! `c(P) = 2(P−1)` packets, exactly the paper's halo count.
 
-use crate::bsp::{BspProgram, Outgoing};
+use crate::bsp::{BspProgram, BspRuntime, Outgoing};
 use crate::net::NodeId;
 use crate::runtime::surface;
+use crate::util::prng::Rng;
 use crate::AVG_FLOPS;
 
-use super::ComputeBackend;
+use super::{ComputeBackend, DistWorkload, ReplicaRun};
 
 /// Which ghost row a halo message refills.
 #[derive(Clone, Debug)]
@@ -161,6 +162,68 @@ impl BspProgram for JacobiGrid<'_> {
     }
 }
 
+/// A campaign-cell instance of the Jacobi workload: `P` row bands of
+/// `H×W` with a global mesh drawn from a split rng stream.
+/// Implements [`DistWorkload`] — see `workloads` module docs.
+pub struct LaplaceCell {
+    p_nodes: usize,
+    h: usize,
+    w: usize,
+    sweeps: usize,
+    global: Vec<f32>,
+}
+
+impl LaplaceCell {
+    /// Sample a `(P·(H−2)+2) × W` global mesh deterministically from
+    /// `rng`; `h`/`w` must leave a non-empty interior.
+    pub fn sample(n_nodes: usize, h: usize, w: usize, sweeps: usize, rng: &mut Rng) -> Self {
+        assert!(n_nodes >= 1, "need at least one band");
+        assert!(h >= 3 && w >= 3, "bands need an interior, got {h}x{w}");
+        let rows = n_nodes * (h - 2) + 2;
+        let global = (0..rows * w).map(|_| rng.f64() as f32).collect();
+        LaplaceCell { p_nodes: n_nodes, h, w, sweeps, global }
+    }
+}
+
+impl DistWorkload for LaplaceCell {
+    fn label(&self) -> String {
+        format!("laplace(P={},{}x{},s={})", self.p_nodes, self.h, self.w, self.sweeps)
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.p_nodes
+    }
+
+    fn phase_packets(&self) -> f64 {
+        // Ghost-row halo exchange: c(P) = 2(P−1) (§V-D).
+        (2 * (self.p_nodes - 1)) as f64
+    }
+
+    fn sequential_s(&self) -> f64 {
+        // One machine sweeps every band's interior per iteration.
+        let points = (self.p_nodes * (self.h - 2) * (self.w - 2)) as f64;
+        self.sweeps as f64 * 2.0 * 5.0 * points / AVG_FLOPS
+    }
+
+    fn run_replica(self: Box<Self>, rt: &mut BspRuntime) -> ReplicaRun {
+        let rows = self.p_nodes * (self.h - 2) + 2;
+        let mut prog = JacobiGrid::from_global(
+            &self.global,
+            self.p_nodes,
+            self.h,
+            self.w,
+            self.sweeps,
+            ComputeBackend::Native,
+        );
+        let rep = rt.run(&mut prog);
+        let validated = rep.completed && {
+            let want = jacobi_seq(&self.global, rows, self.w, self.sweeps);
+            prog.to_global().iter().zip(&want).all(|(g, w)| (g - w).abs() < 1e-5)
+        };
+        ReplicaRun::from_report(&rep, self.sequential_s(), rt.network().stats, validated)
+    }
+}
+
 /// Sequential reference: `sweeps` Jacobi sweeps on the global mesh.
 pub fn jacobi_seq(global: &[f32], rows: usize, cols: usize, sweeps: usize) -> Vec<f32> {
     let mut cur = global.to_vec();
@@ -227,6 +290,21 @@ mod tests {
         for i in 0..got.len() {
             assert!((got[i] - want[i]).abs() < 1e-5, "i={i}");
         }
+    }
+
+    #[test]
+    fn laplace_cell_replica_validates_under_loss() {
+        let mut rng = Rng::new(0x1AB);
+        let cell = LaplaceCell::sample(3, 6, 8, 4, &mut rng);
+        assert_eq!(cell.n_nodes(), 3);
+        assert_eq!(cell.phase_packets(), 4.0);
+        let mut rt = BspRuntime::new(net(3, 0.25, 17)).with_copies(2);
+        let run = Box::new(cell).run_replica(&mut rt);
+        assert!(run.completed);
+        assert!(run.validated, "mesh must match the sequential reference");
+        assert_eq!(run.supersteps, 4);
+        assert!(run.rounds >= 4, "one phase per sweep");
+        assert!(run.speedup() > 0.0);
     }
 
     #[test]

@@ -6,12 +6,13 @@
 //! family), then every node computes `C += A_{i,t} · B_{t,j}` — through
 //! the PJRT `matmul_block` artifact or natively.
 
-use crate::bsp::{BspProgram, Outgoing};
+use crate::bsp::{BspProgram, BspRuntime, Outgoing};
 use crate::net::NodeId;
 use crate::runtime::surface;
+use crate::util::prng::Rng;
 use crate::AVG_FLOPS;
 
-use super::ComputeBackend;
+use super::{ComputeBackend, DistWorkload, ReplicaRun};
 
 /// A broadcast block for panel `t`.
 #[derive(Clone, Debug)]
@@ -198,6 +199,65 @@ impl BspProgram for SummaMatmul<'_> {
     }
 }
 
+/// A campaign-cell instance of the SUMMA workload: a `q×q` node grid of
+/// `e×e` blocks with input matrices drawn from a split rng stream.
+/// Implements [`DistWorkload`] — see `workloads` module docs.
+pub struct MatmulCell {
+    q: usize,
+    e: usize,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl MatmulCell {
+    /// Build from a campaign cell's node count (`n_nodes` must be a
+    /// perfect square, `q = √n_nodes`) and block edge `e`, sampling the
+    /// `qe × qe` input matrices deterministically from `rng`.
+    pub fn sample(n_nodes: usize, e: usize, rng: &mut Rng) -> MatmulCell {
+        let q = (n_nodes as f64).sqrt().round() as usize;
+        assert!(q >= 1 && q * q == n_nodes, "matmul needs a square node count, got {n_nodes}");
+        assert!(e >= 1, "block edge must be positive");
+        let n = q * e;
+        let a = (0..n * n).map(|_| (rng.f64() as f32) - 0.5).collect();
+        let b = (0..n * n).map(|_| (rng.f64() as f32) - 0.5).collect();
+        MatmulCell { q, e, a, b }
+    }
+}
+
+impl DistWorkload for MatmulCell {
+    fn label(&self) -> String {
+        format!("matmul(q={},e={})", self.q, self.e)
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.q * self.q
+    }
+
+    fn phase_packets(&self) -> f64 {
+        // Per broadcast step: q A-owners and q B-owners each send q−1
+        // copies — 2q(q−1) = 2(P − √P) packets, the paper's §V-A family.
+        (2 * self.q * (self.q - 1)) as f64
+    }
+
+    fn sequential_s(&self) -> f64 {
+        let n = (self.q * self.e) as f64;
+        2.0 * n * n * n / AVG_FLOPS
+    }
+
+    fn run_replica(self: Box<Self>, rt: &mut BspRuntime) -> ReplicaRun {
+        let n = self.q * self.e;
+        let mut prog =
+            SummaMatmul::from_global(&self.a, &self.b, self.q, self.e, ComputeBackend::Native);
+        let rep = rt.run(&mut prog);
+        let validated = rep.completed && {
+            let want = matmul_seq(&self.a, &self.b, n);
+            let tol = 1e-3 * n as f32;
+            prog.c_global().iter().zip(&want).all(|(g, w)| (g - w).abs() < tol)
+        };
+        ReplicaRun::from_report(&rep, self.sequential_s(), rt.network().stats, validated)
+    }
+}
+
 /// Sequential reference multiply (f64 accumulation).
 pub fn matmul_seq(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; n * n];
@@ -264,6 +324,30 @@ mod tests {
     fn summa_matches_sequential_under_loss() {
         check(2, 8, 0.25, 2, 30);
         check(4, 4, 0.15, 1, 40);
+    }
+
+    #[test]
+    fn matmul_cell_replica_validates_under_loss() {
+        let mut rng = Rng::new(0xA11CE);
+        let cell = MatmulCell::sample(4, 4, &mut rng);
+        assert_eq!(cell.n_nodes(), 4);
+        assert_eq!(cell.phase_packets(), 4.0); // 2·2·(2−1)·... = 2q(q−1)
+        let seq = cell.sequential_s();
+        assert!(seq > 0.0);
+        let mut rt = BspRuntime::new(net(4, 0.2, 7)).with_copies(2);
+        let run = Box::new(cell).run_replica(&mut rt);
+        assert!(run.completed);
+        assert!(run.validated, "data must match the sequential reference");
+        assert_eq!(run.sequential_s, seq);
+        assert!(run.speedup() > 0.0);
+        assert!(run.net.data_sent > 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_cell_rejects_non_square_node_count() {
+        let mut rng = Rng::new(1);
+        let _ = MatmulCell::sample(8, 4, &mut rng);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! §V workloads as real BSP programs over the lossy network.
+//! §V workloads as real BSP programs over the lossy network, unified
+//! behind the [`DistWorkload`] trait.
 //!
 //! Unlike `model::algorithms` (closed-form cost analyses), these move
 //! actual data: submatrices, key lists, mesh bands and FFT fragments
@@ -8,17 +9,44 @@
 //! against a sequential reference, so a reliability bug anywhere in the
 //! stack shows up as wrong *data*, not just odd counters.
 //!
+//! ## The `DistWorkload` contract
+//!
+//! Each workload ships a *cell* type (`MatmulCell`, `SortCell`,
+//! `FftCell`, `LaplaceCell`, and [`SyntheticExchange`] itself) that
+//! implements [`DistWorkload`]:
+//!
+//! 1. **Construct from cell parameters** — a `sample`-style constructor
+//!    takes the campaign cell's node count plus workload-size knobs and a
+//!    split [`crate::util::prng::Rng`], and draws the input data
+//!    deterministically from that stream.
+//! 2. **Run one replica** — [`DistWorkload::run_replica`] drives the
+//!    program through a caller-configured [`BspRuntime`] (packet-level
+//!    DES: acks, k-copy duplication, timeouts, retransmission policy).
+//! 3. **Validate against a sequential reference** — the replica's output
+//!    data is checked against the workload's sequential oracle
+//!    (`matmul_seq`, a full sort, `fft2d_seq`, `jacobi_seq`, or the
+//!    delivered-message count), and the verdict lands in
+//!    [`ReplicaRun::validated`].
+//! 4. **Report** — the [`ReplicaRun`] carries the modeled wall time,
+//!    total wall rounds, per-run [`NetStats`] packet counters and the
+//!    modeled sequential-reference time, which is what makes speedup
+//!    samples comparable across workloads.
+//!
+//! The Monte-Carlo campaign engine
+//! ([`crate::coordinator::campaign`]) is generic over this trait: any
+//! cell type here can ride the (n × p × k × policy × loss × topology)
+//! grid with worker-count-invariant aggregates.
+//!
 //! * [`laplace`] — ghost-cell Jacobi on row bands (§V-D), PJRT
-//!   `jacobi_step` per band sweep.
+//!   `jacobi_step` per band sweep; `c(P) = 2(P−1)`.
 //! * [`matmul`] — SUMMA-style blocked multiplication (§V-A), PJRT
-//!   `matmul_block` per block product.
+//!   `matmul_block` per block product; `c(P) = 2(P−√P)` per step.
 //! * [`sort`] — distributed bitonic mergesort (§V-B), PJRT
-//!   `bitonic_merge` per merge step.
+//!   `bitonic_merge` per merge step; `c(P) = P` per step.
 //! * [`fft`] — 2D FFT transpose method (§V-C) over the in-tree
-//!   [`fftcore`] radix-2 substrate; the all-to-all transpose rides the
-//!   lossy network.
+//!   [`fftcore`] radix-2 substrate; `c(P) = P(P−1)` transpose packets.
 //! * [`synthetic`] — dial-a-`c(n)` exchange probe with exact modeled
-//!   sequential time; the campaign engine's DES-fidelity workload.
+//!   sequential time; the campaign engine's DES-fidelity probe.
 
 pub mod fft;
 pub mod fftcore;
@@ -27,8 +55,14 @@ pub mod matmul;
 pub mod sort;
 pub mod synthetic;
 
+pub use fft::FftCell;
+pub use laplace::LaplaceCell;
+pub use matmul::MatmulCell;
+pub use sort::SortCell;
 pub use synthetic::SyntheticExchange;
 
+use crate::bsp::{BspRuntime, RunReport};
+use crate::net::transport::NetStats;
 use crate::runtime::Runtime;
 
 /// Where a workload's local compute runs.
@@ -47,4 +81,89 @@ impl ComputeBackend<'_> {
             ComputeBackend::Pjrt(_) => "pjrt",
         }
     }
+}
+
+/// What one [`DistWorkload`] replica reports back to the campaign layer.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaRun {
+    /// Modeled total wall time (L-BSP accounting) of the distributed run.
+    pub time_s: f64,
+    /// Total communication rounds across all supersteps.
+    pub rounds: u64,
+    /// Supersteps executed before completion/abort.
+    pub supersteps: usize,
+    /// Every communication phase completed (no round-cap abort).
+    pub completed: bool,
+    /// `done()` fired before the superstep budget ran out.
+    pub converged: bool,
+    /// The replica's output data matched the sequential reference (the
+    /// wrong-data-not-just-counters contract). `false` whenever the run
+    /// aborted — unvalidatable output is counted as invalid.
+    pub validated: bool,
+    /// Modeled sequential-reference time; `sequential_s / time_s` is the
+    /// replica's speedup sample.
+    pub sequential_s: f64,
+    /// Protocol-level distinct data packets sent (excludes k-copies).
+    pub data_packets: u64,
+    /// Wire-level packet counters from the DES network.
+    pub net: NetStats,
+}
+
+impl ReplicaRun {
+    /// Assemble the accounting side of a replica report from the runtime;
+    /// the caller fills in `validated`.
+    pub fn from_report(
+        rep: &RunReport,
+        sequential_s: f64,
+        net: NetStats,
+        validated: bool,
+    ) -> ReplicaRun {
+        ReplicaRun {
+            time_s: rep.total_time_s,
+            rounds: rep.total_rounds,
+            supersteps: rep.supersteps,
+            completed: rep.completed,
+            converged: rep.converged(),
+            validated,
+            sequential_s,
+            data_packets: rep.data_packets,
+            net,
+        }
+    }
+
+    /// Speedup vs. the modeled sequential reference; 0.0 for runs that
+    /// never completed ("the system fails to operate"), so incomplete
+    /// replicas drag aggregates down instead of silently inflating them.
+    pub fn speedup(&self) -> f64 {
+        if self.completed && self.time_s > 0.0 {
+            self.sequential_s / self.time_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One §V workload instance, ready to run replicas on the packet-level
+/// DES. See the module docs for the four-part contract. Implementations
+/// hold the (deterministically sampled) input data; `run_replica`
+/// consumes the instance so a replica can never accidentally reuse
+/// half-updated state.
+pub trait DistWorkload: Send {
+    /// Stable label for tables/artifacts, e.g. `matmul(q=2,e=8)`.
+    fn label(&self) -> String;
+
+    /// Nodes the underlying BSP program runs on.
+    fn n_nodes(&self) -> usize;
+
+    /// Packets per communication phase, `c`, as the analytic model sees
+    /// this instance (the paper's per-workload `c(P)` family).
+    fn phase_packets(&self) -> f64;
+
+    /// Modeled sequential-reference time (the speedup denominator).
+    fn sequential_s(&self) -> f64;
+
+    /// Run one replica through `rt` (already configured with the cell's
+    /// k-copies / policy / topology), validate the output data against
+    /// the sequential reference, and report.
+    fn run_replica(self: Box<Self>, rt: &mut BspRuntime) -> ReplicaRun;
 }

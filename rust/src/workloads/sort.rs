@@ -7,12 +7,13 @@
 //! is identical to the L1 kernel's stage constants. Every step moves
 //! `c(P) = P` lists, the paper's per-step packet count.
 
-use crate::bsp::{BspProgram, Outgoing};
+use crate::bsp::{BspProgram, BspRuntime, Outgoing};
 use crate::net::NodeId;
 use crate::runtime::surface;
+use crate::util::prng::Rng;
 use crate::AVG_FLOPS;
 
-use super::ComputeBackend;
+use super::{ComputeBackend, DistWorkload, ReplicaRun};
 
 /// (stage, distance) schedule for P nodes.
 fn steps_for(p: usize) -> Vec<(usize, usize)> {
@@ -146,6 +147,64 @@ impl BspProgram for BitonicSort<'_> {
     }
 }
 
+/// A campaign-cell instance of the bitonic-sort workload: `P` nodes
+/// (power of two) × `n_local` keys drawn from a split rng stream.
+/// Implements [`DistWorkload`] — see `workloads` module docs.
+pub struct SortCell {
+    keys: Vec<Vec<f32>>,
+}
+
+impl SortCell {
+    /// Sample `n_nodes × n_local` random keys deterministically from
+    /// `rng`. `n_nodes` must be a power of two (bitonic schedule).
+    pub fn sample(n_nodes: usize, n_local: usize, rng: &mut Rng) -> SortCell {
+        assert!(
+            n_nodes >= 1 && n_nodes.is_power_of_two(),
+            "sort cells need a power-of-two node count, got {n_nodes}"
+        );
+        assert!(n_local >= 1, "keys per node must be positive");
+        let keys = (0..n_nodes)
+            .map(|_| (0..n_local).map(|_| (rng.f64() * 1e4) as f32).collect())
+            .collect();
+        SortCell { keys }
+    }
+}
+
+impl DistWorkload for SortCell {
+    fn label(&self) -> String {
+        format!("sort(P={},m={})", self.keys.len(), self.keys[0].len())
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.keys.len()
+    }
+
+    fn phase_packets(&self) -> f64 {
+        // Every merge step trades whole lists pairwise: c(P) = P (§V-B).
+        if self.keys.len() < 2 {
+            0.0
+        } else {
+            self.keys.len() as f64
+        }
+    }
+
+    fn sequential_s(&self) -> f64 {
+        // One comparison sort over all N = P·n_local keys.
+        let n = (self.keys.len() * self.keys[0].len()) as f64;
+        n * n.log2().max(1.0) / AVG_FLOPS
+    }
+
+    fn run_replica(self: Box<Self>, rt: &mut BspRuntime) -> ReplicaRun {
+        let mut want: Vec<f32> = self.keys.iter().flatten().copied().collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let seq = self.sequential_s();
+        let mut prog = BitonicSort::new(self.keys, ComputeBackend::Native);
+        let rep = rt.run(&mut prog);
+        let validated = rep.completed && prog.gathered() == want;
+        ReplicaRun::from_report(&rep, seq, rt.network().stats, validated)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +248,29 @@ mod tests {
     fn sorts_globally_under_loss() {
         check(4, 16, 0.2, 200);
         check(8, 8, 0.25, 201);
+    }
+
+    #[test]
+    fn sort_cell_replica_validates_under_loss() {
+        let mut rng = Rng::new(0x50B7);
+        let cell = SortCell::sample(4, 16, &mut rng);
+        assert_eq!(cell.n_nodes(), 4);
+        assert_eq!(cell.phase_packets(), 4.0);
+        let mut rt = BspRuntime::new(net(4, 0.2, 11)).with_copies(2);
+        let run = Box::new(cell).run_replica(&mut rt);
+        assert!(run.completed);
+        assert!(run.validated, "sorted output must match the oracle");
+        assert!(run.speedup() > 0.0);
+        // log₂4·(log₂4+1)/2 = 3 exchange phases, ≥ 1 round each.
+        assert!(run.rounds >= 3);
+        assert_eq!(run.supersteps, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sort_cell_rejects_non_power_of_two() {
+        let mut rng = Rng::new(2);
+        let _ = SortCell::sample(6, 8, &mut rng);
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //! workload invariant holds: a reliability bug shows up as a wrong
 //! delivered count, not just odd timing.
 
-use crate::bsp::{BspProgram, Outgoing};
+use crate::bsp::{BspProgram, BspRuntime, Outgoing};
 use crate::net::NodeId;
+
+use super::{DistWorkload, ReplicaRun};
 
 /// See module docs. Construct with [`SyntheticExchange::new`].
 #[derive(Clone, Debug)]
@@ -48,6 +50,35 @@ impl SyntheticExchange {
             return 0;
         }
         (self.n * self.msgs_per_node) as u64
+    }
+}
+
+impl DistWorkload for SyntheticExchange {
+    fn label(&self) -> String {
+        format!("synthetic(r={},m={})", self.supersteps, self.msgs_per_node)
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn phase_packets(&self) -> f64 {
+        self.phase_messages() as f64
+    }
+
+    fn sequential_s(&self) -> f64 {
+        SyntheticExchange::sequential_s(self)
+    }
+
+    fn run_replica(self: Box<Self>, rt: &mut BspRuntime) -> ReplicaRun {
+        let mut prog = *self;
+        let expected = prog.phase_messages() * prog.supersteps as u64;
+        let seq = prog.sequential_s();
+        let rep = rt.run(&mut prog);
+        // The probe has no output data; the reliability contract is the
+        // exact delivered-message count.
+        let validated = rep.completed && prog.delivered == expected;
+        ReplicaRun::from_report(&rep, seq, rt.network().stats, validated)
     }
 }
 
@@ -120,6 +151,19 @@ mod tests {
         assert!(rep.completed);
         assert_eq!(prog.delivered, 0);
         assert_eq!(prog.sequential_s(), 1.0);
+    }
+
+    #[test]
+    fn dist_workload_replica_counts_every_message() {
+        let cell = SyntheticExchange::new(4, 3, 5, 1024, 0.01);
+        assert_eq!(DistWorkload::n_nodes(&cell), 4);
+        assert_eq!(cell.phase_packets(), 20.0);
+        let mut rt = BspRuntime::new(net(4, 0.25, 9)).with_copies(2);
+        let run = Box::new(cell).run_replica(&mut rt);
+        assert!(run.completed);
+        assert!(run.validated, "delivered count must match n·m·r");
+        assert!(run.speedup() > 0.0);
+        assert_eq!(run.data_packets, 60);
     }
 
     #[test]

@@ -3,13 +3,16 @@
 //! 1. Seed-split correctness: a 100-cell campaign must produce bitwise
 //!    identical aggregates at 1 worker and 8 workers — the replica rng
 //!    streams are assigned on the leader in enumeration order, so worker
-//!    scheduling cannot leak into the statistics.
+//!    scheduling cannot leak into the statistics. The same contract is
+//!    asserted for real §V workload cells (matmul, laplace via the
+//!    `DistWorkload` path) and for adaptive-replica mode.
 //! 2. Burstiness ablation: Gilbert–Elliott loss at equal mean loss must
 //!    degrade speedup vs. iid whenever k-copy diversity is in play
-//!    (back-to-back copies die together inside one burst).
+//!    (back-to-back copies die together inside one burst) — and on real
+//!    workloads the delivered *data* must stay correct while it does.
 
 use lbsp::coordinator::{
-    CampaignEngine, CampaignSpec, LossSpec, TopologySpec, Workload,
+    CampaignEngine, CampaignSpec, LossSpec, TopologySpec, WorkloadSpec,
 };
 use lbsp::model::Comm;
 use lbsp::net::protocol::RetransmitPolicy;
@@ -17,7 +20,7 @@ use lbsp::net::protocol::RetransmitPolicy;
 fn hundred_cell_spec() -> CampaignSpec {
     // 5 × 5 × 2 × 2 = 100 cells exactly.
     CampaignSpec {
-        workloads: vec![Workload::Slotted {
+        workloads: vec![WorkloadSpec::Slotted {
             w_s: 4.0 * 3600.0,
             supersteps: 20,
             comm: Comm::Linear,
@@ -34,6 +37,7 @@ fn hundred_cell_spec() -> CampaignSpec {
         topologies: vec![TopologySpec::Uniform],
         replicas: 3,
         seed: 0xDE7E_2211,
+        ..Default::default()
     }
 }
 
@@ -64,7 +68,7 @@ fn bursty_loss_degrades_speedup_vs_iid_at_equal_mean_loss() {
     // under 8-packet bursts all three back-to-back copies share the
     // outage, so the effective failure stays ~p and rounds pile up.
     let base = CampaignSpec {
-        workloads: vec![Workload::Slotted {
+        workloads: vec![WorkloadSpec::Slotted {
             w_s: 4.0 * 3600.0,
             supersteps: 50,
             comm: Comm::Linear,
@@ -81,6 +85,7 @@ fn bursty_loss_degrades_speedup_vs_iid_at_equal_mean_loss() {
         topologies: vec![TopologySpec::Uniform],
         replicas: 32,
         seed: 0xABAD_CAFE,
+        ..Default::default()
     };
     let out = CampaignEngine::new(4).run(&base);
     assert_eq!(out.len(), 2);
@@ -107,7 +112,7 @@ fn synthetic_des_campaign_is_worker_count_invariant() {
     // The packet-level DES path (real BSP program, PlanetLab pairs) obeys
     // the same reproducibility contract as the slotted path.
     let spec = CampaignSpec {
-        workloads: vec![Workload::Synthetic {
+        workloads: vec![WorkloadSpec::Synthetic {
             supersteps: 2,
             msgs_per_node: 2,
             bytes: 2048,
@@ -121,11 +126,86 @@ fn synthetic_des_campaign_is_worker_count_invariant() {
         topologies: vec![TopologySpec::Uniform, TopologySpec::PlanetLabLike],
         replicas: 3,
         seed: 77,
+        ..Default::default()
     };
     let a = CampaignEngine::new(1).run(&spec);
     let b = CampaignEngine::new(6).run(&spec);
     assert_eq!(a, b);
     assert!(a.iter().all(|s| s.completed_frac == 1.0));
+    assert!(a.iter().all(|s| s.validated_frac == 1.0));
+}
+
+#[test]
+fn real_workload_campaign_cells_are_worker_count_invariant() {
+    // The §V programs themselves through the generic DistWorkload path:
+    // matmul (4 = 2×2 node grid) and laplace (4 row bands) at small
+    // problem sizes, 2 × 2 × 2 cells each. Aggregates must be bitwise
+    // identical at 1 and 8 workers, and every replica's *data* must
+    // match its sequential reference.
+    for workload in [
+        WorkloadSpec::Matmul { block: 4 },
+        WorkloadSpec::Laplace { h: 6, w: 8, sweeps: 3 },
+    ] {
+        let spec = CampaignSpec {
+            workloads: vec![workload],
+            ns: vec![4],
+            ps: vec![0.05, 0.15],
+            ks: vec![1, 2],
+            topologies: vec![TopologySpec::Uniform, TopologySpec::PlanetLabLike],
+            replicas: 3,
+            seed: 0xBEEF_0042,
+            ..Default::default()
+        };
+        assert_eq!(spec.n_cells(), 8);
+        let serial = CampaignEngine::new(1).run(&spec);
+        let parallel = CampaignEngine::new(8).run(&spec);
+        assert_eq!(serial, parallel, "workload {workload:?}");
+        for s in &serial {
+            assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+            assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
+            assert!(s.speedup.mean > 0.0);
+            assert!(s.data_packets.mean > 0.0);
+        }
+    }
+}
+
+#[test]
+fn bursty_loss_on_real_workload_keeps_data_valid_while_rounds_degrade() {
+    // The wrong-data-not-just-counters contract under temporal
+    // correlation: a Gilbert–Elliott channel at the same mean loss as an
+    // iid cell must leave the Jacobi mesh bit-identical to the
+    // sequential reference (validated_frac = 1) while k-copy diversity
+    // collapses and rounds pile up.
+    let spec = CampaignSpec {
+        workloads: vec![WorkloadSpec::Laplace { h: 8, w: 8, sweeps: 8 }],
+        ns: vec![4],
+        ps: vec![0.12],
+        ks: vec![3],
+        losses: vec![
+            LossSpec::Bernoulli,
+            LossSpec::GilbertElliott { burst_len: 8.0 },
+        ],
+        replicas: 24,
+        seed: 0x6E_1A55,
+        ..Default::default()
+    };
+    let out = CampaignEngine::new(4).run(&spec);
+    assert_eq!(out.len(), 2);
+    let iid = &out[0];
+    let ge = &out[1];
+    assert_eq!(iid.cell.loss, LossSpec::Bernoulli);
+    assert!(matches!(ge.cell.loss, LossSpec::GilbertElliott { .. }));
+    // Reliability layer must hide the loss process from the data...
+    assert_eq!(iid.validated_frac, 1.0);
+    assert_eq!(ge.validated_frac, 1.0, "bursty loss corrupted workload data");
+    assert_eq!(ge.completed_frac, 1.0);
+    // ...but not from the round count: bursts defeat back-to-back copies.
+    assert!(
+        ge.rounds.mean > iid.rounds.mean,
+        "bursty rounds {} vs iid {}",
+        ge.rounds.mean,
+        iid.rounds.mean
+    );
 }
 
 #[test]
@@ -155,4 +235,109 @@ fn more_copies_help_under_iid_loss() {
         k2.rounds.mean,
         k1.rounds.mean
     );
+}
+
+#[test]
+fn adaptive_mode_spends_replicas_where_the_noise_is() {
+    // Two cells of very different difficulty: p = 0 is exactly
+    // deterministic (every phase one round, SEM identically 0), p = 0.15
+    // is noisy. The adaptive engine must stop the easy cell after its
+    // first batch and keep sampling the hard one to the cap — fewer
+    // total replicas than a flat fixed-replica baseline of equal cap,
+    // with the same (zero-spread) easy-cell aggregate.
+    let base = CampaignSpec {
+        ns: vec![8],
+        ps: vec![0.0, 0.15],
+        ks: vec![1],
+        ..hundred_cell_spec()
+    };
+    let base = CampaignSpec { losses: vec![LossSpec::Bernoulli], ..base };
+    let adaptive_spec = CampaignSpec {
+        replicas: 4,
+        sem_target: Some(1e-12),
+        max_replicas: 24,
+        ..base.clone()
+    };
+    let fixed_spec = CampaignSpec { replicas: 24, ..base };
+
+    let engine = CampaignEngine::new(4);
+    let adaptive = engine.run(&adaptive_spec);
+    let fixed = engine.run(&fixed_spec);
+    assert_eq!(adaptive.len(), 2);
+    let (easy, hard) = (&adaptive[0], &adaptive[1]);
+    assert_eq!(easy.cell.p, 0.0);
+
+    // Easy cell: stopped at one batch, SEM exactly at the target floor,
+    // same mean as the 6×-more-expensive fixed baseline.
+    assert_eq!(easy.replicas, 4, "deterministic cell must stop after one batch");
+    assert_eq!(easy.speedup.sem, 0.0);
+    assert_eq!(fixed[0].replicas, 24);
+    assert_eq!(easy.speedup.mean, fixed[0].speedup.mean);
+    assert!(easy.speedup.sem <= fixed[0].speedup.sem);
+
+    // Hard cell: unreachable target → ran to the cap.
+    assert!(hard.replicas == 24 || hard.speedup.sem == 0.0);
+    // Grid total: adaptive spent no more than the fixed baseline.
+    let adaptive_total: u64 = adaptive.iter().map(|s| s.replicas).sum();
+    let fixed_total: u64 = fixed.iter().map(|s| s.replicas).sum();
+    assert!(
+        adaptive_total < fixed_total,
+        "adaptive {adaptive_total} vs fixed {fixed_total} total replicas"
+    );
+}
+
+#[test]
+fn adaptive_mode_tightens_sem_vs_a_small_fixed_baseline() {
+    // A noisy cell with a tiny fixed budget vs. adaptive sampling with a
+    // 16× replica cap: the adaptive estimate must come back tighter.
+    let base = CampaignSpec {
+        ns: vec![8],
+        ps: vec![0.15],
+        ks: vec![1],
+        ..hundred_cell_spec()
+    };
+    let base = CampaignSpec { losses: vec![LossSpec::Bernoulli], ..base };
+    let fixed_spec = CampaignSpec { replicas: 6, ..base.clone() };
+    let adaptive_spec = CampaignSpec {
+        replicas: 6,
+        sem_target: Some(1e-12),
+        max_replicas: 96,
+        ..base
+    };
+    let engine = CampaignEngine::new(4);
+    let fixed = engine.run(&fixed_spec);
+    let adaptive = engine.run(&adaptive_spec);
+    assert_eq!(fixed[0].replicas, 6);
+    assert!(adaptive[0].replicas >= 6 && adaptive[0].replicas <= 96);
+    assert!(
+        adaptive[0].speedup.sem < fixed[0].speedup.sem,
+        "adaptive sem {} (n={}) vs fixed sem {} (n=6)",
+        adaptive[0].speedup.sem,
+        adaptive[0].replicas,
+        fixed[0].speedup.sem
+    );
+}
+
+#[test]
+fn adaptive_real_workload_campaign_is_worker_count_invariant() {
+    // Adaptive batching composes with the DistWorkload path without
+    // breaking the reproducibility contract.
+    let spec = CampaignSpec {
+        workloads: vec![WorkloadSpec::Matmul { block: 4 }],
+        ns: vec![4],
+        ps: vec![0.1],
+        ks: vec![1, 2],
+        replicas: 3,
+        seed: 0xADA9_7153,
+        sem_target: Some(0.05),
+        max_replicas: 18,
+        ..Default::default()
+    };
+    let a = CampaignEngine::new(1).run(&spec);
+    let b = CampaignEngine::new(8).run(&spec);
+    assert_eq!(a, b);
+    for s in &a {
+        assert!(s.replicas >= 3 && s.replicas <= 18);
+        assert_eq!(s.validated_frac, 1.0);
+    }
 }

@@ -3,10 +3,14 @@
 #
 #   scripts/tier1.sh
 #
-# Runs the release build and the full test suite from the repo root, plus
-# `cargo fmt --check` when rustfmt is installed. Fails fast with a clear
-# message when no Rust toolchain is present (e.g. the compile-only sandbox,
-# which carries the Python/JAX side but no cargo).
+# Fail-fast ordering: the cheap static gates run first (`cargo fmt
+# --check`, seconds) so a style regression is reported before the
+# minutes-long release build, then the build, the full test suite, and
+# finally `cargo clippy -D warnings` (needs the build graph anyway, so
+# it rides the warm cache). fmt/clippy are skipped with a notice when
+# the respective component is not installed. Fails with a clear message
+# when no Rust toolchain is present at all (e.g. the compile-only
+# sandbox, which carries the Python/JAX side but no cargo).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,17 +21,31 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "(cargo fmt not installed; skipping format check)"
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
 
-if cargo fmt --version >/dev/null 2>&1; then
-    echo "== cargo fmt --check =="
-    cargo fmt --check
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets -- -D warnings =="
+    # Tests/benches/examples are separate crates, so the conscious
+    # crate-level allows from rust/src/lib.rs are repeated on the
+    # command line to apply one lint posture everywhere.
+    cargo clippy -q --all-targets -- -D warnings \
+        -A clippy::too_many_arguments \
+        -A clippy::needless_range_loop \
+        -A clippy::should_implement_trait \
+        -A clippy::type_complexity
 else
-    echo "(cargo fmt not installed; skipping format check)"
+    echo "(cargo clippy not installed; skipping lint check)"
 fi
 
 echo "tier1: OK"
