@@ -1,0 +1,372 @@
+//! Closed-loop per-superstep selection of the packet-copy count k.
+//!
+//! §IV derives the optimal k for a *known, stationary* p by maximizing
+//! eq (6). For a fixed operating point (n, c, α, β, w) that argmax is
+//! equivalent to minimizing the expected per-superstep communication
+//! time
+//!
+//! ```text
+//! cost(k) = ρ̂(q(p, k), c) · 2τ_k,     τ_k = k·(c/n)·α + β
+//! ```
+//!
+//! because eq (6)'s denominator is `1 + 2ρ̂(k·c·α + n·β)/w =
+//! 1 + (n/w)·cost(k)`: monotone in `cost(k)`, so the k minimizing the
+//! cost is exactly the paper's closed-form k* (see
+//! `rust/src/adapt/README.md` for the derivation). [`CostModel::best_k`]
+//! evaluates that argmin directly through [`crate::model::rho`]; the
+//! controllers differ only in *when* they re-solve it against the
+//! estimate p̂:
+//!
+//! * [`StaticK`] — never: the paper's offline policy (current behavior).
+//! * [`GreedyRho`] — every superstep, at the latest p̂.
+//! * [`HysteresisK`] — only when p̂ leaves the confidence band recorded
+//!   at the previous decision, so short Gilbert–Elliott bursts (which
+//!   spike the instantaneous estimate but not the band-filtered one)
+//!   don't whipsaw k.
+
+use crate::model::rho::{rho_selective, round_failure_q};
+
+/// Loss estimates at/above this are treated as total outage: every ρ̂
+/// is divergent (or astronomically large) for practical `c`, so the
+/// cost is ∞ by inspection — evaluating the eq-(3) series there would
+/// burn its full `RHO_MAX_TERMS` budget per k per superstep only to
+/// saturate anyway.
+const SATURATED_P: f64 = 0.99;
+
+/// The operating point the k solve runs against — the same four numbers
+/// eq (6) uses, minus the total work `w` (the argmax over k does not
+/// depend on it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// Packets per communication phase, `c(n)`.
+    pub c: f64,
+    /// Node count `n`.
+    pub n: f64,
+    /// Per-packet serialization time α (s).
+    pub alpha: f64,
+    /// Round-trip delay β (s).
+    pub beta: f64,
+}
+
+impl CostModel {
+    /// Expected communication time of one superstep at copies `k` under
+    /// loss `p`: `ρ̂(q(p,k), c) · 2τ_k`; ∞ at/above [`SATURATED_P`]
+    /// (the "system fails to operate" regime, returned without paying
+    /// for a saturated series evaluation).
+    pub fn comm_cost(&self, p: f64, k: u32) -> f64 {
+        if p.is_nan() || p >= SATURATED_P {
+            return f64::INFINITY;
+        }
+        let q = round_failure_q(p.max(0.0), k);
+        let rho = rho_selective(q, self.c);
+        let tau_k = k as f64 * self.c / self.n * self.alpha + self.beta;
+        rho * 2.0 * tau_k
+    }
+
+    /// Argmin of [`CostModel::comm_cost`] over `k ∈ 1..=k_max` — the
+    /// paper's k*. Ties and the all-divergent case (p ≥ [`SATURATED_P`],
+    /// every cost infinite) resolve to the smallest k: fewer copies
+    /// means a shorter timeout, which is all that is left to optimize
+    /// when no k gets packets through.
+    pub fn best_k(&self, p: f64, k_max: u32) -> u32 {
+        assert!(k_max >= 1);
+        if p.is_nan() || p >= SATURATED_P {
+            return 1;
+        }
+        let mut best_k = 1u32;
+        let mut best_cost = self.comm_cost(p, 1);
+        for k in 2..=k_max {
+            let cost = self.comm_cost(p, k);
+            if cost < best_cost {
+                best_k = k;
+                best_cost = cost;
+            }
+        }
+        best_k
+    }
+}
+
+/// A policy choosing k for the coming superstep from the current loss
+/// estimate. Stateful on purpose: hysteresis needs to remember its last
+/// decision.
+pub trait KController: Send {
+    /// Pick k given the point estimate `p_hat` and the estimator's
+    /// interval around it.
+    fn choose_k(&mut self, p_hat: f64, interval: (f64, f64)) -> u32;
+
+    /// Short stable label for tables/artifacts.
+    fn label(&self) -> String;
+}
+
+/// The paper's offline policy: a fixed k, estimate ignored.
+#[derive(Clone, Copy, Debug)]
+pub struct StaticK(pub u32);
+
+impl KController for StaticK {
+    fn choose_k(&mut self, _p_hat: f64, _interval: (f64, f64)) -> u32 {
+        self.0.max(1)
+    }
+
+    fn label(&self) -> String {
+        format!("static(k={})", self.0)
+    }
+}
+
+/// Re-solve k* = argmin cost(k) at every superstep, at the latest p̂.
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyRho {
+    pub model: CostModel,
+    pub k_max: u32,
+}
+
+impl GreedyRho {
+    pub fn new(model: CostModel, k_max: u32) -> GreedyRho {
+        assert!(k_max >= 1);
+        GreedyRho { model, k_max }
+    }
+}
+
+impl KController for GreedyRho {
+    fn choose_k(&mut self, p_hat: f64, _interval: (f64, f64)) -> u32 {
+        self.model.best_k(p_hat, self.k_max)
+    }
+
+    fn label(&self) -> String {
+        format!("greedy(kmax={})", self.k_max)
+    }
+}
+
+/// A band wider than this is an uninformative estimator (e.g. the
+/// `(0, 1)` pre-observation interval of the frequency trackers): no
+/// anchor is recorded and the controller stays greedy until the
+/// estimate means something — anchoring on a cold prior would freeze k
+/// forever inside a band nothing can escape.
+const UNINFORMATIVE_WIDTH: f64 = 0.5;
+
+/// Absolute cap on the anchor's half-width. However wide the scaled
+/// estimator interval is, a regime shift of more than this much loss
+/// probability always forces a re-solve.
+const MAX_ANCHOR_HALF: f64 = 0.1;
+
+/// Greedy with a decision band: k moves only when p̂ exits the interval
+/// recorded at the last solve, widened by `band` (a multiplier on the
+/// estimator's half-width, capped at [`MAX_ANCHOR_HALF`]). Inside the
+/// band the previous k stands — the estimator's transient excursions
+/// during a loss burst don't translate into k churn unless they
+/// survive long enough to drag the banded estimate with them. While
+/// the estimator is still uninformative (interval wider than
+/// [`UNINFORMATIVE_WIDTH`]) no anchor is laid down and every step
+/// re-solves greedily.
+#[derive(Clone, Copy, Debug)]
+pub struct HysteresisK {
+    inner: GreedyRho,
+    band: f64,
+    /// (lo, hi) of the band anchored at the last decision; `None` until
+    /// the first informed solve.
+    anchor: Option<(f64, f64)>,
+    k: u32,
+}
+
+impl HysteresisK {
+    pub fn new(model: CostModel, k_max: u32, band: f64) -> HysteresisK {
+        assert!(band > 0.0, "band multiplier {band}");
+        HysteresisK { inner: GreedyRho::new(model, k_max), band, anchor: None, k: 1 }
+    }
+
+    /// The currently held k (last decision).
+    pub fn current_k(&self) -> u32 {
+        self.k
+    }
+}
+
+impl KController for HysteresisK {
+    fn choose_k(&mut self, p_hat: f64, interval: (f64, f64)) -> u32 {
+        if let Some((lo, hi)) = self.anchor {
+            if (lo..=hi).contains(&p_hat) {
+                return self.k;
+            }
+        }
+        self.k = self.inner.choose_k(p_hat, interval);
+        let width = (interval.1 - interval.0).max(0.0);
+        if width < UNINFORMATIVE_WIDTH {
+            let half = (0.5 * width * self.band).min(MAX_ANCHOR_HALF);
+            self.anchor = Some(((p_hat - half).max(0.0), (p_hat + half).min(1.0)));
+        } else {
+            // Cold estimator: keep solving greedily, anchor later.
+            self.anchor = None;
+        }
+        self.k
+    }
+
+    fn label(&self) -> String {
+        format!("hyst(kmax={},band={})", self.inner.k_max, self.band)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lbsp::optimal_k_speedup;
+    use crate::model::{Comm, LbspParams};
+
+    /// The paper's Fig-10 operating point: c(n) = n², real α — the
+    /// optimum is interior (k = 1 suffers retransmissions, large k pays
+    /// the α term).
+    fn fig10_model(n: f64) -> CostModel {
+        CostModel { c: n * n, n, alpha: 0.0037, beta: 0.069 }
+    }
+
+    #[test]
+    fn best_k_is_the_eq6_argmax() {
+        // cost(k) is a monotone transform of eq (6)'s denominator, so
+        // the argmin must achieve the optimal speedup for every p. The
+        // assertion is on the achieved speedup (tie-robust), with exact
+        // k equality at the well-separated interior point.
+        let n = 4096.0;
+        let model = fig10_model(n);
+        for &p in &[0.005, 0.02, 0.045, 0.1, 0.15, 0.2] {
+            let base = LbspParams {
+                n,
+                p,
+                w: 10.0 * 3600.0,
+                comm: Comm::Quadratic,
+                ..Default::default()
+            };
+            let (k_star, s_star) = optimal_k_speedup(&base, 12);
+            let k_got = model.best_k(p, 12);
+            let s_got = LbspParams { k: k_got, ..base }.speedup();
+            assert!(
+                (s_got - s_star).abs() <= 1e-9 * s_star.abs(),
+                "p={p}: best_k {k_got} (S={s_got}) vs k* {k_star} (S={s_star})"
+            );
+        }
+        // Interior, well-separated case (pinned by model::lbsp tests).
+        let base = LbspParams {
+            n,
+            p: 0.1,
+            w: 10.0 * 3600.0,
+            comm: Comm::Quadratic,
+            ..Default::default()
+        };
+        let (k_star, _) = optimal_k_speedup(&base, 12);
+        assert!(k_star > 1 && k_star < 12);
+        assert_eq!(model.best_k(0.1, 12), k_star);
+    }
+
+    #[test]
+    fn negligible_alpha_pushes_k_to_the_cap() {
+        // When duplication is time-free, more copies only reduce ρ̂.
+        let model = CostModel { c: 64.0, n: 8.0, alpha: 1e-9, beta: 0.07 };
+        assert_eq!(model.best_k(0.15, 4), 4);
+        assert_eq!(model.best_k(0.15, 8), 8);
+    }
+
+    #[test]
+    fn total_outage_falls_back_to_one_copy() {
+        let model = fig10_model(64.0);
+        assert_eq!(model.best_k(1.0, 8), 1);
+        assert_eq!(model.best_k(0.9999999, 8), 1);
+    }
+
+    #[test]
+    fn near_zero_loss_needs_one_copy() {
+        let model = fig10_model(64.0);
+        assert_eq!(model.best_k(0.0, 8), 1);
+        assert_eq!(model.best_k(1e-9, 8), 1);
+    }
+
+    #[test]
+    fn static_is_the_identity_policy() {
+        let mut s = StaticK(3);
+        assert_eq!(s.choose_k(0.0, (0.0, 1.0)), 3);
+        assert_eq!(s.choose_k(0.9, (0.8, 1.0)), 3);
+        assert_eq!(StaticK(0).choose_k(0.5, (0.0, 1.0)), 1, "k floors at 1");
+    }
+
+    #[test]
+    fn greedy_tracks_the_estimate() {
+        let model = CostModel { c: 64.0, n: 8.0, alpha: 1e-9, beta: 0.07 };
+        let mut g = GreedyRho::new(model, 6);
+        assert_eq!(g.choose_k(0.0, (0.0, 0.01)), 1);
+        assert_eq!(g.choose_k(0.2, (0.15, 0.25)), 6);
+        assert_eq!(g.choose_k(0.0, (0.0, 0.01)), 1, "greedy is memoryless");
+    }
+
+    #[test]
+    fn hysteresis_holds_inside_band_and_moves_outside() {
+        let model = CostModel { c: 64.0, n: 8.0, alpha: 1e-9, beta: 0.07 };
+        let mut h = HysteresisK::new(model, 6, 1.0);
+        // First call always solves: p̂ = 0.15 with a ±0.05 interval.
+        let k0 = h.choose_k(0.15, (0.10, 0.20));
+        assert_eq!(k0, 6);
+        // Inside the band: held, even where greedy would move.
+        assert_eq!(h.choose_k(0.12, (0.10, 0.20)), k0);
+        assert_eq!(h.choose_k(0.19, (0.14, 0.24)), k0);
+        // A collapse of the estimate far outside the band re-solves.
+        let k1 = h.choose_k(0.0, (0.0, 0.01));
+        assert_eq!(k1, 1);
+        assert_eq!(h.current_k(), 1);
+        // And the new band is anchored at the new estimate.
+        assert_eq!(h.choose_k(0.004, (0.0, 0.01)), 1);
+    }
+
+    #[test]
+    fn wider_band_survives_excursions_that_flip_a_tight_band() {
+        let model = CostModel { c: 64.0, n: 8.0, alpha: 1e-9, beta: 0.07 };
+        let mut tight = HysteresisK::new(model, 6, 0.5);
+        let mut wide = HysteresisK::new(model, 6, 4.0);
+        // Informed estimator: ±0.05 interval around p̂ = 0.15. Anchors:
+        // tight ±0.025 → (0.125, 0.175); wide ±0.2 capped at ±0.1 →
+        // (0.05, 0.25).
+        let iv = (0.10, 0.20);
+        assert_eq!(tight.choose_k(0.15, iv), wide.choose_k(0.15, iv));
+        // A burst-driven excursion to p̂ = 0.22: outside the tight band,
+        // inside the wide one.
+        let excursion = 0.22;
+        let _ = tight.choose_k(excursion, (0.17, 0.27));
+        let _ = wide.choose_k(excursion, (0.17, 0.27));
+        assert!(tight.anchor.unwrap().0 > 0.18, "tight band must re-anchor");
+        assert!(
+            wide.anchor.unwrap().0 < 0.06,
+            "wide band must still hold the original anchor"
+        );
+    }
+
+    #[test]
+    fn hysteresis_does_not_latch_on_an_uninformative_prior() {
+        // Pre-observation estimators report a (0, 1) interval; anchoring
+        // a band on it would freeze the cold-start k forever. The
+        // controller must stay greedy until the interval tightens.
+        let model = CostModel { c: 64.0, n: 8.0, alpha: 1e-9, beta: 0.07 };
+        let mut h = HysteresisK::new(model, 6, 3.0);
+        assert_eq!(h.choose_k(0.1, (0.0, 1.0)), 6);
+        assert!(h.anchor.is_none(), "no anchor from an uninformative band");
+        // Once informed, a collapsed estimate re-solves immediately...
+        assert_eq!(h.choose_k(1e-12, (0.0, 0.004)), 1);
+        // ...and the (informed) anchor now holds nearby estimates.
+        assert!(h.anchor.is_some());
+        assert_eq!(h.choose_k(0.001, (0.0, 0.006)), 1);
+    }
+
+    #[test]
+    fn anchor_half_width_is_capped() {
+        // band = 10 over a ±0.1 interval wants a ±1.0 anchor; the cap
+        // keeps a real regime shift able to escape.
+        let model = CostModel { c: 64.0, n: 8.0, alpha: 1e-9, beta: 0.07 };
+        let mut h = HysteresisK::new(model, 6, 10.0);
+        let _ = h.choose_k(0.2, (0.1, 0.3));
+        let (lo, hi) = h.anchor.unwrap();
+        assert!((lo - 0.1).abs() < 1e-12 && (hi - 0.3).abs() < 1e-12, "{lo}..{hi}");
+        // p̂ drifting to 0.45 (a genuine shift) must re-solve.
+        let _ = h.choose_k(0.45, (0.35, 0.55));
+        assert!(h.anchor.unwrap().0 > 0.3);
+    }
+
+    #[test]
+    fn saturated_estimates_short_circuit() {
+        let model = fig10_model(64.0);
+        assert_eq!(model.comm_cost(1.0, 3), f64::INFINITY);
+        assert_eq!(model.comm_cost(0.995, 1), f64::INFINITY);
+        assert!(model.comm_cost(0.5, 1).is_finite());
+    }
+}

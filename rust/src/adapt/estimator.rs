@@ -1,0 +1,502 @@
+//! Online per-link loss estimation from protocol-visible counters.
+//!
+//! The paper assumes the loss probability `p` is known a priori and
+//! stationary; its own PlanetLab measurements (5–15 % mean, bursty) say
+//! it is neither. This module turns the counters the reliable-phase
+//! protocol already produces into a running estimate p̂ the
+//! [`crate::adapt::controller`] layer can re-solve k* against.
+//!
+//! ## The observable
+//!
+//! One communication phase gives, per directed pair, `(lost, sent)` wire
+//! copies. Both numbers are protocol-visible without oracle access: the
+//! sender knows how many copies it put on the wire (`k ×`
+//! retransmissions), and the receiver counts the copies that arrived —
+//! duplicate deliveries of the same sequence number are exactly the
+//! per-copy survival record (the DES folds acks in too; acks ride the
+//! same loss process). Each copy is one Bernoulli(p) trial of the pair's
+//! channel, so `lost / sent` estimates the per-packet loss probability
+//! the model's `q = p^k (2 − p^k)` is built from.
+//!
+//! ## Estimators
+//!
+//! * [`WindowedFrequency`] — plain frequency over the last `len`
+//!   observation batches; tracks drift at window granularity.
+//! * [`Ewma`] — exponentially weighted per-trial average; the classic
+//!   adaptive-transport tracker (RBUDP-style rate probing reacts to the
+//!   measured channel the same way).
+//! * [`BetaPosterior`] — conjugate Bayesian update `Beta(a + lost,
+//!   b + sent − lost)` with a credible interval; the interval is what
+//!   the hysteresis controller's decision band is made of.
+//!
+//! All three report an approximate 95 % interval: Wilson score for the
+//! frequency trackers (never collapses to a point at p̂ ∈ {0, 1}),
+//! moment-matched normal for the Beta posterior.
+//!
+//! [`LinkBank`] holds one estimator per directed pair and aggregates a
+//! traffic-weighted global estimate for the (global) k controller, while
+//! keeping the per-link states inspectable.
+
+/// z-score of the two-sided 95 % interval all estimators report.
+const Z95: f64 = 1.96;
+
+/// An online estimator of a per-packet loss probability, fed with
+/// `(lost, sent)` counter deltas and queried for a point estimate plus
+/// an approximate 95 % interval.
+pub trait LossEstimator: Send {
+    /// Record `lost` losses out of `sent` wire copies (one batch — e.g.
+    /// one pair's traffic over one communication phase). `lost > sent`
+    /// is a caller bug.
+    fn observe(&mut self, lost: u64, sent: u64);
+
+    /// Current point estimate p̂ ∈ [0, 1]. Before any observation this
+    /// is the configured prior guess.
+    fn estimate(&self) -> f64;
+
+    /// Approximate 95 % interval around [`LossEstimator::estimate`],
+    /// clamped to [0, 1]. `(0, 1)` before any observation.
+    fn interval(&self) -> (f64, f64);
+
+    /// Effective number of Bernoulli trials backing the estimate (the
+    /// interval shrinks like `1/√weight`).
+    fn weight(&self) -> f64;
+
+    /// Short stable label for tables/artifacts, e.g. `beta(s=2,p0=0.1)`.
+    fn label(&self) -> String;
+}
+
+/// Wilson score interval for a Bernoulli proportion — unlike the Wald
+/// interval it stays non-degenerate at p̂ ∈ {0, 1}, which matters
+/// because a hysteresis band of width zero would re-solve every step.
+fn wilson(p_hat: f64, n: f64, z: f64) -> (f64, f64) {
+    if n <= 0.0 {
+        return (0.0, 1.0);
+    }
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let center = (p_hat + z2 / (2.0 * n)) / denom;
+    let half = z * (p_hat * (1.0 - p_hat) / n + z2 / (4.0 * n * n)).sqrt() / denom;
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Frequency estimate over a sliding window of the last `len`
+/// observation batches (one batch ≈ one phase's traffic on a pair).
+#[derive(Clone, Debug)]
+pub struct WindowedFrequency {
+    /// Ring buffer of (lost, sent) batches.
+    ring: Vec<(u64, u64)>,
+    head: usize,
+    filled: usize,
+    p0: f64,
+}
+
+impl WindowedFrequency {
+    pub fn new(len: usize, p0: f64) -> WindowedFrequency {
+        assert!(len >= 1, "window length must be >= 1");
+        assert!((0.0..=1.0).contains(&p0), "prior {p0}");
+        WindowedFrequency { ring: vec![(0, 0); len], head: 0, filled: 0, p0 }
+    }
+
+    fn totals(&self) -> (u64, u64) {
+        self.ring[..self.filled]
+            .iter()
+            .fold((0, 0), |(l, s), &(bl, bs)| (l + bl, s + bs))
+    }
+}
+
+impl LossEstimator for WindowedFrequency {
+    fn observe(&mut self, lost: u64, sent: u64) {
+        assert!(lost <= sent, "lost {lost} > sent {sent}");
+        if sent == 0 {
+            return;
+        }
+        self.ring[self.head] = (lost, sent);
+        self.head = (self.head + 1) % self.ring.len();
+        self.filled = (self.filled + 1).min(self.ring.len());
+    }
+
+    fn estimate(&self) -> f64 {
+        let (lost, sent) = self.totals();
+        if sent == 0 { self.p0 } else { lost as f64 / sent as f64 }
+    }
+
+    fn interval(&self) -> (f64, f64) {
+        wilson(self.estimate(), self.weight(), Z95)
+    }
+
+    fn weight(&self) -> f64 {
+        self.totals().1 as f64
+    }
+
+    fn label(&self) -> String {
+        format!("win(l={},p0={})", self.ring.len(), self.p0)
+    }
+}
+
+/// Exponentially weighted moving average with per-trial smoothing
+/// `lambda`: one batch of `sent` trials at rate `r = lost/sent` applies
+/// the single-trial update `sent` times in closed form,
+/// `p̂ ← (1−λ)^sent · p̂ + (1 − (1−λ)^sent) · r`.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    lambda: f64,
+    p_hat: f64,
+    /// Trials seen so far, saturating at the EWMA's effective sample
+    /// size `1/λ` (older trials are down-weighted away).
+    n_eff: f64,
+    seen: bool,
+}
+
+impl Ewma {
+    pub fn new(lambda: f64, p0: f64) -> Ewma {
+        assert!(lambda > 0.0 && lambda < 1.0, "lambda {lambda}");
+        assert!((0.0..=1.0).contains(&p0), "prior {p0}");
+        Ewma { lambda, p_hat: p0, n_eff: 0.0, seen: false }
+    }
+}
+
+impl LossEstimator for Ewma {
+    fn observe(&mut self, lost: u64, sent: u64) {
+        assert!(lost <= sent, "lost {lost} > sent {sent}");
+        if sent == 0 {
+            return;
+        }
+        let keep = (1.0 - self.lambda).powi(sent.min(i32::MAX as u64) as i32);
+        self.p_hat = keep * self.p_hat + (1.0 - keep) * (lost as f64 / sent as f64);
+        self.n_eff = (self.n_eff + sent as f64).min(1.0 / self.lambda);
+        self.seen = true;
+    }
+
+    fn estimate(&self) -> f64 {
+        self.p_hat
+    }
+
+    fn interval(&self) -> (f64, f64) {
+        if !self.seen {
+            return (0.0, 1.0);
+        }
+        wilson(self.p_hat, self.n_eff, Z95)
+    }
+
+    fn weight(&self) -> f64 {
+        self.n_eff
+    }
+
+    fn label(&self) -> String {
+        format!("ewma(l={})", self.lambda)
+    }
+}
+
+/// Conjugate Beta posterior over the loss probability:
+/// `Beta(a₀ + Σ lost, b₀ + Σ (sent − lost))` with the prior encoding a
+/// guess `p0` at pseudo-count strength `s` (`a₀ = s·p0`,
+/// `b₀ = s·(1−p0)`). The 95 % credible interval is the moment-matched
+/// normal `μ ± 1.96·σ` with `σ² = ab/((a+b)²(a+b+1))`.
+#[derive(Clone, Debug)]
+pub struct BetaPosterior {
+    a: f64,
+    b: f64,
+    strength: f64,
+    p0: f64,
+}
+
+impl BetaPosterior {
+    pub fn new(strength: f64, p0: f64) -> BetaPosterior {
+        assert!(strength > 0.0, "prior strength {strength}");
+        assert!((0.0..=1.0).contains(&p0), "prior {p0}");
+        // Both pseudo-counts stay positive so the posterior is proper
+        // even at p0 ∈ {0, 1}.
+        let a = (strength * p0).max(1e-3);
+        let b = (strength * (1.0 - p0)).max(1e-3);
+        BetaPosterior { a, b, strength, p0 }
+    }
+
+    /// Posterior variance (moment form).
+    pub fn variance(&self) -> f64 {
+        let n = self.a + self.b;
+        self.a * self.b / (n * n * (n + 1.0))
+    }
+}
+
+impl LossEstimator for BetaPosterior {
+    fn observe(&mut self, lost: u64, sent: u64) {
+        assert!(lost <= sent, "lost {lost} > sent {sent}");
+        self.a += lost as f64;
+        self.b += (sent - lost) as f64;
+    }
+
+    fn estimate(&self) -> f64 {
+        self.a / (self.a + self.b)
+    }
+
+    fn interval(&self) -> (f64, f64) {
+        let mu = self.estimate();
+        let half = Z95 * self.variance().sqrt();
+        ((mu - half).max(0.0), (mu + half).min(1.0))
+    }
+
+    fn weight(&self) -> f64 {
+        self.a + self.b
+    }
+
+    fn label(&self) -> String {
+        format!("beta(s={},p0={})", self.strength, self.p0)
+    }
+}
+
+/// One estimator per directed pair plus a traffic-weighted global view —
+/// the "pluggable per-link estimator" bank the runtime feeds each phase.
+///
+/// The controller's k is global (one duplication factor per superstep),
+/// so [`LinkBank::estimate`] aggregates per-link estimates weighted by
+/// observed traffic; heavily used pairs dominate, idle pairs don't
+/// dilute. Per-link states stay inspectable for reporting.
+pub struct LinkBank {
+    links: Vec<Box<dyn LossEstimator>>,
+    traffic: Vec<u64>,
+}
+
+impl LinkBank {
+    /// A bank of `n_pairs` independent estimators built by `mk` (one per
+    /// directed pair, row-major `src·n + dst`; the diagonal never sees
+    /// traffic and stays at the prior).
+    pub fn new(n_pairs: usize, mk: impl Fn() -> Box<dyn LossEstimator>) -> LinkBank {
+        assert!(n_pairs >= 1);
+        LinkBank {
+            links: (0..n_pairs).map(|_| mk()).collect(),
+            traffic: vec![0; n_pairs],
+        }
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Feed one pair's `(lost, sent)` delta for the phase just run.
+    pub fn observe(&mut self, pair: usize, lost: u64, sent: u64) {
+        if sent == 0 {
+            return;
+        }
+        self.links[pair].observe(lost, sent);
+        self.traffic[pair] += sent;
+    }
+
+    fn total_traffic(&self) -> u64 {
+        self.traffic.iter().sum()
+    }
+
+    /// Traffic-weighted global p̂; the prior of link 0 before any
+    /// observation (all links share one construction, so one prior).
+    pub fn estimate(&self) -> f64 {
+        let total = self.total_traffic();
+        if total == 0 {
+            return self.links[0].estimate();
+        }
+        let mut acc = 0.0;
+        for (est, &w) in self.links.iter().zip(&self.traffic) {
+            if w > 0 {
+                acc += w as f64 * est.estimate();
+            }
+        }
+        acc / total as f64
+    }
+
+    /// Aggregate uncertainty band: the traffic-weighted mean of the
+    /// per-link intervals, **unioned with the spread of per-link point
+    /// estimates**. Averaging the bounds alone would *narrow* under
+    /// heterogeneity (two tight links at 0.01 and 0.5 would average to
+    /// a ±0.005 band around 0.25); folding the spread in keeps the band
+    /// at least as wide as the between-link variance, which is the
+    /// conservative direction for a hysteresis anchor.
+    pub fn interval(&self) -> (f64, f64) {
+        let total = self.total_traffic();
+        if total == 0 {
+            return self.links[0].interval();
+        }
+        let (mut lo, mut hi) = (0.0, 0.0);
+        for (est, &w) in self.links.iter().zip(&self.traffic) {
+            if w > 0 {
+                let (l, h) = est.interval();
+                lo += w as f64 * l;
+                hi += w as f64 * h;
+            }
+        }
+        let (lo, hi) = (lo / total as f64, hi / total as f64);
+        match self.spread() {
+            Some((s_lo, s_hi)) => (lo.min(s_lo), hi.max(s_hi)),
+            None => (lo, hi),
+        }
+    }
+
+    /// (min, max) point estimate over pairs that saw traffic — the
+    /// heterogeneity spread for reporting. `None` before any traffic.
+    pub fn spread(&self) -> Option<(f64, f64)> {
+        let mut out: Option<(f64, f64)> = None;
+        for (est, &w) in self.links.iter().zip(&self.traffic) {
+            if w > 0 {
+                let p = est.estimate();
+                out = Some(match out {
+                    None => (p, p),
+                    Some((lo, hi)) => (lo.min(p), hi.max(p)),
+                });
+            }
+        }
+        out
+    }
+
+    /// Total wire copies observed across all pairs.
+    pub fn observed(&self) -> u64 {
+        self.total_traffic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::loss::{Bernoulli, GilbertElliott, LossModel};
+    use crate::util::prng::Rng;
+
+    /// Feed `batches` × `per_batch` channel draws from a loss model.
+    fn drive<E: LossEstimator, L: LossModel>(
+        est: &mut E,
+        loss: &mut L,
+        batches: usize,
+        per_batch: u64,
+        seed: u64,
+    ) {
+        let mut rng = Rng::new(seed);
+        for _ in 0..batches {
+            let lost = (0..per_batch).filter(|_| loss.lose(&mut rng)).count() as u64;
+            est.observe(lost, per_batch);
+        }
+    }
+
+    #[test]
+    fn all_estimators_converge_on_bernoulli() {
+        let p = 0.12;
+        let mut win = WindowedFrequency::new(64, 0.5);
+        let mut ewma = Ewma::new(0.002, 0.5);
+        let mut beta = BetaPosterior::new(2.0, 0.5);
+        drive(&mut win, &mut Bernoulli::new(p), 200, 50, 1);
+        drive(&mut ewma, &mut Bernoulli::new(p), 200, 50, 2);
+        drive(&mut beta, &mut Bernoulli::new(p), 200, 50, 3);
+        assert!((win.estimate() - p).abs() < 0.03, "win {}", win.estimate());
+        assert!((ewma.estimate() - p).abs() < 0.05, "ewma {}", ewma.estimate());
+        assert!((beta.estimate() - p).abs() < 0.02, "beta {}", beta.estimate());
+    }
+
+    #[test]
+    fn beta_interval_tightens_and_brackets_the_estimate() {
+        let mut beta = BetaPosterior::new(2.0, 0.1);
+        let (lo0, hi0) = beta.interval();
+        drive(&mut beta, &mut Bernoulli::new(0.1), 400, 50, 7);
+        let (lo, hi) = beta.interval();
+        let p_hat = beta.estimate();
+        assert!(lo <= p_hat && p_hat <= hi);
+        assert!(hi - lo < hi0 - lo0, "interval must shrink with data");
+        // 20k trials: half-width ~ 1.96·sqrt(0.09/20000) ≈ 0.004.
+        assert!(hi - lo < 0.02, "width {}", hi - lo);
+    }
+
+    #[test]
+    fn window_forgets_old_regime() {
+        // 0.3-loss history followed by a 0.05 regime longer than the
+        // window: the windowed estimate must track the new regime.
+        let mut win = WindowedFrequency::new(16, 0.1);
+        drive(&mut win, &mut Bernoulli::new(0.3), 64, 50, 11);
+        drive(&mut win, &mut Bernoulli::new(0.05), 32, 50, 12);
+        assert!(
+            (win.estimate() - 0.05).abs() < 0.03,
+            "stale estimate {}",
+            win.estimate()
+        );
+    }
+
+    #[test]
+    fn ewma_tracks_regime_change_faster_than_long_window() {
+        let mut ewma = Ewma::new(0.01, 0.1);
+        let mut win = WindowedFrequency::new(256, 0.1);
+        drive(&mut ewma, &mut Bernoulli::new(0.3), 100, 50, 21);
+        drive(&mut win, &mut Bernoulli::new(0.3), 100, 50, 21);
+        drive(&mut ewma, &mut Bernoulli::new(0.02), 10, 50, 22);
+        drive(&mut win, &mut Bernoulli::new(0.02), 10, 50, 22);
+        assert!(
+            (ewma.estimate() - 0.02).abs() < (win.estimate() - 0.02).abs(),
+            "ewma {} vs window {}",
+            ewma.estimate(),
+            win.estimate()
+        );
+    }
+
+    #[test]
+    fn estimators_recover_ge_mean_loss() {
+        // The long-run mean of a bursty channel is still its stationary
+        // loss; frequency and Bayes trackers must find it (slower — the
+        // burst autocorrelation inflates the variance).
+        let mean = 0.1;
+        let mut win = WindowedFrequency::new(512, 0.5);
+        let mut beta = BetaPosterior::new(2.0, 0.5);
+        drive(&mut win, &mut GilbertElliott::with_mean_loss(mean, 8.0), 500, 50, 31);
+        drive(&mut beta, &mut GilbertElliott::with_mean_loss(mean, 8.0), 500, 50, 32);
+        assert!((win.estimate() - mean).abs() < 0.05, "win {}", win.estimate());
+        assert!((beta.estimate() - mean).abs() < 0.05, "beta {}", beta.estimate());
+    }
+
+    #[test]
+    fn prior_rules_before_observations() {
+        let win = WindowedFrequency::new(8, 0.07);
+        let ewma = Ewma::new(0.05, 0.07);
+        let beta = BetaPosterior::new(10.0, 0.07);
+        assert_eq!(win.estimate(), 0.07);
+        assert_eq!(ewma.estimate(), 0.07);
+        assert!((beta.estimate() - 0.07).abs() < 1e-9);
+        assert_eq!(win.interval(), (0.0, 1.0));
+        assert_eq!(ewma.interval(), (0.0, 1.0));
+    }
+
+    #[test]
+    fn wilson_interval_sane_at_extremes() {
+        let (lo, hi) = wilson(0.0, 100.0, Z95);
+        assert_eq!(lo, 0.0);
+        assert!(hi > 0.0 && hi < 0.1, "p̂=0 keeps a non-degenerate band: {hi}");
+        let (lo, hi) = wilson(1.0, 100.0, Z95);
+        assert_eq!(hi, 1.0);
+        assert!(lo < 1.0 && lo > 0.9);
+        assert_eq!(wilson(0.5, 0.0, Z95), (0.0, 1.0));
+    }
+
+    #[test]
+    fn link_bank_weights_by_traffic() {
+        let mut bank = LinkBank::new(4, || Box::new(WindowedFrequency::new(32, 0.1)));
+        // Pair 1 carries 9× the traffic of pair 2.
+        bank.observe(1, 90, 900);
+        bank.observe(2, 50, 100);
+        let expect = (90.0 + 50.0) / 1000.0;
+        assert!((bank.estimate() - expect).abs() < 1e-12, "{}", bank.estimate());
+        let (lo, hi) = bank.spread().unwrap();
+        assert!((lo - 0.1).abs() < 1e-12 && (hi - 0.5).abs() < 1e-12);
+        assert_eq!(bank.observed(), 1000);
+    }
+
+    #[test]
+    fn link_bank_interval_covers_heterogeneous_links() {
+        // Two tight per-link estimates far apart: the aggregate band
+        // must span both, not average down to a narrow band between
+        // them (the failure mode of bound-averaging alone).
+        let mut bank = LinkBank::new(4, || Box::new(BetaPosterior::new(2.0, 0.1)));
+        bank.observe(1, 10, 1000); // p̂ ≈ 0.01
+        bank.observe(2, 500, 1000); // p̂ ≈ 0.5
+        let (lo, hi) = bank.interval();
+        assert!(
+            lo < 0.05 && hi > 0.45,
+            "band ({lo}, {hi}) must cover the per-link spread"
+        );
+    }
+
+    #[test]
+    fn link_bank_prior_before_traffic() {
+        let bank = LinkBank::new(9, || Box::new(BetaPosterior::new(2.0, 0.12)));
+        assert!((bank.estimate() - 0.12).abs() < 1e-9);
+        assert!(bank.spread().is_none());
+    }
+}

@@ -1,0 +1,281 @@
+//! Adaptive duplication control: online loss estimation + closed-loop
+//! per-superstep k selection.
+//!
+//! The paper's §IV optimum — the minimum packet-duplication count k
+//! maximizing speedup — assumes the loss rate p is known a priori and
+//! stationary. Its own PlanetLab measurements (5–15 % average, bursty)
+//! and this repo's Gilbert–Elliott campaigns say it is neither. This
+//! subsystem turns the offline optimum into a runtime policy:
+//!
+//! 1. [`estimator`] — pluggable per-link loss estimators behind
+//!    [`LossEstimator`] (windowed frequency, EWMA, Beta posterior with
+//!    credible intervals), fed each superstep with the `(lost, sent)`
+//!    wire-copy counters the reliable-phase protocol already produces.
+//! 2. [`controller`] — [`KController`] policies re-solving the paper's
+//!    k* against the estimate: [`StaticK`] (current behavior),
+//!    [`GreedyRho`] (argmin of `ρ̂(q(p̂,k),c)·2τ_k` every superstep, via
+//!    `model::rho`), and [`HysteresisK`] (re-solves only when p̂ leaves
+//!    the last decision's confidence band — burst-tolerant).
+//! 3. [`AdaptiveK`] — the per-run closed-loop state the
+//!    [`crate::bsp::BspRuntime`] hook drives: choose k before each
+//!    superstep's phase, feed per-pair counter deltas after it.
+//!
+//! Campaign cells opt in through the [`AdaptSpec`] axis
+//! (`crate::coordinator::CampaignSpec::adapts`, CLI `--adapt`): every
+//! packet-level [`crate::workloads::DistWorkload`] runs adaptively; the
+//! slotted abstraction is fixed-k by construction and rejects the axis.
+//! See `rust/src/adapt/README.md` for the estimator/controller math and
+//! the k* derivation from §II's ρ model.
+
+pub mod controller;
+pub mod estimator;
+
+pub use controller::{CostModel, GreedyRho, HysteresisK, KController, StaticK};
+pub use estimator::{BetaPosterior, Ewma, LinkBank, LossEstimator, WindowedFrequency};
+
+/// Estimator choice + knobs as plain `Copy` data, so campaign cells can
+/// carry it across the worker pool ([`EstimatorSpec::build`] makes the
+/// boxed instance per replica).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EstimatorSpec {
+    /// [`WindowedFrequency`] over the last `len` observation batches.
+    Window { len: usize, p0: f64 },
+    /// [`Ewma`] with per-trial smoothing `lambda`.
+    Ewma { lambda: f64, p0: f64 },
+    /// [`BetaPosterior`] with prior strength `strength` at guess `p0`.
+    Beta { strength: f64, p0: f64 },
+}
+
+impl EstimatorSpec {
+    /// The default estimator: a weak Beta prior at the PlanetLab-band
+    /// midpoint (the paper's Fig 1: 5–15 % mean loss).
+    pub const fn default_beta() -> EstimatorSpec {
+        EstimatorSpec::Beta { strength: 2.0, p0: 0.1 }
+    }
+
+    pub fn build(&self) -> Box<dyn LossEstimator> {
+        match *self {
+            EstimatorSpec::Window { len, p0 } => Box::new(WindowedFrequency::new(len, p0)),
+            EstimatorSpec::Ewma { lambda, p0 } => Box::new(Ewma::new(lambda, p0)),
+            EstimatorSpec::Beta { strength, p0 } => Box::new(BetaPosterior::new(strength, p0)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            EstimatorSpec::Window { len, p0 } => format!("win({len},{p0})"),
+            EstimatorSpec::Ewma { lambda, p0 } => format!("ewma({lambda},{p0})"),
+            EstimatorSpec::Beta { strength, p0 } => format!("beta({strength},{p0})"),
+        }
+    }
+
+    /// Check the knobs [`EstimatorSpec::build`] would otherwise assert
+    /// on deep inside a worker thread — callers (campaign validation,
+    /// CLI) get a clear message instead of a panic.
+    pub fn validate(&self) -> Result<(), String> {
+        let p0 = match *self {
+            EstimatorSpec::Window { len, p0 } => {
+                if len == 0 {
+                    return Err("estimator window length must be >= 1".into());
+                }
+                p0
+            }
+            EstimatorSpec::Ewma { lambda, p0 } => {
+                if lambda.is_nan() || lambda <= 0.0 || lambda >= 1.0 {
+                    return Err(format!("ewma lambda = {lambda} outside (0, 1)"));
+                }
+                p0
+            }
+            EstimatorSpec::Beta { strength, p0 } => {
+                if strength.is_nan() || strength <= 0.0 {
+                    return Err(format!("beta prior strength = {strength} must be > 0"));
+                }
+                p0
+            }
+        };
+        if !(0.0..=1.0).contains(&p0) {
+            return Err(format!("estimator prior p0 = {p0} outside [0, 1]"));
+        }
+        Ok(())
+    }
+}
+
+/// The campaign/CLI-facing adaptation axis: which k policy a cell runs.
+/// `Copy` so [`crate::coordinator::CellSpec`] stays `Copy`; the live
+/// state is built per replica by [`AdaptSpec::build`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdaptSpec {
+    /// Fixed k from the cell's k axis — the paper's offline policy.
+    Static,
+    /// [`GreedyRho`] re-solving k* every superstep.
+    Greedy { k_max: u32, est: EstimatorSpec },
+    /// [`HysteresisK`] with a `band`-widened decision interval.
+    Hysteresis { k_max: u32, est: EstimatorSpec, band: f64 },
+}
+
+impl AdaptSpec {
+    pub fn is_static(&self) -> bool {
+        matches!(self, AdaptSpec::Static)
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            AdaptSpec::Static => "static".into(),
+            AdaptSpec::Greedy { k_max, est } => {
+                format!("greedy(kmax={k_max},{})", est.label())
+            }
+            AdaptSpec::Hysteresis { k_max, est, band } => {
+                format!("hyst(kmax={k_max},{},band={band})", est.label())
+            }
+        }
+    }
+
+    /// Check controller/estimator knobs up front (k_max ≥ 1, band > 0,
+    /// estimator parameters in range) so a malformed `--adapt` grid
+    /// fails with a message, not a worker-thread assert.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            AdaptSpec::Static => Ok(()),
+            AdaptSpec::Greedy { k_max, est } => {
+                if k_max == 0 {
+                    return Err("adaptive k_max must be >= 1".into());
+                }
+                est.validate()
+            }
+            AdaptSpec::Hysteresis { k_max, est, band } => {
+                if k_max == 0 {
+                    return Err("adaptive k_max must be >= 1".into());
+                }
+                if band.is_nan() || band <= 0.0 {
+                    return Err(format!("hysteresis band = {band} must be > 0"));
+                }
+                est.validate()
+            }
+        }
+    }
+
+    /// Build the closed-loop state for one replica over `n_nodes` nodes
+    /// at the given cost model; `None` for [`AdaptSpec::Static`] (the
+    /// runtime keeps its fixed k).
+    pub fn build(&self, model: CostModel, n_nodes: usize) -> Option<AdaptiveK> {
+        let (controller, est): (Box<dyn KController>, EstimatorSpec) = match *self {
+            AdaptSpec::Static => return None,
+            AdaptSpec::Greedy { k_max, est } => (Box::new(GreedyRho::new(model, k_max)), est),
+            AdaptSpec::Hysteresis { k_max, est, band } => {
+                (Box::new(HysteresisK::new(model, k_max, band)), est)
+            }
+        };
+        let bank = LinkBank::new(n_nodes.max(1) * n_nodes.max(1), || est.build());
+        Some(AdaptiveK { bank, controller })
+    }
+}
+
+/// Per-run closed-loop state: the per-link estimator bank plus the k
+/// policy. Owned by the [`crate::bsp::BspRuntime`]; deterministic given
+/// the observation sequence, so adaptive campaign replicas stay bitwise
+/// worker-count-invariant.
+pub struct AdaptiveK {
+    bank: LinkBank,
+    controller: Box<dyn KController>,
+}
+
+impl AdaptiveK {
+    pub fn new(bank: LinkBank, controller: Box<dyn KController>) -> AdaptiveK {
+        AdaptiveK { bank, controller }
+    }
+
+    /// Pick k for the coming superstep from the bank's aggregate view.
+    pub fn choose_k(&mut self) -> u32 {
+        let p_hat = self.bank.estimate();
+        let interval = self.bank.interval();
+        self.controller.choose_k(p_hat, interval).max(1)
+    }
+
+    /// Feed one directed pair's `(lost, sent)` wire-copy delta from the
+    /// phase just completed.
+    pub fn observe_pair(&mut self, pair: usize, lost: u64, sent: u64) {
+        self.bank.observe(pair, lost, sent);
+    }
+
+    /// Current traffic-weighted global loss estimate p̂.
+    pub fn estimate(&self) -> f64 {
+        self.bank.estimate()
+    }
+
+    /// Per-link estimate spread (min, max) over pairs with traffic.
+    pub fn spread(&self) -> Option<(f64, f64)> {
+        self.bank.spread()
+    }
+
+    /// Total wire copies observed so far.
+    pub fn observed(&self) -> u64 {
+        self.bank.observed()
+    }
+
+    pub fn controller_label(&self) -> String {
+        self.controller.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_labels_are_stable() {
+        assert_eq!(AdaptSpec::Static.label(), "static");
+        let greedy = AdaptSpec::Greedy { k_max: 4, est: EstimatorSpec::default_beta() };
+        assert_eq!(greedy.label(), "greedy(kmax=4,beta(2,0.1))");
+        let hyst = AdaptSpec::Hysteresis {
+            k_max: 3,
+            est: EstimatorSpec::Window { len: 16, p0: 0.05 },
+            band: 2.0,
+        };
+        assert_eq!(hyst.label(), "hyst(kmax=3,win(16,0.05),band=2)");
+    }
+
+    #[test]
+    fn static_builds_nothing() {
+        let model = CostModel { c: 8.0, n: 4.0, alpha: 1e-5, beta: 0.07 };
+        assert!(AdaptSpec::Static.build(model, 4).is_none());
+    }
+
+    #[test]
+    fn closed_loop_reacts_to_observed_loss() {
+        // A fresh loop at the default prior picks a moderate k; after
+        // heavy observed loss it raises k, and after a long clean
+        // streak it returns to k = 1. α is sized so the duplication tax
+        // k·(c/n)·α is a real fraction of β and the crossover exists.
+        let model = CostModel { c: 16.0, n: 4.0, alpha: 0.01, beta: 0.07 };
+        let spec = AdaptSpec::Greedy { k_max: 4, est: EstimatorSpec::default_beta() };
+        let mut loop_ = spec.build(model, 4).expect("adaptive spec");
+        let k0 = loop_.choose_k();
+        assert!(k0 >= 1 && k0 <= 4);
+        // 5 phases of 30 % loss on pair 0→1 (index 1 in row-major 4×4).
+        for _ in 0..5 {
+            loop_.observe_pair(1, 30, 100);
+        }
+        assert!((loop_.estimate() - 0.3).abs() < 0.05, "p̂ {}", loop_.estimate());
+        assert_eq!(loop_.choose_k(), 4, "lossy channel wants the k cap");
+        // A long clean streak drags p̂ toward 0 and k back down.
+        for _ in 0..200 {
+            loop_.observe_pair(1, 0, 100);
+        }
+        assert!(loop_.estimate() < 0.02, "p̂ {}", loop_.estimate());
+        assert_eq!(loop_.choose_k(), 1);
+        assert_eq!(loop_.observed(), 20_500);
+    }
+
+    #[test]
+    fn estimator_spec_builds_the_right_estimator() {
+        assert!(EstimatorSpec::Window { len: 8, p0: 0.1 }
+            .build()
+            .label()
+            .starts_with("win"));
+        assert!(EstimatorSpec::Ewma { lambda: 0.01, p0: 0.1 }
+            .build()
+            .label()
+            .starts_with("ewma"));
+        assert!(EstimatorSpec::default_beta().build().label().starts_with("beta"));
+    }
+}

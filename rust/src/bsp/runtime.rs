@@ -1,5 +1,6 @@
 //! The superstep driver.
 
+use crate::adapt::AdaptiveK;
 use crate::net::protocol::{run_phase, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer};
 use crate::net::transport::Network;
 
@@ -12,6 +13,9 @@ pub struct StepReport {
     pub compute_s: f64,
     pub phase: PhaseReport,
     pub messages: usize,
+    /// Packet copies `k` used for this step's phase (varies under
+    /// adaptive duplication control; the static configuration otherwise).
+    pub copies: u32,
 }
 
 /// How a run ended. `completed` alone cannot distinguish a program whose
@@ -67,13 +71,18 @@ impl RunReport {
 /// Drives a [`BspProgram`] over a lossy [`Network`].
 pub struct BspRuntime {
     net: Network,
-    /// Packet copies `k`.
+    /// Packet copies `k`. Under adaptive control this is re-chosen
+    /// before every superstep's communication phase.
     pub copies: u32,
     pub policy: RetransmitPolicy,
     /// Timeout override; `None` derives `2τ_k` per phase from the mean
     /// link parameters and the phase's packet population (paper formula).
     pub timeout_override_s: Option<f64>,
     pub max_rounds: u32,
+    /// Closed-loop k selection: when set, the runtime asks the
+    /// controller for k before each phase and feeds the per-pair
+    /// `(lost, sent)` wire-copy deltas back to its estimators after it.
+    adapt: Option<AdaptiveK>,
 }
 
 impl BspRuntime {
@@ -84,6 +93,7 @@ impl BspRuntime {
             policy: RetransmitPolicy::Selective,
             timeout_override_s: None,
             max_rounds: 10_000,
+            adapt: None,
         }
     }
 
@@ -95,6 +105,23 @@ impl BspRuntime {
     pub fn with_policy(mut self, policy: RetransmitPolicy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Attach a closed-loop duplication controller (see [`crate::adapt`]):
+    /// `copies` becomes the controller's per-superstep choice.
+    pub fn with_adaptive(mut self, adapt: AdaptiveK) -> Self {
+        self.adapt = Some(adapt);
+        self
+    }
+
+    /// The live adaptive state, if closed-loop control is attached.
+    pub fn adaptive(&self) -> Option<&AdaptiveK> {
+        self.adapt.as_ref()
+    }
+
+    /// Current global loss estimate p̂ under adaptive control.
+    pub fn loss_estimate(&self) -> Option<f64> {
+        self.adapt.as_ref().map(|a| a.estimate())
     }
 
     pub fn network(&self) -> &Network {
@@ -131,6 +158,12 @@ impl BspRuntime {
         let mut report = RunReport::default();
         let mut converged = false;
         for step in 0..prog.max_supersteps() {
+            // --- adaptive duplication control: re-choose k before the
+            // phase from the loss estimate accumulated so far.
+            if let Some(ad) = self.adapt.as_mut() {
+                self.copies = ad.choose_k();
+            }
+
             // --- compute phase: barrier waits for the slowest node.
             let mut barrier_s: f64 = 0.0;
             let mut outgoing: Vec<(usize, Outgoing<P::Msg>)> = Vec::new();
@@ -145,6 +178,10 @@ impl BspRuntime {
                 .iter()
                 .map(|(src, m)| Transfer { src: *src, dst: m.dst, bytes: m.bytes })
                 .collect();
+            let pairs_before: Option<Vec<(u64, u64)>> = self.adapt.as_ref().map(|_| {
+                let (sent, lost) = self.net.pair_counters();
+                sent.iter().copied().zip(lost.iter().copied()).collect()
+            });
             let phase = if transfers.is_empty() {
                 PhaseReport {
                     rounds: 0,
@@ -164,6 +201,22 @@ impl BspRuntime {
                 };
                 run_phase(&mut self.net, &transfers, &cfg)
             };
+
+            // --- close the loop: per-pair (lost, sent) deltas feed the
+            // per-link estimators.
+            if let Some(before) = pairs_before {
+                let (sent_now, lost_now): (Vec<u64>, Vec<u64>) = {
+                    let (s, l) = self.net.pair_counters();
+                    (s.to_vec(), l.to_vec())
+                };
+                let ad = self.adapt.as_mut().expect("snapshot implies adapt");
+                for (pair, &(s0, l0)) in before.iter().enumerate() {
+                    let ds = sent_now[pair] - s0;
+                    if ds > 0 {
+                        ad.observe_pair(pair, lost_now[pair] - l0, ds);
+                    }
+                }
+            }
 
             // --- L-BSP time accounting.
             let step_time = match self.policy {
@@ -185,6 +238,7 @@ impl BspRuntime {
                 compute_s: barrier_s,
                 phase,
                 messages: outgoing.len(),
+                copies: self.copies,
             });
 
             if !phase.completed {
@@ -443,6 +497,50 @@ mod tests {
         let rep = rt.run(&mut RingPass::new(4, 4));
         assert!(rep.completed);
         assert_eq!(rep.outcome, RunOutcome::RanAllSupersteps);
+    }
+
+    #[test]
+    fn adaptive_runtime_closes_the_loop() {
+        use crate::adapt::{AdaptSpec, CostModel, EstimatorSpec};
+        // 4-node ring under 25 % loss: the greedy controller starts at
+        // k = 1 (the prior says p ≈ 0.01, and at that loss one copy is
+        // cheapest under this α) and must ramp k up once the estimators
+        // see the real loss; every step's k is recorded.
+        let model = CostModel { c: 4.0, n: 4.0, alpha: 0.005, beta: 0.02 };
+        let spec = AdaptSpec::Greedy {
+            k_max: 3,
+            est: EstimatorSpec::Beta { strength: 2.0, p0: 0.01 },
+        };
+        let adapt = spec.build(model, 4).expect("adaptive");
+        let mut rt = BspRuntime::new(net(4, 0.25, 71)).with_adaptive(adapt);
+        let mut prog = RingPass::new(4, 12);
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        assert_eq!(rep.steps.len(), 12);
+        // First phase: prior only — k = 1 is deterministic arithmetic.
+        assert_eq!(rep.steps[0].copies, 1);
+        // After observing ~25 % loss the k = 2/3 region is optimal.
+        assert!(rep.steps.last().unwrap().copies >= 2);
+        assert!(
+            rep.steps.iter().any(|s| s.copies > rep.steps[0].copies),
+            "controller never moved k"
+        );
+        let p_hat = rt.loss_estimate().expect("estimate available");
+        assert!((p_hat - 0.25).abs() < 0.1, "p̂ {p_hat}");
+        assert!(rt.adaptive().unwrap().observed() > 0);
+        // Reliability is untouched by the k churn.
+        for node in 0..4 {
+            assert_eq!(prog.received[node].len(), 12);
+        }
+    }
+
+    #[test]
+    fn static_runtime_records_its_fixed_k() {
+        let mut rt = BspRuntime::new(net(3, 0.1, 15)).with_copies(2);
+        let rep = rt.run(&mut RingPass::new(3, 3));
+        assert!(rep.steps.iter().all(|s| s.copies == 2));
+        assert!(rt.loss_estimate().is_none());
+        assert!(rt.adaptive().is_none());
     }
 
     #[test]

@@ -3,9 +3,14 @@
 //! The paper's headline numbers (speedup vs. nodes under 5–15 % loss, the
 //! optimal copy count k*) are statistics over many replicated runs, not
 //! single simulations. This engine fans a full experiment grid —
-//! (workload × n × p × k × retransmission policy × loss model × topology)
-//! × replica seeds — over the [`WorkQueue`] thread pool and aggregates
-//! each cell into [`Summary`] statistics (mean, SEM, percentiles).
+//! (workload × n × p × k × retransmission policy × loss model ×
+//! topology × duplication-control policy) × replica seeds — over the
+//! [`WorkQueue`] thread pool and aggregates each cell into [`Summary`]
+//! statistics (mean, SEM, percentiles). The duplication-control axis
+//! ([`crate::adapt::AdaptSpec`]) runs packet-level cells either at the
+//! grid's fixed k or under a closed-loop controller that re-chooses k
+//! each superstep from online loss estimates — adaptive-vs-best-static
+//! is one grid.
 //!
 //! ## Workload axis
 //!
@@ -55,6 +60,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::adapt::{AdaptSpec, CostModel};
 use crate::bsp::BspRuntime;
 use crate::model::rho::{rho_selective, rho_whole_round, round_failure_q};
 use crate::model::{Comm, LbspParams};
@@ -65,7 +71,7 @@ use crate::net::rounds::{run_slotted_program, run_slotted_program_model};
 use crate::net::topology::{PlanetLabRanges, Topology};
 use crate::net::transport::Network;
 use crate::util::prng::Rng;
-use crate::util::stats::Summary;
+use crate::util::stats::{LogHist, Summary};
 use crate::workloads::{
     DistWorkload, FftCell, LaplaceCell, MatmulCell, SortCell, SyntheticExchange,
 };
@@ -207,6 +213,11 @@ pub struct CellSpec {
     pub policy: RetransmitPolicy,
     pub loss: LossSpec,
     pub topology: TopologySpec,
+    /// Duplication-control axis: [`AdaptSpec::Static`] runs the cell at
+    /// the fixed `k`; adaptive variants re-choose k per superstep from
+    /// the online loss estimate — `k` then remains a grid coordinate
+    /// only (the controller, not the axis, decides the copies).
+    pub adapt: AdaptSpec,
 }
 
 impl CellSpec {
@@ -266,6 +277,11 @@ pub struct CampaignSpec {
     /// Caps below the batch size clamp the batch; a SEM needs at least
     /// two samples, so values below 2 are treated as 2.
     pub max_replicas: usize,
+    /// Duplication-control axis (`--adapt`): every cell is crossed with
+    /// each policy here. [`AdaptSpec::Static`] reproduces the fixed-k
+    /// grid; adaptive variants need packet-level workloads (rejected by
+    /// [`CampaignSpec::validate`] when combined with Slotted cells).
+    pub adapts: Vec<AdaptSpec>,
 }
 
 impl Default for CampaignSpec {
@@ -288,6 +304,7 @@ impl Default for CampaignSpec {
             seed: 0x9_CA4B,
             sem_target: None,
             max_replicas: 256,
+            adapts: vec![AdaptSpec::Static],
         }
     }
 }
@@ -301,19 +318,34 @@ impl CampaignSpec {
         for &workload in &self.workloads {
             for &n in &self.ns {
                 for &p in &self.ps {
-                    for &k in &self.ks {
+                    for (ki, &k) in self.ks.iter().enumerate() {
                         for &policy in &self.policies {
                             for &loss in &self.losses {
                                 for &topology in &self.topologies {
-                                    out.push(CellSpec {
-                                        workload,
-                                        n,
-                                        p,
-                                        k,
-                                        policy,
-                                        loss,
-                                        topology,
-                                    });
+                                    for &adapt in &self.adapts {
+                                        // An adaptive cell ignores the k
+                                        // coordinate (the controller picks
+                                        // the copies), so crossing it with
+                                        // the k axis would only duplicate
+                                        // identical policies: adaptive
+                                        // variants are emitted once, pinned
+                                        // to the axis' first entry (by
+                                        // position, so a duplicated k value
+                                        // cannot desync this from n_cells).
+                                        if !adapt.is_static() && ki != 0 {
+                                            continue;
+                                        }
+                                        out.push(CellSpec {
+                                            workload,
+                                            n,
+                                            p,
+                                            k,
+                                            policy,
+                                            loss,
+                                            topology,
+                                            adapt,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -325,13 +357,65 @@ impl CampaignSpec {
     }
 
     pub fn n_cells(&self) -> usize {
-        self.workloads.len()
+        let base = self.workloads.len()
             * self.ns.len()
             * self.ps.len()
-            * self.ks.len()
             * self.policies.len()
             * self.losses.len()
-            * self.topologies.len()
+            * self.topologies.len();
+        // Static policies cross the full k axis; adaptive ones are
+        // emitted once per base point (see `cells`).
+        let n_static = self.adapts.iter().filter(|a| a.is_static()).count();
+        let n_adaptive = self.adapts.len() - n_static;
+        base * (self.ks.len() * n_static + n_adaptive)
+    }
+
+    /// Check the grid before any work is dispatched: a malformed axis
+    /// (k = 0, loss outside [0, 1), an empty list) fails here with a
+    /// clear message instead of panicking deep inside the DES.
+    /// [`CampaignEngine::run`] enforces this; the CLI calls it first so
+    /// `lbsp campaign` exits cleanly on bad input.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, empty) in [
+            ("workloads", self.workloads.is_empty()),
+            ("ns", self.ns.is_empty()),
+            ("ps", self.ps.is_empty()),
+            ("ks", self.ks.is_empty()),
+            ("policies", self.policies.is_empty()),
+            ("losses", self.losses.is_empty()),
+            ("topologies", self.topologies.is_empty()),
+            ("adapts", self.adapts.is_empty()),
+        ] {
+            if empty {
+                return Err(format!("the {name} axis is empty — nothing to run"));
+            }
+        }
+        if self.ns.contains(&0) {
+            return Err("n = 0 is not a valid node count (need n >= 1)".into());
+        }
+        if let Some(&p) = self.ps.iter().find(|p| !(0.0..1.0).contains(*p)) {
+            return Err(format!(
+                "loss p = {p} is outside [0, 1) — the reliable phase could never terminate"
+            ));
+        }
+        if self.ks.contains(&0) {
+            return Err("k = 0 sends no packet copies at all; every k must be >= 1".into());
+        }
+        if self.replicas == 0 {
+            return Err("replicas = 0 — every cell needs at least one run".into());
+        }
+        let has_slotted = self.workloads.iter().any(|w| w.is_slotted());
+        if has_slotted && self.adapts.iter().any(|a| !a.is_static()) {
+            return Err(
+                "adaptive k control needs a packet-level workload; slotted cells are \
+                 fixed-k by construction (drop Slotted from the grid or use --adapt static)"
+                    .into(),
+            );
+        }
+        for a in &self.adapts {
+            a.validate().map_err(|e| format!("adapts axis: {e}"))?;
+        }
+        Ok(())
     }
 
     /// Total replica runs in fixed mode. Adaptive mode decides per cell
@@ -359,6 +443,14 @@ struct ReplicaResult {
     validated: bool,
     /// Distinct protocol-level data packets sent over the run.
     data_packets: f64,
+    /// Mean packet copies k across the run's supersteps (the realized
+    /// controller trajectory; the static k otherwise).
+    k_mean: f64,
+    /// Final loss estimate p̂ of the adaptive controller (NaN for
+    /// static cells — never aggregated there).
+    p_hat: f64,
+    /// Per-phase round counts in the fixed log₂ bins.
+    hist: LogHist,
 }
 
 /// Aggregated statistics for one cell over all its replicas.
@@ -390,11 +482,23 @@ pub struct CellSummary {
     /// `completed_frac`.
     pub validated_frac: f64,
     /// Analytic ρ̂ at the cell's (q, c): eq (3) for Selective (via the
-    /// engine's [`RhoCache`]), eq (1) for WholeRound.
+    /// engine's [`RhoCache`]), eq (1) for WholeRound. For adaptive
+    /// cells this is the prediction at the grid's (fixed) k coordinate,
+    /// i.e. the static baseline the controller is trying to beat.
     pub rho_pred: f64,
     /// Analytic expected speedup, where the workload admits a closed
     /// form (Slotted cells); `None` for DES-backed cells.
     pub speedup_pred: Option<f64>,
+    /// Per-replica mean packet copies k̄ — a constant `k` for static
+    /// cells, the realized controller trajectory for adaptive ones (the
+    /// `k_chosen` block in persisted artifacts).
+    pub k_chosen: Summary,
+    /// Final loss-estimate p̂ across replicas; `None` for static cells
+    /// (no estimator runs there).
+    pub p_hat: Option<Summary>,
+    /// Per-phase round distribution pooled over every replica's
+    /// supersteps (fixed log₂ bins — see `util::stats::LogHist`).
+    pub rounds_hist: LogHist,
 }
 
 /// Memoizes `rho_selective(q, c)` keyed on the exact bit patterns of the
@@ -478,7 +582,9 @@ impl CampaignEngine {
     /// Dispatches to the fixed- or adaptive-replica path on
     /// [`CampaignSpec::sem_target`].
     pub fn run(&self, spec: &CampaignSpec) -> Vec<CellSummary> {
-        assert!(spec.replicas >= 1, "campaign needs at least one replica");
+        if let Err(e) = spec.validate() {
+            panic!("invalid campaign spec: {e}");
+        }
         match spec.sem_target {
             None => self.run_fixed(spec),
             Some(target) => self.run_adaptive(spec, target),
@@ -613,6 +719,17 @@ impl CampaignEngine {
         let rounds: Vec<f64> = rs.iter().map(|r| r.rounds).collect();
         let times: Vec<f64> = rs.iter().map(|r| r.time_s).collect();
         let packets: Vec<f64> = rs.iter().map(|r| r.data_packets).collect();
+        let k_means: Vec<f64> = rs.iter().map(|r| r.k_mean).collect();
+        let p_hat = if cell.adapt.is_static() {
+            None
+        } else {
+            let phats: Vec<f64> = rs.iter().map(|r| r.p_hat).collect();
+            Some(Summary::from_values(&phats))
+        };
+        let mut rounds_hist = LogHist::new();
+        for r in rs {
+            rounds_hist.merge(&r.hist);
+        }
         let n = rs.len() as f64;
         let completed_frac = rs.iter().filter(|r| r.completed).count() as f64 / n;
         let converged_frac = rs.iter().filter(|r| r.converged).count() as f64 / n;
@@ -654,16 +771,24 @@ impl CampaignEngine {
             validated_frac,
             rho_pred,
             speedup_pred,
+            k_chosen: Summary::from_values(&k_means),
+            p_hat,
+            rounds_hist,
         }
     }
+}
+
+/// Mid-band PlanetLab link (Figs 2–3) — used for uniform DES topologies
+/// and as the adaptive controller's (α, β) operating point.
+fn campaign_link() -> Link {
+    Link::from_mbytes(40.0, 0.07)
 }
 
 /// Build the cell's topology for a DES replica (uniform or
 /// PlanetLab-heterogeneous, iid or bursty), drawing any per-pair
 /// parameters from the replica's stream.
 fn build_topology(cell: &CellSpec, n_nodes: usize, rng: &mut Rng) -> Topology {
-    // Mid-band PlanetLab link for uniform topologies (Figs 2–3).
-    let link = Link::from_mbytes(40.0, 0.07);
+    let link = campaign_link();
     match (cell.topology, cell.loss) {
         (TopologySpec::Uniform, LossSpec::Bernoulli) => {
             Topology::uniform(n_nodes, link, cell.p)
@@ -733,17 +858,38 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
             // across mixed grids.
             validated: !run.saturated,
             data_packets: (c * supersteps) as f64,
+            k_mean: cell.k as f64,
+            p_hat: f64::NAN,
+            hist: run.rounds_hist,
         };
     }
 
     // Every DES-backed workload shares one generic path: instantiate the
     // DistWorkload (drawing its input data), build the cell's topology,
-    // configure the runtime, run + validate.
+    // configure the runtime (attaching the cell's duplication
+    // controller, if any), run + validate.
     let wl = cell.workload.instantiate(cell.n, &mut rng);
     let n_nodes = wl.n_nodes();
     let topo = build_topology(cell, n_nodes, &mut rng);
     let net = Network::new(topo, rng.next_u64());
     let mut rt = BspRuntime::new(net).with_copies(cell.k).with_policy(cell.policy);
+    if !cell.adapt.is_static() {
+        // The controller's cost model sits at the same operating point
+        // the analytic predictions use: the cell's c(n) with (α, β)
+        // from the mid-band link at the workload's typical packet size.
+        // PlanetLab cells make this an approximation — model error the
+        // closed loop has to absorb, exactly as in a real deployment.
+        let link = campaign_link();
+        let model = CostModel {
+            c: wl.phase_packets().max(1.0),
+            n: n_nodes.max(1) as f64,
+            alpha: link.alpha(wl.packet_bytes()),
+            beta: link.rtt_s,
+        };
+        if let Some(adapt) = cell.adapt.build(model, n_nodes) {
+            rt = rt.with_adaptive(adapt);
+        }
+    }
     let run = wl.run_replica(&mut rt);
     ReplicaResult {
         speedup: run.speedup(),
@@ -753,6 +899,9 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
         converged: run.converged,
         validated: run.validated,
         data_packets: run.data_packets as f64,
+        k_mean: run.k_mean,
+        p_hat: rt.loss_estimate().unwrap_or(f64::NAN),
+        hist: run.rounds_hist,
     }
 }
 
@@ -984,6 +1133,208 @@ mod tests {
         let tight = CampaignSpec { replicas: 8, max_replicas: 4, ..spec };
         let out = CampaignEngine::new(3).run(&tight);
         assert_eq!(out[0].replicas, 4);
+    }
+
+    #[test]
+    fn adapt_axis_enumerates_innermost_and_skips_duplicate_adaptive_cells() {
+        use crate::adapt::{AdaptSpec, EstimatorSpec};
+        let greedy = AdaptSpec::Greedy { k_max: 3, est: EstimatorSpec::default_beta() };
+        let spec = CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 2,
+                msgs_per_node: 2,
+                bytes: 1024,
+                compute_s: 0.02,
+            }],
+            ns: vec![2],
+            ps: vec![0.1],
+            ks: vec![1, 2],
+            adapts: vec![AdaptSpec::Static, greedy],
+            ..Default::default()
+        };
+        // Static crosses both ks; the adaptive policy ignores k and is
+        // emitted once (pinned to ks[0]) — not once per k.
+        assert_eq!(spec.n_cells(), 3);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].adapt, AdaptSpec::Static);
+        assert_eq!(cells[1].adapt, greedy);
+        assert_eq!((cells[0].k, cells[1].k), (1, 1), "adapt is the innermost axis");
+        assert_eq!(cells[2].k, 2);
+        assert_eq!(cells[2].adapt, AdaptSpec::Static);
+    }
+
+    #[test]
+    fn adaptive_des_cells_run_end_to_end() {
+        use crate::adapt::{AdaptSpec, EstimatorSpec};
+        let spec = CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 6,
+                msgs_per_node: 3,
+                bytes: 2048,
+                compute_s: 0.05,
+            }],
+            ns: vec![4],
+            ps: vec![0.15],
+            ks: vec![1],
+            adapts: vec![
+                AdaptSpec::Static,
+                AdaptSpec::Greedy { k_max: 4, est: EstimatorSpec::default_beta() },
+                AdaptSpec::Hysteresis {
+                    k_max: 4,
+                    est: EstimatorSpec::default_beta(),
+                    band: 2.0,
+                },
+            ],
+            replicas: 4,
+            ..Default::default()
+        };
+        let out = CampaignEngine::new(2).run(&spec);
+        assert_eq!(out.len(), 3);
+        for s in &out {
+            assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+            assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
+            assert!(s.speedup.mean > 0.0);
+            // 6 phases × 4 replicas pooled into the hist.
+            assert_eq!(s.rounds_hist.total(), 24);
+        }
+        let stat = &out[0];
+        assert!(stat.cell.adapt.is_static());
+        assert_eq!(stat.k_chosen.mean, 1.0, "static cell pins k");
+        assert!(stat.p_hat.is_none(), "no estimator on static cells");
+        for s in &out[1..] {
+            let p_hat = s.p_hat.expect("adaptive cells aggregate p̂");
+            // 6 phases of 12-packet traffic: the estimate must be in the
+            // right neighbourhood of the true p = 0.15.
+            assert!((p_hat.mean - 0.15).abs() < 0.1, "p̂ {}", p_hat.mean);
+            assert!(s.k_chosen.mean >= 1.0 && s.k_chosen.mean <= 4.0);
+        }
+    }
+
+    #[test]
+    fn adaptive_cells_are_worker_count_invariant() {
+        use crate::adapt::{AdaptSpec, EstimatorSpec};
+        let spec = CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 3,
+                msgs_per_node: 2,
+                bytes: 1024,
+                compute_s: 0.03,
+            }],
+            ns: vec![2, 4],
+            ps: vec![0.1],
+            ks: vec![1],
+            topologies: vec![TopologySpec::Uniform, TopologySpec::PlanetLabLike],
+            adapts: vec![
+                AdaptSpec::Static,
+                AdaptSpec::Greedy { k_max: 3, est: EstimatorSpec::default_beta() },
+            ],
+            replicas: 3,
+            seed: 0xAD_A9,
+            ..Default::default()
+        };
+        let a = CampaignEngine::new(1).run(&spec);
+        let b = CampaignEngine::new(5).run(&spec);
+        assert_eq!(a, b, "closed-loop state must stay replica-deterministic");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_grids() {
+        use crate::adapt::{AdaptSpec, EstimatorSpec};
+        let ok = tiny_spec();
+        assert!(ok.validate().is_ok());
+        let bad = CampaignSpec { ks: vec![1, 0], ..tiny_spec() };
+        assert!(bad.validate().unwrap_err().contains("k = 0"));
+        let bad = CampaignSpec { ps: vec![0.05, 1.0], ..tiny_spec() };
+        assert!(bad.validate().unwrap_err().contains("outside [0, 1)"));
+        let bad = CampaignSpec { ps: vec![-0.1], ..tiny_spec() };
+        assert!(bad.validate().is_err());
+        let bad = CampaignSpec { ns: vec![], ..tiny_spec() };
+        assert!(bad.validate().unwrap_err().contains("ns"));
+        let bad = CampaignSpec { ks: vec![], ..tiny_spec() };
+        assert!(bad.validate().unwrap_err().contains("ks"));
+        let bad = CampaignSpec { replicas: 0, ..tiny_spec() };
+        assert!(bad.validate().is_err());
+        let bad = CampaignSpec { ns: vec![0, 2], ..tiny_spec() };
+        assert!(bad.validate().unwrap_err().contains("n = 0"));
+        // Slotted cells cannot run adaptively (tiny_spec is slotted).
+        let bad = CampaignSpec {
+            adapts: vec![AdaptSpec::Greedy { k_max: 3, est: EstimatorSpec::default_beta() }],
+            ..tiny_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("slotted"));
+        // Malformed adaptive knobs fail validation too, not a worker
+        // thread assert (packet-level workload so the slotted check
+        // doesn't mask them).
+        let des = CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 1,
+                msgs_per_node: 1,
+                bytes: 64,
+                compute_s: 0.01,
+            }],
+            ..tiny_spec()
+        };
+        let bad = CampaignSpec {
+            adapts: vec![AdaptSpec::Greedy { k_max: 0, est: EstimatorSpec::default_beta() }],
+            ..des.clone()
+        };
+        assert!(bad.validate().unwrap_err().contains("k_max"));
+        let bad = CampaignSpec {
+            adapts: vec![AdaptSpec::Hysteresis {
+                k_max: 3,
+                est: EstimatorSpec::default_beta(),
+                band: 0.0,
+            }],
+            ..des.clone()
+        };
+        assert!(bad.validate().unwrap_err().contains("band"));
+        let bad = CampaignSpec {
+            adapts: vec![AdaptSpec::Greedy {
+                k_max: 3,
+                est: EstimatorSpec::Ewma { lambda: 1.5, p0: 0.1 },
+            }],
+            ..des.clone()
+        };
+        assert!(bad.validate().unwrap_err().contains("lambda"));
+        let bad = CampaignSpec {
+            adapts: vec![AdaptSpec::Greedy {
+                k_max: 3,
+                est: EstimatorSpec::Window { len: 0, p0: 0.1 },
+            }],
+            ..des.clone()
+        };
+        assert!(bad.validate().unwrap_err().contains("window"));
+        let bad = CampaignSpec {
+            adapts: vec![AdaptSpec::Greedy {
+                k_max: 3,
+                est: EstimatorSpec::Beta { strength: 2.0, p0: 1.5 },
+            }],
+            ..des
+        };
+        assert!(bad.validate().unwrap_err().contains("p0"));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid campaign spec")]
+    fn engine_refuses_invalid_spec() {
+        let bad = CampaignSpec { ks: vec![0], ..tiny_spec() };
+        CampaignEngine::new(1).run(&bad);
+    }
+
+    #[test]
+    fn slotted_cells_pool_round_distributions() {
+        let spec = CampaignSpec {
+            ns: vec![4],
+            ps: vec![0.1],
+            ks: vec![1],
+            replicas: 5,
+            ..Default::default()
+        };
+        let out = CampaignEngine::new(2).run(&spec);
+        // Default slotted workload: 20 supersteps × 5 replicas.
+        assert_eq!(out[0].rounds_hist.total(), 100);
+        assert!(out[0].rounds_hist.counts[0] < 100, "p = 0.1 forces retries");
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //! (matmul, sort, fft, laplace) run as cells alongside the slotted
 //! abstraction and the synthetic probe, with optional adaptive
 //! replication (stop at a SEM target) and persisted JSON/CSV artifacts
-//! (`report::artifacts`).
+//! (`report::artifacts`). The `adapts` axis (`crate::adapt::AdaptSpec`)
+//! crosses the grid with duplication-control policies, so
+//! adaptive-vs-best-static comparisons across iid and bursty channels
+//! are one campaign flag (`--adapt`).
 
 pub mod campaign;
 pub mod queue;

@@ -19,6 +19,10 @@
 //!   algorithm analyses (Table II).
 //! * [`bsp`] — the superstep runtime over [`net`], with the paper's three
 //!   retransmission disciplines.
+//! * [`adapt`] — adaptive duplication control: online per-link loss
+//!   estimators (windowed / EWMA / Beta posterior) and closed-loop
+//!   per-superstep k controllers (greedy ρ̂-cost argmin, hysteresis),
+//!   turning §IV's offline k* into a runtime policy.
 //! * [`collectives`] — broadcast/all-gather/all-to-all schedules (§V-E/F).
 //! * [`workloads`] — BSP programs with real data: matmul, bitonic sort,
 //!   2D FFT (transpose method), Laplace/Jacobi, plus the synthetic
@@ -51,6 +55,7 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::type_complexity)]
 
+pub mod adapt;
 pub mod bsp;
 pub mod collectives;
 pub mod coordinator;

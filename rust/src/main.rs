@@ -14,7 +14,16 @@
 //!               [--ns 2,4,8] [--ps 0.05,0.1] [--ks 1,2,3]
 //!               [--out out.json]                 persist JSON+CSV artifacts
 //!               [--sem-target X [--max-replicas M]]   adaptive replicas
+//!               [--adapt static|greedy|hysteresis]    closed-loop k control
+//!                 [--kmax K] [--band B]               (adds the adaptive
+//!                 [--estimator beta|window|ewma]       policy alongside the
+//!                 [--est-prior P] [--est-strength S]   static grid; needs a
+//!                 [--est-window N] [--est-lambda L]    packet-level workload,
+//!                                                      default: synthetic)
 //!               Monte-Carlo campaign grid (worker-count invariant)
+//! lbsp diff <baseline.json> <candidate.json> [--threshold Z]
+//!               flag speedup-mean regressions beyond Z combined sigma
+//!               (exit 1 on regression — CI-usable)
 //! ```
 //!
 //! The `pjrt` backend loads the AOT artifacts from `./artifacts`
@@ -23,6 +32,7 @@
 // Same conscious lint posture as the library crate (see rust/src/lib.rs).
 #![allow(clippy::too_many_arguments)]
 
+use lbsp::adapt::{AdaptSpec, EstimatorSpec};
 use lbsp::bsp::BspRuntime;
 use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, SweepCoordinator, WorkloadSpec};
 use lbsp::measure::CampaignConfig;
@@ -409,18 +419,51 @@ fn campaign_workload(name: &str, o: &Opts) -> (WorkloadSpec, Vec<usize>) {
     }
 }
 
+/// `--adapt`/estimator knobs → the campaign's duplication-control axis.
+/// A non-static policy rides alongside `Static`, so one run compares
+/// the closed loop against the full static-k grid.
+fn campaign_adapts(o: &Opts, ks: &[u32]) -> Vec<AdaptSpec> {
+    let name = o.str("adapt", "static");
+    if name == "static" {
+        return vec![AdaptSpec::Static];
+    }
+    let p0 = o.f64("est-prior", 0.1);
+    let est = match o.str("estimator", "beta").as_str() {
+        "beta" => EstimatorSpec::Beta { strength: o.f64("est-strength", 2.0), p0 },
+        "window" | "win" => EstimatorSpec::Window { len: o.usize("est-window", 32), p0 },
+        "ewma" => EstimatorSpec::Ewma { lambda: o.f64("est-lambda", 0.01), p0 },
+        other => panic!("unknown estimator {other:?} (beta|window|ewma)"),
+    };
+    let grid_kmax = ks.iter().copied().max().unwrap_or(1).max(4);
+    let k_max = o.usize("kmax", grid_kmax as usize) as u32;
+    let adaptive = match name.as_str() {
+        "greedy" => AdaptSpec::Greedy { k_max, est },
+        "hysteresis" | "hyst" => {
+            AdaptSpec::Hysteresis { k_max, est, band: o.f64("band", 3.0) }
+        }
+        other => panic!("unknown adapt policy {other:?} (static|greedy|hysteresis)"),
+    };
+    vec![AdaptSpec::Static, adaptive]
+}
+
 fn cmd_campaign(args: &Args) {
     let o = Opts::new(args, "campaign");
     let workers = o.usize("workers", 4);
-    let (workload, default_ns) = campaign_workload(&o.str("workload", "slotted"), &o);
+    // Adaptive control needs a packet-level DES workload; keep `slotted`
+    // as the fast default only for plain static grids.
+    let default_workload =
+        if o.str("adapt", "static") == "static" { "slotted" } else { "synthetic" };
+    let (workload, default_ns) = campaign_workload(&o.str("workload", default_workload), &o);
     let sem_target = args.get("sem-target").map(|s| {
         s.parse::<f64>().unwrap_or_else(|e| panic!("--sem-target {s}: {e}"))
     });
+    let ks = args.get_list_or("ks", &[1u32, 2, 3]);
+    let adapts = campaign_adapts(&o, &ks);
     let spec = CampaignSpec {
         workloads: vec![workload],
         ns: args.get_list_or("ns", &default_ns),
         ps: args.get_list_or("ps", &[0.05, 0.10, 0.15]),
-        ks: args.get_list_or("ks", &[1u32, 2, 3]),
+        ks,
         losses: vec![
             LossSpec::Bernoulli,
             LossSpec::GilbertElliott { burst_len: o.f64("burst", 8.0) },
@@ -429,8 +472,13 @@ fn cmd_campaign(args: &Args) {
         seed: o.usize("seed", 0x9_CA4B) as u64,
         sem_target,
         max_replicas: o.usize("max-replicas", 256),
+        adapts,
         ..Default::default()
     };
+    if let Err(e) = spec.validate() {
+        eprintln!("campaign: invalid grid: {e}");
+        std::process::exit(2);
+    }
     // Worker count and timing stay off stdout so output diffs clean
     // across --workers settings (the aggregates are bitwise invariant).
     match spec.sem_target {
@@ -471,7 +519,43 @@ fn cmd_campaign(args: &Args) {
     );
 }
 
-const USAGE: &str = "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign> [options]
+fn cmd_diff(args: &Args) {
+    let (Some(path_a), Some(path_b)) = (args.positional.get(1), args.positional.get(2))
+    else {
+        eprintln!("usage: lbsp diff <baseline.json> <candidate.json> [--threshold Z]");
+        std::process::exit(2);
+    };
+    let threshold: f64 = args.get_parsed_or("threshold", 3.0f64);
+    if threshold.is_nan() || threshold < 0.0 {
+        // NaN would silently flag nothing (every z-comparison false).
+        eprintln!("diff: --threshold {threshold} must be a number >= 0");
+        std::process::exit(2);
+    }
+    let read = |path: &str| {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("diff: {path}: {e}");
+            std::process::exit(2);
+        });
+        report::read_campaign_str(&text).unwrap_or_else(|e| {
+            eprintln!("diff: {path}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let baseline = read(path_a);
+    let candidate = read(path_b);
+    let d = report::diff_campaigns(&baseline, &candidate, threshold);
+    report::diff_table(&d, threshold).print();
+    if d.has_regressions() {
+        eprintln!(
+            "diff: {} speedup regression(s) beyond {threshold} combined sigma",
+            d.regressions.len()
+        );
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str =
+    "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign|diff> [options]
   (see `rust/src/main.rs` doc header for details)";
 
 fn main() {
@@ -485,6 +569,7 @@ fn main() {
         Some("simval") => cmd_simval(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("campaign") => cmd_campaign(&args),
+        Some("diff") => cmd_diff(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);

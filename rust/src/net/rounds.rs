@@ -9,6 +9,7 @@
 //! the same process.
 
 use crate::util::prng::Rng;
+use crate::util::stats::LogHist;
 
 use super::loss::LossModel;
 use super::protocol::RetransmitPolicy;
@@ -155,6 +156,9 @@ pub struct SlottedRun {
     /// system fails to operate" (§II); the time figure is a capped
     /// lower bound, not a completion time.
     pub saturated: bool,
+    /// Distribution of per-phase round counts (one sample per
+    /// superstep) in the fixed log₂ bins the campaign artifacts use.
+    pub rounds_hist: LogHist,
 }
 
 /// As [`run_slotted_program`] but sampling rounds through an arbitrary
@@ -176,10 +180,12 @@ pub fn run_slotted_program_model<L: LossModel>(
     let mut total_time = 0.0;
     let mut total_rounds = 0u64;
     let mut saturated = false;
+    let mut rounds_hist = LogHist::new();
     for _ in 0..supersteps {
         let rounds = simulate_phase_rounds_model(loss, k, c, policy, rng, PHASE_ROUND_CAP);
         saturated |= rounds >= PHASE_ROUND_CAP;
         total_rounds += rounds;
+        rounds_hist.push(rounds);
         match policy {
             RetransmitPolicy::Selective => {
                 total_time += compute_per_step + rounds as f64 * 2.0 * tau_s;
@@ -189,7 +195,7 @@ pub fn run_slotted_program_model<L: LossModel>(
             }
         }
     }
-    SlottedRun { total_time_s: total_time, total_rounds, supersteps, saturated }
+    SlottedRun { total_time_s: total_time, total_rounds, supersteps, saturated, rounds_hist }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -209,10 +215,12 @@ pub fn run_slotted_program(
     let mut total_time = 0.0;
     let mut total_rounds = 0u64;
     let mut saturated = false;
+    let mut rounds_hist = LogHist::new();
     for _ in 0..supersteps {
         let rounds = simulate_phase_rounds(ps, c, policy, rng, PHASE_ROUND_CAP);
         saturated |= rounds >= PHASE_ROUND_CAP;
         total_rounds += rounds;
+        rounds_hist.push(rounds);
         match policy {
             RetransmitPolicy::Selective => {
                 total_time += compute_per_step + rounds as f64 * 2.0 * tau_s;
@@ -223,7 +231,7 @@ pub fn run_slotted_program(
             }
         }
     }
-    SlottedRun { total_time_s: total_time, total_rounds, supersteps, saturated }
+    SlottedRun { total_time_s: total_time, total_rounds, supersteps, saturated, rounds_hist }
 }
 
 #[cfg(test)]
@@ -397,5 +405,20 @@ mod tests {
         let want = 3600.0 / 8.0 + 10.0 * 2.0 * 0.05;
         assert!((run.total_time_s - want).abs() < 1e-9);
         assert_eq!(run.total_rounds, 10);
+        // All 10 phases took exactly 1 round → all land in bin 0.
+        assert_eq!(run.rounds_hist.counts[0], 10);
+        assert_eq!(run.rounds_hist.total(), 10);
+    }
+
+    #[test]
+    fn slotted_rounds_hist_counts_every_phase() {
+        let mut rng = Rng::new(13);
+        let run = run_slotted_program(
+            3600.0, 25, 8, 64, 0.2, 1, 0.05,
+            RetransmitPolicy::Selective, &mut rng,
+        );
+        assert_eq!(run.rounds_hist.total(), 25, "one sample per superstep");
+        // p = 0.2, c = 64: phases need > 1 round essentially always.
+        assert_eq!(run.rounds_hist.counts[0], 0);
     }
 }

@@ -39,6 +39,13 @@ pub struct Network {
     /// Time at which each node's uplink becomes free (serialization queue).
     uplink_free: Vec<SimTime>,
     pub stats: NetStats,
+    /// Per-directed-pair wire copies sent (row-major `src·n + dst`, both
+    /// packet kinds) — what an online loss estimator can legitimately
+    /// observe: the sender knows its copy count, the receiver counts the
+    /// (duplicate) deliveries, and `lost = sent − delivered`.
+    pair_sent: Vec<u64>,
+    /// Per-directed-pair wire copies dropped by the loss process.
+    pair_lost: Vec<u64>,
 }
 
 impl Network {
@@ -50,6 +57,8 @@ impl Network {
             rng: Rng::new(seed),
             uplink_free: vec![SimTime::ZERO; n],
             stats: NetStats::default(),
+            pair_sent: vec![0; n * n],
+            pair_lost: vec![0; n * n],
         }
     }
 
@@ -76,8 +85,11 @@ impl Network {
         let start = self.uplink_free[pkt.src].max(self.engine.now());
         let done_ser = start + ser;
         self.uplink_free[pkt.src] = done_ser;
+        let pair = pkt.src * self.topo.n() + pkt.dst;
+        self.pair_sent[pair] += 1;
         if self.topo.lose(pkt.src, pkt.dst, &mut self.rng) {
             self.stats.lost += 1;
+            self.pair_lost[pair] += 1;
             return; // dropped on the wire — no event.
         }
         let arrive = done_ser + SimTime::from_secs_f64(link.one_way_delay());
@@ -104,6 +116,14 @@ impl Network {
             }
             Step::Idle => None,
         }
+    }
+
+    /// Per-pair `(sent, lost)` wire-copy counters (row-major
+    /// `src·n + dst`), cumulative since construction. The adaptive-k
+    /// runtime snapshots these around each phase to feed its per-link
+    /// loss estimators.
+    pub fn pair_counters(&self) -> (&[u64], &[u64]) {
+        (&self.pair_sent, &self.pair_lost)
     }
 
     pub fn pending(&self) -> usize {
@@ -197,6 +217,23 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn pair_counters_track_per_directed_pair() {
+        let topo = Topology::uniform(3, Link::default(), 1.0);
+        let mut net = Network::new(topo, 3);
+        for _ in 0..10 {
+            net.send(Packet::data(0, 1, 0, 0, 64));
+        }
+        net.send(Packet::data(2, 1, 1, 0, 64));
+        let (sent, lost) = net.pair_counters();
+        assert_eq!(sent[1], 10); // 0 -> 1
+        assert_eq!(lost[1], 10); // p = 1: everything dropped
+        assert_eq!(sent[2 * 3 + 1], 1);
+        assert_eq!(sent[3], 0); // 1 -> 0 saw no traffic
+        assert_eq!(sent.iter().sum::<u64>(), 11);
+        assert_eq!(lost.iter().sum::<u64>(), net.stats.lost);
     }
 
     #[test]

@@ -4,15 +4,21 @@
 //! No serde is vendored, so both formats are emitted by hand against a
 //! frozen schema (documented in `ROADMAP.md`):
 //!
-//! * **JSON** (`lbsp-campaign/v1`) — one object with the full grid spec
-//!   (every axis, replication policy, seed) and one entry per cell
-//!   carrying the grid coordinates, reliability fractions
-//!   (`completed`/`converged`/`validated`), the four replica [`Summary`]
-//!   blocks (speedup, rounds, time_s, data_packets — each n/mean/sem/
-//!   p10/p50/p90/min/max), and the analytic ρ̂ / S_E predictions.
-//!   Non-finite floats serialize as `null` (JSON has no NaN).
+//! * **JSON** (`lbsp-campaign/v2`) — one object with the full grid spec
+//!   (every axis incl. the `adapts` duplication-control axis,
+//!   replication policy, seed), the fixed log₂ `rounds_hist_edges`, and
+//!   one entry per cell carrying the grid coordinates (now incl.
+//!   `adapt`), reliability fractions (`completed`/`converged`/
+//!   `validated`), six replica [`Summary`] blocks (speedup, rounds,
+//!   time_s, data_packets, k_chosen, p_hat — each n/mean/sem/p10/p50/
+//!   p90/min/max; `p_hat` is `null` on static cells), the pooled
+//!   per-phase `rounds_hist` counts, and the analytic ρ̂ / S_E
+//!   predictions. Non-finite floats serialize as `null` (JSON has no
+//!   NaN). v1 artifacts (no `adapt`/`k_chosen`/`p_hat`/`rounds_hist`)
+//!   remain readable — see `report::diff`.
 //! * **CSV** — the same cells flattened to one row each, full-precision
-//!   floats (`{:?}` round-trip formatting), for spreadsheet/pandas use.
+//!   floats (`{:?}` round-trip formatting), for spreadsheet/pandas use
+//!   (histogram counts stay JSON-only).
 //!
 //! [`write_campaign`] persists both next to each other: `--out out.json`
 //! writes `out.json` and `out.csv`.
@@ -21,10 +27,13 @@ use std::io;
 use std::path::{Path, PathBuf};
 
 use crate::coordinator::{CampaignSpec, CellSummary};
-use crate::util::stats::Summary;
+use crate::util::stats::{LogHist, Summary};
 
 /// Schema tag stamped into every JSON artifact; bump on layout changes.
-pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v1";
+pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v2";
+
+/// The previous schema tag, still accepted by the artifact reader.
+pub const CAMPAIGN_SCHEMA_V1: &str = "lbsp-campaign/v1";
 
 /// JSON number: round-trip float formatting, `null` for NaN/±∞.
 fn jnum(x: f64) -> String {
@@ -80,7 +89,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
     let spec_json = format!(
         concat!(
             "{{\"workloads\":{},\"ns\":{},\"ps\":{},\"ks\":{},",
-            "\"policies\":{},\"losses\":{},\"topologies\":{},",
+            "\"policies\":{},\"losses\":{},\"topologies\":{},\"adapts\":{},",
             "\"replicas\":{},\"seed\":{},\"sem_target\":{},\"max_replicas\":{}}}"
         ),
         jarr(&spec.workloads, |w| jstr(&w.label())),
@@ -90,6 +99,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
         jarr(&spec.policies, |p| jstr(&format!("{p:?}"))),
         jarr(&spec.losses, |l| jstr(&l.label())),
         jarr(&spec.topologies, |t| jstr(t.label())),
+        jarr(&spec.adapts, |a| jstr(&a.label())),
         spec.replicas,
         spec.seed,
         spec.sem_target.map(jnum).unwrap_or_else(|| "null".into()),
@@ -102,15 +112,17 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
             format!(
                 concat!(
                     "{{\"workload\":{},\"topology\":{},\"loss\":{},\"policy\":{},",
-                    "\"n\":{},\"p\":{},\"k\":{},\"replicas\":{},",
+                    "\"adapt\":{},\"n\":{},\"p\":{},\"k\":{},\"replicas\":{},",
                     "\"completed_frac\":{},\"converged_frac\":{},\"validated_frac\":{},",
                     "\"speedup\":{},\"rounds\":{},\"time_s\":{},\"data_packets\":{},",
+                    "\"k_chosen\":{},\"p_hat\":{},\"rounds_hist\":{},",
                     "\"rho_pred\":{},\"speedup_pred\":{}}}"
                 ),
                 jstr(&s.cell.workload.label()),
                 jstr(s.cell.topology.label()),
                 jstr(&s.cell.loss.label()),
                 jstr(&format!("{:?}", s.cell.policy)),
+                jstr(&s.cell.adapt.label()),
                 s.cell.n,
                 jnum(s.cell.p),
                 s.cell.k,
@@ -122,6 +134,12 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
                 summary_json(&s.rounds),
                 summary_json(&s.time_s),
                 summary_json(&s.data_packets),
+                summary_json(&s.k_chosen),
+                s.p_hat
+                    .as_ref()
+                    .map(summary_json)
+                    .unwrap_or_else(|| "null".into()),
+                jarr(&s.rounds_hist.counts, |c| c.to_string()),
                 jnum(s.rho_pred),
                 s.speedup_pred.map(jnum).unwrap_or_else(|| "null".into()),
             )
@@ -129,8 +147,9 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
         .collect();
 
     format!(
-        "{{\"schema\":{},\"spec\":{},\"cells\":[{}]}}\n",
+        "{{\"schema\":{},\"rounds_hist_edges\":{},\"spec\":{},\"cells\":[{}]}}\n",
         jstr(CAMPAIGN_SCHEMA),
+        jarr(&LogHist::lower_edges(), |e| e.to_string()),
         spec_json,
         cell_objs.join(",")
     )
@@ -161,12 +180,19 @@ fn summary_cols(s: &Summary) -> String {
     )
 }
 
-/// One row per cell; see `ROADMAP.md` for the column dictionary.
+/// Empty cells for an absent summary block (static cells have no p̂).
+fn empty_summary_cols() -> String {
+    ",".repeat(6)
+}
+
+/// One row per cell; see `ROADMAP.md` for the column dictionary. The
+/// per-phase round histogram stays JSON-only (16 log-bin counts make a
+/// poor spreadsheet column family).
 pub fn campaign_csv(cells: &[CellSummary]) -> String {
     let mut out = String::new();
-    out.push_str("workload,topology,loss,policy,n,p,k,replicas,");
+    out.push_str("workload,topology,loss,policy,adapt,n,p,k,replicas,");
     out.push_str("completed_frac,converged_frac,validated_frac,rho_pred,speedup_pred");
-    for block in ["speedup", "rounds", "time_s", "data_packets"] {
+    for block in ["speedup", "rounds", "time_s", "data_packets", "k_chosen", "p_hat"] {
         for col in ["mean", "sem", "p10", "p50", "p90", "min", "max"] {
             out.push_str(&format!(",{block}_{col}"));
         }
@@ -174,11 +200,12 @@ pub fn campaign_csv(cells: &[CellSummary]) -> String {
     out.push('\n');
     for s in cells {
         out.push_str(&format!(
-            "{},{},{},{:?},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{:?},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             csv_label(&s.cell.workload.label()),
             s.cell.topology.label(),
             csv_label(&s.cell.loss.label()),
             s.cell.policy,
+            csv_label(&s.cell.adapt.label()),
             s.cell.n,
             cnum(s.cell.p),
             s.cell.k,
@@ -192,6 +219,11 @@ pub fn campaign_csv(cells: &[CellSummary]) -> String {
             summary_cols(&s.rounds),
             summary_cols(&s.time_s),
             summary_cols(&s.data_packets),
+            summary_cols(&s.k_chosen),
+            s.p_hat
+                .as_ref()
+                .map(summary_cols)
+                .unwrap_or_else(empty_summary_cols),
         ));
     }
     out
@@ -243,11 +275,18 @@ mod tests {
     fn json_has_schema_spec_and_all_cells() {
         let (spec, cells) = small_run();
         let j = campaign_json(&spec, &cells);
-        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v1\""));
+        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v2\""));
+        assert!(j.contains("\"rounds_hist_edges\":[0,2,4,8,"));
         assert!(j.contains("\"spec\":{\"workloads\":[\"synthetic(r=2,m=2)\"]"));
+        assert!(j.contains("\"adapts\":[\"static\"]"));
         assert!(j.contains("\"sem_target\":null"));
         assert_eq!(j.matches("\"validated_frac\"").count(), cells.len());
         assert_eq!(j.matches("\"speedup\":{").count(), cells.len());
+        assert_eq!(j.matches("\"adapt\":\"static\"").count(), cells.len());
+        assert_eq!(j.matches("\"k_chosen\":{").count(), cells.len());
+        assert_eq!(j.matches("\"rounds_hist\":[").count(), cells.len());
+        // Static cells carry no estimator state.
+        assert_eq!(j.matches("\"p_hat\":null").count(), cells.len());
         // DES cells have no closed-form prediction.
         assert_eq!(j.matches("\"speedup_pred\":null").count(), cells.len());
         // Balanced braces (cheap well-formedness smoke check).
@@ -271,15 +310,17 @@ mod tests {
         let lines: Vec<&str> = c.lines().collect();
         assert_eq!(lines.len(), cells.len() + 1);
         let n_cols = lines[0].split(',').count();
-        assert_eq!(n_cols, 13 + 4 * 7);
+        assert_eq!(n_cols, 14 + 6 * 7);
         for row in &lines[1..] {
             assert_eq!(row.split(',').count(), n_cols, "ragged row: {row}");
         }
         assert!(
-            lines[1].starts_with("synthetic(r=2;m=2),uniform,iid,Selective,2,"),
+            lines[1].starts_with("synthetic(r=2;m=2),uniform,iid,Selective,static,2,"),
             "commas inside labels must be sanitized: {}",
             lines[1]
         );
+        // Static cells leave the whole p_hat block empty (7 empty cells).
+        assert!(lines[1].ends_with(",,,,,,,"), "empty p_hat block: {}", lines[1]);
     }
 
     #[test]

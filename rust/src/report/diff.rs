@@ -1,0 +1,398 @@
+//! Cross-PR campaign artifact differ (`lbsp diff a.json b.json`).
+//!
+//! Reads two persisted campaign artifacts (schema `lbsp-campaign/v2`,
+//! or v1 files from older PRs — the missing `adapt` coordinate defaults
+//! to `static`), matches cells on their full grid coordinates
+//! (workload, topology, loss process, retransmission policy, adapt
+//! policy, n, p, k) and flags speedup-mean changes that exceed
+//! `threshold` combined standard errors:
+//!
+//! ```text
+//! z = (mean_b − mean_a) / √(sem_a² + sem_b²)
+//! ```
+//!
+//! `z < −threshold` is a **regression** (b is slower), `z > threshold`
+//! an improvement. Cells whose spread is exactly zero in both files
+//! (deterministic cells) regress on any strict mean decrease. The CLI
+//! exits non-zero when regressions exist, so a cross-PR check is one
+//! pipeline line:
+//!
+//! ```text
+//! lbsp campaign --out new.json && lbsp diff baseline.json new.json
+//! ```
+
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+use crate::util::tables::Table;
+
+use super::Artifact;
+
+/// One cell's comparable statistics, keyed by its grid coordinates.
+#[derive(Clone, Debug)]
+pub struct CellRecord {
+    /// Canonical coordinate key: `workload|topology|loss|policy|adapt|n|p|k`.
+    pub key: String,
+    pub speedup_mean: f64,
+    pub speedup_sem: f64,
+    pub replicas: u64,
+}
+
+/// A parsed campaign artifact (the subset the differ compares).
+#[derive(Clone, Debug)]
+pub struct CampaignArtifact {
+    pub schema: String,
+    pub cells: Vec<CellRecord>,
+}
+
+fn req<'a>(obj: &'a Json, key: &str) -> Result<&'a Json, String> {
+    obj.get(key).ok_or_else(|| format!("cell missing {key:?}"))
+}
+
+fn req_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str, String> {
+    req(obj, key)?
+        .as_str()
+        .ok_or_else(|| format!("cell field {key:?} is not a string"))
+}
+
+/// Parse an artifact out of a [`Json`] document; accepts the current
+/// `lbsp-campaign/v2` schema and the v1 layout of earlier PRs.
+pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("not a campaign artifact: no \"schema\" tag")?;
+    if schema != super::CAMPAIGN_SCHEMA && schema != super::artifacts::CAMPAIGN_SCHEMA_V1 {
+        return Err(format!("unsupported schema {schema:?}"));
+    }
+    let cells = doc
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or("artifact has no \"cells\" array")?;
+    let mut out = Vec::with_capacity(cells.len());
+    for cell in cells {
+        // v1 artifacts predate the adapt axis: every cell was static. A
+        // *present but wrong-typed* field is corruption, not an old
+        // schema — error instead of silently keying on "".
+        let adapt = match cell.get("adapt") {
+            None => "static",
+            Some(v) => v.as_str().ok_or("cell field \"adapt\" is not a string")?,
+        };
+        let key = format!(
+            "{}|{}|{}|{}|{}|n={}|p={:?}|k={}",
+            req_str(cell, "workload")?,
+            req_str(cell, "topology")?,
+            req_str(cell, "loss")?,
+            req_str(cell, "policy")?,
+            adapt,
+            req(cell, "n")?.as_u64().ok_or("bad n")?,
+            req(cell, "p")?.as_f64().ok_or("bad p")?,
+            req(cell, "k")?.as_u64().ok_or("bad k")?,
+        );
+        let speedup = req(cell, "speedup")?;
+        // `null` means the stat was non-finite when written (e.g. a
+        // 0-replica pathological cell): carry NaN, the matcher skips it.
+        let mean = speedup.get("mean").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let sem = speedup.get("sem").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let replicas = cell.get("replicas").and_then(Json::as_u64).unwrap_or(0);
+        out.push(CellRecord { key, speedup_mean: mean, speedup_sem: sem, replicas });
+    }
+    Ok(CampaignArtifact { schema: schema.to_string(), cells: out })
+}
+
+/// Parse an artifact from raw JSON text.
+pub fn read_campaign_str(text: &str) -> Result<CampaignArtifact, String> {
+    read_campaign(&Json::parse(text)?)
+}
+
+/// One matched cell whose speedup mean moved.
+#[derive(Clone, Debug)]
+pub struct CellDelta {
+    pub key: String,
+    pub mean_a: f64,
+    pub mean_b: f64,
+    pub sem_a: f64,
+    pub sem_b: f64,
+    /// Signed combined-SEM z-score of the change (±∞ when both spreads
+    /// are exactly zero but the means differ).
+    pub z: f64,
+}
+
+/// The diff verdict over two artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignDiff {
+    /// Cells present in both files with finite statistics.
+    pub matched: usize,
+    pub only_in_a: usize,
+    pub only_in_b: usize,
+    /// Matched cells skipped because a mean/SEM was non-finite.
+    pub skipped_nonfinite: usize,
+    /// Significant slowdowns (z < −threshold), most severe first.
+    pub regressions: Vec<CellDelta>,
+    /// Significant speedups (z > threshold), largest first.
+    pub improvements: Vec<CellDelta>,
+}
+
+impl CampaignDiff {
+    pub fn has_regressions(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+}
+
+/// Compare two artifacts: `a` is the baseline, `b` the candidate.
+pub fn diff_campaigns(
+    a: &CampaignArtifact,
+    b: &CampaignArtifact,
+    threshold: f64,
+) -> CampaignDiff {
+    assert!(threshold >= 0.0, "threshold {threshold}");
+    let index_a: HashMap<&str, &CellRecord> =
+        a.cells.iter().map(|c| (c.key.as_str(), c)).collect();
+    let index_b: HashMap<&str, &CellRecord> =
+        b.cells.iter().map(|c| (c.key.as_str(), c)).collect();
+
+    let mut diff = CampaignDiff {
+        only_in_a: a.cells.iter().filter(|c| !index_b.contains_key(c.key.as_str())).count(),
+        only_in_b: b.cells.iter().filter(|c| !index_a.contains_key(c.key.as_str())).count(),
+        ..Default::default()
+    };
+
+    // Walk in `a` order so the report order is the canonical cell order.
+    for ca in &a.cells {
+        let Some(cb) = index_b.get(ca.key.as_str()) else {
+            continue;
+        };
+        if !ca.speedup_mean.is_finite()
+            || !cb.speedup_mean.is_finite()
+            || !ca.speedup_sem.is_finite()
+            || !cb.speedup_sem.is_finite()
+        {
+            diff.skipped_nonfinite += 1;
+            continue;
+        }
+        diff.matched += 1;
+        let delta = cb.speedup_mean - ca.speedup_mean;
+        let sigma = (ca.speedup_sem * ca.speedup_sem + cb.speedup_sem * cb.speedup_sem).sqrt();
+        let z = if sigma > 0.0 {
+            delta / sigma
+        } else if delta == 0.0 {
+            0.0
+        } else {
+            // Both spreads exactly zero (deterministic cells): any mean
+            // movement is infinitely significant.
+            delta.signum() * f64::INFINITY
+        };
+        let record = || CellDelta {
+            key: ca.key.clone(),
+            mean_a: ca.speedup_mean,
+            mean_b: cb.speedup_mean,
+            sem_a: ca.speedup_sem,
+            sem_b: cb.speedup_sem,
+            z,
+        };
+        if z < -threshold {
+            diff.regressions.push(record());
+        } else if z > threshold {
+            diff.improvements.push(record());
+        }
+    }
+    diff.regressions.sort_by(|x, y| x.z.partial_cmp(&y.z).unwrap());
+    diff.improvements.sort_by(|x, y| y.z.partial_cmp(&x.z).unwrap());
+    diff
+}
+
+/// Render the verdict as a printable artifact (one row per flagged
+/// cell; the match/skip counts ride in the title).
+pub fn diff_table(diff: &CampaignDiff, threshold: f64) -> Artifact {
+    let mut t = Table::new(vec!["verdict", "cell", "S_a", "S_b", "delta", "z"]);
+    for (verdict, cells) in
+        [("REGRESSION", &diff.regressions), ("improvement", &diff.improvements)]
+    {
+        for d in cells {
+            t.row(vec![
+                verdict.to_string(),
+                d.key.clone(),
+                format!("{:.4}", d.mean_a),
+                format!("{:.4}", d.mean_b),
+                format!("{:+.4}", d.mean_b - d.mean_a),
+                format!("{:+.2}", d.z),
+            ]);
+        }
+    }
+    Artifact {
+        title: format!(
+            "Campaign diff @ {threshold}σ: {} matched, {} regressions, {} improvements \
+             ({}+{} unmatched, {} skipped)",
+            diff.matched,
+            diff.regressions.len(),
+            diff.improvements.len(),
+            diff.only_in_a,
+            diff.only_in_b,
+            diff.skipped_nonfinite,
+        ),
+        table: t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CampaignEngine, CampaignSpec, WorkloadSpec};
+    use crate::report::{campaign_json, write_campaign};
+
+    fn spec(seed: u64) -> CampaignSpec {
+        CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 2,
+                msgs_per_node: 2,
+                bytes: 512,
+                compute_s: 0.02,
+            }],
+            ns: vec![2],
+            ps: vec![0.1],
+            ks: vec![1, 2],
+            replicas: 3,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn identical_artifacts_diff_clean() {
+        let s = spec(1);
+        let cells = CampaignEngine::new(2).run(&s);
+        let art = read_campaign_str(&campaign_json(&s, &cells)).unwrap();
+        assert_eq!(art.schema, super::super::CAMPAIGN_SCHEMA);
+        assert_eq!(art.cells.len(), 2);
+        let d = diff_campaigns(&art, &art, 3.0);
+        assert_eq!(d.matched, 2);
+        assert!(!d.has_regressions());
+        assert!(d.improvements.is_empty());
+        assert_eq!(d.only_in_a + d.only_in_b, 0);
+    }
+
+    #[test]
+    fn diff_roundtrips_through_written_files() {
+        let s = spec(2);
+        let cells = CampaignEngine::new(2).run(&s);
+        let dir = std::env::temp_dir().join("lbsp_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (path, _) = write_campaign(&dir.join("a.json"), &s, &cells).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let art = read_campaign_str(&text).unwrap();
+        assert_eq!(art.cells.len(), cells.len());
+        for (rec, cell) in art.cells.iter().zip(&cells) {
+            assert_eq!(rec.speedup_mean.to_bits(), cell.speedup.mean.to_bits());
+            assert_eq!(rec.replicas, cell.replicas);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_regression_is_flagged_and_sorted() {
+        // Hand-built artifacts: cell X regresses hard, cell Y mildly,
+        // cell Z improves, cell W moves within noise.
+        let mk = |means: [f64; 4]| CampaignArtifact {
+            schema: "lbsp-campaign/v2".into(),
+            cells: ["X", "Y", "Z", "W"]
+                .iter()
+                .zip(means)
+                .map(|(k, m)| CellRecord {
+                    key: (*k).into(),
+                    speedup_mean: m,
+                    speedup_sem: 0.1,
+                    replicas: 8,
+                })
+                .collect(),
+        };
+        let a = mk([10.0, 5.0, 3.0, 7.0]);
+        let b = mk([8.0, 4.5, 4.0, 7.05]);
+        let d = diff_campaigns(&a, &b, 3.0);
+        assert_eq!(d.matched, 4);
+        assert_eq!(d.regressions.len(), 2);
+        // Sorted most-severe first: X (z ≈ −14) before Y (z ≈ −3.5).
+        assert_eq!(d.regressions[0].key, "X");
+        assert_eq!(d.regressions[1].key, "Y");
+        assert!(d.regressions[0].z < d.regressions[1].z);
+        assert_eq!(d.improvements.len(), 1);
+        assert_eq!(d.improvements[0].key, "Z");
+        assert!(d.has_regressions());
+        let art = diff_table(&d, 3.0);
+        assert_eq!(art.table.n_rows(), 3);
+        assert!(art.title.contains("2 regressions"));
+    }
+
+    #[test]
+    fn threshold_gates_significance() {
+        let mk = |mean: f64| CampaignArtifact {
+            schema: "lbsp-campaign/v2".into(),
+            cells: vec![CellRecord {
+                key: "X".into(),
+                speedup_mean: mean,
+                speedup_sem: 0.1,
+                replicas: 8,
+            }],
+        };
+        let (a, b) = (mk(10.0), mk(9.75)); // z = −2.5/√2 ≈ −1.77
+        assert!(!diff_campaigns(&a, &b, 3.0).has_regressions());
+        assert!(diff_campaigns(&a, &b, 1.0).has_regressions());
+    }
+
+    #[test]
+    fn zero_sem_cells_regress_on_any_decrease() {
+        let mk = |mean: f64| CampaignArtifact {
+            schema: "lbsp-campaign/v2".into(),
+            cells: vec![CellRecord {
+                key: "X".into(),
+                speedup_mean: mean,
+                speedup_sem: 0.0,
+                replicas: 4,
+            }],
+        };
+        let d = diff_campaigns(&mk(2.0), &mk(1.9999), 3.0);
+        assert!(d.has_regressions());
+        assert!(d.regressions[0].z.is_infinite());
+        let d = diff_campaigns(&mk(2.0), &mk(2.0), 3.0);
+        assert!(!d.has_regressions());
+    }
+
+    #[test]
+    fn v1_artifacts_are_readable_and_match_static_v2_cells() {
+        // A minimal hand-written v1 document (no adapt / k_chosen /
+        // p_hat / rounds_hist) must read cleanly, with the missing
+        // adapt coordinate defaulting to "static" so its key matches
+        // the v2 cell at the same coordinates.
+        let v1 = r#"{"schema":"lbsp-campaign/v1",
+            "spec":{"workloads":["synthetic(r=2,m=2)"]},
+            "cells":[{"workload":"synthetic(r=2,m=2)","topology":"uniform",
+                      "loss":"iid","policy":"Selective","n":2,"p":0.1,"k":1,
+                      "replicas":3,"completed_frac":1.0,"converged_frac":0.0,
+                      "validated_frac":1.0,
+                      "speedup":{"n":3,"mean":1.5,"sem":0.05,"p10":1.4,
+                                 "p50":1.5,"p90":1.6,"min":1.4,"max":1.6},
+                      "rho_pred":1.2,"speedup_pred":null}]}"#;
+        let art = read_campaign_str(v1).unwrap();
+        assert_eq!(art.schema, "lbsp-campaign/v1");
+        assert_eq!(art.cells.len(), 1);
+        assert!(art.cells[0].key.contains("|static|"));
+        assert_eq!(art.cells[0].speedup_mean, 1.5);
+
+        // The same coordinates in a fresh v2 run produce a matching key.
+        let s = spec(3);
+        let cells = CampaignEngine::new(1).run(&s);
+        let v2 = read_campaign_str(&campaign_json(&s, &cells)).unwrap();
+        assert_eq!(v2.cells[0].key, art.cells[0].key);
+        let d = diff_campaigns(&art, &v2, 1e9);
+        assert_eq!(d.matched, 1);
+        assert_eq!(d.only_in_b, 1, "the k=2 cell has no v1 counterpart");
+    }
+
+    #[test]
+    fn unsupported_schema_is_rejected() {
+        assert!(read_campaign_str(r#"{"schema":"lbsp-campaign/v99","cells":[]}"#)
+            .unwrap_err()
+            .contains("unsupported"));
+        assert!(read_campaign_str(r#"{"cells":[]}"#).unwrap_err().contains("schema"));
+        assert!(read_campaign_str("[]").unwrap_err().contains("schema"));
+    }
+}

@@ -4,16 +4,20 @@
 //! the paper plots; the CLI (`lbsp figure …`, `lbsp table …`) and the
 //! bench harness print them. Campaign runs additionally persist
 //! machine-readable JSON/CSV regression artifacts through [`artifacts`]
-//! (`lbsp campaign --out`). Absolute values come from this codebase's
+//! (`lbsp campaign --out`), and [`diff`] compares two such artifacts
+//! cell-by-cell across PRs (`lbsp diff a.json b.json`, CI-usable via
+//! its non-zero exit on regression). Absolute values come from this codebase's
 //! own substrate (see DESIGN.md §2 substitutions); the *shape* — who
 //! wins, where optima sit, where curves cross — is the reproduction
 //! target, recorded against the paper in EXPERIMENTS.md.
 
 pub mod artifacts;
+pub mod diff;
 mod figures;
 mod tables;
 
 pub use artifacts::{campaign_csv, campaign_json, write_campaign, CAMPAIGN_SCHEMA};
+pub use diff::{diff_campaigns, diff_table, read_campaign_str, CampaignDiff};
 pub use figures::{
     campaign_table, fig10, fig11, fig12, fig1_3, fig1_3_from_points, fig7, fig8, fig9,
 };

@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod cfg;
 pub mod cli;
+pub mod json;
 pub mod prng;
 pub mod ptest;
 pub mod stats;

@@ -190,6 +190,61 @@ impl Summary {
     }
 }
 
+/// Bins of the fixed log₂-spaced count histogram ([`LogHist`]).
+pub const LOG_HIST_BINS: usize = 16;
+
+/// Fixed log₂-spaced histogram over unsigned counts — the campaign's
+/// per-phase round-distribution unit. Bin 0 holds [0, 2), bin `i` holds
+/// [2ⁱ, 2ⁱ⁺¹) and the last bin absorbs everything ≥ 2¹⁵. The bin edges
+/// are *fixed* (not data-dependent) so histograms from different cells,
+/// replicas and PRs merge and diff bin-by-bin.
+///
+/// `Copy` + derived `Eq` on purpose: it rides inside the
+/// worker-count-invariance equality checks like every other aggregate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LogHist {
+    pub counts: [u64; LOG_HIST_BINS],
+}
+
+impl LogHist {
+    pub fn new() -> LogHist {
+        LogHist::default()
+    }
+
+    /// The bin index of a count: `floor(log₂ x)` clamped to the range.
+    pub fn bin_of(x: u64) -> usize {
+        if x < 2 {
+            0
+        } else {
+            ((63 - x.leading_zeros()) as usize).min(LOG_HIST_BINS - 1)
+        }
+    }
+
+    pub fn push(&mut self, x: u64) {
+        self.counts[Self::bin_of(x)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &LogHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Lower edge of every bin (`[0, 2, 4, 8, …, 2¹⁵]`); the last bin is
+    /// open-ended.
+    pub fn lower_edges() -> [u64; LOG_HIST_BINS] {
+        let mut edges = [0u64; LOG_HIST_BINS];
+        for (i, e) in edges.iter_mut().enumerate().skip(1) {
+            *e = 1u64 << i;
+        }
+        edges
+    }
+}
+
 /// Fixed-width histogram over [lo, hi) with overflow/underflow bins.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -358,6 +413,41 @@ mod tests {
         for q in [0.0, 10.0, 50.0, 99.9, 100.0] {
             assert_eq!(s.percentile(q), 42.0);
         }
+    }
+
+    #[test]
+    fn log_hist_bins_are_powers_of_two() {
+        assert_eq!(LogHist::bin_of(0), 0);
+        assert_eq!(LogHist::bin_of(1), 0);
+        assert_eq!(LogHist::bin_of(2), 1);
+        assert_eq!(LogHist::bin_of(3), 1);
+        assert_eq!(LogHist::bin_of(4), 2);
+        assert_eq!(LogHist::bin_of(7), 2);
+        assert_eq!(LogHist::bin_of(1 << 14), 14);
+        assert_eq!(LogHist::bin_of((1 << 15) - 1), 14);
+        assert_eq!(LogHist::bin_of(1 << 15), 15);
+        assert_eq!(LogHist::bin_of(u64::MAX), 15, "top bin is open-ended");
+    }
+
+    #[test]
+    fn log_hist_push_merge_total() {
+        let mut a = LogHist::new();
+        for r in [1u64, 1, 2, 5, 100_000] {
+            a.push(r);
+        }
+        assert_eq!(a.counts[0], 2);
+        assert_eq!(a.counts[1], 1);
+        assert_eq!(a.counts[2], 1);
+        assert_eq!(a.counts[15], 1);
+        assert_eq!(a.total(), 5);
+        let mut b = a;
+        b.merge(&a);
+        assert_eq!(b.total(), 10);
+        assert_eq!(b.counts[0], 4);
+        let edges = LogHist::lower_edges();
+        assert_eq!(edges[0], 0);
+        assert_eq!(edges[1], 2);
+        assert_eq!(edges[15], 32768);
     }
 
     #[test]

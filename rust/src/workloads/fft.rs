@@ -193,6 +193,12 @@ impl DistWorkload for FftCell {
         (self.p * (self.p - 1)) as f64
     }
 
+    fn packet_bytes(&self) -> u64 {
+        // One transpose fragment: (N/P)² 16-byte complex data (§V-C).
+        let rpn = self.n / self.p;
+        (rpn * rpn * 16) as u64
+    }
+
     fn sequential_s(&self) -> f64 {
         // Two full FFT passes over the N×N grid: 2 · 5 N² log₂N FLOPs.
         let n = self.n as f64;

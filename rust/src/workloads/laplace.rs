@@ -199,6 +199,11 @@ impl DistWorkload for LaplaceCell {
         (2 * (self.p_nodes - 1)) as f64
     }
 
+    fn packet_bytes(&self) -> u64 {
+        // One ghost row of f32s.
+        (self.w * 4) as u64
+    }
+
     fn sequential_s(&self) -> f64 {
         // One machine sweeps every band's interior per iteration.
         let points = (self.p_nodes * (self.h - 2) * (self.w - 2)) as f64;

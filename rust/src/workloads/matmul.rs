@@ -239,6 +239,11 @@ impl DistWorkload for MatmulCell {
         (2 * self.q * (self.q - 1)) as f64
     }
 
+    fn packet_bytes(&self) -> u64 {
+        // One e×e f32 panel.
+        (self.e * self.e * 4) as u64
+    }
+
     fn sequential_s(&self) -> f64 {
         let n = (self.q * self.e) as f64;
         2.0 * n * n * n / AVG_FLOPS

@@ -64,6 +64,7 @@ pub use synthetic::SyntheticExchange;
 use crate::bsp::{BspRuntime, RunReport};
 use crate::net::transport::NetStats;
 use crate::runtime::Runtime;
+use crate::util::stats::LogHist;
 
 /// Where a workload's local compute runs.
 #[derive(Clone, Copy)]
@@ -107,6 +108,18 @@ pub struct ReplicaRun {
     pub data_packets: u64,
     /// Wire-level packet counters from the DES network.
     pub net: NetStats,
+    /// Mean packet copies k over the executed supersteps. A static run
+    /// reports its configured k; adaptive runs report the controller's
+    /// realized trajectory average. (The final loss estimate p̂ lives on
+    /// the runtime — `BspRuntime::loss_estimate` — not here: the
+    /// workload hands the runtime back to the caller.)
+    pub k_mean: f64,
+    /// k used in the final executed superstep (an adaptive controller's
+    /// converged choice).
+    pub k_last: u32,
+    /// Per-phase round counts in the fixed log₂ campaign bins (one
+    /// sample per superstep).
+    pub rounds_hist: LogHist,
 }
 
 impl ReplicaRun {
@@ -118,6 +131,19 @@ impl ReplicaRun {
         net: NetStats,
         validated: bool,
     ) -> ReplicaRun {
+        let mut rounds_hist = LogHist::new();
+        let mut k_sum = 0u64;
+        let mut k_last = 0u32;
+        for step in &rep.steps {
+            rounds_hist.push(step.phase.rounds as u64);
+            k_sum += step.copies as u64;
+            k_last = step.copies;
+        }
+        let k_mean = if rep.steps.is_empty() {
+            0.0
+        } else {
+            k_sum as f64 / rep.steps.len() as f64
+        };
         ReplicaRun {
             time_s: rep.total_time_s,
             rounds: rep.total_rounds,
@@ -128,6 +154,9 @@ impl ReplicaRun {
             sequential_s,
             data_packets: rep.data_packets,
             net,
+            k_mean,
+            k_last,
+            rounds_hist,
         }
     }
 
@@ -158,6 +187,14 @@ pub trait DistWorkload: Send {
     /// Packets per communication phase, `c`, as the analytic model sees
     /// this instance (the paper's per-workload `c(P)` family).
     fn phase_packets(&self) -> f64;
+
+    /// Typical payload size of one data packet (bytes) — what the
+    /// adaptive-k cost model derives its α from. The default is the
+    /// repo-wide nominal datagram; workloads with a known message shape
+    /// override it.
+    fn packet_bytes(&self) -> u64 {
+        1024
+    }
 
     /// Modeled sequential-reference time (the speedup denominator).
     fn sequential_s(&self) -> f64;

@@ -188,6 +188,11 @@ impl DistWorkload for SortCell {
         }
     }
 
+    fn packet_bytes(&self) -> u64 {
+        // One whole f32 key list.
+        (self.keys[0].len() * 4) as u64
+    }
+
     fn sequential_s(&self) -> f64 {
         // One comparison sort over all N = P·n_local keys.
         let n = (self.keys.len() * self.keys[0].len()) as f64;

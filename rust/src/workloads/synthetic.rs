@@ -66,6 +66,10 @@ impl DistWorkload for SyntheticExchange {
         self.phase_messages() as f64
     }
 
+    fn packet_bytes(&self) -> u64 {
+        self.bytes
+    }
+
     fn sequential_s(&self) -> f64 {
         SyntheticExchange::sequential_s(self)
     }

@@ -31,6 +31,12 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+# Benches and examples are separate crates that `cargo build`/`cargo
+# test` never compile; build them explicitly so API drift in a bench or
+# example cannot land silently.
+echo "== cargo build --release --benches --examples =="
+cargo build --release --benches --examples
+
 echo "== cargo test -q =="
 cargo test -q
 
