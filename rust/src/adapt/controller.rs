@@ -203,6 +203,60 @@ impl KController for HysteresisK {
     }
 }
 
+/// Scope of a duplication-control decision: one k for the whole
+/// superstep, or one k per directed pair.
+///
+/// Per-link control exists because the paper's own PlanetLab data says
+/// loss is *not* one number: per-pair rates span an order of magnitude,
+/// so the single k a global controller extracts from the aggregate p̂
+/// over-duplicates the clean links (paying `k·α` serialization for
+/// nothing) and under-protects the lossy ones (which then set the phase
+/// round count). `PerLink` wraps one independent [`KController`] per
+/// directed pair — any controller type — each solving against that
+/// pair's own estimator in the [`crate::adapt::LinkBank`].
+pub enum KPolicy {
+    /// One controller fed the bank's aggregate estimate.
+    Global(Box<dyn KController>),
+    /// One controller per directed pair (row-major `src·n + dst`), each
+    /// fed its pair's estimate. The diagonal never carries traffic; its
+    /// controllers idle at the prior.
+    PerLink(Vec<Box<dyn KController>>),
+}
+
+// NOTE: no `label()` here on purpose — the artifact-facing label is
+// built once, by `AdaptSpec::label` via `KScope::prefix`, so the
+// string that `report::diff` keys on has a single source of truth.
+
+/// One superstep's duplication decision, as the runtime consumes it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KChoice {
+    /// Every transfer of the phase uses the same copy count.
+    Global(u32),
+    /// Per-directed-pair copy counts (row-major `src·n + dst`): the
+    /// runtime looks each transfer's `(src, dst)` up here.
+    PerLink(Vec<u32>),
+}
+
+impl KChoice {
+    /// Copy count for one directed pair.
+    pub fn for_pair(&self, pair: usize) -> u32 {
+        match self {
+            KChoice::Global(k) => *k,
+            KChoice::PerLink(ks) => ks[pair],
+        }
+    }
+
+    /// `(min, max)` over the decision (degenerate for a global choice).
+    pub fn min_max(&self) -> (u32, u32) {
+        match self {
+            KChoice::Global(k) => (*k, *k),
+            KChoice::PerLink(ks) => ks
+                .iter()
+                .fold((u32::MAX, 0), |(lo, hi), &k| (lo.min(k), hi.max(k))),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

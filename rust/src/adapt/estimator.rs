@@ -34,8 +34,10 @@
 //! moment-matched normal for the Beta posterior.
 //!
 //! [`LinkBank`] holds one estimator per directed pair and aggregates a
-//! traffic-weighted global estimate for the (global) k controller, while
-//! keeping the per-link states inspectable.
+//! global estimate for the (global) k controller, weighting each pair
+//! by its estimator's effective sample size — not its all-time traffic,
+//! which would go stale across regime shifts (the PR-4 fix) — while
+//! keeping the per-link states inspectable for per-link control.
 
 /// z-score of the two-sided 95 % interval all estimators report.
 const Z95: f64 = 1.96;
@@ -244,13 +246,21 @@ impl LossEstimator for BetaPosterior {
     }
 }
 
-/// One estimator per directed pair plus a traffic-weighted global view —
-/// the "pluggable per-link estimator" bank the runtime feeds each phase.
+/// One estimator per directed pair plus a weighted global view — the
+/// "pluggable per-link estimator" bank the runtime feeds each phase.
 ///
-/// The controller's k is global (one duplication factor per superstep),
-/// so [`LinkBank::estimate`] aggregates per-link estimates weighted by
-/// observed traffic; heavily used pairs dominate, idle pairs don't
-/// dilute. Per-link states stay inspectable for reporting.
+/// A global k controller reads the aggregate [`LinkBank::estimate`]; a
+/// per-link controller ([`crate::adapt::controller::KPolicy::PerLink`])
+/// reads the per-pair [`LinkBank::link_estimate`]s directly. The
+/// aggregate weights each pair by its estimator's **effective sample
+/// size** ([`LossEstimator::weight`]), not by cumulative traffic:
+/// windowed and EWMA estimators forget old batches, and the aggregate
+/// must forget with them — weighting by all-time traffic would let
+/// ancient history dominate p̂ exactly when the loss regime shifts,
+/// even though every per-link estimator had already moved on (the
+/// PR-4 staleness bug). Pairs that never saw traffic stay out of the
+/// aggregate entirely; the cumulative counters survive only for
+/// [`LinkBank::observed`] and the traffic-seen gate.
 pub struct LinkBank {
     links: Vec<Box<dyn LossEstimator>>,
     traffic: Vec<u64>,
@@ -285,23 +295,44 @@ impl LinkBank {
         self.traffic.iter().sum()
     }
 
-    /// Traffic-weighted global p̂; the prior of link 0 before any
+    /// Aggregation weight of one pair: its estimator's effective sample
+    /// size, gated on the pair having seen traffic at all (a cold
+    /// estimator's prior pseudo-weight must not vote).
+    fn ess(&self, pair: usize) -> f64 {
+        if self.traffic[pair] == 0 {
+            return 0.0;
+        }
+        self.links[pair].weight().max(0.0)
+    }
+
+    fn total_ess(&self) -> f64 {
+        (0..self.links.len()).map(|i| self.ess(i)).sum()
+    }
+
+    /// ESS-weighted global p̂; the prior of link 0 before any
     /// observation (all links share one construction, so one prior).
+    ///
+    /// Weighting by [`LossEstimator::weight`] instead of cumulative
+    /// traffic keeps the aggregate exactly as forgetful as its
+    /// constituent estimators: after a regime shift, a windowed or EWMA
+    /// bank tracks the new regime at the same rate per link and in
+    /// aggregate (pinned by `bank_aggregate_forgets_old_regime` below).
     pub fn estimate(&self) -> f64 {
-        let total = self.total_traffic();
-        if total == 0 {
+        let total = self.total_ess();
+        if total <= 0.0 {
             return self.links[0].estimate();
         }
         let mut acc = 0.0;
-        for (est, &w) in self.links.iter().zip(&self.traffic) {
-            if w > 0 {
-                acc += w as f64 * est.estimate();
+        for (i, est) in self.links.iter().enumerate() {
+            let w = self.ess(i);
+            if w > 0.0 {
+                acc += w * est.estimate();
             }
         }
-        acc / total as f64
+        acc / total
     }
 
-    /// Aggregate uncertainty band: the traffic-weighted mean of the
+    /// Aggregate uncertainty band: the ESS-weighted mean of the
     /// per-link intervals, **unioned with the spread of per-link point
     /// estimates**. Averaging the bounds alone would *narrow* under
     /// heterogeneity (two tight links at 0.01 and 0.5 would average to
@@ -309,23 +340,40 @@ impl LinkBank {
     /// at least as wide as the between-link variance, which is the
     /// conservative direction for a hysteresis anchor.
     pub fn interval(&self) -> (f64, f64) {
-        let total = self.total_traffic();
-        if total == 0 {
+        let total = self.total_ess();
+        if total <= 0.0 {
             return self.links[0].interval();
         }
         let (mut lo, mut hi) = (0.0, 0.0);
-        for (est, &w) in self.links.iter().zip(&self.traffic) {
-            if w > 0 {
+        for (i, est) in self.links.iter().enumerate() {
+            let w = self.ess(i);
+            if w > 0.0 {
                 let (l, h) = est.interval();
-                lo += w as f64 * l;
-                hi += w as f64 * h;
+                lo += w * l;
+                hi += w * h;
             }
         }
-        let (lo, hi) = (lo / total as f64, hi / total as f64);
+        let (lo, hi) = (lo / total, hi / total);
         match self.spread() {
             Some((s_lo, s_hi)) => (lo.min(s_lo), hi.max(s_hi)),
             None => (lo, hi),
         }
+    }
+
+    /// One pair's point estimate (the prior until that pair sees
+    /// traffic) — what a per-link k controller solves against.
+    pub fn link_estimate(&self, pair: usize) -> f64 {
+        self.links[pair].estimate()
+    }
+
+    /// One pair's ~95 % interval (`(0, 1)` until the pair sees traffic).
+    pub fn link_interval(&self, pair: usize) -> (f64, f64) {
+        self.links[pair].interval()
+    }
+
+    /// Cumulative wire copies one pair has carried.
+    pub fn link_traffic(&self, pair: usize) -> u64 {
+        self.traffic[pair]
     }
 
     /// (min, max) point estimate over pairs that saw traffic — the
@@ -498,5 +546,73 @@ mod tests {
         let bank = LinkBank::new(9, || Box::new(BetaPosterior::new(2.0, 0.12)));
         assert!((bank.estimate() - 0.12).abs() < 1e-9);
         assert!(bank.spread().is_none());
+    }
+
+    #[test]
+    fn link_bank_per_link_accessors() {
+        let mut bank = LinkBank::new(4, || Box::new(WindowedFrequency::new(8, 0.1)));
+        bank.observe(2, 25, 100);
+        assert!((bank.link_estimate(2) - 0.25).abs() < 1e-12);
+        assert_eq!(bank.link_estimate(1), 0.1, "untouched pair stays at the prior");
+        assert_eq!(bank.link_interval(1), (0.0, 1.0));
+        let (lo, hi) = bank.link_interval(2);
+        assert!(lo < 0.25 && 0.25 < hi && hi - lo < 0.5);
+        assert_eq!(bank.link_traffic(2), 100);
+        assert_eq!(bank.link_traffic(0), 0);
+    }
+
+    /// The PR-4 staleness regression: long 0.3-loss history, then a
+    /// 0.05 regime. The cumulative-traffic weighting froze each pair's
+    /// aggregation weight at its all-time copy count, so a pair with a
+    /// huge lossy history out-voted the live links long after its own
+    /// estimator's window had nothing but stale data in it. The
+    /// aggregate must instead weight by the estimators' effective
+    /// sample size and track the new regime exactly as fast as the
+    /// per-link estimators do.
+    #[test]
+    fn bank_aggregate_forgets_old_regime() {
+        let mut bank = LinkBank::new(4, || Box::new(WindowedFrequency::new(16, 0.1)));
+        let mut rng = Rng::new(41);
+        let mut feed = |bank: &mut LinkBank, pair: usize, p: f64, batches: usize, per: u64| {
+            let mut loss = Bernoulli::new(p);
+            for _ in 0..batches {
+                let lost = (0..per).filter(|_| loss.lose(&mut rng)).count() as u64;
+                bank.observe(pair, lost, per);
+            }
+        };
+        // Old regime: pair 1 carries a very long 0.3-loss history
+        // (128 000 cumulative copies; its 16-batch window only ever
+        // holds 3 200 of them).
+        feed(&mut bank, 1, 0.3, 640, 200);
+        feed(&mut bank, 2, 0.3, 16, 200);
+        assert!((bank.estimate() - 0.3).abs() < 0.05, "p̂ {}", bank.estimate());
+        // Regime shift: the load moves to pair 2 at 0.05. The buggy
+        // aggregate kept weighting pair 1 by its 128 000 ancient copies
+        // — (128000·0.3 + 6400·p̂₂)/134400 ≈ 0.29 — while ESS weights
+        // are 3 200 vs 3 200, the balanced mix of the two live windows.
+        feed(&mut bank, 2, 0.05, 32, 200);
+        let live = bank.link_estimate(2);
+        assert!((live - 0.05).abs() < 0.03, "per-link estimator off: {live}");
+        let agg = bank.estimate();
+        let mix = (bank.link_estimate(1) + live) / 2.0;
+        assert!(
+            (agg - mix).abs() < 1e-9,
+            "aggregate {agg} must be the ESS mix {mix}, not the traffic mix"
+        );
+        assert!(agg < 0.21, "ancient traffic still dominates: p̂ {agg}");
+        // Once pair 1 sees the new regime for longer than its window,
+        // the aggregate lands on 0.05 like the per-link estimators —
+        // despite pair 1's 128 000-copy lossy past.
+        feed(&mut bank, 1, 0.05, 32, 200);
+        assert!(
+            (bank.estimate() - 0.05).abs() < 0.02,
+            "aggregate stale after the shift: {}",
+            bank.estimate()
+        );
+        assert!(
+            (bank.estimate() - bank.link_estimate(1)).abs() < 0.02
+                && (bank.estimate() - bank.link_estimate(2)).abs() < 0.02,
+            "aggregate must track the per-link estimators"
+        );
     }
 }

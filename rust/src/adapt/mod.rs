@@ -30,8 +30,39 @@
 pub mod controller;
 pub mod estimator;
 
-pub use controller::{CostModel, GreedyRho, HysteresisK, KController, StaticK};
+pub use controller::{
+    CostModel, GreedyRho, HysteresisK, KChoice, KController, KPolicy, StaticK,
+};
 pub use estimator::{BetaPosterior, Ewma, LinkBank, LossEstimator, WindowedFrequency};
+
+/// Decision scope of an adaptive policy: one k per superstep, or one k
+/// per destination link (see [`KPolicy`] for why per-link exists).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KScope {
+    /// One duplication factor for every transfer of the phase, solved
+    /// against the bank's aggregate p̂ — PR 3's behavior.
+    #[default]
+    Global,
+    /// One duplication factor per directed pair, each solved against
+    /// that pair's own estimator.
+    PerLink,
+}
+
+impl KScope {
+    pub fn is_per_link(&self) -> bool {
+        matches!(self, KScope::PerLink)
+    }
+
+    /// Label prefix: empty for global (keeps PR-3 artifact labels
+    /// byte-identical, so v2 baselines still diff-match), `perlink-`
+    /// for per-link policies.
+    fn prefix(&self) -> &'static str {
+        match self {
+            KScope::Global => "",
+            KScope::PerLink => "perlink-",
+        }
+    }
+}
 
 /// Estimator choice + knobs as plain `Copy` data, so campaign cells can
 /// carry it across the worker pool ([`EstimatorSpec::build`] makes the
@@ -107,25 +138,58 @@ impl EstimatorSpec {
 pub enum AdaptSpec {
     /// Fixed k from the cell's k axis — the paper's offline policy.
     Static,
-    /// [`GreedyRho`] re-solving k* every superstep.
-    Greedy { k_max: u32, est: EstimatorSpec },
-    /// [`HysteresisK`] with a `band`-widened decision interval.
-    Hysteresis { k_max: u32, est: EstimatorSpec, band: f64 },
+    /// [`GreedyRho`] re-solving k* every superstep, globally or one per
+    /// destination link ([`KScope`]).
+    Greedy { k_max: u32, est: EstimatorSpec, scope: KScope },
+    /// [`HysteresisK`] with a `band`-widened decision interval,
+    /// globally or one per destination link ([`KScope`]).
+    Hysteresis { k_max: u32, est: EstimatorSpec, band: f64, scope: KScope },
 }
 
 impl AdaptSpec {
+    /// Global-scope [`AdaptSpec::Greedy`] (the PR-3 shape).
+    pub const fn greedy(k_max: u32, est: EstimatorSpec) -> AdaptSpec {
+        AdaptSpec::Greedy { k_max, est, scope: KScope::Global }
+    }
+
+    /// Global-scope [`AdaptSpec::Hysteresis`] (the PR-3 shape).
+    pub const fn hysteresis(k_max: u32, est: EstimatorSpec, band: f64) -> AdaptSpec {
+        AdaptSpec::Hysteresis { k_max, est, band, scope: KScope::Global }
+    }
+
+    /// The same policy with per-link scope (no-op on `Static`).
+    pub fn per_link(self) -> AdaptSpec {
+        match self {
+            AdaptSpec::Static => AdaptSpec::Static,
+            AdaptSpec::Greedy { k_max, est, .. } => {
+                AdaptSpec::Greedy { k_max, est, scope: KScope::PerLink }
+            }
+            AdaptSpec::Hysteresis { k_max, est, band, .. } => {
+                AdaptSpec::Hysteresis { k_max, est, band, scope: KScope::PerLink }
+            }
+        }
+    }
+
     pub fn is_static(&self) -> bool {
         matches!(self, AdaptSpec::Static)
+    }
+
+    /// Decision scope (static policies are trivially global).
+    pub fn scope(&self) -> KScope {
+        match *self {
+            AdaptSpec::Static => KScope::Global,
+            AdaptSpec::Greedy { scope, .. } | AdaptSpec::Hysteresis { scope, .. } => scope,
+        }
     }
 
     pub fn label(&self) -> String {
         match *self {
             AdaptSpec::Static => "static".into(),
-            AdaptSpec::Greedy { k_max, est } => {
-                format!("greedy(kmax={k_max},{})", est.label())
+            AdaptSpec::Greedy { k_max, est, scope } => {
+                format!("{}greedy(kmax={k_max},{})", scope.prefix(), est.label())
             }
-            AdaptSpec::Hysteresis { k_max, est, band } => {
-                format!("hyst(kmax={k_max},{},band={band})", est.label())
+            AdaptSpec::Hysteresis { k_max, est, band, scope } => {
+                format!("{}hyst(kmax={k_max},{},band={band})", scope.prefix(), est.label())
             }
         }
     }
@@ -136,13 +200,13 @@ impl AdaptSpec {
     pub fn validate(&self) -> Result<(), String> {
         match *self {
             AdaptSpec::Static => Ok(()),
-            AdaptSpec::Greedy { k_max, est } => {
+            AdaptSpec::Greedy { k_max, est, .. } => {
                 if k_max == 0 {
                     return Err("adaptive k_max must be >= 1".into());
                 }
                 est.validate()
             }
-            AdaptSpec::Hysteresis { k_max, est, band } => {
+            AdaptSpec::Hysteresis { k_max, est, band, .. } => {
                 if k_max == 0 {
                     return Err("adaptive k_max must be >= 1".into());
                 }
@@ -156,39 +220,87 @@ impl AdaptSpec {
 
     /// Build the closed-loop state for one replica over `n_nodes` nodes
     /// at the given cost model; `None` for [`AdaptSpec::Static`] (the
-    /// runtime keeps its fixed k).
+    /// runtime keeps its fixed k). A per-link scope gets one controller
+    /// per directed pair, mirroring the bank's estimator layout.
     pub fn build(&self, model: CostModel, n_nodes: usize) -> Option<AdaptiveK> {
-        let (controller, est): (Box<dyn KController>, EstimatorSpec) = match *self {
+        let n_pairs = n_nodes.max(1) * n_nodes.max(1);
+        let mk: Box<dyn Fn() -> Box<dyn KController>> = match *self {
             AdaptSpec::Static => return None,
-            AdaptSpec::Greedy { k_max, est } => (Box::new(GreedyRho::new(model, k_max)), est),
-            AdaptSpec::Hysteresis { k_max, est, band } => {
-                (Box::new(HysteresisK::new(model, k_max, band)), est)
+            AdaptSpec::Greedy { k_max, .. } => {
+                Box::new(move || Box::new(GreedyRho::new(model, k_max)))
+            }
+            AdaptSpec::Hysteresis { k_max, band, .. } => {
+                Box::new(move || Box::new(HysteresisK::new(model, k_max, band)))
             }
         };
-        let bank = LinkBank::new(n_nodes.max(1) * n_nodes.max(1), || est.build());
-        Some(AdaptiveK { bank, controller })
+        let est = match *self {
+            AdaptSpec::Static => unreachable!(),
+            AdaptSpec::Greedy { est, .. } | AdaptSpec::Hysteresis { est, .. } => est,
+        };
+        let policy = match self.scope() {
+            KScope::Global => KPolicy::Global(mk()),
+            KScope::PerLink => KPolicy::PerLink((0..n_pairs).map(|_| mk()).collect()),
+        };
+        let bank = LinkBank::new(n_pairs, || est.build());
+        Some(AdaptiveK { bank, policy })
     }
 }
 
 /// Per-run closed-loop state: the per-link estimator bank plus the k
-/// policy. Owned by the [`crate::bsp::BspRuntime`]; deterministic given
-/// the observation sequence, so adaptive campaign replicas stay bitwise
+/// policy (global, or one controller per directed pair). Owned by the
+/// [`crate::bsp::BspRuntime`]; deterministic given the observation
+/// sequence, so adaptive campaign replicas stay bitwise
 /// worker-count-invariant.
 pub struct AdaptiveK {
     bank: LinkBank,
-    controller: Box<dyn KController>,
+    policy: KPolicy,
 }
 
 impl AdaptiveK {
-    pub fn new(bank: LinkBank, controller: Box<dyn KController>) -> AdaptiveK {
-        AdaptiveK { bank, controller }
+    pub fn new(bank: LinkBank, policy: KPolicy) -> AdaptiveK {
+        if let KPolicy::PerLink(cs) = &policy {
+            assert_eq!(
+                cs.len(),
+                bank.n_pairs(),
+                "per-link policy needs one controller per bank pair"
+            );
+        }
+        AdaptiveK { bank, policy }
     }
 
-    /// Pick k for the coming superstep from the bank's aggregate view.
+    /// Pick the coming superstep's duplication decision: a single k
+    /// from the bank's aggregate view (global policy), or one k per
+    /// directed pair from each pair's own estimator (per-link policy).
+    pub fn choose(&mut self) -> KChoice {
+        match &mut self.policy {
+            KPolicy::Global(c) => {
+                let p_hat = self.bank.estimate();
+                let interval = self.bank.interval();
+                KChoice::Global(c.choose_k(p_hat, interval).max(1))
+            }
+            KPolicy::PerLink(cs) => {
+                let bank = &self.bank;
+                let ks = cs
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(pair, c)| {
+                        c.choose_k(bank.link_estimate(pair), bank.link_interval(pair))
+                            .max(1)
+                    })
+                    .collect();
+                KChoice::PerLink(ks)
+            }
+        }
+    }
+
+    /// Scalar form of [`AdaptiveK::choose`] for global-policy callers:
+    /// a per-link decision collapses to its maximum (the protective
+    /// summary — the k the lossiest pair wanted).
     pub fn choose_k(&mut self) -> u32 {
-        let p_hat = self.bank.estimate();
-        let interval = self.bank.interval();
-        self.controller.choose_k(p_hat, interval).max(1)
+        match self.choose() {
+            KChoice::Global(k) => k,
+            KChoice::PerLink(ks) => ks.into_iter().max().unwrap_or(1).max(1),
+        }
     }
 
     /// Feed one directed pair's `(lost, sent)` wire-copy delta from the
@@ -197,7 +309,8 @@ impl AdaptiveK {
         self.bank.observe(pair, lost, sent);
     }
 
-    /// Current traffic-weighted global loss estimate p̂.
+    /// Current global loss estimate p̂ (ESS-weighted over the per-link
+    /// estimators — see [`LinkBank::estimate`]).
     pub fn estimate(&self) -> f64 {
         self.bank.estimate()
     }
@@ -212,8 +325,9 @@ impl AdaptiveK {
         self.bank.observed()
     }
 
-    pub fn controller_label(&self) -> String {
-        self.controller.label()
+    /// The estimator bank (per-link states, for reporting).
+    pub fn bank(&self) -> &LinkBank {
+        &self.bank
     }
 }
 
@@ -224,14 +338,34 @@ mod tests {
     #[test]
     fn spec_labels_are_stable() {
         assert_eq!(AdaptSpec::Static.label(), "static");
-        let greedy = AdaptSpec::Greedy { k_max: 4, est: EstimatorSpec::default_beta() };
+        let greedy = AdaptSpec::Greedy {
+            k_max: 4,
+            est: EstimatorSpec::default_beta(),
+            scope: KScope::Global,
+        };
+        // Global labels are byte-identical to PR 3's, so v2 artifact
+        // baselines keep diff-matching.
         assert_eq!(greedy.label(), "greedy(kmax=4,beta(2,0.1))");
         let hyst = AdaptSpec::Hysteresis {
             k_max: 3,
             est: EstimatorSpec::Window { len: 16, p0: 0.05 },
             band: 2.0,
+            scope: KScope::Global,
         };
         assert_eq!(hyst.label(), "hyst(kmax=3,win(16,0.05),band=2)");
+        let pl = AdaptSpec::Greedy {
+            k_max: 4,
+            est: EstimatorSpec::default_beta(),
+            scope: KScope::PerLink,
+        };
+        assert_eq!(pl.label(), "perlink-greedy(kmax=4,beta(2,0.1))");
+        let plh = AdaptSpec::Hysteresis {
+            k_max: 3,
+            est: EstimatorSpec::Window { len: 16, p0: 0.05 },
+            band: 2.0,
+            scope: KScope::PerLink,
+        };
+        assert_eq!(plh.label(), "perlink-hyst(kmax=3,win(16,0.05),band=2)");
     }
 
     #[test]
@@ -247,7 +381,11 @@ mod tests {
         // streak it returns to k = 1. α is sized so the duplication tax
         // k·(c/n)·α is a real fraction of β and the crossover exists.
         let model = CostModel { c: 16.0, n: 4.0, alpha: 0.01, beta: 0.07 };
-        let spec = AdaptSpec::Greedy { k_max: 4, est: EstimatorSpec::default_beta() };
+        let spec = AdaptSpec::Greedy {
+            k_max: 4,
+            est: EstimatorSpec::default_beta(),
+            scope: KScope::Global,
+        };
         let mut loop_ = spec.build(model, 4).expect("adaptive spec");
         let k0 = loop_.choose_k();
         assert!(k0 >= 1 && k0 <= 4);
@@ -264,6 +402,48 @@ mod tests {
         assert!(loop_.estimate() < 0.02, "p̂ {}", loop_.estimate());
         assert_eq!(loop_.choose_k(), 1);
         assert_eq!(loop_.observed(), 20_500);
+    }
+
+    #[test]
+    fn per_link_policy_diverges_where_the_links_do() {
+        // Two pairs, opposite loss regimes: the per-link policy must
+        // hand the clean pair k = 1 and the lossy pair the cap, while
+        // choose_k (the scalar summary) reports the protective max.
+        let model = CostModel { c: 16.0, n: 4.0, alpha: 0.01, beta: 0.07 };
+        let spec = AdaptSpec::Greedy {
+            k_max: 4,
+            est: EstimatorSpec::default_beta(),
+            scope: KScope::PerLink,
+        };
+        let mut loop_ = spec.build(model, 4).expect("adaptive spec");
+        for _ in 0..10 {
+            loop_.observe_pair(1, 0, 100); // 0→1 clean
+            loop_.observe_pair(2, 35, 100); // 0→2 lossy
+        }
+        let choice = loop_.choose();
+        let KChoice::PerLink(ks) = &choice else {
+            panic!("per-link spec must produce a per-link choice")
+        };
+        assert_eq!(ks.len(), 16);
+        assert_eq!(choice.for_pair(1), 1, "clean pair wants one copy");
+        assert_eq!(choice.for_pair(2), 4, "lossy pair wants the cap");
+        assert_eq!(choice.min_max(), (1, 4));
+        assert_eq!(loop_.choose_k(), 4, "scalar summary is the protective max");
+        let (lo, hi) = loop_.spread().expect("two pairs saw traffic");
+        assert!(lo < 0.05 && hi > 0.3, "spread ({lo}, {hi})");
+    }
+
+    #[test]
+    fn global_policy_still_chooses_one_k() {
+        let model = CostModel { c: 16.0, n: 4.0, alpha: 0.01, beta: 0.07 };
+        let spec = AdaptSpec::Greedy {
+            k_max: 4,
+            est: EstimatorSpec::default_beta(),
+            scope: KScope::Global,
+        };
+        let mut loop_ = spec.build(model, 4).expect("adaptive spec");
+        loop_.observe_pair(1, 30, 100);
+        assert!(matches!(loop_.choose(), KChoice::Global(_)));
     }
 
     #[test]

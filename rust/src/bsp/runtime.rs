@@ -1,7 +1,10 @@
 //! The superstep driver.
 
-use crate::adapt::AdaptiveK;
-use crate::net::protocol::{run_phase, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer};
+use crate::adapt::{AdaptiveK, KChoice};
+use crate::net::loss::PiecewiseStationary;
+use crate::net::protocol::{
+    run_phase_with_copies, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer,
+};
 use crate::net::transport::Network;
 
 use super::program::{BspProgram, Outgoing};
@@ -13,9 +16,18 @@ pub struct StepReport {
     pub compute_s: f64,
     pub phase: PhaseReport,
     pub messages: usize,
-    /// Packet copies `k` used for this step's phase (varies under
-    /// adaptive duplication control; the static configuration otherwise).
+    /// Scalar summary of the packet copies used for this step's phase:
+    /// the exact k for static/global control, the rounded mean of the
+    /// realized per-transfer copies under per-link control. Old
+    /// consumers keep reading this one number; the per-link detail is
+    /// in `copies_min`/`copies_max`/`copies_mean`.
     pub copies: u32,
+    /// Smallest per-transfer copy count this phase actually used.
+    pub copies_min: u32,
+    /// Largest per-transfer copy count this phase actually used.
+    pub copies_max: u32,
+    /// Mean copy count over the phase's transfers (exact, not rounded).
+    pub copies_mean: f64,
 }
 
 /// How a run ended. `completed` alone cannot distinguish a program whose
@@ -82,7 +94,16 @@ pub struct BspRuntime {
     /// Closed-loop k selection: when set, the runtime asks the
     /// controller for k before each phase and feeds the per-pair
     /// `(lost, sent)` wire-copy deltas back to its estimators after it.
+    /// A per-link policy yields a k *vector* — one copy count per
+    /// destination pair, threaded into the transport per transfer.
     adapt: Option<AdaptiveK>,
+    /// Piecewise-stationary loss schedule: at each superstep boundary
+    /// the network's mean loss is re-tuned to the governing segment
+    /// (kind-preserving). `None` = the stationary world of the paper.
+    loss_schedule: Option<PiecewiseStationary>,
+    /// Segment index last applied to the network (avoids re-tuning —
+    /// and resetting Gilbert–Elliott burst state — every superstep).
+    applied_segment: Option<usize>,
 }
 
 impl BspRuntime {
@@ -94,6 +115,8 @@ impl BspRuntime {
             timeout_override_s: None,
             max_rounds: 10_000,
             adapt: None,
+            loss_schedule: None,
+            applied_segment: None,
         }
     }
 
@@ -108,9 +131,20 @@ impl BspRuntime {
     }
 
     /// Attach a closed-loop duplication controller (see [`crate::adapt`]):
-    /// `copies` becomes the controller's per-superstep choice.
+    /// `copies` becomes the controller's per-superstep choice (per
+    /// destination link, for a per-link policy).
     pub fn with_adaptive(mut self, adapt: AdaptiveK) -> Self {
         self.adapt = Some(adapt);
+        self
+    }
+
+    /// Attach a piecewise-stationary loss schedule: before each
+    /// superstep the network's mean loss is re-tuned to the schedule's
+    /// governing segment (see [`PiecewiseStationary`]). The topology's
+    /// initial loss should match segment 0; the runtime applies it
+    /// regardless, so a mismatch is corrected at step 0.
+    pub fn with_loss_schedule(mut self, schedule: PiecewiseStationary) -> Self {
+        self.loss_schedule = Some(schedule);
         self
     }
 
@@ -128,9 +162,14 @@ impl BspRuntime {
         &self.net
     }
 
-    /// The paper's timeout for a phase: `2τ_k = 2(k·(c/n)·α + β)` with α
-    /// from the mean packet size and per-pair bandwidth, β the mean RTT.
-    fn phase_timeout(&self, transfers: &[Transfer], n: usize) -> f64 {
+    /// The paper's timeout for a phase: `2τ_k = 2(k̄·(c/n)·α + β)` with
+    /// α from the mean packet size and per-pair bandwidth, β the mean
+    /// RTT, and k̄ the mean per-transfer copy count — for a uniform k
+    /// this is exactly the paper's `2(k·(c/n)·α + β)`; under per-link
+    /// control the serialization term charges the *actual* wire-copy
+    /// load `Σkᵢ/n` instead of `k_max·c/n`, which is where per-link k
+    /// buys its round-length advantage on mixed-quality topologies.
+    fn phase_timeout(&self, transfers: &[Transfer], copies: &[u32], n: usize) -> f64 {
         if let Some(t) = self.timeout_override_s {
             return t;
         }
@@ -144,10 +183,11 @@ impl BspRuntime {
             alpha_sum += link.alpha(tr.bytes);
             beta_sum += link.rtt_s;
         }
-        let alpha_mean = alpha_sum / transfers.len() as f64;
-        let beta_mean = beta_sum / transfers.len() as f64;
         let c = transfers.len() as f64;
-        2.0 * (self.copies as f64 * c / n as f64 * alpha_mean + beta_mean)
+        let alpha_mean = alpha_sum / c;
+        let beta_mean = beta_sum / c;
+        let k_mean = copies.iter().map(|&k| k as f64).sum::<f64>() / c;
+        2.0 * (k_mean * c / n as f64 * alpha_mean + beta_mean)
     }
 
     /// Run the program to completion (or abort on a failed phase). The
@@ -158,10 +198,22 @@ impl BspRuntime {
         let mut report = RunReport::default();
         let mut converged = false;
         for step in 0..prog.max_supersteps() {
+            // --- piecewise-stationary loss: re-tune the network when
+            // the schedule's governing segment changes.
+            if let Some(sched) = &self.loss_schedule {
+                let seg = sched.segment_at(step);
+                if self.applied_segment != Some(seg) {
+                    self.net.set_mean_loss(sched.mean_at(step));
+                    self.applied_segment = Some(seg);
+                }
+            }
+
             // --- adaptive duplication control: re-choose k before the
-            // phase from the loss estimate accumulated so far.
-            if let Some(ad) = self.adapt.as_mut() {
-                self.copies = ad.choose_k();
+            // phase from the loss estimate accumulated so far — one
+            // global k, or one per destination pair.
+            let choice: Option<KChoice> = self.adapt.as_mut().map(|ad| ad.choose());
+            if let Some(KChoice::Global(k)) = &choice {
+                self.copies = *k;
             }
 
             // --- compute phase: barrier waits for the slowest node.
@@ -178,6 +230,26 @@ impl BspRuntime {
                 .iter()
                 .map(|(src, m)| Transfer { src: *src, dst: m.dst, bytes: m.bytes })
                 .collect();
+            // Per-transfer copy counts: each transfer gets its (src,
+            // dst) pair's k under a per-link policy, the scalar k
+            // otherwise.
+            let topo_n = self.net.topology().n();
+            let per_transfer: Vec<u32> = transfers
+                .iter()
+                .map(|tr| match &choice {
+                    Some(KChoice::PerLink(ks)) => ks[tr.src * topo_n + tr.dst].max(1),
+                    _ => self.copies,
+                })
+                .collect();
+            let (k_min, k_max, k_mean) = if per_transfer.is_empty() {
+                (self.copies, self.copies, self.copies as f64)
+            } else {
+                let lo = *per_transfer.iter().min().expect("non-empty");
+                let hi = *per_transfer.iter().max().expect("non-empty");
+                let mean = per_transfer.iter().map(|&k| k as f64).sum::<f64>()
+                    / per_transfer.len() as f64;
+                (lo, hi, mean)
+            };
             let pairs_before: Option<Vec<(u64, u64)>> = self.adapt.as_ref().map(|_| {
                 let (sent, lost) = self.net.pair_counters();
                 sent.iter().copied().zip(lost.iter().copied()).collect()
@@ -192,14 +264,19 @@ impl BspRuntime {
                     completed: true,
                 }
             } else {
-                let timeout = self.phase_timeout(&transfers, n);
+                let timeout = self.phase_timeout(&transfers, &per_transfer, n);
                 let cfg = PhaseConfig {
                     copies: self.copies,
                     timeout_s: timeout,
                     policy: self.policy,
                     max_rounds: self.max_rounds,
                 };
-                run_phase(&mut self.net, &transfers, &cfg)
+                run_phase_with_copies(
+                    &mut self.net,
+                    &transfers,
+                    &cfg,
+                    Some(per_transfer.as_slice()),
+                )
             };
 
             // --- close the loop: per-pair (lost, sent) deltas feed the
@@ -238,7 +315,12 @@ impl BspRuntime {
                 compute_s: barrier_s,
                 phase,
                 messages: outgoing.len(),
-                copies: self.copies,
+                // Per-link choices summarize to the rounded mean; a
+                // uniform k round-trips exactly.
+                copies: k_mean.round() as u32,
+                copies_min: k_min,
+                copies_max: k_max,
+                copies_mean: k_mean,
             });
 
             if !phase.completed {
@@ -501,7 +583,7 @@ mod tests {
 
     #[test]
     fn adaptive_runtime_closes_the_loop() {
-        use crate::adapt::{AdaptSpec, CostModel, EstimatorSpec};
+        use crate::adapt::{AdaptSpec, CostModel, EstimatorSpec, KScope};
         // 4-node ring under 25 % loss: the greedy controller starts at
         // k = 1 (the prior says p ≈ 0.01, and at that loss one copy is
         // cheapest under this α) and must ramp k up once the estimators
@@ -510,6 +592,7 @@ mod tests {
         let spec = AdaptSpec::Greedy {
             k_max: 3,
             est: EstimatorSpec::Beta { strength: 2.0, p0: 0.01 },
+            scope: KScope::Global,
         };
         let adapt = spec.build(model, 4).expect("adaptive");
         let mut rt = BspRuntime::new(net(4, 0.25, 71)).with_adaptive(adapt);
@@ -539,8 +622,128 @@ mod tests {
         let mut rt = BspRuntime::new(net(3, 0.1, 15)).with_copies(2);
         let rep = rt.run(&mut RingPass::new(3, 3));
         assert!(rep.steps.iter().all(|s| s.copies == 2));
+        assert!(rep
+            .steps
+            .iter()
+            .all(|s| s.copies_min == 2 && s.copies_max == 2 && s.copies_mean == 2.0));
         assert!(rt.loss_estimate().is_none());
         assert!(rt.adaptive().is_none());
+    }
+
+    /// All-pairs program over a two-tier topology, for per-link tests:
+    /// every node sends one message to every other node each superstep.
+    struct AllPairs {
+        n: usize,
+        steps: usize,
+        bytes: u64,
+        received: Vec<usize>,
+    }
+
+    impl BspProgram for AllPairs {
+        type Msg = u64;
+        fn n_nodes(&self) -> usize {
+            self.n
+        }
+        fn max_supersteps(&self) -> usize {
+            self.steps
+        }
+        fn compute(&mut self, node: NodeId, _step: usize) -> (Vec<Outgoing<u64>>, f64) {
+            let out = (0..self.n)
+                .filter(|&d| d != node)
+                .map(|d| Outgoing { dst: d, payload: node as u64, bytes: self.bytes })
+                .collect();
+            (out, 0.001)
+        }
+        fn deliver(&mut self, node: NodeId, _from: NodeId, _payload: u64) {
+            self.received[node] += 1;
+        }
+    }
+
+    #[test]
+    fn per_link_runtime_diversifies_k_across_tiers() {
+        use crate::adapt::{AdaptSpec, CostModel, EstimatorSpec, KScope};
+        // Checkerboard: half the pairs nearly clean (0.2 % loss), half
+        // at 40 %. Packets are large (256 KB at 40 MB/s → α ≈ 6.5 ms)
+        // so over-duplication costs real timeout length: the per-link
+        // controller must end with few copies on the clean tier and
+        // k ≥ 3 on the lossy one — a min/max spread in the step
+        // reports — while reliability holds.
+        let link = Link::from_mbytes(40.0, 0.05);
+        let bytes = 262_144u64;
+        let topo = Topology::two_tier(4, link, 0.002, 0.4, None);
+        let model = CostModel { c: 12.0, n: 4.0, alpha: link.alpha(bytes), beta: 0.05 };
+        let spec = AdaptSpec::Greedy {
+            k_max: 4,
+            est: EstimatorSpec::Beta { strength: 2.0, p0: 0.05 },
+            scope: KScope::PerLink,
+        };
+        let adapt = spec.build(model, 4).expect("adaptive");
+        let mut rt = BspRuntime::new(Network::new(topo, 404)).with_adaptive(adapt);
+        let mut prog = AllPairs { n: 4, steps: 24, bytes, received: vec![0; 4] };
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        for node in 0..4 {
+            assert_eq!(prog.received[node], 3 * 24, "reliability violated");
+        }
+        let last = rep.steps.last().unwrap();
+        assert!(
+            last.copies_min < last.copies_max,
+            "per-link control never diversified: k in [{}, {}]",
+            last.copies_min,
+            last.copies_max
+        );
+        assert!(last.copies_min <= 2, "clean tier over-duplicates: {}", last.copies_min);
+        assert!(last.copies_max >= 3, "lossy tier under-protects: {}", last.copies_max);
+        assert!(last.copies_mean > 1.0 && last.copies_mean < 4.0);
+        assert_eq!(last.copies, last.copies_mean.round() as u32);
+        // The estimator bank sees the two tiers apart.
+        let (lo, hi) = rt.adaptive().unwrap().spread().expect("traffic on both tiers");
+        assert!(lo < 0.1 && hi > 0.25, "spread ({lo}, {hi})");
+    }
+
+    #[test]
+    fn loss_schedule_shifts_the_regime_mid_run() {
+        use crate::net::loss::PiecewiseStationary;
+        // Clean until step 3, 45 % loss afterwards: early phases finish
+        // in one round, later ones must retransmit.
+        let sched = PiecewiseStationary::step_change(0.0, 3, 0.45);
+        let mut rt = BspRuntime::new(net(4, 0.0, 31)).with_loss_schedule(sched);
+        let mut prog = RingPass::new(4, 8);
+        let rep = rt.run(&mut prog);
+        assert!(rep.completed);
+        let early: u32 = rep.steps[..3].iter().map(|s| s.phase.rounds).sum();
+        let late: u32 = rep.steps[3..].iter().map(|s| s.phase.rounds).sum();
+        assert_eq!(early, 3, "clean regime is one round per phase");
+        assert!(late > 5, "shifted regime must force retransmissions: {late}");
+        for node in 0..4 {
+            assert_eq!(prog.received[node].len(), 8, "reliability violated");
+        }
+    }
+
+    #[test]
+    fn loss_schedule_composes_with_adaptive_control() {
+        use crate::adapt::{AdaptSpec, CostModel, EstimatorSpec, KScope};
+        // Regime shift under a global EWMA controller: k must be low in
+        // the clean regime and ramp after the shift.
+        let sched = PiecewiseStationary::step_change(0.0, 6, 0.4);
+        let model = CostModel { c: 4.0, n: 4.0, alpha: 0.005, beta: 0.02 };
+        let spec = AdaptSpec::Greedy {
+            k_max: 3,
+            est: EstimatorSpec::Ewma { lambda: 0.05, p0: 0.0 },
+            scope: KScope::Global,
+        };
+        let adapt = spec.build(model, 4).expect("adaptive");
+        let mut rt =
+            BspRuntime::new(net(4, 0.0, 77)).with_adaptive(adapt).with_loss_schedule(sched);
+        let rep = rt.run(&mut RingPass::new(4, 16));
+        assert!(rep.completed);
+        assert_eq!(rep.steps[5].copies, 1, "clean regime holds k = 1");
+        assert!(
+            rep.steps.last().unwrap().copies >= 2,
+            "controller never reacted to the shift"
+        );
+        let p_hat = rt.loss_estimate().unwrap();
+        assert!(p_hat > 0.2, "estimate still stuck in the old regime: {p_hat}");
     }
 
     #[test]
@@ -552,7 +755,11 @@ mod tests {
         ];
         // alpha = 1e6/100e6 = 0.01 s, beta = 0.02, c=2, n=4, k=2:
         // 2(k·(c/n)·α + β) = 2(2·0.5·0.01 + 0.02) = 0.06.
-        let t = rt.phase_timeout(&transfers, 4);
+        let t = rt.phase_timeout(&transfers, &[2, 2], 4);
         assert!((t - 0.06).abs() < 1e-12, "{t}");
+        // Heterogeneous copies use the mean: k̄ = 1.5 → 2(1.5·0.5·0.01
+        // + 0.02) = 0.055.
+        let t = rt.phase_timeout(&transfers, &[1, 2], 4);
+        assert!((t - 0.055).abs() < 1e-12, "{t}");
     }
 }

@@ -65,7 +65,7 @@ use crate::bsp::BspRuntime;
 use crate::model::rho::{rho_selective, rho_whole_round, round_failure_q};
 use crate::model::{Comm, LbspParams};
 use crate::net::link::Link;
-use crate::net::loss::GilbertElliott;
+use crate::net::loss::{GilbertElliott, PiecewiseStationary};
 use crate::net::protocol::RetransmitPolicy;
 use crate::net::rounds::{run_slotted_program, run_slotted_program_model};
 use crate::net::topology::{PlanetLabRanges, Topology};
@@ -94,6 +94,104 @@ impl LossSpec {
             LossSpec::Bernoulli => "iid".into(),
             LossSpec::GilbertElliott { burst_len } => format!("ge(b={burst_len})"),
         }
+    }
+}
+
+/// Scenario axis of the grid: how the loss *environment* behaves over a
+/// run — stationary (the paper's assumption), shifting regimes in time,
+/// or heterogeneous across pairs. Orthogonal to [`LossSpec`] (the
+/// per-packet process kind) and [`TopologySpec`] (link parameters), so
+/// adaptive-vs-static and per-link-vs-global comparisons run under
+/// every environment in one grid (`--scenario`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScenarioSpec {
+    /// The cell's `p` everywhere, for the whole run.
+    Stationary,
+    /// Piecewise-stationary regime shift: mean loss starts at the
+    /// cell's `p` and jumps to `to_p` at superstep `at` (applied
+    /// kind-preservingly — a GE cell keeps its burst length). Needs a
+    /// packet-level workload on a Uniform topology.
+    Shift { at: usize, to_p: f64 },
+    /// Two-tier per-pair heterogeneity: the checkerboard topology at
+    /// `p·(1−spread)` / `p·(1+spread)` (clamped to [0, 0.95]). The
+    /// cell's `p` is the *tier midpoint*, not the exact network mean:
+    /// the diagonal consumes even-parity slots, so the off-diagonal
+    /// average sits at `p·(1 + spread/(n−1))` (n = 4, spread = 0.9:
+    /// 0.26 for p = 0.2) — compare hetero cells against each other or
+    /// against their own static baseline, not against a stationary
+    /// cell at the same `p`. Needs a packet-level workload on a
+    /// Uniform topology (PlanetLab topologies already carry their own
+    /// heterogeneity).
+    Hetero { spread: f64 },
+}
+
+impl ScenarioSpec {
+    pub fn is_stationary(&self) -> bool {
+        matches!(self, ScenarioSpec::Stationary)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ScenarioSpec::Stationary => "stationary".into(),
+            ScenarioSpec::Shift { at, to_p } => format!("shift(at={at},to={to_p})"),
+            ScenarioSpec::Hetero { spread } => format!("hetero(s={spread})"),
+        }
+    }
+
+    /// Per-scenario knob validation (grid-level compatibility lives in
+    /// [`CampaignSpec::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ScenarioSpec::Stationary => Ok(()),
+            ScenarioSpec::Shift { at, to_p } => {
+                if at == 0 {
+                    return Err(
+                        "shift at superstep 0 is just a stationary run at to_p".into()
+                    );
+                }
+                if !(0.0..1.0).contains(&to_p) {
+                    return Err(format!("shift target loss {to_p} outside [0, 1)"));
+                }
+                Ok(())
+            }
+            ScenarioSpec::Hetero { spread } => {
+                if spread.is_nan() || spread <= 0.0 || spread > 1.0 {
+                    return Err(format!("hetero spread {spread} outside (0, 1]"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The two tier means of a hetero scenario around base loss `p`.
+    fn tiers(&self, p: f64) -> (f64, f64) {
+        match *self {
+            ScenarioSpec::Hetero { spread } => (
+                (p * (1.0 - spread)).clamp(0.0, 0.95),
+                (p * (1.0 + spread)).clamp(0.0, 0.95),
+            ),
+            _ => (p, p),
+        }
+    }
+}
+
+/// `{min, mean, max}` of a per-link quantity, aggregated over a cell's
+/// replicas (min of replica minima, mean of replica means, max of
+/// replica maxima) — the `k_spread` / `p_hat_spread` blocks of the v3
+/// artifact schema. Collapses to `min = mean = max` wherever the
+/// quantity is per-run scalar (static k, global control).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Spread {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Spread {
+    fn over<I: Iterator<Item = (f64, f64)> + Clone>(pairs: I, mean: f64) -> Spread {
+        let min = pairs.clone().map(|(lo, _)| lo).fold(f64::NAN, f64::min);
+        let max = pairs.map(|(_, hi)| hi).fold(f64::NAN, f64::max);
+        Spread { min, mean, max }
     }
 }
 
@@ -213,6 +311,9 @@ pub struct CellSpec {
     pub policy: RetransmitPolicy,
     pub loss: LossSpec,
     pub topology: TopologySpec,
+    /// Scenario axis: how the loss environment evolves over the run
+    /// (stationary / regime shift / per-pair heterogeneity).
+    pub scenario: ScenarioSpec,
     /// Duplication-control axis: [`AdaptSpec::Static`] runs the cell at
     /// the fixed `k`; adaptive variants re-choose k per superstep from
     /// the online loss estimate — `k` then remains a grid coordinate
@@ -265,6 +366,10 @@ pub struct CampaignSpec {
     pub policies: Vec<RetransmitPolicy>,
     pub losses: Vec<LossSpec>,
     pub topologies: Vec<TopologySpec>,
+    /// Scenario axis (`--scenario`): loss-environment variants every
+    /// base grid point is crossed with. Non-stationary scenarios need
+    /// packet-level workloads on Uniform topologies (validated).
+    pub scenarios: Vec<ScenarioSpec>,
     /// Independent replica runs per cell (fixed mode), or the batch size
     /// per dispatch round (adaptive mode).
     pub replicas: usize,
@@ -300,6 +405,7 @@ impl Default for CampaignSpec {
             policies: vec![RetransmitPolicy::Selective],
             losses: vec![LossSpec::Bernoulli],
             topologies: vec![TopologySpec::Uniform],
+            scenarios: vec![ScenarioSpec::Stationary],
             replicas: 8,
             seed: 0x9_CA4B,
             sem_target: None,
@@ -322,29 +428,32 @@ impl CampaignSpec {
                         for &policy in &self.policies {
                             for &loss in &self.losses {
                                 for &topology in &self.topologies {
-                                    for &adapt in &self.adapts {
-                                        // An adaptive cell ignores the k
-                                        // coordinate (the controller picks
-                                        // the copies), so crossing it with
-                                        // the k axis would only duplicate
-                                        // identical policies: adaptive
-                                        // variants are emitted once, pinned
-                                        // to the axis' first entry (by
-                                        // position, so a duplicated k value
-                                        // cannot desync this from n_cells).
-                                        if !adapt.is_static() && ki != 0 {
-                                            continue;
+                                    for &scenario in &self.scenarios {
+                                        for &adapt in &self.adapts {
+                                            // An adaptive cell ignores the k
+                                            // coordinate (the controller picks
+                                            // the copies), so crossing it with
+                                            // the k axis would only duplicate
+                                            // identical policies: adaptive
+                                            // variants are emitted once, pinned
+                                            // to the axis' first entry (by
+                                            // position, so a duplicated k value
+                                            // cannot desync this from n_cells).
+                                            if !adapt.is_static() && ki != 0 {
+                                                continue;
+                                            }
+                                            out.push(CellSpec {
+                                                workload,
+                                                n,
+                                                p,
+                                                k,
+                                                policy,
+                                                loss,
+                                                topology,
+                                                scenario,
+                                                adapt,
+                                            });
                                         }
-                                        out.push(CellSpec {
-                                            workload,
-                                            n,
-                                            p,
-                                            k,
-                                            policy,
-                                            loss,
-                                            topology,
-                                            adapt,
-                                        });
                                     }
                                 }
                             }
@@ -362,7 +471,8 @@ impl CampaignSpec {
             * self.ps.len()
             * self.policies.len()
             * self.losses.len()
-            * self.topologies.len();
+            * self.topologies.len()
+            * self.scenarios.len();
         // Static policies cross the full k axis; adaptive ones are
         // emitted once per base point (see `cells`).
         let n_static = self.adapts.iter().filter(|a| a.is_static()).count();
@@ -384,6 +494,7 @@ impl CampaignSpec {
             ("policies", self.policies.is_empty()),
             ("losses", self.losses.is_empty()),
             ("topologies", self.topologies.is_empty()),
+            ("scenarios", self.scenarios.is_empty()),
             ("adapts", self.adapts.is_empty()),
         ] {
             if empty {
@@ -414,6 +525,28 @@ impl CampaignSpec {
         }
         for a in &self.adapts {
             a.validate().map_err(|e| format!("adapts axis: {e}"))?;
+        }
+        for s in &self.scenarios {
+            s.validate().map_err(|e| format!("scenarios axis: {e}"))?;
+        }
+        let nonstationary = self.scenarios.iter().any(|s| !s.is_stationary());
+        if nonstationary {
+            if has_slotted {
+                return Err(
+                    "shift/hetero scenarios need a packet-level workload; the slotted \
+                     abstraction has no per-superstep loss environment (drop Slotted \
+                     from the grid or use --scenario stationary)"
+                        .into(),
+                );
+            }
+            if self.topologies.iter().any(|t| *t == TopologySpec::PlanetLabLike) {
+                return Err(
+                    "shift/hetero scenarios need the uniform topology: planetlab \
+                     topologies already draw their own per-pair loss, and a regime \
+                     shift would clobber it (use --scenario stationary with planetlab)"
+                        .into(),
+                );
+            }
         }
         Ok(())
     }
@@ -446,9 +579,17 @@ struct ReplicaResult {
     /// Mean packet copies k across the run's supersteps (the realized
     /// controller trajectory; the static k otherwise).
     k_mean: f64,
+    /// Smallest / largest per-transfer copy count any phase used — the
+    /// realized per-link k spread (degenerate without per-link control).
+    k_lo: f64,
+    k_hi: f64,
     /// Final loss estimate p̂ of the adaptive controller (NaN for
     /// static cells — never aggregated there).
     p_hat: f64,
+    /// Min / max per-link loss estimate over pairs that saw traffic
+    /// (NaN for static cells, or before any traffic).
+    p_lo: f64,
+    p_hi: f64,
     /// Per-phase round counts in the fixed log₂ bins.
     hist: LogHist,
 }
@@ -493,9 +634,25 @@ pub struct CellSummary {
     /// cells, the realized controller trajectory for adaptive ones (the
     /// `k_chosen` block in persisted artifacts).
     pub k_chosen: Summary,
+    /// `{min, mean, max}` of the realized per-transfer copy counts over
+    /// the cell's replicas (the `k_spread` block of v3 artifacts):
+    /// min = smallest per-transfer k any replica's phase used,
+    /// mean = `k_chosen.mean`, max = the largest. This is the **run
+    /// envelope**: only static cells are fully degenerate
+    /// (min = mean = max = k). A global-adaptive cell that moves k over
+    /// time also shows a spread — its k trajectory — so a spread alone
+    /// does not prove per-link diversification; *within one phase*,
+    /// though, only per-link control can mix copy counts (see
+    /// `StepReport::copies_min`/`copies_max` for the per-phase view).
+    pub k_spread: Spread,
     /// Final loss-estimate p̂ across replicas; `None` for static cells
     /// (no estimator runs there).
     pub p_hat: Option<Summary>,
+    /// `{min, mean, max}` of the per-link loss estimates over replicas
+    /// (the `p_hat_spread` block of v3 artifacts): the observed
+    /// heterogeneity of the loss field. `None` for static cells; NaN
+    /// components when no pair ever saw traffic.
+    pub p_hat_spread: Option<Spread>,
     /// Per-phase round distribution pooled over every replica's
     /// supersteps (fixed log₂ bins — see `util::stats::LogHist`).
     pub rounds_hist: LogHist,
@@ -720,11 +877,15 @@ impl CampaignEngine {
         let times: Vec<f64> = rs.iter().map(|r| r.time_s).collect();
         let packets: Vec<f64> = rs.iter().map(|r| r.data_packets).collect();
         let k_means: Vec<f64> = rs.iter().map(|r| r.k_mean).collect();
-        let p_hat = if cell.adapt.is_static() {
-            None
+        let k_chosen = Summary::from_values(&k_means);
+        let k_spread = Spread::over(rs.iter().map(|r| (r.k_lo, r.k_hi)), k_chosen.mean);
+        let (p_hat, p_hat_spread) = if cell.adapt.is_static() {
+            (None, None)
         } else {
             let phats: Vec<f64> = rs.iter().map(|r| r.p_hat).collect();
-            Some(Summary::from_values(&phats))
+            let summary = Summary::from_values(&phats);
+            let spread = Spread::over(rs.iter().map(|r| (r.p_lo, r.p_hi)), summary.mean);
+            (Some(summary), Some(spread))
         };
         let mut rounds_hist = LogHist::new();
         for r in rs {
@@ -771,8 +932,10 @@ impl CampaignEngine {
             validated_frac,
             rho_pred,
             speedup_pred,
-            k_chosen: Summary::from_values(&k_means),
+            k_chosen,
+            k_spread,
             p_hat,
+            p_hat_spread,
             rounds_hist,
         }
     }
@@ -784,11 +947,22 @@ fn campaign_link() -> Link {
     Link::from_mbytes(40.0, 0.07)
 }
 
-/// Build the cell's topology for a DES replica (uniform or
-/// PlanetLab-heterogeneous, iid or bursty), drawing any per-pair
-/// parameters from the replica's stream.
+/// Build the cell's topology for a DES replica (uniform, two-tier
+/// heterogeneous, or PlanetLab-heterogeneous; iid or bursty), drawing
+/// any per-pair parameters from the replica's stream.
 fn build_topology(cell: &CellSpec, n_nodes: usize, rng: &mut Rng) -> Topology {
     let link = campaign_link();
+    // The hetero scenario replaces the uniform loss field with the
+    // deterministic two-tier checkerboard at the cell's mean p
+    // (validation already restricted it to Uniform topologies).
+    if let ScenarioSpec::Hetero { .. } = cell.scenario {
+        let (p_lo, p_hi) = cell.scenario.tiers(cell.p);
+        let burst = match cell.loss {
+            LossSpec::Bernoulli => None,
+            LossSpec::GilbertElliott { burst_len } => Some(burst_len),
+        };
+        return Topology::two_tier(n_nodes, link, p_lo, p_hi, burst);
+    }
     match (cell.topology, cell.loss) {
         (TopologySpec::Uniform, LossSpec::Bernoulli) => {
             Topology::uniform(n_nodes, link, cell.p)
@@ -859,7 +1033,11 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
             validated: !run.saturated,
             data_packets: (c * supersteps) as f64,
             k_mean: cell.k as f64,
+            k_lo: cell.k as f64,
+            k_hi: cell.k as f64,
             p_hat: f64::NAN,
+            p_lo: f64::NAN,
+            p_hi: f64::NAN,
             hist: run.rounds_hist,
         };
     }
@@ -873,6 +1051,9 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
     let topo = build_topology(cell, n_nodes, &mut rng);
     let net = Network::new(topo, rng.next_u64());
     let mut rt = BspRuntime::new(net).with_copies(cell.k).with_policy(cell.policy);
+    if let ScenarioSpec::Shift { at, to_p } = cell.scenario {
+        rt = rt.with_loss_schedule(PiecewiseStationary::step_change(cell.p, at, to_p));
+    }
     if !cell.adapt.is_static() {
         // The controller's cost model sits at the same operating point
         // the analytic predictions use: the cell's c(n) with (α, β)
@@ -891,6 +1072,10 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
         }
     }
     let run = wl.run_replica(&mut rt);
+    let (p_lo, p_hi) = rt
+        .adaptive()
+        .and_then(|a| a.spread())
+        .unwrap_or((f64::NAN, f64::NAN));
     ReplicaResult {
         speedup: run.speedup(),
         rounds: run.rounds as f64,
@@ -900,7 +1085,11 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
         validated: run.validated,
         data_packets: run.data_packets as f64,
         k_mean: run.k_mean,
+        k_lo: run.k_lo as f64,
+        k_hi: run.k_hi as f64,
         p_hat: rt.loss_estimate().unwrap_or(f64::NAN),
+        p_lo,
+        p_hi,
         hist: run.rounds_hist,
     }
 }
@@ -1138,7 +1327,7 @@ mod tests {
     #[test]
     fn adapt_axis_enumerates_innermost_and_skips_duplicate_adaptive_cells() {
         use crate::adapt::{AdaptSpec, EstimatorSpec};
-        let greedy = AdaptSpec::Greedy { k_max: 3, est: EstimatorSpec::default_beta() };
+        let greedy = AdaptSpec::greedy(3, EstimatorSpec::default_beta());
         let spec = CampaignSpec {
             workloads: vec![WorkloadSpec::Synthetic {
                 supersteps: 2,
@@ -1179,12 +1368,8 @@ mod tests {
             ks: vec![1],
             adapts: vec![
                 AdaptSpec::Static,
-                AdaptSpec::Greedy { k_max: 4, est: EstimatorSpec::default_beta() },
-                AdaptSpec::Hysteresis {
-                    k_max: 4,
-                    est: EstimatorSpec::default_beta(),
-                    band: 2.0,
-                },
+                AdaptSpec::greedy(4, EstimatorSpec::default_beta()),
+                AdaptSpec::hysteresis(4, EstimatorSpec::default_beta(), 2.0),
             ],
             replicas: 4,
             ..Default::default()
@@ -1227,7 +1412,7 @@ mod tests {
             topologies: vec![TopologySpec::Uniform, TopologySpec::PlanetLabLike],
             adapts: vec![
                 AdaptSpec::Static,
-                AdaptSpec::Greedy { k_max: 3, est: EstimatorSpec::default_beta() },
+                AdaptSpec::greedy(3, EstimatorSpec::default_beta()),
             ],
             replicas: 3,
             seed: 0xAD_A9,
@@ -1259,7 +1444,7 @@ mod tests {
         assert!(bad.validate().unwrap_err().contains("n = 0"));
         // Slotted cells cannot run adaptively (tiny_spec is slotted).
         let bad = CampaignSpec {
-            adapts: vec![AdaptSpec::Greedy { k_max: 3, est: EstimatorSpec::default_beta() }],
+            adapts: vec![AdaptSpec::greedy(3, EstimatorSpec::default_beta())],
             ..tiny_spec()
         };
         assert!(bad.validate().unwrap_err().contains("slotted"));
@@ -1276,40 +1461,27 @@ mod tests {
             ..tiny_spec()
         };
         let bad = CampaignSpec {
-            adapts: vec![AdaptSpec::Greedy { k_max: 0, est: EstimatorSpec::default_beta() }],
+            adapts: vec![AdaptSpec::greedy(0, EstimatorSpec::default_beta())],
             ..des.clone()
         };
         assert!(bad.validate().unwrap_err().contains("k_max"));
         let bad = CampaignSpec {
-            adapts: vec![AdaptSpec::Hysteresis {
-                k_max: 3,
-                est: EstimatorSpec::default_beta(),
-                band: 0.0,
-            }],
+            adapts: vec![AdaptSpec::hysteresis(3, EstimatorSpec::default_beta(), 0.0)],
             ..des.clone()
         };
         assert!(bad.validate().unwrap_err().contains("band"));
         let bad = CampaignSpec {
-            adapts: vec![AdaptSpec::Greedy {
-                k_max: 3,
-                est: EstimatorSpec::Ewma { lambda: 1.5, p0: 0.1 },
-            }],
+            adapts: vec![AdaptSpec::greedy(3, EstimatorSpec::Ewma { lambda: 1.5, p0: 0.1 })],
             ..des.clone()
         };
         assert!(bad.validate().unwrap_err().contains("lambda"));
         let bad = CampaignSpec {
-            adapts: vec![AdaptSpec::Greedy {
-                k_max: 3,
-                est: EstimatorSpec::Window { len: 0, p0: 0.1 },
-            }],
+            adapts: vec![AdaptSpec::greedy(3, EstimatorSpec::Window { len: 0, p0: 0.1 })],
             ..des.clone()
         };
         assert!(bad.validate().unwrap_err().contains("window"));
         let bad = CampaignSpec {
-            adapts: vec![AdaptSpec::Greedy {
-                k_max: 3,
-                est: EstimatorSpec::Beta { strength: 2.0, p0: 1.5 },
-            }],
+            adapts: vec![AdaptSpec::greedy(3, EstimatorSpec::Beta { strength: 2.0, p0: 1.5 })],
             ..des
         };
         assert!(bad.validate().unwrap_err().contains("p0"));
@@ -1320,6 +1492,187 @@ mod tests {
     fn engine_refuses_invalid_spec() {
         let bad = CampaignSpec { ks: vec![0], ..tiny_spec() };
         CampaignEngine::new(1).run(&bad);
+    }
+
+    fn synthetic_des_spec() -> CampaignSpec {
+        CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 4,
+                msgs_per_node: 2,
+                bytes: 2048,
+                compute_s: 0.03,
+            }],
+            ns: vec![4],
+            ps: vec![0.05],
+            ks: vec![1],
+            replicas: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scenario_axis_enumerates_outside_adapt() {
+        let spec = CampaignSpec {
+            scenarios: vec![
+                ScenarioSpec::Stationary,
+                ScenarioSpec::Shift { at: 2, to_p: 0.3 },
+            ],
+            adapts: vec![
+                AdaptSpec::Static,
+                AdaptSpec::greedy(3, EstimatorSpec::default_beta()),
+            ],
+            ..synthetic_des_spec()
+        };
+        // 1 workload × 1 n × 1 p × 1 policy × 1 loss × 1 topology ×
+        // 2 scenarios × (1 k × 1 static + 1 adaptive) = 4 cells.
+        assert_eq!(spec.n_cells(), 4);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        assert!(cells[0].scenario.is_stationary() && cells[1].scenario.is_stationary());
+        assert!(!cells[2].scenario.is_stationary() && !cells[3].scenario.is_stationary());
+        assert!(cells[0].adapt.is_static() && !cells[1].adapt.is_static());
+        assert_eq!(ScenarioSpec::Shift { at: 2, to_p: 0.3 }.label(), "shift(at=2,to=0.3)");
+        assert_eq!(ScenarioSpec::Hetero { spread: 0.9 }.label(), "hetero(s=0.9)");
+    }
+
+    #[test]
+    fn shift_scenario_degrades_rounds_after_the_shift() {
+        // Same base p, one stationary cell and one shifting to 40 %
+        // mid-run: the shifted cell must need more rounds (and more
+        // data packets) while still completing and validating.
+        let spec = CampaignSpec {
+            scenarios: vec![
+                ScenarioSpec::Stationary,
+                ScenarioSpec::Shift { at: 2, to_p: 0.4 },
+            ],
+            replicas: 6,
+            ..synthetic_des_spec()
+        };
+        let out = CampaignEngine::new(2).run(&spec);
+        assert_eq!(out.len(), 2);
+        for s in &out {
+            assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+            assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
+        }
+        let stationary = &out[0];
+        let shifted = &out[1];
+        assert!(stationary.cell.scenario.is_stationary());
+        assert!(
+            shifted.rounds.mean > stationary.rounds.mean,
+            "shift to 0.4 must cost rounds: {} vs {}",
+            shifted.rounds.mean,
+            stationary.rounds.mean
+        );
+    }
+
+    #[test]
+    fn hetero_scenario_spreads_per_link_k() {
+        // Two-tier loss with a per-link greedy controller: the realized
+        // k_spread must open up (min < max) and the p̂ spread must
+        // bracket the two tiers; a static cell stays degenerate.
+        let spec = CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 12,
+                msgs_per_node: 3,
+                bytes: 262_144,
+                compute_s: 0.05,
+            }],
+            ns: vec![4],
+            ps: vec![0.2],
+            ks: vec![2],
+            scenarios: vec![ScenarioSpec::Hetero { spread: 0.9 }],
+            adapts: vec![
+                AdaptSpec::Static,
+                AdaptSpec::greedy(4, EstimatorSpec::default_beta()).per_link(),
+            ],
+            replicas: 4,
+            seed: 0x5EED,
+            ..Default::default()
+        };
+        let out = CampaignEngine::new(2).run(&spec);
+        assert_eq!(out.len(), 2);
+        let stat = &out[0];
+        let pl = &out[1];
+        assert!(stat.cell.adapt.is_static());
+        assert_eq!(stat.k_spread.min, 2.0);
+        assert_eq!(stat.k_spread.max, 2.0);
+        assert_eq!(stat.k_spread.mean, 2.0);
+        assert!(stat.p_hat_spread.is_none());
+        assert_eq!(pl.cell.adapt.label(), "perlink-greedy(kmax=4,beta(2,0.1))");
+        assert!(
+            pl.k_spread.min < pl.k_spread.max,
+            "per-link control never diversified: {:?}",
+            pl.k_spread
+        );
+        assert!(pl.k_spread.min >= 1.0 && pl.k_spread.max <= 4.0);
+        assert!(
+            pl.k_spread.min <= pl.k_spread.mean && pl.k_spread.mean <= pl.k_spread.max
+        );
+        let ps = pl.p_hat_spread.expect("adaptive cells report the p̂ spread");
+        // Tiers are 0.02 and 0.38: the observed spread must separate.
+        assert!(ps.min < 0.15 && ps.max > 0.2, "p̂ spread {:?}", ps);
+        for s in &out {
+            assert_eq!(s.completed_frac, 1.0);
+            assert_eq!(s.validated_frac, 1.0);
+        }
+    }
+
+    #[test]
+    fn scenario_cells_are_worker_count_invariant() {
+        let spec = CampaignSpec {
+            scenarios: vec![
+                ScenarioSpec::Stationary,
+                ScenarioSpec::Shift { at: 2, to_p: 0.3 },
+                ScenarioSpec::Hetero { spread: 0.8 },
+            ],
+            adapts: vec![
+                AdaptSpec::Static,
+                AdaptSpec::greedy(3, EstimatorSpec::default_beta()).per_link(),
+            ],
+            ..synthetic_des_spec()
+        };
+        let a = CampaignEngine::new(1).run(&spec);
+        let b = CampaignEngine::new(5).run(&spec);
+        assert_eq!(a, b, "scenario cells must stay replica-deterministic");
+    }
+
+    #[test]
+    fn validate_rejects_incompatible_scenarios() {
+        // Non-stationary scenarios on slotted cells (tiny_spec is
+        // slotted).
+        let bad = CampaignSpec {
+            scenarios: vec![ScenarioSpec::Shift { at: 2, to_p: 0.3 }],
+            ..tiny_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("packet-level"));
+        // ... on planetlab topologies (already heterogeneous).
+        let bad = CampaignSpec {
+            scenarios: vec![ScenarioSpec::Hetero { spread: 0.5 }],
+            topologies: vec![TopologySpec::PlanetLabLike],
+            ..synthetic_des_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("uniform topology"));
+        // Malformed knobs.
+        let bad = CampaignSpec {
+            scenarios: vec![ScenarioSpec::Shift { at: 0, to_p: 0.3 }],
+            ..synthetic_des_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("superstep 0"));
+        let bad = CampaignSpec {
+            scenarios: vec![ScenarioSpec::Shift { at: 2, to_p: 1.0 }],
+            ..synthetic_des_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("outside [0, 1)"));
+        let bad = CampaignSpec {
+            scenarios: vec![ScenarioSpec::Hetero { spread: 0.0 }],
+            ..synthetic_des_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("spread"));
+        let bad = CampaignSpec { scenarios: vec![], ..synthetic_des_spec() };
+        assert!(bad.validate().unwrap_err().contains("scenarios"));
+        // Stationary scenarios stay allowed everywhere.
+        assert!(synthetic_des_spec().validate().is_ok());
+        assert!(tiny_spec().validate().is_ok());
     }
 
     #[test]

@@ -30,8 +30,8 @@ pub mod queue;
 pub mod sweep;
 
 pub use campaign::{
-    CampaignEngine, CampaignSpec, CellSpec, CellSummary, LossSpec, RhoCache, TopologySpec,
-    WorkloadSpec,
+    CampaignEngine, CampaignSpec, CellSpec, CellSummary, LossSpec, RhoCache, ScenarioSpec,
+    Spread, TopologySpec, WorkloadSpec,
 };
 pub use queue::WorkQueue;
 pub use sweep::{Backend, SweepCoordinator, SweepMetrics};

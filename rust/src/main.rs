@@ -14,12 +14,16 @@
 //!               [--ns 2,4,8] [--ps 0.05,0.1] [--ks 1,2,3]
 //!               [--out out.json]                 persist JSON+CSV artifacts
 //!               [--sem-target X [--max-replicas M]]   adaptive replicas
-//!               [--adapt static|greedy|hysteresis]    closed-loop k control
+//!               [--adapt static|greedy|hysteresis|    closed-loop k control
+//!                        perlink-greedy|perlink-hysteresis]
 //!                 [--kmax K] [--band B]               (adds the adaptive
 //!                 [--estimator beta|window|ewma]       policy alongside the
 //!                 [--est-prior P] [--est-strength S]   static grid; needs a
 //!                 [--est-window N] [--est-lambda L]    packet-level workload,
 //!                                                      default: synthetic)
+//!               [--scenario stationary,shift,hetero]  loss-environment axis
+//!                 [--shift-at STEP] [--shift-p P]     (regime shift target)
+//!                 [--spread S]                        (hetero tier spread)
 //!               Monte-Carlo campaign grid (worker-count invariant)
 //! lbsp diff <baseline.json> <candidate.json> [--threshold Z]
 //!               flag speedup-mean regressions beyond Z combined sigma
@@ -34,7 +38,9 @@
 
 use lbsp::adapt::{AdaptSpec, EstimatorSpec};
 use lbsp::bsp::BspRuntime;
-use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, SweepCoordinator, WorkloadSpec};
+use lbsp::coordinator::{
+    CampaignEngine, CampaignSpec, LossSpec, ScenarioSpec, SweepCoordinator, WorkloadSpec,
+};
 use lbsp::measure::CampaignConfig;
 use lbsp::model::lbsp::{optimal_k_min_krho, optimal_k_speedup};
 use lbsp::model::rho::rho_selective_pk;
@@ -421,7 +427,9 @@ fn campaign_workload(name: &str, o: &Opts) -> (WorkloadSpec, Vec<usize>) {
 
 /// `--adapt`/estimator knobs → the campaign's duplication-control axis.
 /// A non-static policy rides alongside `Static`, so one run compares
-/// the closed loop against the full static-k grid.
+/// the closed loop against the full static-k grid. A `perlink-` prefix
+/// (or bare `perlink`) runs the same controller once per destination
+/// link instead of once globally.
 fn campaign_adapts(o: &Opts, ks: &[u32]) -> Vec<AdaptSpec> {
     let name = o.str("adapt", "static");
     if name == "static" {
@@ -436,29 +444,59 @@ fn campaign_adapts(o: &Opts, ks: &[u32]) -> Vec<AdaptSpec> {
     };
     let grid_kmax = ks.iter().copied().max().unwrap_or(1).max(4);
     let k_max = o.usize("kmax", grid_kmax as usize) as u32;
-    let adaptive = match name.as_str() {
-        "greedy" => AdaptSpec::Greedy { k_max, est },
-        "hysteresis" | "hyst" => {
-            AdaptSpec::Hysteresis { k_max, est, band: o.f64("band", 3.0) }
-        }
-        other => panic!("unknown adapt policy {other:?} (static|greedy|hysteresis)"),
+    let (base, per_link) = match name.strip_prefix("perlink-") {
+        Some(rest) => (rest.to_string(), true),
+        None if name == "perlink" => ("greedy".to_string(), true),
+        None => (name, false),
     };
+    let adaptive = match base.as_str() {
+        "greedy" => AdaptSpec::greedy(k_max, est),
+        "hysteresis" | "hyst" => AdaptSpec::hysteresis(k_max, est, o.f64("band", 3.0)),
+        other => panic!(
+            "unknown adapt policy {other:?} \
+             (static|greedy|hysteresis|perlink-greedy|perlink-hysteresis)"
+        ),
+    };
+    let adaptive = if per_link { adaptive.per_link() } else { adaptive };
     vec![AdaptSpec::Static, adaptive]
+}
+
+/// `--scenario` (comma-separated names) → the campaign's scenario axis.
+/// `stationary` is always valid; `shift` takes `--shift-at`/`--shift-p`
+/// and `hetero` takes `--spread`. Non-stationary scenarios need a
+/// packet-level workload on a uniform topology (validated).
+fn campaign_scenarios(o: &Opts) -> Vec<ScenarioSpec> {
+    let names = o.str("scenario", "stationary");
+    names
+        .split(',')
+        .map(|name| match name.trim() {
+            "stationary" | "" => ScenarioSpec::Stationary,
+            "shift" => ScenarioSpec::Shift {
+                at: o.usize("shift-at", 8),
+                to_p: o.f64("shift-p", 0.3),
+            },
+            "hetero" => ScenarioSpec::Hetero { spread: o.f64("spread", 0.9) },
+            other => panic!("unknown scenario {other:?} (stationary|shift|hetero)"),
+        })
+        .collect()
 }
 
 fn cmd_campaign(args: &Args) {
     let o = Opts::new(args, "campaign");
     let workers = o.usize("workers", 4);
-    // Adaptive control needs a packet-level DES workload; keep `slotted`
-    // as the fast default only for plain static grids.
-    let default_workload =
-        if o.str("adapt", "static") == "static" { "slotted" } else { "synthetic" };
+    // Adaptive control and non-stationary scenarios need a packet-level
+    // DES workload; keep `slotted` as the fast default only for plain
+    // static/stationary grids.
+    let needs_des = o.str("adapt", "static") != "static"
+        || o.str("scenario", "stationary").split(',').any(|s| s.trim() != "stationary");
+    let default_workload = if needs_des { "synthetic" } else { "slotted" };
     let (workload, default_ns) = campaign_workload(&o.str("workload", default_workload), &o);
     let sem_target = args.get("sem-target").map(|s| {
         s.parse::<f64>().unwrap_or_else(|e| panic!("--sem-target {s}: {e}"))
     });
     let ks = args.get_list_or("ks", &[1u32, 2, 3]);
     let adapts = campaign_adapts(&o, &ks);
+    let scenarios = campaign_scenarios(&o);
     let spec = CampaignSpec {
         workloads: vec![workload],
         ns: args.get_list_or("ns", &default_ns),
@@ -468,6 +506,7 @@ fn cmd_campaign(args: &Args) {
             LossSpec::Bernoulli,
             LossSpec::GilbertElliott { burst_len: o.f64("burst", 8.0) },
         ],
+        scenarios,
         replicas: o.usize("replicas", 8),
         seed: o.usize("seed", 0x9_CA4B) as u64,
         sem_target,

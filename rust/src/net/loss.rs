@@ -64,6 +64,14 @@ pub struct GilbertElliott {
     pub loss_good: f64,
     pub loss_bad: f64,
     in_bad: bool,
+    /// The burst length this channel was *asked* for (mean Bad dwell in
+    /// packets). Usually `1/p_bg`, but when a high mean loss saturates
+    /// `p_gb` the chain re-solves `p_bg` away from `1/burst` — keeping
+    /// the request here lets a mean-loss retune
+    /// ([`crate::net::topology::Topology::set_mean_loss_all`]) restore
+    /// the configured burst character instead of inheriting the
+    /// saturated segment's drifted dwell.
+    burst_len: f64,
 }
 
 impl GilbertElliott {
@@ -71,20 +79,55 @@ impl GilbertElliott {
         for v in [p_gb, p_bg, loss_good, loss_bad] {
             assert!((0.0..=1.0).contains(&v), "probability {v}");
         }
-        GilbertElliott { p_gb, p_bg, loss_good, loss_bad, in_bad: false }
+        GilbertElliott {
+            p_gb,
+            p_bg,
+            loss_good,
+            loss_bad,
+            in_bad: false,
+            burst_len: 1.0 / p_bg.max(1e-9),
+        }
+    }
+
+    /// The mean Bad-state dwell this channel was configured for: the
+    /// `burst_len` passed to [`GilbertElliott::with_mean_loss`], or
+    /// `1/p_bg` for a hand-built chain.
+    pub fn burst_len(&self) -> f64 {
+        self.burst_len
     }
 
     /// Construct a bursty channel with a target mean loss and burst factor:
     /// Bad-state dwell ~ `burst_len` packets, calibrated so the stationary
-    /// loss equals `mean_loss`. `loss_bad` is fixed at 1.0 (outage bursts).
+    /// loss equals `mean_loss` **exactly**. `loss_bad` is fixed at 1.0
+    /// (outage bursts).
+    ///
+    /// Both Markov transitions are kept inside [0, 1] without breaking
+    /// the calibration: a burst length below one packet clamps
+    /// `p_bg` to 1 (the shortest representable dwell), and when the
+    /// implied `p_gb = mean·p_bg/(1−mean)` would exceed 1 (high mean
+    /// loss at short bursts) the chain is re-solved with `p_gb = 1` and
+    /// `p_bg = (1−mean)/mean` instead — same stationary loss, dwell as
+    /// close to the request as the two-state chain permits. The old
+    /// one-sided `p_gb.min(1.0)` clamp silently shifted the mean.
     pub fn with_mean_loss(mean_loss: f64, burst_len: f64) -> Self {
-        assert!(burst_len >= 1.0);
-        assert!((0.0..1.0).contains(&mean_loss));
+        assert!(burst_len > 0.0, "burst length {burst_len}");
+        assert!((0.0..1.0).contains(&mean_loss), "mean loss {mean_loss}");
         // Stationary: pi_bad = p_gb/(p_gb+p_bg); loss = pi_bad * 1.0.
-        let p_bg = 1.0 / burst_len;
+        let p_bg = (1.0 / burst_len).min(1.0);
         // mean = p_gb / (p_gb + p_bg)  =>  p_gb = mean * p_bg / (1 - mean).
         let p_gb = mean_loss * p_bg / (1.0 - mean_loss);
-        GilbertElliott::new(p_gb.min(1.0), p_bg, 0.0, 1.0)
+        let mut ge = if p_gb <= 1.0 {
+            GilbertElliott::new(p_gb, p_bg, 0.0, 1.0)
+        } else {
+            // p_gb saturated (mean > 1/(1+burst_len) territory): pin it
+            // and re-solve p_bg so the stationary mean still holds
+            // exactly. mean = 1 / (1 + p_bg)  =>  p_bg = (1-mean)/mean.
+            GilbertElliott::new(1.0, (1.0 - mean_loss) / mean_loss, 0.0, 1.0)
+        };
+        // Remember the *requested* dwell (not the realized 1/p_bg) so
+        // later mean-loss retunes don't inherit saturation drift.
+        ge.burst_len = burst_len;
+        ge
     }
 
     pub fn stationary_bad(&self) -> f64 {
@@ -109,6 +152,78 @@ impl LossModel for GilbertElliott {
     fn mean_loss(&self) -> f64 {
         let pi_bad = self.stationary_bad();
         pi_bad * self.loss_bad + (1.0 - pi_bad) * self.loss_good
+    }
+}
+
+/// A piecewise-stationary mean-loss schedule: the paper's own PlanetLab
+/// traces (§III) show loss regimes shifting over a run, which no
+/// stationary model captures. The schedule maps superstep indices to
+/// mean-loss segments; the BSP runtime applies it at superstep
+/// boundaries by re-tuning every pair's loss process to the segment's
+/// mean (kind-preserving — Bernoulli stays iid, Gilbert–Elliott keeps
+/// its burst length; see `Topology::set_mean_loss_all`).
+///
+/// Kept as plain `(first_superstep, mean_loss)` data so the schedule is
+/// `Clone + Send` and campaign cells can carry it by value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PiecewiseStationary {
+    /// `(first superstep, mean loss)`, strictly increasing in the first
+    /// component, starting at superstep 0.
+    segments: Vec<(usize, f64)>,
+}
+
+impl PiecewiseStationary {
+    /// Build from `(first_superstep, mean_loss)` segments. The first
+    /// segment must start at superstep 0 (every step needs a regime),
+    /// starts must be strictly increasing, and every mean must lie in
+    /// [0, 1) — 1.0 would make the reliable phase non-terminating.
+    pub fn new(segments: Vec<(usize, f64)>) -> PiecewiseStationary {
+        assert!(!segments.is_empty(), "schedule needs at least one segment");
+        assert_eq!(segments[0].0, 0, "first segment must start at superstep 0");
+        for w in segments.windows(2) {
+            assert!(
+                w[0].0 < w[1].0,
+                "segment starts must be strictly increasing ({} then {})",
+                w[0].0,
+                w[1].0
+            );
+        }
+        for &(_, p) in &segments {
+            assert!((0.0..1.0).contains(&p), "mean loss {p} outside [0, 1)");
+        }
+        PiecewiseStationary { segments }
+    }
+
+    /// The classic two-regime shift: `p0` until `at`, `p1` from then on.
+    pub fn step_change(p0: f64, at: usize, p1: f64) -> PiecewiseStationary {
+        assert!(at >= 1, "shift at superstep 0 is just a stationary {p1}");
+        PiecewiseStationary::new(vec![(0, p0), (at, p1)])
+    }
+
+    /// Index of the segment governing `step`.
+    pub fn segment_at(&self, step: usize) -> usize {
+        match self.segments.binary_search_by_key(&step, |&(s, _)| s) {
+            Ok(i) => i,
+            Err(i) => i - 1, // i >= 1: segment 0 starts at 0.
+        }
+    }
+
+    /// Mean loss governing `step`.
+    pub fn mean_at(&self, step: usize) -> f64 {
+        self.segments[self.segment_at(step)].1
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Time-average mean loss over the first `steps` supersteps (for
+    /// reporting; the per-step mean is what the simulation applies).
+    pub fn time_mean(&self, steps: usize) -> f64 {
+        if steps == 0 {
+            return self.segments[0].1;
+        }
+        (0..steps).map(|s| self.mean_at(s)).sum::<f64>() / steps as f64
     }
 }
 
@@ -192,6 +307,70 @@ mod tests {
             run_len(&ge_losses),
             run_len(&be_losses)
         );
+    }
+
+    #[test]
+    fn gilbert_elliott_calibration_holds_at_short_bursts() {
+        // burst_len ≤ 1: p_bg clamps to 1 (one-packet dwells) and the
+        // stationary mean must still be exact — the old code left p_bg
+        // unclamped, so burst_len = 0.5 would have produced p_bg = 2
+        // and silently broken the two-state Markov invariant.
+        for &(mean, burst) in &[(0.3, 1.0), (0.3, 0.5), (0.1, 0.25), (0.05, 1.0)] {
+            let ge = GilbertElliott::with_mean_loss(mean, burst);
+            assert!(ge.p_bg <= 1.0 && ge.p_bg >= 0.0, "p_bg {}", ge.p_bg);
+            assert!(ge.p_gb <= 1.0 && ge.p_gb >= 0.0, "p_gb {}", ge.p_gb);
+            assert!(
+                (ge.mean_loss() - mean).abs() < 1e-12,
+                "mean {} for target {mean} at burst {burst}",
+                ge.mean_loss()
+            );
+        }
+        // High mean at a short burst: the naive p_gb = m·p_bg/(1−m)
+        // exceeds 1; the chain must re-solve (p_gb = 1) instead of
+        // clamping the mean away.
+        let ge = GilbertElliott::with_mean_loss(0.75, 1.0);
+        assert_eq!(ge.p_gb, 1.0);
+        assert!((ge.p_bg - (1.0 - 0.75) / 0.75).abs() < 1e-12);
+        assert!((ge.mean_loss() - 0.75).abs() < 1e-12, "mean {}", ge.mean_loss());
+        // And the empirical rate agrees at the boundary.
+        let mut m = GilbertElliott::with_mean_loss(0.3, 0.5);
+        let mut rng = Rng::new(17);
+        let n = 400_000;
+        let lost = (0..n).filter(|_| m.lose(&mut rng)).count();
+        let rate = lost as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn piecewise_schedule_segments_and_means() {
+        let sched = PiecewiseStationary::new(vec![(0, 0.05), (10, 0.3), (20, 0.1)]);
+        assert_eq!(sched.n_segments(), 3);
+        assert_eq!(sched.segment_at(0), 0);
+        assert_eq!(sched.segment_at(9), 0);
+        assert_eq!(sched.segment_at(10), 1);
+        assert_eq!(sched.segment_at(19), 1);
+        assert_eq!(sched.segment_at(20), 2);
+        assert_eq!(sched.segment_at(1000), 2);
+        assert_eq!(sched.mean_at(3), 0.05);
+        assert_eq!(sched.mean_at(15), 0.3);
+        assert_eq!(sched.mean_at(25), 0.1);
+        // Time average over 20 steps: 10 × 0.05 + 10 × 0.3.
+        assert!((sched.time_mean(20) - 0.175).abs() < 1e-12);
+        let shift = PiecewiseStationary::step_change(0.05, 8, 0.35);
+        assert_eq!(shift.mean_at(7), 0.05);
+        assert_eq!(shift.mean_at(8), 0.35);
+    }
+
+    #[test]
+    #[should_panic]
+    fn piecewise_schedule_rejects_late_first_segment() {
+        PiecewiseStationary::new(vec![(1, 0.1)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn piecewise_schedule_rejects_unsorted_segments() {
+        PiecewiseStationary::new(vec![(0, 0.1), (5, 0.2), (5, 0.3)]);
     }
 
     #[test]

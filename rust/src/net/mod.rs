@@ -24,6 +24,6 @@ pub mod topology;
 pub mod transport;
 
 pub use link::Link;
-pub use loss::{Bernoulli, GilbertElliott, LossModel, Perfect};
+pub use loss::{Bernoulli, GilbertElliott, LossModel, Perfect, PiecewiseStationary};
 pub use packet::{NodeId, Packet, PacketKind};
 pub use topology::Topology;

@@ -89,9 +89,31 @@ fn untag(seq: u64) -> (u64, u64) {
     (seq >> 24, seq & 0xFF_FFFF)
 }
 
-/// Run one reliable communication phase to completion (or abort).
+/// Run one reliable communication phase to completion (or abort), with
+/// one copy count for every transfer (`cfg.copies`).
 pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -> PhaseReport {
+    run_phase_with_copies(net, transfers, cfg, None)
+}
+
+/// [`run_phase`] with **per-transfer** copy counts: `copies[idx]` is
+/// the duplication factor of `transfers[idx]`, for both its data
+/// packets and the acknowledgments the receiver returns (the paper's
+/// `p_s^k = (1−p^k)²` holds per link at that link's k). `None` falls
+/// back to the uniform `cfg.copies`. This is the transport half of
+/// per-destination duplication control — a per-link k controller hands
+/// each transfer the k its destination pair's loss estimate warrants.
+pub fn run_phase_with_copies(
+    net: &mut Network,
+    transfers: &[Transfer],
+    cfg: &PhaseConfig,
+    copies: Option<&[u32]>,
+) -> PhaseReport {
     assert!(cfg.copies >= 1, "k must be >= 1");
+    if let Some(ks) = copies {
+        assert_eq!(ks.len(), transfers.len(), "one copy count per transfer");
+        assert!(ks.iter().all(|&k| k >= 1), "every per-transfer k must be >= 1");
+    }
+    let k_of = |idx: usize| copies.map_or(cfg.copies, |ks| ks[idx]);
     assert!(transfers.len() < (1 << 24), "phase too large for seq tagging");
     let phase = PHASE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let t0 = net.now();
@@ -116,7 +138,7 @@ pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -
             if !resend {
                 continue;
             }
-            for copy in 0..cfg.copies {
+            for copy in 0..k_of(idx) {
                 net.send(Packet::data(tr.src, tr.dst, tag(phase, idx as u64), copy, tr.bytes));
             }
         }
@@ -146,7 +168,7 @@ pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -
                         if *e != round {
                             *e = round;
                             let tr = &transfers[idx as usize];
-                            for copy in 0..cfg.copies {
+                            for copy in 0..k_of(idx as usize) {
                                 net.send(Packet::ack(tr.dst, tr.src, pkt.seq, copy));
                             }
                         }
@@ -326,6 +348,85 @@ mod tests {
             mean_rounds.mean(),
             expect
         );
+    }
+
+    #[test]
+    fn per_transfer_copies_duplicate_each_link_at_its_own_k() {
+        // Lossless network: round 1 sends exactly k_i data copies of
+        // transfer i and k_i ack copies back — directly observable on
+        // the pair counters.
+        let mut net = net_with_loss(3, 0.0, 4);
+        let transfers = [
+            Transfer { src: 0, dst: 1, bytes: 1024 },
+            Transfer { src: 0, dst: 2, bytes: 1024 },
+            Transfer { src: 1, dst: 2, bytes: 1024 },
+        ];
+        let ks = [1u32, 3, 2];
+        let r =
+            run_phase_with_copies(&mut net, &transfers, &PhaseConfig::default(), Some(&ks[..]));
+        assert!(r.completed);
+        assert_eq!(r.rounds, 1);
+        assert_eq!(r.data_packets_sent, 6); // 1 + 3 + 2 wire copies
+        assert_eq!(r.ack_packets_sent, 6); // acks mirror per-link k
+        let (sent, _) = net.pair_counters();
+        assert_eq!(sent[1], 1); // 0 -> 1 data
+        assert_eq!(sent[2], 3); // 0 -> 2 data
+        assert_eq!(sent[3 + 2], 2); // 1 -> 2 data
+        assert_eq!(sent[3], 1); // 1 -> 0 ack mirrors k=1
+        assert_eq!(sent[2 * 3], 3); // 2 -> 0 ack mirrors k=3
+        assert_eq!(sent[2 * 3 + 1], 2); // 2 -> 1 ack mirrors k=2
+    }
+
+    #[test]
+    fn per_transfer_copies_protect_the_lossy_link() {
+        // One clean and one very lossy transfer: k = [1, 4] must beat
+        // uniform k = 1 on rounds, averaged over seeds.
+        let mut uniform_rounds = 0u64;
+        let mut targeted_rounds = 0u64;
+        for seed in 0..30 {
+            let mk = |seed| {
+                let mut topo_map = vec![0.0; 9];
+                topo_map[1] = 0.0; // 0 -> 1 clean
+                topo_map[2] = 0.5; // 0 -> 2 lossy (and 2 -> 0 for acks)
+                topo_map[2 * 3] = 0.5;
+                Network::new(
+                    crate::net::topology::Topology::with_loss_map(
+                        3,
+                        Link::from_mbytes(100.0, 0.01),
+                        &topo_map,
+                        None,
+                    ),
+                    seed,
+                )
+            };
+            let transfers = [
+                Transfer { src: 0, dst: 1, bytes: 1024 },
+                Transfer { src: 0, dst: 2, bytes: 1024 },
+            ];
+            let mut net = mk(7000 + seed);
+            let r = run_phase(&mut net, &transfers, &PhaseConfig::default());
+            uniform_rounds += r.rounds as u64;
+            let mut net = mk(7000 + seed);
+            let r = run_phase_with_copies(
+                &mut net,
+                &transfers,
+                &PhaseConfig::default(),
+                Some(&[1, 4][..]),
+            );
+            targeted_rounds += r.rounds as u64;
+        }
+        assert!(
+            targeted_rounds < uniform_rounds,
+            "targeted {targeted_rounds} vs uniform {uniform_rounds}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "one copy count per transfer")]
+    fn per_transfer_copies_length_is_checked() {
+        let mut net = net_with_loss(2, 0.0, 1);
+        let transfers = [Transfer { src: 0, dst: 1, bytes: 64 }];
+        run_phase_with_copies(&mut net, &transfers, &PhaseConfig::default(), Some(&[1, 2][..]));
     }
 
     #[test]

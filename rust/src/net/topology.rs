@@ -101,6 +101,87 @@ impl Topology {
         }
     }
 
+    /// Identical links with an explicit per-pair mean-loss map
+    /// (row-major `src·n + dst`, diagonal entries ignored): the direct
+    /// way to build a *deterministically* heterogeneous topology — the
+    /// planetlab constructors draw theirs from an rng. `burst_len`
+    /// turns every pair into a Gilbert–Elliott channel calibrated to
+    /// its map entry; `None` keeps iid Bernoulli.
+    pub fn with_loss_map(
+        n: usize,
+        link: Link,
+        map: &[f64],
+        burst_len: Option<f64>,
+    ) -> Topology {
+        assert!(n >= 1);
+        assert_eq!(map.len(), n * n, "loss map must be n×n row-major");
+        let loss = (0..n * n)
+            .map(|idx| {
+                // The diagonal never carries traffic; normalize it to a
+                // harmless 0 so callers can pass any placeholder there.
+                let p = if idx / n == idx % n { 0.0 } else { map[idx] };
+                match burst_len {
+                    None => PairLoss::Bernoulli(Bernoulli::new(p)),
+                    Some(b) => PairLoss::GilbertElliott(GilbertElliott::with_mean_loss(p, b)),
+                }
+            })
+            .collect();
+        Topology { n, links: vec![link; n * n], loss }
+    }
+
+    /// Two-tier heterogeneous topology: pair `(i, j)` runs at `p_lo`
+    /// when `i + j` is even and `p_hi` when odd (a checkerboard, so the
+    /// assignment is symmetric and every node sees a mix of clean and
+    /// lossy destinations). Note the tiers are *not* equally populated:
+    /// the diagonal eats even-parity slots, so (for even n) `n²/2` of
+    /// the `n(n−1)` directed pairs run at `p_hi` but only `n²/2 − n`
+    /// at `p_lo`, putting the off-diagonal mean at
+    /// `(p_lo·(n−2) + p_hi·n)/(2(n−1))` — above the tier midpoint.
+    /// This is the campaign's `hetero` scenario — the deterministic
+    /// two-population caricature of the paper's PlanetLab
+    /// heterogeneity, extreme enough that one global k cannot suit
+    /// both tiers.
+    pub fn two_tier(
+        n: usize,
+        link: Link,
+        p_lo: f64,
+        p_hi: f64,
+        burst_len: Option<f64>,
+    ) -> Topology {
+        let map: Vec<f64> = (0..n * n)
+            .map(|idx| if (idx / n + idx % n) % 2 == 0 { p_lo } else { p_hi })
+            .collect();
+        Topology::with_loss_map(n, link, &map, burst_len)
+    }
+
+    /// Re-tune every off-diagonal pair to mean loss `p`, preserving
+    /// each pair's process *kind*: Bernoulli stays iid at `p`;
+    /// Gilbert–Elliott is re-calibrated to `p` at its current burst
+    /// length (`1/p_bg`, the outage-burst dwell `with_mean_loss`
+    /// encodes). This is the [`crate::net::loss::PiecewiseStationary`]
+    /// schedule's apply step — a regime shift changes the *level* of
+    /// the loss process, not its character.
+    pub fn set_mean_loss_all(&mut self, p: f64) {
+        assert!((0.0..1.0).contains(&p), "mean loss {p}");
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i == j {
+                    continue;
+                }
+                let slot = &mut self.loss[i * self.n + j];
+                *slot = match *slot {
+                    PairLoss::Bernoulli(_) => PairLoss::Bernoulli(Bernoulli::new(p)),
+                    // The channel's *configured* burst length — not the
+                    // realized 1/p_bg, which drifts when a high-mean
+                    // segment saturates p_gb and re-solves p_bg.
+                    PairLoss::GilbertElliott(ge) => PairLoss::GilbertElliott(
+                        GilbertElliott::with_mean_loss(p, ge.burst_len()),
+                    ),
+                };
+            }
+        }
+    }
+
     /// Per-pair parameters drawn from PlanetLab-like empirical ranges.
     /// Symmetric: (i,j) and (j,i) share parameters, as end-to-end paths do
     /// to first order.
@@ -274,5 +355,92 @@ mod tests {
     fn self_link_panics() {
         let t = Topology::uniform(3, Link::default(), 0.0);
         t.link(1, 1);
+    }
+
+    #[test]
+    fn two_tier_is_a_symmetric_checkerboard() {
+        let t = Topology::two_tier(4, Link::default(), 0.02, 0.4, None);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    continue;
+                }
+                let want = if (i + j) % 2 == 0 { 0.02 } else { 0.4 };
+                assert_eq!(t.mean_loss(i, j), want, "pair {i}->{j}");
+                assert_eq!(t.mean_loss(i, j), t.mean_loss(j, i));
+            }
+        }
+        // Every node sees both tiers (the point of the checkerboard).
+        for i in 0..4 {
+            let ps: Vec<f64> =
+                (0..4).filter(|&j| j != i).map(|j| t.mean_loss(i, j)).collect();
+            assert!(ps.contains(&0.02) && ps.contains(&0.4), "node {i}: {ps:?}");
+        }
+        // Bursty variant keeps the same per-pair means.
+        let b = Topology::two_tier(4, Link::default(), 0.02, 0.4, Some(8.0));
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    assert!((b.mean_loss(i, j) - t.mean_loss(i, j)).abs() < 1e-12);
+                    assert!(matches!(b.loss[i * 4 + j], PairLoss::GilbertElliott(_)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loss_map_sets_each_pair_and_ignores_diagonal() {
+        let mut map = vec![0.7; 9]; // diagonal placeholders are ignored
+        map[1] = 0.1; // 0 -> 1
+        map[5] = 0.2; // 1 -> 2
+        let t = Topology::with_loss_map(3, Link::default(), &map, None);
+        assert_eq!(t.mean_loss(0, 1), 0.1);
+        assert_eq!(t.mean_loss(1, 2), 0.2);
+        assert_eq!(t.mean_loss(2, 0), 0.7);
+        assert!((t.global_mean_loss() - (0.1 + 0.2 + 4.0 * 0.7) / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_mean_loss_all_preserves_process_kind() {
+        let mut iid = Topology::uniform(3, Link::default(), 0.05);
+        iid.set_mean_loss_all(0.3);
+        assert!((iid.global_mean_loss() - 0.3).abs() < 1e-12);
+        assert!(matches!(iid.loss[1], PairLoss::Bernoulli(_)));
+
+        let mut ge = Topology::uniform_bursty(3, Link::default(), 0.05, 8.0);
+        ge.set_mean_loss_all(0.3);
+        assert!((ge.global_mean_loss() - 0.3).abs() < 1e-12);
+        match ge.loss[1] {
+            PairLoss::GilbertElliott(g) => {
+                // Burst length survives the retune.
+                assert!((g.burst_len() - 8.0).abs() < 1e-9, "burst {}", g.burst_len());
+                assert!((1.0 / g.p_bg - 8.0).abs() < 1e-9, "dwell {}", 1.0 / g.p_bg);
+            }
+            ref other => panic!("kind changed: {other:?}"),
+        }
+        // A segment whose mean saturates the chain (p_gb pinned at 1,
+        // p_bg re-solved away from 1/burst) must not leak its drifted
+        // dwell into later segments: the retune restores the configured
+        // burst length once the mean drops back.
+        ge.set_mean_loss_all(0.9);
+        match ge.loss[1] {
+            PairLoss::GilbertElliott(g) => {
+                assert_eq!(g.p_gb, 1.0, "0.9 mean at burst 8 saturates p_gb");
+                assert!((g.mean_loss() - 0.9).abs() < 1e-12);
+                assert!((g.burst_len() - 8.0).abs() < 1e-9);
+            }
+            ref other => panic!("kind changed: {other:?}"),
+        }
+        ge.set_mean_loss_all(0.05);
+        match ge.loss[1] {
+            PairLoss::GilbertElliott(g) => {
+                assert!((g.mean_loss() - 0.05).abs() < 1e-12);
+                assert!((1.0 / g.p_bg - 8.0).abs() < 1e-9, "dwell {}", 1.0 / g.p_bg);
+            }
+            ref other => panic!("kind changed: {other:?}"),
+        }
+        // Shifting down to 0 is allowed (clean regime).
+        ge.set_mean_loss_all(0.0);
+        assert_eq!(ge.global_mean_loss(), 0.0);
     }
 }

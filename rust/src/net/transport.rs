@@ -70,6 +70,14 @@ impl Network {
         &self.topo
     }
 
+    /// Re-tune every pair's loss process to mean `p`, preserving its
+    /// kind (see [`Topology::set_mean_loss_all`]) — the apply step of a
+    /// piecewise-stationary loss schedule. In-flight packets already
+    /// survived their loss draw; only future sends see the new regime.
+    pub fn set_mean_loss(&mut self, p: f64) {
+        self.topo.set_mean_loss_all(p);
+    }
+
     /// Send a datagram. Serialization occupies the sender's uplink; the
     /// packet is then subject to the pair's loss process; survivors are
     /// delivered after one-way propagation.

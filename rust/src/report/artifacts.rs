@@ -4,18 +4,21 @@
 //! No serde is vendored, so both formats are emitted by hand against a
 //! frozen schema (documented in `ROADMAP.md`):
 //!
-//! * **JSON** (`lbsp-campaign/v2`) — one object with the full grid spec
-//!   (every axis incl. the `adapts` duplication-control axis,
-//!   replication policy, seed), the fixed log₂ `rounds_hist_edges`, and
-//!   one entry per cell carrying the grid coordinates (now incl.
-//!   `adapt`), reliability fractions (`completed`/`converged`/
-//!   `validated`), six replica [`Summary`] blocks (speedup, rounds,
-//!   time_s, data_packets, k_chosen, p_hat — each n/mean/sem/p10/p50/
-//!   p90/min/max; `p_hat` is `null` on static cells), the pooled
-//!   per-phase `rounds_hist` counts, and the analytic ρ̂ / S_E
-//!   predictions. Non-finite floats serialize as `null` (JSON has no
-//!   NaN). v1 artifacts (no `adapt`/`k_chosen`/`p_hat`/`rounds_hist`)
-//!   remain readable — see `report::diff`.
+//! * **JSON** (`lbsp-campaign/v3`) — one object with the full grid spec
+//!   (every axis incl. the `scenarios` loss-environment axis and the
+//!   `adapts` duplication-control axis, replication policy, seed), the
+//!   fixed log₂ `rounds_hist_edges`, and one entry per cell carrying
+//!   the grid coordinates (incl. `scenario` and `adapt`), reliability
+//!   fractions (`completed`/`converged`/`validated`), six replica
+//!   [`Summary`] blocks (speedup, rounds, time_s, data_packets,
+//!   k_chosen, p_hat — each n/mean/sem/p10/p50/p90/min/max; `p_hat` is
+//!   `null` on static cells), the per-link `k_spread` /
+//!   `p_hat_spread` `{min, mean, max}` blocks (v3; `p_hat_spread` is
+//!   `null` on static cells), the pooled per-phase `rounds_hist`
+//!   counts, and the analytic ρ̂ / S_E predictions. Non-finite floats
+//!   serialize as `null` (JSON has no NaN). v1 and v2 artifacts remain
+//!   readable — see `report::diff` (missing `scenario` reads as
+//!   `stationary`, missing `adapt` as `static`).
 //! * **CSV** — the same cells flattened to one row each, full-precision
 //!   floats (`{:?}` round-trip formatting), for spreadsheet/pandas use
 //!   (histogram counts stay JSON-only).
@@ -26,14 +29,15 @@
 use std::io;
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::{CampaignSpec, CellSummary};
+use crate::coordinator::{CampaignSpec, CellSummary, Spread};
 use crate::util::stats::{LogHist, Summary};
 
 /// Schema tag stamped into every JSON artifact; bump on layout changes.
-pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v2";
+pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v3";
 
-/// The previous schema tag, still accepted by the artifact reader.
+/// Older schema tags, still accepted by the artifact reader.
 pub const CAMPAIGN_SCHEMA_V1: &str = "lbsp-campaign/v1";
+pub const CAMPAIGN_SCHEMA_V2: &str = "lbsp-campaign/v2";
 
 /// JSON number: round-trip float formatting, `null` for NaN/±∞.
 fn jnum(x: f64) -> String {
@@ -69,6 +73,15 @@ fn jarr<T, F: Fn(&T) -> String>(xs: &[T], f: F) -> String {
     format!("[{}]", inner.join(","))
 }
 
+fn spread_json(s: &Spread) -> String {
+    format!(
+        "{{\"min\":{},\"mean\":{},\"max\":{}}}",
+        jnum(s.min),
+        jnum(s.mean),
+        jnum(s.max),
+    )
+}
+
 fn summary_json(s: &Summary) -> String {
     format!(
         "{{\"n\":{},\"mean\":{},\"sem\":{},\"p10\":{},\"p50\":{},\"p90\":{},\"min\":{},\"max\":{}}}",
@@ -89,7 +102,8 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
     let spec_json = format!(
         concat!(
             "{{\"workloads\":{},\"ns\":{},\"ps\":{},\"ks\":{},",
-            "\"policies\":{},\"losses\":{},\"topologies\":{},\"adapts\":{},",
+            "\"policies\":{},\"losses\":{},\"topologies\":{},\"scenarios\":{},",
+            "\"adapts\":{},",
             "\"replicas\":{},\"seed\":{},\"sem_target\":{},\"max_replicas\":{}}}"
         ),
         jarr(&spec.workloads, |w| jstr(&w.label())),
@@ -99,6 +113,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
         jarr(&spec.policies, |p| jstr(&format!("{p:?}"))),
         jarr(&spec.losses, |l| jstr(&l.label())),
         jarr(&spec.topologies, |t| jstr(t.label())),
+        jarr(&spec.scenarios, |s| jstr(&s.label())),
         jarr(&spec.adapts, |a| jstr(&a.label())),
         spec.replicas,
         spec.seed,
@@ -112,16 +127,19 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
             format!(
                 concat!(
                     "{{\"workload\":{},\"topology\":{},\"loss\":{},\"policy\":{},",
-                    "\"adapt\":{},\"n\":{},\"p\":{},\"k\":{},\"replicas\":{},",
+                    "\"scenario\":{},\"adapt\":{},\"n\":{},\"p\":{},\"k\":{},",
+                    "\"replicas\":{},",
                     "\"completed_frac\":{},\"converged_frac\":{},\"validated_frac\":{},",
                     "\"speedup\":{},\"rounds\":{},\"time_s\":{},\"data_packets\":{},",
-                    "\"k_chosen\":{},\"p_hat\":{},\"rounds_hist\":{},",
+                    "\"k_chosen\":{},\"k_spread\":{},\"p_hat\":{},\"p_hat_spread\":{},",
+                    "\"rounds_hist\":{},",
                     "\"rho_pred\":{},\"speedup_pred\":{}}}"
                 ),
                 jstr(&s.cell.workload.label()),
                 jstr(s.cell.topology.label()),
                 jstr(&s.cell.loss.label()),
                 jstr(&format!("{:?}", s.cell.policy)),
+                jstr(&s.cell.scenario.label()),
                 jstr(&s.cell.adapt.label()),
                 s.cell.n,
                 jnum(s.cell.p),
@@ -135,9 +153,14 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
                 summary_json(&s.time_s),
                 summary_json(&s.data_packets),
                 summary_json(&s.k_chosen),
+                spread_json(&s.k_spread),
                 s.p_hat
                     .as_ref()
                     .map(summary_json)
+                    .unwrap_or_else(|| "null".into()),
+                s.p_hat_spread
+                    .as_ref()
+                    .map(spread_json)
                     .unwrap_or_else(|| "null".into()),
                 jarr(&s.rounds_hist.counts, |c| c.to_string()),
                 jnum(s.rho_pred),
@@ -161,10 +184,20 @@ fn cnum(x: f64) -> String {
     format!("{x:?}")
 }
 
-/// Workload labels carry commas (`matmul(q=2,e=8)`); CSV keeps the
-/// unquoted-cell invariant by swapping them for semicolons.
+/// Labels land in unquoted CSV cells, so every character that could
+/// break the cell/row structure is swapped out: commas (`matmul(q=2,
+/// e=8)`) become semicolons, CR/LF become spaces (an embedded newline
+/// would split the row), and double quotes become single quotes (a
+/// stray `"` flips naive parsers into quoted mode mid-cell).
 fn csv_label(s: &str) -> String {
-    s.replace(',', ";")
+    s.chars()
+        .map(|ch| match ch {
+            ',' => ';',
+            '\n' | '\r' => ' ',
+            '"' => '\'',
+            c => c,
+        })
+        .collect()
 }
 
 fn summary_cols(s: &Summary) -> String {
@@ -185,26 +218,41 @@ fn empty_summary_cols() -> String {
     ",".repeat(6)
 }
 
+fn spread_cols(s: &Spread) -> String {
+    format!("{},{},{}", cnum(s.min), cnum(s.mean), cnum(s.max))
+}
+
+/// Empty cells for an absent spread block.
+fn empty_spread_cols() -> String {
+    ",".repeat(2)
+}
+
 /// One row per cell; see `ROADMAP.md` for the column dictionary. The
 /// per-phase round histogram stays JSON-only (16 log-bin counts make a
 /// poor spreadsheet column family).
 pub fn campaign_csv(cells: &[CellSummary]) -> String {
     let mut out = String::new();
-    out.push_str("workload,topology,loss,policy,adapt,n,p,k,replicas,");
+    out.push_str("workload,topology,loss,policy,scenario,adapt,n,p,k,replicas,");
     out.push_str("completed_frac,converged_frac,validated_frac,rho_pred,speedup_pred");
     for block in ["speedup", "rounds", "time_s", "data_packets", "k_chosen", "p_hat"] {
         for col in ["mean", "sem", "p10", "p50", "p90", "min", "max"] {
             out.push_str(&format!(",{block}_{col}"));
         }
     }
+    for block in ["k_spread", "p_hat_spread"] {
+        for col in ["min", "mean", "max"] {
+            out.push_str(&format!(",{block}_{col}"));
+        }
+    }
     out.push('\n');
     for s in cells {
         out.push_str(&format!(
-            "{},{},{},{:?},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{:?},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             csv_label(&s.cell.workload.label()),
             s.cell.topology.label(),
             csv_label(&s.cell.loss.label()),
             s.cell.policy,
+            csv_label(&s.cell.scenario.label()),
             csv_label(&s.cell.adapt.label()),
             s.cell.n,
             cnum(s.cell.p),
@@ -224,6 +272,11 @@ pub fn campaign_csv(cells: &[CellSummary]) -> String {
                 .as_ref()
                 .map(summary_cols)
                 .unwrap_or_else(empty_summary_cols),
+            spread_cols(&s.k_spread),
+            s.p_hat_spread
+                .as_ref()
+                .map(spread_cols)
+                .unwrap_or_else(empty_spread_cols),
         ));
     }
     out
@@ -275,18 +328,24 @@ mod tests {
     fn json_has_schema_spec_and_all_cells() {
         let (spec, cells) = small_run();
         let j = campaign_json(&spec, &cells);
-        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v2\""));
+        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v3\""));
         assert!(j.contains("\"rounds_hist_edges\":[0,2,4,8,"));
         assert!(j.contains("\"spec\":{\"workloads\":[\"synthetic(r=2,m=2)\"]"));
+        assert!(j.contains("\"scenarios\":[\"stationary\"]"));
         assert!(j.contains("\"adapts\":[\"static\"]"));
         assert!(j.contains("\"sem_target\":null"));
         assert_eq!(j.matches("\"validated_frac\"").count(), cells.len());
         assert_eq!(j.matches("\"speedup\":{").count(), cells.len());
+        assert_eq!(j.matches("\"scenario\":\"stationary\"").count(), cells.len());
         assert_eq!(j.matches("\"adapt\":\"static\"").count(), cells.len());
         assert_eq!(j.matches("\"k_chosen\":{").count(), cells.len());
+        assert_eq!(j.matches("\"k_spread\":{\"min\":").count(), cells.len());
         assert_eq!(j.matches("\"rounds_hist\":[").count(), cells.len());
         // Static cells carry no estimator state.
         assert_eq!(j.matches("\"p_hat\":null").count(), cells.len());
+        assert_eq!(j.matches("\"p_hat_spread\":null").count(), cells.len());
+        // A static cell's k_spread is the degenerate {k, k, k}.
+        assert!(j.contains("\"k_spread\":{\"min\":1.0,\"mean\":1.0,\"max\":1.0}"));
         // DES cells have no closed-form prediction.
         assert_eq!(j.matches("\"speedup_pred\":null").count(), cells.len());
         // Balanced braces (cheap well-formedness smoke check).
@@ -310,17 +369,20 @@ mod tests {
         let lines: Vec<&str> = c.lines().collect();
         assert_eq!(lines.len(), cells.len() + 1);
         let n_cols = lines[0].split(',').count();
-        assert_eq!(n_cols, 14 + 6 * 7);
+        assert_eq!(n_cols, 15 + 6 * 7 + 2 * 3);
         for row in &lines[1..] {
             assert_eq!(row.split(',').count(), n_cols, "ragged row: {row}");
         }
         assert!(
-            lines[1].starts_with("synthetic(r=2;m=2),uniform,iid,Selective,static,2,"),
+            lines[1].starts_with(
+                "synthetic(r=2;m=2),uniform,iid,Selective,stationary,static,2,"
+            ),
             "commas inside labels must be sanitized: {}",
             lines[1]
         );
-        // Static cells leave the whole p_hat block empty (7 empty cells).
-        assert!(lines[1].ends_with(",,,,,,,"), "empty p_hat block: {}", lines[1]);
+        // Static cells: k_spread is the degenerate {k,k,k}, the whole
+        // p_hat_spread block stays empty (3 empty cells at row end).
+        assert!(lines[1].ends_with("1.0,1.0,1.0,,,"), "row end: {}", lines[1]);
     }
 
     #[test]
@@ -331,6 +393,22 @@ mod tests {
         assert_eq!(jnum(f64::NAN), "null");
         assert_eq!(jnum(f64::INFINITY), "null");
         assert_eq!(jnum(0.5), "0.5");
+    }
+
+    #[test]
+    fn csv_label_sanitizes_every_structural_character() {
+        // Commas, newlines (both flavors) and quotes all corrupt an
+        // unquoted CSV cell; the old sanitizer only caught commas.
+        assert_eq!(csv_label("matmul(q=2,e=8)"), "matmul(q=2;e=8)");
+        assert_eq!(
+            csv_label("evil,label\nwith\r\"quotes\""),
+            "evil;label with 'quotes'"
+        );
+        let hostile = csv_label("a,b\nc\rd\"e");
+        assert!(!hostile.contains(','));
+        assert!(!hostile.contains('\n') && !hostile.contains('\r'));
+        assert!(!hostile.contains('"'));
+        assert_eq!(hostile, "a;b c d'e");
     }
 
     #[test]

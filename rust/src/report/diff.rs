@@ -1,9 +1,11 @@
 //! Cross-PR campaign artifact differ (`lbsp diff a.json b.json`).
 //!
-//! Reads two persisted campaign artifacts (schema `lbsp-campaign/v2`,
-//! or v1 files from older PRs — the missing `adapt` coordinate defaults
-//! to `static`), matches cells on their full grid coordinates
-//! (workload, topology, loss process, retransmission policy, adapt
+//! Reads two persisted campaign artifacts (schema `lbsp-campaign/v3`,
+//! or v1/v2 files from older PRs — a missing `adapt` coordinate
+//! defaults to `static`, a missing `scenario` to `stationary`, so old
+//! baselines keep matching the cells that existed when they were
+//! written), matches cells on their full grid coordinates (workload,
+//! topology, loss process, retransmission policy, scenario, adapt
 //! policy, n, p, k) and flags speedup-mean changes that exceed
 //! `threshold` combined standard errors:
 //!
@@ -31,7 +33,8 @@ use super::Artifact;
 /// One cell's comparable statistics, keyed by its grid coordinates.
 #[derive(Clone, Debug)]
 pub struct CellRecord {
-    /// Canonical coordinate key: `workload|topology|loss|policy|adapt|n|p|k`.
+    /// Canonical coordinate key:
+    /// `workload|topology|loss|policy|scenario|adapt|n|p|k`.
     pub key: String,
     pub speedup_mean: f64,
     pub speedup_sem: f64,
@@ -56,13 +59,16 @@ fn req_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str, String> {
 }
 
 /// Parse an artifact out of a [`Json`] document; accepts the current
-/// `lbsp-campaign/v2` schema and the v1 layout of earlier PRs.
+/// `lbsp-campaign/v3` schema and the v1/v2 layouts of earlier PRs.
 pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
     let schema = doc
         .get("schema")
         .and_then(Json::as_str)
         .ok_or("not a campaign artifact: no \"schema\" tag")?;
-    if schema != super::CAMPAIGN_SCHEMA && schema != super::artifacts::CAMPAIGN_SCHEMA_V1 {
+    if schema != super::CAMPAIGN_SCHEMA
+        && schema != super::artifacts::CAMPAIGN_SCHEMA_V1
+        && schema != super::artifacts::CAMPAIGN_SCHEMA_V2
+    {
         return Err(format!("unsupported schema {schema:?}"));
     }
     let cells = doc
@@ -71,19 +77,25 @@ pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
         .ok_or("artifact has no \"cells\" array")?;
     let mut out = Vec::with_capacity(cells.len());
     for cell in cells {
-        // v1 artifacts predate the adapt axis: every cell was static. A
-        // *present but wrong-typed* field is corruption, not an old
+        // v1 artifacts predate the adapt axis (every cell was static),
+        // v1/v2 predate the scenario axis (every cell was stationary).
+        // A *present but wrong-typed* field is corruption, not an old
         // schema — error instead of silently keying on "".
         let adapt = match cell.get("adapt") {
             None => "static",
             Some(v) => v.as_str().ok_or("cell field \"adapt\" is not a string")?,
         };
+        let scenario = match cell.get("scenario") {
+            None => "stationary",
+            Some(v) => v.as_str().ok_or("cell field \"scenario\" is not a string")?,
+        };
         let key = format!(
-            "{}|{}|{}|{}|{}|n={}|p={:?}|k={}",
+            "{}|{}|{}|{}|{}|{}|n={}|p={:?}|k={}",
             req_str(cell, "workload")?,
             req_str(cell, "topology")?,
             req_str(cell, "loss")?,
             req_str(cell, "policy")?,
+            scenario,
             adapt,
             req(cell, "n")?.as_u64().ok_or("bad n")?,
             req(cell, "p")?.as_f64().ok_or("bad p")?,
@@ -127,6 +139,13 @@ pub struct CampaignDiff {
     pub only_in_b: usize,
     /// Matched cells skipped because a mean/SEM was non-finite.
     pub skipped_nonfinite: usize,
+    /// Cells dropped because another cell in the same file carried the
+    /// same grid key (a duplicated axis value — e.g. `ks = [2, 2]` —
+    /// produces coordinate-identical cells with different seeds). Only
+    /// each key's first occurrence is compared; silently letting a
+    /// later duplicate shadow it would compare against the wrong
+    /// record, so the drop count is part of the verdict.
+    pub duplicate_keys: usize,
     /// Significant slowdowns (z < −threshold), most severe first.
     pub regressions: Vec<CellDelta>,
     /// Significant speedups (z > threshold), largest first.
@@ -146,19 +165,42 @@ pub fn diff_campaigns(
     threshold: f64,
 ) -> CampaignDiff {
     assert!(threshold >= 0.0, "threshold {threshold}");
-    let index_a: HashMap<&str, &CellRecord> =
-        a.cells.iter().map(|c| (c.key.as_str(), c)).collect();
-    let index_b: HashMap<&str, &CellRecord> =
-        b.cells.iter().map(|c| (c.key.as_str(), c)).collect();
+    // First occurrence wins on duplicate keys (deterministic), and the
+    // shadowed records are counted instead of silently compared against
+    // the wrong cell. Borrow-indexed: no record cloning.
+    fn first_index<'c>(
+        cells: &'c [CellRecord],
+        duplicates: &mut usize,
+    ) -> HashMap<&'c str, &'c CellRecord> {
+        let mut map: HashMap<&str, &CellRecord> = HashMap::with_capacity(cells.len());
+        for c in cells {
+            if map.contains_key(c.key.as_str()) {
+                *duplicates += 1;
+            } else {
+                map.insert(c.key.as_str(), c);
+            }
+        }
+        map
+    }
+    let mut duplicate_keys = 0usize;
+    let index_a = first_index(&a.cells, &mut duplicate_keys);
+    let index_b = first_index(&b.cells, &mut duplicate_keys);
 
     let mut diff = CampaignDiff {
-        only_in_a: a.cells.iter().filter(|c| !index_b.contains_key(c.key.as_str())).count(),
-        only_in_b: b.cells.iter().filter(|c| !index_a.contains_key(c.key.as_str())).count(),
+        only_in_a: index_a.keys().filter(|k| !index_b.contains_key(*k)).count(),
+        only_in_b: index_b.keys().filter(|k| !index_a.contains_key(*k)).count(),
+        duplicate_keys,
         ..Default::default()
     };
 
-    // Walk in `a` order so the report order is the canonical cell order.
+    // Walk in `a` order so the report order is the canonical cell order
+    // (skipping shadowed duplicates: only each key's first record is in
+    // the index, and a second visit of the same key would double-count).
+    let mut seen_a = std::collections::HashSet::new();
     for ca in &a.cells {
+        if !seen_a.insert(ca.key.as_str()) {
+            continue;
+        }
         let Some(cb) = index_b.get(ca.key.as_str()) else {
             continue;
         };
@@ -219,10 +261,15 @@ pub fn diff_table(diff: &CampaignDiff, threshold: f64) -> Artifact {
             ]);
         }
     }
+    let duplicates = if diff.duplicate_keys > 0 {
+        format!(", {} duplicate keys dropped", diff.duplicate_keys)
+    } else {
+        String::new()
+    };
     Artifact {
         title: format!(
             "Campaign diff @ {threshold}σ: {} matched, {} regressions, {} improvements \
-             ({}+{} unmatched, {} skipped)",
+             ({}+{} unmatched, {} skipped{duplicates})",
             diff.matched,
             diff.regressions.len(),
             diff.improvements.len(),
@@ -339,6 +386,43 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_keys_are_dropped_loudly_first_occurrence_wins() {
+        // A duplicated axis value (ks = [2, 2]) writes two cells with
+        // identical grid keys but different seeds/stats. The differ
+        // must compare each key once — the first record — and report
+        // the shadowed duplicates instead of silently matching against
+        // whichever record the hash map kept.
+        let mk = |means: &[f64]| CampaignArtifact {
+            schema: "lbsp-campaign/v3".into(),
+            cells: means
+                .iter()
+                .map(|&m| CellRecord {
+                    key: "X".into(),
+                    speedup_mean: m,
+                    speedup_sem: 0.1,
+                    replicas: 8,
+                })
+                .collect(),
+        };
+        // Baseline: first record 10.0, shadowed duplicate 5.0.
+        // Candidate: 10.0. Last-wins indexing would compare 5.0 vs
+        // 10.0 and report a spurious improvement.
+        let a = mk(&[10.0, 5.0]);
+        let b = mk(&[10.0]);
+        let d = diff_campaigns(&a, &b, 3.0);
+        assert_eq!(d.matched, 1, "each key compares once");
+        assert_eq!(d.duplicate_keys, 1);
+        assert!(!d.has_regressions() && d.improvements.is_empty());
+        assert_eq!(d.only_in_a + d.only_in_b, 0);
+        let title = diff_table(&d, 3.0).title;
+        assert!(title.contains("1 duplicate keys dropped"), "{title}");
+        // No duplicates → the suffix stays out of the title.
+        let d = diff_campaigns(&b, &b, 3.0);
+        assert_eq!(d.duplicate_keys, 0);
+        assert!(!diff_table(&d, 3.0).title.contains("duplicate"));
+    }
+
+    #[test]
     fn zero_sem_cells_regress_on_any_decrease() {
         let mk = |mean: f64| CampaignArtifact {
             schema: "lbsp-campaign/v2".into(),
@@ -385,6 +469,80 @@ mod tests {
         let d = diff_campaigns(&art, &v2, 1e9);
         assert_eq!(d.matched, 1);
         assert_eq!(d.only_in_b, 1, "the k=2 cell has no v1 counterpart");
+    }
+
+    /// A summary block can legitimately serialize `"mean": null`: the
+    /// writer maps every non-finite float to `null` (e.g. the NaN mean
+    /// of a cell whose replicas all failed). The documented semantics:
+    /// the cell parses (no panic), carries NaN, is **excluded from
+    /// matching** and counted in `skipped_nonfinite` — so it can never
+    /// regress silently, and never "passes" silently either: the skip
+    /// count is part of the verdict title.
+    #[test]
+    fn null_mean_cells_are_skipped_loudly_not_passed_silently() {
+        let null_mean = r#"{"schema":"lbsp-campaign/v3",
+            "cells":[{"workload":"synthetic(r=2,m=2)","topology":"uniform",
+                      "loss":"iid","policy":"Selective","scenario":"stationary",
+                      "adapt":"static","n":2,"p":0.1,"k":1,"replicas":0,
+                      "speedup":{"n":0,"mean":null,"sem":null,"p10":null,
+                                 "p50":null,"p90":null,"min":null,"max":null},
+                      "rho_pred":1.2,"speedup_pred":null}]}"#;
+        let healthy = r#"{"schema":"lbsp-campaign/v3",
+            "cells":[{"workload":"synthetic(r=2,m=2)","topology":"uniform",
+                      "loss":"iid","policy":"Selective","scenario":"stationary",
+                      "adapt":"static","n":2,"p":0.1,"k":1,"replicas":4,
+                      "speedup":{"n":4,"mean":1.5,"sem":0.05,"p10":1.4,
+                                 "p50":1.5,"p90":1.6,"min":1.4,"max":1.6},
+                      "rho_pred":1.2,"speedup_pred":null}]}"#;
+        let broken = read_campaign_str(null_mean).expect("null mean must parse");
+        assert!(broken.cells[0].speedup_mean.is_nan());
+        assert!(broken.cells[0].speedup_sem.is_nan());
+        let good = read_campaign_str(healthy).unwrap();
+        assert_eq!(broken.cells[0].key, good.cells[0].key, "same coordinates");
+
+        // Both directions: the NaN cell is skipped, not matched, and
+        // the skip is loud in the rendered verdict.
+        for (a, b) in [(&good, &broken), (&broken, &good)] {
+            let d = diff_campaigns(a, b, 3.0);
+            assert_eq!(d.matched, 0);
+            assert_eq!(d.skipped_nonfinite, 1);
+            assert!(!d.has_regressions(), "NaN is not evidence of regression");
+            assert!(d.improvements.is_empty(), "nor of improvement");
+            let art = diff_table(&d, 3.0);
+            assert!(
+                art.title.contains("1 skipped"),
+                "skip must be visible: {}",
+                art.title
+            );
+        }
+        // NaN vs NaN is equally a skip, not a clean pass.
+        let d = diff_campaigns(&broken, &broken, 3.0);
+        assert_eq!((d.matched, d.skipped_nonfinite), (0, 1));
+    }
+
+    #[test]
+    fn v2_artifacts_key_as_stationary_and_match_v3_cells() {
+        // A v2 cell (no scenario field) must key to |stationary| and
+        // match the v3 cell at the same coordinates.
+        let v2 = r#"{"schema":"lbsp-campaign/v2",
+            "cells":[{"workload":"synthetic(r=2,m=2)","topology":"uniform",
+                      "loss":"iid","policy":"Selective","adapt":"static",
+                      "n":2,"p":0.1,"k":1,"replicas":3,
+                      "speedup":{"n":3,"mean":1.5,"sem":0.05,"p10":1.4,
+                                 "p50":1.5,"p90":1.6,"min":1.4,"max":1.6},
+                      "rho_pred":1.2,"speedup_pred":null}]}"#;
+        let art = read_campaign_str(v2).unwrap();
+        assert_eq!(art.schema, "lbsp-campaign/v2");
+        assert!(art.cells[0].key.contains("|stationary|static|"));
+
+        let s = spec(4);
+        let cells = CampaignEngine::new(1).run(&s);
+        let v3 = read_campaign_str(&campaign_json(&s, &cells)).unwrap();
+        assert_eq!(v3.schema, "lbsp-campaign/v3");
+        assert_eq!(v3.cells[0].key, art.cells[0].key);
+        let d = diff_campaigns(&art, &v3, 1e9);
+        assert_eq!(d.matched, 1);
+        assert_eq!(d.only_in_b, 1, "the k=2 cell has no v2 counterpart");
     }
 
     #[test]

@@ -186,9 +186,9 @@ pub fn fig12<E: SpeedupEval>(eval: &mut E) -> Vec<Artifact> {
 /// and the analytic prediction where the workload admits one.
 pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
     let mut t = Table::new(vec![
-        "workload", "topo", "loss", "policy", "adapt", "n", "p", "k", "k_sel", "p_hat",
-        "reps", "S_mean", "S_sem", "S_p50", "rounds", "done%", "valid%", "rho_pred",
-        "S_pred",
+        "workload", "topo", "loss", "policy", "scenario", "adapt", "n", "p", "k", "k_sel",
+        "k_lo..hi", "p_hat", "reps", "S_mean", "S_sem", "S_p50", "rounds", "done%",
+        "valid%", "rho_pred", "S_pred",
     ]);
     for s in cells {
         t.row(vec![
@@ -196,11 +196,13 @@ pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
             s.cell.topology.label().to_string(),
             s.cell.loss.label(),
             format!("{:?}", s.cell.policy),
+            s.cell.scenario.label(),
             s.cell.adapt.label(),
             s.cell.n.to_string(),
             fmt_num(s.cell.p),
             s.cell.k.to_string(),
             fmt_num(s.k_chosen.mean),
+            format!("{}..{}", fmt_num(s.k_spread.min), fmt_num(s.k_spread.max)),
             s.p_hat.map(|p| fmt_num(p.mean)).unwrap_or_else(|| "-".into()),
             s.replicas.to_string(),
             fmt_num(s.speedup.mean),

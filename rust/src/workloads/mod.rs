@@ -108,15 +108,25 @@ pub struct ReplicaRun {
     pub data_packets: u64,
     /// Wire-level packet counters from the DES network.
     pub net: NetStats,
-    /// Mean packet copies k over the executed supersteps. A static run
+    /// Mean packet copies k over the executed supersteps (and, under
+    /// per-link control, over each phase's transfers). A static run
     /// reports its configured k; adaptive runs report the controller's
     /// realized trajectory average. (The final loss estimate p̂ lives on
     /// the runtime — `BspRuntime::loss_estimate` — not here: the
     /// workload hands the runtime back to the caller.)
     pub k_mean: f64,
     /// k used in the final executed superstep (an adaptive controller's
-    /// converged choice).
+    /// converged choice; the rounded per-transfer mean under per-link
+    /// control).
     pub k_last: u32,
+    /// Smallest per-transfer copy count any phase of the run used —
+    /// with `k_hi`, the run's realized k envelope. Degenerate only for
+    /// static runs; a global-adaptive run's envelope is its k
+    /// trajectory, and per-link control additionally spreads k within
+    /// a single phase.
+    pub k_lo: u32,
+    /// Largest per-transfer copy count any phase of the run used.
+    pub k_hi: u32,
     /// Per-phase round counts in the fixed log₂ campaign bins (one
     /// sample per superstep).
     pub rounds_hist: LogHist,
@@ -132,18 +142,30 @@ impl ReplicaRun {
         validated: bool,
     ) -> ReplicaRun {
         let mut rounds_hist = LogHist::new();
-        let mut k_sum = 0u64;
+        let mut k_sum = 0.0f64;
+        let mut k_steps = 0usize;
         let mut k_last = 0u32;
+        let mut k_lo = u32::MAX;
+        let mut k_hi = 0u32;
         for step in &rep.steps {
             rounds_hist.push(step.phase.rounds as u64);
-            k_sum += step.copies as u64;
+            // A phase with no transfers used no copies: its StepReport
+            // carries the (possibly stale) scalar placeholder, which
+            // must not enter the realized-k statistics — under per-link
+            // control it is the never-used configured k.
+            if step.messages == 0 {
+                continue;
+            }
+            k_sum += step.copies_mean;
+            k_steps += 1;
             k_last = step.copies;
+            k_lo = k_lo.min(step.copies_min);
+            k_hi = k_hi.max(step.copies_max);
         }
-        let k_mean = if rep.steps.is_empty() {
-            0.0
-        } else {
-            k_sum as f64 / rep.steps.len() as f64
-        };
+        let k_mean = if k_steps == 0 { 0.0 } else { k_sum / k_steps as f64 };
+        if k_steps == 0 {
+            (k_lo, k_hi) = (0, 0);
+        }
         ReplicaRun {
             time_s: rep.total_time_s,
             rounds: rep.total_rounds,
@@ -156,6 +178,8 @@ impl ReplicaRun {
             net,
             k_mean,
             k_last,
+            k_lo,
+            k_hi,
             rounds_hist,
         }
     }

@@ -34,7 +34,7 @@ fn greedy_converges_to_closed_form_k_on_stationary_bernoulli() {
     // A heavy prior at ~zero loss: the controller must *learn* its way
     // from k = 1 to k*, not start there.
     let est = EstimatorSpec::Beta { strength: 100.0, p0: 1e-6 };
-    let adapt = AdaptSpec::Greedy { k_max: 4, est }.build(model, 4).expect("adaptive");
+    let adapt = AdaptSpec::greedy(4, est).build(model, 4).expect("adaptive");
     let net = Network::new(Topology::uniform(4, link, p_true), 99);
     let mut rt = BspRuntime::new(net).with_copies(1).with_adaptive(adapt);
     let cell = SyntheticExchange::new(4, 30, 3, 2048, 0.05);
@@ -93,7 +93,7 @@ fn hysteresis_on_bursty_laplace_matches_best_static_k() {
         topologies: vec![TopologySpec::Uniform],
         adapts: vec![
             AdaptSpec::Static,
-            AdaptSpec::Hysteresis { k_max: 3, est, band: 3.0 },
+            AdaptSpec::hysteresis(3, est, 3.0),
         ],
         replicas: 24,
         seed: 0x1A77,
@@ -170,7 +170,7 @@ fn every_workload_runs_adaptively_as_a_campaign_cell() {
         ns: vec![4],
         ps: vec![0.15],
         ks: vec![2],
-        adapts: vec![AdaptSpec::Greedy { k_max: 3, est }],
+        adapts: vec![AdaptSpec::greedy(3, est)],
         replicas: 2,
         ..Default::default()
     };
@@ -203,7 +203,7 @@ fn adaptive_artifacts_roundtrip_v2_and_diff_clean() {
         ks: vec![1],
         adapts: vec![
             AdaptSpec::Static,
-            AdaptSpec::Greedy { k_max: 3, est },
+            AdaptSpec::greedy(3, est),
         ],
         replicas: 3,
         seed: 0xD1FF,
