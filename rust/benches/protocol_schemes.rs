@@ -1,0 +1,123 @@
+//! PROTOCOL_SCHEMES — phase throughput and wire cost of the pluggable
+//! reliability schemes (k-copy / blast+retransmit / FEC parity /
+//! TCP-like) at PlanetLab-band loss rates.
+//!
+//! Besides the stdout report, the bench persists a machine-readable
+//! `BENCH_protocol.json` (override the path with `LBSP_BENCH_OUT`) so
+//! the per-scheme perf trajectory — phases/s through the DES and wire
+//! bytes per payload byte — is trackable across PRs.
+
+use lbsp::net::link::Link;
+use lbsp::net::protocol::{run_phase_scheme, PhaseConfig, Transfer};
+use lbsp::net::scheme::SchemeSpec;
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::util::bench::{bench_units, black_box};
+
+/// One all-pairs phase on n nodes with m messages per directed pair.
+fn phase_transfers(n: usize, m: usize, bytes: u64) -> Vec<Transfer> {
+    let mut v = Vec::new();
+    for src in 0..n {
+        for dst in 0..n {
+            if src != dst {
+                for _ in 0..m {
+                    v.push(Transfer { src, dst, bytes });
+                }
+            }
+        }
+    }
+    v
+}
+
+fn main() {
+    let (n, m, bytes) = (8usize, 4usize, 2048u64);
+    let transfers = phase_transfers(n, m, bytes);
+    let payload: u64 = transfers.iter().map(|t| t.bytes).sum();
+    let cfg = PhaseConfig { copies: 3, timeout_s: 0.16, ..Default::default() };
+    println!(
+        "=== protocol schemes: {} transfers/phase ({} nodes, {} B payloads), v = {} ===\n",
+        transfers.len(),
+        n,
+        bytes,
+        cfg.copies
+    );
+
+    let iters = 40usize;
+    let mut series: Vec<String> = Vec::new();
+    for &p in &[0.05f64, 0.15] {
+        for scheme_spec in SchemeSpec::ALL {
+            let scheme = scheme_spec.build();
+            // Wire accounting over a fresh deterministic network (kept
+            // outside the timed loop's reporting; the timed loop below
+            // re-runs the identical workload).
+            let mut wire_total = 0u64;
+            let mut rounds_total = 0u64;
+            let mut completed = true;
+            let mut net = Network::new(
+                Topology::uniform(n, Link::from_mbytes(40.0, 0.07), p),
+                0xBE9C + (p * 1000.0) as u64,
+            );
+            for _ in 0..iters {
+                let rep = run_phase_scheme(&mut net, &transfers, &cfg, scheme.as_ref(), None);
+                wire_total += rep.wire_bytes_sent;
+                rounds_total += rep.rounds as u64;
+                completed &= rep.completed;
+            }
+            assert!(completed, "{} failed at p={p}", scheme_spec.label());
+            let wire_per_payload = wire_total as f64 / (payload * iters as u64) as f64;
+            let mean_rounds = rounds_total as f64 / iters as f64;
+
+            let mut net = Network::new(
+                Topology::uniform(n, Link::from_mbytes(40.0, 0.07), p),
+                0x5EED + (p * 1000.0) as u64,
+            );
+            let report = bench_units(
+                &format!("{:<8} p={p}", scheme_spec.label()),
+                2,
+                iters,
+                Some(1.0),
+                || {
+                    black_box(run_phase_scheme(
+                        &mut net,
+                        &transfers,
+                        &cfg,
+                        scheme.as_ref(),
+                        None,
+                    ));
+                },
+            );
+            println!(
+                "    wire/payload {wire_per_payload:>6.3}  mean rounds {mean_rounds:>5.2}"
+            );
+            series.push(format!(
+                concat!(
+                    "{{\"scheme\":\"{}\",\"p\":{p:?},\"phases_per_s\":{:?},",
+                    "\"median_s\":{:?},\"wire_bytes_per_payload\":{:?},",
+                    "\"mean_rounds\":{:?}}}"
+                ),
+                scheme_spec.label(),
+                1.0 / report.median_s,
+                report.median_s,
+                wire_per_payload,
+                mean_rounds,
+            ));
+        }
+    }
+
+    // --- machine-readable artifact for cross-PR perf tracking.
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"protocol_schemes\",\"nodes\":{n},\"transfers\":{},",
+            "\"payload_bytes\":{payload},\"param\":{},\"series\":[{}]}}\n"
+        ),
+        transfers.len(),
+        cfg.copies,
+        series.join(","),
+    );
+    let out = std::env::var("LBSP_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_protocol.json".to_string());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

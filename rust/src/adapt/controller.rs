@@ -24,7 +24,8 @@
 //!   spike the instantaneous estimate but not the band-filtered one)
 //!   don't whipsaw k.
 
-use crate::model::rho::{rho_selective, round_failure_q};
+use crate::model::rho::rho_selective;
+use crate::net::scheme::SchemeSpec;
 
 /// Loss estimates at/above this are treated as total outage: every ρ̂
 /// is divergent (or astronomically large) for practical `c`, so the
@@ -50,39 +51,58 @@ pub struct CostModel {
 
 impl CostModel {
     /// Expected communication time of one superstep at copies `k` under
-    /// loss `p`: `ρ̂(q(p,k), c) · 2τ_k`; ∞ at/above [`SATURATED_P`]
-    /// (the "system fails to operate" regime, returned without paying
-    /// for a saturated series evaluation).
+    /// loss `p`: `ρ̂(q(p,k), c) · 2τ_k` — the k-copy case of
+    /// [`CostModel::comm_cost_for`].
     pub fn comm_cost(&self, p: f64, k: u32) -> f64 {
+        self.comm_cost_for(SchemeSpec::KCopy, p, k)
+    }
+
+    /// Expected communication time of one superstep under `scheme` at
+    /// parameter `v` and loss `p`:
+    /// `ρ̂(q_scheme(p, v), c) · 2(κ_scheme(v)·(c/n)·α + β)` with the
+    /// scheme's own round-failure probability and timeout-serialization
+    /// load (k for k-copy, the retransmit budget for blast, the parity
+    /// group size for FEC). ∞ at/above [`SATURATED_P`] (the "system
+    /// fails to operate" regime, returned without paying for a
+    /// saturated series evaluation).
+    pub fn comm_cost_for(&self, scheme: SchemeSpec, p: f64, v: u32) -> f64 {
         if p.is_nan() || p >= SATURATED_P {
             return f64::INFINITY;
         }
-        let q = round_failure_q(p.max(0.0), k);
+        let q = scheme.round_failure_q(p.max(0.0), v);
         let rho = rho_selective(q, self.c);
-        let tau_k = k as f64 * self.c / self.n * self.alpha + self.beta;
-        rho * 2.0 * tau_k
+        let tau = scheme.timeout_copies(v as f64) * self.c / self.n * self.alpha + self.beta;
+        rho * 2.0 * tau
     }
 
     /// Argmin of [`CostModel::comm_cost`] over `k ∈ 1..=k_max` — the
-    /// paper's k*. Ties and the all-divergent case (p ≥ [`SATURATED_P`],
-    /// every cost infinite) resolve to the smallest k: fewer copies
-    /// means a shorter timeout, which is all that is left to optimize
-    /// when no k gets packets through.
+    /// paper's k* (the k-copy case of [`CostModel::best_param_for`]).
     pub fn best_k(&self, p: f64, k_max: u32) -> u32 {
-        assert!(k_max >= 1);
+        self.best_param_for(SchemeSpec::KCopy, p, k_max)
+    }
+
+    /// Argmin of [`CostModel::comm_cost_for`] over `v ∈ 1..=v_max` —
+    /// the optimal scheme parameter at the estimate. Ties and the
+    /// all-divergent case (p ≥ [`SATURATED_P`], every cost infinite)
+    /// resolve to the smallest v — under k-copy that is the shortest
+    /// timeout, all that is left to optimize when nothing gets
+    /// through; under blast/FEC the v = 1 fallback is simply the
+    /// canonical member of the all-infinite tie.
+    pub fn best_param_for(&self, scheme: SchemeSpec, p: f64, v_max: u32) -> u32 {
+        assert!(v_max >= 1);
         if p.is_nan() || p >= SATURATED_P {
             return 1;
         }
-        let mut best_k = 1u32;
-        let mut best_cost = self.comm_cost(p, 1);
-        for k in 2..=k_max {
-            let cost = self.comm_cost(p, k);
+        let mut best_v = 1u32;
+        let mut best_cost = self.comm_cost_for(scheme, p, 1);
+        for v in 2..=v_max {
+            let cost = self.comm_cost_for(scheme, p, v);
             if cost < best_cost {
-                best_k = k;
+                best_v = v;
                 best_cost = cost;
             }
         }
-        best_k
+        best_v
     }
 }
 
@@ -112,23 +132,34 @@ impl KController for StaticK {
     }
 }
 
-/// Re-solve k* = argmin cost(k) at every superstep, at the latest p̂.
+/// Re-solve v* = argmin cost(v) at every superstep, at the latest p̂ —
+/// the scheme parameter being k under k-copy (the paper's k*), the
+/// retransmit budget under blast, the parity group size under FEC.
 #[derive(Clone, Copy, Debug)]
 pub struct GreedyRho {
     pub model: CostModel,
     pub k_max: u32,
+    /// Which scheme's cost hooks the solve runs on (k-copy default —
+    /// the PR-3 behavior; labels stay scheme-free because the scheme
+    /// is its own artifact coordinate).
+    pub scheme: SchemeSpec,
 }
 
 impl GreedyRho {
     pub fn new(model: CostModel, k_max: u32) -> GreedyRho {
         assert!(k_max >= 1);
-        GreedyRho { model, k_max }
+        GreedyRho { model, k_max, scheme: SchemeSpec::KCopy }
+    }
+
+    /// The same controller optimizing another scheme's parameter.
+    pub fn for_scheme(model: CostModel, k_max: u32, scheme: SchemeSpec) -> GreedyRho {
+        GreedyRho { scheme, ..GreedyRho::new(model, k_max) }
     }
 }
 
 impl KController for GreedyRho {
     fn choose_k(&mut self, p_hat: f64, _interval: (f64, f64)) -> u32 {
-        self.model.best_k(p_hat, self.k_max)
+        self.model.best_param_for(self.scheme, p_hat, self.k_max)
     }
 
     fn label(&self) -> String {
@@ -171,6 +202,18 @@ impl HysteresisK {
     pub fn new(model: CostModel, k_max: u32, band: f64) -> HysteresisK {
         assert!(band > 0.0, "band multiplier {band}");
         HysteresisK { inner: GreedyRho::new(model, k_max), band, anchor: None, k: 1 }
+    }
+
+    /// The same controller optimizing another scheme's parameter.
+    pub fn for_scheme(
+        model: CostModel,
+        k_max: u32,
+        band: f64,
+        scheme: SchemeSpec,
+    ) -> HysteresisK {
+        let mut h = HysteresisK::new(model, k_max, band);
+        h.inner.scheme = scheme;
+        h
     }
 
     /// The currently held k (last decision).
@@ -422,5 +465,72 @@ mod tests {
         assert_eq!(model.comm_cost(1.0, 3), f64::INFINITY);
         assert_eq!(model.comm_cost(0.995, 1), f64::INFINITY);
         assert!(model.comm_cost(0.5, 1).is_finite());
+    }
+
+    #[test]
+    fn comm_cost_for_kcopy_is_the_legacy_cost() {
+        let model = fig10_model(64.0);
+        for &(p, k) in &[(0.01, 1u32), (0.1, 3), (0.2, 5)] {
+            assert_eq!(model.comm_cost(p, k), model.comm_cost_for(SchemeSpec::KCopy, p, k));
+        }
+        assert_eq!(model.best_k(0.1, 8), model.best_param_for(SchemeSpec::KCopy, 0.1, 8));
+    }
+
+    #[test]
+    fn blast_solve_buys_budget_with_loss() {
+        // Blast's round length never charges the budget, so any real
+        // loss pushes the retransmit budget to the cap (copies in the
+        // sparse retransmit rounds are time-free under this model)...
+        let model = fig10_model(64.0);
+        assert_eq!(model.best_param_for(SchemeSpec::Blast, 0.15, 6), 6);
+        // ...while a clean channel has nothing to retransmit at all
+        // and the tie resolves to 1.
+        assert_eq!(model.best_param_for(SchemeSpec::Blast, 0.0, 6), 1);
+    }
+
+    #[test]
+    fn fec_solve_tightens_groups_as_loss_grows() {
+        // α sized so the per-group parity tax is a real but not
+        // dominant fraction of the round (at a dominant α the timeout
+        // saving of sparse parity cancels the ρ̂ saving of dense
+        // parity): clean channels want sparse parity (large groups),
+        // lossy ones dense parity (small groups).
+        let model = CostModel { c: 64.0, n: 4.0, alpha: 0.001, beta: 0.02 };
+        let g_clean = model.best_param_for(SchemeSpec::Fec, 0.002, 8);
+        let g_lossy = model.best_param_for(SchemeSpec::Fec, 0.3, 8);
+        assert!(
+            g_clean > g_lossy,
+            "groups must tighten with loss: clean {g_clean} vs lossy {g_lossy}"
+        );
+        assert_eq!(g_clean, 8, "near-zero loss wants the sparsest parity");
+    }
+
+    #[test]
+    fn tcplike_solve_is_parameter_free() {
+        let model = fig10_model(64.0);
+        for v in 1..=6 {
+            assert_eq!(
+                model.comm_cost_for(SchemeSpec::TcpLike, 0.1, v),
+                model.comm_cost_for(SchemeSpec::TcpLike, 0.1, 1),
+            );
+        }
+        assert_eq!(model.best_param_for(SchemeSpec::TcpLike, 0.1, 6), 1);
+    }
+
+    #[test]
+    fn scheme_controllers_solve_their_own_parameter() {
+        let model = CostModel { c: 64.0, n: 4.0, alpha: 0.001, beta: 0.02 };
+        let mut blast = GreedyRho::for_scheme(model, 6, SchemeSpec::Blast);
+        assert_eq!(blast.choose_k(0.15, (0.1, 0.2)), 6);
+        let mut fec = GreedyRho::for_scheme(model, 8, SchemeSpec::Fec);
+        assert_eq!(fec.choose_k(0.002, (0.0, 0.01)), 8);
+        assert!(fec.choose_k(0.3, (0.25, 0.35)) < 8);
+        // Hysteresis wraps the same solve.
+        let mut h = HysteresisK::for_scheme(model, 8, 1.0, SchemeSpec::Fec);
+        assert_eq!(h.choose_k(0.002, (0.0, 0.01)), 8);
+        // Labels stay scheme-free: the scheme is its own artifact
+        // coordinate, and v2/v3 baselines must keep diff-matching.
+        assert_eq!(blast.label(), "greedy(kmax=6)");
+        assert_eq!(h.label(), "hyst(kmax=8,band=1)");
     }
 }

@@ -219,18 +219,33 @@ impl AdaptSpec {
     }
 
     /// Build the closed-loop state for one replica over `n_nodes` nodes
-    /// at the given cost model; `None` for [`AdaptSpec::Static`] (the
-    /// runtime keeps its fixed k). A per-link scope gets one controller
-    /// per directed pair, mirroring the bank's estimator layout.
+    /// at the given cost model, optimizing the k-copy parameter; `None`
+    /// for [`AdaptSpec::Static`] (the runtime keeps its fixed k).
     pub fn build(&self, model: CostModel, n_nodes: usize) -> Option<AdaptiveK> {
+        self.build_for(model, n_nodes, crate::net::scheme::SchemeSpec::KCopy)
+    }
+
+    /// [`AdaptSpec::build`] against an arbitrary reliability scheme:
+    /// the controllers run the same ρ̂-based solve on the *scheme's*
+    /// cost hooks, so the chosen parameter is k for k-copy, the
+    /// retransmit budget for blast, the parity group size for FEC
+    /// (see [`CostModel::best_param_for`]). A per-link scope gets one
+    /// controller per directed pair, mirroring the bank's estimator
+    /// layout.
+    pub fn build_for(
+        &self,
+        model: CostModel,
+        n_nodes: usize,
+        scheme: crate::net::scheme::SchemeSpec,
+    ) -> Option<AdaptiveK> {
         let n_pairs = n_nodes.max(1) * n_nodes.max(1);
         let mk: Box<dyn Fn() -> Box<dyn KController>> = match *self {
             AdaptSpec::Static => return None,
             AdaptSpec::Greedy { k_max, .. } => {
-                Box::new(move || Box::new(GreedyRho::new(model, k_max)))
+                Box::new(move || Box::new(GreedyRho::for_scheme(model, k_max, scheme)))
             }
             AdaptSpec::Hysteresis { k_max, band, .. } => {
-                Box::new(move || Box::new(HysteresisK::new(model, k_max, band)))
+                Box::new(move || Box::new(HysteresisK::for_scheme(model, k_max, band, scheme)))
             }
         };
         let est = match *self {

@@ -3,8 +3,9 @@
 use crate::adapt::{AdaptiveK, KChoice};
 use crate::net::loss::PiecewiseStationary;
 use crate::net::protocol::{
-    run_phase_with_copies, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer,
+    run_phase_scheme, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer,
 };
+use crate::net::scheme::{KCopy, ReliabilityScheme};
 use crate::net::transport::Network;
 
 use super::program::{BspProgram, Outgoing};
@@ -58,8 +59,18 @@ pub struct RunReport {
     pub total_comm_s: f64,
     pub total_rounds: u64,
     pub supersteps: usize,
+    /// Wire-level data packets across all phases — every copy,
+    /// retransmission and parity packet (distinct-transfer counts live
+    /// in `workloads::ReplicaRun::data_packets`).
     pub data_packets: u64,
     pub ack_packets: u64,
+    /// Distinct payload bytes the program handed to the transport
+    /// (Σ transfer sizes over all phases, each counted once) — the
+    /// denominator of the wire-efficiency metric.
+    pub payload_bytes: u64,
+    /// Bytes actually put on the wire for those payloads (every copy,
+    /// acks and parity included).
+    pub wire_bytes: u64,
     /// Every communication phase completed (`outcome != Aborted`). Kept
     /// alongside [`RunOutcome`] for the many call sites that only care
     /// about phase-level reliability.
@@ -83,8 +94,13 @@ impl RunReport {
 /// Drives a [`BspProgram`] over a lossy [`Network`].
 pub struct BspRuntime {
     net: Network,
-    /// Packet copies `k`. Under adaptive control this is re-chosen
-    /// before every superstep's communication phase.
+    /// Reliability scheme driving every communication phase (k-copy by
+    /// default — the paper's mechanism; see [`crate::net::scheme`]).
+    scheme: Box<dyn ReliabilityScheme>,
+    /// Uniform scheme parameter (packet copies `k` under k-copy, the
+    /// retransmit budget under blast, the parity group size under
+    /// FEC). Under adaptive control this is re-chosen before every
+    /// superstep's communication phase.
     pub copies: u32,
     pub policy: RetransmitPolicy,
     /// Timeout override; `None` derives `2τ_k` per phase from the mean
@@ -110,6 +126,7 @@ impl BspRuntime {
     pub fn new(net: Network) -> BspRuntime {
         BspRuntime {
             net,
+            scheme: Box::new(KCopy),
             copies: 1,
             policy: RetransmitPolicy::Selective,
             timeout_override_s: None,
@@ -128,6 +145,21 @@ impl BspRuntime {
     pub fn with_policy(mut self, policy: RetransmitPolicy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Swap the phase-reliability mechanism (default: k-copy). The
+    /// `copies` knob — and an adaptive controller's per-superstep
+    /// choice — becomes the scheme's parameter: k for k-copy, the
+    /// retransmit budget for blast, the parity group size for FEC;
+    /// the TCP baseline ignores it.
+    pub fn with_scheme(mut self, scheme: Box<dyn ReliabilityScheme>) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// The active reliability scheme.
+    pub fn scheme(&self) -> &dyn ReliabilityScheme {
+        self.scheme.as_ref()
     }
 
     /// Attach a closed-loop duplication controller (see [`crate::adapt`]):
@@ -162,13 +194,14 @@ impl BspRuntime {
         &self.net
     }
 
-    /// The paper's timeout for a phase: `2τ_k = 2(k̄·(c/n)·α + β)` with
-    /// α from the mean packet size and per-pair bandwidth, β the mean
-    /// RTT, and k̄ the mean per-transfer copy count — for a uniform k
-    /// this is exactly the paper's `2(k·(c/n)·α + β)`; under per-link
-    /// control the serialization term charges the *actual* wire-copy
-    /// load `Σkᵢ/n` instead of `k_max·c/n`, which is where per-link k
-    /// buys its round-length advantage on mixed-quality topologies.
+    /// The timeout for a phase: `2τ = 2(κ·(c/n)·α + β)` with α from the
+    /// mean packet size and per-pair bandwidth, β the mean RTT, and κ
+    /// the *scheme's* serialization load at the mean per-transfer
+    /// parameter ([`ReliabilityScheme::timeout_copies`]): k̄ under
+    /// k-copy — the paper's `2(k·(c/n)·α + β)` exactly, with per-link
+    /// control charging the actual wire-copy load `Σkᵢ/n` instead of
+    /// `k_max·c/n` — 1 under blast (the blast round serializes each
+    /// packet once), `1 + 1/ḡ` under FEC (one parity per group).
     fn phase_timeout(&self, transfers: &[Transfer], copies: &[u32], n: usize) -> f64 {
         if let Some(t) = self.timeout_override_s {
             return t;
@@ -187,7 +220,7 @@ impl BspRuntime {
         let alpha_mean = alpha_sum / c;
         let beta_mean = beta_sum / c;
         let k_mean = copies.iter().map(|&k| k as f64).sum::<f64>() / c;
-        2.0 * (k_mean * c / n as f64 * alpha_mean + beta_mean)
+        2.0 * (self.scheme.timeout_copies(k_mean) * c / n as f64 * alpha_mean + beta_mean)
     }
 
     /// Run the program to completion (or abort on a failed phase). The
@@ -261,6 +294,7 @@ impl BspRuntime {
                     model_duration_s: 0.0,
                     data_packets_sent: 0,
                     ack_packets_sent: 0,
+                    wire_bytes_sent: 0,
                     completed: true,
                 }
             } else {
@@ -271,10 +305,11 @@ impl BspRuntime {
                     policy: self.policy,
                     max_rounds: self.max_rounds,
                 };
-                run_phase_with_copies(
+                run_phase_scheme(
                     &mut self.net,
                     &transfers,
                     &cfg,
+                    self.scheme.as_ref(),
                     Some(per_transfer.as_slice()),
                 )
             };
@@ -309,6 +344,8 @@ impl BspRuntime {
             report.total_rounds += phase.rounds as u64;
             report.data_packets += phase.data_packets_sent;
             report.ack_packets += phase.ack_packets_sent;
+            report.payload_bytes += transfers.iter().map(|t| t.bytes).sum::<u64>();
+            report.wire_bytes += phase.wire_bytes_sent;
             report.supersteps = step + 1;
             report.steps.push(StepReport {
                 step,
@@ -744,6 +781,62 @@ mod tests {
         );
         let p_hat = rt.loss_estimate().unwrap();
         assert!(p_hat > 0.2, "estimate still stuck in the old regime: {p_hat}");
+    }
+
+    #[test]
+    fn schemes_preserve_reliability_through_the_runtime() {
+        use crate::net::scheme::{BlastRetransmit, FecParity, SchemeSpec, TcpLike};
+        // Every scheme must deliver all 4 × 4 ring messages under 20 %
+        // loss, and the wire/payload accounting must cover at least one
+        // copy of every payload byte.
+        let schemes: Vec<Box<dyn crate::net::scheme::ReliabilityScheme>> = vec![
+            Box::new(crate::net::scheme::KCopy),
+            Box::new(BlastRetransmit),
+            Box::new(FecParity),
+            Box::new(TcpLike::default()),
+        ];
+        for scheme in schemes {
+            let label = scheme.label();
+            let mut rt =
+                BspRuntime::new(net(4, 0.2, 55)).with_copies(2).with_scheme(scheme);
+            let mut prog = RingPass::new(4, 4);
+            let rep = rt.run(&mut prog);
+            assert!(rep.completed, "{label} failed to complete");
+            assert_eq!(rep.payload_bytes, 4 * 4 * 1024, "{label} payload accounting");
+            assert!(
+                rep.wire_bytes >= rep.payload_bytes,
+                "{label}: wire {} < payload {}",
+                rep.wire_bytes,
+                rep.payload_bytes
+            );
+            for node in 0..4 {
+                assert_eq!(prog.received[node].len(), 4, "{label} reliability violated");
+            }
+        }
+        // The spec-built boxes drive the same path.
+        for spec in SchemeSpec::ALL {
+            let mut rt = BspRuntime::new(net(3, 0.1, 56)).with_scheme(spec.build());
+            assert_eq!(rt.scheme().label(), spec.label());
+            let rep = rt.run(&mut RingPass::new(3, 2));
+            assert!(rep.completed, "{} failed", spec.label());
+        }
+    }
+
+    #[test]
+    fn blast_timeout_ignores_the_budget_kcopy_charges_it() {
+        use crate::net::scheme::BlastRetransmit;
+        let transfers = vec![
+            Transfer { src: 0, dst: 1, bytes: 1_000_000 },
+            Transfer { src: 1, dst: 2, bytes: 1_000_000 },
+        ];
+        // kcopy at k̄ = 2: 2(2·0.5·0.01 + 0.02) = 0.06; blast charges
+        // the blast-round load only: 2(1·0.5·0.01 + 0.02) = 0.05.
+        let rt = BspRuntime::new(net(4, 0.0, 1)).with_copies(2);
+        assert!((rt.phase_timeout(&transfers, &[2, 2], 4) - 0.06).abs() < 1e-12);
+        let rt = BspRuntime::new(net(4, 0.0, 1))
+            .with_copies(2)
+            .with_scheme(Box::new(BlastRetransmit));
+        assert!((rt.phase_timeout(&transfers, &[2, 2], 4) - 0.05).abs() < 1e-12);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! optimal copy count k*) are statistics over many replicated runs, not
 //! single simulations. This engine fans a full experiment grid —
 //! (workload × n × p × k × retransmission policy × loss model ×
-//! topology × duplication-control policy) × replica seeds — over the
+//! topology × scenario × reliability scheme × duplication-control
+//! policy) × replica seeds — over the
 //! [`WorkQueue`] thread pool and aggregates each cell into [`Summary`]
 //! statistics (mean, SEM, percentiles). The duplication-control axis
 //! ([`crate::adapt::AdaptSpec`]) runs packet-level cells either at the
@@ -67,6 +68,7 @@ use crate::model::{Comm, LbspParams};
 use crate::net::link::Link;
 use crate::net::loss::{GilbertElliott, PiecewiseStationary};
 use crate::net::protocol::RetransmitPolicy;
+use crate::net::scheme::SchemeSpec;
 use crate::net::rounds::{run_slotted_program, run_slotted_program_model};
 use crate::net::topology::{PlanetLabRanges, Topology};
 use crate::net::transport::Network;
@@ -314,10 +316,16 @@ pub struct CellSpec {
     /// Scenario axis: how the loss environment evolves over the run
     /// (stationary / regime shift / per-pair heterogeneity).
     pub scenario: ScenarioSpec,
+    /// Reliability-scheme axis: which mechanism wraps the phase
+    /// (k-copy / blast+retransmit / FEC parity / TCP-like). The `k`
+    /// coordinate is the scheme's parameter — copies, retransmit
+    /// budget, or parity group size; the TCP baseline ignores it and
+    /// is pinned to the axis' first entry.
+    pub scheme: SchemeSpec,
     /// Duplication-control axis: [`AdaptSpec::Static`] runs the cell at
-    /// the fixed `k`; adaptive variants re-choose k per superstep from
-    /// the online loss estimate — `k` then remains a grid coordinate
-    /// only (the controller, not the axis, decides the copies).
+    /// the fixed `k`; adaptive variants re-choose the scheme parameter
+    /// per superstep from the online loss estimate — `k` then remains
+    /// a grid coordinate only (the controller, not the axis, decides).
     pub adapt: AdaptSpec,
 }
 
@@ -370,6 +378,12 @@ pub struct CampaignSpec {
     /// base grid point is crossed with. Non-stationary scenarios need
     /// packet-level workloads on Uniform topologies (validated).
     pub scenarios: Vec<ScenarioSpec>,
+    /// Reliability-scheme axis (`--scheme`): which phase mechanism each
+    /// cell runs. Non-k-copy schemes need packet-level workloads (the
+    /// slotted abstraction hard-codes the k-copy round model), and the
+    /// TCP baseline cannot run adaptively (no parameter to tune) —
+    /// both rejected by [`CampaignSpec::validate`].
+    pub schemes: Vec<SchemeSpec>,
     /// Independent replica runs per cell (fixed mode), or the batch size
     /// per dispatch round (adaptive mode).
     pub replicas: usize,
@@ -406,6 +420,7 @@ impl Default for CampaignSpec {
             losses: vec![LossSpec::Bernoulli],
             topologies: vec![TopologySpec::Uniform],
             scenarios: vec![ScenarioSpec::Stationary],
+            schemes: vec![SchemeSpec::KCopy],
             replicas: 8,
             seed: 0x9_CA4B,
             sem_target: None,
@@ -429,30 +444,37 @@ impl CampaignSpec {
                             for &loss in &self.losses {
                                 for &topology in &self.topologies {
                                     for &scenario in &self.scenarios {
-                                        for &adapt in &self.adapts {
-                                            // An adaptive cell ignores the k
-                                            // coordinate (the controller picks
-                                            // the copies), so crossing it with
-                                            // the k axis would only duplicate
-                                            // identical policies: adaptive
-                                            // variants are emitted once, pinned
-                                            // to the axis' first entry (by
-                                            // position, so a duplicated k value
-                                            // cannot desync this from n_cells).
-                                            if !adapt.is_static() && ki != 0 {
-                                                continue;
+                                        for &scheme in &self.schemes {
+                                            for &adapt in &self.adapts {
+                                                // Cells that ignore the k
+                                                // coordinate — adaptive policies
+                                                // (the controller picks the
+                                                // parameter) and parameter-free
+                                                // schemes (TCP-like) — would only
+                                                // duplicate identical cells
+                                                // across the k axis: they are
+                                                // emitted once, pinned to the
+                                                // axis' first entry (by position,
+                                                // so a duplicated k value cannot
+                                                // desync this from n_cells).
+                                                let k_blind = !adapt.is_static()
+                                                    || !scheme.uses_k_axis();
+                                                if k_blind && ki != 0 {
+                                                    continue;
+                                                }
+                                                out.push(CellSpec {
+                                                    workload,
+                                                    n,
+                                                    p,
+                                                    k,
+                                                    policy,
+                                                    loss,
+                                                    topology,
+                                                    scenario,
+                                                    scheme,
+                                                    adapt,
+                                                });
                                             }
-                                            out.push(CellSpec {
-                                                workload,
-                                                n,
-                                                p,
-                                                k,
-                                                policy,
-                                                loss,
-                                                topology,
-                                                scenario,
-                                                adapt,
-                                            });
                                         }
                                     }
                                 }
@@ -473,11 +495,16 @@ impl CampaignSpec {
             * self.losses.len()
             * self.topologies.len()
             * self.scenarios.len();
-        // Static policies cross the full k axis; adaptive ones are
-        // emitted once per base point (see `cells`).
+        // A (scheme, adapt) combination crosses the full k axis only
+        // when the policy is static AND the scheme has a k-axis
+        // parameter; everything else is emitted once per base point
+        // (see `cells`).
         let n_static = self.adapts.iter().filter(|a| a.is_static()).count();
         let n_adaptive = self.adapts.len() - n_static;
-        base * (self.ks.len() * n_static + n_adaptive)
+        let n_k_schemes = self.schemes.iter().filter(|s| s.uses_k_axis()).count();
+        let n_fixed_schemes = self.schemes.len() - n_k_schemes;
+        base * (n_k_schemes * (self.ks.len() * n_static + n_adaptive)
+            + n_fixed_schemes * self.adapts.len())
     }
 
     /// Check the grid before any work is dispatched: a malformed axis
@@ -495,6 +522,7 @@ impl CampaignSpec {
             ("losses", self.losses.is_empty()),
             ("topologies", self.topologies.is_empty()),
             ("scenarios", self.scenarios.is_empty()),
+            ("schemes", self.schemes.is_empty()),
             ("adapts", self.adapts.is_empty()),
         ] {
             if empty {
@@ -520,6 +548,33 @@ impl CampaignSpec {
             return Err(
                 "adaptive k control needs a packet-level workload; slotted cells are \
                  fixed-k by construction (drop Slotted from the grid or use --adapt static)"
+                    .into(),
+            );
+        }
+        if has_slotted && self.schemes.iter().any(|s| !s.is_kcopy()) {
+            return Err(
+                "blast/fec/tcplike schemes need a packet-level workload; the slotted \
+                 abstraction hard-codes the k-copy round model (drop Slotted from the \
+                 grid or use --scheme kcopy)"
+                    .into(),
+            );
+        }
+        if self.schemes.iter().any(|s| !s.tunable())
+            && self.adapts.iter().any(|a| !a.is_static())
+        {
+            return Err(
+                "the tcplike scheme has no parameter for the adaptive controller to \
+                 tune (drop tcplike from --scheme or use --adapt static)"
+                    .into(),
+            );
+        }
+        if self.schemes.contains(&SchemeSpec::TcpLike)
+            && self.policies.contains(&RetransmitPolicy::WholeRound)
+        {
+            return Err(
+                "the tcplike scheme has no round structure for the §II whole-round \
+                 recompute charge (its 'rounds' are AIMD window rounds); combine it \
+                 with the Selective policy only"
                     .into(),
             );
         }
@@ -576,6 +631,10 @@ struct ReplicaResult {
     validated: bool,
     /// Distinct protocol-level data packets sent over the run.
     data_packets: f64,
+    /// Wire bytes per distinct payload byte (the scheme's redundancy
+    /// tax: ≥ 1 whenever anything was sent). NaN for slotted cells —
+    /// the round abstraction has no wire — and for payload-free runs.
+    wire_per_payload: f64,
     /// Mean packet copies k across the run's supersteps (the realized
     /// controller trajectory; the static k otherwise).
     k_mean: f64,
@@ -605,6 +664,14 @@ pub struct CellSummary {
     /// Distinct data packets sent per replica (DES cells count the
     /// protocol's transfers; slotted cells report the modeled `c·r`).
     pub data_packets: Summary,
+    /// Wire bytes per distinct payload byte over the cell's replicas —
+    /// the scheme's measured redundancy tax (k-copy ≈ k + ack
+    /// overhead, blast ≈ 1 + retransmitted fraction, FEC ≈ 1 + 1/g),
+    /// the `wire_bytes_per_payload` block of v4 artifacts. `None` when
+    /// no replica had wire to measure: slotted cells (the round
+    /// abstraction has no wire) and payload-free cells (e.g. n = 1
+    /// sends nothing).
+    pub wire_per_payload: Option<Summary>,
     /// Fraction of replicas whose every phase completed (no aborts, no
     /// round-cap saturation) — the campaign's reliability signal.
     pub completed_frac: f64,
@@ -876,6 +943,19 @@ impl CampaignEngine {
         let rounds: Vec<f64> = rs.iter().map(|r| r.rounds).collect();
         let times: Vec<f64> = rs.iter().map(|r| r.time_s).collect();
         let packets: Vec<f64> = rs.iter().map(|r| r.data_packets).collect();
+        // NaN marks replicas with no wire to measure (slotted cells,
+        // payload-free runs like n = 1): they must not reach
+        // Summary::from_values, whose percentile sort has no NaN order.
+        let wires: Vec<f64> = rs
+            .iter()
+            .map(|r| r.wire_per_payload)
+            .filter(|w| w.is_finite())
+            .collect();
+        let wire_per_payload = if wires.is_empty() {
+            None
+        } else {
+            Some(Summary::from_values(&wires))
+        };
         let k_means: Vec<f64> = rs.iter().map(|r| r.k_mean).collect();
         let k_chosen = Summary::from_values(&k_means);
         let k_spread = Spread::over(rs.iter().map(|r| (r.k_lo, r.k_hi)), k_chosen.mean);
@@ -896,7 +976,15 @@ impl CampaignEngine {
         let converged_frac = rs.iter().filter(|r| r.converged).count() as f64 / n;
         let validated_frac = rs.iter().filter(|r| r.validated).count() as f64 / n;
 
-        let q = round_failure_q(cell.p, cell.k);
+        // The scheme's own per-round failure probability at the cell's
+        // parameter (identical to the paper's q(p, k) for k-copy cells;
+        // a comparable single-copy q for the TCP baseline, whose window
+        // dynamics the round model cannot capture).
+        let q = cell.scheme.round_failure_q(cell.p, cell.k);
+        debug_assert!(
+            !cell.scheme.is_kcopy() || q == round_failure_q(cell.p, cell.k),
+            "kcopy q must stay the paper's round_failure_q"
+        );
         let c = cell.phase_packets();
         let rho_pred = match cell.policy {
             RetransmitPolicy::Selective => self.rho_cache.rho_selective(q, c),
@@ -927,6 +1015,7 @@ impl CampaignEngine {
             rounds: Summary::from_values(&rounds),
             time_s: Summary::from_values(&times),
             data_packets: Summary::from_values(&packets),
+            wire_per_payload,
             completed_frac,
             converged_frac,
             validated_frac,
@@ -1032,6 +1121,7 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
             // across mixed grids.
             validated: !run.saturated,
             data_packets: (c * supersteps) as f64,
+            wire_per_payload: f64::NAN,
             k_mean: cell.k as f64,
             k_lo: cell.k as f64,
             k_hi: cell.k as f64,
@@ -1050,7 +1140,10 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
     let n_nodes = wl.n_nodes();
     let topo = build_topology(cell, n_nodes, &mut rng);
     let net = Network::new(topo, rng.next_u64());
-    let mut rt = BspRuntime::new(net).with_copies(cell.k).with_policy(cell.policy);
+    let mut rt = BspRuntime::new(net)
+        .with_copies(cell.k)
+        .with_policy(cell.policy)
+        .with_scheme(cell.scheme.build());
     if let ScenarioSpec::Shift { at, to_p } = cell.scenario {
         rt = rt.with_loss_schedule(PiecewiseStationary::step_change(cell.p, at, to_p));
     }
@@ -1067,7 +1160,10 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
             alpha: link.alpha(wl.packet_bytes()),
             beta: link.rtt_s,
         };
-        if let Some(adapt) = cell.adapt.build(model, n_nodes) {
+        // The controller optimizes the *active scheme's* parameter:
+        // k for k-copy, retransmit budget for blast, group size for
+        // FEC (tcplike × adaptive is rejected by validate()).
+        if let Some(adapt) = cell.adapt.build_for(model, n_nodes, cell.scheme) {
             rt = rt.with_adaptive(adapt);
         }
     }
@@ -1084,6 +1180,11 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
         converged: run.converged,
         validated: run.validated,
         data_packets: run.data_packets as f64,
+        wire_per_payload: if run.payload_bytes > 0 {
+            run.wire_bytes as f64 / run.payload_bytes as f64
+        } else {
+            f64::NAN
+        },
         k_mean: run.k_mean,
         k_lo: run.k_lo as f64,
         k_hi: run.k_hi as f64,
@@ -1114,6 +1215,7 @@ pub fn lbsp_grid(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adapt::EstimatorSpec;
 
     fn tiny_spec() -> CampaignSpec {
         CampaignSpec {
@@ -1673,6 +1775,150 @@ mod tests {
         // Stationary scenarios stay allowed everywhere.
         assert!(synthetic_des_spec().validate().is_ok());
         assert!(tiny_spec().validate().is_ok());
+    }
+
+    #[test]
+    fn scheme_axis_enumerates_and_pins_parameter_free_schemes() {
+        let spec = CampaignSpec {
+            schemes: vec![SchemeSpec::KCopy, SchemeSpec::Blast, SchemeSpec::TcpLike],
+            ks: vec![1, 2],
+            ..synthetic_des_spec()
+        };
+        // kcopy and blast cross the k axis (k is their parameter);
+        // tcplike is parameter-free and pinned to ks[0]:
+        // 2 schemes × 2 ks + 1 scheme × 1 = 5 cells.
+        assert_eq!(spec.n_cells(), 5);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 5);
+        let coord: Vec<(u32, &str)> =
+            cells.iter().map(|c| (c.k, c.scheme.label())).collect();
+        assert_eq!(
+            coord,
+            vec![(1, "kcopy"), (1, "blast"), (1, "tcplike"), (2, "kcopy"), (2, "blast")],
+            "scheme enumerates inside k, tcplike pinned to the first k"
+        );
+    }
+
+    #[test]
+    fn scheme_cells_run_end_to_end() {
+        let spec = CampaignSpec {
+            workloads: vec![WorkloadSpec::Synthetic {
+                supersteps: 4,
+                // 6 messages per node = 2 per directed pair, so FEC
+                // actually forms multi-member parity groups.
+                msgs_per_node: 6,
+                bytes: 2048,
+                compute_s: 0.03,
+            }],
+            ns: vec![4],
+            ps: vec![0.05],
+            schemes: vec![
+                SchemeSpec::KCopy,
+                SchemeSpec::Blast,
+                SchemeSpec::Fec,
+                SchemeSpec::TcpLike,
+            ],
+            ks: vec![2],
+            replicas: 3,
+            ..synthetic_des_spec()
+        };
+        let out = CampaignEngine::new(2).run(&spec);
+        assert_eq!(out.len(), 4);
+        for s in &out {
+            assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+            assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
+            assert!(s.speedup.mean > 0.0, "cell {:?}", s.cell);
+            // 4 supersteps × 4 nodes × 6 msgs distinct payloads.
+            assert_eq!(s.data_packets.mean, 96.0, "cell {:?}", s.cell);
+            let wire = s.wire_per_payload.expect("DES cells measure the wire");
+            assert!(
+                wire.mean >= 1.0,
+                "the wire carries at least one copy of each payload: {:?}",
+                s.cell
+            );
+        }
+        // k-copy at k = 2 must pay at least twice the payload on the
+        // wire; blast and FEC stay well under it at p = 0.05.
+        let by = |name: &str| {
+            out.iter()
+                .find(|s| s.cell.scheme.label() == name)
+                .unwrap()
+                .wire_per_payload
+                .unwrap()
+                .mean
+        };
+        assert!(by("kcopy") >= 2.0, "kcopy {}", by("kcopy"));
+        assert!(by("blast") < by("kcopy"), "blast {} kcopy {}", by("blast"), by("kcopy"));
+        assert!(by("fec") < by("kcopy"), "fec {} kcopy {}", by("fec"), by("kcopy"));
+    }
+
+    #[test]
+    fn scheme_cells_are_worker_count_invariant() {
+        let spec = CampaignSpec {
+            schemes: vec![SchemeSpec::KCopy, SchemeSpec::Blast, SchemeSpec::Fec],
+            adapts: vec![
+                AdaptSpec::Static,
+                AdaptSpec::greedy(3, EstimatorSpec::default_beta()),
+            ],
+            replicas: 3,
+            ..synthetic_des_spec()
+        };
+        let a = CampaignEngine::new(1).run(&spec);
+        let b = CampaignEngine::new(5).run(&spec);
+        assert_eq!(a, b, "scheme cells must stay replica-deterministic");
+    }
+
+    #[test]
+    fn slotted_cells_have_no_wire_metric() {
+        let out = CampaignEngine::new(1).run(&tiny_spec());
+        assert!(out.iter().all(|s| s.wire_per_payload.is_none()));
+    }
+
+    #[test]
+    fn payload_free_des_cells_summarize_without_a_wire_metric() {
+        // n = 1: the synthetic probe sends nothing, so every replica's
+        // wire ratio is undefined — the cell must summarize cleanly
+        // with wire_per_payload = None, not panic sorting NaNs.
+        let spec = CampaignSpec {
+            ns: vec![1, 4],
+            schemes: vec![SchemeSpec::Blast],
+            ..synthetic_des_spec()
+        };
+        let out = CampaignEngine::new(2).run(&spec);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].wire_per_payload.is_none(), "n = 1 has no wire");
+        assert!(out[1].wire_per_payload.is_some(), "n = 4 measures it");
+        assert_eq!(out[0].completed_frac, 1.0);
+    }
+
+    #[test]
+    fn validate_rejects_incompatible_schemes() {
+        // Non-k-copy schemes on slotted cells (tiny_spec is slotted).
+        let bad = CampaignSpec { schemes: vec![SchemeSpec::Blast], ..tiny_spec() };
+        assert!(bad.validate().unwrap_err().contains("packet-level"));
+        // tcplike cannot run adaptively: no parameter to tune.
+        let bad = CampaignSpec {
+            schemes: vec![SchemeSpec::KCopy, SchemeSpec::TcpLike],
+            adapts: vec![AdaptSpec::greedy(3, EstimatorSpec::default_beta())],
+            ..synthetic_des_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("tcplike"));
+        // tcplike's AIMD window rounds carry no §II recompute meaning.
+        let bad = CampaignSpec {
+            schemes: vec![SchemeSpec::TcpLike],
+            policies: vec![RetransmitPolicy::Selective, RetransmitPolicy::WholeRound],
+            ..synthetic_des_spec()
+        };
+        assert!(bad.validate().unwrap_err().contains("whole-round"));
+        // Empty axis.
+        let bad = CampaignSpec { schemes: vec![], ..synthetic_des_spec() };
+        assert!(bad.validate().unwrap_err().contains("schemes"));
+        // All four schemes on a DES workload with static control: fine.
+        let ok = CampaignSpec {
+            schemes: SchemeSpec::ALL.to_vec(),
+            ..synthetic_des_spec()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

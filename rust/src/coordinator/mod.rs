@@ -23,7 +23,10 @@
 //! (`report::artifacts`). The `adapts` axis (`crate::adapt::AdaptSpec`)
 //! crosses the grid with duplication-control policies, so
 //! adaptive-vs-best-static comparisons across iid and bursty channels
-//! are one campaign flag (`--adapt`).
+//! are one campaign flag (`--adapt`); the `schemes` axis
+//! (`crate::net::scheme::SchemeSpec`, `--scheme`) crosses it with the
+//! phase-reliability mechanism itself — k-copy vs blast+retransmit vs
+//! FEC parity vs the TCP baseline under identical loss regimes.
 
 pub mod campaign;
 pub mod queue;

@@ -11,7 +11,9 @@
 //!   table emission (the sandbox has no external crates beyond `xla`).
 //! * [`simcore`] — a generic discrete-event simulation engine.
 //! * [`net`] — the lossy datagram network: loss models, links, the
-//!   ack/k-copies/timeout protocol, plus the slotted *rounds* simulator that
+//!   ack/timeout phase protocol with pluggable reliability schemes
+//!   (k-copy / blast+retransmit / FEC parity / TCP-like baseline —
+//!   [`net::scheme`]), plus the slotted *rounds* simulator that
 //!   matches the paper's stochastic abstraction exactly.
 //! * [`measure`] — the synthetic PlanetLab measurement campaign (Figs 1–3).
 //! * [`model`] — the analytic library: conceptual model (§II), L-BSP (§III),

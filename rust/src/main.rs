@@ -24,6 +24,10 @@
 //!               [--scenario stationary,shift,hetero]  loss-environment axis
 //!                 [--shift-at STEP] [--shift-p P]     (regime shift target)
 //!                 [--spread S]                        (hetero tier spread)
+//!               [--scheme kcopy,blast,fec,tcplike]    reliability-scheme axis
+//!                 (k axis = scheme parameter: copies | retransmit
+//!                  budget | parity group size; tcplike ignores it;
+//!                  non-kcopy schemes need a packet-level workload)
 //!               Monte-Carlo campaign grid (worker-count invariant)
 //! lbsp diff <baseline.json> <candidate.json> [--threshold Z]
 //!               flag speedup-mean regressions beyond Z combined sigma
@@ -48,6 +52,7 @@ use lbsp::model::{Comm, LbspParams};
 use lbsp::net::link::Link;
 use lbsp::net::protocol::RetransmitPolicy;
 use lbsp::net::rounds::estimate_rho;
+use lbsp::net::scheme::SchemeSpec;
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::Network;
 use lbsp::report;
@@ -481,14 +486,28 @@ fn campaign_scenarios(o: &Opts) -> Vec<ScenarioSpec> {
         .collect()
 }
 
+/// `--scheme` (comma-separated names) → the campaign's reliability-
+/// scheme axis. Non-k-copy schemes need a packet-level workload
+/// (validated); the k axis is each scheme's parameter.
+fn campaign_schemes(o: &Opts) -> Vec<SchemeSpec> {
+    o.str("scheme", "kcopy")
+        .split(',')
+        .map(|name| SchemeSpec::parse(name).unwrap_or_else(|e| panic!("--scheme: {e}")))
+        .collect()
+}
+
 fn cmd_campaign(args: &Args) {
     let o = Opts::new(args, "campaign");
     let workers = o.usize("workers", 4);
-    // Adaptive control and non-stationary scenarios need a packet-level
-    // DES workload; keep `slotted` as the fast default only for plain
-    // static/stationary grids.
+    // Adaptive control, non-stationary scenarios and non-k-copy
+    // reliability schemes need a packet-level DES workload; keep
+    // `slotted` as the fast default only for plain static/stationary
+    // k-copy grids.
     let needs_des = o.str("adapt", "static") != "static"
-        || o.str("scenario", "stationary").split(',').any(|s| s.trim() != "stationary");
+        || o.str("scenario", "stationary").split(',').any(|s| s.trim() != "stationary")
+        || o.str("scheme", "kcopy").split(',').any(|s| {
+            !matches!(s.trim(), "kcopy" | "k" | "")
+        });
     let default_workload = if needs_des { "synthetic" } else { "slotted" };
     let (workload, default_ns) = campaign_workload(&o.str("workload", default_workload), &o);
     let sem_target = args.get("sem-target").map(|s| {
@@ -497,6 +516,7 @@ fn cmd_campaign(args: &Args) {
     let ks = args.get_list_or("ks", &[1u32, 2, 3]);
     let adapts = campaign_adapts(&o, &ks);
     let scenarios = campaign_scenarios(&o);
+    let schemes = campaign_schemes(&o);
     let spec = CampaignSpec {
         workloads: vec![workload],
         ns: args.get_list_or("ns", &default_ns),
@@ -507,6 +527,7 @@ fn cmd_campaign(args: &Args) {
             LossSpec::GilbertElliott { burst_len: o.f64("burst", 8.0) },
         ],
         scenarios,
+        schemes,
         replicas: o.usize("replicas", 8),
         seed: o.usize("seed", 0x9_CA4B) as u64,
         sem_target,

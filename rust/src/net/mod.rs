@@ -13,12 +13,19 @@
 //! Loss models live in [`loss`]: the paper's iid Bernoulli process plus a
 //! Gilbert–Elliott bursty channel as an ablation (the paper assumes
 //! independence; the ablation quantifies what burstiness does to ρ̂).
+//!
+//! The reliability *mechanism* the protocol wraps around a phase is
+//! pluggable ([`scheme`]): k-copy duplication (the paper), RBUDP-style
+//! blast + selective retransmit, XOR parity FEC, and a flow-level TCP
+//! baseline — see `rust/src/net/README.md` for each scheme's cost
+//! derivation and the regimes where each should win.
 
 pub mod link;
 pub mod loss;
 pub mod packet;
 pub mod protocol;
 pub mod rounds;
+pub mod scheme;
 pub mod tcp;
 pub mod topology;
 pub mod transport;
@@ -26,4 +33,5 @@ pub mod transport;
 pub use link::Link;
 pub use loss::{Bernoulli, GilbertElliott, LossModel, Perfect, PiecewiseStationary};
 pub use packet::{NodeId, Packet, PacketKind};
+pub use scheme::{ReliabilityScheme, SchemeSpec};
 pub use topology::Topology;

@@ -1,10 +1,13 @@
-//! The paper's reliable-phase protocol over UDP (Fig 6).
+//! The reliable-phase protocol over UDP (Fig 6), generic over the
+//! reliability scheme.
 //!
-//! One BSP communication phase injects a set of data packets; the protocol
-//! adds the paper's light-weight reliability: per-packet acknowledgments,
-//! `k`-copy duplication (both directions, matching `p_s^k = (1-p^k)^2`),
-//! a global round timeout of `2τ_k`, and one of two retransmission
-//! disciplines:
+//! One BSP communication phase injects a set of data packets; a
+//! [`ReliabilityScheme`] decides what reliability machinery wraps them:
+//! the paper's `k`-copy duplication (both directions, matching
+//! `p_s^k = (1-p^k)^2`), RBUDP-style blast + selective retransmit, XOR
+//! parity FEC, or the flow-level TCP baseline (which takes the phase
+//! over entirely — see [`crate::net::scheme`]). Orthogonally, one of
+//! two retransmission disciplines bounds *what* is re-sent:
 //!
 //! * [`RetransmitPolicy::WholeRound`] — §II conceptual model: if any packet
 //!   of the round is unacknowledged, *all* packets are retransmitted (and
@@ -18,6 +21,7 @@
 //! Selective) — `rust/tests/sim_vs_model.rs` pins them together.
 
 use super::packet::{NodeId, Packet, PacketKind};
+use super::scheme::{KCopy, ReliabilityScheme};
 use super::transport::{NetEvent, Network};
 
 /// Retransmission discipline for lost packets.
@@ -40,8 +44,9 @@ pub struct Transfer {
 /// Phase configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct PhaseConfig {
-    /// Packet copies `k` (data and ack are both duplicated `k×`, giving
-    /// the paper's `p_s^k = (1 - p^k)^2` per round).
+    /// Uniform scheme parameter `v` (packet copies `k` under k-copy;
+    /// retransmit budget under blast; parity group size under FEC) —
+    /// the fallback when no per-transfer parameter vector is given.
     pub copies: u32,
     /// Round timeout `2τ_k` in seconds.
     pub timeout_s: f64,
@@ -69,10 +74,14 @@ pub struct PhaseReport {
     pub rounds: u32,
     /// Virtual time from phase start to the last acknowledgment arriving.
     pub completion_s: f64,
-    /// Model-timing duration: `rounds × timeout` (what L-BSP charges).
+    /// Model-timing duration: `rounds × timeout` (what L-BSP charges;
+    /// the TCP-like scheme charges its own flow clock instead).
     pub model_duration_s: f64,
     pub data_packets_sent: u64,
     pub ack_packets_sent: u64,
+    /// Bytes the phase put on the wire (every copy, acks and parity
+    /// included) — the numerator of `wire_bytes / payload_bytes`.
+    pub wire_bytes_sent: u64,
     pub completed: bool,
 }
 
@@ -80,6 +89,10 @@ pub struct PhaseReport {
 /// their upper sequence bits so stale events from earlier phases on the
 /// same [`Network`] are ignored.
 static PHASE_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Sequence-tag bit marking a parity packet; the low 23 bits then carry
+/// the parity-group id instead of a transfer index.
+const PARITY_BASE: u64 = 1 << 23;
 
 fn tag(phase: u64, idx: u64) -> u64 {
     (phase << 24) | idx
@@ -89,36 +102,151 @@ fn untag(seq: u64) -> (u64, u64) {
     (seq >> 24, seq & 0xFF_FFFF)
 }
 
-/// Run one reliable communication phase to completion (or abort), with
-/// one copy count for every transfer (`cfg.copies`).
-pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -> PhaseReport {
-    run_phase_with_copies(net, transfers, cfg, None)
+/// Receiver-side XOR parity bookkeeping for one phase. Groups are
+/// created per round over the still-missing transfers of one directed
+/// pair; arrivals (data or parity, from any round — XOR recovery is
+/// round-agnostic once the bytes are buffered) resolve groups, and a
+/// resolved group with exactly one missing member recovers it.
+struct ParityState {
+    groups: Vec<ParityGroup>,
+    /// Groups each transfer index is a member of (one per round it was
+    /// grouped in).
+    member_groups: Vec<Vec<u32>>,
+    /// Transfer payload known at the receiver: its data packet arrived,
+    /// or a parity group recovered it.
+    deliverable: Vec<bool>,
 }
 
-/// [`run_phase`] with **per-transfer** copy counts: `copies[idx]` is
-/// the duplication factor of `transfers[idx]`, for both its data
-/// packets and the acknowledgments the receiver returns (the paper's
-/// `p_s^k = (1−p^k)²` holds per link at that link's k). `None` falls
-/// back to the uniform `cfg.copies`. This is the transport half of
-/// per-destination duplication control — a per-link k controller hands
-/// each transfer the k its destination pair's loss estimate warrants.
+struct ParityGroup {
+    members: Vec<u32>,
+    parity_arrived: bool,
+    resolved: bool,
+}
+
+impl ParityState {
+    fn new(n_transfers: usize) -> ParityState {
+        ParityState {
+            groups: Vec::new(),
+            member_groups: vec![Vec::new(); n_transfers],
+            deliverable: vec![false; n_transfers],
+        }
+    }
+
+    /// Open a new group over `members`; returns its id.
+    fn open_group(&mut self, members: Vec<u32>) -> u64 {
+        let gid = self.groups.len() as u64;
+        assert!(gid < PARITY_BASE, "phase exhausted the parity-group id space");
+        for &m in &members {
+            self.member_groups[m as usize].push(gid as u32);
+        }
+        self.groups.push(ParityGroup { members, parity_arrived: false, resolved: false });
+        gid
+    }
+
+    /// Parity packet for group `gid` arrived; recovered transfer
+    /// indices are appended to `out`.
+    fn on_parity(&mut self, gid: usize, out: &mut Vec<usize>) {
+        if let Some(g) = self.groups.get_mut(gid) {
+            g.parity_arrived = true;
+            self.drain(vec![gid], out);
+        }
+    }
+
+    /// Data for transfer `idx` arrived; recovered indices → `out`.
+    fn on_data(&mut self, idx: usize, out: &mut Vec<usize>) {
+        self.deliverable[idx] = true;
+        let work: Vec<usize> =
+            self.member_groups[idx].iter().map(|&g| g as usize).collect();
+        self.drain(work, out);
+    }
+
+    /// Resolve groups until the cascade settles: a group whose parity
+    /// arrived and whose members are all-but-one deliverable recovers
+    /// the missing one, which may in turn resolve other groups.
+    fn drain(&mut self, mut work: Vec<usize>, out: &mut Vec<usize>) {
+        while let Some(gid) = work.pop() {
+            let g = &self.groups[gid];
+            if g.resolved || !g.parity_arrived {
+                continue;
+            }
+            let mut missing = None;
+            let mut n_missing = 0;
+            for &m in &g.members {
+                if !self.deliverable[m as usize] {
+                    missing = Some(m as usize);
+                    n_missing += 1;
+                }
+            }
+            if n_missing > 1 {
+                continue;
+            }
+            self.groups[gid].resolved = true;
+            if let Some(j) = missing {
+                self.deliverable[j] = true;
+                out.push(j);
+                work.extend(self.member_groups[j].iter().map(|&g2| g2 as usize));
+            }
+        }
+    }
+}
+
+/// Run one reliable communication phase to completion (or abort) under
+/// the paper's k-copy scheme with one copy count for every transfer
+/// (`cfg.copies`). Thin shim over [`run_phase_scheme`], kept for the
+/// many k-copy call sites; new code should pass a scheme explicitly.
+pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -> PhaseReport {
+    run_phase_scheme(net, transfers, cfg, &KCopy, None)
+}
+
+/// [`run_phase`] with **per-transfer** copy counts — the k-copy shim of
+/// [`run_phase_scheme`], kept for per-link duplication call sites
+/// (`copies[idx]` duplicates `transfers[idx]` and its acks at that
+/// link's k, so `p_s^k = (1−p^k)²` holds per link). New code should
+/// pass a scheme explicitly.
 pub fn run_phase_with_copies(
     net: &mut Network,
     transfers: &[Transfer],
     cfg: &PhaseConfig,
     copies: Option<&[u32]>,
 ) -> PhaseReport {
-    assert!(cfg.copies >= 1, "k must be >= 1");
-    if let Some(ks) = copies {
-        assert_eq!(ks.len(), transfers.len(), "one copy count per transfer");
-        assert!(ks.iter().all(|&k| k >= 1), "every per-transfer k must be >= 1");
+    run_phase_scheme(net, transfers, cfg, &KCopy, copies)
+}
+
+/// Run one reliable communication phase to completion (or abort) under
+/// an arbitrary [`ReliabilityScheme`] — the single phase-transfer entry
+/// point every layer drives.
+///
+/// `params[idx]` is the scheme parameter of `transfers[idx]` (copies
+/// under k-copy, retransmit budget under blast, parity group size under
+/// FEC — the per-link controller hands each transfer the parameter its
+/// destination pair's loss estimate warrants); `None` falls back to the
+/// uniform `cfg.copies`. A flow-level scheme (TCP-like) takes the phase
+/// over entirely and the round loop never starts.
+pub fn run_phase_scheme(
+    net: &mut Network,
+    transfers: &[Transfer],
+    cfg: &PhaseConfig,
+    scheme: &dyn ReliabilityScheme,
+    params: Option<&[u32]>,
+) -> PhaseReport {
+    assert!(cfg.copies >= 1, "scheme parameter must be >= 1");
+    if let Some(vs) = params {
+        assert_eq!(vs.len(), transfers.len(), "one copy count per transfer");
+        assert!(vs.iter().all(|&v| v >= 1), "every per-transfer k must be >= 1");
     }
-    let k_of = |idx: usize| copies.map_or(cfg.copies, |ks| ks[idx]);
-    assert!(transfers.len() < (1 << 24), "phase too large for seq tagging");
+    if let Some(report) = scheme.run_flow(net, transfers, cfg) {
+        return report;
+    }
+    let v_of = |idx: usize| params.map_or(cfg.copies, |vs| vs[idx]);
+    assert!(
+        (transfers.len() as u64) < PARITY_BASE,
+        "phase too large for seq tagging"
+    );
     let phase = PHASE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let t0 = net.now();
     let data0 = net.stats.data_sent;
     let acks0 = net.stats.acks_sent;
+    let bytes0 = net.stats.bytes_sent;
 
     let mut unacked: Vec<bool> = vec![true; transfers.len()];
     let mut n_unacked = transfers.len();
@@ -128,26 +256,72 @@ pub fn run_phase_with_copies(
     let mut acked_in_round: Vec<u64> = vec![u64::MAX; transfers.len()];
     let mut round: u64 = 0;
     let mut last_ack_time = t0;
+    // Parity machinery only for schemes that ask for it (the group size
+    // is parameter-independent in its presence/absence).
+    let mut parity: Option<ParityState> =
+        scheme.parity_group(1).map(|_| ParityState::new(transfers.len()));
 
-    let send_round = |net: &mut Network, unacked: &[bool], round: u64| {
-        for (idx, tr) in transfers.iter().enumerate() {
-            let resend = match cfg.policy {
-                RetransmitPolicy::WholeRound => true,
-                RetransmitPolicy::Selective => unacked[idx],
-            };
-            if !resend {
-                continue;
+    let send_round =
+        |net: &mut Network, unacked: &[bool], round: u64, parity: &mut Option<ParityState>| {
+            // Per-pair resend lists for parity grouping (keyed by first
+            // occurrence so the emission order is deterministic; phases
+            // touch few distinct pairs, so the linear pair scan is off
+            // the hot path).
+            let mut per_pair: Vec<(NodeId, NodeId, Vec<u32>)> = Vec::new();
+            for (idx, tr) in transfers.iter().enumerate() {
+                let resend = match cfg.policy {
+                    RetransmitPolicy::WholeRound => true,
+                    RetransmitPolicy::Selective => unacked[idx],
+                };
+                if !resend {
+                    continue;
+                }
+                let plan = scheme.wire_plan(round, v_of(idx));
+                let seq = tag(phase, idx as u64);
+                for copy in 0..plan.data_copies {
+                    net.send(Packet::data(tr.src, tr.dst, seq, copy, tr.bytes));
+                }
+                if parity.is_some() {
+                    match per_pair
+                        .iter_mut()
+                        .find(|(s, d, _)| (*s, *d) == (tr.src, tr.dst))
+                    {
+                        Some((_, _, idxs)) => idxs.push(idx as u32),
+                        None => per_pair.push((tr.src, tr.dst, vec![idx as u32])),
+                    }
+                }
             }
-            for copy in 0..k_of(idx) {
-                net.send(Packet::data(tr.src, tr.dst, tag(phase, idx as u64), copy, tr.bytes));
+            // Parity: chunk each pair's resend list into groups of that
+            // pair's group size (the parameter of the chunk's first
+            // member — identical across a pair under global and
+            // per-link control alike) and emit one XOR parity packet
+            // per group, sized by its largest member.
+            if let Some(ps) = parity.as_mut() {
+                for (src, dst, idxs) in per_pair {
+                    let mut start = 0;
+                    while start < idxs.len() {
+                        let g = scheme
+                            .parity_group(v_of(idxs[start] as usize))
+                            .expect("parity state implies a parity scheme");
+                        let members: Vec<u32> =
+                            idxs[start..(start + g).min(idxs.len())].to_vec();
+                        start += members.len();
+                        let bytes = members
+                            .iter()
+                            .map(|&m| transfers[m as usize].bytes)
+                            .max()
+                            .expect("groups are non-empty");
+                        let gid = ps.open_group(members);
+                        net.send(Packet::data(src, dst, tag(phase, PARITY_BASE | gid), 0, bytes));
+                    }
+                }
             }
-        }
-        // One global round timer. node 0 is arbitrary; the token encodes
-        // (phase, round) for staleness filtering.
-        net.arm_timer(0, tag(phase, round), cfg.timeout_s);
-    };
+            // One global round timer. node 0 is arbitrary; the token encodes
+            // (phase, round) for staleness filtering.
+            net.arm_timer(0, tag(phase, round), cfg.timeout_s);
+        };
 
-    send_round(net, &unacked, round);
+    send_round(net, &unacked, round, &mut parity);
 
     while n_unacked > 0 {
         let Some((now, ev)) = net.step() else {
@@ -163,13 +337,34 @@ pub fn run_phase_with_copies(
                 }
                 match pkt.kind {
                     PacketKind::Data => {
-                        // Ack once per round per seq (dedups the k copies).
-                        let e = &mut acked_in_round[idx as usize];
-                        if *e != round {
-                            *e = round;
-                            let tr = &transfers[idx as usize];
-                            for copy in 0..k_of(idx as usize) {
-                                net.send(Packet::ack(tr.dst, tr.src, pkt.seq, copy));
+                        // Transfers recovered by this arrival (the
+                        // packet itself, plus any parity cascade).
+                        let mut known = Vec::new();
+                        if idx & PARITY_BASE != 0 {
+                            let gid = (idx & (PARITY_BASE - 1)) as usize;
+                            parity
+                                .as_mut()
+                                .expect("parity packets only fly with parity on")
+                                .on_parity(gid, &mut known);
+                        } else {
+                            if let Some(ps) = parity.as_mut() {
+                                ps.on_data(idx as usize, &mut known);
+                            }
+                            known.push(idx as usize);
+                        }
+                        // Ack once per round per seq (dedups the k
+                        // copies); recovered members ack exactly like
+                        // direct arrivals.
+                        for i in known {
+                            let e = &mut acked_in_round[i];
+                            if *e != round {
+                                *e = round;
+                                let tr = &transfers[i];
+                                let plan = scheme.wire_plan(round, v_of(i));
+                                let seq = tag(phase, i as u64);
+                                for copy in 0..plan.ack_copies {
+                                    net.send(Packet::ack(tr.dst, tr.src, seq, copy));
+                                }
                             }
                         }
                     }
@@ -199,10 +394,11 @@ pub fn run_phase_with_copies(
                         model_duration_s: cfg.max_rounds as f64 * cfg.timeout_s,
                         data_packets_sent: net.stats.data_sent - data0,
                         ack_packets_sent: net.stats.acks_sent - acks0,
+                        wire_bytes_sent: net.stats.bytes_sent - bytes0,
                         completed: false,
                     };
                 }
-                send_round(net, &unacked, round);
+                send_round(net, &unacked, round, &mut parity);
             }
         }
     }
@@ -214,6 +410,7 @@ pub fn run_phase_with_copies(
         model_duration_s: rounds as f64 * cfg.timeout_s,
         data_packets_sent: net.stats.data_sent - data0,
         ack_packets_sent: net.stats.acks_sent - acks0,
+        wire_bytes_sent: net.stats.bytes_sent - bytes0,
         completed: n_unacked == 0,
     }
 }
@@ -222,6 +419,7 @@ pub fn run_phase_with_copies(
 mod tests {
     use super::*;
     use crate::net::link::Link;
+    use crate::net::scheme::{BlastRetransmit, FecParity, TcpLike};
     use crate::net::topology::Topology;
     use crate::util::stats::Online;
 
@@ -443,5 +641,214 @@ mod tests {
     fn seq_tagging_roundtrips() {
         let s = tag(77, 123);
         assert_eq!(untag(s), (77, 123));
+        let p = tag(77, PARITY_BASE | 9);
+        let (ph, idx) = untag(p);
+        assert_eq!(ph, 77);
+        assert_eq!(idx & PARITY_BASE, PARITY_BASE);
+        assert_eq!(idx & (PARITY_BASE - 1), 9);
+    }
+
+    #[test]
+    fn wire_bytes_cover_data_copies_and_acks() {
+        let mut net = net_with_loss(2, 0.0, 8);
+        let transfers = [Transfer { src: 0, dst: 1, bytes: 1000 }];
+        let r = run_phase(
+            &mut net,
+            &transfers,
+            &PhaseConfig { copies: 3, ..Default::default() },
+        );
+        assert!(r.completed);
+        assert_eq!(
+            r.wire_bytes_sent,
+            3 * 1000 + 3 * crate::net::packet::ACK_BYTES
+        );
+    }
+
+    #[test]
+    fn blast_with_zero_budget_is_wire_identical_to_kcopy_k1() {
+        // The zero-budget blast (retransmit rounds send one copy) must
+        // reproduce k-copy at k = 1 event-for-event: same seed, same
+        // NetStats, same report.
+        for seed in 0..10 {
+            let mut net_k = net_with_loss(4, 0.3, 4000 + seed);
+            let rk = run_phase_scheme(
+                &mut net_k,
+                &all_pairs_phase(4),
+                &PhaseConfig::default(),
+                &KCopy,
+                None,
+            );
+            let mut net_b = net_with_loss(4, 0.3, 4000 + seed);
+            let rb = run_phase_scheme(
+                &mut net_b,
+                &all_pairs_phase(4),
+                &PhaseConfig::default(),
+                &BlastRetransmit,
+                None,
+            );
+            assert_eq!(rk.rounds, rb.rounds);
+            assert_eq!(rk.data_packets_sent, rb.data_packets_sent);
+            assert_eq!(rk.ack_packets_sent, rb.ack_packets_sent);
+            assert_eq!(rk.wire_bytes_sent, rb.wire_bytes_sent);
+            assert_eq!(format!("{:?}", net_k.stats), format!("{:?}", net_b.stats));
+        }
+    }
+
+    #[test]
+    fn blast_spends_its_budget_only_on_retransmit_rounds() {
+        // Lossless: blast at v = 4 sends every packet exactly once (the
+        // budget never activates) while k-copy at 4 quadruples the wire.
+        let mut net = net_with_loss(3, 0.0, 11);
+        let cfg = PhaseConfig { copies: 4, ..Default::default() };
+        let r = run_phase_scheme(&mut net, &all_pairs_phase(3), &cfg, &BlastRetransmit, None);
+        assert!(r.completed);
+        assert_eq!(r.rounds, 1);
+        assert_eq!(r.data_packets_sent, 6);
+        assert_eq!(r.ack_packets_sent, 6);
+        let mut net = net_with_loss(3, 0.0, 11);
+        let r = run_phase_scheme(&mut net, &all_pairs_phase(3), &cfg, &KCopy, None);
+        assert_eq!(r.data_packets_sent, 24);
+    }
+
+    #[test]
+    fn blast_budget_cuts_retransmit_rounds_under_loss() {
+        let mut r1 = Online::new();
+        let mut r4 = Online::new();
+        let transfers = [Transfer { src: 0, dst: 1, bytes: 1024 }; 8];
+        for seed in 0..40 {
+            let mut net = net_with_loss(2, 0.4, 6000 + seed);
+            let cfg = PhaseConfig { copies: 1, ..Default::default() };
+            r1.push(
+                run_phase_scheme(&mut net, &transfers, &cfg, &BlastRetransmit, None).rounds
+                    as f64,
+            );
+            let mut net = net_with_loss(2, 0.4, 6000 + seed);
+            let cfg = PhaseConfig { copies: 4, ..Default::default() };
+            r4.push(
+                run_phase_scheme(&mut net, &transfers, &cfg, &BlastRetransmit, None).rounds
+                    as f64,
+            );
+        }
+        assert!(
+            r4.mean() < r1.mean(),
+            "budget 4 mean {} vs budget 1 mean {}",
+            r4.mean(),
+            r1.mean()
+        );
+    }
+
+    #[test]
+    fn fec_sends_one_parity_per_group_and_completes_lossless() {
+        // 6 transfers on one pair, group size 3: 6 data + 2 parity.
+        let mut net = net_with_loss(2, 0.0, 21);
+        let transfers = [Transfer { src: 0, dst: 1, bytes: 1024 }; 6];
+        let cfg = PhaseConfig { copies: 3, ..Default::default() };
+        let r = run_phase_scheme(&mut net, &transfers, &cfg, &FecParity, None);
+        assert!(r.completed);
+        assert_eq!(r.rounds, 1);
+        assert_eq!(r.data_packets_sent, 8, "6 data + 2 parity");
+        assert_eq!(r.ack_packets_sent, 6, "parity is never acked");
+    }
+
+    #[test]
+    fn fec_groups_never_span_pairs() {
+        // 2 transfers to node 1 then 2 to node 2 with group size 4: the
+        // pair boundary must split the grouping (one parity packet per
+        // destination), or a parity packet would XOR payloads two
+        // different receivers hold halves of.
+        let mut net = net_with_loss(3, 0.0, 22);
+        let transfers = [
+            Transfer { src: 0, dst: 1, bytes: 512 },
+            Transfer { src: 0, dst: 1, bytes: 512 },
+            Transfer { src: 0, dst: 2, bytes: 512 },
+            Transfer { src: 0, dst: 2, bytes: 512 },
+        ];
+        let cfg = PhaseConfig { copies: 4, ..Default::default() };
+        let r = run_phase_scheme(&mut net, &transfers, &cfg, &FecParity, None);
+        assert!(r.completed);
+        assert_eq!(r.data_packets_sent, 4 + 2, "4 data + 1 parity per pair");
+        let (sent, _) = net.pair_counters();
+        assert_eq!(sent[1], 3); // 0 -> 1: 2 data + 1 parity
+        assert_eq!(sent[2], 3); // 0 -> 2: 2 data + 1 parity
+    }
+
+    #[test]
+    fn fec_recovers_single_loss_without_extra_round() {
+        // Deterministic single loss: with the group's other members and
+        // the parity through, the receiver must reconstruct and ack the
+        // lost member in round 1. Statistically: FEC's mean rounds at
+        // moderate loss must beat the plain single-copy run.
+        let mut plain = Online::new();
+        let mut fec = Online::new();
+        let transfers = [Transfer { src: 0, dst: 1, bytes: 1024 }; 8];
+        for seed in 0..60 {
+            let mut net = net_with_loss(2, 0.12, 3000 + seed);
+            let cfg = PhaseConfig { copies: 1, ..Default::default() };
+            plain.push(run_phase_scheme(&mut net, &transfers, &cfg, &KCopy, None).rounds as f64);
+            let mut net = net_with_loss(2, 0.12, 3000 + seed);
+            let cfg = PhaseConfig { copies: 4, ..Default::default() };
+            fec.push(run_phase_scheme(&mut net, &transfers, &cfg, &FecParity, None).rounds as f64);
+        }
+        assert!(
+            fec.mean() < plain.mean(),
+            "fec mean {} vs plain mean {}",
+            fec.mean(),
+            plain.mean()
+        );
+    }
+
+    #[test]
+    fn fec_still_terminates_under_heavy_loss() {
+        let mut net = net_with_loss(2, 0.45, 77);
+        let transfers = [Transfer { src: 0, dst: 1, bytes: 1024 }; 12];
+        let cfg = PhaseConfig { copies: 3, ..Default::default() };
+        let r = run_phase_scheme(&mut net, &transfers, &cfg, &FecParity, None);
+        assert!(r.completed);
+        assert!(r.rounds >= 2, "0.45 loss over 12 packets almost surely retries");
+    }
+
+    #[test]
+    fn tcplike_takes_over_the_phase() {
+        let mut net = net_with_loss(3, 0.1, 31);
+        let cfg = PhaseConfig::default();
+        let r = run_phase_scheme(&mut net, &all_pairs_phase(3), &cfg, &TcpLike::default(), None);
+        assert!(r.completed);
+        assert!(r.rounds >= 1);
+        assert!(r.model_duration_s > 0.0, "tcp charges its own clock");
+        assert!(r.data_packets_sent >= 6, "every segment at least once");
+        assert!(r.wire_bytes_sent > 0);
+        assert_eq!(net.pending(), 0, "flow-level scheme schedules no DES events");
+    }
+
+    #[test]
+    fn tcplike_loss_inflates_phase_time() {
+        let time = |p: f64, seed| {
+            let mut net = net_with_loss(2, p, seed);
+            let transfers = [Transfer { src: 0, dst: 1, bytes: 4096 }; 64];
+            run_phase_scheme(
+                &mut net,
+                &transfers,
+                &PhaseConfig::default(),
+                &TcpLike::default(),
+                None,
+            )
+            .model_duration_s
+        };
+        let t_clean = time(0.001, 51);
+        let t_lossy = time(0.15, 52);
+        assert!(
+            t_lossy > 2.0 * t_clean,
+            "15% loss must collapse TCP: {t_lossy} vs {t_clean}"
+        );
+    }
+
+    #[test]
+    fn tcplike_respects_the_round_cap() {
+        let mut net = net_with_loss(2, 1.0, 61);
+        let transfers = [Transfer { src: 0, dst: 1, bytes: 1024 }];
+        let cfg = PhaseConfig { max_rounds: 7, ..Default::default() };
+        let r = run_phase_scheme(&mut net, &transfers, &cfg, &TcpLike::default(), None);
+        assert!(!r.completed);
+        assert_eq!(r.rounds, 7);
     }
 }

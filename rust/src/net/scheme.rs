@@ -1,0 +1,534 @@
+//! Pluggable phase-reliability schemes.
+//!
+//! The paper motivates k-copy duplication by comparison with UDP
+//! bulk-transfer protocols — RBUDP's blast-then-selective-retransmit,
+//! Tsunami, SABUL — and with TCP itself, yet k-copy used to be wired
+//! through the phase protocol as *the* reliability mechanism. This
+//! module makes the mechanism a first-class axis: a
+//! [`ReliabilityScheme`] decides, per round, what goes on the wire for
+//! each still-unacknowledged transfer, and exposes the cost model the
+//! timeout formula and the adaptive controllers optimize. Four schemes
+//! ship:
+//!
+//! * [`KCopy`] — the paper's mechanism: every round sends `v` copies of
+//!   each missing packet and the receiver mirrors `v` ack copies
+//!   (`p_s = (1−p^v)²`). The per-transfer parameter `v` is the k axis,
+//!   so `KPolicy::PerLink` duplication control keeps working unchanged.
+//! * [`BlastRetransmit`] — RBUDP-style: round 0 *blasts* every packet
+//!   exactly once, then bitmap-driven selective-retransmit rounds send
+//!   `v` copies of each still-missing packet (the per-packet acks are
+//!   the bitmap, re-sent per round). `v = 1` is pure RBUDP and is
+//!   wire-identical to `KCopy` at k = 1; `v > 1` is a retransmit-round
+//!   duplication budget.
+//! * [`FecParity`] — forward error correction: each round's
+//!   still-missing transfers are grouped per directed pair into XOR
+//!   parity groups of `v` data packets plus one parity packet; any
+//!   single in-group loss is recovered at the receiver without waiting
+//!   a round trip. Smaller groups mean more redundancy.
+//! * [`TcpLike`] — the §I baseline: one AIMD flow per directed pair
+//!   (slow start, fast-retransmit halving, RTO collapse — the
+//!   [`crate::net::tcp`] model) over the same per-pair loss processes,
+//!   simulated at flow level and charged its own clock.
+//!
+//! [`SchemeSpec`] is the `Copy` descriptor campaign cells carry (the
+//! `--scheme` grid axis); [`SchemeSpec::build`] makes the boxed trait
+//! object a [`crate::bsp::BspRuntime`] drives through
+//! [`crate::net::protocol::run_phase_scheme`]. The scheme *parameter*
+//! `v` rides the existing per-transfer copy-count plumbing: the k grid
+//! axis for static cells, the [`crate::adapt`] controller output for
+//! adaptive ones — which is how `GreedyRho`/`HysteresisK` optimize
+//! whichever scheme is active (k for k-copy, the retransmit budget for
+//! blast, the group size for FEC). See `rust/src/net/README.md` for
+//! each scheme's expected-rounds/wire-cost derivation and the regimes
+//! where each should win.
+
+use crate::model::rho;
+
+use super::link::Link;
+use super::packet::{NodeId, PacketKind, ACK_BYTES};
+use super::protocol::{PhaseConfig, PhaseReport, Transfer};
+use super::transport::Network;
+
+/// What a scheme puts on the wire for one still-unacknowledged transfer
+/// in one round: data copies from the sender, ack copies mirrored by
+/// the receiver for a data packet it accepts during that round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WirePlan {
+    pub data_copies: u32,
+    pub ack_copies: u32,
+}
+
+/// One phase-reliability mechanism (object-safe; see module docs).
+///
+/// The protocol loop consults the scheme per round; the BSP layer
+/// consults the cost hooks for the round-timeout formula; the adaptive
+/// controllers consult [`SchemeSpec`]'s copies of the same hooks (the
+/// math lives on the spec so both views share one source of truth).
+pub trait ReliabilityScheme: Send {
+    /// Stable label (artifact/CSV-safe: lowercase, no separators).
+    fn label(&self) -> &'static str;
+
+    /// Wire plan for a transfer still unacknowledged at the start of
+    /// `round` (0 = the opening round), at scheme parameter `v`.
+    fn wire_plan(&self, round: u64, v: u32) -> WirePlan;
+
+    /// XOR parity group size at parameter `v`: `Some(g)` makes the
+    /// protocol add one parity packet per group of ≤ g same-pair
+    /// transfers each round, recovering any single in-group loss
+    /// without a round trip. `None` disables the parity machinery.
+    fn parity_group(&self, v: u32) -> Option<usize> {
+        let _ = v;
+        None
+    }
+
+    /// Copies charged in the round-timeout formula
+    /// `2·(timeout_copies·(c/n)·α + β)` at mean parameter `v_mean` —
+    /// the serialization load of one round relative to sending each
+    /// packet once.
+    fn timeout_copies(&self, v_mean: f64) -> f64;
+
+    /// Per-transfer round-failure probability `q` at loss `p` and
+    /// parameter `v` — the cost-model hook `ρ̂(q, c)` predictions and
+    /// the adaptive parameter solve run on.
+    fn round_failure_q(&self, p: f64, v: u32) -> f64;
+
+    /// Flow-level takeover: a scheme that simulates its own timing
+    /// (TCP-like) runs the whole phase here and the round-driven loop
+    /// never starts. `None` (the default) uses the round loop.
+    fn run_flow(
+        &self,
+        net: &mut Network,
+        transfers: &[Transfer],
+        cfg: &PhaseConfig,
+    ) -> Option<PhaseReport> {
+        let _ = (net, transfers, cfg);
+        None
+    }
+}
+
+/// The paper's k-copy duplication (current behavior): `v` data copies
+/// and `v` mirrored ack copies every round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KCopy;
+
+impl ReliabilityScheme for KCopy {
+    fn label(&self) -> &'static str {
+        "kcopy"
+    }
+
+    fn wire_plan(&self, _round: u64, v: u32) -> WirePlan {
+        let v = v.max(1);
+        WirePlan { data_copies: v, ack_copies: v }
+    }
+
+    fn timeout_copies(&self, v_mean: f64) -> f64 {
+        v_mean.max(1.0)
+    }
+
+    fn round_failure_q(&self, p: f64, v: u32) -> f64 {
+        rho::round_failure_q(p, v.max(1))
+    }
+}
+
+/// RBUDP-style blast + selective retransmit: round 0 sends everything
+/// once; rounds ≥ 1 send `v` copies of each still-missing packet, acks
+/// mirroring the round's copy count. `v = 1` is wire-identical to
+/// [`KCopy`] at k = 1 (the zero-budget case).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlastRetransmit;
+
+impl ReliabilityScheme for BlastRetransmit {
+    fn label(&self) -> &'static str {
+        "blast"
+    }
+
+    fn wire_plan(&self, round: u64, v: u32) -> WirePlan {
+        let v = if round == 0 { 1 } else { v.max(1) };
+        WirePlan { data_copies: v, ack_copies: v }
+    }
+
+    fn timeout_copies(&self, _v_mean: f64) -> f64 {
+        // The blast round serializes each packet once; retransmit
+        // rounds move only the ~q·c missing tail, so the round length
+        // never charges the duplication budget — which is exactly
+        // RBUDP's bargain (cheap rounds, more of them).
+        1.0
+    }
+
+    fn round_failure_q(&self, p: f64, v: u32) -> f64 {
+        // Steady-state (retransmit-round) failure probability; round 0
+        // is the v = 1 case. The controller optimizes the tail rounds —
+        // the only ones `v` influences.
+        rho::round_failure_q(p, v.max(1))
+    }
+}
+
+/// XOR parity FEC: groups of `v` data packets per directed pair carry
+/// one parity packet; the receiver recovers any single in-group loss
+/// from the other `v − 1` members plus the parity, without a round
+/// trip. Acks are sent once (no mirror duplication).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FecParity;
+
+impl ReliabilityScheme for FecParity {
+    fn label(&self) -> &'static str {
+        "fec"
+    }
+
+    fn wire_plan(&self, _round: u64, _v: u32) -> WirePlan {
+        WirePlan { data_copies: 1, ack_copies: 1 }
+    }
+
+    fn parity_group(&self, v: u32) -> Option<usize> {
+        Some(v.max(1) as usize)
+    }
+
+    fn timeout_copies(&self, v_mean: f64) -> f64 {
+        // One copy of every packet plus one parity per group of v.
+        1.0 + 1.0 / v_mean.max(1.0)
+    }
+
+    fn round_failure_q(&self, p: f64, v: u32) -> f64 {
+        SchemeSpec::Fec.round_failure_q(p, v)
+    }
+}
+
+/// Flow-level AIMD TCP baseline (§I): one flow per directed pair over
+/// the network's own loss processes, timed by the fluid approximation
+/// of [`crate::net::tcp`]. Parameter-free (the scheme parameter is
+/// ignored); not adaptively tunable. The reported `rounds` are AIMD
+/// *window* rounds, not synchronized retransmission rounds — §II's
+/// `WholeRound` recompute charge does not apply to them, so pair this
+/// scheme with the `Selective` retransmission policy only (the
+/// campaign validator enforces it; direct `BspRuntime` users must not
+/// combine `with_scheme(TcpLike)` with `WholeRound`).
+#[derive(Clone, Copy, Debug)]
+pub struct TcpLike {
+    /// Receiver/cwnd cap in segments.
+    pub max_window: u32,
+    /// Retransmission timeout (classic minRTO floor).
+    pub rto_s: f64,
+    /// Initial slow-start threshold in segments.
+    pub init_ssthresh: u32,
+}
+
+impl Default for TcpLike {
+    fn default() -> Self {
+        // Mirrors net::tcp::TcpParams::default, minus the per-link
+        // rtt/alpha (those come from each pair's Link).
+        TcpLike { max_window: 64, rto_s: 1.0, init_ssthresh: 32 }
+    }
+}
+
+impl TcpLike {
+    /// Simulate one pair's AIMD flow over the network's loss process.
+    /// Returns (time_s, rounds, completed).
+    fn run_pair_flow(
+        &self,
+        net: &mut Network,
+        src: NodeId,
+        dst: NodeId,
+        segments: &[u64],
+        max_rounds: u32,
+    ) -> (f64, u64, bool) {
+        let link: Link = *net.topology().link(src, dst);
+        let mut remaining: Vec<u64> = segments.to_vec();
+        let mut cwnd: f64 = 1.0;
+        let mut ssthresh = self.init_ssthresh as f64;
+        let mut time = 0.0f64;
+        let mut rounds = 0u64;
+        while !remaining.is_empty() {
+            if rounds >= max_rounds as u64 {
+                return (time, rounds, false);
+            }
+            rounds += 1;
+            let window =
+                (cwnd.floor() as usize).clamp(1, self.max_window as usize).min(remaining.len());
+            let mut delivered_idx: Vec<usize> = Vec::with_capacity(window);
+            let mut ser = 0.0;
+            for (i, &bytes) in remaining.iter().take(window).enumerate() {
+                ser += link.alpha(bytes);
+                if !net.flow_send(src, dst, PacketKind::Data, bytes) {
+                    delivered_idx.push(i);
+                }
+            }
+            // One cumulative ack per round closes the RTT (counted on
+            // the wire so the reverse path's loss process and byte
+            // accounting see it; its loss is subsumed in the next
+            // round's window evolution, as in the fluid model).
+            net.flow_send(dst, src, PacketKind::Ack, ACK_BYTES);
+            time += ser + link.rtt_s;
+            let delivered = delivered_idx.len();
+            for &i in delivered_idx.iter().rev() {
+                remaining.swap_remove(i);
+            }
+            if delivered == window {
+                if cwnd < ssthresh {
+                    cwnd = (cwnd * 2.0).min(ssthresh);
+                } else {
+                    cwnd += 1.0;
+                }
+            } else if delivered == 0 {
+                time += self.rto_s;
+                ssthresh = (cwnd / 2.0).max(1.0);
+                cwnd = 1.0;
+            } else {
+                ssthresh = (cwnd / 2.0).max(1.0);
+                cwnd = ssthresh;
+            }
+            cwnd = cwnd.min(self.max_window as f64);
+        }
+        (time, rounds, true)
+    }
+}
+
+impl ReliabilityScheme for TcpLike {
+    fn label(&self) -> &'static str {
+        "tcplike"
+    }
+
+    fn wire_plan(&self, _round: u64, _v: u32) -> WirePlan {
+        WirePlan { data_copies: 1, ack_copies: 1 }
+    }
+
+    fn timeout_copies(&self, _v_mean: f64) -> f64 {
+        1.0
+    }
+
+    fn round_failure_q(&self, p: f64, _v: u32) -> f64 {
+        rho::round_failure_q(p, 1)
+    }
+
+    fn run_flow(
+        &self,
+        net: &mut Network,
+        transfers: &[Transfer],
+        cfg: &PhaseConfig,
+    ) -> Option<PhaseReport> {
+        let data0 = net.stats.data_sent;
+        let acks0 = net.stats.acks_sent;
+        let bytes0 = net.stats.bytes_sent;
+        // One AIMD flow per directed pair, all pairs concurrent (the
+        // fluid approximation ignores uplink sharing between a node's
+        // flows, as flow-level TCP models do); the phase completes when
+        // the slowest flow does.
+        let mut pair_segments: Vec<(NodeId, NodeId, Vec<u64>)> = Vec::new();
+        for tr in transfers {
+            match pair_segments.iter_mut().find(|(s, d, _)| (*s, *d) == (tr.src, tr.dst)) {
+                Some((_, _, segs)) => segs.push(tr.bytes),
+                None => pair_segments.push((tr.src, tr.dst, vec![tr.bytes])),
+            }
+        }
+        let mut worst_time = 0.0f64;
+        let mut worst_rounds = 0u64;
+        let mut completed = true;
+        for (src, dst, segs) in &pair_segments {
+            let (t, r, ok) = self.run_pair_flow(net, *src, *dst, segs, cfg.max_rounds);
+            worst_time = worst_time.max(t);
+            worst_rounds = worst_rounds.max(r);
+            completed &= ok;
+        }
+        Some(PhaseReport {
+            rounds: worst_rounds.min(u64::from(u32::MAX)) as u32,
+            completion_s: worst_time,
+            model_duration_s: worst_time,
+            data_packets_sent: net.stats.data_sent - data0,
+            ack_packets_sent: net.stats.acks_sent - acks0,
+            wire_bytes_sent: net.stats.bytes_sent - bytes0,
+            completed,
+        })
+    }
+}
+
+/// The `Copy` scheme descriptor campaign cells carry (`--scheme` axis).
+/// Parameter knobs ride the k grid axis, so the spec itself is
+/// knob-free and its labels are byte-stable across PRs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum SchemeSpec {
+    /// k-copy duplication (the paper; current behavior).
+    #[default]
+    KCopy,
+    /// RBUDP-style blast + selective retransmit (`v` = retransmit-round
+    /// copy budget; 1 = pure RBUDP).
+    Blast,
+    /// XOR parity FEC (`v` = parity group size).
+    Fec,
+    /// Flow-level AIMD TCP baseline (parameter-free).
+    TcpLike,
+}
+
+impl SchemeSpec {
+    /// All schemes, in canonical (CLI/artifact) order.
+    pub const ALL: [SchemeSpec; 4] =
+        [SchemeSpec::KCopy, SchemeSpec::Blast, SchemeSpec::Fec, SchemeSpec::TcpLike];
+
+    /// Stable artifact/CSV label; the `scheme` coordinate in v4
+    /// artifacts, diff-matched with `kcopy` as the pre-v4 default.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchemeSpec::KCopy => "kcopy",
+            SchemeSpec::Blast => "blast",
+            SchemeSpec::Fec => "fec",
+            SchemeSpec::TcpLike => "tcplike",
+        }
+    }
+
+    /// Parse a CLI name (`--scheme kcopy,blast,fec,tcplike`).
+    pub fn parse(name: &str) -> Result<SchemeSpec, String> {
+        match name.trim() {
+            "kcopy" | "k" | "" => Ok(SchemeSpec::KCopy),
+            "blast" | "rbudp" => Ok(SchemeSpec::Blast),
+            "fec" | "parity" => Ok(SchemeSpec::Fec),
+            "tcplike" | "tcp" => Ok(SchemeSpec::TcpLike),
+            other => Err(format!("unknown scheme {other:?} (kcopy|blast|fec|tcplike)")),
+        }
+    }
+
+    pub fn is_kcopy(&self) -> bool {
+        matches!(self, SchemeSpec::KCopy)
+    }
+
+    /// Whether the k grid axis is this scheme's parameter (copies for
+    /// k-copy, retransmit budget for blast, group size for FEC). The
+    /// TCP baseline is parameter-free: campaign enumeration pins it to
+    /// the axis' first entry instead of duplicating identical cells.
+    pub fn uses_k_axis(&self) -> bool {
+        !matches!(self, SchemeSpec::TcpLike)
+    }
+
+    /// Whether the adaptive controllers have a parameter to tune.
+    pub fn tunable(&self) -> bool {
+        self.uses_k_axis()
+    }
+
+    /// Build the runnable scheme.
+    pub fn build(&self) -> Box<dyn ReliabilityScheme> {
+        match self {
+            SchemeSpec::KCopy => Box::new(KCopy),
+            SchemeSpec::Blast => Box::new(BlastRetransmit),
+            SchemeSpec::Fec => Box::new(FecParity),
+            SchemeSpec::TcpLike => Box::new(TcpLike::default()),
+        }
+    }
+
+    /// Per-transfer round-failure probability `q(p, v)` — one source of
+    /// truth for the trait impls, the analytic `rho_pred`, and the
+    /// adaptive parameter solve. See `rust/src/net/README.md` for the
+    /// derivations.
+    pub fn round_failure_q(&self, p: f64, v: u32) -> f64 {
+        let v = v.max(1);
+        match self {
+            // Data and ack both duplicated v×: q = 1 − (1 − p^v)².
+            SchemeSpec::KCopy | SchemeSpec::Blast => rho::round_failure_q(p, v),
+            // TCP's window dynamics are not a per-round Bernoulli
+            // process; the single-copy q is the comparable quantity.
+            SchemeSpec::TcpLike => rho::round_failure_q(p, 1),
+            // Data survives directly (1−p) or via single-loss recovery
+            // (lost, the other g−1 members and the parity all arrive:
+            // p·(1−p)^g); the unduplicated ack then survives (1−p).
+            SchemeSpec::Fec => {
+                let s = 1.0 - p;
+                let data_ok = s + p * s.powi(v as i32);
+                1.0 - data_ok * s
+            }
+        }
+    }
+
+    /// Timeout-formula copies at mean parameter `v_mean` (mirrors the
+    /// trait hook; see [`ReliabilityScheme::timeout_copies`]).
+    pub fn timeout_copies(&self, v_mean: f64) -> f64 {
+        match self {
+            SchemeSpec::KCopy => v_mean.max(1.0),
+            SchemeSpec::Blast | SchemeSpec::TcpLike => 1.0,
+            SchemeSpec::Fec => 1.0 + 1.0 / v_mean.max(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_byte_stable() {
+        assert_eq!(SchemeSpec::KCopy.label(), "kcopy");
+        assert_eq!(SchemeSpec::Blast.label(), "blast");
+        assert_eq!(SchemeSpec::Fec.label(), "fec");
+        assert_eq!(SchemeSpec::TcpLike.label(), "tcplike");
+        for s in SchemeSpec::ALL {
+            assert_eq!(s.build().label(), s.label(), "trait and spec labels must agree");
+            assert_eq!(SchemeSpec::parse(s.label()), Ok(s), "labels must round-trip parse");
+        }
+        assert!(SchemeSpec::parse("carrier-pigeon").is_err());
+        assert_eq!(SchemeSpec::parse("rbudp"), Ok(SchemeSpec::Blast));
+        assert_eq!(SchemeSpec::parse(" tcp "), Ok(SchemeSpec::TcpLike));
+    }
+
+    #[test]
+    fn kcopy_plan_mirrors_v_both_ways() {
+        let k = KCopy;
+        for round in [0u64, 1, 7] {
+            for v in [1u32, 2, 4] {
+                let plan = k.wire_plan(round, v);
+                assert_eq!((plan.data_copies, plan.ack_copies), (v, v));
+            }
+        }
+        assert_eq!(k.wire_plan(0, 0).data_copies, 1, "v floors at 1");
+        assert!(k.parity_group(3).is_none());
+        assert_eq!(k.timeout_copies(2.5), 2.5);
+    }
+
+    #[test]
+    fn blast_plan_blasts_once_then_spends_the_budget() {
+        let b = BlastRetransmit;
+        assert_eq!(b.wire_plan(0, 4), WirePlan { data_copies: 1, ack_copies: 1 });
+        assert_eq!(b.wire_plan(1, 4), WirePlan { data_copies: 4, ack_copies: 4 });
+        assert_eq!(b.wire_plan(9, 1), WirePlan { data_copies: 1, ack_copies: 1 });
+        assert_eq!(b.timeout_copies(4.0), 1.0, "round length never charges the budget");
+    }
+
+    #[test]
+    fn fec_plan_sends_once_with_parity_groups() {
+        let f = FecParity;
+        assert_eq!(f.wire_plan(0, 4), WirePlan { data_copies: 1, ack_copies: 1 });
+        assert_eq!(f.parity_group(4), Some(4));
+        assert_eq!(f.parity_group(0), Some(1), "group floors at 1");
+        assert!((f.timeout_copies(4.0) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fec_q_interpolates_between_one_and_two_copies() {
+        // g = 1: the parity is a full duplicate, so the data-success
+        // term must equal k-copy's 1 − p² (the ack differs: FEC sends
+        // it once, k-copy twice).
+        let p: f64 = 0.2;
+        let q_g1 = SchemeSpec::Fec.round_failure_q(p, 1);
+        let expect = 1.0 - (1.0 - p * p) * (1.0 - p);
+        assert!((q_g1 - expect).abs() < 1e-12, "{q_g1} vs {expect}");
+        // Larger groups recover less: q grows toward the single-copy q.
+        let q_g4 = SchemeSpec::Fec.round_failure_q(p, 4);
+        let q_g32 = SchemeSpec::Fec.round_failure_q(p, 32);
+        let q_k1 = SchemeSpec::KCopy.round_failure_q(p, 1);
+        assert!(q_g1 < q_g4 && q_g4 < q_g32, "{q_g1} {q_g4} {q_g32}");
+        assert!(q_g32 < q_k1, "even weak parity beats none: {q_g32} vs {q_k1}");
+    }
+
+    #[test]
+    fn blast_q_at_v1_matches_kcopy_k1() {
+        for p in [0.0, 0.02, 0.15, 0.5] {
+            assert_eq!(
+                SchemeSpec::Blast.round_failure_q(p, 1),
+                SchemeSpec::KCopy.round_failure_q(p, 1),
+            );
+        }
+    }
+
+    #[test]
+    fn zero_loss_makes_every_scheme_reliable() {
+        for s in SchemeSpec::ALL {
+            for v in 1..=4 {
+                assert_eq!(s.round_failure_q(0.0, v), 0.0, "{:?} v={v}", s);
+            }
+        }
+    }
+}

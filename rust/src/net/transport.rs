@@ -9,7 +9,7 @@
 use crate::simcore::{Engine, SimTime, Step};
 use crate::util::prng::Rng;
 
-use super::packet::{NodeId, Packet};
+use super::packet::{NodeId, Packet, PacketKind};
 use super::topology::Topology;
 
 /// Events flowing through the datagram network.
@@ -22,13 +22,17 @@ pub enum NetEvent {
 }
 
 /// Counters the measurement and validation layers read.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct NetStats {
     pub data_sent: u64,
     pub data_delivered: u64,
     pub acks_sent: u64,
     pub acks_delivered: u64,
     pub lost: u64,
+    /// Total bytes put on the wire (every copy of every packet kind,
+    /// parity included) — the numerator of the per-scheme
+    /// wire-efficiency metric `wire_bytes / payload_bytes`.
+    pub bytes_sent: u64,
 }
 
 /// The datagram network: topology + DES engine + per-sender uplink clocks.
@@ -82,11 +86,11 @@ impl Network {
     /// packet is then subject to the pair's loss process; survivors are
     /// delivered after one-way propagation.
     pub fn send(&mut self, pkt: Packet) {
-        use super::packet::PacketKind;
         match pkt.kind {
             PacketKind::Data => self.stats.data_sent += 1,
             PacketKind::Ack => self.stats.acks_sent += 1,
         }
+        self.stats.bytes_sent += pkt.size_bytes;
         let link = *self.topo.link(pkt.src, pkt.dst);
         let ser = SimTime::from_secs_f64(link.alpha(pkt.size_bytes));
         // Packets queue on the sender's uplink.
@@ -104,6 +108,34 @@ impl Network {
         self.engine.schedule_at(arrive, NetEvent::Deliver(pkt));
     }
 
+    /// Flow-level send for schemes that simulate their own timing
+    /// (the TCP-like baseline): charge one wire copy on the stats and
+    /// pair counters and draw its fate from the pair's loss process —
+    /// Gilbert–Elliott burst state included — without scheduling a DES
+    /// event. Returns `true` when the copy is lost. Keeping the
+    /// counters on this path means wire-byte accounting and the
+    /// adaptive loss estimators see flow-level schemes exactly like
+    /// packet-level ones.
+    pub fn flow_send(&mut self, src: NodeId, dst: NodeId, kind: PacketKind, bytes: u64) -> bool {
+        match kind {
+            PacketKind::Data => self.stats.data_sent += 1,
+            PacketKind::Ack => self.stats.acks_sent += 1,
+        }
+        self.stats.bytes_sent += bytes;
+        let pair = src * self.topo.n() + dst;
+        self.pair_sent[pair] += 1;
+        if self.topo.lose(src, dst, &mut self.rng) {
+            self.stats.lost += 1;
+            self.pair_lost[pair] += 1;
+            return true;
+        }
+        match kind {
+            PacketKind::Data => self.stats.data_delivered += 1,
+            PacketKind::Ack => self.stats.acks_delivered += 1,
+        }
+        false
+    }
+
     /// Arm a protocol timer owned by `node` firing after `delay_s`.
     pub fn arm_timer(&mut self, node: NodeId, token: u64, delay_s: f64) {
         self.engine.schedule_in(delay_s, NetEvent::Timer { node, token });
@@ -114,7 +146,6 @@ impl Network {
         match self.engine.step() {
             Step::Event(t, ev) => {
                 if let NetEvent::Deliver(pkt) = ev {
-                    use super::packet::PacketKind;
                     match pkt.kind {
                         PacketKind::Data => self.stats.data_delivered += 1,
                         PacketKind::Ack => self.stats.acks_delivered += 1,
@@ -242,6 +273,38 @@ mod tests {
         assert_eq!(sent[3], 0); // 1 -> 0 saw no traffic
         assert_eq!(sent.iter().sum::<u64>(), 11);
         assert_eq!(lost.iter().sum::<u64>(), net.stats.lost);
+    }
+
+    #[test]
+    fn wire_bytes_count_every_copy() {
+        let mut net = lossless(2);
+        net.send(Packet::data(0, 1, 0, 0, 1000));
+        net.send(Packet::data(0, 1, 0, 1, 1000));
+        net.send(Packet::ack(1, 0, 0, 0));
+        assert_eq!(net.stats.bytes_sent, 2000 + crate::net::packet::ACK_BYTES);
+    }
+
+    #[test]
+    fn flow_send_charges_counters_without_events() {
+        let topo = Topology::uniform(2, Link::default(), 0.25);
+        let mut net = Network::new(topo, 13);
+        let n = 10_000;
+        let mut lost = 0u64;
+        for _ in 0..n {
+            if net.flow_send(0, 1, crate::net::packet::PacketKind::Data, 512) {
+                lost += 1;
+            }
+        }
+        assert_eq!(net.pending(), 0, "flow sends never schedule DES events");
+        assert_eq!(net.stats.data_sent, n);
+        assert_eq!(net.stats.lost, lost);
+        assert_eq!(net.stats.data_delivered, n - lost);
+        assert_eq!(net.stats.bytes_sent, n * 512);
+        let (sent, lost_pairs) = net.pair_counters();
+        assert_eq!(sent[1], n);
+        assert_eq!(lost_pairs[1], lost);
+        let rate = lost as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
     }
 
     #[test]

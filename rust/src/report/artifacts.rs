@@ -4,21 +4,26 @@
 //! No serde is vendored, so both formats are emitted by hand against a
 //! frozen schema (documented in `ROADMAP.md`):
 //!
-//! * **JSON** (`lbsp-campaign/v3`) — one object with the full grid spec
-//!   (every axis incl. the `scenarios` loss-environment axis and the
-//!   `adapts` duplication-control axis, replication policy, seed), the
+//! * **JSON** (`lbsp-campaign/v4`) — one object with the full grid spec
+//!   (every axis incl. the `scenarios` loss-environment axis, the
+//!   `schemes` reliability-mechanism axis and the `adapts`
+//!   duplication-control axis, replication policy, seed), the
 //!   fixed log₂ `rounds_hist_edges`, and one entry per cell carrying
-//!   the grid coordinates (incl. `scenario` and `adapt`), reliability
-//!   fractions (`completed`/`converged`/`validated`), six replica
-//!   [`Summary`] blocks (speedup, rounds, time_s, data_packets,
-//!   k_chosen, p_hat — each n/mean/sem/p10/p50/p90/min/max; `p_hat` is
-//!   `null` on static cells), the per-link `k_spread` /
+//!   the grid coordinates (incl. `scenario`, `scheme` and `adapt`),
+//!   reliability fractions (`completed`/`converged`/`validated`), seven
+//!   replica [`Summary`] blocks (speedup, rounds, time_s, data_packets,
+//!   wire_bytes_per_payload, k_chosen, p_hat — each
+//!   n/mean/sem/p10/p50/p90/min/max; `p_hat` is `null` on static cells
+//!   and `wire_bytes_per_payload` — the scheme's wire-efficiency
+//!   summary, wire bytes per distinct payload byte — is `null` on
+//!   slotted cells), the per-link `k_spread` /
 //!   `p_hat_spread` `{min, mean, max}` blocks (v3; `p_hat_spread` is
 //!   `null` on static cells), the pooled per-phase `rounds_hist`
 //!   counts, and the analytic ρ̂ / S_E predictions. Non-finite floats
-//!   serialize as `null` (JSON has no NaN). v1 and v2 artifacts remain
+//!   serialize as `null` (JSON has no NaN). v1–v3 artifacts remain
 //!   readable — see `report::diff` (missing `scenario` reads as
-//!   `stationary`, missing `adapt` as `static`).
+//!   `stationary`, missing `scheme` as `kcopy`, missing `adapt` as
+//!   `static`).
 //! * **CSV** — the same cells flattened to one row each, full-precision
 //!   floats (`{:?}` round-trip formatting), for spreadsheet/pandas use
 //!   (histogram counts stay JSON-only).
@@ -33,11 +38,12 @@ use crate::coordinator::{CampaignSpec, CellSummary, Spread};
 use crate::util::stats::{LogHist, Summary};
 
 /// Schema tag stamped into every JSON artifact; bump on layout changes.
-pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v3";
+pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v4";
 
 /// Older schema tags, still accepted by the artifact reader.
 pub const CAMPAIGN_SCHEMA_V1: &str = "lbsp-campaign/v1";
 pub const CAMPAIGN_SCHEMA_V2: &str = "lbsp-campaign/v2";
+pub const CAMPAIGN_SCHEMA_V3: &str = "lbsp-campaign/v3";
 
 /// JSON number: round-trip float formatting, `null` for NaN/±∞.
 fn jnum(x: f64) -> String {
@@ -103,7 +109,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
         concat!(
             "{{\"workloads\":{},\"ns\":{},\"ps\":{},\"ks\":{},",
             "\"policies\":{},\"losses\":{},\"topologies\":{},\"scenarios\":{},",
-            "\"adapts\":{},",
+            "\"schemes\":{},\"adapts\":{},",
             "\"replicas\":{},\"seed\":{},\"sem_target\":{},\"max_replicas\":{}}}"
         ),
         jarr(&spec.workloads, |w| jstr(&w.label())),
@@ -114,6 +120,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
         jarr(&spec.losses, |l| jstr(&l.label())),
         jarr(&spec.topologies, |t| jstr(t.label())),
         jarr(&spec.scenarios, |s| jstr(&s.label())),
+        jarr(&spec.schemes, |s| jstr(s.label())),
         jarr(&spec.adapts, |a| jstr(&a.label())),
         spec.replicas,
         spec.seed,
@@ -127,10 +134,11 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
             format!(
                 concat!(
                     "{{\"workload\":{},\"topology\":{},\"loss\":{},\"policy\":{},",
-                    "\"scenario\":{},\"adapt\":{},\"n\":{},\"p\":{},\"k\":{},",
+                    "\"scenario\":{},\"scheme\":{},\"adapt\":{},\"n\":{},\"p\":{},\"k\":{},",
                     "\"replicas\":{},",
                     "\"completed_frac\":{},\"converged_frac\":{},\"validated_frac\":{},",
                     "\"speedup\":{},\"rounds\":{},\"time_s\":{},\"data_packets\":{},",
+                    "\"wire_bytes_per_payload\":{},",
                     "\"k_chosen\":{},\"k_spread\":{},\"p_hat\":{},\"p_hat_spread\":{},",
                     "\"rounds_hist\":{},",
                     "\"rho_pred\":{},\"speedup_pred\":{}}}"
@@ -140,6 +148,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
                 jstr(&s.cell.loss.label()),
                 jstr(&format!("{:?}", s.cell.policy)),
                 jstr(&s.cell.scenario.label()),
+                jstr(s.cell.scheme.label()),
                 jstr(&s.cell.adapt.label()),
                 s.cell.n,
                 jnum(s.cell.p),
@@ -152,6 +161,10 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
                 summary_json(&s.rounds),
                 summary_json(&s.time_s),
                 summary_json(&s.data_packets),
+                s.wire_per_payload
+                    .as_ref()
+                    .map(summary_json)
+                    .unwrap_or_else(|| "null".into()),
                 summary_json(&s.k_chosen),
                 spread_json(&s.k_spread),
                 s.p_hat
@@ -232,9 +245,17 @@ fn empty_spread_cols() -> String {
 /// poor spreadsheet column family).
 pub fn campaign_csv(cells: &[CellSummary]) -> String {
     let mut out = String::new();
-    out.push_str("workload,topology,loss,policy,scenario,adapt,n,p,k,replicas,");
+    out.push_str("workload,topology,loss,policy,scenario,scheme,adapt,n,p,k,replicas,");
     out.push_str("completed_frac,converged_frac,validated_frac,rho_pred,speedup_pred");
-    for block in ["speedup", "rounds", "time_s", "data_packets", "k_chosen", "p_hat"] {
+    for block in [
+        "speedup",
+        "rounds",
+        "time_s",
+        "data_packets",
+        "wire_bytes_per_payload",
+        "k_chosen",
+        "p_hat",
+    ] {
         for col in ["mean", "sem", "p10", "p50", "p90", "min", "max"] {
             out.push_str(&format!(",{block}_{col}"));
         }
@@ -247,12 +268,13 @@ pub fn campaign_csv(cells: &[CellSummary]) -> String {
     out.push('\n');
     for s in cells {
         out.push_str(&format!(
-            "{},{},{},{:?},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{:?},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             csv_label(&s.cell.workload.label()),
             s.cell.topology.label(),
             csv_label(&s.cell.loss.label()),
             s.cell.policy,
             csv_label(&s.cell.scenario.label()),
+            csv_label(s.cell.scheme.label()),
             csv_label(&s.cell.adapt.label()),
             s.cell.n,
             cnum(s.cell.p),
@@ -267,6 +289,10 @@ pub fn campaign_csv(cells: &[CellSummary]) -> String {
             summary_cols(&s.rounds),
             summary_cols(&s.time_s),
             summary_cols(&s.data_packets),
+            s.wire_per_payload
+                .as_ref()
+                .map(summary_cols)
+                .unwrap_or_else(empty_summary_cols),
             summary_cols(&s.k_chosen),
             s.p_hat
                 .as_ref()
@@ -328,16 +354,20 @@ mod tests {
     fn json_has_schema_spec_and_all_cells() {
         let (spec, cells) = small_run();
         let j = campaign_json(&spec, &cells);
-        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v3\""));
+        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v4\""));
         assert!(j.contains("\"rounds_hist_edges\":[0,2,4,8,"));
         assert!(j.contains("\"spec\":{\"workloads\":[\"synthetic(r=2,m=2)\"]"));
         assert!(j.contains("\"scenarios\":[\"stationary\"]"));
+        assert!(j.contains("\"schemes\":[\"kcopy\"]"));
         assert!(j.contains("\"adapts\":[\"static\"]"));
         assert!(j.contains("\"sem_target\":null"));
         assert_eq!(j.matches("\"validated_frac\"").count(), cells.len());
         assert_eq!(j.matches("\"speedup\":{").count(), cells.len());
         assert_eq!(j.matches("\"scenario\":\"stationary\"").count(), cells.len());
+        assert_eq!(j.matches("\"scheme\":\"kcopy\"").count(), cells.len());
         assert_eq!(j.matches("\"adapt\":\"static\"").count(), cells.len());
+        // DES cells measure the wire; the block is a real summary.
+        assert_eq!(j.matches("\"wire_bytes_per_payload\":{").count(), cells.len());
         assert_eq!(j.matches("\"k_chosen\":{").count(), cells.len());
         assert_eq!(j.matches("\"k_spread\":{\"min\":").count(), cells.len());
         assert_eq!(j.matches("\"rounds_hist\":[").count(), cells.len());
@@ -369,13 +399,13 @@ mod tests {
         let lines: Vec<&str> = c.lines().collect();
         assert_eq!(lines.len(), cells.len() + 1);
         let n_cols = lines[0].split(',').count();
-        assert_eq!(n_cols, 15 + 6 * 7 + 2 * 3);
+        assert_eq!(n_cols, 16 + 7 * 7 + 2 * 3);
         for row in &lines[1..] {
             assert_eq!(row.split(',').count(), n_cols, "ragged row: {row}");
         }
         assert!(
             lines[1].starts_with(
-                "synthetic(r=2;m=2),uniform,iid,Selective,stationary,static,2,"
+                "synthetic(r=2;m=2),uniform,iid,Selective,stationary,kcopy,static,2,"
             ),
             "commas inside labels must be sanitized: {}",
             lines[1]
@@ -409,6 +439,25 @@ mod tests {
         assert!(!hostile.contains('\n') && !hostile.contains('\r'));
         assert!(!hostile.contains('"'));
         assert_eq!(hostile, "a;b c d'e");
+    }
+
+    #[test]
+    fn scheme_labels_are_csv_byte_stable() {
+        use crate::net::scheme::SchemeSpec;
+        // The scheme column feeds `lbsp diff` cell matching across
+        // PRs, so sanitization must be the identity on every scheme
+        // label — a label that needed rewriting would silently unmatch
+        // old baselines. A hostile label through the same path is
+        // neutralized, byte-deterministically.
+        for s in SchemeSpec::ALL {
+            assert_eq!(csv_label(s.label()), s.label(), "{:?}", s);
+            assert!(!s.label().chars().any(|c| ",\n\r\"|".contains(c)));
+        }
+        assert_eq!(
+            csv_label("kcopy,\"v99\"\nevil"),
+            "kcopy;'v99' evil",
+            "a hostile scheme-shaped label sanitizes deterministically"
+        );
     }
 
     #[test]

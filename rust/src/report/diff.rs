@@ -1,11 +1,12 @@
 //! Cross-PR campaign artifact differ (`lbsp diff a.json b.json`).
 //!
-//! Reads two persisted campaign artifacts (schema `lbsp-campaign/v3`,
-//! or v1/v2 files from older PRs — a missing `adapt` coordinate
-//! defaults to `static`, a missing `scenario` to `stationary`, so old
-//! baselines keep matching the cells that existed when they were
-//! written), matches cells on their full grid coordinates (workload,
-//! topology, loss process, retransmission policy, scenario, adapt
+//! Reads two persisted campaign artifacts (schema `lbsp-campaign/v4`,
+//! or v1–v3 files from older PRs — a missing `adapt` coordinate
+//! defaults to `static`, a missing `scenario` to `stationary`, a
+//! missing `scheme` to `kcopy`, so old baselines keep matching the
+//! cells that existed when they were written), matches cells on their
+//! full grid coordinates (workload, topology, loss process,
+//! retransmission policy, scenario, reliability scheme, adapt
 //! policy, n, p, k) and flags speedup-mean changes that exceed
 //! `threshold` combined standard errors:
 //!
@@ -34,7 +35,7 @@ use super::Artifact;
 #[derive(Clone, Debug)]
 pub struct CellRecord {
     /// Canonical coordinate key:
-    /// `workload|topology|loss|policy|scenario|adapt|n|p|k`.
+    /// `workload|topology|loss|policy|scenario|scheme|adapt|n|p|k`.
     pub key: String,
     pub speedup_mean: f64,
     pub speedup_sem: f64,
@@ -59,7 +60,7 @@ fn req_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str, String> {
 }
 
 /// Parse an artifact out of a [`Json`] document; accepts the current
-/// `lbsp-campaign/v3` schema and the v1/v2 layouts of earlier PRs.
+/// `lbsp-campaign/v4` schema and the v1–v3 layouts of earlier PRs.
 pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
     let schema = doc
         .get("schema")
@@ -68,6 +69,7 @@ pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
     if schema != super::CAMPAIGN_SCHEMA
         && schema != super::artifacts::CAMPAIGN_SCHEMA_V1
         && schema != super::artifacts::CAMPAIGN_SCHEMA_V2
+        && schema != super::artifacts::CAMPAIGN_SCHEMA_V3
     {
         return Err(format!("unsupported schema {schema:?}"));
     }
@@ -78,7 +80,8 @@ pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
     let mut out = Vec::with_capacity(cells.len());
     for cell in cells {
         // v1 artifacts predate the adapt axis (every cell was static),
-        // v1/v2 predate the scenario axis (every cell was stationary).
+        // v1/v2 predate the scenario axis (every cell was stationary),
+        // v1–v3 predate the scheme axis (every cell was k-copy).
         // A *present but wrong-typed* field is corruption, not an old
         // schema — error instead of silently keying on "".
         let adapt = match cell.get("adapt") {
@@ -89,13 +92,18 @@ pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
             None => "stationary",
             Some(v) => v.as_str().ok_or("cell field \"scenario\" is not a string")?,
         };
+        let scheme = match cell.get("scheme") {
+            None => "kcopy",
+            Some(v) => v.as_str().ok_or("cell field \"scheme\" is not a string")?,
+        };
         let key = format!(
-            "{}|{}|{}|{}|{}|{}|n={}|p={:?}|k={}",
+            "{}|{}|{}|{}|{}|{}|{}|n={}|p={:?}|k={}",
             req_str(cell, "workload")?,
             req_str(cell, "topology")?,
             req_str(cell, "loss")?,
             req_str(cell, "policy")?,
             scenario,
+            scheme,
             adapt,
             req(cell, "n")?.as_u64().ok_or("bad n")?,
             req(cell, "p")?.as_f64().ok_or("bad p")?,
@@ -521,9 +529,10 @@ mod tests {
     }
 
     #[test]
-    fn v2_artifacts_key_as_stationary_and_match_v3_cells() {
-        // A v2 cell (no scenario field) must key to |stationary| and
-        // match the v3 cell at the same coordinates.
+    fn v2_artifacts_key_as_stationary_kcopy_and_match_v4_cells() {
+        // A v2 cell (no scenario, no scheme field) must key to
+        // |stationary|kcopy| and match the v4 cell at the same
+        // coordinates.
         let v2 = r#"{"schema":"lbsp-campaign/v2",
             "cells":[{"workload":"synthetic(r=2,m=2)","topology":"uniform",
                       "loss":"iid","policy":"Selective","adapt":"static",
@@ -533,16 +542,44 @@ mod tests {
                       "rho_pred":1.2,"speedup_pred":null}]}"#;
         let art = read_campaign_str(v2).unwrap();
         assert_eq!(art.schema, "lbsp-campaign/v2");
-        assert!(art.cells[0].key.contains("|stationary|static|"));
+        assert!(art.cells[0].key.contains("|stationary|kcopy|static|"));
 
         let s = spec(4);
         let cells = CampaignEngine::new(1).run(&s);
-        let v3 = read_campaign_str(&campaign_json(&s, &cells)).unwrap();
-        assert_eq!(v3.schema, "lbsp-campaign/v3");
-        assert_eq!(v3.cells[0].key, art.cells[0].key);
-        let d = diff_campaigns(&art, &v3, 1e9);
+        let v4 = read_campaign_str(&campaign_json(&s, &cells)).unwrap();
+        assert_eq!(v4.schema, "lbsp-campaign/v4");
+        assert_eq!(v4.cells[0].key, art.cells[0].key);
+        let d = diff_campaigns(&art, &v4, 1e9);
         assert_eq!(d.matched, 1);
         assert_eq!(d.only_in_b, 1, "the k=2 cell has no v2 counterpart");
+    }
+
+    #[test]
+    fn v3_artifacts_default_the_scheme_coordinate_to_kcopy() {
+        // A v3 cell (scenario and adapt present, scheme absent) keys to
+        // kcopy and matches the v4 cell at the same coordinates; an
+        // explicit non-kcopy v4 cell keys apart from it.
+        let v3 = r#"{"schema":"lbsp-campaign/v3",
+            "cells":[{"workload":"synthetic(r=2,m=2)","topology":"uniform",
+                      "loss":"iid","policy":"Selective","scenario":"stationary",
+                      "adapt":"static","n":2,"p":0.1,"k":1,"replicas":3,
+                      "speedup":{"n":3,"mean":1.5,"sem":0.05,"p10":1.4,
+                                 "p50":1.5,"p90":1.6,"min":1.4,"max":1.6},
+                      "rho_pred":1.2,"speedup_pred":null}]}"#;
+        let art = read_campaign_str(v3).unwrap();
+        assert_eq!(art.schema, "lbsp-campaign/v3");
+        assert!(art.cells[0].key.contains("|stationary|kcopy|static|"));
+
+        let blast = v3.replace(
+            "\"scenario\":\"stationary\",",
+            "\"scenario\":\"stationary\",\"scheme\":\"blast\",",
+        );
+        let blast = blast.replace("lbsp-campaign/v3", "lbsp-campaign/v4");
+        let blast_art = read_campaign_str(&blast).unwrap();
+        assert!(blast_art.cells[0].key.contains("|stationary|blast|static|"));
+        let d = diff_campaigns(&art, &blast_art, 3.0);
+        assert_eq!(d.matched, 0, "kcopy and blast cells must never cross-match");
+        assert_eq!((d.only_in_a, d.only_in_b), (1, 1));
     }
 
     #[test]

@@ -186,9 +186,9 @@ pub fn fig12<E: SpeedupEval>(eval: &mut E) -> Vec<Artifact> {
 /// and the analytic prediction where the workload admits one.
 pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
     let mut t = Table::new(vec![
-        "workload", "topo", "loss", "policy", "scenario", "adapt", "n", "p", "k", "k_sel",
-        "k_lo..hi", "p_hat", "reps", "S_mean", "S_sem", "S_p50", "rounds", "done%",
-        "valid%", "rho_pred", "S_pred",
+        "workload", "topo", "loss", "policy", "scenario", "scheme", "adapt", "n", "p", "k",
+        "k_sel", "k_lo..hi", "p_hat", "reps", "S_mean", "S_sem", "S_p50", "rounds",
+        "wire/pay", "done%", "valid%", "rho_pred", "S_pred",
     ]);
     for s in cells {
         t.row(vec![
@@ -197,6 +197,7 @@ pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
             s.cell.loss.label(),
             format!("{:?}", s.cell.policy),
             s.cell.scenario.label(),
+            s.cell.scheme.label().to_string(),
             s.cell.adapt.label(),
             s.cell.n.to_string(),
             fmt_num(s.cell.p),
@@ -209,6 +210,9 @@ pub fn campaign_table(cells: &[CellSummary]) -> Artifact {
             fmt_num(s.speedup.sem),
             fmt_num(s.speedup.p50),
             fmt_num(s.rounds.mean),
+            s.wire_per_payload
+                .map(|w| fmt_num(w.mean))
+                .unwrap_or_else(|| "-".into()),
             format!("{:.0}", s.completed_frac * 100.0),
             format!("{:.0}", s.validated_frac * 100.0),
             fmt_num(s.rho_pred),

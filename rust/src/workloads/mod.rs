@@ -106,6 +106,13 @@ pub struct ReplicaRun {
     pub sequential_s: f64,
     /// Protocol-level distinct data packets sent (excludes k-copies).
     pub data_packets: u64,
+    /// Distinct payload bytes the program handed to the transport
+    /// (each transfer counted once).
+    pub payload_bytes: u64,
+    /// Bytes put on the wire for those payloads — every copy, acks and
+    /// parity included. `wire_bytes / payload_bytes` is the per-scheme
+    /// wire-efficiency metric persisted in v4 artifacts.
+    pub wire_bytes: u64,
     /// Wire-level packet counters from the DES network.
     pub net: NetStats,
     /// Mean packet copies k over the executed supersteps (and, under
@@ -166,6 +173,11 @@ impl ReplicaRun {
         if k_steps == 0 {
             (k_lo, k_hi) = (0, 0);
         }
+        // Distinct data packets = the programs' transfer counts, NOT
+        // the runtime's wire-copy counter (`RunReport::data_packets`
+        // includes every duplicate and retransmission — the field
+        // contract here excludes them).
+        let distinct: u64 = rep.steps.iter().map(|s| s.messages as u64).sum();
         ReplicaRun {
             time_s: rep.total_time_s,
             rounds: rep.total_rounds,
@@ -174,7 +186,9 @@ impl ReplicaRun {
             converged: rep.converged(),
             validated,
             sequential_s,
-            data_packets: rep.data_packets,
+            data_packets: distinct,
+            payload_bytes: rep.payload_bytes,
+            wire_bytes: rep.wire_bytes,
             net,
             k_mean,
             k_last,

@@ -173,11 +173,10 @@ fn ewma_beats_beta_posterior_under_regime_shift() {
     );
 }
 
-/// v3 artifacts (scenario coordinate, k_spread / p_hat_spread blocks)
-/// round-trip the differ, including against a v2 baseline that predates
-/// the scenario axis.
+/// Current (v4) artifacts round-trip the differ, including against a
+/// v2 baseline that predates the scenario and scheme axes.
 #[test]
-fn v3_artifacts_roundtrip_diff_against_v2_baselines() {
+fn current_artifacts_roundtrip_diff_against_v2_baselines() {
     let spec = CampaignSpec {
         workloads: vec![WorkloadSpec::Synthetic {
             supersteps: 3,
@@ -203,7 +202,7 @@ fn v3_artifacts_roundtrip_diff_against_v2_baselines() {
     let cells = CampaignEngine::new(2).run(&spec);
     assert_eq!(cells.len(), 4);
     let json = campaign_json(&spec, &cells);
-    assert!(json.starts_with("{\"schema\":\"lbsp-campaign/v3\""));
+    assert!(json.starts_with("{\"schema\":\"lbsp-campaign/v4\""));
     assert!(json.contains("\"scenario\":\"shift(at=2,to=0.3)\""));
     assert!(json.contains("\"adapt\":\"perlink-greedy(kmax=3,beta(2,0.1))\""));
     assert!(json.contains("\"k_spread\":{\"min\":"));
@@ -214,7 +213,7 @@ fn v3_artifacts_roundtrip_diff_against_v2_baselines() {
     std::fs::create_dir_all(&dir).unwrap();
     let (path, _) = write_campaign(&dir.join("v3.json"), &spec, &cells).unwrap();
     let art = read_campaign_str(&std::fs::read_to_string(&path).unwrap()).unwrap();
-    assert_eq!(art.schema, "lbsp-campaign/v3");
+    assert_eq!(art.schema, "lbsp-campaign/v4");
     assert_eq!(art.cells.len(), 4);
     let d = diff_campaigns(&art, &art, 3.0);
     assert_eq!(d.matched, 4);
@@ -227,7 +226,7 @@ fn v3_artifacts_roundtrip_diff_against_v2_baselines() {
     let stationary_static = art
         .cells
         .iter()
-        .find(|c| c.key.contains("|stationary|static|"))
+        .find(|c| c.key.contains("|stationary|kcopy|static|"))
         .expect("stationary static cell");
     let v2_baseline = format!(
         concat!(

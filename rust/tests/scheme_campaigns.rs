@@ -1,0 +1,221 @@
+//! End-to-end acceptance for the pluggable reliability schemes (the
+//! paper's own framing, §I: where does duplication beat
+//! retransmission?).
+//!
+//! 1. **The regime pin** (`#[ignore]`d, run by `scripts/tier1.sh` in
+//!    release): beyond combined SEM, blast-retransmit beats k-copy on
+//!    wire bytes per payload at p = 0.02, while k-copy beats blast on
+//!    speedup at p = 0.15 under high per-round latency — the regime the
+//!    paper builds L-BSP on (β-dominated rounds make extra copies
+//!    nearly free, and fewer rounds win).
+//! 2. **v4 artifacts round-trip** `lbsp diff` against a v3 baseline:
+//!    the scheme coordinate defaults to `kcopy` on old files, so
+//!    pre-scheme cells keep matching, and cross-version regression
+//!    detection still fires.
+//!
+//! The statistical test is `#[ignore]`d in the default (debug) run and
+//! executed by tier1.sh in release mode under the wall-clock guard,
+//! with replicas bounded via `LBSP_SCENARIO_REPLICAS`.
+
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, CellSummary, WorkloadSpec};
+use lbsp::net::scheme::SchemeSpec;
+use lbsp::report::{diff_campaigns, read_campaign_str, write_campaign};
+
+/// Replica count for the statistical comparison: bounded by the
+/// `LBSP_SCENARIO_REPLICAS` env var (tier-1 sets it); at least 8 so the
+/// SEM means something.
+fn scenario_replicas(default: usize) -> usize {
+    std::env::var("LBSP_SCENARIO_REPLICAS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(default)
+        .max(8)
+}
+
+fn cell<'a>(out: &'a [CellSummary], p: f64, scheme: SchemeSpec) -> &'a CellSummary {
+    out.iter()
+        .find(|s| s.cell.p == p && s.cell.scheme == scheme)
+        .unwrap_or_else(|| panic!("no cell at p={p} scheme={}", scheme.label()))
+}
+
+/// Acceptance: the duplication-vs-retransmission crossover, pinned
+/// beyond combined SEM on both sides.
+///
+/// Operating point: the campaign's mid-band link (β = 70 ms RTT against
+/// α ≈ 50 µs per 2 KB packet) makes rounds latency-bound — the paper's
+/// high-delay grid regime. At p = 0.02, k-copy at k = 3 burns 3× wire
+/// for rounds blast already finishes in ~1.3; at p = 0.15, blast's
+/// blast-round failure probability 1 − (1−p)² ≈ 0.28 forces a second
+/// (equally β-long) round on almost every phase while k = 3 pushes the
+/// per-round failure to ~0.7 % and keeps most phases at one round.
+#[test]
+#[ignore = "statistical DES comparison; run by scripts/tier1.sh in release mode"]
+fn blast_wins_wire_at_low_p_kcopy_wins_speedup_at_high_p() {
+    let spec = CampaignSpec {
+        workloads: vec![WorkloadSpec::Synthetic {
+            supersteps: 12,
+            msgs_per_node: 3,
+            bytes: 2048,
+            compute_s: 0.05,
+        }],
+        ns: vec![4],
+        ps: vec![0.02, 0.15],
+        ks: vec![3],
+        schemes: vec![SchemeSpec::KCopy, SchemeSpec::Blast],
+        replicas: scenario_replicas(16),
+        seed: 0x5C_4E4E_05,
+        ..Default::default()
+    };
+    let out = CampaignEngine::new(4).run(&spec);
+    assert_eq!(out.len(), 4);
+    for s in &out {
+        assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+        assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
+    }
+
+    // Low loss: blast's wire bill is a fraction of k-copy's.
+    let (k_lo, b_lo) = (cell(&out, 0.02, SchemeSpec::KCopy), cell(&out, 0.02, SchemeSpec::Blast));
+    let wk = k_lo.wire_per_payload.expect("DES cell");
+    let wb = b_lo.wire_per_payload.expect("DES cell");
+    let d_wire = wk.mean - wb.mean;
+    let sem_wire = (wk.sem.powi(2) + wb.sem.powi(2)).sqrt();
+    assert!(
+        d_wire > 0.0 && d_wire > sem_wire,
+        "blast must beat k-copy on wire at p=0.02: kcopy {} ± {} vs blast {} ± {}",
+        wk.mean,
+        wk.sem,
+        wb.mean,
+        wb.sem,
+    );
+    // The gap is structural, not marginal: k = 3 pays ~3×, blast ~1×.
+    assert!(wk.mean > 2.0 * wb.mean, "kcopy {} vs blast {}", wk.mean, wb.mean);
+
+    // High loss, latency-bound rounds: k-copy's fewer rounds win time.
+    let (k_hi, b_hi) = (cell(&out, 0.15, SchemeSpec::KCopy), cell(&out, 0.15, SchemeSpec::Blast));
+    let d_speed = k_hi.speedup.mean - b_hi.speedup.mean;
+    let sem_speed = (k_hi.speedup.sem.powi(2) + b_hi.speedup.sem.powi(2)).sqrt();
+    assert!(
+        d_speed > 0.0 && d_speed > sem_speed,
+        "k-copy must beat blast on speedup at p=0.15: kcopy {} ± {} vs blast {} ± {}",
+        k_hi.speedup.mean,
+        k_hi.speedup.sem,
+        b_hi.speedup.mean,
+        b_hi.speedup.sem,
+    );
+    // And the mechanism is visible in the round counts.
+    assert!(
+        k_hi.rounds.mean < b_hi.rounds.mean,
+        "k-copy rounds {} vs blast rounds {}",
+        k_hi.rounds.mean,
+        b_hi.rounds.mean
+    );
+}
+
+/// The acceptance-criteria artifact path: a `--scheme kcopy,blast,fec`
+/// campaign persists valid v4 JSON+CSV that round-trips `lbsp diff`
+/// against a v3 baseline, old cells matching via the `kcopy` default.
+#[test]
+fn v4_scheme_artifacts_roundtrip_diff_against_v3_baseline() {
+    let spec = CampaignSpec {
+        workloads: vec![WorkloadSpec::Synthetic {
+            supersteps: 3,
+            msgs_per_node: 2,
+            bytes: 2048,
+            compute_s: 0.02,
+        }],
+        ns: vec![2],
+        ps: vec![0.1],
+        ks: vec![1],
+        schemes: vec![SchemeSpec::KCopy, SchemeSpec::Blast, SchemeSpec::Fec],
+        replicas: 3,
+        seed: 0xD1F4,
+        ..Default::default()
+    };
+    let cells = CampaignEngine::new(2).run(&spec);
+    assert_eq!(cells.len(), 3);
+
+    let dir = std::env::temp_dir().join("lbsp_v4_scheme_roundtrip_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (json_path, csv_path) = write_campaign(&dir.join("v4.json"), &spec, &cells).unwrap();
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+
+    // Valid v4: schema tag, schemes spec axis, per-cell scheme and the
+    // wire-efficiency block, in both formats.
+    assert!(json.starts_with("{\"schema\":\"lbsp-campaign/v4\""));
+    assert!(json.contains("\"schemes\":[\"kcopy\",\"blast\",\"fec\"]"));
+    for label in ["kcopy", "blast", "fec"] {
+        assert!(json.contains(&format!("\"scheme\":\"{label}\"")), "{label} missing");
+    }
+    assert_eq!(json.matches("\"wire_bytes_per_payload\":{").count(), 3);
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains(",scheme,"));
+    assert!(header.contains(",wire_bytes_per_payload_mean,"));
+    assert_eq!(csv.lines().count(), 1 + 3);
+
+    // Self-diff: every cell matches itself, no spurious verdicts.
+    let art = read_campaign_str(&json).unwrap();
+    let d = diff_campaigns(&art, &art, 3.0);
+    assert_eq!(d.matched, 3);
+    assert!(!d.has_regressions() && d.improvements.is_empty());
+
+    // A v3 baseline (no scheme field anywhere) written before this PR:
+    // its cells key to kcopy and match exactly the kcopy cell.
+    let kcopy_cell = art
+        .cells
+        .iter()
+        .find(|c| c.key.contains("|kcopy|"))
+        .expect("kcopy cell present");
+    let v3_baseline = format!(
+        concat!(
+            "{{\"schema\":\"lbsp-campaign/v3\",\"cells\":[{{",
+            "\"workload\":\"synthetic(r=3,m=2)\",\"topology\":\"uniform\",",
+            "\"loss\":\"iid\",\"policy\":\"Selective\",\"scenario\":\"stationary\",",
+            "\"adapt\":\"static\",\"n\":2,\"p\":0.1,\"k\":1,\"replicas\":3,",
+            "\"speedup\":{{\"n\":3,\"mean\":{mean},\"sem\":0.0001,",
+            "\"p10\":1.0,\"p50\":1.0,\"p90\":1.0,\"min\":1.0,\"max\":1.0}},",
+            "\"rho_pred\":1.2,\"speedup_pred\":null}}]}}"
+        ),
+        mean = kcopy_cell.speedup_mean + 1.0,
+    );
+    let v3 = read_campaign_str(&v3_baseline).unwrap();
+    assert_eq!(v3.schema, "lbsp-campaign/v3");
+    assert_eq!(v3.cells[0].key, kcopy_cell.key, "v3 key must match the v4 kcopy cell");
+    let d = diff_campaigns(&v3, &art, 3.0);
+    assert_eq!(d.matched, 1, "exactly the kcopy cell matches the pre-scheme baseline");
+    assert_eq!(d.only_in_b, 2, "blast/fec cells have no v3 counterpart");
+    assert!(
+        d.has_regressions(),
+        "a 1.0-speedup drop against the v3 baseline must be flagged"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cheap plumbing smoke for the heavy ignored test: the exact grid it
+/// runs, at 2 replicas, completes and validates on every cell.
+#[test]
+fn scheme_regime_grid_smoke() {
+    let spec = CampaignSpec {
+        workloads: vec![WorkloadSpec::Synthetic {
+            supersteps: 3,
+            msgs_per_node: 3,
+            bytes: 2048,
+            compute_s: 0.05,
+        }],
+        ns: vec![4],
+        ps: vec![0.02, 0.15],
+        ks: vec![3],
+        schemes: vec![SchemeSpec::KCopy, SchemeSpec::Blast],
+        replicas: 2,
+        seed: 0x5140_05,
+        ..Default::default()
+    };
+    let out = CampaignEngine::new(2).run(&spec);
+    assert_eq!(out.len(), 4);
+    for s in &out {
+        assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+        assert_eq!(s.validated_frac, 1.0, "cell {:?}", s.cell);
+        assert!(s.wire_per_payload.unwrap().mean >= 1.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Scheme-semantics acceptance: the pluggable reliability schemes must
+//! agree on the *contract* (every payload delivered exactly once,
+//! output data validated against the sequential reference) while
+//! differing only in *how* the wire buys that reliability.
+//!
+//! 1. Under zero loss, every scheme × every §V workload delivers each
+//!    payload exactly once (`validated_frac = 1`, distinct-packet
+//!    counts exact, one round per phase for the round-driven schemes).
+//! 2. `KCopy` at k = 1 and `BlastRetransmit` with a zero retransmit
+//!    budget are the same protocol: identical `NetStats` on the same
+//!    seed, event for event.
+//! 3. The wire-efficiency ordering at zero loss is structural:
+//!    blast = 1 copy of everything, FEC adds exactly one parity per
+//!    group, k-copy multiplies by k.
+
+use lbsp::bsp::BspRuntime;
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, WorkloadSpec};
+use lbsp::net::link::Link;
+use lbsp::net::scheme::SchemeSpec;
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::workloads::{DistWorkload, SyntheticExchange};
+
+fn des_net(n: usize, p: f64, seed: u64) -> Network {
+    Network::new(Topology::uniform(n, Link::from_mbytes(100.0, 0.02), p), seed)
+}
+
+/// All five §V workloads at a node count every one of them can tile.
+fn five_workloads() -> Vec<WorkloadSpec> {
+    vec![
+        WorkloadSpec::Synthetic { supersteps: 2, msgs_per_node: 2, bytes: 1024, compute_s: 0.02 },
+        WorkloadSpec::Matmul { block: 4 },
+        WorkloadSpec::Sort { keys_per_node: 16 },
+        WorkloadSpec::Fft { size: 16 },
+        WorkloadSpec::Laplace { h: 6, w: 8, sweeps: 2 },
+    ]
+}
+
+#[test]
+fn zero_loss_every_scheme_delivers_exactly_once_on_all_five_workloads() {
+    let spec = CampaignSpec {
+        workloads: five_workloads(),
+        ns: vec![4],
+        ps: vec![0.0],
+        ks: vec![2],
+        schemes: SchemeSpec::ALL.to_vec(),
+        replicas: 2,
+        seed: 0x5C_4E4E,
+        ..Default::default()
+    };
+    // 5 workloads × (3 k-axis schemes × 1 k + tcplike pinned) = 20.
+    assert_eq!(spec.n_cells(), 20);
+    let out = CampaignEngine::new(3).run(&spec);
+    assert_eq!(out.len(), 20);
+    for s in &out {
+        assert_eq!(s.completed_frac, 1.0, "cell {:?}", s.cell);
+        assert_eq!(
+            s.validated_frac, 1.0,
+            "output data diverged from the sequential reference: {:?}",
+            s.cell
+        );
+        assert!(s.speedup.mean > 0.0, "cell {:?}", s.cell);
+        // Exactly-once at the protocol level: the distinct-packet count
+        // is deterministic (c(n) × phases) with zero spread.
+        assert_eq!(s.data_packets.sem, 0.0, "cell {:?}", s.cell);
+        assert_eq!(
+            s.data_packets.min, s.data_packets.max,
+            "distinct payload count must not vary at p = 0: {:?}",
+            s.cell
+        );
+        let wire = s.wire_per_payload.expect("DES cells measure the wire");
+        assert!(wire.mean >= 1.0, "cell {:?}", s.cell);
+        // Round-driven schemes need exactly one round per phase at
+        // p = 0; the analytic prediction agrees.
+        if s.cell.scheme != SchemeSpec::TcpLike {
+            assert_eq!(s.rho_pred, 1.0, "cell {:?}", s.cell);
+        }
+    }
+}
+
+#[test]
+fn kcopy_k1_and_zero_budget_blast_share_netstats_on_the_same_seed() {
+    // Same seed, same workload, k/budget = 1: the two schemes must be
+    // the same protocol on the wire — identical NetStats, identical
+    // round counts, identical delivered-message totals.
+    for seed in [1u64, 7, 42, 9001] {
+        let run = |scheme: SchemeSpec| {
+            let mut rt = BspRuntime::new(des_net(4, 0.25, seed))
+                .with_copies(1)
+                .with_scheme(scheme.build());
+            let wl = Box::new(SyntheticExchange::new(4, 3, 2, 2048, 0.01));
+            let run = wl.run_replica(&mut rt);
+            (run, rt.network().stats)
+        };
+        let (run_k, stats_k) = run(SchemeSpec::KCopy);
+        let (run_b, stats_b) = run(SchemeSpec::Blast);
+        assert_eq!(stats_k, stats_b, "NetStats diverged at seed {seed}");
+        assert_eq!(run_k.rounds, run_b.rounds, "rounds diverged at seed {seed}");
+        assert_eq!(run_k.wire_bytes, run_b.wire_bytes);
+        assert_eq!(run_k.payload_bytes, run_b.payload_bytes);
+        assert!(run_k.validated && run_b.validated);
+        assert_eq!(run_k.time_s, run_b.time_s, "model time diverged at seed {seed}");
+    }
+}
+
+#[test]
+fn zero_loss_wire_cost_ordering_is_structural() {
+    // p = 0, one phase each: blast sends every payload once; FEC adds
+    // exactly one parity per group of g; k-copy multiplies by k. The
+    // measured wire_bytes/payload_bytes must reflect that ordering.
+    let wire = |scheme: SchemeSpec, k: u32| {
+        let mut rt = BspRuntime::new(des_net(4, 0.0, 3))
+            .with_copies(k)
+            .with_scheme(scheme.build());
+        // 9 messages per node = 3 per directed pair, so FEC at g = 3
+        // forms exactly one full parity group per pair per phase.
+        let wl = Box::new(SyntheticExchange::new(4, 2, 9, 4096, 0.01));
+        let run = wl.run_replica(&mut rt);
+        assert!(run.validated);
+        run.wire_bytes as f64 / run.payload_bytes as f64
+    };
+    let blast = wire(SchemeSpec::Blast, 3);
+    let fec = wire(SchemeSpec::Fec, 3);
+    let k1 = wire(SchemeSpec::KCopy, 1);
+    let k3 = wire(SchemeSpec::KCopy, 3);
+    assert_eq!(blast, k1, "zero-loss blast is single-copy");
+    assert!(fec > blast, "parity costs wire: {fec} vs {blast}");
+    assert!(fec < k3 / 2.0, "FEC at g=3 is far cheaper than k=3: {fec} vs {k3}");
+    assert!(k3 > 3.0, "k=3 triples the data wire: {k3}");
+    // FEC overhead at g = 3 on data bytes is ~4/3 (plus acks).
+    assert!(fec < 1.5, "fec overhead {fec}");
+}

@@ -40,23 +40,25 @@ cargo build --release --benches --examples
 echo "== cargo test -q =="
 cargo test -q
 
-# The regime-shift / per-link acceptance tests are statistical DES
-# campaigns: they are #[ignore]d in the default (debug) run above and
-# executed here in release mode, with the replica count bounded
-# (LBSP_SCENARIO_REPLICAS) and a wall-clock guard (`timeout`, when
-# available) so a pathological simulation cannot make tier-1 creep past
-# its current runtime. Compilation runs *outside* the guard (a cold
+# The regime-shift / per-link / reliability-scheme acceptance tests are
+# statistical DES campaigns: they are #[ignore]d in the default (debug)
+# run above and executed here in release mode, with the replica count
+# bounded (LBSP_SCENARIO_REPLICAS) and a wall-clock guard (`timeout`,
+# when available) so a pathological simulation cannot make tier-1 creep
+# past its current runtime. Compilation runs *outside* the guard (a cold
 # release build of the test harness is legitimate one-time cost, not
 # simulation runtime) so the timeout bounds only the tests themselves.
-echo "== regime-shift / per-link acceptance (release, bounded) =="
+echo "== regime-shift / per-link / scheme acceptance (release, bounded) =="
 export LBSP_SCENARIO_REPLICAS="${LBSP_SCENARIO_REPLICAS:-16}"
-cargo test -q --release --test adapt_scenarios --no-run
-scenario_cmd=(cargo test -q --release --test adapt_scenarios -- --include-ignored)
-if command -v timeout >/dev/null 2>&1; then
-    timeout "${LBSP_SCENARIO_TIMEOUT_S:-900}" "${scenario_cmd[@]}"
-else
-    "${scenario_cmd[@]}"
-fi
+for acceptance_test in adapt_scenarios scheme_campaigns; do
+    cargo test -q --release --test "$acceptance_test" --no-run
+    scenario_cmd=(cargo test -q --release --test "$acceptance_test" -- --include-ignored)
+    if command -v timeout >/dev/null 2>&1; then
+        timeout "${LBSP_SCENARIO_TIMEOUT_S:-900}" "${scenario_cmd[@]}"
+    else
+        "${scenario_cmd[@]}"
+    fi
+done
 
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets -- -D warnings =="
