@@ -5,7 +5,10 @@
 //! Besides the stdout report, the bench persists a machine-readable
 //! `BENCH_protocol.json` (override the path with `LBSP_BENCH_OUT`) so
 //! the per-scheme perf trajectory — phases/s through the DES and wire
-//! bytes per payload byte — is trackable across PRs.
+//! bytes per payload byte — is trackable across PRs. A second `scale`
+//! series runs a laplace-style halo-exchange phase at n ∈ {64, 1024,
+//! 10⁴} to track the sparse-state scaling curve (the 10⁴ point only
+//! exists because per-pair state is O(touched), not O(n²)).
 
 use lbsp::net::link::Link;
 use lbsp::net::protocol::{run_phase_scheme, PhaseConfig, Transfer};
@@ -25,6 +28,18 @@ fn phase_transfers(n: usize, m: usize, bytes: u64) -> Vec<Transfer> {
                 }
             }
         }
+    }
+    v
+}
+
+/// Laplace-style halo exchange: each node sends one message to each
+/// ring neighbour (i → i±1 mod n) — c = 2n transfers touching O(n) of
+/// the n² directed pairs.
+fn halo_transfers(n: usize, bytes: u64) -> Vec<Transfer> {
+    let mut v = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        v.push(Transfer { src: i, dst: (i + 1) % n, bytes });
+        v.push(Transfer { src: i, dst: (i + n - 1) % n, bytes });
     }
     v
 }
@@ -104,15 +119,61 @@ fn main() {
         }
     }
 
+    // --- n-scaling: halo-exchange phases at n ∈ {64, 1024, 10⁴}. The
+    // sparse per-pair state and batched loss draws are what make the
+    // 10⁴ point feasible at all: per-phase state is O(touched pairs) =
+    // O(n), where the dense layout would hold 10⁸ per-pair slots.
+    println!("\n=== k-copy halo-exchange scaling (p = 0.05, k = 2) ===\n");
+    let mut scale_series: Vec<String> = Vec::new();
+    for &sn in &[64usize, 1024, 10_000] {
+        let halo = halo_transfers(sn, 2048);
+        let halo_cfg = PhaseConfig { copies: 2, timeout_s: 0.16, ..Default::default() };
+        let scheme = SchemeSpec::KCopy.build();
+        let mut net = Network::new(
+            Topology::uniform(sn, Link::from_mbytes(40.0, 0.07), 0.05),
+            0xA11CE + sn as u64,
+        );
+        let scale_iters = if sn >= 10_000 { 1 } else { 5 };
+        let mut rounds_total = 0u64;
+        let report = bench_units(
+            &format!("kcopy halo n={sn}"),
+            0,
+            scale_iters,
+            Some(1.0),
+            || {
+                let rep =
+                    run_phase_scheme(&mut net, &halo, &halo_cfg, scheme.as_ref(), None);
+                assert!(rep.completed, "halo phase failed at n={sn}");
+                rounds_total += rep.rounds as u64;
+            },
+        );
+        let touched = net.n_touched_pairs();
+        assert!(
+            touched <= 4 * sn,
+            "per-pair state must stay O(n) on the halo workload: {touched}"
+        );
+        scale_series.push(format!(
+            concat!(
+                "{{\"n\":{sn},\"transfers\":{},\"phase_median_s\":{:?},",
+                "\"mean_rounds\":{:?},\"touched_pairs\":{touched}}}"
+            ),
+            halo.len(),
+            report.median_s,
+            rounds_total as f64 / scale_iters as f64,
+        ));
+    }
+
     // --- machine-readable artifact for cross-PR perf tracking.
     let json = format!(
         concat!(
             "{{\"bench\":\"protocol_schemes\",\"nodes\":{n},\"transfers\":{},",
-            "\"payload_bytes\":{payload},\"param\":{},\"series\":[{}]}}\n"
+            "\"payload_bytes\":{payload},\"param\":{},\"series\":[{}],",
+            "\"scale\":[{}]}}\n"
         ),
         transfers.len(),
         cfg.copies,
         series.join(","),
+        scale_series.join(","),
     );
     let out = std::env::var("LBSP_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_protocol.json".to_string());

@@ -24,6 +24,8 @@
 //!   spike the instantaneous estimate but not the band-filtered one)
 //!   don't whipsaw k.
 
+use std::collections::BTreeMap;
+
 use crate::model::rho::rho_selective;
 use crate::net::scheme::SchemeSpec;
 
@@ -260,24 +262,108 @@ impl KController for HysteresisK {
 pub enum KPolicy {
     /// One controller fed the bank's aggregate estimate.
     Global(Box<dyn KController>),
-    /// One controller per directed pair (row-major `src·n + dst`), each
-    /// fed its pair's estimate. The diagonal never carries traffic; its
-    /// controllers idle at the prior.
-    PerLink(Vec<Box<dyn KController>>),
+    /// One controller per directed pair (row-major `src·n + dst`),
+    /// materialized lazily per touched pair — see
+    /// [`PerLinkControllers`].
+    PerLink(PerLinkControllers),
 }
 
 // NOTE: no `label()` here on purpose — the artifact-facing label is
 // built once, by `AdaptSpec::label` via `KScope::prefix`, so the
 // string that `report::diff` keys on has a single source of truth.
 
+/// Lazily-allocated per-pair controller state for [`KPolicy::PerLink`].
+///
+/// `n_pairs` grows as n² while a phase only exercises the pairs its
+/// transfers use, so controllers are materialized **per touched pair**.
+/// Every untouched pair is represented by one shared *cold* controller:
+/// untouched pairs all see the identical input sequence (the bank's
+/// constant prior, once per superstep), so the single cold controller
+/// evolves exactly as each of their individual controllers would have.
+/// When a pair is first touched, its fresh controller is replayed
+/// through that same cold history before its first informed decision —
+/// making the lazy bank decision-for-decision identical to the dense
+/// one it replaces, including for stateful hysteresis controllers.
+pub struct PerLinkControllers {
+    /// Builds one pair's controller, on that pair's first touch.
+    mk: Box<dyn Fn() -> Box<dyn KController> + Send>,
+    /// The shared controller standing in for every untouched pair.
+    cold: Box<dyn KController>,
+    /// Live controllers, keyed by row-major pair id.
+    touched: BTreeMap<usize, Box<dyn KController>>,
+    /// Superstep decisions taken so far (`choose_default` calls) — the
+    /// cold-history length replayed into freshly materialized
+    /// controllers.
+    rounds: u64,
+    n_pairs: usize,
+}
+
+impl PerLinkControllers {
+    pub fn new(
+        n_pairs: usize,
+        mk: Box<dyn Fn() -> Box<dyn KController> + Send>,
+    ) -> PerLinkControllers {
+        assert!(n_pairs >= 1);
+        let cold = mk();
+        PerLinkControllers { mk, cold, touched: BTreeMap::new(), rounds: 0, n_pairs }
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        self.n_pairs
+    }
+
+    /// Pairs holding live controller state (O(touched), not O(n²)).
+    pub fn n_touched(&self) -> usize {
+        self.touched.len()
+    }
+
+    /// The decision every untouched pair takes this superstep, from the
+    /// shared cold controller fed the bank's prior. Call exactly once
+    /// per superstep, before the [`PerLinkControllers::choose_for`]
+    /// calls — it also advances the cold-history clock.
+    pub fn choose_default(&mut self, prior_p: f64, prior_interval: (f64, f64)) -> u32 {
+        self.rounds += 1;
+        self.cold.choose_k(prior_p, prior_interval)
+    }
+
+    /// One touched pair's decision, materializing its controller on
+    /// first use by replaying the cold history (the prior inputs every
+    /// pre-touch superstep fed it in the dense bank).
+    pub fn choose_for(
+        &mut self,
+        pair: usize,
+        p_hat: f64,
+        interval: (f64, f64),
+        prior_p: f64,
+        prior_interval: (f64, f64),
+    ) -> u32 {
+        assert!(pair < self.n_pairs, "pair {pair} out of range {}", self.n_pairs);
+        let mk = &self.mk;
+        // This superstep's choose_default already ticked the clock, so
+        // the pre-touch history is rounds − 1 prior-fed decisions.
+        let history = self.rounds.saturating_sub(1);
+        let ctl = self.touched.entry(pair).or_insert_with(|| {
+            let mut c = mk();
+            for _ in 0..history {
+                c.choose_k(prior_p, prior_interval);
+            }
+            c
+        });
+        ctl.choose_k(p_hat, interval)
+    }
+}
+
 /// One superstep's duplication decision, as the runtime consumes it.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum KChoice {
     /// Every transfer of the phase uses the same copy count.
     Global(u32),
-    /// Per-directed-pair copy counts (row-major `src·n + dst`): the
-    /// runtime looks each transfer's `(src, dst)` up here.
-    PerLink(Vec<u32>),
+    /// Per-directed-pair copy counts, sparse: `default` is the cold
+    /// decision shared by every pair that has not seen traffic, and
+    /// `overrides` (keyed by row-major `src·n + dst`) carry the touched
+    /// pairs' own decisions. The runtime looks each transfer's
+    /// `(src, dst)` up via [`KChoice::for_pair`].
+    PerLink { default: u32, overrides: BTreeMap<usize, u32> },
 }
 
 impl KChoice {
@@ -285,17 +371,22 @@ impl KChoice {
     pub fn for_pair(&self, pair: usize) -> u32 {
         match self {
             KChoice::Global(k) => *k,
-            KChoice::PerLink(ks) => ks[pair],
+            KChoice::PerLink { default, overrides } => {
+                overrides.get(&pair).copied().unwrap_or(*default)
+            }
         }
     }
 
     /// `(min, max)` over the decision (degenerate for a global choice).
+    /// The default participates in the fold: some pair is always
+    /// untouched (the diagonal never carries traffic), matching the
+    /// dense fold over all n² pairs this replaces.
     pub fn min_max(&self) -> (u32, u32) {
         match self {
             KChoice::Global(k) => (*k, *k),
-            KChoice::PerLink(ks) => ks
-                .iter()
-                .fold((u32::MAX, 0), |(lo, hi), &k| (lo.min(k), hi.max(k))),
+            KChoice::PerLink { default, overrides } => overrides
+                .values()
+                .fold((*default, *default), |(lo, hi), &k| (lo.min(k), hi.max(k))),
         }
     }
 }
@@ -532,5 +623,41 @@ mod tests {
         // coordinate, and v2/v3 baselines must keep diff-matching.
         assert_eq!(blast.label(), "greedy(kmax=6)");
         assert_eq!(h.label(), "hyst(kmax=8,band=1)");
+    }
+
+    #[test]
+    fn per_link_controllers_replay_cold_history_on_materialization() {
+        // The lazy bank must be decision-for-decision identical to a
+        // dense one-controller-per-pair bank, including for stateful
+        // hysteresis: the cold controller stands in for every untouched
+        // pair, and a pair touched mid-run gets a fresh controller
+        // replayed through the cold history first.
+        let model = fig10_model(64.0);
+        let mk = move || -> Box<dyn KController> { Box::new(HysteresisK::new(model, 8, 2.0)) };
+        // 10⁶ pairs: construction must not allocate per pair.
+        // `mk` captures only `Copy` data, so it is itself `Copy` and
+        // can seed both banks.
+        let mut lazy = PerLinkControllers::new(1_000_000, Box::new(mk));
+        let mut dense: Vec<Box<dyn KController>> = (0..4).map(|_| mk()).collect();
+        // An informative-enough prior that hysteresis lays an anchor
+        // (width 0.44 < the 0.5 uninformative cutoff).
+        let (p0, iv0) = (0.1, (0.0, 0.44));
+        // Pair 2 turns hot at step 3; 0.25 escapes the prior anchor.
+        let hot = (0.25, (0.2, 0.3));
+        for step in 0..6 {
+            let default = lazy.choose_default(p0, iv0);
+            for (pair, ctl) in dense.iter_mut().enumerate() {
+                let (p, iv) = if pair == 2 && step >= 3 { hot } else { (p0, iv0) };
+                let want = ctl.choose_k(p, iv);
+                let got = if pair == 2 && step >= 3 {
+                    lazy.choose_for(2, hot.0, hot.1, p0, iv0)
+                } else {
+                    default
+                };
+                assert_eq!(got, want, "step {step} pair {pair}");
+            }
+        }
+        assert_eq!(lazy.n_touched(), 1, "only the hot pair holds live state");
+        assert_eq!(lazy.n_pairs(), 1_000_000);
     }
 }

@@ -33,11 +33,15 @@
 //! frequency trackers (never collapses to a point at p̂ ∈ {0, 1}),
 //! moment-matched normal for the Beta posterior.
 //!
-//! [`LinkBank`] holds one estimator per directed pair and aggregates a
+//! [`LinkBank`] holds one estimator per directed pair — materialized
+//! lazily on the pair's first traffic, so a 10⁴-node bank costs
+//! O(touched) rather than O(n²) — and aggregates a
 //! global estimate for the (global) k controller, weighting each pair
 //! by its estimator's effective sample size — not its all-time traffic,
 //! which would go stale across regime shifts (the PR-4 fix) — while
 //! keeping the per-link states inspectable for per-link control.
+
+use std::collections::BTreeMap;
 
 /// z-score of the two-sided 95 % interval all estimators report.
 const Z95: f64 = 1.96;
@@ -261,56 +265,97 @@ impl LossEstimator for BetaPosterior {
 /// PR-4 staleness bug). Pairs that never saw traffic stay out of the
 /// aggregate entirely; the cumulative counters survive only for
 /// [`LinkBank::observed`] and the traffic-seen gate.
+///
+/// ## Sparse allocation
+///
+/// `n_pairs` grows as n² while a phase only touches the pairs its
+/// transfers use (a halo exchange touches O(n)), so estimators are
+/// allocated **lazily on first traffic**. Every untouched pair is
+/// served by one shared pristine `proto` estimator — all pairs share
+/// one construction, so one prior stands in for all of them — and the
+/// aggregate loops over touched pairs only. Construction is O(1) in
+/// `n_pairs`; memory and per-query time are O(touched).
 pub struct LinkBank {
-    links: Vec<Box<dyn LossEstimator>>,
-    traffic: Vec<u64>,
+    /// Builds one pair's estimator, on that pair's first traffic.
+    mk: Box<dyn Fn() -> Box<dyn LossEstimator> + Send>,
+    /// Pristine estimator answering for every untouched pair.
+    proto: Box<dyn LossEstimator>,
+    /// Live estimators, keyed by row-major pair id (`src·n + dst`).
+    links: BTreeMap<usize, Box<dyn LossEstimator>>,
+    /// Cumulative wire copies per touched pair.
+    traffic: BTreeMap<usize, u64>,
+    n_pairs: usize,
 }
 
 impl LinkBank {
     /// A bank of `n_pairs` independent estimators built by `mk` (one per
-    /// directed pair, row-major `src·n + dst`; the diagonal never sees
-    /// traffic and stays at the prior).
-    pub fn new(n_pairs: usize, mk: impl Fn() -> Box<dyn LossEstimator>) -> LinkBank {
+    /// directed pair, row-major `src·n + dst`, materialized on first
+    /// traffic; the diagonal never sees traffic and stays at the prior).
+    pub fn new(
+        n_pairs: usize,
+        mk: impl Fn() -> Box<dyn LossEstimator> + Send + 'static,
+    ) -> LinkBank {
         assert!(n_pairs >= 1);
+        let proto = mk();
         LinkBank {
-            links: (0..n_pairs).map(|_| mk()).collect(),
-            traffic: vec![0; n_pairs],
+            mk: Box::new(mk),
+            proto,
+            links: BTreeMap::new(),
+            traffic: BTreeMap::new(),
+            n_pairs,
         }
     }
 
     pub fn n_pairs(&self) -> usize {
+        self.n_pairs
+    }
+
+    /// Directed pairs holding live estimator state — the bank's actual
+    /// memory footprint, O(touched) rather than O(n²).
+    pub fn n_touched(&self) -> usize {
         self.links.len()
     }
 
-    /// Feed one pair's `(lost, sent)` delta for the phase just run.
+    /// Pair ids with live estimator state, ascending.
+    pub fn touched(&self) -> impl Iterator<Item = usize> + '_ {
+        self.links.keys().copied()
+    }
+
+    /// The shared prior estimate every untouched pair reports.
+    pub fn prior_estimate(&self) -> f64 {
+        self.proto.estimate()
+    }
+
+    /// The shared prior interval every untouched pair reports.
+    pub fn prior_interval(&self) -> (f64, f64) {
+        self.proto.interval()
+    }
+
+    /// Feed one pair's `(lost, sent)` delta for the phase just run,
+    /// materializing the pair's estimator on its first traffic.
     pub fn observe(&mut self, pair: usize, lost: u64, sent: u64) {
         if sent == 0 {
             return;
         }
-        self.links[pair].observe(lost, sent);
-        self.traffic[pair] += sent;
+        assert!(pair < self.n_pairs, "pair {pair} out of range {}", self.n_pairs);
+        let mk = &self.mk;
+        self.links.entry(pair).or_insert_with(|| mk()).observe(lost, sent);
+        *self.traffic.entry(pair).or_insert(0) += sent;
     }
 
-    fn total_traffic(&self) -> u64 {
-        self.traffic.iter().sum()
-    }
-
-    /// Aggregation weight of one pair: its estimator's effective sample
-    /// size, gated on the pair having seen traffic at all (a cold
-    /// estimator's prior pseudo-weight must not vote).
-    fn ess(&self, pair: usize) -> f64 {
-        if self.traffic[pair] == 0 {
-            return 0.0;
-        }
-        self.links[pair].weight().max(0.0)
+    /// Aggregation weight of one *touched* pair: its estimator's
+    /// effective sample size. The traffic-seen gate of the dense bank
+    /// is structural now — an estimator only exists after `sent > 0` —
+    /// so a cold prior's pseudo-weight can never vote.
+    fn ess(est: &dyn LossEstimator) -> f64 {
+        est.weight().max(0.0)
     }
 
     fn total_ess(&self) -> f64 {
-        (0..self.links.len()).map(|i| self.ess(i)).sum()
+        self.links.values().map(|e| Self::ess(e.as_ref())).sum()
     }
 
-    /// ESS-weighted global p̂; the prior of link 0 before any
-    /// observation (all links share one construction, so one prior).
+    /// ESS-weighted global p̂; the shared prior before any observation.
     ///
     /// Weighting by [`LossEstimator::weight`] instead of cumulative
     /// traffic keeps the aggregate exactly as forgetful as its
@@ -320,11 +365,11 @@ impl LinkBank {
     pub fn estimate(&self) -> f64 {
         let total = self.total_ess();
         if total <= 0.0 {
-            return self.links[0].estimate();
+            return self.proto.estimate();
         }
         let mut acc = 0.0;
-        for (i, est) in self.links.iter().enumerate() {
-            let w = self.ess(i);
+        for est in self.links.values() {
+            let w = Self::ess(est.as_ref());
             if w > 0.0 {
                 acc += w * est.estimate();
             }
@@ -342,11 +387,11 @@ impl LinkBank {
     pub fn interval(&self) -> (f64, f64) {
         let total = self.total_ess();
         if total <= 0.0 {
-            return self.links[0].interval();
+            return self.proto.interval();
         }
         let (mut lo, mut hi) = (0.0, 0.0);
-        for (i, est) in self.links.iter().enumerate() {
-            let w = self.ess(i);
+        for est in self.links.values() {
+            let w = Self::ess(est.as_ref());
             if w > 0.0 {
                 let (l, h) = est.interval();
                 lo += w * l;
@@ -360,41 +405,49 @@ impl LinkBank {
         }
     }
 
-    /// One pair's point estimate (the prior until that pair sees
+    /// One pair's point estimate (the shared prior until that pair sees
     /// traffic) — what a per-link k controller solves against.
     pub fn link_estimate(&self, pair: usize) -> f64 {
-        self.links[pair].estimate()
+        assert!(pair < self.n_pairs, "pair {pair} out of range {}", self.n_pairs);
+        match self.links.get(&pair) {
+            Some(est) => est.estimate(),
+            None => self.proto.estimate(),
+        }
     }
 
-    /// One pair's ~95 % interval (`(0, 1)` until the pair sees traffic).
+    /// One pair's ~95 % interval (the prior's until the pair sees
+    /// traffic).
     pub fn link_interval(&self, pair: usize) -> (f64, f64) {
-        self.links[pair].interval()
+        assert!(pair < self.n_pairs, "pair {pair} out of range {}", self.n_pairs);
+        match self.links.get(&pair) {
+            Some(est) => est.interval(),
+            None => self.proto.interval(),
+        }
     }
 
     /// Cumulative wire copies one pair has carried.
     pub fn link_traffic(&self, pair: usize) -> u64 {
-        self.traffic[pair]
+        assert!(pair < self.n_pairs, "pair {pair} out of range {}", self.n_pairs);
+        self.traffic.get(&pair).copied().unwrap_or(0)
     }
 
     /// (min, max) point estimate over pairs that saw traffic — the
     /// heterogeneity spread for reporting. `None` before any traffic.
     pub fn spread(&self) -> Option<(f64, f64)> {
         let mut out: Option<(f64, f64)> = None;
-        for (est, &w) in self.links.iter().zip(&self.traffic) {
-            if w > 0 {
-                let p = est.estimate();
-                out = Some(match out {
-                    None => (p, p),
-                    Some((lo, hi)) => (lo.min(p), hi.max(p)),
-                });
-            }
+        for est in self.links.values() {
+            let p = est.estimate();
+            out = Some(match out {
+                None => (p, p),
+                Some((lo, hi)) => (lo.min(p), hi.max(p)),
+            });
         }
         out
     }
 
     /// Total wire copies observed across all pairs.
     pub fn observed(&self) -> u64 {
-        self.total_traffic()
+        self.traffic.values().sum()
     }
 }
 
@@ -546,6 +599,27 @@ mod tests {
         let bank = LinkBank::new(9, || Box::new(BetaPosterior::new(2.0, 0.12)));
         assert!((bank.estimate() - 0.12).abs() < 1e-9);
         assert!(bank.spread().is_none());
+        assert!((bank.prior_estimate() - 0.12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_bank_allocates_only_touched_pairs() {
+        // n = 10⁴ nodes → 10⁸ directed pairs: an eager bank would box
+        // 10⁸ estimators before the first packet flies. Construction
+        // must be O(1) in n_pairs and state O(touched).
+        let mut bank = LinkBank::new(100_000_000, || Box::new(WindowedFrequency::new(32, 0.1)));
+        assert_eq!(bank.n_touched(), 0);
+        bank.observe(5, 1, 10);
+        bank.observe(99_999_999, 2, 10);
+        bank.observe(5, 0, 10);
+        bank.observe(7, 0, 0); // sent = 0 must not materialize anything
+        assert_eq!(bank.n_touched(), 2);
+        assert_eq!(bank.touched().collect::<Vec<_>>(), vec![5, 99_999_999]);
+        assert_eq!(bank.observed(), 30);
+        assert!((bank.link_estimate(5) - 0.05).abs() < 1e-12);
+        assert_eq!(bank.link_estimate(12_345), 0.1, "untouched pair serves the prior");
+        assert_eq!(bank.link_interval(12_345), (0.0, 1.0));
+        assert_eq!(bank.link_traffic(12_345), 0);
     }
 
     #[test]

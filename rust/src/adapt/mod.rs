@@ -31,7 +31,8 @@ pub mod controller;
 pub mod estimator;
 
 pub use controller::{
-    CostModel, GreedyRho, HysteresisK, KChoice, KController, KPolicy, StaticK,
+    CostModel, GreedyRho, HysteresisK, KChoice, KController, KPolicy, PerLinkControllers,
+    StaticK,
 };
 pub use estimator::{BetaPosterior, Ewma, LinkBank, LossEstimator, WindowedFrequency};
 
@@ -230,8 +231,8 @@ impl AdaptSpec {
     /// cost hooks, so the chosen parameter is k for k-copy, the
     /// retransmit budget for blast, the parity group size for FEC
     /// (see [`CostModel::best_param_for`]). A per-link scope gets one
-    /// controller per directed pair, mirroring the bank's estimator
-    /// layout.
+    /// controller per directed pair — materialized lazily per touched
+    /// pair, mirroring the bank's sparse estimator layout.
     pub fn build_for(
         &self,
         model: CostModel,
@@ -239,7 +240,7 @@ impl AdaptSpec {
         scheme: crate::net::scheme::SchemeSpec,
     ) -> Option<AdaptiveK> {
         let n_pairs = n_nodes.max(1) * n_nodes.max(1);
-        let mk: Box<dyn Fn() -> Box<dyn KController>> = match *self {
+        let mk: Box<dyn Fn() -> Box<dyn KController> + Send> = match *self {
             AdaptSpec::Static => return None,
             AdaptSpec::Greedy { k_max, .. } => {
                 Box::new(move || Box::new(GreedyRho::for_scheme(model, k_max, scheme)))
@@ -254,9 +255,11 @@ impl AdaptSpec {
         };
         let policy = match self.scope() {
             KScope::Global => KPolicy::Global(mk()),
-            KScope::PerLink => KPolicy::PerLink((0..n_pairs).map(|_| mk()).collect()),
+            KScope::PerLink => {
+                KPolicy::PerLink(controller::PerLinkControllers::new(n_pairs, mk))
+            }
         };
-        let bank = LinkBank::new(n_pairs, || est.build());
+        let bank = LinkBank::new(n_pairs, move || est.build());
         Some(AdaptiveK { bank, policy })
     }
 }
@@ -273,11 +276,11 @@ pub struct AdaptiveK {
 
 impl AdaptiveK {
     pub fn new(bank: LinkBank, policy: KPolicy) -> AdaptiveK {
-        if let KPolicy::PerLink(cs) = &policy {
+        if let KPolicy::PerLink(pl) = &policy {
             assert_eq!(
-                cs.len(),
+                pl.n_pairs(),
                 bank.n_pairs(),
-                "per-link policy needs one controller per bank pair"
+                "per-link policy needs one controller slot per bank pair"
             );
         }
         AdaptiveK { bank, policy }
@@ -285,7 +288,9 @@ impl AdaptiveK {
 
     /// Pick the coming superstep's duplication decision: a single k
     /// from the bank's aggregate view (global policy), or one k per
-    /// directed pair from each pair's own estimator (per-link policy).
+    /// directed pair from each pair's own estimator (per-link policy —
+    /// sparse: one shared default for the untouched pairs, one override
+    /// per touched pair).
     pub fn choose(&mut self) -> KChoice {
         match &mut self.policy {
             KPolicy::Global(c) => {
@@ -293,17 +298,18 @@ impl AdaptiveK {
                 let interval = self.bank.interval();
                 KChoice::Global(c.choose_k(p_hat, interval).max(1))
             }
-            KPolicy::PerLink(cs) => {
+            KPolicy::PerLink(pl) => {
                 let bank = &self.bank;
-                let ks = cs
-                    .iter_mut()
-                    .enumerate()
-                    .map(|(pair, c)| {
-                        c.choose_k(bank.link_estimate(pair), bank.link_interval(pair))
-                            .max(1)
-                    })
-                    .collect();
-                KChoice::PerLink(ks)
+                let (p0, iv0) = (bank.prior_estimate(), bank.prior_interval());
+                let default = pl.choose_default(p0, iv0).max(1);
+                let mut overrides = std::collections::BTreeMap::new();
+                for pair in bank.touched() {
+                    let k = pl
+                        .choose_for(pair, bank.link_estimate(pair), bank.link_interval(pair), p0, iv0)
+                        .max(1);
+                    overrides.insert(pair, k);
+                }
+                KChoice::PerLink { default, overrides }
             }
         }
     }
@@ -314,7 +320,7 @@ impl AdaptiveK {
     pub fn choose_k(&mut self) -> u32 {
         match self.choose() {
             KChoice::Global(k) => k,
-            KChoice::PerLink(ks) => ks.into_iter().max().unwrap_or(1).max(1),
+            choice @ KChoice::PerLink { .. } => choice.min_max().1.max(1),
         }
     }
 
@@ -436,10 +442,12 @@ mod tests {
             loop_.observe_pair(2, 35, 100); // 0→2 lossy
         }
         let choice = loop_.choose();
-        let KChoice::PerLink(ks) = &choice else {
+        let KChoice::PerLink { default, overrides } = &choice else {
             panic!("per-link spec must produce a per-link choice")
         };
-        assert_eq!(ks.len(), 16);
+        assert_eq!(overrides.len(), 2, "only touched pairs carry their own decision");
+        assert!(*default >= 1 && *default <= 4);
+        assert_eq!(choice.for_pair(3), *default, "untouched pair takes the default");
         assert_eq!(choice.for_pair(1), 1, "clean pair wants one copy");
         assert_eq!(choice.for_pair(2), 4, "lossy pair wants the cap");
         assert_eq!(choice.min_max(), (1, 4));

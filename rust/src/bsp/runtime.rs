@@ -1,5 +1,7 @@
 //! The superstep driver.
 
+use std::collections::BTreeMap;
+
 use crate::adapt::{AdaptiveK, KChoice};
 use crate::net::loss::PiecewiseStationary;
 use crate::net::protocol::{
@@ -270,7 +272,9 @@ impl BspRuntime {
             let per_transfer: Vec<u32> = transfers
                 .iter()
                 .map(|tr| match &choice {
-                    Some(KChoice::PerLink(ks)) => ks[tr.src * topo_n + tr.dst].max(1),
+                    Some(c @ KChoice::PerLink { .. }) => {
+                        c.for_pair(tr.src * topo_n + tr.dst).max(1)
+                    }
                     _ => self.copies,
                 })
                 .collect();
@@ -283,10 +287,16 @@ impl BspRuntime {
                     / per_transfer.len() as f64;
                 (lo, hi, mean)
             };
-            let pairs_before: Option<Vec<(u64, u64)>> = self.adapt.as_ref().map(|_| {
-                let (sent, lost) = self.net.pair_counters();
-                sent.iter().copied().zip(lost.iter().copied()).collect()
-            });
+            // Snapshot the sparse per-pair counters so the post-phase
+            // feed can hand the estimators exact deltas. Only pairs
+            // with traffic exist — O(touched), not O(n²).
+            let pairs_before: Option<BTreeMap<usize, (u64, u64)>> =
+                self.adapt.as_ref().map(|_| {
+                    self.net
+                        .touched_pairs()
+                        .map(|(pair, sent, lost)| (pair, (sent, lost)))
+                        .collect()
+                });
             let phase = if transfers.is_empty() {
                 PhaseReport {
                     rounds: 0,
@@ -315,17 +325,17 @@ impl BspRuntime {
             };
 
             // --- close the loop: per-pair (lost, sent) deltas feed the
-            // per-link estimators.
+            // per-link estimators. Iterating the transport's touched
+            // pairs (ascending pair id — the same order the old dense
+            // scan visited them) keeps the feed O(touched).
             if let Some(before) = pairs_before {
-                let (sent_now, lost_now): (Vec<u64>, Vec<u64>) = {
-                    let (s, l) = self.net.pair_counters();
-                    (s.to_vec(), l.to_vec())
-                };
+                let net = &self.net;
                 let ad = self.adapt.as_mut().expect("snapshot implies adapt");
-                for (pair, &(s0, l0)) in before.iter().enumerate() {
-                    let ds = sent_now[pair] - s0;
+                for (pair, sent_now, lost_now) in net.touched_pairs() {
+                    let (s0, l0) = before.get(&pair).copied().unwrap_or((0, 0));
+                    let ds = sent_now - s0;
                     if ds > 0 {
-                        ad.observe_pair(pair, lost_now[pair] - l0, ds);
+                        ad.observe_pair(pair, lost_now - l0, ds);
                     }
                 }
             }

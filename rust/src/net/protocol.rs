@@ -261,68 +261,93 @@ pub fn run_phase_scheme(
     let mut parity: Option<ParityState> =
         scheme.parity_group(1).map(|_| ParityState::new(transfers.len()));
 
-    let send_round =
-        |net: &mut Network, unacked: &[bool], round: u64, parity: &mut Option<ParityState>| {
-            // Per-pair resend lists for parity grouping (keyed by first
-            // occurrence so the emission order is deterministic; phases
-            // touch few distinct pairs, so the linear pair scan is off
-            // the hot path).
-            let mut per_pair: Vec<(NodeId, NodeId, Vec<u32>)> = Vec::new();
-            for (idx, tr) in transfers.iter().enumerate() {
-                let resend = match cfg.policy {
-                    RetransmitPolicy::WholeRound => true,
-                    RetransmitPolicy::Selective => unacked[idx],
-                };
-                if !resend {
-                    continue;
+    // Round emission is grouped by directed pair: the resend list is
+    // stable-sorted by (src, dst) and each run becomes one
+    // [`Network::send_group`] batch, so a `(pair, round)`'s wire copies
+    // resolve in a single aggregate loss draw and the old per-pair
+    // linear scan (O(pairs²) across a phase) disappears. The stable
+    // sort keeps transfer order within a pair, so parity groups are
+    // chunked exactly as before; emission order across pairs changes
+    // from transfer order to pair order — a different (equally valid)
+    // realization of the same protocol. Buffers are owned by the
+    // closure and reused across rounds.
+    let mut resend_order: Vec<u32> = Vec::new();
+    let mut batch: Vec<Packet> = Vec::new();
+    let mut send_round = move |net: &mut Network,
+                               unacked: &[bool],
+                               round: u64,
+                               parity: &mut Option<ParityState>| {
+        resend_order.clear();
+        for idx in 0..transfers.len() {
+            let resend = match cfg.policy {
+                RetransmitPolicy::WholeRound => true,
+                RetransmitPolicy::Selective => unacked[idx],
+            };
+            if resend {
+                resend_order.push(idx as u32);
+            }
+        }
+        resend_order.sort_by_key(|&i| {
+            let t = &transfers[i as usize];
+            (t.src, t.dst)
+        });
+        let mut start = 0usize;
+        while start < resend_order.len() {
+            let first = &transfers[resend_order[start] as usize];
+            let (src, dst) = (first.src, first.dst);
+            let mut end = start + 1;
+            while end < resend_order.len() {
+                let t = &transfers[resend_order[end] as usize];
+                if (t.src, t.dst) != (src, dst) {
+                    break;
                 }
+                end += 1;
+            }
+            batch.clear();
+            for &i in &resend_order[start..end] {
+                let idx = i as usize;
+                let tr = &transfers[idx];
                 let plan = scheme.wire_plan(round, v_of(idx));
                 let seq = tag(phase, idx as u64);
                 for copy in 0..plan.data_copies {
-                    net.send(Packet::data(tr.src, tr.dst, seq, copy, tr.bytes));
-                }
-                if parity.is_some() {
-                    match per_pair
-                        .iter_mut()
-                        .find(|(s, d, _)| (*s, *d) == (tr.src, tr.dst))
-                    {
-                        Some((_, _, idxs)) => idxs.push(idx as u32),
-                        None => per_pair.push((tr.src, tr.dst, vec![idx as u32])),
-                    }
+                    batch.push(Packet::data(tr.src, tr.dst, seq, copy, tr.bytes));
                 }
             }
-            // Parity: chunk each pair's resend list into groups of that
+            // Parity: chunk the pair's resend list into groups of that
             // pair's group size (the parameter of the chunk's first
             // member — identical across a pair under global and
             // per-link control alike) and emit one XOR parity packet
-            // per group, sized by its largest member.
+            // per group, sized by its largest member, riding in the
+            // same batch as the pair's data.
             if let Some(ps) = parity.as_mut() {
-                for (src, dst, idxs) in per_pair {
-                    let mut start = 0;
-                    while start < idxs.len() {
-                        let g = scheme
-                            .parity_group(v_of(idxs[start] as usize))
-                            .expect("parity state implies a parity scheme");
-                        let members: Vec<u32> =
-                            idxs[start..(start + g).min(idxs.len())].to_vec();
-                        start += members.len();
-                        let bytes = members
-                            .iter()
-                            .map(|&m| transfers[m as usize].bytes)
-                            .max()
-                            .expect("groups are non-empty");
-                        let gid = ps.open_group(members);
-                        net.send(Packet::data(src, dst, tag(phase, PARITY_BASE | gid), 0, bytes));
-                    }
+                let idxs = &resend_order[start..end];
+                let mut gs = 0;
+                while gs < idxs.len() {
+                    let g = scheme
+                        .parity_group(v_of(idxs[gs] as usize))
+                        .expect("parity state implies a parity scheme");
+                    let members: Vec<u32> = idxs[gs..(gs + g).min(idxs.len())].to_vec();
+                    gs += members.len();
+                    let bytes = members
+                        .iter()
+                        .map(|&m| transfers[m as usize].bytes)
+                        .max()
+                        .expect("groups are non-empty");
+                    let gid = ps.open_group(members);
+                    batch.push(Packet::data(src, dst, tag(phase, PARITY_BASE | gid), 0, bytes));
                 }
             }
-            // One global round timer. node 0 is arbitrary; the token encodes
-            // (phase, round) for staleness filtering.
-            net.arm_timer(0, tag(phase, round), cfg.timeout_s);
-        };
+            net.send_group(&batch);
+            start = end;
+        }
+        // One global round timer. node 0 is arbitrary; the token encodes
+        // (phase, round) for staleness filtering.
+        net.arm_timer(0, tag(phase, round), cfg.timeout_s);
+    };
 
     send_round(net, &unacked, round, &mut parity);
 
+    let mut ack_batch: Vec<Packet> = Vec::new();
     while n_unacked > 0 {
         let Some((now, ev)) = net.step() else {
             // Queue exhausted without completion — can only happen with a
@@ -354,7 +379,11 @@ pub fn run_phase_scheme(
                         }
                         // Ack once per round per seq (dedups the k
                         // copies); recovered members ack exactly like
-                        // direct arrivals.
+                        // direct arrivals. Everything recovered by one
+                        // arrival shares its directed pair (parity
+                        // groups never span pairs), so the acks go out
+                        // as one batch.
+                        ack_batch.clear();
                         for i in known {
                             let e = &mut acked_in_round[i];
                             if *e != round {
@@ -363,10 +392,11 @@ pub fn run_phase_scheme(
                                 let plan = scheme.wire_plan(round, v_of(i));
                                 let seq = tag(phase, i as u64);
                                 for copy in 0..plan.ack_copies {
-                                    net.send(Packet::ack(tr.dst, tr.src, seq, copy));
+                                    ack_batch.push(Packet::ack(tr.dst, tr.src, seq, copy));
                                 }
                             }
                         }
+                        net.send_group(&ack_batch);
                     }
                     PacketKind::Ack => {
                         let i = idx as usize;
@@ -566,13 +596,12 @@ mod tests {
         assert_eq!(r.rounds, 1);
         assert_eq!(r.data_packets_sent, 6); // 1 + 3 + 2 wire copies
         assert_eq!(r.ack_packets_sent, 6); // acks mirror per-link k
-        let (sent, _) = net.pair_counters();
-        assert_eq!(sent[1], 1); // 0 -> 1 data
-        assert_eq!(sent[2], 3); // 0 -> 2 data
-        assert_eq!(sent[3 + 2], 2); // 1 -> 2 data
-        assert_eq!(sent[3], 1); // 1 -> 0 ack mirrors k=1
-        assert_eq!(sent[2 * 3], 3); // 2 -> 0 ack mirrors k=3
-        assert_eq!(sent[2 * 3 + 1], 2); // 2 -> 1 ack mirrors k=2
+        assert_eq!(net.pair_sent(0, 1), 1); // 0 -> 1 data
+        assert_eq!(net.pair_sent(0, 2), 3); // 0 -> 2 data
+        assert_eq!(net.pair_sent(1, 2), 2); // 1 -> 2 data
+        assert_eq!(net.pair_sent(1, 0), 1); // 1 -> 0 ack mirrors k=1
+        assert_eq!(net.pair_sent(2, 0), 3); // 2 -> 0 ack mirrors k=3
+        assert_eq!(net.pair_sent(2, 1), 2); // 2 -> 1 ack mirrors k=2
     }
 
     #[test]
@@ -767,9 +796,8 @@ mod tests {
         let r = run_phase_scheme(&mut net, &transfers, &cfg, &FecParity, None);
         assert!(r.completed);
         assert_eq!(r.data_packets_sent, 4 + 2, "4 data + 1 parity per pair");
-        let (sent, _) = net.pair_counters();
-        assert_eq!(sent[1], 3); // 0 -> 1: 2 data + 1 parity
-        assert_eq!(sent[2], 3); // 0 -> 2: 2 data + 1 parity
+        assert_eq!(net.pair_sent(0, 1), 3); // 0 -> 1: 2 data + 1 parity
+        assert_eq!(net.pair_sent(0, 2), 3); // 0 -> 2: 2 data + 1 parity
     }
 
     #[test]

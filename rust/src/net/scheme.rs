@@ -311,19 +311,19 @@ impl ReliabilityScheme for TcpLike {
         // One AIMD flow per directed pair, all pairs concurrent (the
         // fluid approximation ignores uplink sharing between a node's
         // flows, as flow-level TCP models do); the phase completes when
-        // the slowest flow does.
-        let mut pair_segments: Vec<(NodeId, NodeId, Vec<u64>)> = Vec::new();
+        // the slowest flow does. Grouping goes through a map (O(c log
+        // pairs), not the old linear pair scan) and flows run in pair-id
+        // order — deterministic, and O(1) lookups at any phase size.
+        let mut pair_segments: std::collections::BTreeMap<(NodeId, NodeId), Vec<u64>> =
+            std::collections::BTreeMap::new();
         for tr in transfers {
-            match pair_segments.iter_mut().find(|(s, d, _)| (*s, *d) == (tr.src, tr.dst)) {
-                Some((_, _, segs)) => segs.push(tr.bytes),
-                None => pair_segments.push((tr.src, tr.dst, vec![tr.bytes])),
-            }
+            pair_segments.entry((tr.src, tr.dst)).or_default().push(tr.bytes);
         }
         let mut worst_time = 0.0f64;
         let mut worst_rounds = 0u64;
         let mut completed = true;
-        for (src, dst, segs) in &pair_segments {
-            let (t, r, ok) = self.run_pair_flow(net, *src, *dst, segs, cfg.max_rounds);
+        for (&(src, dst), segs) in &pair_segments {
+            let (t, r, ok) = self.run_pair_flow(net, src, dst, segs, cfg.max_rounds);
             worst_time = worst_time.max(t);
             worst_rounds = worst_rounds.max(r);
             completed &= ok;

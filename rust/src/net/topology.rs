@@ -9,6 +9,34 @@
 //! * [`Topology::planetlab_like`] — per-pair parameters drawn from the
 //!   empirical ranges measured in the paper's Figs 1–3 (used by the
 //!   measurement campaign and the end-to-end workloads).
+//!
+//! # Sparse representation
+//!
+//! The paper's regime is n = 10⁴ and beyond, where a dense `n×n` table of
+//! links and loss processes is ~10⁸ entries (gigabytes) even though a
+//! halo-exchange workload touches O(n) pairs. The topology therefore
+//! stores one *default* (link, loss) plus sparse per-pair overrides keyed
+//! by directed pair id `src·n + dst`:
+//!
+//! * uniform topologies are O(1) in memory regardless of n;
+//! * [`Topology::with_loss_map`] / [`Topology::two_tier`] store only the
+//!   pairs whose loss differs from the modal value;
+//! * the PlanetLab constructors store every off-diagonal pair (they are
+//!   heterogeneous by construction) — unchanged asymptotics, same draws;
+//! * a *stateful* default process (Gilbert–Elliott) materializes a
+//!   private per-pair copy on first traffic, so only touched pairs carry
+//!   chain state. A fresh copy of the pristine default starts in Good —
+//!   exactly what a dense freshly-constructed slot held — and the chain
+//!   consumes exactly two rng draws per packet regardless of state, so
+//!   the draw streams are bitwise identical to the dense layout's.
+//!
+//! [`Topology::lose_batch`] is the aggregate-draw entry for the protocol
+//! hot path: iid Bernoulli pairs resolve a whole `(pair, round)` batch by
+//! geometric gap-skipping (expected `t·p + 1` draws for `t` copies,
+//! exactly the iid per-copy distribution), while Gilbert–Elliott pairs
+//! keep the per-packet walk that the burst correlation requires.
+
+use std::collections::BTreeMap;
 
 use crate::util::prng::Rng;
 
@@ -39,13 +67,19 @@ impl PairLoss {
     }
 }
 
-/// Complete-graph topology over `n` nodes.
+/// Complete-graph topology over `n` nodes: a default (link, loss) pair
+/// plus sparse overrides for the pairs that differ (see module docs).
 #[derive(Clone, Debug)]
 pub struct Topology {
     n: usize,
-    /// Row-major (src * n + dst); diagonal is unused.
-    links: Vec<Link>,
-    loss: Vec<PairLoss>,
+    default_link: Link,
+    /// Pristine default loss process. Never mutated by sampling: a
+    /// stateful default (GE) is copied into `loss_overrides` on first
+    /// use so per-pair chain state stays per-pair.
+    default_loss: PairLoss,
+    /// Keyed by directed pair id `src·n + dst`; never holds a diagonal.
+    link_overrides: BTreeMap<u64, Link>,
+    loss_overrides: BTreeMap<u64, PairLoss>,
 }
 
 /// Empirical parameter ranges from the paper's PlanetLab measurements.
@@ -80,24 +114,71 @@ impl Default for PlanetLabRanges {
     }
 }
 
+/// Fill `out` with the fates of `count` iid Bernoulli(p) trials using
+/// geometric gap-skipping: the indices of lost copies are reconstructed
+/// from "trials until next loss" jumps, so a batch costs ~`count·p + 1`
+/// uniform draws instead of `count`. The per-index loss distribution is
+/// exactly iid Bernoulli(p) — the gaps between successive losses of an
+/// iid process *are* geometric — but the realization for a given rng
+/// state differs from per-copy sampling, so single-copy batches take the
+/// scalar draw for bitwise compatibility with [`Topology::lose`].
+fn batch_bernoulli(p: f64, count: usize, rng: &mut Rng, out: &mut Vec<bool>) {
+    if count == 1 {
+        out.push(rng.bernoulli(p));
+        return;
+    }
+    out.resize(count, false);
+    if p <= 0.0 {
+        return;
+    }
+    if p >= 1.0 {
+        out.iter_mut().for_each(|x| *x = true);
+        return;
+    }
+    let mut cursor = 0usize;
+    loop {
+        // Trials up to and including the next loss; saturate so a tiny p
+        // (astronomical gap) cannot wrap the cursor.
+        let gap = rng.geometric(p) as usize;
+        cursor = cursor.saturating_add(gap - 1);
+        if cursor >= count {
+            break;
+        }
+        out[cursor] = true;
+        cursor += 1;
+    }
+}
+
 impl Topology {
+    #[inline]
+    fn key(&self, src: usize, dst: usize) -> u64 {
+        (src * self.n + dst) as u64
+    }
+
     /// Identical links everywhere: Bernoulli(p), given bandwidth/RTT.
+    /// O(1) memory — no per-pair state at any n.
     pub fn uniform(n: usize, link: Link, p: f64) -> Topology {
         assert!(n >= 1);
         Topology {
             n,
-            links: vec![link; n * n],
-            loss: vec![PairLoss::Bernoulli(Bernoulli::new(p)); n * n],
+            default_link: link,
+            default_loss: PairLoss::Bernoulli(Bernoulli::new(p)),
+            link_overrides: BTreeMap::new(),
+            loss_overrides: BTreeMap::new(),
         }
     }
 
     /// Identical links with a bursty Gilbert–Elliott process (ablation).
+    /// Each pair materializes its own chain state on first traffic.
     pub fn uniform_bursty(n: usize, link: Link, p: f64, burst_len: f64) -> Topology {
+        assert!(n >= 1);
         let ge = GilbertElliott::with_mean_loss(p, burst_len);
         Topology {
             n,
-            links: vec![link; n * n],
-            loss: vec![PairLoss::GilbertElliott(ge); n * n],
+            default_link: link,
+            default_loss: PairLoss::GilbertElliott(ge),
+            link_overrides: BTreeMap::new(),
+            loss_overrides: BTreeMap::new(),
         }
     }
 
@@ -107,6 +188,10 @@ impl Topology {
     /// planetlab constructors draw theirs from an rng. `burst_len`
     /// turns every pair into a Gilbert–Elliott channel calibrated to
     /// its map entry; `None` keeps iid Bernoulli.
+    ///
+    /// The modal off-diagonal loss value (bit-exact) becomes the
+    /// default; only pairs that differ from it are stored, so a
+    /// two-population map costs O(minority tier), not O(n²).
     pub fn with_loss_map(
         n: usize,
         link: Link,
@@ -115,18 +200,37 @@ impl Topology {
     ) -> Topology {
         assert!(n >= 1);
         assert_eq!(map.len(), n * n, "loss map must be n×n row-major");
-        let loss = (0..n * n)
-            .map(|idx| {
-                // The diagonal never carries traffic; normalize it to a
-                // harmless 0 so callers can pass any placeholder there.
-                let p = if idx / n == idx % n { 0.0 } else { map[idx] };
-                match burst_len {
-                    None => PairLoss::Bernoulli(Bernoulli::new(p)),
-                    Some(b) => PairLoss::GilbertElliott(GilbertElliott::with_mean_loss(p, b)),
-                }
-            })
-            .collect();
-        Topology { n, links: vec![link; n * n], loss }
+        let mk = |p: f64| match burst_len {
+            None => PairLoss::Bernoulli(Bernoulli::new(p)),
+            Some(b) => PairLoss::GilbertElliott(GilbertElliott::with_mean_loss(p, b)),
+        };
+        // The diagonal never carries traffic, so only off-diagonal
+        // entries vote for the default (callers may pass any
+        // placeholder on the diagonal).
+        let mut counts: BTreeMap<u64, usize> = BTreeMap::new();
+        for idx in 0..n * n {
+            if idx / n != idx % n {
+                *counts.entry(map[idx].to_bits()).or_insert(0) += 1;
+            }
+        }
+        let default_p = counts
+            .iter()
+            .max_by_key(|&(_, c)| *c)
+            .map(|(&bits, _)| f64::from_bits(bits))
+            .unwrap_or(0.0);
+        let mut loss_overrides = BTreeMap::new();
+        for idx in 0..n * n {
+            if idx / n != idx % n && map[idx].to_bits() != default_p.to_bits() {
+                loss_overrides.insert(idx as u64, mk(map[idx]));
+            }
+        }
+        Topology {
+            n,
+            default_link: link,
+            default_loss: mk(default_p),
+            link_overrides: BTreeMap::new(),
+            loss_overrides,
+        }
     }
 
     /// Two-tier heterogeneous topology: pair `(i, j)` runs at `p_lo`
@@ -161,25 +265,38 @@ impl Topology {
     /// encodes). This is the [`crate::net::loss::PiecewiseStationary`]
     /// schedule's apply step — a regime shift changes the *level* of
     /// the loss process, not its character.
+    ///
+    /// Cost is O(overrides), not O(n²): the default retunes once, and
+    /// an override that retunes to the very process the default now
+    /// describes (same kind, same burst request) is dropped — so a
+    /// uniform-bursty topology sheds its lazily materialized chain
+    /// copies at each regime shift instead of accreting them.
     pub fn set_mean_loss_all(&mut self, p: f64) {
         assert!((0.0..1.0).contains(&p), "mean loss {p}");
-        for i in 0..self.n {
-            for j in 0..self.n {
-                if i == j {
-                    continue;
-                }
-                let slot = &mut self.loss[i * self.n + j];
-                *slot = match *slot {
-                    PairLoss::Bernoulli(_) => PairLoss::Bernoulli(Bernoulli::new(p)),
-                    // The channel's *configured* burst length — not the
-                    // realized 1/p_bg, which drifts when a high-mean
-                    // segment saturates p_gb and re-solves p_bg.
-                    PairLoss::GilbertElliott(ge) => PairLoss::GilbertElliott(
-                        GilbertElliott::with_mean_loss(p, ge.burst_len()),
-                    ),
-                };
+        let retune = |pl: &PairLoss| match *pl {
+            PairLoss::Bernoulli(_) => PairLoss::Bernoulli(Bernoulli::new(p)),
+            // The channel's *configured* burst length — not the
+            // realized 1/p_bg, which drifts when a high-mean
+            // segment saturates p_gb and re-solves p_bg.
+            PairLoss::GilbertElliott(ge) => {
+                PairLoss::GilbertElliott(GilbertElliott::with_mean_loss(p, ge.burst_len()))
             }
-        }
+        };
+        self.default_loss = retune(&self.default_loss);
+        let default_loss = self.default_loss;
+        self.loss_overrides.retain(|_, pl| {
+            *pl = retune(pl);
+            // Keep only overrides still distinguishable from the
+            // retuned default; a freshly retuned process carries no
+            // chain state, so "same parameters" means "same process".
+            match (*pl, default_loss) {
+                (PairLoss::Bernoulli(_), PairLoss::Bernoulli(_)) => false,
+                (PairLoss::GilbertElliott(a), PairLoss::GilbertElliott(d)) => {
+                    a.burst_len() != d.burst_len()
+                }
+                _ => true,
+            }
+        });
     }
 
     /// Per-pair parameters drawn from PlanetLab-like empirical ranges.
@@ -209,8 +326,12 @@ impl Topology {
         rng: &mut Rng,
     ) -> Topology {
         assert!(n >= 1);
-        let mut links = vec![Link::default(); n * n];
-        let mut loss = vec![PairLoss::Bernoulli(Bernoulli::new(0.0)); n * n];
+        // Every pair is drawn independently, so every pair is an
+        // override: PlanetLab heterogeneity is inherently dense in the
+        // pairs it describes. (The campaign caps planetlab at small n;
+        // the scale path runs on the uniform/two-tier constructors.)
+        let mut link_overrides = BTreeMap::new();
+        let mut loss_overrides = BTreeMap::new();
         for i in 0..n {
             for j in (i + 1)..n {
                 let bw = rng.range_f64(ranges.bw_lo_mbytes, ranges.bw_hi_mbytes);
@@ -230,13 +351,19 @@ impl Topology {
                         PairLoss::GilbertElliott(GilbertElliott::with_mean_loss(p, b))
                     }
                 };
-                links[i * n + j] = link;
-                links[j * n + i] = link;
-                loss[i * n + j] = pl;
-                loss[j * n + i] = pl;
+                link_overrides.insert((i * n + j) as u64, link);
+                link_overrides.insert((j * n + i) as u64, link);
+                loss_overrides.insert((i * n + j) as u64, pl);
+                loss_overrides.insert((j * n + i) as u64, pl);
             }
         }
-        Topology { n, links, loss }
+        Topology {
+            n,
+            default_link: Link::default(),
+            default_loss: PairLoss::Bernoulli(Bernoulli::new(0.0)),
+            link_overrides,
+            loss_overrides,
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -245,32 +372,118 @@ impl Topology {
 
     pub fn link(&self, src: usize, dst: usize) -> &Link {
         assert!(src != dst, "self-link {src}->{dst}");
-        &self.links[src * self.n + dst]
+        self.link_overrides
+            .get(&self.key(src, dst))
+            .unwrap_or(&self.default_link)
     }
 
     /// Sample the loss process for one packet on (src → dst).
     pub fn lose(&mut self, src: usize, dst: usize, rng: &mut Rng) -> bool {
         assert!(src != dst, "self-link {src}->{dst}");
-        self.loss[src * self.n + dst].lose(rng)
+        let key = self.key(src, dst);
+        if let Some(pl) = self.loss_overrides.get_mut(&key) {
+            return pl.lose(rng);
+        }
+        match self.default_loss {
+            // Stateless process: sample straight off a copy, no
+            // materialization.
+            PairLoss::Bernoulli(mut b) => b.lose(rng),
+            // Stateful process: give this pair its own chain (fresh =
+            // pristine default = what a dense slot held) and walk it.
+            PairLoss::GilbertElliott(_) => self
+                .loss_overrides
+                .entry(key)
+                .or_insert(self.default_loss)
+                .lose(rng),
+        }
     }
 
-    pub fn mean_loss(&self, src: usize, dst: usize) -> f64 {
-        self.loss[src * self.n + dst].mean_loss()
-    }
-
-    /// Network-wide average of per-pair mean loss (i ≠ j).
-    pub fn global_mean_loss(&self) -> f64 {
-        let mut sum = 0.0;
-        let mut cnt = 0usize;
-        for i in 0..self.n {
-            for j in 0..self.n {
-                if i != j {
-                    sum += self.loss[i * self.n + j].mean_loss();
-                    cnt += 1;
+    /// Sample the fates of `count` back-to-back packets on (src → dst)
+    /// into `out` (`out[i]` = lost). iid Bernoulli pairs resolve the
+    /// whole batch by geometric gap-skipping (~`count·p + 1` draws,
+    /// exact); Gilbert–Elliott pairs walk the chain per packet in the
+    /// same order [`Topology::lose`] would, consuming identical draws.
+    /// Single-copy batches always take the scalar path, so `count == 1`
+    /// is bitwise-identical to calling [`Topology::lose`] once.
+    pub fn lose_batch(
+        &mut self,
+        src: usize,
+        dst: usize,
+        count: usize,
+        rng: &mut Rng,
+        out: &mut Vec<bool>,
+    ) {
+        assert!(src != dst, "self-link {src}->{dst}");
+        out.clear();
+        if count == 0 {
+            return;
+        }
+        let key = self.key(src, dst);
+        if !self.loss_overrides.contains_key(&key) {
+            match self.default_loss {
+                PairLoss::Bernoulli(b) => {
+                    batch_bernoulli(b.p, count, rng, out);
+                    return;
+                }
+                PairLoss::GilbertElliott(_) => {
+                    self.loss_overrides.insert(key, self.default_loss);
                 }
             }
         }
-        if cnt == 0 { 0.0 } else { sum / cnt as f64 }
+        let pl = self.loss_overrides.get_mut(&key).unwrap();
+        match pl {
+            PairLoss::Bernoulli(b) => batch_bernoulli(b.p, count, rng, out),
+            PairLoss::GilbertElliott(_) => {
+                for _ in 0..count {
+                    out.push(pl.lose(rng));
+                }
+            }
+        }
+    }
+
+    /// The loss process configured for (src → dst) — the pair's
+    /// override if it has one, else the shared default. Returns a copy;
+    /// chain state (GE) is whatever the pair has accumulated, or the
+    /// pristine default for an untouched pair.
+    pub fn pair_loss(&self, src: usize, dst: usize) -> PairLoss {
+        assert!(src != dst, "self-link {src}->{dst}");
+        *self
+            .loss_overrides
+            .get(&self.key(src, dst))
+            .unwrap_or(&self.default_loss)
+    }
+
+    pub fn mean_loss(&self, src: usize, dst: usize) -> f64 {
+        if src == dst {
+            // The diagonal carries no traffic; report it lossless.
+            return 0.0;
+        }
+        self.loss_overrides
+            .get(&self.key(src, dst))
+            .unwrap_or(&self.default_loss)
+            .mean_loss()
+    }
+
+    /// Network-wide average of per-pair mean loss (i ≠ j).
+    /// O(overrides): the default covers every pair without one.
+    pub fn global_mean_loss(&self) -> f64 {
+        let off_diag = self.n * (self.n - 1);
+        if off_diag == 0 {
+            return 0.0;
+        }
+        let override_sum: f64 =
+            self.loss_overrides.values().map(|pl| pl.mean_loss()).sum();
+        let default_count = off_diag - self.loss_overrides.len();
+        (self.default_loss.mean_loss() * default_count as f64 + override_sum)
+            / off_diag as f64
+    }
+
+    /// Number of pairs holding an explicit loss override — the sparse
+    /// representation's memory footprint (uniform topologies: 0;
+    /// uniform-bursty: the pairs touched since the last retune). Used
+    /// by the scale smoke to assert O(n) growth.
+    pub fn n_loss_overrides(&self) -> usize {
+        self.loss_overrides.len()
     }
 }
 
@@ -284,6 +497,35 @@ mod tests {
         assert_eq!(t.n(), 4);
         assert_eq!(t.link(0, 3).rtt_s, 0.08);
         assert!((t.global_mean_loss() - 0.1).abs() < 1e-12);
+        // The whole point of the sparse layout: no per-pair state.
+        assert_eq!(t.n_loss_overrides(), 0);
+    }
+
+    #[test]
+    fn uniform_stays_o1_under_bernoulli_traffic() {
+        let mut t = Topology::uniform(64, Link::default(), 0.2);
+        let mut rng = Rng::new(3);
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    t.lose(s, d, &mut rng);
+                }
+            }
+        }
+        assert_eq!(t.n_loss_overrides(), 0, "stateless default must not materialize");
+    }
+
+    #[test]
+    fn bursty_materializes_only_touched_pairs() {
+        let mut t = Topology::uniform_bursty(64, Link::default(), 0.1, 8.0);
+        assert_eq!(t.n_loss_overrides(), 0);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            t.lose(0, 1, &mut rng);
+            t.lose(5, 9, &mut rng);
+            t.lose(63, 0, &mut rng);
+        }
+        assert_eq!(t.n_loss_overrides(), 3, "one chain per touched pair");
     }
 
     #[test]
@@ -335,7 +577,7 @@ mod tests {
                 }
                 assert_eq!(iid.link(i, j), ge.link(i, j));
                 assert!((iid.mean_loss(i, j) - ge.mean_loss(i, j)).abs() < 1e-12);
-                assert!(matches!(ge.loss[i * 6 + j], PairLoss::GilbertElliott(_)));
+                assert!(matches!(ge.pair_loss(i, j), PairLoss::GilbertElliott(_)));
             }
         }
     }
@@ -376,13 +618,16 @@ mod tests {
                 (0..4).filter(|&j| j != i).map(|j| t.mean_loss(i, j)).collect();
             assert!(ps.contains(&0.02) && ps.contains(&0.4), "node {i}: {ps:?}");
         }
+        // The majority tier (p_hi: 8 of 12 directed pairs at n = 4) is
+        // the default; only the minority stores an override.
+        assert_eq!(t.n_loss_overrides(), 4);
         // Bursty variant keeps the same per-pair means.
         let b = Topology::two_tier(4, Link::default(), 0.02, 0.4, Some(8.0));
         for i in 0..4 {
             for j in 0..4 {
                 if i != j {
                     assert!((b.mean_loss(i, j) - t.mean_loss(i, j)).abs() < 1e-12);
-                    assert!(matches!(b.loss[i * 4 + j], PairLoss::GilbertElliott(_)));
+                    assert!(matches!(b.pair_loss(i, j), PairLoss::GilbertElliott(_)));
                 }
             }
         }
@@ -398,6 +643,8 @@ mod tests {
         assert_eq!(t.mean_loss(1, 2), 0.2);
         assert_eq!(t.mean_loss(2, 0), 0.7);
         assert!((t.global_mean_loss() - (0.1 + 0.2 + 4.0 * 0.7) / 6.0).abs() < 1e-12);
+        // 0.7 is modal → default; the two odd pairs are the overrides.
+        assert_eq!(t.n_loss_overrides(), 2);
     }
 
     #[test]
@@ -405,42 +652,125 @@ mod tests {
         let mut iid = Topology::uniform(3, Link::default(), 0.05);
         iid.set_mean_loss_all(0.3);
         assert!((iid.global_mean_loss() - 0.3).abs() < 1e-12);
-        assert!(matches!(iid.loss[1], PairLoss::Bernoulli(_)));
+        assert!(matches!(iid.pair_loss(0, 1), PairLoss::Bernoulli(_)));
 
         let mut ge = Topology::uniform_bursty(3, Link::default(), 0.05, 8.0);
         ge.set_mean_loss_all(0.3);
         assert!((ge.global_mean_loss() - 0.3).abs() < 1e-12);
-        match ge.loss[1] {
+        match ge.pair_loss(0, 1) {
             PairLoss::GilbertElliott(g) => {
                 // Burst length survives the retune.
                 assert!((g.burst_len() - 8.0).abs() < 1e-9, "burst {}", g.burst_len());
                 assert!((1.0 / g.p_bg - 8.0).abs() < 1e-9, "dwell {}", 1.0 / g.p_bg);
             }
-            ref other => panic!("kind changed: {other:?}"),
+            other => panic!("kind changed: {other:?}"),
         }
         // A segment whose mean saturates the chain (p_gb pinned at 1,
         // p_bg re-solved away from 1/burst) must not leak its drifted
         // dwell into later segments: the retune restores the configured
         // burst length once the mean drops back.
         ge.set_mean_loss_all(0.9);
-        match ge.loss[1] {
+        match ge.pair_loss(0, 1) {
             PairLoss::GilbertElliott(g) => {
                 assert_eq!(g.p_gb, 1.0, "0.9 mean at burst 8 saturates p_gb");
                 assert!((g.mean_loss() - 0.9).abs() < 1e-12);
                 assert!((g.burst_len() - 8.0).abs() < 1e-9);
             }
-            ref other => panic!("kind changed: {other:?}"),
+            other => panic!("kind changed: {other:?}"),
         }
         ge.set_mean_loss_all(0.05);
-        match ge.loss[1] {
+        match ge.pair_loss(0, 1) {
             PairLoss::GilbertElliott(g) => {
                 assert!((g.mean_loss() - 0.05).abs() < 1e-12);
                 assert!((1.0 / g.p_bg - 8.0).abs() < 1e-9, "dwell {}", 1.0 / g.p_bg);
             }
-            ref other => panic!("kind changed: {other:?}"),
+            other => panic!("kind changed: {other:?}"),
         }
         // Shifting down to 0 is allowed (clean regime).
         ge.set_mean_loss_all(0.0);
         assert_eq!(ge.global_mean_loss(), 0.0);
+    }
+
+    #[test]
+    fn retune_sheds_materialized_chain_copies() {
+        let mut t = Topology::uniform_bursty(16, Link::default(), 0.1, 8.0);
+        let mut rng = Rng::new(12);
+        for d in 1..8 {
+            t.lose(0, d, &mut rng);
+        }
+        assert_eq!(t.n_loss_overrides(), 7);
+        // A regime shift retunes every chain to the same fresh process
+        // the default now describes — the copies are redundant again.
+        t.set_mean_loss_all(0.25);
+        assert_eq!(t.n_loss_overrides(), 0);
+        assert!((t.global_mean_loss() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_copy_batch_matches_scalar_lose_bitwise() {
+        // count == 1 must consume exactly the scalar path's draw so the
+        // protocol's unbatched sends stay reproducible.
+        let mut ta = Topology::uniform(3, Link::default(), 0.3);
+        let mut tb = Topology::uniform(3, Link::default(), 0.3);
+        let mut rng_a = Rng::new(99);
+        let mut rng_b = Rng::new(99);
+        let mut out = Vec::new();
+        for _ in 0..500 {
+            let scalar = ta.lose(0, 1, &mut rng_a);
+            tb.lose_batch(0, 1, 1, &mut rng_b, &mut out);
+            assert_eq!(out, vec![scalar]);
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "draw streams diverged");
+    }
+
+    #[test]
+    fn ge_batch_walks_the_chain_exactly_like_scalar_draws() {
+        // Gilbert–Elliott batches must be per-packet walks: same chain
+        // trajectory, same rng consumption, same fates as scalar calls.
+        let mut ta = Topology::uniform_bursty(3, Link::default(), 0.2, 6.0);
+        let mut tb = Topology::uniform_bursty(3, Link::default(), 0.2, 6.0);
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = Rng::new(7);
+        let scalar: Vec<bool> = (0..200).map(|_| ta.lose(1, 2, &mut rng_a)).collect();
+        let mut batch = Vec::new();
+        tb.lose_batch(1, 2, 200, &mut rng_b, &mut batch);
+        assert_eq!(scalar, batch);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "draw streams diverged");
+    }
+
+    #[test]
+    fn batch_bernoulli_is_distributionally_bernoulli() {
+        // Gap-skipping must reproduce iid Bernoulli marginals: rate and
+        // per-position uniformity.
+        let mut t = Topology::uniform(2, Link::default(), 0.2);
+        let mut rng = Rng::new(21);
+        let (mut lost, mut total) = (0usize, 0usize);
+        let mut by_pos = [0usize; 8];
+        let mut out = Vec::new();
+        for _ in 0..40_000 {
+            t.lose_batch(0, 1, 8, &mut rng, &mut out);
+            for (i, &l) in out.iter().enumerate() {
+                if l {
+                    lost += 1;
+                    by_pos[i] += 1;
+                }
+                total += 1;
+            }
+        }
+        let rate = lost as f64 / total as f64;
+        assert!((rate - 0.2).abs() < 0.01, "rate {rate}");
+        for (i, &c) in by_pos.iter().enumerate() {
+            let r = c as f64 / 40_000.0;
+            assert!((r - 0.2).abs() < 0.02, "position {i} rate {r}");
+        }
+        // Degenerate probabilities take no draws at all.
+        let mut sure = Topology::uniform(2, Link::default(), 1.0);
+        let mut before = rng.clone();
+        sure.lose_batch(0, 1, 5, &mut rng, &mut out);
+        assert_eq!(out, vec![true; 5]);
+        let mut clean = Topology::uniform(2, Link::default(), 0.0);
+        clean.lose_batch(0, 1, 5, &mut rng, &mut out);
+        assert_eq!(out, vec![false; 5]);
+        assert_eq!(before.next_u64(), rng.next_u64(), "degenerate batches must not draw");
     }
 }

@@ -5,6 +5,15 @@
 //! is modeled per sender (packets queue behind each other on the sender's
 //! uplink, as in the paper where `k·c(n)/n` packets share the outgoing
 //! pipe), propagation is `rtt/2`.
+//!
+//! Per-pair traffic counters are sparse: a directed pair gets a counter
+//! slot on first traffic, so a halo-exchange phase at n = 10⁴ keeps O(n)
+//! counter state instead of an n² table (10⁸ slots). The protocol hot
+//! path sends whole `(pair, round)` batches through [`Network::send_group`],
+//! which resolves every copy's fate in one aggregate draw
+//! ([`Topology::lose_batch`]) instead of per-packet.
+
+use std::collections::BTreeMap;
 
 use crate::simcore::{Engine, SimTime, Step};
 use crate::util::prng::Rng;
@@ -43,13 +52,17 @@ pub struct Network {
     /// Time at which each node's uplink becomes free (serialization queue).
     uplink_free: Vec<SimTime>,
     pub stats: NetStats,
-    /// Per-directed-pair wire copies sent (row-major `src·n + dst`, both
-    /// packet kinds) — what an online loss estimator can legitimately
-    /// observe: the sender knows its copy count, the receiver counts the
-    /// (duplicate) deliveries, and `lost = sent − delivered`.
-    pair_sent: Vec<u64>,
-    /// Per-directed-pair wire copies dropped by the loss process.
-    pair_lost: Vec<u64>,
+    /// Per-directed-pair wire copies `(sent, lost)` keyed by pair id
+    /// `src·n + dst`, allocated on first traffic — what an online loss
+    /// estimator can legitimately observe: the sender knows its copy
+    /// count, the receiver counts the (duplicate) deliveries, and
+    /// `lost = sent − delivered`.
+    pair_counts: BTreeMap<u64, (u64, u64)>,
+    /// Reused fate buffer for [`Network::send_group`].
+    lose_scratch: Vec<bool>,
+    /// Test control: route even multi-copy batches through per-packet
+    /// draws (see [`Network::force_per_packet_draws`]).
+    per_packet_draws: bool,
 }
 
 impl Network {
@@ -61,8 +74,9 @@ impl Network {
             rng: Rng::new(seed),
             uplink_free: vec![SimTime::ZERO; n],
             stats: NetStats::default(),
-            pair_sent: vec![0; n * n],
-            pair_lost: vec![0; n * n],
+            pair_counts: BTreeMap::new(),
+            lose_scratch: Vec::new(),
+            per_packet_draws: false,
         }
     }
 
@@ -82,6 +96,26 @@ impl Network {
         self.topo.set_mean_loss_all(p);
     }
 
+    /// Force [`Network::send_group`] to draw every copy's fate
+    /// individually (the pre-batching packet walk) instead of taking
+    /// the aggregate gap-skipping draw on iid Bernoulli pairs. The two
+    /// paths sample the same distribution but consume the rng
+    /// differently; this hook lets the batched-draw property tests
+    /// compare them statistically on the same workload.
+    pub fn force_per_packet_draws(&mut self, on: bool) {
+        self.per_packet_draws = on;
+    }
+
+    #[inline]
+    fn charge_pair(&mut self, src: NodeId, dst: NodeId, sent: u64, lost: u64) {
+        let slot = self
+            .pair_counts
+            .entry((src * self.topo.n() + dst) as u64)
+            .or_insert((0, 0));
+        slot.0 += sent;
+        slot.1 += lost;
+    }
+
     /// Send a datagram. Serialization occupies the sender's uplink; the
     /// packet is then subject to the pair's loss process; survivors are
     /// delivered after one-way propagation.
@@ -97,15 +131,74 @@ impl Network {
         let start = self.uplink_free[pkt.src].max(self.engine.now());
         let done_ser = start + ser;
         self.uplink_free[pkt.src] = done_ser;
-        let pair = pkt.src * self.topo.n() + pkt.dst;
-        self.pair_sent[pair] += 1;
         if self.topo.lose(pkt.src, pkt.dst, &mut self.rng) {
             self.stats.lost += 1;
-            self.pair_lost[pair] += 1;
+            self.charge_pair(pkt.src, pkt.dst, 1, 1);
             return; // dropped on the wire — no event.
         }
+        self.charge_pair(pkt.src, pkt.dst, 1, 0);
         let arrive = done_ser + SimTime::from_secs_f64(link.one_way_delay());
         self.engine.schedule_at(arrive, NetEvent::Deliver(pkt));
+    }
+
+    /// Send a batch of datagrams sharing one directed pair (the
+    /// protocol's per-`(pair, round)` emission unit). Semantically
+    /// identical to calling [`Network::send`] once per packet — same
+    /// uplink serialization, same per-copy stats and counters, same
+    /// loss distribution — but the packet fates come from one aggregate
+    /// draw ([`Topology::lose_batch`]): iid Bernoulli pairs cost
+    /// ~`t·p + 1` rng draws for `t` copies instead of `t`, while
+    /// Gilbert–Elliott pairs (and single-packet batches) keep the exact
+    /// per-packet draw sequence.
+    pub fn send_group(&mut self, batch: &[Packet]) {
+        let count = batch.len();
+        if count == 0 {
+            return;
+        }
+        if count == 1 {
+            self.send(batch[0]);
+            return;
+        }
+        let (src, dst) = (batch[0].src, batch[0].dst);
+        debug_assert!(
+            batch.iter().all(|p| p.src == src && p.dst == dst),
+            "send_group batches one directed pair"
+        );
+        let link = *self.topo.link(src, dst);
+        // One aggregate fate draw for the whole batch (disjoint field
+        // borrows: topology, rng and scratch never alias).
+        let mut fates = std::mem::take(&mut self.lose_scratch);
+        if self.per_packet_draws {
+            fates.clear();
+            for _ in 0..count {
+                let lost = self.topo.lose(src, dst, &mut self.rng);
+                fates.push(lost);
+            }
+        } else {
+            self.topo.lose_batch(src, dst, count, &mut self.rng, &mut fates);
+        }
+        let one_way = SimTime::from_secs_f64(link.one_way_delay());
+        let mut lost_total = 0u64;
+        for (pkt, &lost) in batch.iter().zip(fates.iter()) {
+            match pkt.kind {
+                PacketKind::Data => self.stats.data_sent += 1,
+                PacketKind::Ack => self.stats.acks_sent += 1,
+            }
+            self.stats.bytes_sent += pkt.size_bytes;
+            let ser = SimTime::from_secs_f64(link.alpha(pkt.size_bytes));
+            let start = self.uplink_free[src].max(self.engine.now());
+            let done_ser = start + ser;
+            self.uplink_free[src] = done_ser;
+            if lost {
+                self.stats.lost += 1;
+                lost_total += 1;
+            } else {
+                self.engine
+                    .schedule_at(done_ser + one_way, NetEvent::Deliver(*pkt));
+            }
+        }
+        self.charge_pair(src, dst, count as u64, lost_total);
+        self.lose_scratch = fates;
     }
 
     /// Flow-level send for schemes that simulate their own timing
@@ -122,13 +215,12 @@ impl Network {
             PacketKind::Ack => self.stats.acks_sent += 1,
         }
         self.stats.bytes_sent += bytes;
-        let pair = src * self.topo.n() + dst;
-        self.pair_sent[pair] += 1;
         if self.topo.lose(src, dst, &mut self.rng) {
             self.stats.lost += 1;
-            self.pair_lost[pair] += 1;
+            self.charge_pair(src, dst, 1, 1);
             return true;
         }
+        self.charge_pair(src, dst, 1, 0);
         match kind {
             PacketKind::Data => self.stats.data_delivered += 1,
             PacketKind::Ack => self.stats.acks_delivered += 1,
@@ -157,12 +249,35 @@ impl Network {
         }
     }
 
-    /// Per-pair `(sent, lost)` wire-copy counters (row-major
-    /// `src·n + dst`), cumulative since construction. The adaptive-k
-    /// runtime snapshots these around each phase to feed its per-link
-    /// loss estimators.
-    pub fn pair_counters(&self) -> (&[u64], &[u64]) {
-        (&self.pair_sent, &self.pair_lost)
+    /// Cumulative wire copies sent on (src → dst) since construction.
+    pub fn pair_sent(&self, src: NodeId, dst: NodeId) -> u64 {
+        self.pair_counts
+            .get(&((src * self.topo.n() + dst) as u64))
+            .map_or(0, |&(s, _)| s)
+    }
+
+    /// Cumulative wire copies dropped on (src → dst) since construction.
+    pub fn pair_lost(&self, src: NodeId, dst: NodeId) -> u64 {
+        self.pair_counts
+            .get(&((src * self.topo.n() + dst) as u64))
+            .map_or(0, |&(_, l)| l)
+    }
+
+    /// Iterate the directed pairs that have carried traffic, in pair-id
+    /// order (`src·n + dst` ascending), yielding
+    /// `(pair_id, sent, lost)` cumulative counts. The adaptive-k
+    /// runtime feeds its estimators from this — O(touched) per
+    /// superstep, not O(n²) — and the scale smoke asserts its length
+    /// stays O(n) on halo workloads.
+    pub fn touched_pairs(&self) -> impl Iterator<Item = (usize, u64, u64)> + '_ {
+        self.pair_counts
+            .iter()
+            .map(|(&pair, &(sent, lost))| (pair as usize, sent, lost))
+    }
+
+    /// Number of directed pairs that have carried traffic.
+    pub fn n_touched_pairs(&self) -> usize {
+        self.pair_counts.len()
     }
 
     pub fn pending(&self) -> usize {
@@ -209,6 +324,28 @@ mod tests {
     }
 
     #[test]
+    fn send_group_serializes_like_individual_sends() {
+        let mut net = lossless(2);
+        let batch = [
+            Packet::data(0, 1, 0, 0, 1_000_000),
+            Packet::data(0, 1, 0, 1, 1_000_000),
+            Packet::data(0, 1, 1, 0, 1_000_000),
+        ];
+        net.send_group(&batch);
+        let times: Vec<f64> = std::iter::from_fn(|| net.step())
+            .map(|(t, _)| t.as_secs_f64())
+            .collect();
+        assert_eq!(times.len(), 3);
+        for (got, want) in times.iter().zip([0.15, 0.25, 0.35]) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        assert_eq!(net.stats.data_sent, 3);
+        assert_eq!(net.stats.bytes_sent, 3_000_000);
+        assert_eq!(net.pair_sent(0, 1), 3);
+        assert_eq!(net.pair_lost(0, 1), 0);
+    }
+
+    #[test]
     fn different_senders_do_not_share_uplink() {
         let mut net = lossless(3);
         net.send(Packet::data(0, 2, 0, 0, 1_000_000));
@@ -245,6 +382,26 @@ mod tests {
     }
 
     #[test]
+    fn batched_group_loss_rate_approximates_p() {
+        let topo = Topology::uniform(2, Link::default(), 0.2);
+        let mut net = Network::new(topo, 17);
+        let reps = 4_000;
+        let batch: Vec<Packet> =
+            (0..5).map(|c| Packet::data(0, 1, 0, c, 1024)).collect();
+        for _ in 0..reps {
+            net.send_group(&batch);
+        }
+        let n = reps * 5;
+        let rate = net.stats.lost as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "rate {rate}");
+        assert_eq!(net.pair_sent(0, 1), n);
+        assert_eq!(net.pair_lost(0, 1), net.stats.lost);
+        assert_eq!(net.stats.data_delivered, 0, "nothing delivered before stepping");
+        while net.step().is_some() {}
+        assert_eq!(net.stats.data_delivered, n - net.stats.lost);
+    }
+
+    #[test]
     fn timers_fire() {
         let mut net = lossless(2);
         net.arm_timer(0, 42, 1.5);
@@ -266,13 +423,19 @@ mod tests {
             net.send(Packet::data(0, 1, 0, 0, 64));
         }
         net.send(Packet::data(2, 1, 1, 0, 64));
-        let (sent, lost) = net.pair_counters();
-        assert_eq!(sent[1], 10); // 0 -> 1
-        assert_eq!(lost[1], 10); // p = 1: everything dropped
-        assert_eq!(sent[2 * 3 + 1], 1);
-        assert_eq!(sent[3], 0); // 1 -> 0 saw no traffic
-        assert_eq!(sent.iter().sum::<u64>(), 11);
-        assert_eq!(lost.iter().sum::<u64>(), net.stats.lost);
+        assert_eq!(net.pair_sent(0, 1), 10);
+        assert_eq!(net.pair_lost(0, 1), 10); // p = 1: everything dropped
+        assert_eq!(net.pair_sent(2, 1), 1);
+        assert_eq!(net.pair_sent(1, 0), 0); // 1 -> 0 saw no traffic
+        assert_eq!(net.n_touched_pairs(), 2, "counters exist only where traffic went");
+        assert_eq!(net.touched_pairs().map(|(_, s, _)| s).sum::<u64>(), 11);
+        assert_eq!(
+            net.touched_pairs().map(|(_, _, l)| l).sum::<u64>(),
+            net.stats.lost
+        );
+        // Pair ids come out ascending (deterministic feed order).
+        let ids: Vec<usize> = net.touched_pairs().map(|(p, _, _)| p).collect();
+        assert_eq!(ids, vec![1, 2 * 3 + 1]);
     }
 
     #[test]
@@ -300,9 +463,8 @@ mod tests {
         assert_eq!(net.stats.lost, lost);
         assert_eq!(net.stats.data_delivered, n - lost);
         assert_eq!(net.stats.bytes_sent, n * 512);
-        let (sent, lost_pairs) = net.pair_counters();
-        assert_eq!(sent[1], n);
-        assert_eq!(lost_pairs[1], lost);
+        assert_eq!(net.pair_sent(0, 1), n);
+        assert_eq!(net.pair_lost(0, 1), lost);
         let rate = lost as f64 / n as f64;
         assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
     }

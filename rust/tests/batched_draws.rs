@@ -1,0 +1,153 @@
+//! Batched loss draws ≡ per-packet draws.
+//!
+//! `Network::send_group` resolves a whole `(pair, round)` batch's fates
+//! in one aggregate draw (`Topology::lose_batch`). Equivalence with the
+//! per-packet walk it replaced comes in two strengths, by construction:
+//!
+//! * **Bitwise per seed** where the batch path consumes the rng in the
+//!   exact legacy order: single-packet batches (k = 1 — `send_group`
+//!   delegates to the scalar `send`) and Gilbert–Elliott pairs (the
+//!   chain must be walked per copy to keep burst correlation, so the
+//!   batch path draws per packet in batch order either way).
+//! * **Distributional** for k ≥ 2 iid Bernoulli batches: geometric
+//!   gap-skipping samples exactly the same product-Bernoulli law, but
+//!   with ~t·p + 1 uniforms instead of t, so per-seed equality is
+//!   impossible — the seed-swept phase statistics must agree instead.
+//!   `Network::force_per_packet_draws` pins the legacy consumption
+//!   pattern for the comparison arm.
+//!
+//! Plus the scale-motivated reproducibility re-check: a campaign over a
+//! n = 1024 workload stays bitwise worker-count-invariant.
+
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, TopologySpec, WorkloadSpec};
+use lbsp::net::link::Link;
+use lbsp::net::protocol::{run_phase_scheme, PhaseConfig, PhaseReport, Transfer};
+use lbsp::net::scheme::SchemeSpec;
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::{NetStats, Network};
+
+/// Ring halo: each node to both neighbours — every pair carries one
+/// transfer, so per-pair batches have exactly k packets.
+fn halo(n: usize, bytes: u64) -> Vec<Transfer> {
+    let mut v = Vec::new();
+    for i in 0..n {
+        v.push(Transfer { src: i, dst: (i + 1) % n, bytes });
+        v.push(Transfer { src: i, dst: (i + n - 1) % n, bytes });
+    }
+    v
+}
+
+/// One k-copy phase; `per_packet` forces the legacy draw pattern.
+fn run_once(
+    topo: Topology,
+    seed: u64,
+    copies: u32,
+    per_packet: bool,
+) -> (PhaseReport, NetStats) {
+    let transfers = halo(topo.n(), 2048);
+    let mut net = Network::new(topo, seed);
+    net.force_per_packet_draws(per_packet);
+    let cfg = PhaseConfig { copies, timeout_s: 0.18, ..Default::default() };
+    let scheme = SchemeSpec::KCopy.build();
+    let rep = run_phase_scheme(&mut net, &transfers, &cfg, scheme.as_ref(), None);
+    assert!(rep.completed);
+    (rep, net.stats)
+}
+
+fn assert_reports_equal(a: &PhaseReport, b: &PhaseReport, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.data_packets_sent, b.data_packets_sent, "{ctx}: data");
+    assert_eq!(a.ack_packets_sent, b.ack_packets_sent, "{ctx}: acks");
+    assert_eq!(a.wire_bytes_sent, b.wire_bytes_sent, "{ctx}: bytes");
+    assert_eq!(
+        a.completion_s.to_bits(),
+        b.completion_s.to_bits(),
+        "{ctx}: completion time"
+    );
+}
+
+#[test]
+fn k1_bernoulli_phases_are_bitwise_identical_across_draw_modes() {
+    for seed in 0..25u64 {
+        let topo = || Topology::uniform(8, Link::from_mbytes(40.0, 0.06), 0.18);
+        let (rep_b, stats_b) = run_once(topo(), seed, 1, false);
+        let (rep_p, stats_p) = run_once(topo(), seed, 1, true);
+        assert_eq!(stats_b, stats_p, "seed {seed}");
+        assert_reports_equal(&rep_b, &rep_p, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn gilbert_elliott_phases_are_bitwise_identical_across_draw_modes() {
+    // GE pairs walk the chain per copy inside `lose_batch`, in batch
+    // order — identical rng consumption to the scalar walk at any k.
+    for seed in 0..12u64 {
+        let topo = || Topology::uniform_bursty(6, Link::from_mbytes(40.0, 0.06), 0.15, 6.0);
+        let (rep_b, stats_b) = run_once(topo(), seed, 3, false);
+        let (rep_p, stats_p) = run_once(topo(), seed, 3, true);
+        assert_eq!(stats_b, stats_p, "seed {seed}");
+        assert_reports_equal(&rep_b, &rep_p, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn k2_bernoulli_batches_match_per_packet_statistics() {
+    // k = 2 batches take the gap-skipping path: different rng
+    // consumption, same law. Seed-sweep both modes on the same
+    // workload; the realized per-copy loss rate and mean round count
+    // must agree within Monte-Carlo tolerance.
+    let p = 0.2;
+    let mut agg = |per_packet: bool| -> (f64, f64) {
+        let (mut sent, mut lost, mut rounds, mut phases) = (0u64, 0u64, 0u64, 0u64);
+        for seed in 0..150u64 {
+            let topo = Topology::uniform(8, Link::from_mbytes(40.0, 0.06), p);
+            let (rep, stats) = run_once(topo, 0xBA7C + seed, 2, per_packet);
+            sent += stats.data_sent + stats.acks_sent;
+            lost += stats.lost;
+            rounds += rep.rounds as u64;
+            phases += 1;
+        }
+        (lost as f64 / sent as f64, rounds as f64 / phases as f64)
+    };
+    let (rate_batched, rounds_batched) = agg(false);
+    let (rate_legacy, rounds_legacy) = agg(true);
+    assert!(
+        (rate_batched - p).abs() < 0.01,
+        "batched loss rate {rate_batched} vs p={p}"
+    );
+    assert!(
+        (rate_batched - rate_legacy).abs() < 0.012,
+        "loss rates diverge: batched {rate_batched} vs per-packet {rate_legacy}"
+    );
+    assert!(
+        (rounds_batched - rounds_legacy).abs() / rounds_legacy < 0.1,
+        "round counts diverge: batched {rounds_batched} vs per-packet {rounds_legacy}"
+    );
+}
+
+#[test]
+fn large_n_campaign_stays_worker_count_invariant() {
+    // n = 1024: the sparse counters and batched draws sit under every
+    // replica; the campaign reproducibility contract (bitwise-equal
+    // aggregates at 1 and 4 workers) must survive the scale refactor.
+    let spec = CampaignSpec {
+        workloads: vec![WorkloadSpec::Synthetic {
+            supersteps: 1,
+            msgs_per_node: 1,
+            bytes: 1024,
+            compute_s: 0.01,
+        }],
+        ns: vec![1024],
+        ps: vec![0.05],
+        ks: vec![1, 2],
+        losses: vec![LossSpec::Bernoulli],
+        topologies: vec![TopologySpec::Uniform],
+        replicas: 2,
+        seed: 0x10_24,
+        ..Default::default()
+    };
+    let serial = CampaignEngine::new(1).run(&spec);
+    let parallel = CampaignEngine::new(4).run(&spec);
+    assert_eq!(serial, parallel);
+    assert!(serial.iter().all(|s| s.completed_frac == 1.0));
+}

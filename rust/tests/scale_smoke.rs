@@ -1,0 +1,57 @@
+//! Bounded release-mode scale smoke: one laplace replica at n = 2048.
+//!
+//! The point of the sparse per-pair refactor is that a halo-exchange
+//! workload on n nodes touches O(n) of the n² directed pairs, and
+//! everything keyed per pair — transport counters, wire plans, the
+//! estimator bank — must allocate proportionally to *touched*, not to
+//! n². This test drives one full [`LaplaceCell`] replica (DES phases,
+//! Jacobi sweeps, sequential validation) at a scale where the dense
+//! layout would hold 2048² ≈ 4.2 M per-pair slots, and pins:
+//!
+//! * the replica completes and validates against the sequential
+//!   reference (the refactor changed bookkeeping, not semantics);
+//! * `Network::n_touched_pairs()` stays within the O(n) halo bound —
+//!   ring data pairs plus their ack reversals are the same 2(n−1)
+//!   directed pairs, so anything past 4n means per-pair state leaked
+//!   back toward dense.
+//!
+//! `#[ignore]`d in the default debug run (the DES cost would dominate
+//! tier-1); `scripts/tier1.sh` executes it in release mode under the
+//! usual wall-clock guard.
+
+use lbsp::bsp::BspRuntime;
+use lbsp::net::link::Link;
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::util::prng::Rng;
+use lbsp::workloads::{DistWorkload, LaplaceCell};
+
+#[test]
+#[ignore = "release-mode scale smoke; run by scripts/tier1.sh"]
+fn laplace_n2048_completes_with_o_n_touched_pairs() {
+    let n = 2048usize;
+    let cell = Box::new(LaplaceCell::sample(n, 3, 8, 2, &mut Rng::new(0x5CA1E)));
+    let seq_s = cell.sequential_s();
+    let mut rt = BspRuntime::new(Network::new(
+        Topology::uniform(n, Link::from_mbytes(40.0, 0.07), 0.05),
+        0x5CA1E + 1,
+    ))
+    .with_copies(2);
+    let run = cell.run_replica(&mut rt);
+
+    assert!(run.completed, "n={n} replica aborted on the round cap");
+    assert!(run.validated, "n={n} output diverged from the sequential reference");
+    assert!(run.sequential_s == seq_s);
+
+    let touched = rt.network().n_touched_pairs();
+    assert!(
+        touched >= 2 * (n - 1),
+        "halo exchange must touch every ring pair: {touched}"
+    );
+    assert!(
+        touched <= 4 * n,
+        "per-pair state must stay O(n) on the halo workload, got {touched} \
+         touched pairs (dense would be {})",
+        n * n
+    );
+}

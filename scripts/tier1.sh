@@ -48,9 +48,12 @@ cargo test -q
 # past its current runtime. Compilation runs *outside* the guard (a cold
 # release build of the test harness is legitimate one-time cost, not
 # simulation runtime) so the timeout bounds only the tests themselves.
-echo "== regime-shift / per-link / scheme acceptance (release, bounded) =="
+# scale_smoke rides the same loop: one laplace replica at n = 2048,
+# asserting completion, validation, and the O(n) touched-pair bound
+# that pins the sparse per-pair state from going dense again.
+echo "== regime-shift / per-link / scheme / scale acceptance (release, bounded) =="
 export LBSP_SCENARIO_REPLICAS="${LBSP_SCENARIO_REPLICAS:-16}"
-for acceptance_test in adapt_scenarios scheme_campaigns; do
+for acceptance_test in adapt_scenarios scheme_campaigns scale_smoke; do
     cargo test -q --release --test "$acceptance_test" --no-run
     scenario_cmd=(cargo test -q --release --test "$acceptance_test" -- --include-ignored)
     if command -v timeout >/dev/null 2>&1; then
