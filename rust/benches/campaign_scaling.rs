@@ -7,7 +7,9 @@
 //! the perf trajectory — runs/s per worker count and the 1→8 scaling
 //! factor — is trackable across PRs.
 
-use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, WorkloadSpec};
+use std::time::Instant;
+
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, TopologySpec, WorkloadSpec};
 use lbsp::model::Comm;
 use lbsp::net::protocol::RetransmitPolicy;
 use lbsp::util::bench::{bench_units, black_box};
@@ -81,6 +83,30 @@ fn main() {
         t1 / t8
     );
 
+    // --- the n = 10⁴ DES campaign cell: one laplace replica through
+    // the full engine at the scale the sojourn-batched draws and
+    // scratch reuse target. Wall-timed once (a single replica is
+    // already seconds of DES); tracked as its own JSON key so the
+    // headline point has a trajectory across PRs.
+    let big = CampaignSpec {
+        workloads: vec![WorkloadSpec::Laplace { h: 3, w: 8, sweeps: 2 }],
+        ns: vec![10_000],
+        ps: vec![0.05],
+        ks: vec![2],
+        losses: vec![LossSpec::Bernoulli],
+        topologies: vec![TopologySpec::Uniform],
+        replicas: 1,
+        seed: 0x1_0000,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let big_summaries = CampaignEngine::new(1).run(&big);
+    let big_cell_s = t0.elapsed().as_secs_f64();
+    assert_eq!(big_summaries.len(), 1);
+    assert_eq!(big_summaries[0].completed_frac, 1.0, "n=10^4 cell aborted");
+    assert_eq!(big_summaries[0].validated_frac, 1.0, "n=10^4 cell diverged");
+    println!("\nlaplace n=10^4 campaign cell (1 replica): {big_cell_s:.2} s");
+
     // --- machine-readable artifact for cross-PR perf tracking.
     let cells_per_run = spec.n_cells() as f64;
     let series: Vec<String> = medians
@@ -96,7 +122,8 @@ fn main() {
     let json = format!(
         concat!(
             "{{\"bench\":\"campaign_scaling\",\"cells\":{},\"replicas\":{},\"runs\":{},",
-            "\"series\":[{}],\"scaling_1_to_8\":{:?}}}\n"
+            "\"series\":[{}],\"scaling_1_to_8\":{:?},",
+            "\"laplace_n10k_cell_s\":{big_cell_s:?}}}\n"
         ),
         spec.n_cells(),
         spec.replicas,

@@ -10,9 +10,11 @@
 //! 10⁴} to track the sparse-state scaling curve (the 10⁴ point only
 //! exists because per-pair state is O(touched), not O(n²)).
 
+use std::time::Instant;
+
 use lbsp::net::link::Link;
 use lbsp::net::protocol::{run_phase_scheme, PhaseConfig, Transfer};
-use lbsp::net::scheme::SchemeSpec;
+use lbsp::net::scheme::{ReliabilityScheme, SchemeSpec, TcpLike};
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::Network;
 use lbsp::util::bench::{bench_units, black_box};
@@ -119,48 +121,86 @@ fn main() {
         }
     }
 
-    // --- n-scaling: halo-exchange phases at n ∈ {64, 1024, 10⁴}. The
-    // sparse per-pair state and batched loss draws are what make the
-    // 10⁴ point feasible at all: per-phase state is O(touched pairs) =
-    // O(n), where the dense layout would hold 10⁸ per-pair slots.
-    println!("\n=== k-copy halo-exchange scaling (p = 0.05, k = 2) ===\n");
+    // --- n-scaling: halo-exchange phases at n ∈ {64, 1024, 10⁴}, three
+    // curves: k-copy on iid loss (the original series), k-copy on a
+    // GE-bursty channel (sojourn-batched draws), and the TCP-like flow
+    // baseline (pooled struct-of-arrays stepping). The sparse per-pair
+    // state and batched loss draws are what make the 10⁴ points
+    // feasible at all: per-phase state is O(touched pairs) = O(n),
+    // where the dense layout would hold 10⁸ per-pair slots. Each
+    // (curve, n) point carries its own wall-clock cap: iterations stop
+    // early once the cap is spent (at least one phase always runs), and
+    // the JSON records how many timed phases the median is over.
+    println!("\n=== halo-exchange scaling (p = 0.05, k = 2) ===\n");
+    let cap_s = 60.0f64;
     let mut scale_series: Vec<String> = Vec::new();
-    for &sn in &[64usize, 1024, 10_000] {
-        let halo = halo_transfers(sn, 2048);
-        let halo_cfg = PhaseConfig { copies: 2, timeout_s: 0.16, ..Default::default() };
-        let scheme = SchemeSpec::KCopy.build();
-        let mut net = Network::new(
-            Topology::uniform(sn, Link::from_mbytes(40.0, 0.07), 0.05),
-            0xA11CE + sn as u64,
-        );
-        let scale_iters = if sn >= 10_000 { 1 } else { 5 };
-        let mut rounds_total = 0u64;
-        let report = bench_units(
-            &format!("kcopy halo n={sn}"),
-            0,
-            scale_iters,
-            Some(1.0),
-            || {
-                let rep =
-                    run_phase_scheme(&mut net, &halo, &halo_cfg, scheme.as_ref(), None);
-                assert!(rep.completed, "halo phase failed at n={sn}");
+    let curves: &[(&str, &str)] = &[
+        ("kcopy", "iid"),
+        ("kcopy", "ge"),
+        ("tcplike", "iid"),
+    ];
+    for &(scheme_label, loss_label) in curves {
+        for &sn in &[64usize, 1024, 10_000] {
+            let halo = halo_transfers(sn, 2048);
+            let halo_cfg = PhaseConfig { copies: 2, timeout_s: 0.16, ..Default::default() };
+            let kcopy;
+            let tcp;
+            let scheme: &dyn ReliabilityScheme = if scheme_label == "tcplike" {
+                tcp = TcpLike::default();
+                &tcp
+            } else {
+                kcopy = SchemeSpec::KCopy.build();
+                kcopy.as_ref()
+            };
+            let topo = if loss_label == "ge" {
+                Topology::uniform_bursty(sn, Link::from_mbytes(40.0, 0.07), 0.05, 8.0)
+            } else {
+                Topology::uniform(sn, Link::from_mbytes(40.0, 0.07), 0.05)
+            };
+            let mut net = Network::new(topo, 0xA11CE + sn as u64);
+            let max_iters = if sn >= 10_000 { 2 } else { 5 };
+            let mut samples: Vec<f64> = Vec::new();
+            let mut rounds_total = 0u64;
+            let point_start = Instant::now();
+            for _ in 0..max_iters {
+                let t0 = Instant::now();
+                let rep = run_phase_scheme(&mut net, &halo, &halo_cfg, scheme, None);
+                samples.push(t0.elapsed().as_secs_f64());
+                assert!(
+                    rep.completed,
+                    "{scheme_label}/{loss_label} halo phase failed at n={sn}"
+                );
                 rounds_total += rep.rounds as u64;
-            },
-        );
-        let touched = net.n_touched_pairs();
-        assert!(
-            touched <= 4 * sn,
-            "per-pair state must stay O(n) on the halo workload: {touched}"
-        );
-        scale_series.push(format!(
-            concat!(
-                "{{\"n\":{sn},\"transfers\":{},\"phase_median_s\":{:?},",
-                "\"mean_rounds\":{:?},\"touched_pairs\":{touched}}}"
-            ),
-            halo.len(),
-            report.median_s,
-            rounds_total as f64 / scale_iters as f64,
-        ));
+                if point_start.elapsed().as_secs_f64() > cap_s {
+                    break;
+                }
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median_s = samples[samples.len() / 2];
+            let touched = net.n_touched_pairs();
+            assert!(
+                touched <= 4 * sn,
+                "per-pair state must stay O(n) on the halo workload: {touched}"
+            );
+            println!(
+                "  {scheme_label:<8} {loss_label:<4} n={sn:<6} \
+                 median {median_s:>9.4} s  ({} phases, {} rounds total)",
+                samples.len(),
+                rounds_total,
+            );
+            scale_series.push(format!(
+                concat!(
+                    "{{\"n\":{sn},\"scheme\":\"{scheme_label}\",",
+                    "\"loss\":\"{loss_label}\",\"transfers\":{},",
+                    "\"phase_median_s\":{:?},\"mean_rounds\":{:?},",
+                    "\"timed_phases\":{},\"touched_pairs\":{touched}}}"
+                ),
+                halo.len(),
+                median_s,
+                rounds_total as f64 / samples.len() as f64,
+                samples.len(),
+            ));
+        }
     }
 
     // --- machine-readable artifact for cross-PR perf tracking.

@@ -72,6 +72,15 @@ pub struct GilbertElliott {
     /// the configured burst character instead of inheriting the
     /// saturated segment's drifted dwell.
     burst_len: f64,
+    /// Sojourn remainder for the batched path ([`GilbertElliott::lose_batch`]):
+    /// how many upcoming packets still emit from the current state before the
+    /// next transition fires. `None` = no run drawn in advance. The per-packet
+    /// walk discards it (geometric dwells are memoryless, so dropping an
+    /// unused pre-drawn remainder leaves the chain's law intact), and any
+    /// retune rebuilds the chain via [`GilbertElliott::with_mean_loss`] whose
+    /// fresh value is `None` — a mid-phase `set_mean_loss_all` therefore
+    /// cannot leak a stale remainder into the new regime.
+    sojourn_left: Option<u64>,
 }
 
 impl GilbertElliott {
@@ -86,6 +95,7 @@ impl GilbertElliott {
             loss_bad,
             in_bad: false,
             burst_len: 1.0 / p_bg.max(1e-9),
+            sojourn_left: None,
         }
     }
 
@@ -133,10 +143,126 @@ impl GilbertElliott {
     pub fn stationary_bad(&self) -> f64 {
         self.p_gb / (self.p_gb + self.p_bg)
     }
+
+    /// Whether a pre-drawn sojourn remainder is currently cached (test
+    /// observability for the retune-invalidation contract).
+    pub fn sojourn_cached(&self) -> bool {
+        self.sojourn_left.is_some()
+    }
+
+    /// Per-packet exit probability of the current state.
+    fn exit_prob(&self) -> f64 {
+        if self.in_bad {
+            self.p_bg
+        } else {
+            self.p_gb
+        }
+    }
+
+    /// A full sojourn in the state just entered, *counting the entering
+    /// packet*: Geometric(p_exit), support ≥ 1 (the per-packet walk's
+    /// "transition fired, emit from the new state, stay until the next
+    /// success of Bernoulli(p_exit)").
+    fn full_sojourn(p_exit: f64, rng: &mut Rng) -> u64 {
+        if p_exit <= 0.0 {
+            u64::MAX / 2 // absorbing state: never leaves
+        } else {
+            rng.geometric(p_exit)
+        }
+    }
+
+    /// The residual sojourn of a chain observed mid-dwell (fresh chain, or
+    /// one whose remainder was discarded): upcoming packets that still emit
+    /// from the current state = initial failures of Bernoulli(p_exit) =
+    /// Geometric(p_exit) − 1, support ≥ 0. Memorylessness of the geometric
+    /// dwell makes this exact regardless of how long the chain has already
+    /// sat in the state.
+    fn residual_sojourn(p_exit: f64, rng: &mut Rng) -> u64 {
+        if p_exit <= 0.0 {
+            u64::MAX / 2
+        } else {
+            rng.geometric(p_exit) - 1
+        }
+    }
+
+    /// Resolve `count` consecutive packet fates in one call by sojourn
+    /// (run-length) sampling, appending them to `out`.
+    ///
+    /// Instead of two uniforms per packet (transition + emission), draw one
+    /// geometric sojourn per state run and one gap-skipping geometric per
+    /// loss inside a lossy run: O(state transitions + losses) rng work
+    /// instead of O(packets). For the calibrated outage chains built by
+    /// [`GilbertElliott::with_mean_loss`] (`loss_good = 0`, `loss_bad = 1`)
+    /// the emission step is deterministic, so the cost is O(transitions)
+    /// alone. The alternating-renewal structure (Good dwell ~
+    /// Geometric(p_gb), Bad dwell ~ Geometric(p_bg), the entering packet
+    /// counted in its run) matches the per-packet walk exactly in
+    /// distribution — pinned distributionally by `tests/batched_draws.rs`
+    /// and the topology unit tests.
+    ///
+    /// An unfinished run is cached in `sojourn_left` and resumed by the next
+    /// batch, so burst correlation spans batch (i.e. round and superstep)
+    /// boundaries just as the walk's `in_bad` state does.
+    pub fn lose_batch(&mut self, count: usize, rng: &mut Rng, out: &mut Vec<bool>) {
+        out.reserve(count);
+        let mut remaining = count;
+        while remaining > 0 {
+            if self.sojourn_left.is_none() {
+                self.sojourn_left = Some(Self::residual_sojourn(self.exit_prob(), rng));
+            }
+            if self.sojourn_left == Some(0) {
+                // Dwell exhausted: the next packet transitions and opens a
+                // full sojourn in the other state.
+                self.in_bad = !self.in_bad;
+                self.sojourn_left = Some(Self::full_sojourn(self.exit_prob(), rng));
+            }
+            let left = self.sojourn_left.expect("sojourn drawn above");
+            let take = left.min(remaining as u64) as usize;
+            let p_emit = if self.in_bad { self.loss_bad } else { self.loss_good };
+            emit_bernoulli_run(p_emit, take, rng, out);
+            self.sojourn_left = Some(left - take as u64);
+            remaining -= take;
+        }
+    }
+}
+
+/// Append `count` iid Bernoulli(p) fates to `out` with gap-skipping draws:
+/// degenerate probabilities take zero uniforms, otherwise one geometric
+/// draw per success (≈ count·p + 1 uniforms). Loss-run emission helper for
+/// [`GilbertElliott::lose_batch`]; the iid batching for whole Bernoulli
+/// pairs lives in `topology::batch_bernoulli`.
+fn emit_bernoulli_run(p: f64, count: usize, rng: &mut Rng, out: &mut Vec<bool>) {
+    if p <= 0.0 {
+        out.resize(out.len() + count, false);
+        return;
+    }
+    if p >= 1.0 {
+        out.resize(out.len() + count, true);
+        return;
+    }
+    let start = out.len();
+    out.resize(start + count, false);
+    let mut cursor = 0usize;
+    loop {
+        let gap = rng.geometric(p) as usize;
+        cursor = cursor.saturating_add(gap - 1);
+        if cursor >= count {
+            break;
+        }
+        out[start + cursor] = true;
+        cursor += 1;
+    }
 }
 
 impl LossModel for GilbertElliott {
     fn lose(&mut self, rng: &mut Rng) -> bool {
+        // Discard any batch-drawn sojourn remainder: the walk re-draws the
+        // transition fresh, which is distributionally identical (geometric
+        // dwells are memoryless) and keeps the two paths coherent when they
+        // interleave on one chain. When no batch ran this is a no-op, so
+        // pure per-packet sequences stay bitwise-identical to the legacy
+        // walk.
+        self.sojourn_left = None;
         // Transition first, then emit from the current state.
         if self.in_bad {
             if rng.bernoulli(self.p_bg) {
@@ -339,6 +465,119 @@ mod tests {
         let lost = (0..n).filter(|_| m.lose(&mut rng)).count();
         let rate = lost as f64 / n as f64;
         assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    /// Loss rate + consecutive-loss run statistics of a fate sequence.
+    fn burst_stats(losses: &[bool]) -> (f64, f64, Vec<u64>) {
+        let mut runs = Vec::new();
+        let mut cur = 0u64;
+        for &l in losses {
+            if l {
+                cur += 1;
+            } else if cur > 0 {
+                runs.push(cur);
+                cur = 0;
+            }
+        }
+        if cur > 0 {
+            runs.push(cur);
+        }
+        let rate = losses.iter().filter(|&&l| l).count() as f64 / losses.len() as f64;
+        let mean_run = runs.iter().sum::<u64>() as f64 / runs.len().max(1) as f64;
+        (rate, mean_run, runs)
+    }
+
+    #[test]
+    fn sojourn_batch_matches_walk_distribution() {
+        // The batched path must reproduce the per-packet walk's loss rate,
+        // mean burst length, and coarse burst-length distribution — across
+        // batch boundaries (batches of 7 packets, so runs regularly span
+        // them).
+        let n = 400_000;
+        let mut walk_fates = Vec::with_capacity(n);
+        let mut walk = GilbertElliott::with_mean_loss(0.1, 8.0);
+        let mut rng = Rng::new(41);
+        for _ in 0..n {
+            walk_fates.push(walk.lose(&mut rng));
+        }
+        let mut batch_fates = Vec::with_capacity(n);
+        let mut batched = GilbertElliott::with_mean_loss(0.1, 8.0);
+        let mut rng = Rng::new(42);
+        while batch_fates.len() < n {
+            let take = 7.min(n - batch_fates.len());
+            batched.lose_batch(take, &mut rng, &mut batch_fates);
+        }
+        let (walk_rate, walk_run, walk_runs) = burst_stats(&walk_fates);
+        let (batch_rate, batch_run, batch_runs) = burst_stats(&batch_fates);
+        assert!((walk_rate - batch_rate).abs() < 0.01, "{walk_rate} vs {batch_rate}");
+        assert!(
+            (walk_run - batch_run).abs() / walk_run < 0.06,
+            "mean run {walk_run} vs {batch_run}"
+        );
+        // Coarse-bin run-length distribution (KS-style on 4 bins).
+        let bin = |r: u64| match r {
+            1..=2 => 0,
+            3..=8 => 1,
+            9..=24 => 2,
+            _ => 3,
+        };
+        let hist = |runs: &[u64]| {
+            let mut h = [0f64; 4];
+            for &r in runs {
+                h[bin(r)] += 1.0;
+            }
+            let tot: f64 = h.iter().sum();
+            h.map(|c| c / tot)
+        };
+        let (hw, hb) = (hist(&walk_runs), hist(&batch_runs));
+        for i in 0..4 {
+            assert!((hw[i] - hb[i]).abs() < 0.03, "bin {i}: {} vs {}", hw[i], hb[i]);
+        }
+    }
+
+    #[test]
+    fn sojourn_batch_consumes_o_transitions_draws() {
+        // Calibrated outage chain: the batch path's rng work is one
+        // geometric per state run — far below the walk's 2 uniforms per
+        // packet.
+        let n = 100_000usize;
+        let mut ge = GilbertElliott::with_mean_loss(0.05, 8.0);
+        let mut rng = Rng::new(9);
+        let mut out = Vec::new();
+        ge.lose_batch(n, &mut rng, &mut out);
+        assert_eq!(out.len(), n);
+        // Expected runs ≈ 2·n·π_bad·p_bg ≈ 2·n·0.05/8 ≈ 0.0125·n; the walk
+        // would consume exactly 2n uniforms.
+        assert!(
+            rng.draws() < n as u64 / 10,
+            "batched GE used {} uniforms for {n} packets",
+            rng.draws()
+        );
+    }
+
+    #[test]
+    fn per_packet_walk_is_unchanged_by_batch_machinery() {
+        // A chain that only ever walks per-packet must consume the rng
+        // exactly as the legacy implementation did: two uniforms per packet,
+        // bitwise-stable fates for a fixed seed.
+        let mut ge = GilbertElliott::with_mean_loss(0.2, 4.0);
+        let mut rng = Rng::new(77);
+        for _ in 0..1000 {
+            ge.lose(&mut rng);
+        }
+        assert_eq!(rng.draws(), 2000);
+        assert!(!ge.sojourn_cached());
+    }
+
+    #[test]
+    fn scalar_walk_discards_cached_sojourn() {
+        let mut ge = GilbertElliott::with_mean_loss(0.3, 8.0);
+        let mut rng = Rng::new(5);
+        let mut out = Vec::new();
+        ge.lose_batch(3, &mut rng, &mut out);
+        assert!(ge.sojourn_cached());
+        ge.lose(&mut rng);
+        assert!(!ge.sojourn_cached());
     }
 
     #[test]

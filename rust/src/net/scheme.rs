@@ -28,7 +28,11 @@
 //! * [`TcpLike`] — the §I baseline: one AIMD flow per directed pair
 //!   (slow start, fast-retransmit halving, RTO collapse — the
 //!   [`crate::net::tcp`] model) over the same per-pair loss processes,
-//!   simulated at flow level and charged its own clock.
+//!   simulated at flow level and charged its own clock. Flows advance
+//!   through a pooled struct-of-arrays pool in epoch-batched sweeps,
+//!   each congestion window resolved by one aggregate loss draw
+//!   (`Network::flow_send_group`) — O(losses + sweeps) rng work
+//!   instead of per-segment scalar draws.
 //!
 //! [`SchemeSpec`] is the `Copy` descriptor campaign cells carry (the
 //! `--scheme` grid axis); [`SchemeSpec::build`] makes the boxed trait
@@ -210,19 +214,29 @@ pub struct TcpLike {
     pub rto_s: f64,
     /// Initial slow-start threshold in segments.
     pub init_ssthresh: u32,
+    /// Test hook: step each pair's flow to completion sequentially with
+    /// per-segment scalar loss draws (the pre-pooling path) instead of
+    /// the pooled struct-of-arrays sweeps. Both steppers apply the
+    /// identical per-flow AIMD law; they consume the rng differently
+    /// (batched window draws, sweep-interleaved flows), so per-seed
+    /// realizations diverge while every per-flow statistic agrees in
+    /// distribution — pinned by `tests/batched_draws.rs`.
+    pub legacy_stepping: bool,
 }
 
 impl Default for TcpLike {
     fn default() -> Self {
         // Mirrors net::tcp::TcpParams::default, minus the per-link
         // rtt/alpha (those come from each pair's Link).
-        TcpLike { max_window: 64, rto_s: 1.0, init_ssthresh: 32 }
+        TcpLike { max_window: 64, rto_s: 1.0, init_ssthresh: 32, legacy_stepping: false }
     }
 }
 
 impl TcpLike {
-    /// Simulate one pair's AIMD flow over the network's loss process.
-    /// Returns (time_s, rounds, completed).
+    /// Simulate one pair's AIMD flow over the network's loss process,
+    /// one scalar loss draw per segment — the legacy sequential stepper,
+    /// kept behind [`TcpLike::legacy_stepping`] as the pooled stepper's
+    /// equivalence reference. Returns (time_s, rounds, completed).
     fn run_pair_flow(
         &self,
         net: &mut Network,
@@ -280,6 +294,90 @@ impl TcpLike {
         }
         (time, rounds, true)
     }
+
+    /// Pooled stepper: all flows advance through one struct-of-arrays
+    /// pool in epoch-batched sweeps. Each sweep gives every live flow
+    /// one AIMD round; the round's whole congestion window resolves in a
+    /// single aggregate loss draw ([`Network::flow_send_group`]) instead
+    /// of one scalar draw per segment, so an all-to-all tcplike phase
+    /// costs O(losses + sweeps) rng work, not O(segments). The per-flow
+    /// update law is byte-for-byte [`TcpLike::run_pair_flow`]'s; flows
+    /// advance in pair-id order within each sweep, keeping the schedule
+    /// deterministic. Returns (worst time, worst rounds, all completed).
+    fn run_pooled_flows(
+        &self,
+        net: &mut Network,
+        pair_segments: &std::collections::BTreeMap<(NodeId, NodeId), Vec<u64>>,
+        max_rounds: u32,
+    ) -> (f64, u64, bool) {
+        let n_flows = pair_segments.len();
+        let mut srcs: Vec<NodeId> = Vec::with_capacity(n_flows);
+        let mut dsts: Vec<NodeId> = Vec::with_capacity(n_flows);
+        let mut links: Vec<Link> = Vec::with_capacity(n_flows);
+        let mut remaining: Vec<Vec<u64>> = Vec::with_capacity(n_flows);
+        for (&(src, dst), segs) in pair_segments {
+            srcs.push(src);
+            dsts.push(dst);
+            links.push(*net.topology().link(src, dst));
+            remaining.push(segs.clone());
+        }
+        let mut cwnd = vec![1.0f64; n_flows];
+        let mut ssthresh = vec![self.init_ssthresh as f64; n_flows];
+        let mut time = vec![0.0f64; n_flows];
+        let mut rounds = vec![0u64; n_flows];
+        let mut active: Vec<usize> = (0..n_flows).collect();
+        let mut completed = true;
+        let mut fates: Vec<bool> = Vec::new();
+        while !active.is_empty() {
+            active.retain(|&f| {
+                if rounds[f] >= max_rounds as u64 {
+                    completed = false;
+                    return false;
+                }
+                rounds[f] += 1;
+                let rem = &mut remaining[f];
+                let window = (cwnd[f].floor() as usize)
+                    .clamp(1, self.max_window as usize)
+                    .min(rem.len());
+                let link = links[f];
+                let mut ser = 0.0;
+                for &bytes in rem.iter().take(window) {
+                    ser += link.alpha(bytes);
+                }
+                let window_segs = &rem[..window];
+                net.flow_send_group(srcs[f], dsts[f], PacketKind::Data, window_segs, &mut fates);
+                // One cumulative ack per round closes the RTT (see
+                // run_pair_flow — identical accounting).
+                net.flow_send(dsts[f], srcs[f], PacketKind::Ack, ACK_BYTES);
+                time[f] += ser + link.rtt_s;
+                let delivered = fates.iter().filter(|&&lost| !lost).count();
+                for i in (0..window).rev() {
+                    if !fates[i] {
+                        rem.swap_remove(i);
+                    }
+                }
+                if delivered == window {
+                    if cwnd[f] < ssthresh[f] {
+                        cwnd[f] = (cwnd[f] * 2.0).min(ssthresh[f]);
+                    } else {
+                        cwnd[f] += 1.0;
+                    }
+                } else if delivered == 0 {
+                    time[f] += self.rto_s;
+                    ssthresh[f] = (cwnd[f] / 2.0).max(1.0);
+                    cwnd[f] = 1.0;
+                } else {
+                    ssthresh[f] = (cwnd[f] / 2.0).max(1.0);
+                    cwnd[f] = ssthresh[f];
+                }
+                cwnd[f] = cwnd[f].min(self.max_window as f64);
+                !rem.is_empty()
+            });
+        }
+        let worst_time = time.iter().cloned().fold(0.0f64, f64::max);
+        let worst_rounds = rounds.iter().copied().max().unwrap_or(0);
+        (worst_time, worst_rounds, completed)
+    }
 }
 
 impl ReliabilityScheme for TcpLike {
@@ -319,15 +417,20 @@ impl ReliabilityScheme for TcpLike {
         for tr in transfers {
             pair_segments.entry((tr.src, tr.dst)).or_default().push(tr.bytes);
         }
-        let mut worst_time = 0.0f64;
-        let mut worst_rounds = 0u64;
-        let mut completed = true;
-        for (&(src, dst), segs) in &pair_segments {
-            let (t, r, ok) = self.run_pair_flow(net, src, dst, segs, cfg.max_rounds);
-            worst_time = worst_time.max(t);
-            worst_rounds = worst_rounds.max(r);
-            completed &= ok;
-        }
+        let (worst_time, worst_rounds, completed) = if self.legacy_stepping {
+            let mut worst_time = 0.0f64;
+            let mut worst_rounds = 0u64;
+            let mut completed = true;
+            for (&(src, dst), segs) in &pair_segments {
+                let (t, r, ok) = self.run_pair_flow(net, src, dst, segs, cfg.max_rounds);
+                worst_time = worst_time.max(t);
+                worst_rounds = worst_rounds.max(r);
+                completed &= ok;
+            }
+            (worst_time, worst_rounds, completed)
+        } else {
+            self.run_pooled_flows(net, &pair_segments, cfg.max_rounds)
+        };
         Some(PhaseReport {
             rounds: worst_rounds.min(u64::from(u32::MAX)) as u32,
             completion_s: worst_time,

@@ -33,8 +33,14 @@
 //! [`Topology::lose_batch`] is the aggregate-draw entry for the protocol
 //! hot path: iid Bernoulli pairs resolve a whole `(pair, round)` batch by
 //! geometric gap-skipping (expected `t·p + 1` draws for `t` copies,
-//! exactly the iid per-copy distribution), while Gilbert–Elliott pairs
-//! keep the per-packet walk that the burst correlation requires.
+//! exactly the iid per-copy distribution), and Gilbert–Elliott pairs
+//! resolve the batch by sojourn (run-length) sampling
+//! ([`GilbertElliott::lose_batch`]): one geometric dwell per state run,
+//! O(transitions + losses) draws instead of two uniforms per packet,
+//! with an unfinished run cached on the chain so burst correlation spans
+//! batch boundaries. Single-copy batches take the scalar walk, and
+//! `Network::force_per_packet_draws` routes everything through it, for
+//! bitwise equivalence pinning.
 
 use std::collections::BTreeMap;
 
@@ -401,10 +407,13 @@ impl Topology {
     /// Sample the fates of `count` back-to-back packets on (src → dst)
     /// into `out` (`out[i]` = lost). iid Bernoulli pairs resolve the
     /// whole batch by geometric gap-skipping (~`count·p + 1` draws,
-    /// exact); Gilbert–Elliott pairs walk the chain per packet in the
-    /// same order [`Topology::lose`] would, consuming identical draws.
-    /// Single-copy batches always take the scalar path, so `count == 1`
-    /// is bitwise-identical to calling [`Topology::lose`] once.
+    /// exact); Gilbert–Elliott pairs resolve it by sojourn sampling
+    /// (`GilbertElliott::lose_batch`: one geometric per state run,
+    /// O(transitions + losses) draws) — same law as the per-packet walk,
+    /// different realization for a given rng state, so GE equivalence is
+    /// pinned distributionally (`tests/batched_draws.rs`). Single-copy
+    /// batches always take the scalar path, so `count == 1` is
+    /// bitwise-identical to calling [`Topology::lose`] once.
     pub fn lose_batch(
         &mut self,
         src: usize,
@@ -433,9 +442,11 @@ impl Topology {
         let pl = self.loss_overrides.get_mut(&key).unwrap();
         match pl {
             PairLoss::Bernoulli(b) => batch_bernoulli(b.p, count, rng, out),
-            PairLoss::GilbertElliott(_) => {
-                for _ in 0..count {
-                    out.push(pl.lose(rng));
+            PairLoss::GilbertElliott(ge) => {
+                if count == 1 {
+                    out.push(ge.lose(rng));
+                } else {
+                    ge.lose_batch(count, rng, out);
                 }
             }
         }
@@ -724,18 +735,103 @@ mod tests {
     }
 
     #[test]
-    fn ge_batch_walks_the_chain_exactly_like_scalar_draws() {
-        // Gilbert–Elliott batches must be per-packet walks: same chain
-        // trajectory, same rng consumption, same fates as scalar calls.
+    fn ge_single_copy_batch_matches_scalar_lose_bitwise() {
+        // Gilbert–Elliott count == 1 batches must stay on the scalar walk:
+        // same chain trajectory, same rng consumption, same fates.
         let mut ta = Topology::uniform_bursty(3, Link::default(), 0.2, 6.0);
         let mut tb = Topology::uniform_bursty(3, Link::default(), 0.2, 6.0);
         let mut rng_a = Rng::new(7);
         let mut rng_b = Rng::new(7);
-        let scalar: Vec<bool> = (0..200).map(|_| ta.lose(1, 2, &mut rng_a)).collect();
-        let mut batch = Vec::new();
-        tb.lose_batch(1, 2, 200, &mut rng_b, &mut batch);
-        assert_eq!(scalar, batch);
+        let mut out = Vec::new();
+        for _ in 0..500 {
+            let scalar = ta.lose(1, 2, &mut rng_a);
+            tb.lose_batch(1, 2, 1, &mut rng_b, &mut out);
+            assert_eq!(out, vec![scalar]);
+        }
         assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "draw streams diverged");
+    }
+
+    #[test]
+    fn ge_sojourn_batch_matches_scalar_walk_distribution() {
+        // Multi-copy GE batches use sojourn sampling: a different
+        // realization than the walk, but the same loss rate and burst
+        // character — including runs spanning batch boundaries.
+        let total = 400_000usize;
+        let chunk = 6;
+        let mut walk = Topology::uniform_bursty(3, Link::default(), 0.12, 10.0);
+        let mut rng = Rng::new(23);
+        let walk_fates: Vec<bool> =
+            (0..total).map(|_| walk.lose(1, 2, &mut rng)).collect();
+        let mut batched = Topology::uniform_bursty(3, Link::default(), 0.12, 10.0);
+        let mut rng = Rng::new(24);
+        let mut batch_fates: Vec<bool> = Vec::with_capacity(total);
+        let mut out = Vec::new();
+        while batch_fates.len() < total {
+            batched.lose_batch(1, 2, chunk.min(total - batch_fates.len()), &mut rng, &mut out);
+            batch_fates.extend_from_slice(&out);
+        }
+        let stats = |fates: &[bool]| {
+            let rate = fates.iter().filter(|&&l| l).count() as f64 / fates.len() as f64;
+            let mut runs = 0usize;
+            let mut in_run = false;
+            for &l in fates {
+                if l && !in_run {
+                    runs += 1;
+                }
+                in_run = l;
+            }
+            let losses = fates.iter().filter(|&&l| l).count();
+            (rate, losses as f64 / runs.max(1) as f64)
+        };
+        let (wr, wb) = stats(&walk_fates);
+        let (br, bb) = stats(&batch_fates);
+        assert!((wr - br).abs() < 0.01, "rate {wr} vs {br}");
+        assert!((wb - bb).abs() / wb < 0.06, "mean burst {wb} vs {bb}");
+    }
+
+    #[test]
+    fn ge_sojourn_batch_consumes_o_packets_uniforms() {
+        // The whole point: the batched GE path does O(transitions) rng
+        // work where the walk does 2 uniforms per packet.
+        let total = 100_000usize;
+        let mut t = Topology::uniform_bursty(3, Link::default(), 0.05, 8.0);
+        let mut rng = Rng::new(31);
+        let mut out = Vec::new();
+        let mut resolved = 0usize;
+        while resolved < total {
+            let take = 16.min(total - resolved);
+            t.lose_batch(1, 2, take, &mut rng, &mut out);
+            resolved += take;
+        }
+        assert!(
+            rng.draws() < total as u64 / 10,
+            "batched GE used {} uniforms for {total} packets (walk: {})",
+            rng.draws(),
+            2 * total
+        );
+    }
+
+    #[test]
+    fn retune_mid_burst_cannot_leak_stale_sojourn() {
+        // Drive a long-burst chain until a sojourn remainder is cached
+        // mid-run, then retune to a clean regime: the next batches must
+        // draw from the *new* chain (zero loss), not finish the old
+        // burst. Regression guard for the retune/batch interaction —
+        // `set_mean_loss_all` rebuilds every chain, which must discard
+        // any pre-drawn run.
+        let mut t = Topology::uniform_bursty(3, Link::default(), 0.5, 64.0);
+        let mut rng = Rng::new(101);
+        let mut out = Vec::new();
+        // Long bursts at 50% loss: after a few batches the chain is all
+        // but surely mid-run with a cached remainder.
+        for _ in 0..32 {
+            t.lose_batch(1, 2, 8, &mut rng, &mut out);
+        }
+        t.set_mean_loss_all(0.0);
+        for _ in 0..64 {
+            t.lose_batch(1, 2, 8, &mut rng, &mut out);
+            assert!(out.iter().all(|&l| !l), "stale burst leaked past the retune");
+        }
     }
 
     #[test]

@@ -96,14 +96,25 @@ impl Network {
         self.topo.set_mean_loss_all(p);
     }
 
-    /// Force [`Network::send_group`] to draw every copy's fate
-    /// individually (the pre-batching packet walk) instead of taking
-    /// the aggregate gap-skipping draw on iid Bernoulli pairs. The two
-    /// paths sample the same distribution but consume the rng
+    /// Force [`Network::send_group`] and [`Network::flow_send_group`] to
+    /// draw every copy's fate individually (the pre-batching packet
+    /// walk) instead of taking the aggregate draw — gap-skipping on iid
+    /// Bernoulli pairs, sojourn sampling on Gilbert–Elliott pairs. The
+    /// two paths sample the same distribution but consume the rng
     /// differently; this hook lets the batched-draw property tests
     /// compare them statistically on the same workload.
     pub fn force_per_packet_draws(&mut self, on: bool) {
         self.per_packet_draws = on;
+    }
+
+    /// Raw rng outputs ("uniforms") this network has consumed so far —
+    /// the draw-count instrumentation hook. Read it before and after a
+    /// phase to assert a batching claim: the per-packet walk consumes
+    /// O(packets) uniforms, the batched paths O(losses + state
+    /// transitions). Counts only this network's own stream; topology
+    /// construction rngs are the caller's.
+    pub fn rng_draws(&self) -> u64 {
+        self.rng.draws()
     }
 
     #[inline]
@@ -226,6 +237,53 @@ impl Network {
             PacketKind::Ack => self.stats.acks_delivered += 1,
         }
         false
+    }
+
+    /// Batched [`Network::flow_send`]: charge `sizes.len()` wire copies
+    /// on (src → dst) and resolve all their fates in one aggregate draw
+    /// ([`Topology::lose_batch`]), filling `fates` (`fates[i]` = lost).
+    /// Stats, pair counters and delivered counts are charged exactly as
+    /// `sizes.len()` scalar flow sends would; only the rng consumption
+    /// differs (unless [`Network::force_per_packet_draws`] is on, which
+    /// restores the scalar walk). This is the pooled TcpLike stepper's
+    /// per-sweep emission: one draw per congestion window instead of
+    /// one per segment.
+    pub fn flow_send_group(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        sizes: &[u64],
+        fates: &mut Vec<bool>,
+    ) {
+        let count = sizes.len();
+        fates.clear();
+        if count == 0 {
+            return;
+        }
+        if self.per_packet_draws {
+            for _ in 0..count {
+                let lost = self.topo.lose(src, dst, &mut self.rng);
+                fates.push(lost);
+            }
+        } else {
+            self.topo.lose_batch(src, dst, count, &mut self.rng, fates);
+        }
+        let lost_total = fates.iter().filter(|&&l| l).count() as u64;
+        let delivered = count as u64 - lost_total;
+        match kind {
+            PacketKind::Data => {
+                self.stats.data_sent += count as u64;
+                self.stats.data_delivered += delivered;
+            }
+            PacketKind::Ack => {
+                self.stats.acks_sent += count as u64;
+                self.stats.acks_delivered += delivered;
+            }
+        }
+        self.stats.bytes_sent += sizes.iter().sum::<u64>();
+        self.stats.lost += lost_total;
+        self.charge_pair(src, dst, count as u64, lost_total);
     }
 
     /// Arm a protocol timer owned by `node` firing after `delay_s`.
@@ -467,6 +525,42 @@ mod tests {
         assert_eq!(net.pair_lost(0, 1), lost);
         let rate = lost as f64 / n as f64;
         assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn flow_send_group_charges_like_scalar_flow_sends() {
+        use crate::net::packet::PacketKind;
+        // Forced per-packet draws: the batched flow send must be
+        // bitwise-identical to scalar flow sends — same fates, same rng
+        // stream, same counters.
+        let mut a = Network::new(Topology::uniform(2, Link::default(), 0.3), 55);
+        let mut b = Network::new(Topology::uniform(2, Link::default(), 0.3), 55);
+        b.force_per_packet_draws(true);
+        let sizes = [512u64, 1024, 256, 2048];
+        let mut fates = Vec::new();
+        for _ in 0..200 {
+            let scalar: Vec<bool> = sizes
+                .iter()
+                .map(|&s| a.flow_send(0, 1, PacketKind::Data, s))
+                .collect();
+            b.flow_send_group(0, 1, PacketKind::Data, &sizes, &mut fates);
+            assert_eq!(scalar, fates);
+        }
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.pair_sent(0, 1), b.pair_sent(0, 1));
+        assert_eq!(a.pair_lost(0, 1), b.pair_lost(0, 1));
+        assert_eq!(a.pending(), 0);
+        assert_eq!(b.pending(), 0);
+        // Batched draws: same totals accounting, loss rate still ≈ p.
+        let mut c = Network::new(Topology::uniform(2, Link::default(), 0.3), 56);
+        for _ in 0..2000 {
+            c.flow_send_group(0, 1, PacketKind::Data, &sizes, &mut fates);
+        }
+        assert_eq!(c.stats.data_sent, 8000);
+        assert_eq!(c.stats.data_delivered + c.stats.lost, 8000);
+        assert_eq!(c.stats.bytes_sent, 2000 * sizes.iter().sum::<u64>());
+        let rate = c.stats.lost as f64 / 8000.0;
+        assert!((rate - 0.3).abs() < 0.02, "rate {rate}");
     }
 
     #[test]

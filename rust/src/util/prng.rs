@@ -21,6 +21,13 @@ pub struct Rng {
     s: [u64; 4],
     /// Cached second Box–Muller normal variate.
     gauss_spare: Option<f64>,
+    /// Diagnostic: raw 64-bit outputs consumed since construction (or the
+    /// last [`Rng::reset_draws`]). Every variate in this module bottoms out
+    /// in [`Rng::next_u64`], so this counts "uniforms consumed" — the
+    /// quantity the batched-draw optimizations claim to shrink. A child
+    /// from [`Rng::split`] starts its own count at zero; a clone inherits
+    /// the parent's count at the moment of cloning.
+    draws: u64,
 }
 
 impl Rng {
@@ -33,7 +40,7 @@ impl Rng {
             splitmix64(&mut sm),
             splitmix64(&mut sm),
         ];
-        Rng { s, gauss_spare: None }
+        Rng { s, gauss_spare: None, draws: 0 }
     }
 
     /// Derive an independent child stream (for per-link / per-node rngs).
@@ -41,9 +48,22 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA3EC647659359ACD)
     }
 
+    /// Raw 64-bit outputs consumed so far (see the `draws` field note).
+    #[inline]
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// Reset the draw counter (e.g. at a phase boundary).
+    #[inline]
+    pub fn reset_draws(&mut self) {
+        self.draws = 0;
+    }
+
     /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
+        self.draws += 1;
         let s = &mut self.s;
         let result = s[0]
             .wrapping_add(s[3])

@@ -30,6 +30,10 @@ pub struct JacobiGrid<'a> {
     w: usize,
     supersteps: usize,
     backend: ComputeBackend<'a>,
+    /// Reused previous-iterate scratch for the native sweep — one band's
+    /// worth, refilled per sweep, so a replica allocates O(1) band
+    /// buffers total instead of one clone per (node, superstep).
+    sweep_scratch: Vec<f32>,
 }
 
 impl<'a> JacobiGrid<'a> {
@@ -55,7 +59,7 @@ impl<'a> JacobiGrid<'a> {
                 .collect();
             bands.push(band);
         }
-        JacobiGrid { bands, h, w, supersteps, backend }
+        JacobiGrid { bands, h, w, supersteps, backend, sweep_scratch: Vec::new() }
     }
 
     /// Stitch the bands back into the global mesh.
@@ -85,7 +89,12 @@ impl<'a> JacobiGrid<'a> {
             ComputeBackend::Native => {
                 let band = &mut self.bands[node];
                 let (h, w) = (self.h, self.w);
-                let prev = band.clone();
+                // Same arithmetic as the old `band.clone()` — the scratch
+                // holds the full previous iterate — without the per-sweep
+                // allocation.
+                self.sweep_scratch.resize(band.len(), 0.0);
+                self.sweep_scratch.copy_from_slice(band);
+                let prev = &self.sweep_scratch;
                 for r in 1..h - 1 {
                     for c in 1..w - 1 {
                         band[r * w + c] = 0.25
@@ -232,8 +241,9 @@ impl DistWorkload for LaplaceCell {
 /// Sequential reference: `sweeps` Jacobi sweeps on the global mesh.
 pub fn jacobi_seq(global: &[f32], rows: usize, cols: usize, sweeps: usize) -> Vec<f32> {
     let mut cur = global.to_vec();
+    let mut prev = vec![0.0f32; cur.len()];
     for _ in 0..sweeps {
-        let prev = cur.clone();
+        prev.copy_from_slice(&cur);
         for r in 1..rows - 1 {
             for c in 1..cols - 1 {
                 cur[r * cols + c] = 0.25

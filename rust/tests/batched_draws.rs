@@ -6,25 +6,31 @@
 //!
 //! * **Bitwise per seed** where the batch path consumes the rng in the
 //!   exact legacy order: single-packet batches (k = 1 — `send_group`
-//!   delegates to the scalar `send`) and Gilbert–Elliott pairs (the
-//!   chain must be walked per copy to keep burst correlation, so the
-//!   batch path draws per packet in batch order either way).
-//! * **Distributional** for k ≥ 2 iid Bernoulli batches: geometric
-//!   gap-skipping samples exactly the same product-Bernoulli law, but
-//!   with ~t·p + 1 uniforms instead of t, so per-seed equality is
-//!   impossible — the seed-swept phase statistics must agree instead.
-//!   `Network::force_per_packet_draws` pins the legacy consumption
-//!   pattern for the comparison arm.
+//!   delegates to the scalar `send`, and GE `lose_batch` at count 1
+//!   takes the scalar walk) and anything under
+//!   `Network::force_per_packet_draws`.
+//! * **Distributional** where the aggregate draw consumes the rng
+//!   differently: k ≥ 2 iid Bernoulli batches (geometric gap-skipping,
+//!   ~t·p + 1 uniforms instead of t) and multi-copy Gilbert–Elliott
+//!   batches (sojourn/run-length sampling, O(transitions + losses)
+//!   uniforms instead of 2t). Same law, different realization — the
+//!   seed-swept statistics must agree instead: loss rate and rounds at
+//!   the phase level, plus burst-length statistics at the topology
+//!   level for GE. The pooled TcpLike stepper is pinned the same way
+//!   against its legacy sequential stepper (bitwise at p = 0, where no
+//!   draw influences anything; distributional under loss).
 //!
 //! Plus the scale-motivated reproducibility re-check: a campaign over a
 //! n = 1024 workload stays bitwise worker-count-invariant.
 
 use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, TopologySpec, WorkloadSpec};
 use lbsp::net::link::Link;
+use lbsp::net::loss::PiecewiseStationary;
 use lbsp::net::protocol::{run_phase_scheme, PhaseConfig, PhaseReport, Transfer};
-use lbsp::net::scheme::SchemeSpec;
+use lbsp::net::scheme::{SchemeSpec, TcpLike};
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::{NetStats, Network};
+use lbsp::util::prng::Rng;
 
 /// Ring halo: each node to both neighbours — every pair carries one
 /// transfer, so per-pair batches have exactly k packets.
@@ -78,16 +84,269 @@ fn k1_bernoulli_phases_are_bitwise_identical_across_draw_modes() {
 }
 
 #[test]
-fn gilbert_elliott_phases_are_bitwise_identical_across_draw_modes() {
-    // GE pairs walk the chain per copy inside `lose_batch`, in batch
-    // order — identical rng consumption to the scalar walk at any k.
+fn k1_gilbert_elliott_phases_are_bitwise_identical_across_draw_modes() {
+    // Single-copy GE batches take the scalar chain walk inside
+    // `Topology::lose_batch` — identical rng consumption, so the whole
+    // phase must be bitwise-stable across draw modes.
     for seed in 0..12u64 {
         let topo = || Topology::uniform_bursty(6, Link::from_mbytes(40.0, 0.06), 0.15, 6.0);
-        let (rep_b, stats_b) = run_once(topo(), seed, 3, false);
-        let (rep_p, stats_p) = run_once(topo(), seed, 3, true);
+        let (rep_b, stats_b) = run_once(topo(), seed, 1, false);
+        let (rep_p, stats_p) = run_once(topo(), seed, 1, true);
         assert_eq!(stats_b, stats_p, "seed {seed}");
         assert_reports_equal(&rep_b, &rep_p, &format!("seed {seed}"));
     }
+}
+
+#[test]
+fn k3_gilbert_elliott_phases_match_per_packet_statistics() {
+    // Multi-copy GE batches resolve by sojourn sampling: same chain
+    // law, different rng realization, so equivalence with the
+    // per-packet walk is statistical. Sweep seeds in both modes on the
+    // same bursty workload; the realized loss rate and mean round
+    // count must agree within Monte-Carlo tolerance (burst
+    // correlation inflates the rate variance by ~(2L − 1) relative to
+    // iid, hence the wider bands than the Bernoulli test above).
+    let p = 0.15;
+    let agg = |per_packet: bool| -> (f64, f64) {
+        let (mut sent, mut lost, mut rounds, mut phases) = (0u64, 0u64, 0u64, 0u64);
+        for seed in 0..250u64 {
+            let topo = Topology::uniform_bursty(8, Link::from_mbytes(40.0, 0.06), p, 6.0);
+            let (rep, stats) = run_once(topo, 0x6E_57 + seed, 3, per_packet);
+            sent += stats.data_sent + stats.acks_sent;
+            lost += stats.lost;
+            rounds += rep.rounds as u64;
+            phases += 1;
+        }
+        (lost as f64 / sent as f64, rounds as f64 / phases as f64)
+    };
+    let (rate_batched, rounds_batched) = agg(false);
+    let (rate_legacy, rounds_legacy) = agg(true);
+    assert!(
+        (rate_batched - p).abs() < 0.03,
+        "batched GE loss rate {rate_batched} vs p={p}"
+    );
+    assert!(
+        (rate_batched - rate_legacy).abs() < 0.04,
+        "GE loss rates diverge: batched {rate_batched} vs per-packet {rate_legacy}"
+    );
+    assert!(
+        (rounds_batched - rounds_legacy).abs() / rounds_legacy < 0.15,
+        "GE round counts diverge: batched {rounds_batched} vs per-packet {rounds_legacy}"
+    );
+}
+
+/// Loss rate, mean loss-run length, and coarse run-length histogram of
+/// a fate sequence (runs of consecutive `true`).
+fn burst_stats(fates: &[bool]) -> (f64, f64, [f64; 4]) {
+    let mut runs: Vec<u64> = Vec::new();
+    let mut cur = 0u64;
+    for &lost in fates {
+        if lost {
+            cur += 1;
+        } else if cur > 0 {
+            runs.push(cur);
+            cur = 0;
+        }
+    }
+    if cur > 0 {
+        runs.push(cur);
+    }
+    let losses: u64 = runs.iter().sum();
+    let rate = losses as f64 / fates.len() as f64;
+    let mean_run = if runs.is_empty() {
+        0.0
+    } else {
+        losses as f64 / runs.len() as f64
+    };
+    let mut bins = [0.0f64; 4];
+    for &r in &runs {
+        let b = match r {
+            1..=2 => 0,
+            3..=8 => 1,
+            9..=24 => 2,
+            _ => 3,
+        };
+        bins[b] += 1.0;
+    }
+    if !runs.is_empty() {
+        for b in &mut bins {
+            *b /= runs.len() as f64;
+        }
+    }
+    (rate, mean_run, bins)
+}
+
+#[test]
+fn ge_fate_sequences_match_burst_statistics_across_chunk_sizes() {
+    // Topology-level pin of the sojourn sampler, k ∈ {1, 3}: draw the
+    // same long fate sequence per seed via chunked `lose_batch` and via
+    // the scalar walk. Chunks of 1 must match the walk bitwise; chunks
+    // of 3 must reproduce the walk's loss rate, mean burst length, and
+    // burst-length histogram across the seed sweep.
+    let (p, burst) = (0.12, 10.0);
+    let total = 3000usize;
+    let draw = |seed: u64, chunk: usize| -> Vec<bool> {
+        let mut topo =
+            Topology::uniform_bursty(2, Link::from_mbytes(40.0, 0.06), p, burst);
+        let mut rng = Rng::new(seed);
+        let mut fates = Vec::with_capacity(total);
+        if chunk == 0 {
+            for _ in 0..total {
+                fates.push(topo.lose(0, 1, &mut rng));
+            }
+        } else {
+            let mut buf = Vec::new();
+            let mut left = total;
+            while left > 0 {
+                let take = chunk.min(left);
+                topo.lose_batch(0, 1, take, &mut rng, &mut buf);
+                fates.extend_from_slice(&buf);
+                left -= take;
+            }
+        }
+        fates
+    };
+    let (mut walk_all, mut batch_all) = (Vec::new(), Vec::new());
+    for seed in 0..150u64 {
+        let walk = draw(0x5EED + seed, 0);
+        let singles = draw(0x5EED + seed, 1);
+        assert_eq!(walk, singles, "seed {seed}: k=1 chunks must be bitwise");
+        walk_all.extend(walk);
+        batch_all.extend(draw(0x5EED + seed, 3));
+    }
+    let (rate_w, run_w, bins_w) = burst_stats(&walk_all);
+    let (rate_b, run_b, bins_b) = burst_stats(&batch_all);
+    assert!(
+        (rate_b - rate_w).abs() < 0.01,
+        "loss rates diverge: batched {rate_b} vs walk {rate_w}"
+    );
+    assert!(
+        (run_b - run_w).abs() / run_w < 0.06,
+        "mean burst lengths diverge: batched {run_b} vs walk {run_w}"
+    );
+    for (i, (b, w)) in bins_b.iter().zip(bins_w.iter()).enumerate() {
+        assert!(
+            (b - w).abs() < 0.03,
+            "burst-length bin {i} diverges: batched {b} vs walk {w}"
+        );
+    }
+}
+
+#[test]
+fn ge_batched_phase_consumes_sublinear_uniforms() {
+    // Draw-count pin on a bursty n = 1024 phase: the per-packet GE walk
+    // spends exactly 2 uniforms per packet; sojourn batching spends one
+    // geometric per state run (and zero per emission — outage bursts
+    // have degenerate emit probabilities), so only the single-copy ack
+    // traffic still pays the scalar walk. The batched phase must come
+    // in under half the walk's uniforms AND under one uniform per
+    // packet on its own traffic.
+    let run = |per_packet: bool| -> (u64, u64) {
+        let topo = Topology::uniform_bursty(1024, Link::from_mbytes(40.0, 0.06), 0.15, 6.0);
+        let transfers = halo(1024, 2048);
+        let mut net = Network::new(topo, 0xD12A);
+        net.force_per_packet_draws(per_packet);
+        let cfg = PhaseConfig { copies: 3, timeout_s: 0.18, ..Default::default() };
+        let scheme = SchemeSpec::KCopy.build();
+        let rep = run_phase_scheme(&mut net, &transfers, &cfg, scheme.as_ref(), None);
+        assert!(rep.completed);
+        (net.rng_draws(), net.stats.data_sent + net.stats.acks_sent)
+    };
+    let (draws_batched, packets_batched) = run(false);
+    let (draws_walk, _) = run(true);
+    assert!(
+        draws_batched * 2 < draws_walk,
+        "batched GE phase used {draws_batched} uniforms vs walk's {draws_walk}"
+    );
+    assert!(
+        draws_batched < packets_batched,
+        "batched GE phase used {draws_batched} uniforms for {packets_batched} packets"
+    );
+}
+
+#[test]
+fn mid_phase_retune_resets_bursty_chains() {
+    // Satellite regression: a piecewise-stationary shift to p = 0
+    // between supersteps must fully silence every pair, even the ones
+    // parked mid-burst with a cached sojourn remainder from the lossy
+    // phase. A leaked remainder would keep a Bad-state chain lossy and
+    // force retransmission rounds after the shift.
+    let sched = PiecewiseStationary::step_change(0.4, 1, 0.0);
+    for seed in 0..8u64 {
+        let topo = Topology::uniform_bursty(6, Link::from_mbytes(40.0, 0.06), 0.4, 8.0);
+        let transfers = halo(6, 2048);
+        let mut net = Network::new(topo, 0xF00D + seed);
+        let cfg = PhaseConfig { copies: 2, timeout_s: 0.18, ..Default::default() };
+        let scheme = SchemeSpec::KCopy.build();
+        let rep0 = run_phase_scheme(&mut net, &transfers, &cfg, scheme.as_ref(), None);
+        assert!(rep0.completed, "seed {seed}: lossy phase");
+        net.set_mean_loss(sched.mean_at(1));
+        let lost_before = net.stats.lost;
+        let rep1 = run_phase_scheme(&mut net, &transfers, &cfg, scheme.as_ref(), None);
+        assert!(rep1.completed, "seed {seed}: post-shift phase");
+        assert_eq!(net.stats.lost, lost_before, "seed {seed}: losses after shift to 0");
+        assert_eq!(rep1.rounds, 1, "seed {seed}: post-shift phase must finish in one round");
+    }
+}
+
+#[test]
+fn tcplike_pooled_and_legacy_steppers_agree() {
+    // The pooled struct-of-arrays stepper applies the identical
+    // per-flow AIMD round law but interleaves rng draws across flows
+    // differently, so per-seed equality only holds where no draw can
+    // influence anything: p = 0. Under loss the two steppers are
+    // documented-equal in distribution — pinned by a seed sweep.
+    let run_tcp = |p: f64, seed: u64, legacy: bool| -> (PhaseReport, NetStats) {
+        let topo = Topology::uniform(6, Link::from_mbytes(40.0, 0.06), p);
+        // 8 transfers per directed pair = 8 segments per flow, enough
+        // for real window growth/collapse dynamics (and enough loss
+        // samples per sweep for the tolerances below).
+        let mut transfers = Vec::new();
+        for _ in 0..8 {
+            transfers.extend(halo(6, 4096));
+        }
+        let mut net = Network::new(topo, seed);
+        let cfg = PhaseConfig::default();
+        let scheme = TcpLike { legacy_stepping: legacy, ..Default::default() };
+        let rep = run_phase_scheme(&mut net, &transfers, &cfg, &scheme, None);
+        (rep, net.stats)
+    };
+    // Lossless: bitwise across steppers.
+    for seed in 0..10u64 {
+        let (rep_pool, stats_pool) = run_tcp(0.0, seed, false);
+        let (rep_leg, stats_leg) = run_tcp(0.0, seed, true);
+        assert!(rep_pool.completed && rep_leg.completed, "seed {seed}");
+        assert_eq!(stats_pool, stats_leg, "p=0 seed {seed}");
+        assert_reports_equal(&rep_pool, &rep_leg, &format!("p=0 seed {seed}"));
+    }
+    // Lossy: distributional across a seed sweep.
+    let p = 0.1;
+    let agg = |legacy: bool| -> (f64, f64) {
+        let (mut sent, mut lost, mut rounds, mut phases) = (0u64, 0u64, 0u64, 0u64);
+        for seed in 0..100u64 {
+            let (rep, stats) = run_tcp(p, 0x7C_B0 + seed, legacy);
+            assert!(rep.completed, "legacy={legacy} seed {seed}");
+            sent += stats.data_sent + stats.acks_sent;
+            lost += stats.lost;
+            rounds += rep.rounds as u64;
+            phases += 1;
+        }
+        (lost as f64 / sent as f64, rounds as f64 / phases as f64)
+    };
+    let (rate_pool, rounds_pool) = agg(false);
+    let (rate_leg, rounds_leg) = agg(true);
+    assert!(
+        (rate_pool - p).abs() < 0.015,
+        "pooled tcplike loss rate {rate_pool} vs p={p}"
+    );
+    assert!(
+        (rate_pool - rate_leg).abs() < 0.015,
+        "tcplike loss rates diverge: pooled {rate_pool} vs legacy {rate_leg}"
+    );
+    assert!(
+        (rounds_pool - rounds_leg).abs() / rounds_leg < 0.15,
+        "tcplike round counts diverge: pooled {rounds_pool} vs legacy {rounds_leg}"
+    );
 }
 
 #[test]
@@ -97,7 +356,7 @@ fn k2_bernoulli_batches_match_per_packet_statistics() {
     // workload; the realized per-copy loss rate and mean round count
     // must agree within Monte-Carlo tolerance.
     let p = 0.2;
-    let mut agg = |per_packet: bool| -> (f64, f64) {
+    let agg = |per_packet: bool| -> (f64, f64) {
         let (mut sent, mut lost, mut rounds, mut phases) = (0u64, 0u64, 0u64, 0u64);
         for seed in 0..150u64 {
             let topo = Topology::uniform(8, Link::from_mbytes(40.0, 0.06), p);

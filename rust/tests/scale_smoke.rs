@@ -18,8 +18,14 @@
 //! `#[ignore]`d in the default debug run (the DES cost would dominate
 //! tier-1); `scripts/tier1.sh` executes it in release mode under the
 //! usual wall-clock guard.
+//!
+//! The n = 10⁴ campaign cell below is the headline feasibility check
+//! for the sojourn-batched loss draws and scratch-reuse work: one full
+//! `CampaignEngine` laplace cell (1 replica, 2 sweeps) at a scale where
+//! per-packet rng walks and per-sweep band clones used to dominate.
 
 use lbsp::bsp::BspRuntime;
+use lbsp::coordinator::{CampaignEngine, CampaignSpec, LossSpec, TopologySpec, WorkloadSpec};
 use lbsp::net::link::Link;
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::Network;
@@ -53,5 +59,50 @@ fn laplace_n2048_completes_with_o_n_touched_pairs() {
         "per-pair state must stay O(n) on the halo workload, got {touched} \
          touched pairs (dense would be {})",
         n * n
+    );
+}
+
+#[test]
+#[ignore = "release-mode scale smoke; run by scripts/tier1.sh"]
+fn laplace_n10000_campaign_cell_completes_and_validates() {
+    // The n = 10⁴ campaign cell: one laplace replica through the full
+    // CampaignEngine path (cell expansion, replica rng split, DES
+    // phases, Jacobi sweeps, sequential validation, summary). Bounded:
+    // 1 replica, 2 sweeps, tiny 3×8 bands — the cost is the 2(n−1)
+    // halo packets per superstep at k = 2, which is exactly the path
+    // the batched draws and scratch reuse target.
+    let n = 10_000usize;
+    let spec = CampaignSpec {
+        workloads: vec![WorkloadSpec::Laplace { h: 3, w: 8, sweeps: 2 }],
+        ns: vec![n],
+        ps: vec![0.05],
+        ks: vec![2],
+        losses: vec![LossSpec::Bernoulli],
+        topologies: vec![TopologySpec::Uniform],
+        replicas: 1,
+        seed: 0x1_0000,
+        ..Default::default()
+    };
+    let summaries = CampaignEngine::new(1).run(&spec);
+    assert_eq!(summaries.len(), 1);
+    let s = &summaries[0];
+    assert_eq!(s.completed_frac, 1.0, "n={n} replica aborted");
+    assert_eq!(s.validated_frac, 1.0, "n={n} output diverged from sequential reference");
+
+    // The touched-pair bound at the same scale, via a direct replica
+    // (CellSummary has no per-pair counter): ring halo data pairs plus
+    // ack reversals stay O(n), never drifting back toward dense n².
+    let cell = Box::new(LaplaceCell::sample(n, 3, 8, 1, &mut Rng::new(0xA11)));
+    let mut rt = BspRuntime::new(Network::new(
+        Topology::uniform(n, Link::from_mbytes(40.0, 0.07), 0.05),
+        0xA11 + 1,
+    ))
+    .with_copies(2);
+    let run = cell.run_replica(&mut rt);
+    assert!(run.completed && run.validated, "n={n} direct replica");
+    let touched = rt.network().n_touched_pairs();
+    assert!(
+        (2 * (n - 1)..=4 * n).contains(&touched),
+        "per-pair state must stay O(n) at n=10⁴, got {touched} touched pairs"
     );
 }

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Run the two perf-trajectory benches and leave their machine-readable
+# artifacts at the repo root:
+#
+#   scripts/bench.sh
+#     -> BENCH_campaign.json   (campaign_scaling: worker scaling + the
+#                               n = 10^4 laplace DES cell)
+#     -> BENCH_protocol.json   (protocol_schemes: per-scheme phase
+#                               throughput + the halo-exchange scale
+#                               series, iid / GE-bursty / tcplike)
+#
+# Both benches are plain binaries with `harness = false`; each honours
+# LBSP_BENCH_OUT for its output path, which this script pins so the
+# artifacts land in a predictable place for cross-PR diffing.
+# Also runnable as the opt-in tier-1 tail: LBSP_TIER1_BENCH=1
+# scripts/tier1.sh calls this script after the test gates pass.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench: cargo not found on PATH — cannot run the bench suite." >&2
+    echo "bench: install a Rust toolchain (rustup.rs) and re-run." >&2
+    exit 1
+fi
+
+echo "== cargo bench campaign_scaling (-> BENCH_campaign.json) =="
+LBSP_BENCH_OUT=BENCH_campaign.json \
+    cargo bench --bench campaign_scaling
+
+echo "== cargo bench protocol_schemes (-> BENCH_protocol.json) =="
+LBSP_BENCH_OUT=BENCH_protocol.json \
+    cargo bench --bench protocol_schemes
+
+echo "bench: OK (BENCH_campaign.json, BENCH_protocol.json)"

@@ -77,4 +77,15 @@ else
     echo "(cargo clippy not installed; skipping lint check)"
 fi
 
+# Opt-in perf tail: LBSP_TIER1_BENCH=1 runs the two trajectory benches
+# after every gate has passed, refreshing BENCH_campaign.json /
+# BENCH_protocol.json at the repo root (see scripts/bench.sh). Off by
+# default — the benches add minutes of wall time and their numbers are
+# only meaningful on quiet machines, so tier-1 stays a correctness
+# gate unless the perf trajectory is explicitly requested.
+if [[ "${LBSP_TIER1_BENCH:-0}" == "1" ]]; then
+    echo "== perf trajectory benches (LBSP_TIER1_BENCH=1) =="
+    scripts/bench.sh
+fi
+
 echo "tier1: OK"
