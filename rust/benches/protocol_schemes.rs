@@ -13,10 +13,11 @@
 use std::time::Instant;
 
 use lbsp::net::link::Link;
-use lbsp::net::protocol::{run_phase_scheme, PhaseConfig, Transfer};
+use lbsp::net::protocol::{run_phase_scheme, run_phase_scheme_traced, PhaseConfig, Transfer};
 use lbsp::net::scheme::{ReliabilityScheme, SchemeSpec, TcpLike};
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::Network;
+use lbsp::obs::{MemorySink, NoopSink};
 use lbsp::util::bench::{bench_units, black_box};
 
 /// One all-pairs phase on n nodes with m messages per directed pair.
@@ -203,17 +204,90 @@ fn main() {
         }
     }
 
+    // --- trace overhead: the obs layer's "zero-overhead when disabled"
+    // contract, measured. Three variants of the identical p = 0.05 phase
+    // workload: the plain entry point (no trace plumbing at all), the
+    // traced entry point with a NoopSink attached (every hook fires,
+    // every record() is a no-op), and a MemorySink (events actually
+    // retained, cleared each phase). The ISSUE 8 budget is ≤ 2% for the
+    // attached-but-noop path; the memory figure is informational.
+    println!("\n=== trace overhead (attached NoopSink vs detached) ===\n");
+    let t_iters = 60usize;
+    let t_scheme = SchemeSpec::KCopy.build();
+    let mk_net = || {
+        Network::new(
+            Topology::uniform(n, Link::from_mbytes(40.0, 0.07), 0.05),
+            0x0B5E,
+        )
+    };
+    let mut net = mk_net();
+    let detached = bench_units("trace: detached", 5, t_iters, Some(1.0), || {
+        black_box(run_phase_scheme(
+            &mut net,
+            &transfers,
+            &cfg,
+            t_scheme.as_ref(),
+            None,
+        ));
+    });
+    let mut net = mk_net();
+    let mut noop = NoopSink;
+    let noop_rep = bench_units("trace: noop sink", 5, t_iters, Some(1.0), || {
+        black_box(run_phase_scheme_traced(
+            &mut net,
+            &transfers,
+            &cfg,
+            t_scheme.as_ref(),
+            None,
+            Some(&mut noop),
+        ));
+    });
+    let mut net = mk_net();
+    let mut mem = MemorySink::new();
+    let mem_rep = bench_units("trace: memory sink", 5, t_iters, Some(1.0), || {
+        mem.clear();
+        black_box(run_phase_scheme_traced(
+            &mut net,
+            &transfers,
+            &cfg,
+            t_scheme.as_ref(),
+            None,
+            Some(&mut mem),
+        ));
+    });
+    let noop_over_detached = noop_rep.median_s / detached.median_s - 1.0;
+    println!(
+        "    noop-sink overhead {:+.2}% of detached (memory sink {:+.2}%)",
+        100.0 * noop_over_detached,
+        100.0 * (mem_rep.median_s / detached.median_s - 1.0),
+    );
+    assert!(
+        noop_over_detached <= 0.02,
+        "NoopSink phase overhead {:.2}% blows the 2% budget \
+         (detached median {:.6e} s, noop median {:.6e} s)",
+        100.0 * noop_over_detached,
+        detached.median_s,
+        noop_rep.median_s,
+    );
+
     // --- machine-readable artifact for cross-PR perf tracking.
     let json = format!(
         concat!(
             "{{\"bench\":\"protocol_schemes\",\"nodes\":{n},\"transfers\":{},",
             "\"payload_bytes\":{payload},\"param\":{},\"series\":[{}],",
-            "\"scale\":[{}]}}\n"
+            "\"scale\":[{}],",
+            "\"trace_overhead\":{{\"detached_median_s\":{:?},",
+            "\"noop_median_s\":{:?},\"memory_median_s\":{:?},",
+            "\"noop_over_detached\":{:?}}}}}\n"
         ),
         transfers.len(),
         cfg.copies,
         series.join(","),
         scale_series.join(","),
+        detached.median_s,
+        noop_rep.median_s,
+        mem_rep.median_s,
+        noop_over_detached,
     );
     let out = std::env::var("LBSP_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_protocol.json".to_string());

@@ -347,12 +347,12 @@ impl LinkBank {
     /// effective sample size. The traffic-seen gate of the dense bank
     /// is structural now — an estimator only exists after `sent > 0` —
     /// so a cold prior's pseudo-weight can never vote.
-    fn ess(est: &dyn LossEstimator) -> f64 {
+    fn pair_ess(est: &dyn LossEstimator) -> f64 {
         est.weight().max(0.0)
     }
 
     fn total_ess(&self) -> f64 {
-        self.links.values().map(|e| Self::ess(e.as_ref())).sum()
+        self.links.values().map(|e| Self::pair_ess(e.as_ref())).sum()
     }
 
     /// ESS-weighted global p̂; the shared prior before any observation.
@@ -369,7 +369,7 @@ impl LinkBank {
         }
         let mut acc = 0.0;
         for est in self.links.values() {
-            let w = Self::ess(est.as_ref());
+            let w = Self::pair_ess(est.as_ref());
             if w > 0.0 {
                 acc += w * est.estimate();
             }
@@ -391,7 +391,7 @@ impl LinkBank {
         }
         let (mut lo, mut hi) = (0.0, 0.0);
         for est in self.links.values() {
-            let w = Self::ess(est.as_ref());
+            let w = Self::pair_ess(est.as_ref());
             if w > 0.0 {
                 let (l, h) = est.interval();
                 lo += w * l;
@@ -448,6 +448,14 @@ impl LinkBank {
     /// Total wire copies observed across all pairs.
     pub fn observed(&self) -> u64 {
         self.traffic.values().sum()
+    }
+
+    /// Total effective sample size across the touched pairs' estimators
+    /// — the denominator behind the aggregate p̂ (0.0 before any
+    /// traffic). Exposed for the trace layer's decision/estimator
+    /// events.
+    pub fn ess(&self) -> f64 {
+        self.total_ess()
     }
 }
 

@@ -260,8 +260,23 @@ impl AdaptSpec {
             }
         };
         let bank = LinkBank::new(n_pairs, move || est.build());
-        Some(AdaptiveK { bank, policy })
+        let k_max = match *self {
+            AdaptSpec::Static => unreachable!(),
+            AdaptSpec::Greedy { k_max, .. } | AdaptSpec::Hysteresis { k_max, .. } => k_max,
+        };
+        Some(AdaptiveK { bank, policy, meta: Some(DecisionMeta { model, k_max, scheme }) })
     }
+}
+
+/// The cost context an [`AdaptiveK`] was built against — enough for the
+/// trace layer to recompute every candidate parameter's score at
+/// decision time (`model.comm_cost_for(scheme, p̂, v)` for
+/// `v ∈ 1..=k_max`) without touching controller state. All `Copy`.
+#[derive(Clone, Copy, Debug)]
+pub struct DecisionMeta {
+    pub model: CostModel,
+    pub k_max: u32,
+    pub scheme: crate::net::scheme::SchemeSpec,
 }
 
 /// Per-run closed-loop state: the per-link estimator bank plus the k
@@ -272,6 +287,10 @@ impl AdaptSpec {
 pub struct AdaptiveK {
     bank: LinkBank,
     policy: KPolicy,
+    /// Cost context for trace decision events; `Some` when built
+    /// through [`AdaptSpec::build_for`], `None` for hand-assembled
+    /// loops ([`AdaptiveK::new`]).
+    meta: Option<DecisionMeta>,
 }
 
 impl AdaptiveK {
@@ -283,7 +302,7 @@ impl AdaptiveK {
                 "per-link policy needs one controller slot per bank pair"
             );
         }
-        AdaptiveK { bank, policy }
+        AdaptiveK { bank, policy, meta: None }
     }
 
     /// Pick the coming superstep's duplication decision: a single k
@@ -344,6 +363,23 @@ impl AdaptiveK {
     /// Total wire copies observed so far.
     pub fn observed(&self) -> u64 {
         self.bank.observed()
+    }
+
+    /// Aggregate ~95 % uncertainty band of the loss estimate (the
+    /// bank's ESS-weighted interval unioned with the per-link spread).
+    pub fn interval(&self) -> (f64, f64) {
+        self.bank.interval()
+    }
+
+    /// Total effective sample size behind the aggregate estimate.
+    pub fn ess(&self) -> f64 {
+        self.bank.ess()
+    }
+
+    /// The cost context this loop was built against (for trace decision
+    /// events); `None` for hand-assembled loops.
+    pub fn decision_meta(&self) -> Option<DecisionMeta> {
+        self.meta
     }
 
     /// The estimator bank (per-link states, for reporting).

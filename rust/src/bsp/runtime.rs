@@ -5,10 +5,11 @@ use std::collections::BTreeMap;
 use crate::adapt::{AdaptiveK, KChoice};
 use crate::net::loss::PiecewiseStationary;
 use crate::net::protocol::{
-    run_phase_scheme, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer,
+    run_phase_scheme_traced, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer,
 };
 use crate::net::scheme::{KCopy, ReliabilityScheme};
 use crate::net::transport::Network;
+use crate::obs::{MetricsRegistry, TraceEvent, TraceSink};
 
 use super::program::{BspProgram, Outgoing};
 
@@ -79,6 +80,10 @@ pub struct RunReport {
     pub completed: bool,
     pub outcome: RunOutcome,
     pub steps: Vec<StepReport>,
+    /// Counter snapshot taken at run end (rng draws, touched pairs,
+    /// wire counters, per-phase round histogram) — the queryable
+    /// surface `workloads::ReplicaRun` carries forward.
+    pub metrics: MetricsRegistry,
 }
 
 impl RunReport {
@@ -122,6 +127,11 @@ pub struct BspRuntime {
     /// Segment index last applied to the network (avoids re-tuning —
     /// and resetting Gilbert–Elliott burst state — every superstep).
     applied_segment: Option<usize>,
+    /// Structured trace hook (see [`crate::obs`]). `None` — the default
+    /// — is the zero-overhead path: no event is built, no allocation
+    /// happens, and the run is bitwise-identical to a build without the
+    /// hooks (pinned by `tests/trace_invariance.rs`).
+    trace: Option<Box<dyn TraceSink>>,
 }
 
 impl BspRuntime {
@@ -136,6 +146,7 @@ impl BspRuntime {
             adapt: None,
             loss_schedule: None,
             applied_segment: None,
+            trace: None,
         }
     }
 
@@ -180,6 +191,24 @@ impl BspRuntime {
     pub fn with_loss_schedule(mut self, schedule: PiecewiseStationary) -> Self {
         self.loss_schedule = Some(schedule);
         self
+    }
+
+    /// Attach a structured trace sink (see [`crate::obs`]): the runtime
+    /// and the phase protocol emit typed [`TraceEvent`]s through it —
+    /// superstep begin/end, per-round wire deltas, controller decisions
+    /// (with cost-model scores when a controller is attached), estimator
+    /// updates, loss-schedule retunes and the run outcome. Events are
+    /// built only from values the runtime already computed, so a traced
+    /// run is bitwise-identical to an untraced one.
+    pub fn with_trace(mut self, sink: Box<dyn TraceSink>) -> Self {
+        self.trace = Some(sink);
+        self
+    }
+
+    /// Detach and return the trace sink — how callers get a
+    /// `MemorySink`'s recorded events back after a run.
+    pub fn take_trace(&mut self) -> Option<Box<dyn TraceSink>> {
+        self.trace.take()
     }
 
     /// The live adaptive state, if closed-loop control is attached.
@@ -233,13 +262,21 @@ impl BspRuntime {
         let mut report = RunReport::default();
         let mut converged = false;
         for step in 0..prog.max_supersteps() {
+            if let Some(t) = self.trace.as_mut() {
+                t.record(&TraceEvent::SuperstepBegin { step: step as u64 });
+            }
+
             // --- piecewise-stationary loss: re-tune the network when
             // the schedule's governing segment changes.
             if let Some(sched) = &self.loss_schedule {
                 let seg = sched.segment_at(step);
                 if self.applied_segment != Some(seg) {
-                    self.net.set_mean_loss(sched.mean_at(step));
+                    let mean = sched.mean_at(step);
+                    self.net.set_mean_loss(mean);
                     self.applied_segment = Some(seg);
+                    if let Some(t) = self.trace.as_mut() {
+                        t.record(&TraceEvent::Retune { step: step as u64, mean_loss: mean });
+                    }
                 }
             }
 
@@ -287,6 +324,45 @@ impl BspRuntime {
                     / per_transfer.len() as f64;
                 (lo, hi, mean)
             };
+
+            // --- trace: the decision as the transport will consume it —
+            // the realized copy envelope (exactly what StepReport gets)
+            // plus the estimator state and candidate cost scores the
+            // controller solved against. Built only when a sink is
+            // attached; everything here is a pure read (no rng, no
+            // estimator mutation).
+            if self.trace.is_some() {
+                let (p_hat, interval, ess, scores) = match self.adapt.as_ref() {
+                    Some(ad) => {
+                        let p_hat = ad.estimate();
+                        let scores = ad
+                            .decision_meta()
+                            .map(|m| {
+                                (1..=m.k_max)
+                                    .map(|v| m.model.comm_cost_for(m.scheme, p_hat, v))
+                                    .collect()
+                            })
+                            .unwrap_or_default();
+                        (p_hat, ad.interval(), ad.ess(), scores)
+                    }
+                    None => (f64::NAN, (f64::NAN, f64::NAN), f64::NAN, Vec::new()),
+                };
+                let scheme = self.scheme.label();
+                if let Some(t) = self.trace.as_mut() {
+                    t.record(&TraceEvent::Decision {
+                        step: step as u64,
+                        scheme,
+                        copies_min: k_min,
+                        copies_max: k_max,
+                        copies_mean: k_mean,
+                        p_hat,
+                        interval,
+                        ess,
+                        scores,
+                    });
+                }
+            }
+
             // Snapshot the sparse per-pair counters so the post-phase
             // feed can hand the estimators exact deltas. Only pairs
             // with traffic exist — O(touched), not O(n²).
@@ -315,12 +391,13 @@ impl BspRuntime {
                     policy: self.policy,
                     max_rounds: self.max_rounds,
                 };
-                run_phase_scheme(
+                run_phase_scheme_traced(
                     &mut self.net,
                     &transfers,
                     &cfg,
                     self.scheme.as_ref(),
                     Some(per_transfer.as_slice()),
+                    self.trace.as_deref_mut(),
                 )
             };
 
@@ -330,12 +407,31 @@ impl BspRuntime {
             // scan visited them) keeps the feed O(touched).
             if let Some(before) = pairs_before {
                 let net = &self.net;
+                let tracing = self.trace.is_some();
+                // Only the traced path collects the fed deltas (the
+                // Vec stays unallocated otherwise).
+                let mut fed: Vec<(u64, u64, u64)> = Vec::new();
                 let ad = self.adapt.as_mut().expect("snapshot implies adapt");
                 for (pair, sent_now, lost_now) in net.touched_pairs() {
                     let (s0, l0) = before.get(&pair).copied().unwrap_or((0, 0));
                     let ds = sent_now - s0;
                     if ds > 0 {
                         ad.observe_pair(pair, lost_now - l0, ds);
+                        if tracing {
+                            fed.push((pair as u64, lost_now - l0, ds));
+                        }
+                    }
+                }
+                if tracing {
+                    let p_hat = ad.estimate();
+                    let ess = ad.ess();
+                    if let Some(t) = self.trace.as_mut() {
+                        t.record(&TraceEvent::EstimatorUpdate {
+                            step: step as u64,
+                            pairs: fed,
+                            p_hat,
+                            ess,
+                        });
                     }
                 }
             }
@@ -369,10 +465,20 @@ impl BspRuntime {
                 copies_max: k_max,
                 copies_mean: k_mean,
             });
+            if let Some(t) = self.trace.as_mut() {
+                t.record(&TraceEvent::SuperstepEnd {
+                    step: step as u64,
+                    rounds: phase.rounds,
+                    phase_s: phase.model_duration_s,
+                    step_s: step_time,
+                    completed: phase.completed,
+                });
+            }
 
             if !phase.completed {
                 report.completed = false;
                 report.outcome = RunOutcome::Aborted;
+                self.finish(&mut report);
                 return report;
             }
 
@@ -392,7 +498,33 @@ impl BspRuntime {
         } else {
             RunOutcome::RanAllSupersteps
         };
+        self.finish(&mut report);
         report
+    }
+
+    /// Run-end bookkeeping shared by every exit path: snapshot the
+    /// metrics registry into the report and close the trace (outcome
+    /// event + flush).
+    fn finish(&mut self, report: &mut RunReport) {
+        let mut metrics = MetricsRegistry::from_network(&self.net);
+        for s in &report.steps {
+            metrics.rounds_hist.push(s.phase.rounds as u64);
+        }
+        report.metrics = metrics;
+        if let Some(t) = self.trace.as_mut() {
+            let outcome = match report.outcome {
+                RunOutcome::Converged => "converged",
+                RunOutcome::RanAllSupersteps => "ran_all_supersteps",
+                RunOutcome::Aborted => "aborted",
+            };
+            t.record(&TraceEvent::RunEnd {
+                steps: report.supersteps as u64,
+                total_rounds: report.total_rounds,
+                total_time_s: report.total_time_s,
+                outcome,
+            });
+            t.flush();
+        }
     }
 }
 

@@ -58,8 +58,10 @@
 //! [`crate::report::artifacts`] (`lbsp campaign --out`).
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::adapt::{AdaptSpec, CostModel};
 use crate::bsp::BspRuntime;
@@ -72,6 +74,7 @@ use crate::net::scheme::SchemeSpec;
 use crate::net::rounds::{run_slotted_program, run_slotted_program_model};
 use crate::net::topology::{PlanetLabRanges, Topology};
 use crate::net::transport::Network;
+use crate::obs::FileSink;
 use crate::util::prng::Rng;
 use crate::util::stats::{LogHist, Summary};
 use crate::workloads::{
@@ -651,6 +654,24 @@ struct ReplicaResult {
     p_hi: f64,
     /// Per-phase round counts in the fixed log₂ bins.
     hist: LogHist,
+    /// Host wall-clock this replica took (seconds) — stamped by the
+    /// dispatch wrapper, nondeterministic, and therefore summed into
+    /// [`CellExtras`], never into [`CellSummary`].
+    wall_s: f64,
+}
+
+/// Per-cell bookkeeping that must stay **out** of [`CellSummary`]:
+/// host wall-clock is nondeterministic across machines and worker
+/// counts, and `CellSummary`'s `PartialEq` is the worker-count
+/// bitwise-invariance contract. Persisted as the additive v5 artifact
+/// keys (`wall_s`, `trace_path`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CellExtras {
+    /// Host wall-clock summed over the cell's replicas (seconds).
+    pub wall_s: f64,
+    /// `lbsp-trace/v1` JSONL artifact of the cell's replica 0, when the
+    /// engine ran with a trace directory (`--trace-first-replica`).
+    pub trace_path: Option<String>,
 }
 
 /// Aggregated statistics for one cell over all its replicas.
@@ -774,12 +795,14 @@ impl RhoCache {
     }
 }
 
-/// One dispatchable replica: a cell plus its pre-split rng stream.
+/// One dispatchable replica: a cell plus its pre-split rng stream, and
+/// (replica 0 under `--trace-first-replica`) a trace destination.
 #[derive(Clone)]
 struct Task {
     cell_idx: usize,
     cell: CellSpec,
     rng: Rng,
+    trace: Option<PathBuf>,
 }
 
 /// The engine: a worker count, a chunking policy and a ρ̂ cache.
@@ -790,11 +813,35 @@ pub struct CampaignEngine {
     /// on uneven cells.
     pub chunk_size: usize,
     rho_cache: RhoCache,
+    /// When set, replica 0 of every cell writes an `lbsp-trace/v1`
+    /// JSONL here (`cell-NNNN.jsonl`). Tracing only reads values the
+    /// run already computed, so traced and untraced replicas stay
+    /// bitwise identical.
+    trace_dir: Option<PathBuf>,
 }
 
 impl CampaignEngine {
     pub fn new(workers: usize) -> CampaignEngine {
-        CampaignEngine { workers, chunk_size: 4, rho_cache: RhoCache::new() }
+        CampaignEngine {
+            workers,
+            chunk_size: 4,
+            rho_cache: RhoCache::new(),
+            trace_dir: None,
+        }
+    }
+
+    /// Attach a [`crate::obs::FileSink`] to replica 0 of each cell,
+    /// writing `<dir>/cell-NNNN.jsonl` (the `--trace-first-replica`
+    /// campaign flag). The directory must already exist.
+    pub fn with_trace_dir(mut self, dir: PathBuf) -> CampaignEngine {
+        self.trace_dir = Some(dir);
+        self
+    }
+
+    fn trace_path_for(&self, cell_idx: usize) -> Option<PathBuf> {
+        self.trace_dir
+            .as_ref()
+            .map(|d| d.join(format!("cell-{cell_idx:04}.jsonl")))
     }
 
     pub fn rho_cache(&self) -> &RhoCache {
@@ -806,6 +853,17 @@ impl CampaignEngine {
     /// Dispatches to the fixed- or adaptive-replica path on
     /// [`CampaignSpec::sem_target`].
     pub fn run(&self, spec: &CampaignSpec) -> Vec<CellSummary> {
+        self.run_with_extras(spec).0
+    }
+
+    /// [`CampaignEngine::run`] plus the per-cell nondeterministic
+    /// bookkeeping ([`CellExtras`]: summed host wall-clock, trace path)
+    /// that the v5 artifact records but the worker-count-invariance
+    /// contract keeps out of [`CellSummary`].
+    pub fn run_with_extras(
+        &self,
+        spec: &CampaignSpec,
+    ) -> (Vec<CellSummary>, Vec<CellExtras>) {
         if let Err(e) = spec.validate() {
             panic!("invalid campaign spec: {e}");
         }
@@ -816,7 +874,7 @@ impl CampaignEngine {
     }
 
     /// Fixed-replica path: exactly `spec.replicas` runs per cell.
-    fn run_fixed(&self, spec: &CampaignSpec) -> Vec<CellSummary> {
+    fn run_fixed(&self, spec: &CampaignSpec) -> (Vec<CellSummary>, Vec<CellExtras>) {
         let cells = spec.cells();
 
         // Leader-side seed derivation: split one stream per replica task
@@ -825,13 +883,23 @@ impl CampaignEngine {
         let mut master = Rng::new(spec.seed);
         let mut tasks = Vec::with_capacity(spec.n_runs());
         for (cell_idx, &cell) in cells.iter().enumerate() {
-            for _ in 0..spec.replicas {
-                tasks.push(Task { cell_idx, cell, rng: master.split() });
+            for replica_idx in 0..spec.replicas {
+                tasks.push(Task {
+                    cell_idx,
+                    cell,
+                    rng: master.split(),
+                    trace: if replica_idx == 0 {
+                        self.trace_path_for(cell_idx)
+                    } else {
+                        None
+                    },
+                });
             }
         }
 
         let results = self.dispatch(tasks);
         let mut summaries = Vec::with_capacity(cells.len());
+        let mut extras = Vec::with_capacity(cells.len());
         for (ci, &cell) in cells.iter().enumerate() {
             let start = ci * spec.replicas;
             let rs: Vec<ReplicaResult> = results[start..start + spec.replicas]
@@ -842,8 +910,9 @@ impl CampaignEngine {
                 })
                 .collect();
             summaries.push(self.summarize(cell, &rs));
+            extras.push(self.extras_for(ci, &cell, &rs));
         }
-        summaries
+        (summaries, extras)
     }
 
     /// Adaptive-replica path: re-dispatch `spec.replicas`-sized batches
@@ -855,7 +924,11 @@ impl CampaignEngine {
     /// up front (enumeration order), and replica `i` of a cell is always
     /// the `i`-th split of that master — identical for every worker
     /// count and every stopping trajectory.
-    fn run_adaptive(&self, spec: &CampaignSpec, target: f64) -> Vec<CellSummary> {
+    fn run_adaptive(
+        &self,
+        spec: &CampaignSpec,
+        target: f64,
+    ) -> (Vec<CellSummary>, Vec<CellExtras>) {
         let cells = spec.cells();
         // SEM needs ≥ 2 samples, so both floor at 2; beyond that the cap
         // wins — a `max_replicas` below the batch size clamps the batch
@@ -873,10 +946,16 @@ impl CampaignEngine {
             for &ci in &active {
                 let take = batch.min(cap - samples[ci].len());
                 for _ in 0..take {
+                    // Replica 0 of a cell is the first task it ever
+                    // dispatches — its sample list is still empty and
+                    // no task for it exists in this batch yet.
+                    let first = samples[ci].is_empty()
+                        && !tasks.iter().any(|t: &Task| t.cell_idx == ci);
                     tasks.push(Task {
                         cell_idx: ci,
                         cell: cells[ci],
                         rng: cell_masters[ci].split(),
+                        trace: if first { self.trace_path_for(ci) } else { None },
                     });
                 }
             }
@@ -898,10 +977,28 @@ impl CampaignEngine {
         }
 
         let mut summaries = Vec::with_capacity(cells.len());
+        let mut extras = Vec::with_capacity(cells.len());
         for (ci, &cell) in cells.iter().enumerate() {
             summaries.push(self.summarize(cell, &samples[ci]));
+            extras.push(self.extras_for(ci, &cell, &samples[ci]));
         }
-        summaries
+        (summaries, extras)
+    }
+
+    /// Per-cell [`CellExtras`]: wall-clock summed over the cell's
+    /// replicas, plus the trace path when the engine traced replica 0.
+    /// Slotted cells record no path — the slotted abstraction has no
+    /// packet-level events, so `run_replica` never opens the file.
+    fn extras_for(&self, cell_idx: usize, cell: &CellSpec, rs: &[ReplicaResult]) -> CellExtras {
+        let traceable = !matches!(cell.workload, WorkloadSpec::Slotted { .. });
+        CellExtras {
+            wall_s: rs.iter().map(|r| r.wall_s).sum(),
+            trace_path: if traceable {
+                self.trace_path_for(cell_idx).map(|p| p.display().to_string())
+            } else {
+                None
+            },
+        }
     }
 
     /// Fan one batch of replica tasks over the pool; results come back
@@ -910,7 +1007,13 @@ impl CampaignEngine {
         WorkQueue::map_chunked(tasks, self.chunk_size.max(1), self.workers, |chunk| {
             chunk
                 .iter()
-                .map(|t| (t.cell_idx, run_replica(&t.cell, t.rng.clone())))
+                .map(|t| {
+                    let t0 = Instant::now();
+                    let mut r =
+                        run_replica(&t.cell, t.rng.clone(), t.trace.as_deref());
+                    r.wall_s = t0.elapsed().as_secs_f64();
+                    (t.cell_idx, r)
+                })
                 .collect()
         })
     }
@@ -1076,7 +1179,16 @@ fn build_topology(cell: &CellSpec, n_nodes: usize, rng: &mut Rng) -> Topology {
 }
 
 /// Execute one replica of one cell with its own pre-split rng stream.
-fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
+/// When `trace_path` is set (DES-backed cells only), an
+/// [`crate::obs::FileSink`] records the run as `lbsp-trace/v1` JSONL —
+/// without perturbing the simulation: the hooks read values the run
+/// already computed. `wall_s` is left 0.0 for the dispatch wrapper to
+/// stamp.
+fn run_replica(
+    cell: &CellSpec,
+    mut rng: Rng,
+    trace_path: Option<&Path>,
+) -> ReplicaResult {
     if let WorkloadSpec::Slotted { w_s, supersteps, tau_s, .. } = cell.workload {
         // Same rounding as CellSpec::phase_packets — keep in sync.
         let c = cell.phase_packets() as u64;
@@ -1129,6 +1241,7 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
             p_lo: f64::NAN,
             p_hi: f64::NAN,
             hist: run.rounds_hist,
+            wall_s: 0.0,
         };
     }
 
@@ -1144,6 +1257,15 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
         .with_copies(cell.k)
         .with_policy(cell.policy)
         .with_scheme(cell.scheme.build());
+    if let Some(path) = trace_path {
+        match FileSink::create(path) {
+            Ok(sink) => rt = rt.with_trace(Box::new(sink)),
+            // A failed trace file must not fail the replica — the
+            // simulation result is the product, the trace a side
+            // artifact. Run untraced and say so.
+            Err(e) => eprintln!("lbsp: trace {} failed: {e}", path.display()),
+        }
+    }
     if let ScenarioSpec::Shift { at, to_p } = cell.scenario {
         rt = rt.with_loss_schedule(PiecewiseStationary::step_change(cell.p, at, to_p));
     }
@@ -1192,6 +1314,7 @@ fn run_replica(cell: &CellSpec, mut rng: Rng) -> ReplicaResult {
         p_lo,
         p_hi,
         hist: run.rounds_hist,
+        wall_s: 0.0,
     }
 }
 

@@ -33,8 +33,8 @@ pub mod queue;
 pub mod sweep;
 
 pub use campaign::{
-    CampaignEngine, CampaignSpec, CellSpec, CellSummary, LossSpec, RhoCache, ScenarioSpec,
-    Spread, TopologySpec, WorkloadSpec,
+    CampaignEngine, CampaignSpec, CellExtras, CellSpec, CellSummary, LossSpec, RhoCache,
+    ScenarioSpec, Spread, TopologySpec, WorkloadSpec,
 };
 pub use queue::WorkQueue;
 pub use sweep::{Backend, SweepCoordinator, SweepMetrics};

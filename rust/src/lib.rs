@@ -15,6 +15,9 @@
 //!   (k-copy / blast+retransmit / FEC parity / TCP-like baseline —
 //!   [`net::scheme`]), plus the slotted *rounds* simulator that
 //!   matches the paper's stochastic abstraction exactly.
+//! * [`obs`] — structured run tracing (typed events, pluggable sinks,
+//!   `lbsp-trace/v1` JSONL artifacts) and the metrics registry
+//!   snapshotted into every `ReplicaRun`.
 //! * [`measure`] — the synthetic PlanetLab measurement campaign (Figs 1–3).
 //! * [`model`] — the analytic library: conceptual model (§II), L-BSP (§III),
 //!   optimal packet copies (§IV), dominating terms (Table I) and the §V
@@ -64,6 +67,7 @@ pub mod coordinator;
 pub mod measure;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod simcore;

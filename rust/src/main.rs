@@ -28,10 +28,18 @@
 //!                 (k axis = scheme parameter: copies | retransmit
 //!                  budget | parity group size; tcplike ignores it;
 //!                  non-kcopy schemes need a packet-level workload)
+//!               [--trace-first-replica]         write replica-0 lbsp-trace/v1
+//!                                               JSONLs under <out>-traces/
 //!               Monte-Carlo campaign grid (worker-count invariant)
-//! lbsp diff <baseline.json> <candidate.json> [--threshold Z]
+//! lbsp trace [--workload synthetic|matmul|sort|fft|laplace] [--nodes N]
+//!            [--p P] [--burst B] [--k K] [--scheme S] [--adapt A] [--seed S]
+//!            [--out trace.jsonl]
+//!               run one traced replica: superstep timeline on stdout
+//!               (decisions, per-round loss, retunes) + lbsp-trace/v1 JSONL
+//! lbsp diff <baseline.json> <candidate.json> [--threshold Z] [--json]
 //!               flag speedup-mean regressions beyond Z combined sigma
-//!               (exit 1 on regression — CI-usable)
+//!               (exit 1 on regression — CI-usable; --json emits the
+//!               machine-readable verdict instead of the table)
 //! ```
 //!
 //! The `pjrt` backend loads the AOT artifacts from `./artifacts`
@@ -40,7 +48,7 @@
 // Same conscious lint posture as the library crate (see rust/src/lib.rs).
 #![allow(clippy::too_many_arguments)]
 
-use lbsp::adapt::{AdaptSpec, EstimatorSpec};
+use lbsp::adapt::{AdaptSpec, CostModel, EstimatorSpec};
 use lbsp::bsp::BspRuntime;
 use lbsp::coordinator::{
     CampaignEngine, CampaignSpec, LossSpec, ScenarioSpec, SweepCoordinator, WorkloadSpec,
@@ -55,6 +63,7 @@ use lbsp::net::rounds::estimate_rho;
 use lbsp::net::scheme::SchemeSpec;
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::Network;
+use lbsp::obs::{write_trace_jsonl, MemorySink, TraceEvent};
 use lbsp::report;
 use lbsp::runtime::Runtime;
 use lbsp::util::cfg::Config;
@@ -555,15 +564,38 @@ fn cmd_campaign(args: &Args) {
             spec.max_replicas
         ),
     }
-    let engine = CampaignEngine::new(workers);
+    let mut engine = CampaignEngine::new(workers);
+    if args.flag("trace-first-replica") {
+        // Traces land next to the artifact (<out stem>-traces/) or, with
+        // no --out, under ./lbsp-traces/.
+        let dir = match args.get("out") {
+            Some(out) => {
+                let p = std::path::Path::new(out);
+                let stem = p
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "campaign".to_string());
+                p.with_file_name(format!("{stem}-traces"))
+            }
+            None => std::path::PathBuf::from("lbsp-traces"),
+        };
+        std::fs::create_dir_all(&dir)
+            .unwrap_or_else(|e| panic!("--trace-first-replica: {}: {e}", dir.display()));
+        eprintln!("[tracing replica 0 of each cell under {}]", dir.display());
+        engine = engine.with_trace_dir(dir);
+    }
     let t0 = std::time::Instant::now();
-    let summaries = engine.run(&spec);
+    let (summaries, extras) = engine.run_with_extras(&spec);
     let dt = t0.elapsed().as_secs_f64();
     print_artifacts(&[report::campaign_table(&summaries)], args.flag("csv"));
     if let Some(out) = args.get("out") {
-        let (json_path, csv_path) =
-            report::write_campaign(std::path::Path::new(out), &spec, &summaries)
-                .unwrap_or_else(|e| panic!("--out {out}: {e}"));
+        let (json_path, csv_path) = report::write_campaign_with_extras(
+            std::path::Path::new(out),
+            &spec,
+            &summaries,
+            &extras,
+        )
+        .unwrap_or_else(|e| panic!("--out {out}: {e}"));
         eprintln!(
             "[artifacts: {} + {}]",
             json_path.display(),
@@ -579,10 +611,199 @@ fn cmd_campaign(args: &Args) {
     );
 }
 
+/// One traced replica of one cell: run a DES workload with a
+/// [`MemorySink`] attached, print the superstep timeline (controller
+/// decisions, per-round wire deltas, retunes, outcome), and persist the
+/// events as an `lbsp-trace/v1` JSONL. The trace hooks only read values
+/// the run already computed, so the simulated result is bitwise
+/// identical to the untraced run at the same seed.
+fn cmd_trace(args: &Args) {
+    let o = Opts::new(args, "trace");
+    let workload_name = o.str("workload", "synthetic");
+    if workload_name == "slotted" {
+        eprintln!("trace: the slotted abstraction has no packet-level events; \
+                   pick a DES workload (synthetic|matmul|sort|fft|laplace)");
+        std::process::exit(2);
+    }
+    let (workload, _) = campaign_workload(&workload_name, &o);
+    let n = o.usize("nodes", 8);
+    let p = o.f64("p", 0.1);
+    let k = o.usize("k", 2) as u32;
+    let seed = o.usize("seed", 0x9_CA4B) as u64;
+    let burst = o.f64("burst", 0.0); // 0 → iid Bernoulli loss
+    let scheme = SchemeSpec::parse(&o.str("scheme", "kcopy"))
+        .unwrap_or_else(|e| panic!("--scheme: {e}"));
+    // campaign_adapts returns [Static] or [Static, <policy>]; the trace
+    // runs the configured policy, not the comparison grid.
+    let adapt = campaign_adapts(&o, &[k]).pop().unwrap();
+    let out = o.str("out", "lbsp-trace.jsonl");
+
+    let mut rng = Rng::new(seed);
+    let wl = workload.instantiate(n, &mut rng);
+    let n_nodes = wl.n_nodes();
+    let link = Link::from_mbytes(40.0, 0.07);
+    let topo = if burst > 0.0 {
+        Topology::uniform_bursty(n_nodes, link, p, burst)
+    } else {
+        Topology::uniform(n_nodes, link, p)
+    };
+    let net = Network::new(topo, rng.next_u64());
+    let mut rt = BspRuntime::new(net)
+        .with_copies(k)
+        .with_scheme(scheme.build())
+        .with_trace(Box::new(MemorySink::new()));
+    if !adapt.is_static() {
+        let model = CostModel {
+            c: wl.phase_packets().max(1.0),
+            n: n_nodes.max(1) as f64,
+            alpha: link.alpha(wl.packet_bytes()),
+            beta: link.rtt_s,
+        };
+        if let Some(a) = adapt.build_for(model, n_nodes, scheme) {
+            rt = rt.with_adaptive(a);
+        }
+    }
+    println!(
+        "trace: workload={} n={n_nodes} p={p} k={k} scheme={} adapt={} loss={} seed={seed}",
+        wl.label(),
+        scheme.label(),
+        adapt.label(),
+        if burst > 0.0 { format!("ge(burst={burst})") } else { "iid".into() },
+    );
+    let run = wl.run_replica(&mut rt);
+    let sink = rt.take_trace().expect("trace sink was attached");
+    let events = sink.events().expect("MemorySink retains events").to_vec();
+
+    for ev in &events {
+        match ev {
+            TraceEvent::SuperstepBegin { step } => println!("step {step}:"),
+            TraceEvent::Decision {
+                scheme, copies_min, copies_max, copies_mean, p_hat, ess, ..
+            } => {
+                let est = if p_hat.is_finite() {
+                    format!(" p_hat={} ess={}", fmt_num(*p_hat), fmt_num(*ess))
+                } else {
+                    String::new()
+                };
+                println!(
+                    "  decision: scheme={scheme} k=[{copies_min}..{copies_max}] \
+                     mean={}{est}",
+                    fmt_num(*copies_mean),
+                );
+            }
+            TraceEvent::PhaseRound {
+                phase, round, data_sent, data_delivered, acks_sent, lost, unacked, ..
+            } => println!(
+                "    phase {phase} round {round}: sent={data_sent} \
+                 delivered={data_delivered} lost={lost} acks={acks_sent} \
+                 unacked={unacked}"
+            ),
+            TraceEvent::EstimatorUpdate { pairs, p_hat, ess, .. } => println!(
+                "  estimator: pairs={} p_hat={} ess={}",
+                pairs.len(),
+                fmt_num(*p_hat),
+                fmt_num(*ess)
+            ),
+            TraceEvent::Retune { step, mean_loss } => {
+                println!("  retune @ step {step}: mean_loss={}", fmt_num(*mean_loss));
+            }
+            TraceEvent::SuperstepEnd { rounds, phase_s, step_s, completed, .. } => {
+                println!(
+                    "  end: rounds={rounds} phase_s={} step_s={} completed={completed}",
+                    fmt_num(*phase_s),
+                    fmt_num(*step_s)
+                );
+            }
+            TraceEvent::RunEnd { steps, total_rounds, total_time_s, outcome } => println!(
+                "run: outcome={outcome} steps={steps} rounds={total_rounds} time_s={}",
+                fmt_num(*total_time_s)
+            ),
+        }
+    }
+    println!(
+        "replica: speedup={} validated={} rng_draws={} touched_pairs={}",
+        fmt_num(run.speedup()),
+        run.validated,
+        run.metrics.net_rng_draws,
+        run.metrics.touched_pairs
+    );
+    let out_path = std::path::Path::new(&out);
+    write_trace_jsonl(out_path, &events)
+        .unwrap_or_else(|e| panic!("--out {out}: {e}"));
+    eprintln!("[{} events -> {}]", events.len(), out_path.display());
+}
+
+/// Machine-readable `lbsp diff --json` verdict (schema `lbsp-diff/v1`):
+/// the match/skip counts plus every flagged cell with its z-score.
+/// Non-finite floats (the ±∞ z of a deterministic-cell change) emit as
+/// `null`, the repo-wide JSON convention; the boolean verdict and the
+/// exit code are unaffected.
+fn diff_json(d: &report::CampaignDiff, threshold: f64) -> String {
+    fn jnum(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x:?}")
+        } else {
+            "null".into()
+        }
+    }
+    fn jstr(s: &str) -> String {
+        let escaped: String = s
+            .chars()
+            .flat_map(|c| match c {
+                '"' => vec!['\\', '"'],
+                '\\' => vec!['\\', '\\'],
+                '\n' => vec!['\\', 'n'],
+                c => vec![c],
+            })
+            .collect();
+        format!("\"{escaped}\"")
+    }
+    let deltas = |ds: &[lbsp::report::diff::CellDelta]| {
+        let rows: Vec<String> = ds
+            .iter()
+            .map(|c| {
+                format!(
+                    concat!(
+                        "{{\"cell\":{},\"mean_a\":{},\"mean_b\":{},",
+                        "\"sem_a\":{},\"sem_b\":{},\"z\":{}}}"
+                    ),
+                    jstr(&c.key),
+                    jnum(c.mean_a),
+                    jnum(c.mean_b),
+                    jnum(c.sem_a),
+                    jnum(c.sem_b),
+                    jnum(c.z),
+                )
+            })
+            .collect();
+        format!("[{}]", rows.join(","))
+    };
+    format!(
+        concat!(
+            "{{\"schema\":\"lbsp-diff/v1\",\"threshold\":{},",
+            "\"matched\":{},\"only_in_a\":{},\"only_in_b\":{},",
+            "\"skipped_nonfinite\":{},\"duplicate_keys\":{},",
+            "\"has_regressions\":{},",
+            "\"regressions\":{},\"improvements\":{}}}\n"
+        ),
+        jnum(threshold),
+        d.matched,
+        d.only_in_a,
+        d.only_in_b,
+        d.skipped_nonfinite,
+        d.duplicate_keys,
+        d.has_regressions(),
+        deltas(&d.regressions),
+        deltas(&d.improvements),
+    )
+}
+
 fn cmd_diff(args: &Args) {
     let (Some(path_a), Some(path_b)) = (args.positional.get(1), args.positional.get(2))
     else {
-        eprintln!("usage: lbsp diff <baseline.json> <candidate.json> [--threshold Z]");
+        eprintln!(
+            "usage: lbsp diff <baseline.json> <candidate.json> [--threshold Z] [--json]"
+        );
         std::process::exit(2);
     };
     let threshold: f64 = args.get_parsed_or("threshold", 3.0f64);
@@ -604,7 +825,11 @@ fn cmd_diff(args: &Args) {
     let baseline = read(path_a);
     let candidate = read(path_b);
     let d = report::diff_campaigns(&baseline, &candidate, threshold);
-    report::diff_table(&d, threshold).print();
+    if args.flag("json") {
+        print!("{}", diff_json(&d, threshold));
+    } else {
+        report::diff_table(&d, threshold).print();
+    }
     if d.has_regressions() {
         eprintln!(
             "diff: {} speedup regression(s) beyond {threshold} combined sigma",
@@ -615,7 +840,7 @@ fn cmd_diff(args: &Args) {
 }
 
 const USAGE: &str =
-    "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign|diff> [options]
+    "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign|trace|diff> [options]
   (see `rust/src/main.rs` doc header for details)";
 
 fn main() {
@@ -629,6 +854,7 @@ fn main() {
         Some("simval") => cmd_simval(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("campaign") => cmd_campaign(&args),
+        Some("trace") => cmd_trace(&args),
         Some("diff") => cmd_diff(&args),
         _ => {
             eprintln!("{USAGE}");

@@ -23,6 +23,7 @@
 use super::packet::{NodeId, Packet, PacketKind};
 use super::scheme::{KCopy, ReliabilityScheme};
 use super::transport::{NetEvent, Network};
+use crate::obs::{TraceEvent, TraceSink};
 
 /// Retransmission discipline for lost packets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -229,6 +230,22 @@ pub fn run_phase_scheme(
     scheme: &dyn ReliabilityScheme,
     params: Option<&[u32]>,
 ) -> PhaseReport {
+    run_phase_scheme_traced(net, transfers, cfg, scheme, params, None)
+}
+
+/// [`run_phase_scheme`] with an optional trace hook: when `trace` is
+/// `Some`, one [`TraceEvent::PhaseRound`] is recorded per synchronized
+/// round (per-round `NetStats` deltas + transfers still unacked). The
+/// `None` path is the exact pre-hook protocol — no allocation, no rng
+/// draws, no reordering (pinned by `tests/trace_invariance.rs`).
+pub fn run_phase_scheme_traced(
+    net: &mut Network,
+    transfers: &[Transfer],
+    cfg: &PhaseConfig,
+    scheme: &dyn ReliabilityScheme,
+    params: Option<&[u32]>,
+    mut trace: Option<&mut dyn TraceSink>,
+) -> PhaseReport {
     assert!(cfg.copies >= 1, "scheme parameter must be >= 1");
     if let Some(vs) = params {
         assert_eq!(vs.len(), transfers.len(), "one copy count per transfer");
@@ -345,6 +362,10 @@ pub fn run_phase_scheme(
         net.arm_timer(0, tag(phase, round), cfg.timeout_s);
     };
 
+    // Wire counters at the start of the in-flight round; only the
+    // traced path reads or refreshes it (a stack `Copy`, no side
+    // effects on the disabled path).
+    let mut round_stats0 = net.stats;
     send_round(net, &unacked, round, &mut parity);
 
     let mut ack_batch: Vec<Packet> = Vec::new();
@@ -416,6 +437,20 @@ pub fn run_phase_scheme(
                 if n_unacked == 0 {
                     break;
                 }
+                if let Some(t) = trace.as_mut() {
+                    let d = net.stats;
+                    t.record(&TraceEvent::PhaseRound {
+                        phase,
+                        round,
+                        data_sent: d.data_sent - round_stats0.data_sent,
+                        data_delivered: d.data_delivered - round_stats0.data_delivered,
+                        acks_sent: d.acks_sent - round_stats0.acks_sent,
+                        lost: d.lost - round_stats0.lost,
+                        wire_bytes: d.bytes_sent - round_stats0.bytes_sent,
+                        unacked: n_unacked as u64,
+                    });
+                    round_stats0 = d;
+                }
                 round += 1;
                 if round as u32 >= cfg.max_rounds {
                     return PhaseReport {
@@ -431,6 +466,22 @@ pub fn run_phase_scheme(
                 send_round(net, &unacked, round, &mut parity);
             }
         }
+    }
+
+    // The final (in-flight) round never expires through the Timer arm —
+    // the loop exits on the last ack — so its delta is emitted here.
+    if let Some(t) = trace.as_mut() {
+        let d = net.stats;
+        t.record(&TraceEvent::PhaseRound {
+            phase,
+            round,
+            data_sent: d.data_sent - round_stats0.data_sent,
+            data_delivered: d.data_delivered - round_stats0.data_delivered,
+            acks_sent: d.acks_sent - round_stats0.acks_sent,
+            lost: d.lost - round_stats0.lost,
+            wire_bytes: d.bytes_sent - round_stats0.bytes_sent,
+            unacked: n_unacked as u64,
+        });
     }
 
     let rounds = (round + 1) as u32;

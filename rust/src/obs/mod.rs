@@ -1,0 +1,533 @@
+//! obs — structured run tracing and the metrics registry.
+//!
+//! The paper's control loop (estimate p̂ → re-choose the scheme
+//! parameter → pay the wire) is observable only through scalar
+//! summaries (`StepReport`, `ReplicaRun`): *why* a run behaved as it
+//! did — what each estimator believed, what each controller decided,
+//! what the wire actually carried per round — is invisible. This module
+//! is the visibility layer:
+//!
+//! * [`TraceEvent`] — the typed per-run event vocabulary (superstep
+//!   begin/end, per-round wire deltas, controller decisions with their
+//!   cost-model scores, estimator updates, loss-schedule retunes, run
+//!   outcome).
+//! * [`TraceSink`] — the object-safe consumer contract. [`NoopSink`]
+//!   discards, [`MemorySink`] retains (inspectable through
+//!   [`TraceSink::events`] without downcasting), [`FileSink`] streams
+//!   `lbsp-trace/v1` JSONL (hand-emitted — the artifact idiom of
+//!   `report::artifacts`; `util::json` parses it back, no serde).
+//! * [`MetricsRegistry`] — one queryable snapshot of the counters that
+//!   previously lived ad hoc on `Rng`/`Network` (rng draws, touched
+//!   pairs, wire counters), `Copy` so it rides inside `ReplicaRun`.
+//!
+//! ## Overhead budget
+//!
+//! Emission points sit on the runtime's hot path, so the disabled path
+//! is the contract: every hook is gated on an `Option` that is `None`
+//! by default, and a disabled run performs **no allocation, no rng
+//! draws, and no branching beyond the `Option` check** — it is
+//! bitwise-identical to a build without the hooks (pinned by
+//! `tests/trace_invariance.rs`). With a sink attached, events are
+//! built only from values the runtime already computed; the
+//! `NoopSink`-attached path must stay within 2% of the disabled path
+//! (asserted by the `trace_overhead` section of
+//! `benches/protocol_schemes.rs`).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::net::transport::Network;
+use crate::util::stats::LogHist;
+
+/// Schema tag of the JSONL trace artifact (first line of every file).
+pub const TRACE_SCHEMA: &str = "lbsp-trace/v1";
+
+/// One structured event in a run's trace. All payloads are values the
+/// runtime computed anyway — building an event never draws rng state or
+/// perturbs control flow, which is what keeps traced runs
+/// bitwise-identical to untraced ones.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A superstep is starting (before local compute).
+    SuperstepBegin { step: u64 },
+    /// The duplication decision for this superstep's phase, as the
+    /// transport will consume it: the realized per-transfer copy
+    /// envelope (exactly `StepReport::copies_min/max/mean`), the
+    /// estimator state it was solved against (NaN for static cells),
+    /// and the cost-model score of every candidate parameter
+    /// `v ∈ 1..=k_max` (index 0 ↔ v = 1; empty when no cost model is
+    /// attached).
+    Decision {
+        step: u64,
+        /// Active reliability scheme label ("kcopy", "blast", …).
+        scheme: &'static str,
+        copies_min: u32,
+        copies_max: u32,
+        copies_mean: f64,
+        /// Aggregate loss estimate the decision saw (NaN when static).
+        p_hat: f64,
+        /// ~95% interval around `p_hat` (NaNs when static).
+        interval: (f64, f64),
+        /// Effective sample size behind the estimate (NaN when static).
+        ess: f64,
+        /// `cost(v)` per candidate parameter, from the controller's
+        /// `CostModel` at `p_hat` (non-finite values serialize as null).
+        scores: Vec<f64>,
+    },
+    /// One synchronized retransmission round of a phase completed:
+    /// wire-count deltas over the round, from `NetStats` snapshots.
+    /// `phase` is the transport's global phase id (ties rounds to the
+    /// enclosing superstep by event order).
+    PhaseRound {
+        phase: u64,
+        round: u64,
+        data_sent: u64,
+        data_delivered: u64,
+        acks_sent: u64,
+        lost: u64,
+        wire_bytes: u64,
+        /// Transfers still unacknowledged when the round expired
+        /// (0 on the final round of a completed phase).
+        unacked: u64,
+    },
+    /// The estimator bank absorbed this superstep's per-pair wire
+    /// deltas.
+    EstimatorUpdate {
+        step: u64,
+        /// `(pair id, lost, sent)` per touched pair this superstep.
+        pairs: Vec<(u64, u64, u64)>,
+        /// Aggregate estimate after the update.
+        p_hat: f64,
+        /// Effective sample size after the update.
+        ess: f64,
+    },
+    /// A loss-schedule segment was applied to the network.
+    Retune { step: u64, mean_loss: f64 },
+    /// A superstep finished (after the barrier accounting).
+    SuperstepEnd {
+        step: u64,
+        rounds: u32,
+        phase_s: f64,
+        step_s: f64,
+        completed: bool,
+    },
+    /// The run ended.
+    RunEnd {
+        steps: u64,
+        total_rounds: u64,
+        total_time_s: f64,
+        /// "converged" | "ran_all_supersteps" | "aborted".
+        outcome: &'static str,
+    },
+}
+
+/// Consumer of [`TraceEvent`]s. Object-safe and `Send` so a boxed sink
+/// can ride inside `BspRuntime` across campaign worker threads.
+pub trait TraceSink: Send {
+    /// Record one event. Called only from hook sites that already hold
+    /// the event's payload values — implementations must not assume
+    /// anything about call frequency beyond "in run order".
+    fn record(&mut self, ev: &TraceEvent);
+
+    /// The recorded events, when the sink retains them in memory
+    /// (`MemorySink`); `None` for streaming/discarding sinks. Lets
+    /// callers inspect a `Box<dyn TraceSink>` without downcasting.
+    fn events(&self) -> Option<&[TraceEvent]> {
+        None
+    }
+
+    /// Flush buffered output (no-op for in-memory sinks).
+    fn flush(&mut self) {}
+}
+
+/// The default sink: discards everything. Exists so "tracing wired but
+/// disabled" is expressible as an attached sink (the overhead bench
+/// compares it against the detached path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn record(&mut self, _ev: &TraceEvent) {}
+}
+
+/// Retains every event in memory — the inspection sink for tests and
+/// the `lbsp trace` timeline renderer.
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    events: Vec<TraceEvent>,
+}
+
+impl MemorySink {
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+
+    /// Drop all recorded events (the overhead bench reuses one sink
+    /// across timed iterations so retention can't skew the timing).
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+}
+
+impl TraceSink for MemorySink {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.events.push(ev.clone());
+    }
+
+    fn events(&self) -> Option<&[TraceEvent]> {
+        Some(&self.events)
+    }
+}
+
+/// Streams events as `lbsp-trace/v1` JSONL: one header line
+/// `{"schema":"lbsp-trace/v1"}` then one object per event, hand-emitted
+/// in the `report::artifacts` idiom (floats via `{:?}`, non-finite →
+/// null) so `util::json` round-trips every line.
+pub struct FileSink {
+    out: std::io::BufWriter<std::fs::File>,
+    path: PathBuf,
+}
+
+impl FileSink {
+    /// Create/truncate `path` and write the schema header line.
+    pub fn create(path: &Path) -> std::io::Result<FileSink> {
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(out, "{{\"schema\":\"{TRACE_SCHEMA}\"}}")?;
+        Ok(FileSink { out, path: path.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl TraceSink for FileSink {
+    fn record(&mut self, ev: &TraceEvent) {
+        // Write errors cannot panic the simulation mid-run; the final
+        // flush (or drop) surfaces a broken disk soon enough.
+        let _ = writeln!(self.out, "{}", event_json(ev));
+    }
+
+    fn flush(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// Serialize a whole event list as one `lbsp-trace/v1` JSONL file —
+/// what `lbsp trace` uses after collecting events in a [`MemorySink`].
+pub fn write_trace_jsonl(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    let mut sink = FileSink::create(path)?;
+    for ev in events {
+        sink.record(ev);
+    }
+    sink.out.flush()
+}
+
+/// JSON number: full-precision `{:?}` floats (round-trip exact through
+/// `util::json`), non-finite as null — the artifact-layer convention.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// One event as a single-line JSON object (`"ev"` names the variant).
+pub fn event_json(ev: &TraceEvent) -> String {
+    match ev {
+        TraceEvent::SuperstepBegin { step } => {
+            format!("{{\"ev\":\"superstep_begin\",\"step\":{step}}}")
+        }
+        TraceEvent::Decision {
+            step,
+            scheme,
+            copies_min,
+            copies_max,
+            copies_mean,
+            p_hat,
+            interval,
+            ess,
+            scores,
+        } => {
+            let scores: Vec<String> = scores.iter().map(|&s| jnum(s)).collect();
+            format!(
+                concat!(
+                    "{{\"ev\":\"decision\",\"step\":{},\"scheme\":\"{}\",",
+                    "\"copies_min\":{},\"copies_max\":{},\"copies_mean\":{},",
+                    "\"p_hat\":{},\"interval\":[{},{}],\"ess\":{},\"scores\":[{}]}}"
+                ),
+                step,
+                scheme,
+                copies_min,
+                copies_max,
+                jnum(*copies_mean),
+                jnum(*p_hat),
+                jnum(interval.0),
+                jnum(interval.1),
+                jnum(*ess),
+                scores.join(","),
+            )
+        }
+        TraceEvent::PhaseRound {
+            phase,
+            round,
+            data_sent,
+            data_delivered,
+            acks_sent,
+            lost,
+            wire_bytes,
+            unacked,
+        } => format!(
+            concat!(
+                "{{\"ev\":\"phase_round\",\"phase\":{},\"round\":{},",
+                "\"data_sent\":{},\"data_delivered\":{},\"acks_sent\":{},",
+                "\"lost\":{},\"wire_bytes\":{},\"unacked\":{}}}"
+            ),
+            phase, round, data_sent, data_delivered, acks_sent, lost, wire_bytes, unacked,
+        ),
+        TraceEvent::EstimatorUpdate { step, pairs, p_hat, ess } => {
+            let pairs: Vec<String> = pairs
+                .iter()
+                .map(|&(pair, lost, sent)| format!("[{pair},{lost},{sent}]"))
+                .collect();
+            format!(
+                "{{\"ev\":\"estimator_update\",\"step\":{},\"pairs\":[{}],\"p_hat\":{},\"ess\":{}}}",
+                step,
+                pairs.join(","),
+                jnum(*p_hat),
+                jnum(*ess),
+            )
+        }
+        TraceEvent::Retune { step, mean_loss } => format!(
+            "{{\"ev\":\"retune\",\"step\":{},\"mean_loss\":{}}}",
+            step,
+            jnum(*mean_loss)
+        ),
+        TraceEvent::SuperstepEnd { step, rounds, phase_s, step_s, completed } => format!(
+            concat!(
+                "{{\"ev\":\"superstep_end\",\"step\":{},\"rounds\":{},",
+                "\"phase_s\":{},\"step_s\":{},\"completed\":{}}}"
+            ),
+            step,
+            rounds,
+            jnum(*phase_s),
+            jnum(*step_s),
+            completed,
+        ),
+        TraceEvent::RunEnd { steps, total_rounds, total_time_s, outcome } => format!(
+            concat!(
+                "{{\"ev\":\"run_end\",\"steps\":{},\"total_rounds\":{},",
+                "\"total_time_s\":{},\"outcome\":\"{}\"}}"
+            ),
+            steps,
+            total_rounds,
+            jnum(*total_time_s),
+            outcome,
+        ),
+    }
+}
+
+/// One queryable snapshot of the counters that previously lived ad hoc
+/// on `Rng` and `Network` (`Rng::draws` via `Network::rng_draws`,
+/// `n_touched_pairs`, the `NetStats` wire counters) plus the pooled
+/// per-phase round histogram. `Copy` + fixed-size so it rides inside
+/// `workloads::ReplicaRun` without breaking its `Copy` contract; the
+/// o(packets) draw-count assertions (`tests/batched_draws.rs`) read the
+/// same sources, so this is a fold, not a migration — the original
+/// accessors stay.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsRegistry {
+    /// Raw 64-bit PRNG outputs the network consumed (`Rng::draws` of
+    /// the transport's stream — the quantity the batched-draw
+    /// optimizations bound at o(packets)).
+    pub net_rng_draws: u64,
+    /// Directed pairs that ever carried traffic (O(touched), not n²).
+    pub touched_pairs: u64,
+    /// Wire-level data packets sent (copies count individually).
+    pub data_packets_sent: u64,
+    /// Data packets that survived the loss process.
+    pub data_packets_delivered: u64,
+    /// Wire-level ack packets sent.
+    pub acks_sent: u64,
+    /// Packets the loss process dropped (data + acks).
+    pub packets_lost: u64,
+    /// Total bytes put on the wire (data + acks, all copies).
+    pub wire_bytes_sent: u64,
+    /// Per-phase round counts in the fixed log₂ bins.
+    pub rounds_hist: LogHist,
+}
+
+impl MetricsRegistry {
+    /// Snapshot a network's counters (the histogram starts empty — the
+    /// runtime merges per-phase round counts in as it runs).
+    pub fn from_network(net: &Network) -> MetricsRegistry {
+        MetricsRegistry {
+            net_rng_draws: net.rng_draws(),
+            touched_pairs: net.n_touched_pairs() as u64,
+            data_packets_sent: net.stats.data_sent,
+            data_packets_delivered: net.stats.data_delivered,
+            acks_sent: net.stats.acks_sent,
+            packets_lost: net.stats.lost,
+            wire_bytes_sent: net.stats.bytes_sent,
+            rounds_hist: LogHist::new(),
+        }
+    }
+
+    /// The scalar counters as a named, iterable surface (for tables and
+    /// ad-hoc queries; the histogram is exposed as `rounds_hist`).
+    pub fn counters(&self) -> [(&'static str, u64); 7] {
+        [
+            ("net_rng_draws", self.net_rng_draws),
+            ("touched_pairs", self.touched_pairs),
+            ("data_packets_sent", self.data_packets_sent),
+            ("data_packets_delivered", self.data_packets_delivered),
+            ("acks_sent", self.acks_sent),
+            ("packets_lost", self.packets_lost),
+            ("wire_bytes_sent", self.wire_bytes_sent),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::SuperstepBegin { step: 0 },
+            TraceEvent::Decision {
+                step: 0,
+                scheme: "kcopy",
+                copies_min: 1,
+                copies_max: 3,
+                copies_mean: 1.75,
+                p_hat: 0.0625,
+                interval: (0.03125, 0.125),
+                ess: 24.0,
+                scores: vec![0.5, 0.25, f64::INFINITY],
+            },
+            TraceEvent::PhaseRound {
+                phase: 7,
+                round: 0,
+                data_sent: 24,
+                data_delivered: 20,
+                acks_sent: 20,
+                lost: 4,
+                wire_bytes: 49_152,
+                unacked: 4,
+            },
+            TraceEvent::EstimatorUpdate {
+                step: 0,
+                pairs: vec![(1, 0, 4), (6, 2, 8)],
+                p_hat: 0.125,
+                ess: 12.0,
+            },
+            TraceEvent::Retune { step: 3, mean_loss: 0.3 },
+            TraceEvent::SuperstepEnd {
+                step: 0,
+                rounds: 2,
+                phase_s: 0.5,
+                step_s: 0.625,
+                completed: true,
+            },
+            TraceEvent::RunEnd {
+                steps: 4,
+                total_rounds: 9,
+                total_time_s: 2.5,
+                outcome: "ran_all_supersteps",
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips_through_util_json() {
+        for ev in sample_events() {
+            let line = event_json(&ev);
+            let parsed = Json::parse(&line)
+                .unwrap_or_else(|e| panic!("unparseable {line}: {e}"));
+            assert!(
+                parsed.get("ev").and_then(Json::as_str).is_some(),
+                "missing ev tag in {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn decision_json_is_bitwise_exact_and_nulls_nonfinite() {
+        let ev = TraceEvent::Decision {
+            step: 2,
+            scheme: "fec",
+            copies_min: 2,
+            copies_max: 4,
+            copies_mean: 2.0 + 1.0 / 3.0,
+            p_hat: f64::NAN,
+            interval: (f64::NAN, f64::NAN),
+            ess: f64::NAN,
+            scores: vec![0.1, f64::INFINITY],
+        };
+        let parsed = Json::parse(&event_json(&ev)).unwrap();
+        // Finite floats round-trip bitwise through the {:?} emission
+        // (pinned by util::json's own tests).
+        let mean = parsed.get("copies_mean").and_then(Json::as_f64).unwrap();
+        assert_eq!(mean.to_bits(), (2.0f64 + 1.0 / 3.0).to_bits());
+        assert!(parsed.get("p_hat").unwrap().is_null());
+        assert!(parsed.get("interval").unwrap().as_arr().unwrap()[0].is_null());
+        let scores = parsed.get("scores").unwrap().as_arr().unwrap();
+        assert_eq!(scores[0].as_f64(), Some(0.1));
+        assert!(scores[1].is_null(), "infinite cost must serialize as null");
+    }
+
+    #[test]
+    fn sink_contract_noop_discards_memory_retains() {
+        let evs = sample_events();
+        let mut noop = NoopSink;
+        let mut mem = MemorySink::new();
+        for ev in &evs {
+            noop.record(ev);
+            mem.record(ev);
+        }
+        assert!(TraceSink::events(&noop).is_none());
+        assert_eq!(TraceSink::events(&mem), Some(evs.as_slice()));
+        mem.clear();
+        assert_eq!(TraceSink::events(&mem), Some(&[][..]));
+    }
+
+    #[test]
+    fn file_sink_writes_header_then_one_json_line_per_event() {
+        let evs = sample_events();
+        let path = std::env::temp_dir()
+            .join(format!("lbsp-obs-test-{}.jsonl", std::process::id()));
+        write_trace_jsonl(&path, &evs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), evs.len() + 1);
+        let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("schema").and_then(Json::as_str), Some(TRACE_SCHEMA));
+        for (line, ev) in lines[1..].iter().zip(&evs) {
+            assert_eq!(*line, event_json(ev));
+            Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn metrics_registry_is_copy_and_queryable() {
+        let m = MetricsRegistry {
+            net_rng_draws: 10,
+            touched_pairs: 3,
+            data_packets_sent: 24,
+            data_packets_delivered: 20,
+            acks_sent: 20,
+            packets_lost: 4,
+            wire_bytes_sent: 1024,
+            rounds_hist: LogHist::new(),
+        };
+        let copy = m; // Copy: ReplicaRun embeds it by value.
+        assert_eq!(copy, m);
+        let counters = m.counters();
+        assert_eq!(counters[0], ("net_rng_draws", 10));
+        assert!(counters.iter().any(|&(name, v)| name == "wire_bytes_sent" && v == 1024));
+    }
+}

@@ -4,7 +4,7 @@
 //! No serde is vendored, so both formats are emitted by hand against a
 //! frozen schema (documented in `ROADMAP.md`):
 //!
-//! * **JSON** (`lbsp-campaign/v4`) — one object with the full grid spec
+//! * **JSON** (`lbsp-campaign/v5`) — one object with the full grid spec
 //!   (every axis incl. the `scenarios` loss-environment axis, the
 //!   `schemes` reliability-mechanism axis and the `adapts`
 //!   duplication-control axis, replication policy, seed), the
@@ -19,11 +19,15 @@
 //!   slotted cells), the per-link `k_spread` /
 //!   `p_hat_spread` `{min, mean, max}` blocks (v3; `p_hat_spread` is
 //!   `null` on static cells), the pooled per-phase `rounds_hist`
-//!   counts, and the analytic ρ̂ / S_E predictions. Non-finite floats
-//!   serialize as `null` (JSON has no NaN). v1–v3 artifacts remain
-//!   readable — see `report::diff` (missing `scenario` reads as
-//!   `stationary`, missing `scheme` as `kcopy`, missing `adapt` as
-//!   `static`).
+//!   counts, and the analytic ρ̂ / S_E predictions. v5 adds two
+//!   *optional, additive* per-cell keys: `wall_s` (host wall-clock
+//!   summed over the cell's replicas — nondeterministic bookkeeping,
+//!   emitted by [`write_campaign_with_extras`]) and `trace_path` (the
+//!   replica-0 `lbsp-trace/v1` JSONL, present only under
+//!   `--trace-first-replica`). Non-finite floats serialize as `null`
+//!   (JSON has no NaN). v1–v4 artifacts remain readable — see
+//!   `report::diff` (missing `scenario` reads as `stationary`, missing
+//!   `scheme` as `kcopy`, missing `adapt` as `static`).
 //! * **CSV** — the same cells flattened to one row each, full-precision
 //!   floats (`{:?}` round-trip formatting), for spreadsheet/pandas use
 //!   (histogram counts stay JSON-only).
@@ -34,16 +38,22 @@
 use std::io;
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::{CampaignSpec, CellSummary, Spread};
+use crate::coordinator::{CampaignSpec, CellExtras, CellSummary, Spread};
 use crate::util::stats::{LogHist, Summary};
 
 /// Schema tag stamped into every JSON artifact; bump on layout changes.
-pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v4";
+/// v5 is additive over v4: per-cell `wall_s` (host wall-clock summed
+/// over the cell's replicas — nondeterministic, hence outside
+/// `CellSummary`) and, under `--trace-first-replica`, `trace_path`
+/// (the replica-0 `lbsp-trace/v1` JSONL). JSON-only; the CSV column
+/// set is unchanged.
+pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v5";
 
 /// Older schema tags, still accepted by the artifact reader.
 pub const CAMPAIGN_SCHEMA_V1: &str = "lbsp-campaign/v1";
 pub const CAMPAIGN_SCHEMA_V2: &str = "lbsp-campaign/v2";
 pub const CAMPAIGN_SCHEMA_V3: &str = "lbsp-campaign/v3";
+pub const CAMPAIGN_SCHEMA_V4: &str = "lbsp-campaign/v4";
 
 /// JSON number: round-trip float formatting, `null` for NaN/±∞.
 fn jnum(x: f64) -> String {
@@ -103,8 +113,31 @@ fn summary_json(s: &Summary) -> String {
 }
 
 /// The full JSON artifact: grid spec + one object per cell, in
-/// [`CampaignSpec::cells`] order.
+/// [`CampaignSpec::cells`] order. Without extras the v5 `wall_s` /
+/// `trace_path` keys are omitted — they are additive and every reader
+/// treats them as optional.
 pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
+    campaign_json_inner(spec, cells, None)
+}
+
+/// [`campaign_json`] plus the per-cell v5 extras: `wall_s` always,
+/// `trace_path` when the engine traced the cell's replica 0.
+/// `extras` must parallel `cells` (both in [`CampaignSpec::cells`]
+/// order, as returned by `CampaignEngine::run_with_extras`).
+pub fn campaign_json_with_extras(
+    spec: &CampaignSpec,
+    cells: &[CellSummary],
+    extras: &[CellExtras],
+) -> String {
+    assert_eq!(cells.len(), extras.len(), "extras must parallel cells");
+    campaign_json_inner(spec, cells, Some(extras))
+}
+
+fn campaign_json_inner(
+    spec: &CampaignSpec,
+    cells: &[CellSummary],
+    extras: Option<&[CellExtras]>,
+) -> String {
     let spec_json = format!(
         concat!(
             "{{\"workloads\":{},\"ns\":{},\"ps\":{},\"ks\":{},",
@@ -130,7 +163,20 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
 
     let cell_objs: Vec<String> = cells
         .iter()
-        .map(|s| {
+        .enumerate()
+        .map(|(ci, s)| {
+            // The additive v5 tail: absent entirely when the caller has
+            // no extras, `trace_path` absent when the cell was untraced.
+            let extra_tail = match extras.map(|e| &e[ci]) {
+                None => String::new(),
+                Some(e) => {
+                    let mut t = format!(",\"wall_s\":{}", jnum(e.wall_s));
+                    if let Some(p) = &e.trace_path {
+                        t.push_str(&format!(",\"trace_path\":{}", jstr(p)));
+                    }
+                    t
+                }
+            };
             format!(
                 concat!(
                     "{{\"workload\":{},\"topology\":{},\"loss\":{},\"policy\":{},",
@@ -141,7 +187,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
                     "\"wire_bytes_per_payload\":{},",
                     "\"k_chosen\":{},\"k_spread\":{},\"p_hat\":{},\"p_hat_spread\":{},",
                     "\"rounds_hist\":{},",
-                    "\"rho_pred\":{},\"speedup_pred\":{}}}"
+                    "\"rho_pred\":{},\"speedup_pred\":{}{}}}"
                 ),
                 jstr(&s.cell.workload.label()),
                 jstr(s.cell.topology.label()),
@@ -178,6 +224,7 @@ pub fn campaign_json(spec: &CampaignSpec, cells: &[CellSummary]) -> String {
                 jarr(&s.rounds_hist.counts, |c| c.to_string()),
                 jnum(s.rho_pred),
                 s.speedup_pred.map(jnum).unwrap_or_else(|| "null".into()),
+                extra_tail,
             )
         })
         .collect();
@@ -317,12 +364,36 @@ pub fn write_campaign(
     spec: &CampaignSpec,
     cells: &[CellSummary],
 ) -> io::Result<(PathBuf, PathBuf)> {
+    write_campaign_inner(json_path, spec, cells, None)
+}
+
+/// [`write_campaign`] with the v5 per-cell extras (`wall_s`,
+/// `trace_path`) in the JSON; the CSV is byte-identical either way.
+pub fn write_campaign_with_extras(
+    json_path: &Path,
+    spec: &CampaignSpec,
+    cells: &[CellSummary],
+    extras: &[CellExtras],
+) -> io::Result<(PathBuf, PathBuf)> {
+    write_campaign_inner(json_path, spec, cells, Some(extras))
+}
+
+fn write_campaign_inner(
+    json_path: &Path,
+    spec: &CampaignSpec,
+    cells: &[CellSummary],
+    extras: Option<&[CellExtras]>,
+) -> io::Result<(PathBuf, PathBuf)> {
     let json_path = json_path.to_path_buf();
     let mut csv_path = json_path.with_extension("csv");
     if csv_path == json_path {
         csv_path = json_path.with_extension("summary.csv");
     }
-    std::fs::write(&json_path, campaign_json(spec, cells))?;
+    let json = match extras {
+        None => campaign_json(spec, cells),
+        Some(e) => campaign_json_with_extras(spec, cells, e),
+    };
+    std::fs::write(&json_path, json)?;
     std::fs::write(&csv_path, campaign_csv(cells))?;
     Ok((json_path, csv_path))
 }
@@ -354,7 +425,10 @@ mod tests {
     fn json_has_schema_spec_and_all_cells() {
         let (spec, cells) = small_run();
         let j = campaign_json(&spec, &cells);
-        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v4\""));
+        assert!(j.starts_with("{\"schema\":\"lbsp-campaign/v5\""));
+        // The extras-less writer omits the additive v5 cell keys.
+        assert!(!j.contains("\"wall_s\""));
+        assert!(!j.contains("\"trace_path\""));
         assert!(j.contains("\"rounds_hist_edges\":[0,2,4,8,"));
         assert!(j.contains("\"spec\":{\"workloads\":[\"synthetic(r=2,m=2)\"]"));
         assert!(j.contains("\"scenarios\":[\"stationary\"]"));

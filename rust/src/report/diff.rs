@@ -1,7 +1,7 @@
 //! Cross-PR campaign artifact differ (`lbsp diff a.json b.json`).
 //!
-//! Reads two persisted campaign artifacts (schema `lbsp-campaign/v4`,
-//! or v1–v3 files from older PRs — a missing `adapt` coordinate
+//! Reads two persisted campaign artifacts (schema `lbsp-campaign/v5`,
+//! or v1–v4 files from older PRs — a missing `adapt` coordinate
 //! defaults to `static`, a missing `scenario` to `stationary`, a
 //! missing `scheme` to `kcopy`, so old baselines keep matching the
 //! cells that existed when they were written), matches cells on their
@@ -60,7 +60,9 @@ fn req_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str, String> {
 }
 
 /// Parse an artifact out of a [`Json`] document; accepts the current
-/// `lbsp-campaign/v4` schema and the v1–v3 layouts of earlier PRs.
+/// `lbsp-campaign/v5` schema and the v1–v4 layouts of earlier PRs
+/// (the differ only reads the coordinate/speedup subset, which the v5
+/// additive keys never touch).
 pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
     let schema = doc
         .get("schema")
@@ -70,6 +72,7 @@ pub fn read_campaign(doc: &Json) -> Result<CampaignArtifact, String> {
         && schema != super::artifacts::CAMPAIGN_SCHEMA_V1
         && schema != super::artifacts::CAMPAIGN_SCHEMA_V2
         && schema != super::artifacts::CAMPAIGN_SCHEMA_V3
+        && schema != super::artifacts::CAMPAIGN_SCHEMA_V4
     {
         return Err(format!("unsupported schema {schema:?}"));
     }
@@ -529,10 +532,10 @@ mod tests {
     }
 
     #[test]
-    fn v2_artifacts_key_as_stationary_kcopy_and_match_v4_cells() {
+    fn v2_artifacts_key_as_stationary_kcopy_and_match_current_cells() {
         // A v2 cell (no scenario, no scheme field) must key to
-        // |stationary|kcopy| and match the v4 cell at the same
-        // coordinates.
+        // |stationary|kcopy| and match the current-schema cell at the
+        // same coordinates.
         let v2 = r#"{"schema":"lbsp-campaign/v2",
             "cells":[{"workload":"synthetic(r=2,m=2)","topology":"uniform",
                       "loss":"iid","policy":"Selective","adapt":"static",
@@ -546,10 +549,10 @@ mod tests {
 
         let s = spec(4);
         let cells = CampaignEngine::new(1).run(&s);
-        let v4 = read_campaign_str(&campaign_json(&s, &cells)).unwrap();
-        assert_eq!(v4.schema, "lbsp-campaign/v4");
-        assert_eq!(v4.cells[0].key, art.cells[0].key);
-        let d = diff_campaigns(&art, &v4, 1e9);
+        let v5 = read_campaign_str(&campaign_json(&s, &cells)).unwrap();
+        assert_eq!(v5.schema, "lbsp-campaign/v5");
+        assert_eq!(v5.cells[0].key, art.cells[0].key);
+        let d = diff_campaigns(&art, &v5, 1e9);
         assert_eq!(d.matched, 1);
         assert_eq!(d.only_in_b, 1, "the k=2 cell has no v2 counterpart");
     }

@@ -63,6 +63,7 @@ pub use synthetic::SyntheticExchange;
 
 use crate::bsp::{BspRuntime, RunReport};
 use crate::net::transport::NetStats;
+use crate::obs::MetricsRegistry;
 use crate::runtime::Runtime;
 use crate::util::stats::LogHist;
 
@@ -137,6 +138,11 @@ pub struct ReplicaRun {
     /// Per-phase round counts in the fixed log₂ campaign bins (one
     /// sample per superstep).
     pub rounds_hist: LogHist,
+    /// The runtime's end-of-run counter snapshot (rng draws, touched
+    /// pairs, wire counters, round histogram) — the queryable surface
+    /// that absorbed the ad-hoc `Rng::draws`/`Network::rng_draws`
+    /// instrumentation (see [`crate::obs::MetricsRegistry`]).
+    pub metrics: MetricsRegistry,
 }
 
 impl ReplicaRun {
@@ -195,6 +201,7 @@ impl ReplicaRun {
             k_lo,
             k_hi,
             rounds_hist,
+            metrics: rep.metrics,
         }
     }
 

@@ -1,0 +1,199 @@
+//! The observability layer's core contracts (ISSUE 8):
+//!
+//! 1. **Bitwise invariance** — attaching a trace sink (Noop or Memory)
+//!    must not perturb the simulation: a seeded GE-bursty adaptive
+//!    laplace replica produces a bitwise-identical [`ReplicaRun`]
+//!    (incl. the metrics registry's rng-draw counters) traced or not.
+//!    The hooks only *read* values the run already computed.
+//! 2. **Decision fidelity** — the per-superstep `Decision` events carry
+//!    exactly the realized `copies_min`/`copies_max`/`copies_mean` that
+//!    land in the [`StepReport`]s, so the run's k envelope reconstructs
+//!    from the trace alone.
+//! 3. **JSONL well-formedness** — `write_trace_jsonl` output parses
+//!    line-by-line through the in-tree `util::json` parser (the
+//!    `lbsp-trace/v1` header first, one tagged event object per line).
+
+use lbsp::adapt::{AdaptSpec, CostModel, EstimatorSpec};
+use lbsp::bsp::BspRuntime;
+use lbsp::coordinator::WorkloadSpec;
+use lbsp::net::link::Link;
+use lbsp::net::scheme::SchemeSpec;
+use lbsp::net::topology::Topology;
+use lbsp::net::transport::Network;
+use lbsp::obs::{write_trace_jsonl, MemorySink, NoopSink, TraceEvent, TraceSink, TRACE_SCHEMA};
+use lbsp::util::json::Json;
+use lbsp::util::prng::Rng;
+use lbsp::workloads::{laplace, ComputeBackend, ReplicaRun};
+
+/// One GE-bursty adaptive laplace replica, exactly as the campaign
+/// engine's DES path builds it, with an optional trace sink attached.
+/// Every rng draw comes from the same seeded stream regardless of
+/// tracing, so any divergence in the returned report is the trace
+/// layer's fault.
+fn replica(trace: Option<Box<dyn TraceSink>>) -> (ReplicaRun, Option<Box<dyn TraceSink>>) {
+    let mut rng = Rng::new(0xBEEF_CAFE);
+    let spec = WorkloadSpec::Laplace { h: 8, w: 16, sweeps: 6 };
+    let wl = spec.instantiate(4, &mut rng);
+    let n_nodes = wl.n_nodes();
+    let link = Link::from_mbytes(40.0, 0.07);
+    let topo = Topology::uniform_bursty(n_nodes, link, 0.12, 8.0);
+    let net = Network::new(topo, rng.next_u64());
+    let scheme = SchemeSpec::parse("kcopy").unwrap();
+    let mut rt = BspRuntime::new(net).with_copies(1).with_scheme(scheme.build());
+    let model = CostModel {
+        c: wl.phase_packets().max(1.0),
+        n: n_nodes.max(1) as f64,
+        alpha: link.alpha(wl.packet_bytes()),
+        beta: link.rtt_s,
+    };
+    let adapt = AdaptSpec::greedy(4, EstimatorSpec::Beta { strength: 2.0, p0: 0.1 });
+    rt = rt.with_adaptive(adapt.build_for(model, n_nodes, scheme).unwrap());
+    if let Some(sink) = trace {
+        rt = rt.with_trace(sink);
+    }
+    let run = wl.run_replica(&mut rt);
+    (run, rt.take_trace())
+}
+
+#[test]
+fn trace_sinks_leave_the_run_bitwise_identical() {
+    let (base, none) = replica(None);
+    assert!(none.is_none(), "no sink attached, none to take back");
+    let (noop, _) = replica(Some(Box::new(NoopSink::default())));
+    let (mem, sink) = replica(Some(Box::new(MemorySink::new())));
+
+    // ReplicaRun derives Debug with `{:?}` float formatting, which is
+    // round-trip exact — Debug-string equality is bitwise equality for
+    // every counter, float and histogram in the report, including the
+    // metrics registry's rng-draw and touched-pair counters.
+    let want = format!("{base:?}");
+    assert_eq!(want, format!("{noop:?}"), "NoopSink perturbed the run");
+    assert_eq!(want, format!("{mem:?}"), "MemorySink perturbed the run");
+
+    // And the memory trace actually recorded the run it didn't perturb.
+    let sink = sink.expect("sink handed back");
+    let events = sink.events().expect("MemorySink retains events");
+    assert!(!events.is_empty());
+    assert!(matches!(events[0], TraceEvent::SuperstepBegin { step: 0 }));
+    assert!(matches!(events[events.len() - 1], TraceEvent::RunEnd { .. }));
+}
+
+#[test]
+fn decision_events_reproduce_step_reports_exactly() {
+    // Drive the raw runtime (not the DistWorkload wrapper) so the
+    // RunReport's StepReports are in hand to compare against.
+    let mut rng = Rng::new(404);
+    let p_nodes = 4usize;
+    let (h, w, sweeps) = (8usize, 16usize, 6usize);
+    let rows = p_nodes * (h - 2) + 2;
+    let g: Vec<f32> = (0..rows * w).map(|_| rng.f64() as f32).collect();
+    let mut prog =
+        laplace::JacobiGrid::from_global(&g, p_nodes, h, w, sweeps, ComputeBackend::Native);
+    let link = Link::from_mbytes(40.0, 0.07);
+    let net = Network::new(
+        Topology::uniform_bursty(p_nodes, link, 0.12, 8.0),
+        rng.next_u64(),
+    );
+    let scheme = SchemeSpec::parse("kcopy").unwrap();
+    let mut rt = BspRuntime::new(net).with_copies(1).with_scheme(scheme.build());
+    let model = CostModel {
+        c: (2 * (p_nodes - 1)) as f64,
+        n: p_nodes as f64,
+        alpha: link.alpha(1024),
+        beta: link.rtt_s,
+    };
+    let adapt = AdaptSpec::greedy(4, EstimatorSpec::Beta { strength: 2.0, p0: 0.1 });
+    rt = rt.with_adaptive(adapt.build_for(model, p_nodes, scheme).unwrap());
+    rt = rt.with_trace(Box::new(MemorySink::new()));
+    let rep = rt.run(&mut prog);
+    let sink = rt.take_trace().unwrap();
+
+    let decisions: Vec<&TraceEvent> = sink
+        .events()
+        .unwrap()
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Decision { .. }))
+        .collect();
+    // One decision per superstep — the StepReport is pushed on every
+    // loop iteration (abort included), so the streams are always 1:1.
+    assert_eq!(decisions.len(), rep.steps.len());
+
+    let (mut ev_lo, mut ev_hi) = (u32::MAX, 0u32);
+    let (mut step_lo, mut step_hi) = (u32::MAX, 0u32);
+    for (ev, step) in decisions.iter().zip(&rep.steps) {
+        let TraceEvent::Decision {
+            step: ev_step,
+            copies_min,
+            copies_max,
+            copies_mean,
+            p_hat,
+            ..
+        } = ev
+        else {
+            unreachable!()
+        };
+        assert_eq!(*ev_step, step.step as u64);
+        assert_eq!(*copies_min, step.copies_min);
+        assert_eq!(*copies_max, step.copies_max);
+        assert_eq!(
+            copies_mean.to_bits(),
+            step.copies_mean.to_bits(),
+            "copies_mean must be bitwise exact"
+        );
+        assert!(p_hat.is_finite(), "adaptive runs always have an estimate");
+        if step.messages > 0 {
+            ev_lo = ev_lo.min(*copies_min);
+            ev_hi = ev_hi.max(*copies_max);
+            step_lo = step_lo.min(step.copies_min);
+            step_hi = step_hi.max(step.copies_max);
+        }
+    }
+    // The realized k envelope reconstructs from the trace alone.
+    assert_eq!((ev_lo, ev_hi), (step_lo, step_hi));
+    assert!(ev_hi >= ev_lo && ev_hi <= 4, "envelope within the controller's k_max");
+}
+
+#[test]
+fn trace_jsonl_roundtrips_through_util_json() {
+    let (_, sink) = replica(Some(Box::new(MemorySink::new())));
+    let sink = sink.unwrap();
+    let events = sink.events().unwrap();
+    assert!(!events.is_empty());
+
+    let path = std::env::temp_dir()
+        .join(format!("lbsp_trace_roundtrip_{}.jsonl", std::process::id()));
+    write_trace_jsonl(&path, events).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let mut lines = text.lines();
+    let header = Json::parse(lines.next().expect("header line")).unwrap();
+    assert_eq!(header.get("schema").and_then(Json::as_str), Some(TRACE_SCHEMA));
+    let mut parsed = 0usize;
+    let mut decisions = 0usize;
+    for line in lines {
+        let doc = Json::parse(line).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        let tag = doc.get("ev").and_then(Json::as_str).expect("tagged event");
+        assert!(
+            [
+                "superstep_begin",
+                "decision",
+                "phase_round",
+                "estimator_update",
+                "retune",
+                "superstep_end",
+                "run_end"
+            ]
+            .contains(&tag),
+            "unknown tag {tag:?}"
+        );
+        if tag == "decision" {
+            decisions += 1;
+            // Spot-check a float field survives the writer/parser pair.
+            assert!(doc.get("copies_mean").and_then(Json::as_f64).is_some());
+        }
+        parsed += 1;
+    }
+    assert_eq!(parsed, events.len(), "one JSONL line per recorded event");
+    assert!(decisions > 0, "an adaptive run records decisions");
+}

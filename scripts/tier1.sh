@@ -63,6 +63,36 @@ for acceptance_test in adapt_scenarios scheme_campaigns scale_smoke; do
     fi
 done
 
+# Observability smoke: the trace subcommand must produce a non-empty
+# lbsp-trace/v1 JSONL (header + at least one event line) for a bounded
+# n = 64 synthetic cell, and the bitwise-invariance suite must hold in
+# release mode too (the default `cargo test -q` above ran it in debug).
+# Same wall-clock guard idiom as the acceptance loop.
+echo "== trace smoke (release, bounded) =="
+cargo test -q --release --test trace_invariance
+trace_out="$(mktemp /tmp/lbsp-tier1-trace.XXXXXX.jsonl)"
+trace_cmd=(cargo run -q --release -- trace --workload synthetic --nodes 64 \
+    --p 0.1 --burst 8.0 --out "$trace_out")
+if command -v timeout >/dev/null 2>&1; then
+    timeout "${LBSP_SCENARIO_TIMEOUT_S:-900}" "${trace_cmd[@]}"
+else
+    "${trace_cmd[@]}"
+fi
+if [[ ! -s "$trace_out" ]]; then
+    echo "tier1: trace smoke wrote no JSONL to $trace_out" >&2
+    exit 1
+fi
+trace_lines=$(wc -l < "$trace_out")
+if (( trace_lines < 2 )); then
+    echo "tier1: trace JSONL has only $trace_lines line(s) — header but no events?" >&2
+    exit 1
+fi
+head -n 1 "$trace_out" | grep -q 'lbsp-trace/v1' || {
+    echo "tier1: trace JSONL header is not lbsp-trace/v1" >&2
+    exit 1
+}
+rm -f "$trace_out"
+
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets -- -D warnings =="
     # Tests/benches/examples are separate crates, so the conscious
