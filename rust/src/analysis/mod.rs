@@ -1,0 +1,259 @@
+//! `lbsp lint` — the in-tree contract linter.
+//!
+//! Static checks for the invariants every artifact in this repo rests
+//! on but that the compiler cannot see: determinism of the simulation
+//! modules (no hash iteration, no wall clocks, no OS entropy),
+//! `Option`-guarded trace emission (PR 8's bitwise-identical disabled
+//! path), Cargo-manifest registration of every test/bench/example
+//! target (the PR 7 silently-unbuilt bug), schema constants
+//! cross-checked against ROADMAP.md and the module READMEs, and RNG
+//! construction hygiene (split-tree streams only inside the
+//! deterministic core). See `rust/src/analysis/README.md` for the
+//! contract each rule guards and the waiver syntax.
+//!
+//! Dependency-free by construction (hand-rolled tokenizer in the
+//! spirit of `util::json` — no syn, no serde): the linter must run as
+//! a tier-1 gate on the same toolchain as the build itself.
+
+pub mod rules;
+pub mod tokenizer;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use rules::{
+    check_registration, check_schema_facts, schema_facts_from_sources, Finding, RuleId,
+    SchemaFacts, WAIVABLE_RULES,
+};
+use tokenizer::{parse_waivers, test_spans, tokenize};
+
+/// Result of a full-repo lint.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Every finding, waived or not, sorted by file then line.
+    pub findings: Vec<Finding>,
+    /// Number of `rust/src/**/*.rs` files scanned by the per-file rules.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn unwaived(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.waived.is_none()).collect()
+    }
+
+    pub fn waived_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived.is_some()).count()
+    }
+
+    /// Human-readable report: one `file:line: rule: message` per
+    /// unwaived finding, then a one-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in self.unwaived() {
+            out.push_str(&format!("{}:{}: {}: {}\n", f.file, f.line, f.rule.name(), f.message));
+        }
+        out.push_str(&format!(
+            "lbsp lint: {} finding(s), {} waived, {} files scanned\n",
+            self.unwaived().len(),
+            self.waived_count(),
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// Run the per-file rules (determinism, trace-gating, rng-hygiene) and
+/// the waiver machinery over one source file. `path` is repo-relative
+/// with `/` separators — it selects the rule scopes.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let toks = tokenize(src);
+    let spans = test_spans(&toks);
+    let mut findings = Vec::new();
+    findings.extend(rules::rule_determinism(path, &toks, &spans));
+    findings.extend(rules::rule_trace_gating(path, &toks, &spans));
+    findings.extend(rules::rule_rng_hygiene(path, &toks, &spans));
+
+    let (waivers, errors) = parse_waivers(src);
+    for e in errors {
+        findings.push(Finding {
+            rule: RuleId::WaiverSyntax,
+            file: path.to_string(),
+            line: e.line,
+            message: e.message,
+            waived: None,
+        });
+    }
+    for w in &waivers {
+        for r in &w.rules {
+            if !WAIVABLE_RULES.contains(&r.as_str()) {
+                findings.push(Finding {
+                    rule: RuleId::WaiverSyntax,
+                    file: path.to_string(),
+                    line: w.line,
+                    message: format!(
+                        "waiver names unknown rule `{r}` (known: {})",
+                        WAIVABLE_RULES.join(", ")
+                    ),
+                    waived: None,
+                });
+            }
+        }
+    }
+    // A waiver on line L covers findings on L (trailing comment) and
+    // L+1 (comment line above the flagged code). Waiver-syntax
+    // findings are never waivable.
+    for f in &mut findings {
+        if f.rule == RuleId::WaiverSyntax {
+            continue;
+        }
+        for w in &waivers {
+            if (f.line == w.line || f.line == w.line + 1)
+                && w.rules.iter().any(|r| r == f.rule.name())
+            {
+                f.waived = Some(w.reason.clone());
+            }
+        }
+    }
+    findings.sort_by(|a, b| a.line.cmp(&b.line).then_with(|| a.message.cmp(&b.message)));
+    findings
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    fs::read_to_string(root.join(rel)).map_err(|e| format!("read {rel}: {e}"))
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for a
+/// deterministic scan order (read_dir order is OS-dependent).
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Top-level `.rs` files of one target directory (`rust/tests`,
+/// `rust/benches`, `examples`), as sorted repo-relative paths. A
+/// missing directory is an empty list, not an error.
+fn list_targets(root: &Path, rel_dir: &str) -> Result<Vec<String>, String> {
+    let dir = root.join(rel_dir);
+    if !dir.is_dir() {
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::new();
+    let entries = fs::read_dir(&dir).map_err(|e| format!("read_dir {rel_dir}: {e}"))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {rel_dir}: {e}"))?;
+        let path = entry.path();
+        if path.extension().is_some_and(|x| x == "rs") {
+            if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+                out.push(format!("{rel_dir}/{name}"));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint the whole repository rooted at `root`: per-file rules over
+/// `rust/src/**/*.rs`, target registration against Cargo.toml, and the
+/// schema cross-check against ROADMAP.md and the obs README.
+pub fn lint_repo(root: &Path) -> Result<LintReport, String> {
+    let src_root = root.join("rust/src");
+    let mut files = Vec::new();
+    walk_rs(&src_root, &mut files)?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| format!("path {} not under root", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        findings.extend(lint_source(&rel, &src));
+    }
+
+    let cargo = read(root, "Cargo.toml")?;
+    let tests = list_targets(root, "rust/tests")?;
+    let benches = list_targets(root, "rust/benches")?;
+    let examples = list_targets(root, "examples")?;
+    findings.extend(check_registration(&cargo, &tests, &benches, &examples));
+
+    let artifacts = read(root, "rust/src/report/artifacts.rs")?;
+    let diff = read(root, "rust/src/report/diff.rs")?;
+    let obs = read(root, "rust/src/obs/mod.rs")?;
+    let roadmap = read(root, "ROADMAP.md")?;
+    let obs_readme = read(root, "rust/src/obs/README.md")?;
+    let (ta, td, tob) = (tokenize(&artifacts), tokenize(&diff), tokenize(&obs));
+    let obs_spans = test_spans(&tob);
+    let facts = schema_facts_from_sources(&ta, &td, &tob, &obs_spans);
+    findings.extend(check_schema_facts(&facts, &roadmap, &obs_readme));
+
+    findings.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(LintReport { findings, files_scanned: files.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waiver_suppresses_matching_rule_only() {
+        let src = "use std::collections::HashMap; \
+                   // lbsp-lint: allow(determinism) reason=\"fixture\"\n\
+                   use std::time::Instant;\n";
+        let f = lint_source("rust/src/net/rounds.rs", src);
+        // Line 1 HashMap waived (same line); line 2 Instant also
+        // covered (waiver reaches L+1) — both name `determinism`.
+        assert!(f.iter().all(|f| f.waived.is_some()), "{f:?}");
+        // A waiver for a different rule does not suppress.
+        let src = "// lbsp-lint: allow(rng-hygiene) reason=\"wrong rule\"\n\
+                   use std::collections::HashMap;\n";
+        let f = lint_source("rust/src/net/rounds.rs", src);
+        assert!(f.iter().any(|f| f.rule == RuleId::Determinism && f.waived.is_none()));
+    }
+
+    #[test]
+    fn unknown_rule_in_waiver_is_a_finding() {
+        let f = lint_source(
+            "rust/src/net/rounds.rs",
+            "// lbsp-lint: allow(no-such-rule) reason=\"typo\"\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::WaiverSyntax);
+    }
+
+    #[test]
+    fn reasonless_waiver_is_a_finding() {
+        let f = lint_source("rust/src/net/rounds.rs", "// lbsp-lint: allow(determinism)\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::WaiverSyntax);
+        assert!(f[0].message.contains("reason"));
+    }
+
+    #[test]
+    fn render_reports_file_line_rule() {
+        let report = LintReport {
+            findings: vec![Finding {
+                rule: RuleId::Determinism,
+                file: "rust/src/net/x.rs".into(),
+                line: 7,
+                message: "msg".into(),
+                waived: None,
+            }],
+            files_scanned: 1,
+        };
+        let text = report.render();
+        assert!(text.contains("rust/src/net/x.rs:7: determinism: msg"));
+        assert!(text.contains("1 finding(s), 0 waived"));
+    }
+}

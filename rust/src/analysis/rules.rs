@@ -1,0 +1,704 @@
+//! The five contract rules. Each is a pure function over the token
+//! stream (or over plain text for the manifest/doc checks) so the test
+//! suite can drive hit/miss/waiver cases from inline fixtures without
+//! touching the filesystem.
+
+use super::tokenizer::{Tok, TokKind};
+
+/// Rule identifiers; the string form is what waiver comments name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleId {
+    Determinism,
+    TraceGating,
+    TargetRegistration,
+    SchemaDrift,
+    RngHygiene,
+    /// Meta-rule: a malformed waiver (no reason, unknown rule name) is
+    /// itself a finding, and is never waivable.
+    WaiverSyntax,
+}
+
+impl RuleId {
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::Determinism => "determinism",
+            RuleId::TraceGating => "trace-gating",
+            RuleId::TargetRegistration => "target-registration",
+            RuleId::SchemaDrift => "schema-drift",
+            RuleId::RngHygiene => "rng-hygiene",
+            RuleId::WaiverSyntax => "waiver-syntax",
+        }
+    }
+}
+
+/// Rule names a waiver comment may legally reference.
+pub const WAIVABLE_RULES: &[&str] =
+    &["determinism", "trace-gating", "target-registration", "schema-drift", "rng-hygiene"];
+
+/// One lint finding. `waived` carries the waiver reason when an inline
+/// `// lbsp-lint: allow(…) reason="…"` covers the site.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    pub waived: Option<String>,
+}
+
+impl Finding {
+    fn new(rule: RuleId, file: &str, line: u32, message: String) -> Self {
+        Finding { rule, file: file.to_string(), line, message, waived: None }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule scopes. A file's scope is the first path segment under
+// `rust/src/`; `main.rs`/`lib.rs` and the `util`/`measure` trees are
+// out of scope (util hosts the bench timer and the property-test
+// driver, measure is the wall-clock harness by design).
+// ---------------------------------------------------------------------------
+
+/// Modules whose code feeds deterministic artifacts: no hashing
+/// collections, no wall clocks, no OS entropy (rule 1).
+pub const DET_SCOPE: &[&str] = &[
+    "adapt",
+    "analysis",
+    "bsp",
+    "collectives",
+    "coordinator",
+    "model",
+    "net",
+    "obs",
+    "report",
+    "runtime",
+    "simcore",
+    "workloads",
+];
+
+/// Modules where a `TraceSink` emission must sit under an `Option`
+/// guard (rule 2): the runtime and protocol hot paths PR 8 pinned to
+/// be bitwise-identical with tracing disabled.
+pub const TRACE_SCOPE: &[&str] = &["bsp", "net"];
+
+/// Modules where every `Rng` must descend from the campaign leader's
+/// split tree (rule 5). The coordinator and the measurement harness
+/// are the legitimate seeding roots and are excluded.
+pub const RNG_SCOPE: &[&str] =
+    &["adapt", "bsp", "collectives", "model", "net", "simcore", "workloads"];
+
+/// First path segment under `rust/src/`, or `None` for top-level files
+/// (`main.rs`, `lib.rs`) and files outside the source tree.
+pub fn module_of(path: &str) -> Option<&str> {
+    let rest = path.strip_prefix("rust/src/")?;
+    rest.split_once('/').map(|(first, _)| first)
+}
+
+fn in_test(spans: &[(usize, usize)], tok_idx: usize) -> bool {
+    spans.iter().any(|&(a, b)| tok_idx >= a && tok_idx <= b)
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: determinism
+// ---------------------------------------------------------------------------
+
+/// Identifiers banned in deterministic modules, with the reason shown
+/// in the finding. String/comment occurrences never reach here — the
+/// tokenizer already stripped them.
+const DET_BANNED: &[(&str, &str)] = &[
+    ("HashMap", "iteration order is nondeterministic; use BTreeMap or sort before emitting"),
+    ("HashSet", "iteration order is nondeterministic; use BTreeSet or sort before emitting"),
+    ("RandomState", "per-process hasher seeding is nondeterministic"),
+    ("Instant", "host wall-clock; simulated time must come from the DES clock"),
+    ("SystemTime", "host wall-clock; simulated time must come from the DES clock"),
+    ("thread_rng", "OS-entropy RNG; all randomness derives from the seeded split tree"),
+    ("from_entropy", "OS-entropy seeding; all randomness derives from the seeded split tree"),
+    ("getrandom", "OS entropy; all randomness derives from the seeded split tree"),
+];
+
+/// Flag banned identifiers in deterministic modules (non-test code).
+pub fn rule_determinism(path: &str, toks: &[Tok], spans: &[(usize, usize)]) -> Vec<Finding> {
+    let Some(module) = module_of(path) else { return Vec::new() };
+    if !DET_SCOPE.contains(&module) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut seen: Vec<(u32, &str)> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || in_test(spans, i) {
+            continue;
+        }
+        for &(name, why) in DET_BANNED {
+            if t.text == name && !seen.contains(&(t.line, name)) {
+                seen.push((t.line, name));
+                out.push(Finding::new(
+                    RuleId::Determinism,
+                    path,
+                    t.line,
+                    format!("`{name}` in deterministic module `{module}`: {why}"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: trace-gating
+// ---------------------------------------------------------------------------
+
+/// A block header guards tracing if it both matches on `Some`/checks
+/// `is_some` and mentions a trace handle — the `if let Some(t) =
+/// self.trace.as_mut() { … }` / `if trace.is_some() { … }` shapes the
+/// runtime uses. The check is deliberately syntactic: an emission the
+/// linter cannot see under a guard must be rewritten into one of those
+/// shapes (or waived), keeping PR 8's disabled-path bitwise contract
+/// auditable by grep.
+fn header_guards_trace(toks: &[Tok], header: &[usize]) -> bool {
+    let some = header
+        .iter()
+        .any(|&i| toks[i].is_ident("Some") || toks[i].is_ident("is_some"));
+    let trace = header.iter().any(|&i| {
+        toks[i].kind == TokKind::Ident && toks[i].text.to_ascii_lowercase().contains("trace")
+    });
+    some && trace
+}
+
+/// Flag `.record(` emission sites not enclosed by a guard block.
+pub fn rule_trace_gating(path: &str, toks: &[Tok], spans: &[(usize, usize)]) -> Vec<Finding> {
+    let Some(module) = module_of(path) else { return Vec::new() };
+    if !TRACE_SCOPE.contains(&module) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut frames: Vec<bool> = Vec::new();
+    let mut header: Vec<usize> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_punct('{') {
+            let guarded = header_guards_trace(toks, &header);
+            frames.push(guarded);
+            header.clear();
+        } else if t.is_punct('}') {
+            frames.pop();
+            header.clear();
+        } else if t.is_punct(';') {
+            header.clear();
+        } else {
+            if t.is_punct('.')
+                && toks.get(i + 1).is_some_and(|n| n.is_ident("record"))
+                && toks.get(i + 2).is_some_and(|n| n.is_punct('('))
+                && !in_test(spans, i)
+                && !frames.iter().any(|&g| g)
+            {
+                out.push(Finding::new(
+                    RuleId::TraceGating,
+                    path,
+                    t.line,
+                    "trace emission not under an `Option` guard: wrap in \
+                     `if let Some(t) = …trace…` / `if …trace….is_some()` so the \
+                     disabled path stays bitwise-identical"
+                        .to_string(),
+                ));
+            }
+            header.push(i);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: rng-hygiene
+// ---------------------------------------------------------------------------
+
+/// Flag `Rng::new(…)` in modules that must draw from split streams.
+pub fn rule_rng_hygiene(path: &str, toks: &[Tok], spans: &[(usize, usize)]) -> Vec<Finding> {
+    let Some(module) = module_of(path) else { return Vec::new() };
+    if !RNG_SCOPE.contains(&module) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].is_ident("Rng")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 3).is_some_and(|t| t.is_ident("new"))
+            && !in_test(spans, i)
+        {
+            out.push(Finding::new(
+                RuleId::RngHygiene,
+                path,
+                toks[i].line,
+                format!(
+                    "`Rng::new` in `{module}`: streams here must come from the \
+                     leader's `Rng::split()` tree so aggregates stay \
+                     worker-count-invariant"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: target-registration
+// ---------------------------------------------------------------------------
+
+/// `path = "…"` values declared under each `[[test]]`/`[[bench]]`/
+/// `[[example]]` section of Cargo.toml.
+fn declared_target_paths(cargo_toml: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for raw in cargo_toml.lines() {
+        let line = raw.trim();
+        if line.starts_with('[') {
+            section = line.to_string();
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("path") {
+            let rest = rest.trim_start();
+            if let Some(val) = rest.strip_prefix('=') {
+                let val = val.trim().trim_matches('"');
+                out.push((section.clone(), val.to_string()));
+            }
+        }
+    }
+    out
+}
+
+/// Every on-disk test/bench/example file must have a matching manifest
+/// entry — the PR 7 silently-unbuilt-target bug, made structural.
+pub fn check_registration(
+    cargo_toml: &str,
+    tests: &[String],
+    benches: &[String],
+    examples: &[String],
+) -> Vec<Finding> {
+    let declared = declared_target_paths(cargo_toml);
+    let mut out = Vec::new();
+    let mut require = |section: &str, files: &[String]| {
+        for f in files {
+            let found = declared.iter().any(|(s, p)| s == section && p == f);
+            if !found {
+                out.push(Finding::new(
+                    RuleId::TargetRegistration,
+                    f,
+                    1,
+                    format!(
+                        "no `{section}` entry in Cargo.toml declares `path = \"{f}\"` — \
+                         the target would silently never build"
+                    ),
+                ));
+            }
+        }
+    };
+    require("[[test]]", tests);
+    require("[[bench]]", benches);
+    require("[[example]]", examples);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: schema-drift
+// ---------------------------------------------------------------------------
+
+/// Schema constants extracted from source, cross-checked against the
+/// docs by [`check_schema_facts`].
+#[derive(Clone, Debug, Default)]
+pub struct SchemaFacts {
+    pub campaign_schema: Option<String>,
+    pub diff_schema: Option<String>,
+    pub trace_schema: Option<String>,
+    pub csv_base_header: Option<String>,
+    pub csv_summary_blocks: Vec<String>,
+    pub csv_spread_blocks: Vec<String>,
+    pub csv_columns: Option<u64>,
+    pub trace_tags: Vec<String>,
+}
+
+/// Value of `const NAME: &str = "…";` — the ident must be preceded by
+/// `const` so usage sites don't shadow the declaration.
+fn const_str(toks: &[Tok], name: &str) -> Option<String> {
+    let i = (1..toks.len()).find(|&i| toks[i].is_ident(name) && toks[i - 1].is_ident("const"))?;
+    toks[i..]
+        .iter()
+        .take_while(|t| !t.is_punct(';'))
+        .find(|t| t.kind == TokKind::Str)
+        .map(|t| t.text.clone())
+}
+
+/// Value of `const NAME: usize = <int>;`.
+fn const_num(toks: &[Tok], name: &str) -> Option<u64> {
+    let i = (1..toks.len()).find(|&i| toks[i].is_ident(name) && toks[i - 1].is_ident("const"))?;
+    toks[i..]
+        .iter()
+        .take_while(|t| !t.is_punct(';'))
+        .find(|t| t.kind == TokKind::Num)
+        .and_then(|t| t.text.parse().ok())
+}
+
+/// All string elements of `const NAME: [&str; N] = ["…", …];`.
+fn const_str_array(toks: &[Tok], name: &str) -> Vec<String> {
+    let Some(i) =
+        (1..toks.len()).find(|&i| toks[i].is_ident(name) && toks[i - 1].is_ident("const"))
+    else {
+        return Vec::new();
+    };
+    toks[i..]
+        .iter()
+        .take_while(|t| !t.is_punct(';'))
+        .filter(|t| t.kind == TokKind::Str)
+        .map(|t| t.text.clone())
+        .collect()
+}
+
+/// `"ev":"<tag>"` event tags found inside non-test string literals.
+fn trace_tags(toks: &[Tok], spans: &[(usize, usize)]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Str || in_test(spans, i) {
+            continue;
+        }
+        let mut rest = t.text.as_str();
+        while let Some(at) = rest.find("\"ev\":\"") {
+            rest = &rest[at + 6..];
+            if let Some(end) = rest.find('"') {
+                let tag = &rest[..end];
+                if !tag.is_empty() && !out.iter().any(|s| s == tag) {
+                    out.push(tag.to_string());
+                }
+                rest = &rest[end..];
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Extract the schema facts from the three source files that own them.
+pub fn schema_facts_from_sources(
+    artifacts_toks: &[Tok],
+    diff_toks: &[Tok],
+    obs_toks: &[Tok],
+    obs_spans: &[(usize, usize)],
+) -> SchemaFacts {
+    SchemaFacts {
+        campaign_schema: const_str(artifacts_toks, "CAMPAIGN_SCHEMA"),
+        diff_schema: const_str(diff_toks, "DIFF_SCHEMA"),
+        trace_schema: const_str(obs_toks, "TRACE_SCHEMA"),
+        csv_base_header: const_str(artifacts_toks, "CAMPAIGN_CSV_BASE_HEADER"),
+        csv_summary_blocks: const_str_array(artifacts_toks, "CAMPAIGN_CSV_SUMMARY_BLOCKS"),
+        csv_spread_blocks: const_str_array(artifacts_toks, "CAMPAIGN_CSV_SPREAD_BLOCKS"),
+        csv_columns: const_num(artifacts_toks, "CAMPAIGN_CSV_COLUMNS"),
+        trace_tags: trace_tags(obs_toks, obs_spans),
+    }
+}
+
+fn strip_ws(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Highest `lbsp-campaign/vN` version mentioned anywhere in `text`.
+fn max_campaign_version(text: &str) -> Option<u64> {
+    let mut best = None;
+    let needle = "lbsp-campaign/v";
+    let mut rest = text;
+    while let Some(at) = rest.find(needle) {
+        rest = &rest[at + needle.len()..];
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        if let Ok(v) = digits.parse::<u64>() {
+            best = Some(best.map_or(v, |b: u64| b.max(v)));
+        }
+    }
+    best
+}
+
+/// Cross-check the extracted facts against ROADMAP.md and the obs
+/// module README. Every mismatch — source constant absent from the
+/// docs, docs describing a version the source doesn't ship, or column
+/// arithmetic drifting from the pinned count — is a finding, so a doc
+/// edit that contradicts the code fails tier-1 the same way a code
+/// edit that contradicts the docs does.
+pub fn check_schema_facts(facts: &SchemaFacts, roadmap: &str, obs_readme: &str) -> Vec<Finding> {
+    const ARTIFACTS: &str = "rust/src/report/artifacts.rs";
+    const DIFF: &str = "rust/src/report/diff.rs";
+    const OBS: &str = "rust/src/obs/mod.rs";
+    const ROADMAP: &str = "ROADMAP.md";
+    const OBS_README: &str = "rust/src/obs/README.md";
+    let mut out = Vec::new();
+    let mut miss = |file: &str, msg: String| {
+        out.push(Finding::new(RuleId::SchemaDrift, file, 1, msg));
+    };
+
+    // Version tags: present in source, mentioned in the docs, and the
+    // docs never ahead of the source.
+    match &facts.campaign_schema {
+        None => miss(ARTIFACTS, "could not extract `CAMPAIGN_SCHEMA` const".into()),
+        Some(tag) => {
+            if !roadmap.contains(tag.as_str()) {
+                miss(ROADMAP, format!("campaign schema tag `{tag}` not documented in ROADMAP.md"));
+            }
+            let src_v = max_campaign_version(tag);
+            let doc_v = max_campaign_version(roadmap);
+            if let (Some(s), Some(d)) = (src_v, doc_v) {
+                if d > s {
+                    miss(
+                        ROADMAP,
+                        format!(
+                            "ROADMAP.md mentions `lbsp-campaign/v{d}` but the source \
+                             ships v{s} — docs are ahead of the schema"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    match &facts.diff_schema {
+        None => miss(DIFF, "could not extract `DIFF_SCHEMA` const".into()),
+        Some(tag) => {
+            if !roadmap.contains(tag.as_str()) {
+                miss(ROADMAP, format!("diff schema tag `{tag}` not documented in ROADMAP.md"));
+            }
+        }
+    }
+    match &facts.trace_schema {
+        None => miss(OBS, "could not extract `TRACE_SCHEMA` const".into()),
+        Some(tag) => {
+            if !roadmap.contains(tag.as_str()) {
+                miss(ROADMAP, format!("trace schema tag `{tag}` not documented in ROADMAP.md"));
+            }
+            if !obs_readme.contains(tag.as_str()) {
+                miss(OBS_README, format!("trace schema tag `{tag}` not in obs/README.md"));
+            }
+        }
+    }
+
+    // CSV layout: the pinned header and the column arithmetic.
+    match &facts.csv_base_header {
+        None => miss(ARTIFACTS, "could not extract `CAMPAIGN_CSV_BASE_HEADER` const".into()),
+        Some(header) => {
+            if !strip_ws(roadmap).contains(&strip_ws(header)) {
+                miss(
+                    ROADMAP,
+                    "campaign CSV base header differs from the one documented in \
+                     ROADMAP.md (whitespace-insensitive compare)"
+                        .into(),
+                );
+            }
+            let base = header.split(',').count() as u64;
+            let computed = base
+                + 7 * facts.csv_summary_blocks.len() as u64
+                + 3 * facts.csv_spread_blocks.len() as u64;
+            match facts.csv_columns {
+                None => {
+                    miss(ARTIFACTS, "could not extract `CAMPAIGN_CSV_COLUMNS` const".into())
+                }
+                Some(pinned) => {
+                    if pinned != computed {
+                        miss(
+                            ARTIFACTS,
+                            format!(
+                                "`CAMPAIGN_CSV_COLUMNS` is {pinned} but the header \
+                                 consts produce {computed} columns"
+                            ),
+                        );
+                    }
+                    if !roadmap.contains(&format!("{pinned} columns")) {
+                        miss(
+                            ROADMAP,
+                            format!(
+                                "ROADMAP.md does not pin the CSV at \"{pinned} columns\""
+                            ),
+                        );
+                    }
+                }
+            }
+            if facts.csv_summary_blocks.is_empty() || facts.csv_spread_blocks.is_empty() {
+                miss(
+                    ARTIFACTS,
+                    "could not extract the CSV block-name const arrays".into(),
+                );
+            }
+            for block in facts.csv_summary_blocks.iter().chain(&facts.csv_spread_blocks) {
+                if !roadmap.contains(block.as_str()) {
+                    miss(
+                        ROADMAP,
+                        format!("CSV column block `{block}` not documented in ROADMAP.md"),
+                    );
+                }
+            }
+        }
+    }
+
+    // Trace event tags: the wire-level names must be in both docs.
+    if facts.trace_tags.len() < 5 {
+        miss(
+            OBS,
+            format!(
+                "extracted only {} trace event tag(s) from obs/mod.rs — the \
+                 `\"ev\":\"…\"` extraction looks broken",
+                facts.trace_tags.len()
+            ),
+        );
+    }
+    for tag in &facts.trace_tags {
+        if !roadmap.contains(tag.as_str()) {
+            miss(ROADMAP, format!("trace event tag `{tag}` not documented in ROADMAP.md"));
+        }
+        if !obs_readme.contains(tag.as_str()) {
+            miss(OBS_README, format!("trace event tag `{tag}` not listed in obs/README.md"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tokenizer::{test_spans, tokenize};
+
+    fn run(rule: fn(&str, &[Tok], &[(usize, usize)]) -> Vec<Finding>, path: &str, src: &str)
+        -> Vec<Finding>
+    {
+        let toks = tokenize(src);
+        let spans = test_spans(&toks);
+        rule(path, &toks, &spans)
+    }
+
+    #[test]
+    fn determinism_flags_hashmap_in_scope() {
+        let f = run(
+            rule_determinism,
+            "rust/src/net/rounds.rs",
+            "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n",
+        );
+        assert_eq!(f.len(), 2, "{f:?}"); // one per line, deduped within a line
+        assert_eq!(f[0].line, 1);
+        assert_eq!(f[1].line, 2);
+    }
+
+    #[test]
+    fn determinism_ignores_out_of_scope_and_tests() {
+        assert!(run(rule_determinism, "rust/src/util/bench.rs", "use std::time::Instant;").is_empty());
+        assert!(run(rule_determinism, "rust/src/main.rs", "use std::time::Instant;").is_empty());
+        let test_only = "#[cfg(test)]\nmod tests { use std::collections::HashMap; }\n";
+        assert!(run(rule_determinism, "rust/src/net/rounds.rs", test_only).is_empty());
+    }
+
+    #[test]
+    fn trace_gating_accepts_guarded_and_flags_bare() {
+        let guarded = "
+            fn f(&mut self) {
+                if let Some(t) = self.trace.as_mut() {
+                    t.record(&ev);
+                }
+                if self.trace.is_some() {
+                    self.trace.as_mut().unwrap().record(&ev);
+                }
+            }
+        ";
+        assert!(run(rule_trace_gating, "rust/src/bsp/runtime.rs", guarded).is_empty());
+        let bare = "fn f(&mut self) { self.sink.record(&ev); }";
+        let f = run(rule_trace_gating, "rust/src/bsp/runtime.rs", bare);
+        assert_eq!(f.len(), 1);
+        // Out of scope: the same bare emission in `report/` is fine.
+        assert!(run(rule_trace_gating, "rust/src/report/diff.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn rng_hygiene_flags_new_outside_tests() {
+        let f = run(rule_rng_hygiene, "rust/src/net/tcp.rs", "fn f(s: u64) { let r = Rng::new(s); }");
+        assert_eq!(f.len(), 1);
+        let split = "fn f(r: &mut Rng) { let s = r.split(); }";
+        assert!(run(rule_rng_hygiene, "rust/src/net/tcp.rs", split).is_empty());
+        let test_only = "#[cfg(test)]\nmod tests { fn f() { let r = Rng::new(1); } }";
+        assert!(run(rule_rng_hygiene, "rust/src/net/tcp.rs", test_only).is_empty());
+        // The coordinator seeds legitimately.
+        assert!(run(rule_rng_hygiene, "rust/src/coordinator/campaign.rs", "let m = Rng::new(s);").is_empty());
+    }
+
+    #[test]
+    fn registration_requires_manifest_entries() {
+        let cargo = "[[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n";
+        let ok = check_registration(cargo, &["rust/tests/a.rs".into()], &[], &[]);
+        assert!(ok.is_empty());
+        let missing = check_registration(cargo, &["rust/tests/b.rs".into()], &[], &[]);
+        assert_eq!(missing.len(), 1);
+        assert_eq!(missing[0].file, "rust/tests/b.rs");
+        // A [[test]] entry does not satisfy a bench file.
+        let wrong_kind = check_registration(cargo, &[], &["rust/tests/a.rs".into()], &[]);
+        assert_eq!(wrong_kind.len(), 1);
+    }
+
+    #[test]
+    fn schema_facts_extract_from_consts() {
+        let artifacts = r#"
+            pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v5";
+            pub const CAMPAIGN_CSV_BASE_HEADER: &str = "a,b,c";
+            pub const CAMPAIGN_CSV_SUMMARY_BLOCKS: [&str; 2] = ["x", "y"];
+            pub const CAMPAIGN_CSV_SPREAD_BLOCKS: [&str; 1] = ["z"];
+            pub const CAMPAIGN_CSV_COLUMNS: usize = 20;
+        "#;
+        let diff = r#"pub const DIFF_SCHEMA: &str = "lbsp-diff/v1";"#;
+        let obs = r#"
+            pub const TRACE_SCHEMA: &str = "lbsp-trace/v1";
+            fn emit() -> String { format!("{{\"ev\":\"alpha\"}}") }
+            fn emit2() -> String { String::from("{\"ev\":\"beta\",\"x\":1}") }
+        "#;
+        let (ta, td, to) = (tokenize(artifacts), tokenize(diff), tokenize(obs));
+        let spans = test_spans(&to);
+        let facts = schema_facts_from_sources(&ta, &td, &to, &spans);
+        assert_eq!(facts.campaign_schema.as_deref(), Some("lbsp-campaign/v5"));
+        assert_eq!(facts.diff_schema.as_deref(), Some("lbsp-diff/v1"));
+        assert_eq!(facts.trace_schema.as_deref(), Some("lbsp-trace/v1"));
+        assert_eq!(facts.csv_base_header.as_deref(), Some("a,b,c"));
+        assert_eq!(facts.csv_summary_blocks, vec!["x", "y"]);
+        assert_eq!(facts.csv_spread_blocks, vec!["z"]);
+        assert_eq!(facts.csv_columns, Some(20));
+        assert_eq!(facts.trace_tags, vec!["alpha", "beta"]);
+    }
+
+    #[test]
+    fn schema_check_flags_doc_drift() {
+        let mut facts = SchemaFacts {
+            campaign_schema: Some("lbsp-campaign/v5".into()),
+            diff_schema: Some("lbsp-diff/v1".into()),
+            trace_schema: Some("lbsp-trace/v1".into()),
+            csv_base_header: Some("a,b,c".into()),
+            csv_summary_blocks: vec!["x".into()],
+            csv_spread_blocks: vec!["z".into()],
+            csv_columns: Some(13), // 3 base + 1×7 summary + 1×3 spread
+            trace_tags: vec!["e1".into(), "e2".into(), "e3".into(), "e4".into(), "e5".into()],
+        };
+        let roadmap = "lbsp-campaign/v5 lbsp-diff/v1 lbsp-trace/v1 a,b,\n  c x z \
+                       13 columns e1 e2 e3 e4 e5";
+        let readme = "lbsp-trace/v1 e1 e2 e3 e4 e5";
+        assert!(check_schema_facts(&facts, roadmap, readme).is_empty());
+        // Docs ahead of the source: v6 mentioned, v5 shipped.
+        let ahead = format!("{roadmap} lbsp-campaign/v6");
+        let f = check_schema_facts(&facts, &ahead, readme);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("ahead"));
+        // Column arithmetic drift: the pinned count no longer matches
+        // what the header consts produce (and the doc phrase breaks).
+        facts.csv_columns = Some(11);
+        let f = check_schema_facts(&facts, roadmap, readme);
+        assert!(f.iter().any(|f| f.message.contains("11") && f.message.contains("13")), "{f:?}");
+    }
+
+    #[test]
+    fn schema_check_requires_tags_in_both_docs() {
+        let facts = SchemaFacts {
+            trace_schema: Some("lbsp-trace/v1".into()),
+            trace_tags: vec!["e1".into(), "e2".into(), "e3".into(), "e4".into(), "e5".into()],
+            ..Default::default()
+        };
+        let roadmap = "lbsp-trace/v1 e1 e2 e3 e4 e5";
+        let readme = "lbsp-trace/v1 e1 e2 e3 e4"; // e5 missing
+        let f = check_schema_facts(&facts, roadmap, readme);
+        assert!(
+            f.iter().any(|f| f.file.ends_with("README.md") && f.message.contains("e5")),
+            "{f:?}"
+        );
+    }
+}

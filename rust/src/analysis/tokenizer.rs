@@ -1,0 +1,590 @@
+//! A comment/string-stripping Rust tokenizer for the contract linter.
+//!
+//! Deliberately *not* a Rust parser (no syn is vendored — the same
+//! spirit as `util::json`): the lint rules only need identifier/punct
+//! streams with line numbers, string-literal *values* (the schema-drift
+//! rule reads schema tags and event names out of them), and enough
+//! structure to skip `#[cfg(test)]` items and track brace nesting. The
+//! lexer therefore handles exactly the token classes that can hide a
+//! false positive — line and nested block comments, cooked strings with
+//! escapes, raw strings `r#"…"#`, byte strings, and the char-literal
+//! vs. lifetime ambiguity — and flattens everything else to
+//! single-character punctuation.
+
+/// Token classes the rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `if`, `let`, …).
+    Ident,
+    /// Numeric literal (lexed loosely; the rules never read the value).
+    Num,
+    /// String literal — `text` holds the *unescaped* contents.
+    Str,
+    /// Everything else, one character per token (`{`, `.`, `:`, …).
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1
+            && self.text.as_bytes()[0] as char == c
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    out: Vec<Tok>,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek(0)?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+        }
+        Some(b)
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: u32) {
+        self.out.push(Tok { kind, text, line });
+    }
+
+    /// `//` to end of line. The comment text is dropped — waivers are
+    /// parsed from raw source lines by [`parse_waivers`], not here.
+    fn line_comment(&mut self) {
+        while let Some(b) = self.peek(0) {
+            if b == b'\n' {
+                break;
+            }
+            self.bump();
+        }
+    }
+
+    /// `/* … */`, nested (Rust block comments nest).
+    fn block_comment(&mut self) {
+        let mut depth = 1usize;
+        self.bump();
+        self.bump();
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some(b'/'), Some(b'*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(b'*'), Some(b'/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+    }
+
+    /// Cooked string starting at the opening `"`. Returns the unescaped
+    /// value (best-effort: unknown escapes pass through verbatim).
+    fn cooked_string(&mut self) -> String {
+        let mut val = Vec::new();
+        self.bump(); // opening quote
+        while let Some(b) = self.bump() {
+            match b {
+                b'"' => break,
+                b'\\' => match self.bump() {
+                    Some(b'n') => val.push(b'\n'),
+                    Some(b't') => val.push(b'\t'),
+                    Some(b'r') => val.push(b'\r'),
+                    Some(b'0') => val.push(0),
+                    Some(b'\\') => val.push(b'\\'),
+                    Some(b'"') => val.push(b'"'),
+                    Some(b'\'') => val.push(b'\''),
+                    Some(b'x') => {
+                        // \xNN — keep the raw hex; rules never need it.
+                        self.bump();
+                        self.bump();
+                    }
+                    Some(b'u') => {
+                        // \u{…} — skip to the closing brace.
+                        while let Some(c) = self.bump() {
+                            if c == b'}' {
+                                break;
+                            }
+                        }
+                    }
+                    Some(b'\n') => {
+                        // Line-continuation escape: swallow the leading
+                        // whitespace of the next line.
+                        while matches!(self.peek(0), Some(b' ') | Some(b'\t')) {
+                            self.bump();
+                        }
+                    }
+                    Some(other) => val.push(other),
+                    None => break,
+                },
+                _ => val.push(b),
+            }
+        }
+        String::from_utf8_lossy(&val).into_owned()
+    }
+
+    /// Raw string starting at `r` (or after a `b`): `r"…"`, `r#"…"#`, …
+    fn raw_string(&mut self) -> String {
+        self.bump(); // 'r'
+        let mut hashes = 0usize;
+        while self.peek(0) == Some(b'#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        let mut val = Vec::new();
+        while let Some(b) = self.bump() {
+            if b == b'"' {
+                // Closed iff followed by `hashes` consecutive '#'.
+                let mut ok = true;
+                for i in 0..hashes {
+                    if self.peek(i) != Some(b'#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    for _ in 0..hashes {
+                        self.bump();
+                    }
+                    break;
+                }
+                val.push(b);
+            } else {
+                val.push(b);
+            }
+        }
+        String::from_utf8_lossy(&val).into_owned()
+    }
+
+    /// At a `'`: either a char literal (`'x'`, `'\n'`) — skipped — or a
+    /// lifetime (`'a`) — also skipped. Neither produces a token; the
+    /// rules never inspect them, they only must not derail the lexer.
+    fn quote(&mut self) {
+        self.bump(); // the '
+        match self.peek(0) {
+            Some(b'\\') => {
+                // Escaped char literal: consume the escape, then
+                // everything up to the closing quote.
+                self.bump();
+                while let Some(b) = self.bump() {
+                    if b == b'\'' {
+                        break;
+                    }
+                }
+            }
+            Some(b) if is_ident_start(b) && self.peek(1) != Some(b'\'') => {
+                // Lifetime: consume the identifier and stop.
+                while matches!(self.peek(0), Some(c) if is_ident_cont(c)) {
+                    self.bump();
+                }
+            }
+            Some(_) => {
+                // Plain char literal 'x' (possibly multi-byte UTF-8).
+                while let Some(b) = self.bump() {
+                    if b == b'\'' {
+                        break;
+                    }
+                }
+            }
+            None => {}
+        }
+    }
+
+    fn ident(&mut self) -> String {
+        let start = self.pos;
+        while matches!(self.peek(0), Some(b) if is_ident_cont(b)) {
+            self.bump();
+        }
+        String::from_utf8_lossy(&self.src[start..self.pos]).into_owned()
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let start = self.pos;
+        while matches!(self.peek(0), Some(b) if b.is_ascii_alphanumeric() || b == b'_') {
+            self.bump();
+        }
+        // Fractional part — but never swallow a `..` range operator.
+        if self.peek(0) == Some(b'.') && self.peek(1) != Some(b'.') {
+            if matches!(self.peek(1), Some(b) if b.is_ascii_digit()) {
+                self.bump();
+                while matches!(self.peek(0), Some(b) if b.is_ascii_alphanumeric()) {
+                    self.bump();
+                }
+            }
+        }
+        let text = String::from_utf8_lossy(&self.src[start..self.pos]).into_owned();
+        self.push(TokKind::Num, text, line);
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while let Some(b) = self.peek(0) {
+            let line = self.line;
+            match b {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => {
+                    let val = self.cooked_string();
+                    self.push(TokKind::Str, val, line);
+                }
+                b'\'' => self.quote(),
+                b'r' if matches!(self.peek(1), Some(b'"') | Some(b'#')) => {
+                    // `r"…"` / `r#"…"#` — but `r#foo` is a raw ident.
+                    if self.peek(1) == Some(b'#')
+                        && !matches!(self.peek(2), Some(b'"') | Some(b'#'))
+                    {
+                        self.bump();
+                        self.bump();
+                        let id = self.ident();
+                        self.push(TokKind::Ident, id, line);
+                    } else {
+                        let val = self.raw_string();
+                        self.push(TokKind::Str, val, line);
+                    }
+                }
+                b'b' if self.peek(1) == Some(b'"') => {
+                    self.bump();
+                    let val = self.cooked_string();
+                    self.push(TokKind::Str, val, line);
+                }
+                b'b' if self.peek(1) == Some(b'\'') => {
+                    self.bump();
+                    self.quote();
+                }
+                b'b' if self.peek(1) == Some(b'r')
+                    && matches!(self.peek(2), Some(b'"') | Some(b'#')) =>
+                {
+                    self.bump();
+                    let val = self.raw_string();
+                    self.push(TokKind::Str, val, line);
+                }
+                _ if is_ident_start(b) => {
+                    let id = self.ident();
+                    self.push(TokKind::Ident, id, line);
+                }
+                _ if b.is_ascii_digit() => self.number(),
+                _ => {
+                    self.bump();
+                    self.push(TokKind::Punct, (b as char).to_string(), line);
+                }
+            }
+        }
+        self.out
+    }
+}
+
+/// Lex a source file into the rule-visible token stream: comments
+/// dropped, strings carried by value, everything else a token.
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    Lexer { src: src.as_bytes(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+/// Token-index spans covered by `#[cfg(test)]` items (test modules and
+/// test-only functions). The lint rules treat these as out of scope:
+/// test code may seed ad-hoc `Rng`s and hash freely — nothing it does
+/// reaches a persisted artifact.
+pub fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].is_punct('#')
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('['))
+            && toks.get(i + 2).is_some_and(|t| t.is_ident("cfg"))
+            && toks.get(i + 3).is_some_and(|t| t.is_punct('('))
+        {
+            // Scan the cfg predicate for a bare `test`.
+            let mut j = i + 4;
+            let mut depth = 1usize;
+            let mut has_test = false;
+            while j < toks.len() && depth > 0 {
+                if toks[j].is_punct('(') {
+                    depth += 1;
+                } else if toks[j].is_punct(')') {
+                    depth -= 1;
+                } else if toks[j].is_ident("test") {
+                    has_test = true;
+                }
+                j += 1;
+            }
+            if !has_test {
+                i += 1;
+                continue;
+            }
+            // Skip the closing `]`, then cover the annotated item: up
+            // to the matching `}` of its first brace, or to a `;` if
+            // none opens first (e.g. a cfg'd `use`).
+            while j < toks.len() && !toks[j].is_punct(']') {
+                j += 1;
+            }
+            j += 1;
+            let start = i;
+            let mut braces = 0usize;
+            let mut opened = false;
+            while j < toks.len() {
+                if toks[j].is_punct(';') && !opened {
+                    break;
+                }
+                if toks[j].is_punct('{') {
+                    braces += 1;
+                    opened = true;
+                } else if toks[j].is_punct('}') {
+                    braces -= 1;
+                    if opened && braces == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            spans.push((start, j.min(toks.len().saturating_sub(1))));
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    spans
+}
+
+/// One parsed inline waiver:
+/// `// lbsp-lint: allow(<rule>[,<rule>…]) reason="…"`.
+///
+/// A waiver on line `L` covers findings on `L` (trailing comment) and
+/// `L + 1` (a comment line above the flagged code).
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+/// A malformed waiver — itself reported as a finding (a waiver with no
+/// written reason is exactly the invisibility the linter exists to
+/// prevent).
+#[derive(Clone, Debug)]
+pub struct WaiverError {
+    pub line: u32,
+    pub message: String,
+}
+
+const WAIVER_MARKER: &str = "lbsp-lint:";
+
+/// Scan raw source lines for waiver comments. Returns the parsed
+/// waivers and any syntax errors. Only comment text is honoured: the
+/// marker must appear after a `//` on its line.
+pub fn parse_waivers(src: &str) -> (Vec<Waiver>, Vec<WaiverError>) {
+    let mut waivers = Vec::new();
+    let mut errors = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let line = (idx + 1) as u32;
+        let Some(marker_at) = raw.find(WAIVER_MARKER) else {
+            continue;
+        };
+        let Some(comment_at) = raw.find("//") else {
+            continue; // marker inside a string literal, not a comment
+        };
+        if comment_at > marker_at {
+            continue;
+        }
+        let rest = raw[marker_at + WAIVER_MARKER.len()..].trim();
+        let Some(inner) = rest
+            .strip_prefix("allow(")
+            .and_then(|r| r.split_once(')'))
+        else {
+            errors.push(WaiverError {
+                line,
+                message: "malformed waiver: expected `allow(<rule>) reason=\"…\"`".into(),
+            });
+            continue;
+        };
+        let (rule_list, tail) = inner;
+        let rules: Vec<String> = rule_list
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        if rules.is_empty() {
+            errors.push(WaiverError {
+                line,
+                message: "waiver names no rule: `allow(<rule>)`".into(),
+            });
+            continue;
+        }
+        let reason = tail
+            .trim()
+            .strip_prefix("reason=\"")
+            .and_then(|r| r.split_once('"'))
+            .map(|(reason, _)| reason.trim().to_string())
+            .unwrap_or_default();
+        if reason.is_empty() {
+            errors.push(WaiverError {
+                line,
+                message: "waiver carries no reason: every waiver must document why \
+                          the contract cannot hold at this site (`reason=\"…\"`)"
+                    .into(),
+            });
+            continue;
+        }
+        waivers.push(Waiver { line, rules, reason });
+    }
+    (waivers, errors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_leak_identifiers() {
+        let src = r##"
+            // HashMap in a line comment
+            /* HashMap in a /* nested */ block comment */
+            let x = "HashMap in a string";
+            let y = r#"HashMap in a raw string"#;
+            let z = real_ident;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"real_ident".to_string()));
+        // The string *values* are still visible to the rules.
+        let strs: Vec<String> = tokenize(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs[0].contains("HashMap"));
+    }
+
+    #[test]
+    fn string_escapes_unescape() {
+        let toks = tokenize(r#"let s = "{\"ev\":\"retune\"}";"#);
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, "{\"ev\":\"retune\"}");
+    }
+
+    #[test]
+    fn line_continuation_escape_joins() {
+        let toks = tokenize("let s = \"a,\\\n     b\";");
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, "a,b");
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals_do_not_derail() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'x'; let n = '\\n'; c }";
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()));
+        assert!(ids.contains(&"char".to_string()));
+        // 'x' must not have swallowed the rest of the line.
+        assert!(ids.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn lines_are_tracked() {
+        let toks = tokenize("a\nb\n  c");
+        let lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_test_modules() {
+        let src = "
+            fn live() { hash_here(); }
+            #[cfg(test)]
+            mod tests {
+                fn helper() { test_only(); }
+            }
+            fn also_live() {}
+        ";
+        let toks = tokenize(src);
+        let spans = test_spans(&toks);
+        assert_eq!(spans.len(), 1);
+        let in_test = |name: &str| {
+            let idx = toks.iter().position(|t| t.is_ident(name)).unwrap();
+            spans.iter().any(|&(a, b)| idx >= a && idx <= b)
+        };
+        assert!(!in_test("hash_here"));
+        assert!(in_test("test_only"));
+        assert!(!in_test("also_live"));
+    }
+
+    #[test]
+    fn waiver_parses_with_reason() {
+        let (ws, errs) = parse_waivers(
+            "let x = 1; // lbsp-lint: allow(determinism) reason=\"memo cache\"\n",
+        );
+        assert!(errs.is_empty());
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].rules, vec!["determinism".to_string()]);
+        assert_eq!(ws[0].reason, "memo cache");
+        assert_eq!(ws[0].line, 1);
+    }
+
+    #[test]
+    fn waiver_without_reason_is_an_error() {
+        let (ws, errs) = parse_waivers("// lbsp-lint: allow(determinism)\n");
+        assert!(ws.is_empty());
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].message.contains("reason"));
+    }
+
+    #[test]
+    fn waiver_with_multiple_rules() {
+        let (ws, errs) = parse_waivers(
+            "// lbsp-lint: allow(determinism, rng-hygiene) reason=\"both\"\n",
+        );
+        assert!(errs.is_empty());
+        assert_eq!(ws[0].rules.len(), 2);
+    }
+
+    #[test]
+    fn marker_inside_string_is_ignored() {
+        let (ws, errs) = parse_waivers("let s = \"lbsp-lint: allow(x)\";\n");
+        assert!(ws.is_empty() && errs.is_empty());
+    }
+}

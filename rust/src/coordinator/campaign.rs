@@ -57,10 +57,12 @@
 //! tiny (|p| × |k| × |n|). Campaign output persists through
 //! [`crate::report::artifacts`] (`lbsp campaign --out`).
 
+// lbsp-lint: allow(determinism) reason="RhoCache/speedups memo maps: keyed lookups only, iteration order never observed"
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+// lbsp-lint: allow(determinism) reason="wall_s, the documented nondeterministic v5 extra kept outside CellSummary"
 use std::time::Instant;
 
 use crate::adapt::{AdaptSpec, CostModel};
@@ -753,6 +755,7 @@ pub struct CellSummary {
 /// already far off the hot path after warm-up.
 #[derive(Debug, Default)]
 pub struct RhoCache {
+    // lbsp-lint: allow(determinism) reason="value memo: reads are keyed, the map is never iterated"
     map: Mutex<HashMap<(u64, u64), f64>>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -1008,6 +1011,7 @@ impl CampaignEngine {
             chunk
                 .iter()
                 .map(|t| {
+                    // lbsp-lint: allow(determinism) reason="feeds wall_s only, the documented nondeterministic v5 extra"
                     let t0 = Instant::now();
                     let mut r =
                         run_replica(&t.cell, t.rng.clone(), t.trace.as_deref());
@@ -1027,6 +1031,7 @@ impl CampaignEngine {
             // per distinct (q, c) per chunk, keeping the lock off the
             // per-point hot path (workers would otherwise serialize on
             // it for every ~10-flop speedup evaluation).
+            // lbsp-lint: allow(determinism) reason="per-chunk value memo: keyed lookups only, never iterated"
             let mut local: HashMap<(u64, u64), f64> = HashMap::new();
             chunk
                 .iter()

@@ -47,20 +47,21 @@
 //!   Figs 8–12 are built from the campaign grid constructor and run on
 //!   any `SpeedupEval` backend. [`report::artifacts`] persists campaign
 //!   JSON/CSV for cross-PR regression tracking.
+//! * [`analysis`] — the `lbsp lint` contract linter: a dependency-free
+//!   static pass over this repo's own sources enforcing the
+//!   determinism, trace-gating, target-registration, schema-drift and
+//!   rng-hygiene contracts (see `rust/src/analysis/README.md`).
 //!
 //! Tier-1 verification is one command: `scripts/tier1.sh` (fmt check →
-//! release build → tests → clippy, skipping components not installed).
+//! release build → contract lint (`lbsp lint`, [`analysis`]) → tests →
+//! clippy, skipping components not installed).
 
-// Style-family clippy lints the codebase consciously keeps (tier1 runs
-// `cargo clippy -D warnings`): fftcore's `Cpx::add/mul/sub` mirror the
-// paper's notation rather than `std::ops`, and index-arithmetic loops
-// over flat row-major buffers are the house style for the kernels.
-#![allow(clippy::should_implement_trait)]
-#![allow(clippy::needless_range_loop)]
-#![allow(clippy::too_many_arguments)]
-#![allow(clippy::type_complexity)]
+// Style-family clippy lints the codebase consciously keeps are declared
+// once in the `[lints.clippy]` table of Cargo.toml (tier1 runs
+// `cargo clippy -D warnings` on top of that posture).
 
 pub mod adapt;
+pub mod analysis;
 pub mod bsp;
 pub mod collectives;
 pub mod coordinator;

@@ -40,13 +40,18 @@
 //!               flag speedup-mean regressions beyond Z combined sigma
 //!               (exit 1 on regression — CI-usable; --json emits the
 //!               machine-readable verdict instead of the table)
+//! lbsp lint [--root DIR]
+//!               static contract linter over this repo's own sources
+//!               (determinism, trace-gating, target registration,
+//!               schema drift, rng hygiene — see rust/src/analysis/);
+//!               exit 1 on unwaived findings — the tier-1 gate
 //! ```
 //!
 //! The `pjrt` backend loads the AOT artifacts from `./artifacts`
 //! (override with `LBSP_ARTIFACTS`); build them once with `make artifacts`.
-
-// Same conscious lint posture as the library crate (see rust/src/lib.rs).
-#![allow(clippy::too_many_arguments)]
+//!
+//! Conscious clippy allowances live in the `[lints.clippy]` table of
+//! Cargo.toml, not in per-crate `#![allow]` attributes.
 
 use lbsp::adapt::{AdaptSpec, CostModel, EstimatorSpec};
 use lbsp::bsp::BspRuntime;
@@ -733,71 +738,6 @@ fn cmd_trace(args: &Args) {
     eprintln!("[{} events -> {}]", events.len(), out_path.display());
 }
 
-/// Machine-readable `lbsp diff --json` verdict (schema `lbsp-diff/v1`):
-/// the match/skip counts plus every flagged cell with its z-score.
-/// Non-finite floats (the ±∞ z of a deterministic-cell change) emit as
-/// `null`, the repo-wide JSON convention; the boolean verdict and the
-/// exit code are unaffected.
-fn diff_json(d: &report::CampaignDiff, threshold: f64) -> String {
-    fn jnum(x: f64) -> String {
-        if x.is_finite() {
-            format!("{x:?}")
-        } else {
-            "null".into()
-        }
-    }
-    fn jstr(s: &str) -> String {
-        let escaped: String = s
-            .chars()
-            .flat_map(|c| match c {
-                '"' => vec!['\\', '"'],
-                '\\' => vec!['\\', '\\'],
-                '\n' => vec!['\\', 'n'],
-                c => vec![c],
-            })
-            .collect();
-        format!("\"{escaped}\"")
-    }
-    let deltas = |ds: &[lbsp::report::diff::CellDelta]| {
-        let rows: Vec<String> = ds
-            .iter()
-            .map(|c| {
-                format!(
-                    concat!(
-                        "{{\"cell\":{},\"mean_a\":{},\"mean_b\":{},",
-                        "\"sem_a\":{},\"sem_b\":{},\"z\":{}}}"
-                    ),
-                    jstr(&c.key),
-                    jnum(c.mean_a),
-                    jnum(c.mean_b),
-                    jnum(c.sem_a),
-                    jnum(c.sem_b),
-                    jnum(c.z),
-                )
-            })
-            .collect();
-        format!("[{}]", rows.join(","))
-    };
-    format!(
-        concat!(
-            "{{\"schema\":\"lbsp-diff/v1\",\"threshold\":{},",
-            "\"matched\":{},\"only_in_a\":{},\"only_in_b\":{},",
-            "\"skipped_nonfinite\":{},\"duplicate_keys\":{},",
-            "\"has_regressions\":{},",
-            "\"regressions\":{},\"improvements\":{}}}\n"
-        ),
-        jnum(threshold),
-        d.matched,
-        d.only_in_a,
-        d.only_in_b,
-        d.skipped_nonfinite,
-        d.duplicate_keys,
-        d.has_regressions(),
-        deltas(&d.regressions),
-        deltas(&d.improvements),
-    )
-}
-
 fn cmd_diff(args: &Args) {
     let (Some(path_a), Some(path_b)) = (args.positional.get(1), args.positional.get(2))
     else {
@@ -826,7 +766,7 @@ fn cmd_diff(args: &Args) {
     let candidate = read(path_b);
     let d = report::diff_campaigns(&baseline, &candidate, threshold);
     if args.flag("json") {
-        print!("{}", diff_json(&d, threshold));
+        print!("{}", report::diff_json(&d, threshold));
     } else {
         report::diff_table(&d, threshold).print();
     }
@@ -839,8 +779,38 @@ fn cmd_diff(args: &Args) {
     }
 }
 
+/// `lbsp lint [--root DIR]` — run the in-tree contract linter (see
+/// `rust/src/analysis/README.md`). Exit 0 when the tree is clean,
+/// 1 on unwaived findings (printed as `file:line: rule: message`),
+/// 2 when the repo layout itself cannot be scanned.
+fn cmd_lint(args: &Args) {
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => std::env::current_dir().unwrap_or_else(|e| {
+            eprintln!("lint: cannot resolve current dir: {e}");
+            std::process::exit(2);
+        }),
+    };
+    if !root.join("Cargo.toml").is_file() {
+        eprintln!(
+            "lint: {} is not the repo root (no Cargo.toml); run from the \
+             checkout or pass --root",
+            root.display()
+        );
+        std::process::exit(2);
+    }
+    let report = lbsp::analysis::lint_repo(&root).unwrap_or_else(|e| {
+        eprintln!("lint: {e}");
+        std::process::exit(2);
+    });
+    print!("{}", report.render());
+    if !report.unwaived().is_empty() {
+        std::process::exit(1);
+    }
+}
+
 const USAGE: &str =
-    "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign|trace|diff> [options]
+    "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign|trace|diff|lint> [options]
   (see `rust/src/main.rs` doc header for details)";
 
 fn main() {
@@ -856,6 +826,7 @@ fn main() {
         Some("campaign") => cmd_campaign(&args),
         Some("trace") => cmd_trace(&args),
         Some("diff") => cmd_diff(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);

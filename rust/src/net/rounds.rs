@@ -137,6 +137,7 @@ pub fn estimate_rho(
     seed: u64,
 ) -> f64 {
     let ps = per_round_success(p, k);
+    // lbsp-lint: allow(rng-hygiene) reason="MC entry point: the caller's explicit seed IS the stream derivation"
     let mut rng = Rng::new(seed);
     let mut total = 0u64;
     for _ in 0..trials {

@@ -71,6 +71,7 @@ impl Network {
         Network {
             engine: Engine::new(),
             topo,
+            // lbsp-lint: allow(rng-hygiene) reason="per-replica root stream: the coordinator passes a split-derived seed"
             rng: Rng::new(seed),
             uplink_free: vec![SimTime::ZERO; n],
             stats: NetStats::default(),

@@ -55,6 +55,49 @@ pub const CAMPAIGN_SCHEMA_V2: &str = "lbsp-campaign/v2";
 pub const CAMPAIGN_SCHEMA_V3: &str = "lbsp-campaign/v3";
 pub const CAMPAIGN_SCHEMA_V4: &str = "lbsp-campaign/v4";
 
+/// First 16 CSV columns: the cell coordinates and scalar fractions.
+/// `lbsp lint` (schema-drift rule) cross-checks this header and the
+/// block consts below against the column dictionary in ROADMAP.md.
+pub const CAMPAIGN_CSV_BASE_HEADER: &str =
+    "workload,topology,loss,policy,scenario,scheme,adapt,n,p,k,replicas,\
+     completed_frac,converged_frac,validated_frac,rho_pred,speedup_pred";
+
+/// Summary blocks flattened into 7 columns each (`_mean`, `_sem`,
+/// `_p10`, `_p50`, `_p90`, `_min`, `_max`).
+pub const CAMPAIGN_CSV_SUMMARY_BLOCKS: [&str; 7] = [
+    "speedup",
+    "rounds",
+    "time_s",
+    "data_packets",
+    "wire_bytes_per_payload",
+    "k_chosen",
+    "p_hat",
+];
+
+/// Spread blocks flattened into 3 columns each (`_min`, `_mean`, `_max`).
+pub const CAMPAIGN_CSV_SPREAD_BLOCKS: [&str; 2] = ["k_spread", "p_hat_spread"];
+
+/// The pinned total column count: 16 base + 7×7 summary + 2×3 spread.
+pub const CAMPAIGN_CSV_COLUMNS: usize = 71;
+
+/// The full pinned CSV header row (no trailing newline), assembled
+/// from the consts above so the linter's arithmetic check and the
+/// writer can never disagree.
+pub fn campaign_csv_header() -> String {
+    let mut out = String::from(CAMPAIGN_CSV_BASE_HEADER);
+    for block in CAMPAIGN_CSV_SUMMARY_BLOCKS {
+        for col in ["mean", "sem", "p10", "p50", "p90", "min", "max"] {
+            out.push_str(&format!(",{block}_{col}"));
+        }
+    }
+    for block in CAMPAIGN_CSV_SPREAD_BLOCKS {
+        for col in ["min", "mean", "max"] {
+            out.push_str(&format!(",{block}_{col}"));
+        }
+    }
+    out
+}
+
 /// JSON number: round-trip float formatting, `null` for NaN/±∞.
 fn jnum(x: f64) -> String {
     if x.is_finite() {
@@ -291,27 +334,7 @@ fn empty_spread_cols() -> String {
 /// per-phase round histogram stays JSON-only (16 log-bin counts make a
 /// poor spreadsheet column family).
 pub fn campaign_csv(cells: &[CellSummary]) -> String {
-    let mut out = String::new();
-    out.push_str("workload,topology,loss,policy,scenario,scheme,adapt,n,p,k,replicas,");
-    out.push_str("completed_frac,converged_frac,validated_frac,rho_pred,speedup_pred");
-    for block in [
-        "speedup",
-        "rounds",
-        "time_s",
-        "data_packets",
-        "wire_bytes_per_payload",
-        "k_chosen",
-        "p_hat",
-    ] {
-        for col in ["mean", "sem", "p10", "p50", "p90", "min", "max"] {
-            out.push_str(&format!(",{block}_{col}"));
-        }
-    }
-    for block in ["k_spread", "p_hat_spread"] {
-        for col in ["min", "mean", "max"] {
-            out.push_str(&format!(",{block}_{col}"));
-        }
-    }
+    let mut out = campaign_csv_header();
     out.push('\n');
     for s in cells {
         out.push_str(&format!(
@@ -474,6 +497,8 @@ mod tests {
         assert_eq!(lines.len(), cells.len() + 1);
         let n_cols = lines[0].split(',').count();
         assert_eq!(n_cols, 16 + 7 * 7 + 2 * 3);
+        assert_eq!(n_cols, CAMPAIGN_CSV_COLUMNS, "pinned count drifted from the header consts");
+        assert!(lines[0].starts_with(CAMPAIGN_CSV_BASE_HEADER));
         for row in &lines[1..] {
             assert_eq!(row.split(',').count(), n_cols, "ragged row: {row}");
         }

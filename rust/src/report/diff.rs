@@ -24,12 +24,15 @@
 //! lbsp campaign --out new.json && lbsp diff baseline.json new.json
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::util::json::Json;
 use crate::util::tables::Table;
 
 use super::Artifact;
+
+/// Schema tag of the machine-readable `lbsp diff --json` verdict.
+pub const DIFF_SCHEMA: &str = "lbsp-diff/v1";
 
 /// One cell's comparable statistics, keyed by its grid coordinates.
 #[derive(Clone, Debug)]
@@ -178,12 +181,14 @@ pub fn diff_campaigns(
     assert!(threshold >= 0.0, "threshold {threshold}");
     // First occurrence wins on duplicate keys (deterministic), and the
     // shadowed records are counted instead of silently compared against
-    // the wrong cell. Borrow-indexed: no record cloning.
+    // the wrong cell. Borrow-indexed: no record cloning. Ordered map on
+    // purpose: nothing downstream may ever observe a hash iteration
+    // order, so none is available to observe (lint: determinism).
     fn first_index<'c>(
         cells: &'c [CellRecord],
         duplicates: &mut usize,
-    ) -> HashMap<&'c str, &'c CellRecord> {
-        let mut map: HashMap<&str, &CellRecord> = HashMap::with_capacity(cells.len());
+    ) -> BTreeMap<&'c str, &'c CellRecord> {
+        let mut map: BTreeMap<&str, &CellRecord> = BTreeMap::new();
         for c in cells {
             if map.contains_key(c.key.as_str()) {
                 *duplicates += 1;
@@ -207,7 +212,7 @@ pub fn diff_campaigns(
     // Walk in `a` order so the report order is the canonical cell order
     // (skipping shadowed duplicates: only each key's first record is in
     // the index, and a second visit of the same key would double-count).
-    let mut seen_a = std::collections::HashSet::new();
+    let mut seen_a = BTreeSet::new();
     for ca in &a.cells {
         if !seen_a.insert(ca.key.as_str()) {
             continue;
@@ -290,6 +295,74 @@ pub fn diff_table(diff: &CampaignDiff, threshold: f64) -> Artifact {
         ),
         table: t,
     }
+}
+
+/// Machine-readable `lbsp diff --json` verdict ([`DIFF_SCHEMA`]): the
+/// match/skip counts plus every flagged cell with its z-score.
+/// Non-finite floats (the ±∞ z of a deterministic-cell change) emit as
+/// `null`, the repo-wide JSON convention; the boolean verdict and the
+/// exit code are unaffected. Byte-stable: the delta arrays come from
+/// the deterministic comparison walk (canonical `a.cells` order, then
+/// a stable sort by z), never from hash iteration.
+pub fn diff_json(d: &CampaignDiff, threshold: f64) -> String {
+    fn jnum(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x:?}")
+        } else {
+            "null".into()
+        }
+    }
+    fn jstr(s: &str) -> String {
+        let escaped: String = s
+            .chars()
+            .flat_map(|c| match c {
+                '"' => vec!['\\', '"'],
+                '\\' => vec!['\\', '\\'],
+                '\n' => vec!['\\', 'n'],
+                c => vec![c],
+            })
+            .collect();
+        format!("\"{escaped}\"")
+    }
+    let deltas = |ds: &[CellDelta]| {
+        let rows: Vec<String> = ds
+            .iter()
+            .map(|c| {
+                format!(
+                    concat!(
+                        "{{\"cell\":{},\"mean_a\":{},\"mean_b\":{},",
+                        "\"sem_a\":{},\"sem_b\":{},\"z\":{}}}"
+                    ),
+                    jstr(&c.key),
+                    jnum(c.mean_a),
+                    jnum(c.mean_b),
+                    jnum(c.sem_a),
+                    jnum(c.sem_b),
+                    jnum(c.z),
+                )
+            })
+            .collect();
+        format!("[{}]", rows.join(","))
+    };
+    format!(
+        concat!(
+            "{{\"schema\":{},\"threshold\":{},",
+            "\"matched\":{},\"only_in_a\":{},\"only_in_b\":{},",
+            "\"skipped_nonfinite\":{},\"duplicate_keys\":{},",
+            "\"has_regressions\":{},",
+            "\"regressions\":{},\"improvements\":{}}}\n"
+        ),
+        jstr(DIFF_SCHEMA),
+        jnum(threshold),
+        d.matched,
+        d.only_in_a,
+        d.only_in_b,
+        d.skipped_nonfinite,
+        d.duplicate_keys,
+        d.has_regressions(),
+        deltas(&d.regressions),
+        deltas(&d.improvements),
+    )
 }
 
 #[cfg(test)]
@@ -583,6 +656,46 @@ mod tests {
         let d = diff_campaigns(&art, &blast_art, 3.0);
         assert_eq!(d.matched, 0, "kcopy and blast cells must never cross-match");
         assert_eq!((d.only_in_a, d.only_in_b), (1, 1));
+    }
+
+    /// Regression test for the determinism contract `lbsp lint` now
+    /// enforces: the `--json` verdict must be byte-stable. Before the
+    /// BTreeMap switch the *indexes* were hash maps — harmless while
+    /// the report walked `a.cells` in order, but one refactor away
+    /// from emitting hash-ordered arrays. Many flagged cells with
+    /// tied |z| exercise exactly the order a hash iteration would
+    /// scramble.
+    #[test]
+    fn diff_json_is_byte_stable_across_repeated_runs() {
+        let mk = |shift: f64| CampaignArtifact {
+            schema: "lbsp-campaign/v3".into(),
+            cells: (0..32)
+                .map(|i| CellRecord {
+                    key: format!("cell{i:02}"),
+                    speedup_mean: 10.0 + i as f64 + shift,
+                    speedup_sem: 0.1,
+                    replicas: 8,
+                })
+                .collect(),
+        };
+        // Every cell regresses by the same amount: 32 identical z
+        // scores, so ordering is entirely tie-breaking.
+        let a = mk(0.0);
+        let b = mk(-2.0);
+        let first = diff_json(&diff_campaigns(&a, &b, 3.0), 3.0);
+        for _ in 0..8 {
+            let again = diff_json(&diff_campaigns(&a, &b, 3.0), 3.0);
+            assert_eq!(first, again, "diff --json must be byte-stable");
+        }
+        // Ties preserve the canonical a.cells order (stable sort).
+        let d = diff_campaigns(&a, &b, 3.0);
+        assert_eq!(d.regressions.len(), 32);
+        let keys: Vec<&str> = d.regressions.iter().map(|c| c.key.as_str()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "tied z-scores keep canonical cell order");
+        assert!(first.contains("\"schema\":\"lbsp-diff/v1\""));
+        assert!(first.contains("\"has_regressions\":true"));
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub use artifacts::{
     campaign_csv, campaign_json, campaign_json_with_extras, write_campaign,
     write_campaign_with_extras, CAMPAIGN_SCHEMA,
 };
-pub use diff::{diff_campaigns, diff_table, read_campaign_str, CampaignDiff};
+pub use diff::{diff_campaigns, diff_json, diff_table, read_campaign_str, CampaignDiff};
 pub use figures::{
     campaign_table, fig10, fig11, fig12, fig1_3, fig1_3_from_points, fig7, fig8, fig9,
 };

@@ -7,6 +7,7 @@
 //! bitonic_merge inputs=f32[512];f32[512];f32[] output=f32[512]
 //! ```
 
+// lbsp-lint: allow(determinism) reason="spec lookup by name; iteration uses the `order` Vec"
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -26,6 +27,7 @@ pub struct ArtifactSpec {
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
     order: Vec<String>,
+    // lbsp-lint: allow(determinism) reason="name-keyed lookups; `specs()` iterates `order`, not this map"
     by_name: HashMap<String, ArtifactSpec>,
 }
 

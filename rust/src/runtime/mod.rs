@@ -13,6 +13,7 @@
 pub mod manifest;
 pub mod surface;
 
+// lbsp-lint: allow(determinism) reason="executable registry: name-keyed lookups, iteration order unused"
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -23,6 +24,7 @@ use manifest::{ArtifactSpec, Manifest};
 /// A loaded, compiled artifact registry over one PJRT client.
 pub struct Runtime {
     client: xla::PjRtClient,
+    // lbsp-lint: allow(determinism) reason="looked up by artifact name only, never iterated"
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     manifest: Manifest,
     dir: PathBuf,
@@ -35,6 +37,7 @@ impl Runtime {
         let manifest = Manifest::load(&dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        // lbsp-lint: allow(determinism) reason="filled in manifest order, consumed by keyed lookup"
         let mut executables = HashMap::new();
         for spec in manifest.specs() {
             let path = dir.join(format!("{}.hlo.txt", spec.name));

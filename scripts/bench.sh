@@ -24,6 +24,19 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
+# Fail loudly — not silently skip — when a bench this script depends on
+# is missing from the Cargo.toml manifest. `cargo bench --bench X` on an
+# undeclared name errors, but only after a build; this guard names the
+# actual problem (an unregistered target, the PR 7 bug class that
+# `lbsp lint` also checks) before any compilation starts.
+for bench in campaign_scaling protocol_schemes; do
+    if ! grep -q "name = \"$bench\"" Cargo.toml; then
+        echo "bench: bench target '$bench' is not declared in Cargo.toml" >&2
+        echo "bench: add a [[bench]] entry (see lbsp lint, target-registration)" >&2
+        exit 1
+    fi
+done
+
 echo "== cargo bench campaign_scaling (-> BENCH_campaign.json) =="
 LBSP_BENCH_OUT=BENCH_campaign.json \
     cargo bench --bench campaign_scaling

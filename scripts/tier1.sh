@@ -5,9 +5,12 @@
 #
 # Fail-fast ordering: the cheap static gates run first (`cargo fmt
 # --check`, seconds) so a style regression is reported before the
-# minutes-long release build, then the build, the full test suite, and
-# finally `cargo clippy -D warnings` (needs the build graph anyway, so
-# it rides the warm cache). fmt/clippy are skipped with a notice when
+# minutes-long release build, then the build, the in-tree contract
+# linter (`lbsp lint` — determinism / trace-gating / target
+# registration / schema drift / rng hygiene, see
+# rust/src/analysis/README.md), the full test suite, and finally
+# `cargo clippy -D warnings` (needs the build graph anyway, so it
+# rides the warm cache). fmt/clippy are skipped with a notice when
 # the respective component is not installed. Fails with a clear message
 # when no Rust toolchain is present at all (e.g. the compile-only
 # sandbox, which carries the Python/JAX side but no cargo).
@@ -30,6 +33,13 @@ fi
 
 echo "== cargo build --release =="
 cargo build --release
+
+# Contract lint rides the binary that was just built: a violated
+# determinism/trace/schema/manifest contract fails tier-1 before any
+# test runs — these are exactly the bugs the test suite cannot see
+# (a HashMap iteration is nondeterministic, not wrong-on-this-seed).
+echo "== lbsp lint =="
+cargo run -q --release -- lint
 
 # Benches and examples are separate crates that `cargo build`/`cargo
 # test` never compile; build them explicitly so API drift in a bench or
@@ -95,14 +105,10 @@ rm -f "$trace_out"
 
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets -- -D warnings =="
-    # Tests/benches/examples are separate crates, so the conscious
-    # crate-level allows from rust/src/lib.rs are repeated on the
-    # command line to apply one lint posture everywhere.
-    cargo clippy -q --all-targets -- -D warnings \
-        -A clippy::too_many_arguments \
-        -A clippy::needless_range_loop \
-        -A clippy::should_implement_trait \
-        -A clippy::type_complexity
+    # The conscious allowlist lives in Cargo.toml's [lints.clippy]
+    # table, which applies to every target of the package — no
+    # per-crate attributes or command-line -A repetition needed.
+    cargo clippy -q --all-targets -- -D warnings
 else
     echo "(cargo clippy not installed; skipping lint check)"
 fi
