@@ -62,9 +62,10 @@ impl LintReport {
     }
 }
 
-/// Run the per-file rules (determinism, trace-gating, rng-hygiene) and
-/// the waiver machinery over one source file. `path` is repo-relative
-/// with `/` separators — it selects the rule scopes.
+/// Run the per-file rules (determinism, trace-gating, rng-hygiene,
+/// backend-isolation) and the waiver machinery over one source file.
+/// `path` is repo-relative with `/` separators — it selects the rule
+/// scopes.
 pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
     let toks = tokenize(src);
     let spans = test_spans(&toks);
@@ -72,6 +73,7 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
     findings.extend(rules::rule_determinism(path, &toks, &spans));
     findings.extend(rules::rule_trace_gating(path, &toks, &spans));
     findings.extend(rules::rule_rng_hygiene(path, &toks, &spans));
+    findings.extend(rules::rule_backend_isolation(path, &toks, &spans));
 
     let (waivers, errors) = parse_waivers(src);
     for e in errors {

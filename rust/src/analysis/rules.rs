@@ -1,4 +1,4 @@
-//! The five contract rules. Each is a pure function over the token
+//! The six contract rules. Each is a pure function over the token
 //! stream (or over plain text for the manifest/doc checks) so the test
 //! suite can drive hit/miss/waiver cases from inline fixtures without
 //! touching the filesystem.
@@ -13,6 +13,7 @@ pub enum RuleId {
     TargetRegistration,
     SchemaDrift,
     RngHygiene,
+    BackendIsolation,
     /// Meta-rule: a malformed waiver (no reason, unknown rule name) is
     /// itself a finding, and is never waivable.
     WaiverSyntax,
@@ -26,14 +27,21 @@ impl RuleId {
             RuleId::TargetRegistration => "target-registration",
             RuleId::SchemaDrift => "schema-drift",
             RuleId::RngHygiene => "rng-hygiene",
+            RuleId::BackendIsolation => "backend-isolation",
             RuleId::WaiverSyntax => "waiver-syntax",
         }
     }
 }
 
 /// Rule names a waiver comment may legally reference.
-pub const WAIVABLE_RULES: &[&str] =
-    &["determinism", "trace-gating", "target-registration", "schema-drift", "rng-hygiene"];
+pub const WAIVABLE_RULES: &[&str] = &[
+    "determinism",
+    "trace-gating",
+    "target-registration",
+    "schema-drift",
+    "rng-hygiene",
+    "backend-isolation",
+];
 
 /// One lint finding. `waived` carries the waiver reason when an inline
 /// `// lbsp-lint: allow(…) reason="…"` covers the site.
@@ -117,7 +125,12 @@ const DET_BANNED: &[(&str, &str)] = &[
 ];
 
 /// Flag banned identifiers in deterministic modules (non-test code).
+/// `net/backend/` is carved out: real-socket backends are wall-clock by
+/// nature, and rule 6 polices the reverse containment.
 pub fn rule_determinism(path: &str, toks: &[Tok], spans: &[(usize, usize)]) -> Vec<Finding> {
+    if path.starts_with(BACKEND_DIR) {
+        return Vec::new();
+    }
     let Some(module) = module_of(path) else { return Vec::new() };
     if !DET_SCOPE.contains(&module) {
         return Vec::new();
@@ -240,6 +253,65 @@ pub fn rule_rng_hygiene(path: &str, toks: &[Tok], spans: &[(usize, usize)]) -> V
 }
 
 // ---------------------------------------------------------------------------
+// Rule 6: backend-isolation
+// ---------------------------------------------------------------------------
+
+/// The directory the transport backends own — the only non-test source
+/// where real sockets, OS threads and wall clocks may appear.
+pub const BACKEND_DIR: &str = "rust/src/net/backend/";
+
+/// Flag `std::net`, `std::thread` and `Instant` outside `net/backend/`
+/// (non-test code, whole `rust/src/` tree). The DES stays the default
+/// backend everywhere; anything touching real sockets, OS threads or
+/// the wall clock belongs behind the `Transport` contract — or carries
+/// a reasoned waiver (the coordinator's worker pool and the wall-clock
+/// bookkeeping the campaign schema documents as nondeterministic).
+pub fn rule_backend_isolation(path: &str, toks: &[Tok], spans: &[(usize, usize)]) -> Vec<Finding> {
+    if !path.starts_with("rust/src/") || path.starts_with(BACKEND_DIR) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut seen: Vec<(u32, &str)> = Vec::new();
+    type Seen<'a> = Vec<(u32, &'a str)>;
+    let flag = |line: u32, what: &'static str, out: &mut Vec<Finding>, seen: &mut Seen<'_>| {
+        if seen.contains(&(line, what)) {
+            return;
+        }
+        seen.push((line, what));
+        out.push(Finding::new(
+            RuleId::BackendIsolation,
+            path,
+            line,
+            format!(
+                "`{what}` outside `net/backend/`: real sockets, OS threads and \
+                 wall clocks live behind the Transport contract"
+            ),
+        ));
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if in_test(spans, i) {
+            continue;
+        }
+        if t.is_ident("Instant") {
+            flag(t.line, "Instant", &mut out, &mut seen);
+        }
+        if t.is_ident("std")
+            && toks.get(i + 1).is_some_and(|x| x.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|x| x.is_punct(':'))
+        {
+            match toks.get(i + 3) {
+                Some(x) if x.is_ident("net") => flag(t.line, "std::net", &mut out, &mut seen),
+                Some(x) if x.is_ident("thread") => {
+                    flag(t.line, "std::thread", &mut out, &mut seen)
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Rule 3: target-registration
 // ---------------------------------------------------------------------------
 
@@ -308,6 +380,7 @@ pub struct SchemaFacts {
     pub campaign_schema: Option<String>,
     pub diff_schema: Option<String>,
     pub trace_schema: Option<String>,
+    pub netbench_schema: Option<String>,
     pub csv_base_header: Option<String>,
     pub csv_summary_blocks: Vec<String>,
     pub csv_spread_blocks: Vec<String>,
@@ -386,6 +459,7 @@ pub fn schema_facts_from_sources(
         campaign_schema: const_str(artifacts_toks, "CAMPAIGN_SCHEMA"),
         diff_schema: const_str(diff_toks, "DIFF_SCHEMA"),
         trace_schema: const_str(obs_toks, "TRACE_SCHEMA"),
+        netbench_schema: const_str(artifacts_toks, "NETBENCH_SCHEMA"),
         csv_base_header: const_str(artifacts_toks, "CAMPAIGN_CSV_BASE_HEADER"),
         csv_summary_blocks: const_str_array(artifacts_toks, "CAMPAIGN_CSV_SUMMARY_BLOCKS"),
         csv_spread_blocks: const_str_array(artifacts_toks, "CAMPAIGN_CSV_SPREAD_BLOCKS"),
@@ -458,6 +532,17 @@ pub fn check_schema_facts(facts: &SchemaFacts, roadmap: &str, obs_readme: &str) 
         Some(tag) => {
             if !roadmap.contains(tag.as_str()) {
                 miss(ROADMAP, format!("diff schema tag `{tag}` not documented in ROADMAP.md"));
+            }
+        }
+    }
+    match &facts.netbench_schema {
+        None => miss(ARTIFACTS, "could not extract `NETBENCH_SCHEMA` const".into()),
+        Some(tag) => {
+            if !roadmap.contains(tag.as_str()) {
+                miss(
+                    ROADMAP,
+                    format!("netbench schema tag `{tag}` not documented in ROADMAP.md"),
+                );
             }
         }
     }
@@ -618,6 +703,39 @@ mod tests {
     }
 
     #[test]
+    fn backend_isolation_flags_sockets_threads_and_clocks() {
+        let src = "use std::net::UdpSocket;\nuse std::thread;\n\
+                   fn f() { let t = Instant::now(); }\n";
+        let f = run(rule_backend_isolation, "rust/src/coordinator/queue.rs", src);
+        assert_eq!(f.len(), 3, "{f:?}");
+        assert!(f[0].message.contains("std::net"));
+        assert!(f[1].message.contains("std::thread"));
+        assert!(f[2].message.contains("Instant"));
+        // Scope is the whole src tree, main.rs and util included.
+        assert_eq!(run(rule_backend_isolation, "rust/src/main.rs", src).len(), 3);
+        assert_eq!(run(rule_backend_isolation, "rust/src/util/bench.rs", src).len(), 3);
+    }
+
+    #[test]
+    fn backend_isolation_exempts_backend_dir_and_tests() {
+        let src = "use std::net::UdpSocket;\nfn f() { let t = Instant::now(); }\n";
+        assert!(run(rule_backend_isolation, "rust/src/net/backend/udp.rs", src).is_empty());
+        assert!(run(rule_backend_isolation, "rust/tests/backend_parity.rs", src).is_empty());
+        let test_only = "#[cfg(test)]\nmod tests { use std::thread; fn f() { Instant::now(); } }\n";
+        assert!(run(rule_backend_isolation, "rust/src/net/protocol.rs", test_only).is_empty());
+        // `crate::net` paths and the module name itself never match.
+        let own_net = "use crate::net::Topology;\nfn f(n: &crate::net::transport::Network) {}\n";
+        assert!(run(rule_backend_isolation, "rust/src/bsp/runtime.rs", own_net).is_empty());
+    }
+
+    #[test]
+    fn determinism_carves_out_backend_dir() {
+        let src = "use std::time::Instant;\nuse std::collections::HashMap;\n";
+        assert!(run(rule_determinism, "rust/src/net/backend/udp.rs", src).is_empty());
+        assert_eq!(run(rule_determinism, "rust/src/net/transport.rs", src).len(), 2);
+    }
+
+    #[test]
     fn registration_requires_manifest_entries() {
         let cargo = "[[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n";
         let ok = check_registration(cargo, &["rust/tests/a.rs".into()], &[], &[]);
@@ -634,6 +752,7 @@ mod tests {
     fn schema_facts_extract_from_consts() {
         let artifacts = r#"
             pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v5";
+            pub const NETBENCH_SCHEMA: &str = "lbsp-netbench/v1";
             pub const CAMPAIGN_CSV_BASE_HEADER: &str = "a,b,c";
             pub const CAMPAIGN_CSV_SUMMARY_BLOCKS: [&str; 2] = ["x", "y"];
             pub const CAMPAIGN_CSV_SPREAD_BLOCKS: [&str; 1] = ["z"];
@@ -651,6 +770,7 @@ mod tests {
         assert_eq!(facts.campaign_schema.as_deref(), Some("lbsp-campaign/v5"));
         assert_eq!(facts.diff_schema.as_deref(), Some("lbsp-diff/v1"));
         assert_eq!(facts.trace_schema.as_deref(), Some("lbsp-trace/v1"));
+        assert_eq!(facts.netbench_schema.as_deref(), Some("lbsp-netbench/v1"));
         assert_eq!(facts.csv_base_header.as_deref(), Some("a,b,c"));
         assert_eq!(facts.csv_summary_blocks, vec!["x", "y"]);
         assert_eq!(facts.csv_spread_blocks, vec!["z"]);
@@ -664,13 +784,14 @@ mod tests {
             campaign_schema: Some("lbsp-campaign/v5".into()),
             diff_schema: Some("lbsp-diff/v1".into()),
             trace_schema: Some("lbsp-trace/v1".into()),
+            netbench_schema: Some("lbsp-netbench/v1".into()),
             csv_base_header: Some("a,b,c".into()),
             csv_summary_blocks: vec!["x".into()],
             csv_spread_blocks: vec!["z".into()],
             csv_columns: Some(13), // 3 base + 1×7 summary + 1×3 spread
             trace_tags: vec!["e1".into(), "e2".into(), "e3".into(), "e4".into(), "e5".into()],
         };
-        let roadmap = "lbsp-campaign/v5 lbsp-diff/v1 lbsp-trace/v1 a,b,\n  c x z \
+        let roadmap = "lbsp-campaign/v5 lbsp-diff/v1 lbsp-trace/v1 lbsp-netbench/v1 a,b,\n  c x z \
                        13 columns e1 e2 e3 e4 e5";
         let readme = "lbsp-trace/v1 e1 e2 e3 e4 e5";
         assert!(check_schema_facts(&facts, roadmap, readme).is_empty());

@@ -7,8 +7,9 @@ use crate::net::loss::PiecewiseStationary;
 use crate::net::protocol::{
     run_phase_scheme_traced, PhaseConfig, PhaseReport, RetransmitPolicy, Transfer,
 };
+use crate::net::backend::Transport;
 use crate::net::scheme::{KCopy, ReliabilityScheme};
-use crate::net::transport::Network;
+use crate::net::transport::{NetStats, Network};
 use crate::obs::{MetricsRegistry, TraceEvent, TraceSink};
 
 use super::program::{BspProgram, Outgoing};
@@ -98,9 +99,11 @@ impl RunReport {
     }
 }
 
-/// Drives a [`BspProgram`] over a lossy [`Network`].
+/// Drives a [`BspProgram`] over a lossy transport — the DES [`Network`]
+/// by default, or any other [`Transport`] backend (the loopback UDP
+/// backend runs the identical runtime; see [`crate::net::backend`]).
 pub struct BspRuntime {
-    net: Network,
+    net: Box<dyn Transport>,
     /// Reliability scheme driving every communication phase (k-copy by
     /// default — the paper's mechanism; see [`crate::net::scheme`]).
     scheme: Box<dyn ReliabilityScheme>,
@@ -136,6 +139,13 @@ pub struct BspRuntime {
 
 impl BspRuntime {
     pub fn new(net: Network) -> BspRuntime {
+        Self::with_transport(Box::new(net))
+    }
+
+    /// Construct over an arbitrary backend (`Box<dyn Transport>`) — the
+    /// entry point the UDP bench and the parity tests use; `new` is the
+    /// DES shorthand.
+    pub fn with_transport(net: Box<dyn Transport>) -> BspRuntime {
         BspRuntime {
             net,
             scheme: Box::new(KCopy),
@@ -221,8 +231,15 @@ impl BspRuntime {
         self.adapt.as_ref().map(|a| a.estimate())
     }
 
-    pub fn network(&self) -> &Network {
-        &self.net
+    /// The transport driving this runtime (any backend).
+    pub fn transport(&self) -> &dyn Transport {
+        &*self.net
+    }
+
+    /// Wire-counter snapshot of the underlying transport — what
+    /// `rt.network().stats` read before backends existed.
+    pub fn net_stats(&self) -> NetStats {
+        self.net.stats()
     }
 
     /// The timeout for a phase: `2τ = 2(κ·(c/n)·α + β)` with α from the
@@ -369,7 +386,8 @@ impl BspRuntime {
             let pairs_before: Option<BTreeMap<usize, (u64, u64)>> =
                 self.adapt.as_ref().map(|_| {
                     self.net
-                        .touched_pairs()
+                        .touched_pairs_snapshot()
+                        .into_iter()
                         .map(|(pair, sent, lost)| (pair, (sent, lost)))
                         .collect()
                 });
@@ -392,7 +410,7 @@ impl BspRuntime {
                     max_rounds: self.max_rounds,
                 };
                 run_phase_scheme_traced(
-                    &mut self.net,
+                    &mut *self.net,
                     &transfers,
                     &cfg,
                     self.scheme.as_ref(),
@@ -406,13 +424,13 @@ impl BspRuntime {
             // pairs (ascending pair id — the same order the old dense
             // scan visited them) keeps the feed O(touched).
             if let Some(before) = pairs_before {
-                let net = &self.net;
+                let pairs_now = self.net.touched_pairs_snapshot();
                 let tracing = self.trace.is_some();
                 // Only the traced path collects the fed deltas (the
                 // Vec stays unallocated otherwise).
                 let mut fed: Vec<(u64, u64, u64)> = Vec::new();
                 let ad = self.adapt.as_mut().expect("snapshot implies adapt");
-                for (pair, sent_now, lost_now) in net.touched_pairs() {
+                for (pair, sent_now, lost_now) in pairs_now {
                     let (s0, l0) = before.get(&pair).copied().unwrap_or((0, 0));
                     let ds = sent_now - s0;
                     if ds > 0 {
@@ -506,7 +524,7 @@ impl BspRuntime {
     /// metrics registry into the report and close the trace (outcome
     /// event + flush).
     fn finish(&mut self, report: &mut RunReport) {
-        let mut metrics = MetricsRegistry::from_network(&self.net);
+        let mut metrics = MetricsRegistry::from_transport(&*self.net);
         for s in &report.steps {
             metrics.rounds_hist.push(s.phase.rounds as u64);
         }

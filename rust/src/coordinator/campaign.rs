@@ -62,7 +62,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-// lbsp-lint: allow(determinism) reason="wall_s, the documented nondeterministic v5 extra kept outside CellSummary"
+// lbsp-lint: allow(determinism, backend-isolation) reason="wall_s, the documented nondeterministic v5 extra kept outside CellSummary"
 use std::time::Instant;
 
 use crate::adapt::{AdaptSpec, CostModel};
@@ -1011,7 +1011,7 @@ impl CampaignEngine {
             chunk
                 .iter()
                 .map(|t| {
-                    // lbsp-lint: allow(determinism) reason="feeds wall_s only, the documented nondeterministic v5 extra"
+                    // lbsp-lint: allow(determinism, backend-isolation) reason="feeds wall_s only, the documented nondeterministic v5 extra"
                     let t0 = Instant::now();
                     let mut r =
                         run_replica(&t.cell, t.rng.clone(), t.trace.as_deref());

@@ -60,6 +60,7 @@ impl WorkQueue {
         let (tx, rx) = mpsc::sync_channel::<(usize, Vec<R>)>(workers * 4);
 
         let mut by_index: BTreeMap<usize, Vec<R>> = BTreeMap::new();
+        // lbsp-lint: allow(backend-isolation) reason="the coordinator's scoped worker pool IS the legitimate threading root; replica results are reassembled in input order"
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 let source = Arc::clone(&source);

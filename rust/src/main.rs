@@ -36,6 +36,15 @@
 //!            [--out trace.jsonl]
 //!               run one traced replica: superstep timeline on stdout
 //!               (decisions, per-round loss, retunes) + lbsp-trace/v1 JSONL
+//! lbsp bench-net [--workload synthetic|matmul|sort|fft|laplace] [--nodes N]
+//!                [--p P] [--k K] [--replicas R] [--seed S]
+//!                [--time-scale X] [--out lbsp-netbench.json]
+//!               run every reliability scheme over real loopback UDP
+//!               sockets (net/backend/udp.rs) and persist per-scheme
+//!               goodput / wire efficiency / socket counters as an
+//!               lbsp-netbench/v1 JSON; LBSP_NETBENCH_REPLICAS caps
+//!               replicas from the environment (CI smokes);
+//!               --listen/--connect are reserved (exit 2)
 //! lbsp diff <baseline.json> <candidate.json> [--threshold Z] [--json]
 //!               flag speedup-mean regressions beyond Z combined sigma
 //!               (exit 1 on regression — CI-usable; --json emits the
@@ -68,6 +77,7 @@ use lbsp::net::rounds::estimate_rho;
 use lbsp::net::scheme::SchemeSpec;
 use lbsp::net::topology::Topology;
 use lbsp::net::transport::Network;
+use lbsp::net::UdpBackend;
 use lbsp::obs::{write_trace_jsonl, MemorySink, TraceEvent};
 use lbsp::report;
 use lbsp::runtime::Runtime;
@@ -589,6 +599,7 @@ fn cmd_campaign(args: &Args) {
         eprintln!("[tracing replica 0 of each cell under {}]", dir.display());
         engine = engine.with_trace_dir(dir);
     }
+    // lbsp-lint: allow(backend-isolation) reason="campaign wall_s bookkeeping, the documented nondeterministic v5 extra"
     let t0 = std::time::Instant::now();
     let (summaries, extras) = engine.run_with_extras(&spec);
     let dt = t0.elapsed().as_secs_f64();
@@ -738,6 +749,126 @@ fn cmd_trace(args: &Args) {
     eprintln!("[{} events -> {}]", events.len(), out_path.display());
 }
 
+/// `lbsp bench-net` — micro-benchmark of the real-socket UDP transport
+/// (`net/backend/udp.rs`): every reliability scheme runs the same
+/// workload over loopback sockets through `BspRuntime::with_transport`,
+/// then per-scheme goodput, wire efficiency, round counts and socket
+/// counters are printed and persisted as an `lbsp-netbench/v1` JSON
+/// artifact. `--listen`/`--connect` (true multi-host operation) are
+/// reserved flags and exit 2 until a follow-up wires them up.
+fn cmd_bench_net(args: &Args) {
+    let o = Opts::new(args, "bench-net");
+    if args.get("listen").is_some() || args.get("connect").is_some() {
+        eprintln!(
+            "bench-net: --listen/--connect (multi-host mode) is not implemented; \
+             the loopback bench is the only mode so far"
+        );
+        std::process::exit(2);
+    }
+    let workload_name = o.str("workload", "laplace");
+    if workload_name == "slotted" {
+        eprintln!(
+            "bench-net: the slotted abstraction sends no packets; \
+             pick a DES workload (synthetic|matmul|sort|fft|laplace)"
+        );
+        std::process::exit(2);
+    }
+    let (workload, _) = campaign_workload(&workload_name, &o);
+    let n = o.usize("nodes", 8);
+    let p = o.f64("p", 0.05);
+    let k = o.usize("k", 2) as u32;
+    let seed = o.usize("seed", 0xB5E7) as u64;
+    // CI smokes bound the bench from outside: the env cap wins over
+    // both the CLI flag and the config file.
+    let replicas = std::env::var("LBSP_NETBENCH_REPLICAS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| o.usize("replicas", 3))
+        .max(1);
+    let time_scale = o.f64("time-scale", 0.01);
+    let out = o.str("out", "lbsp-netbench.json");
+
+    let link = Link::from_mbytes(40.0, 0.07);
+    println!(
+        "bench-net: backend=udp-loopback workload={workload_name} n={n} p={p} k={k} \
+         replicas={replicas} seed={seed}"
+    );
+    let mut entries: Vec<report::NetBenchEntry> = Vec::new();
+    for scheme in SchemeSpec::ALL {
+        // Each scheme re-derives the same replica streams, so schemes
+        // face identical workloads and loss draws at the model level.
+        let mut rng = Rng::new(seed);
+        let mut agg = report::NetBenchEntry {
+            scheme: scheme.label().into(),
+            replicas: 0,
+            converged_frac: 0.0,
+            validated_frac: 0.0,
+            rounds_mean: 0.0,
+            payload_bytes: 0,
+            wire_bytes: 0,
+            wire_bytes_per_payload: 0.0,
+            model_time_s: 0.0,
+            wall_s: 0.0,
+            goodput_bytes_per_s: 0.0,
+            datagrams_sent: 0,
+            datagrams_received: 0,
+            injected_drops: 0,
+            wall_deadline_fires: 0,
+        };
+        let (mut converged, mut validated, mut rounds) = (0u64, 0u64, 0u64);
+        for _ in 0..replicas {
+            let wl = workload.instantiate(n, &mut rng);
+            let topo = Topology::uniform(wl.n_nodes(), link, p);
+            let mut udp = UdpBackend::new(topo, rng.next_u64()).unwrap_or_else(|e| {
+                eprintln!("bench-net: cannot bind loopback sockets: {e}");
+                std::process::exit(2);
+            });
+            udp.set_wall_per_model(time_scale);
+            let mut rt = BspRuntime::with_transport(Box::new(udp))
+                .with_copies(k)
+                .with_scheme(scheme.build());
+            // lbsp-lint: allow(backend-isolation) reason="goodput is wall-clock by definition; netbench artifacts are host-dependent like the campaign wall_s extra"
+            let t0 = std::time::Instant::now();
+            let run = wl.run_replica(&mut rt);
+            agg.wall_s += t0.elapsed().as_secs_f64();
+            agg.replicas += 1;
+            converged += run.converged as u64;
+            validated += run.validated as u64;
+            rounds += run.rounds;
+            agg.payload_bytes += run.payload_bytes;
+            agg.wire_bytes += run.wire_bytes;
+            agg.model_time_s += run.time_s;
+            let s = run.metrics.socket;
+            agg.datagrams_sent += s.datagrams_sent;
+            agg.datagrams_received += s.datagrams_received;
+            agg.injected_drops += s.injected_drops;
+            agg.wall_deadline_fires += s.wall_deadline_fires;
+        }
+        let r = agg.replicas as f64;
+        agg.converged_frac = converged as f64 / r;
+        agg.validated_frac = validated as f64 / r;
+        agg.rounds_mean = rounds as f64 / r;
+        agg.wire_bytes_per_payload = agg.wire_bytes as f64 / agg.payload_bytes.max(1) as f64;
+        agg.goodput_bytes_per_s = agg.payload_bytes as f64 / agg.wall_s.max(1e-9);
+        println!(
+            "  {:<8} goodput={}B/s wire/payload={} rounds={} drops={} \
+             deadline_fires={} converged={} validated={}",
+            agg.scheme,
+            fmt_num(agg.goodput_bytes_per_s),
+            fmt_num(agg.wire_bytes_per_payload),
+            fmt_num(agg.rounds_mean),
+            agg.injected_drops,
+            agg.wall_deadline_fires,
+            fmt_num(agg.converged_frac),
+            fmt_num(agg.validated_frac),
+        );
+        entries.push(agg);
+    }
+    let json = report::netbench_json("udp-loopback", &workload_name, n, p, k, seed, &entries);
+    std::fs::write(&out, json).unwrap_or_else(|e| panic!("--out {out}: {e}"));
+    eprintln!("[{} schemes -> {out}]", entries.len());
+}
+
 fn cmd_diff(args: &Args) {
     let (Some(path_a), Some(path_b)) = (args.positional.get(1), args.positional.get(2))
     else {
@@ -810,7 +941,7 @@ fn cmd_lint(args: &Args) {
 }
 
 const USAGE: &str =
-    "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign|trace|diff|lint> [options]
+    "usage: lbsp <measure|figure|table|plan|run|simval|sweep|campaign|trace|bench-net|diff|lint> [options]
   (see `rust/src/main.rs` doc header for details)";
 
 fn main() {
@@ -825,6 +956,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("campaign") => cmd_campaign(&args),
         Some("trace") => cmd_trace(&args),
+        Some("bench-net") => cmd_bench_net(&args),
         Some("diff") => cmd_diff(&args),
         Some("lint") => cmd_lint(&args),
         _ => {

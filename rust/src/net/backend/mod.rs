@@ -1,0 +1,371 @@
+//! Pluggable transport backends behind one object-safe contract.
+//!
+//! Every scheme, estimator and campaign in this repo drives the surface
+//! [`super::transport::Network`] exposes — send/send_group, the
+//! flow-level sends, timers, the event pump, `NetStats` and the
+//! touched-pair counters. [`Transport`] names that surface as an
+//! object-safe trait so the *same* `BspRuntime`, all four
+//! `ReliabilityScheme`s, the `adapt/` controllers and the `obs/` trace
+//! hooks run over either backend:
+//!
+//! * [`SimBackend`] — a thin wrapper over the discrete-event `Network`
+//!   (the default everywhere; behavior bitwise-unchanged — the DES is
+//!   also a `Transport` itself, so existing `&mut Network` call sites
+//!   coerce without wrapping).
+//! * [`UdpBackend`] — real `std::net::UdpSocket` datagrams on loopback
+//!   with a receiver thread per node ([`udp`]). Loss is *injected at
+//!   the receiver* from the same seeded [`Topology`] loss processes the
+//!   DES draws from, so a loopback run exercises real reordering,
+//!   duplication and wall-clock deadlines while converging under the
+//!   identical retransmission protocol.
+//!
+//! The contract each backend must honour (see `rust/src/net/README.md`
+//! §Backends for the full table):
+//!
+//! * **Ordering** — none promised. The DES delivers in simulated-time
+//!   order; real UDP delivers in whatever order the kernel dequeues.
+//!   Protocol state machines must tolerate reordering and duplication
+//!   (phase/round tags + idempotent ack bookkeeping).
+//! * **Timers** — [`Transport::arm_timer`] takes *model* seconds. The
+//!   DES schedules an event at `now + delay`; the socket backend maps
+//!   model seconds onto wall-clock deadlines (`wall = model ×
+//!   wall_per_model`, floored so loopback flight always fits).
+//! * **Counters** — `NetStats` and the per-pair `(sent, lost)` counters
+//!   mean the same thing on both backends: every wire copy is charged
+//!   at send, every loss (drawn at send on the DES, injected at the
+//!   receiver over UDP) increments `lost`, so the estimator feed is
+//!   backend-agnostic.
+//! * **`step()`** — `None` means "no event will ever arrive" (DES queue
+//!   empty; socket backend idle past its grace window with no armed
+//!   deadline). While a phase is in flight a round timer is always
+//!   armed, so `None` is the dead-network failure path on both.
+
+pub mod udp;
+
+use super::packet::{NodeId, Packet, PacketKind};
+use super::topology::Topology;
+use super::transport::{NetEvent, NetStats, Network};
+use crate::simcore::SimTime;
+
+pub use udp::UdpBackend;
+
+/// Counters only a real-socket backend moves (all zero on the DES —
+/// which is what keeps DES `MetricsRegistry` snapshots byte-identical
+/// to their pre-backend values).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SocketCounters {
+    /// Datagrams actually written to a socket (every wire copy).
+    pub datagrams_sent: u64,
+    /// Well-formed frames the receiver threads decoded.
+    pub datagrams_received: u64,
+    /// Frames dropped at the receiver by the injected loss process.
+    pub injected_drops: u64,
+    /// Protocol timers that fired as wall-clock deadlines.
+    pub wall_deadline_fires: u64,
+}
+
+impl SocketCounters {
+    /// The scalar counters as a named, iterable surface (the
+    /// `lbsp-netbench/v1` artifact writer's source).
+    pub fn counters(&self) -> [(&'static str, u64); 4] {
+        [
+            ("datagrams_sent", self.datagrams_sent),
+            ("datagrams_received", self.datagrams_received),
+            ("injected_drops", self.injected_drops),
+            ("wall_deadline_fires", self.wall_deadline_fires),
+        ]
+    }
+}
+
+/// The object-safe transport contract (see module docs). `Send` so a
+/// boxed backend rides inside `BspRuntime` across campaign worker
+/// threads, exactly like the boxed scheme and trace sink.
+pub trait Transport: Send {
+    /// Stable backend label (artifact-safe: lowercase, no separators).
+    fn label(&self) -> &'static str;
+
+    /// Current model time (simulated clock on the DES; scaled wall
+    /// clock on a socket backend).
+    fn now(&self) -> SimTime;
+
+    /// The seeded topology whose link parameters and loss processes
+    /// govern this backend.
+    fn topology(&self) -> &Topology;
+
+    /// Re-tune every pair's loss process to mean `p`, kind-preserving
+    /// (the apply step of a piecewise-stationary loss schedule).
+    fn set_mean_loss(&mut self, p: f64);
+
+    /// Send one datagram (fire-and-forget; loss per the pair's
+    /// process).
+    fn send(&mut self, pkt: Packet);
+
+    /// Send a batch of datagrams sharing one directed pair — the
+    /// protocol's per-`(pair, round)` emission unit.
+    fn send_group(&mut self, batch: &[Packet]);
+
+    /// Flow-level send for schemes that simulate their own timing (the
+    /// TCP-like baseline): charge the wire copy and draw its fate
+    /// without scheduling an event. Returns `true` when lost.
+    fn flow_send(&mut self, src: NodeId, dst: NodeId, kind: PacketKind, bytes: u64) -> bool;
+
+    /// Batched [`Transport::flow_send`] on one directed pair; fills
+    /// `fates` (`fates[i]` = lost).
+    fn flow_send_group(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        sizes: &[u64],
+        fates: &mut Vec<bool>,
+    );
+
+    /// Arm a protocol timer owned by `node` firing after `delay_s`
+    /// *model* seconds.
+    fn arm_timer(&mut self, node: NodeId, token: u64, delay_s: f64);
+
+    /// Advance to the next event; `None` = no event will ever arrive.
+    fn step(&mut self) -> Option<(SimTime, NetEvent)>;
+
+    /// Counter snapshot (the measurement layers read this, never the
+    /// concrete backend's fields).
+    fn stats(&self) -> NetStats;
+
+    /// Raw PRNG outputs this backend's loss stream has consumed.
+    fn rng_draws(&self) -> u64;
+
+    /// The directed pairs that have carried traffic, in ascending
+    /// pair-id order, as `(pair_id, sent, lost)` cumulative counts —
+    /// the object-safe counterpart of `Network::touched_pairs` (a
+    /// snapshot `Vec` instead of a borrowed iterator; O(touched)).
+    fn touched_pairs_snapshot(&self) -> Vec<(usize, u64, u64)>;
+
+    /// Number of directed pairs that have carried traffic.
+    fn n_touched_pairs(&self) -> usize;
+
+    /// Socket-layer counters; identically zero on the DES (default).
+    fn socket_counters(&self) -> SocketCounters {
+        SocketCounters::default()
+    }
+}
+
+/// The DES `Network` *is* a transport — implementing the trait directly
+/// on it keeps every existing `&mut net` call site (tests, benches,
+/// examples) valid through unsized coercion, with zero behavior change.
+impl Transport for Network {
+    fn label(&self) -> &'static str {
+        "sim"
+    }
+
+    fn now(&self) -> SimTime {
+        Network::now(self)
+    }
+
+    fn topology(&self) -> &Topology {
+        Network::topology(self)
+    }
+
+    fn set_mean_loss(&mut self, p: f64) {
+        Network::set_mean_loss(self, p);
+    }
+
+    fn send(&mut self, pkt: Packet) {
+        Network::send(self, pkt);
+    }
+
+    fn send_group(&mut self, batch: &[Packet]) {
+        Network::send_group(self, batch);
+    }
+
+    fn flow_send(&mut self, src: NodeId, dst: NodeId, kind: PacketKind, bytes: u64) -> bool {
+        Network::flow_send(self, src, dst, kind, bytes)
+    }
+
+    fn flow_send_group(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        sizes: &[u64],
+        fates: &mut Vec<bool>,
+    ) {
+        Network::flow_send_group(self, src, dst, kind, sizes, fates);
+    }
+
+    fn arm_timer(&mut self, node: NodeId, token: u64, delay_s: f64) {
+        Network::arm_timer(self, node, token, delay_s);
+    }
+
+    fn step(&mut self) -> Option<(SimTime, NetEvent)> {
+        Network::step(self)
+    }
+
+    fn stats(&self) -> NetStats {
+        self.stats
+    }
+
+    fn rng_draws(&self) -> u64 {
+        Network::rng_draws(self)
+    }
+
+    fn touched_pairs_snapshot(&self) -> Vec<(usize, u64, u64)> {
+        self.touched_pairs().collect()
+    }
+
+    fn n_touched_pairs(&self) -> usize {
+        Network::n_touched_pairs(self)
+    }
+}
+
+/// Thin named wrapper over the DES `Network` — the default backend
+/// everywhere a `Box<dyn Transport>` is constructed explicitly (the
+/// bench-net CLI's `--backend sim` arm, parity tests). Pure
+/// delegation: a `SimBackend` run is the wrapped `Network` run.
+pub struct SimBackend(Network);
+
+impl SimBackend {
+    pub fn new(net: Network) -> SimBackend {
+        SimBackend(net)
+    }
+
+    pub fn inner(&self) -> &Network {
+        &self.0
+    }
+
+    pub fn inner_mut(&mut self) -> &mut Network {
+        &mut self.0
+    }
+
+    pub fn into_inner(self) -> Network {
+        self.0
+    }
+}
+
+impl Transport for SimBackend {
+    fn label(&self) -> &'static str {
+        "sim"
+    }
+
+    fn now(&self) -> SimTime {
+        self.0.now()
+    }
+
+    fn topology(&self) -> &Topology {
+        self.0.topology()
+    }
+
+    fn set_mean_loss(&mut self, p: f64) {
+        self.0.set_mean_loss(p);
+    }
+
+    fn send(&mut self, pkt: Packet) {
+        self.0.send(pkt);
+    }
+
+    fn send_group(&mut self, batch: &[Packet]) {
+        self.0.send_group(batch);
+    }
+
+    fn flow_send(&mut self, src: NodeId, dst: NodeId, kind: PacketKind, bytes: u64) -> bool {
+        self.0.flow_send(src, dst, kind, bytes)
+    }
+
+    fn flow_send_group(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        sizes: &[u64],
+        fates: &mut Vec<bool>,
+    ) {
+        self.0.flow_send_group(src, dst, kind, sizes, fates);
+    }
+
+    fn arm_timer(&mut self, node: NodeId, token: u64, delay_s: f64) {
+        self.0.arm_timer(node, token, delay_s);
+    }
+
+    fn step(&mut self) -> Option<(SimTime, NetEvent)> {
+        self.0.step()
+    }
+
+    fn stats(&self) -> NetStats {
+        self.0.stats
+    }
+
+    fn rng_draws(&self) -> u64 {
+        self.0.rng_draws()
+    }
+
+    fn touched_pairs_snapshot(&self) -> Vec<(usize, u64, u64)> {
+        self.0.touched_pairs().collect()
+    }
+
+    fn n_touched_pairs(&self) -> usize {
+        self.0.n_touched_pairs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::Link;
+
+    fn net(p: f64, seed: u64) -> Network {
+        Network::new(Topology::uniform(2, Link::from_mbytes(10.0, 0.1), p), seed)
+    }
+
+    #[test]
+    fn network_and_simbackend_agree_event_for_event() {
+        let mut raw = net(0.2, 9);
+        let mut wrapped = SimBackend::new(net(0.2, 9));
+        for seq in 0..200u64 {
+            raw.send(Packet::data(0, 1, seq, 0, 1024));
+            Transport::send(&mut wrapped, Packet::data(0, 1, seq, 0, 1024));
+        }
+        loop {
+            let a = raw.step();
+            let b = Transport::step(&mut wrapped);
+            match (a, b) {
+                (None, None) => break,
+                (Some((ta, NetEvent::Deliver(pa))), Some((tb, NetEvent::Deliver(pb)))) => {
+                    assert_eq!(ta, tb);
+                    assert_eq!(pa, pb);
+                }
+                other => panic!("diverged: {other:?}"),
+            }
+        }
+        assert_eq!(raw.stats, Transport::stats(&wrapped));
+        assert_eq!(raw.rng_draws(), Transport::rng_draws(&wrapped));
+        assert_eq!(
+            raw.touched_pairs().collect::<Vec<_>>(),
+            wrapped.touched_pairs_snapshot()
+        );
+    }
+
+    #[test]
+    fn des_backends_report_zero_socket_counters() {
+        let raw = net(0.0, 1);
+        assert_eq!(Transport::socket_counters(&raw), SocketCounters::default());
+        let wrapped = SimBackend::new(net(0.0, 1));
+        assert_eq!(wrapped.socket_counters(), SocketCounters::default());
+        assert_eq!(Transport::label(&raw), "sim");
+        assert_eq!(wrapped.label(), "sim");
+    }
+
+    #[test]
+    fn socket_counters_surface_is_name_stable() {
+        let c = SocketCounters {
+            datagrams_sent: 4,
+            datagrams_received: 3,
+            injected_drops: 1,
+            wall_deadline_fires: 2,
+        };
+        let names: Vec<&str> = c.counters().iter().map(|&(n, _)| n).collect();
+        assert_eq!(
+            names,
+            ["datagrams_sent", "datagrams_received", "injected_drops", "wall_deadline_fires"]
+        );
+        assert_eq!(c.counters()[0].1, 4);
+    }
+}

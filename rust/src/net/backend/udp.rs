@@ -1,0 +1,597 @@
+//! Real-socket transport: `std::net::UdpSocket` datagrams on loopback.
+//!
+//! One socket per node bound to `127.0.0.1:0`, one receiver thread per
+//! node feeding a shared channel, a 33-byte framed wire format carrying
+//! `Packet`'s metadata, and wall-clock deadlines for protocol timers.
+//! The protocol payload itself never crosses the wire — exactly as in
+//! the DES, the BSP layer moves application bytes through its own
+//! buffers keyed by `(phase, seq)`; the transport carries the
+//! *transmission* (so a data frame is padded toward its model size, up
+//! to one unfragmented MTU's worth, to keep wire timing honest without
+//! fragmentation).
+//!
+//! # Loss injection
+//!
+//! Real loopback never drops packets, so the backend injects loss *at
+//! the receiver*: every decoded frame is put through the same seeded
+//! [`Topology`] loss processes the DES draws from, on the main thread
+//! (inside [`UdpBackend::step`]), in arrival order. Loss parameters,
+//! burst structure and the adaptive controllers' observable loss rates
+//! therefore match the simulated world; what differs — and what this
+//! backend exists to exercise — is ordering, duplication and wall-clock
+//! timing, which the kernel provides for free.
+//!
+//! Arrival order is a race between receiver threads, so the *assignment*
+//! of loss draws to packets differs run to run even with a fixed seed;
+//! the marginal loss process per pair is the seeded one regardless.
+//! Parity with the DES is therefore behavioral (both converge, both
+//! validate, same delivered payload set), not draw-for-draw.
+//!
+//! # Timer mapping
+//!
+//! [`Transport::arm_timer`] takes model seconds; the backend scales them
+//! onto the wall clock (`wall = model × wall_per_model`, floored at
+//! [`MIN_TIMER_WALL`] so a deadline never fires before loopback flight
+//! completes) and reports [`Transport::now`] as scaled-back wall time so
+//! phase durations stay in model units for the report layer.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, UdpSocket};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::simcore::SimTime;
+use crate::util::prng::Rng;
+
+use super::super::packet::{NodeId, Packet, PacketKind};
+use super::super::topology::Topology;
+use super::super::transport::{NetEvent, NetStats};
+use super::{SocketCounters, Transport};
+
+/// Frame magic: ASCII "LBSP", little-endian.
+const MAGIC: u32 = 0x4C42_5350;
+
+/// Fixed frame header: magic u32 · kind u8 · src u32 · dst u32 ·
+/// seq u64 · copy u32 · size_bytes u64, all little-endian.
+const HEADER_BYTES: usize = 33;
+
+/// Padding cap: keep every frame inside one unfragmented datagram.
+const MAX_PAD_BYTES: usize = 1200;
+
+/// Receiver-thread poll interval (how fast threads notice shutdown).
+const POLL: Duration = Duration::from_millis(25);
+
+/// Floor on any wall deadline: loopback flight plus scheduling jitter.
+const MIN_TIMER_WALL: Duration = Duration::from_millis(5);
+
+/// How long an idle `step()` waits for stragglers before concluding no
+/// event will ever arrive (the DES-queue-empty analogue).
+const IDLE_GRACE: Duration = Duration::from_millis(50);
+
+/// Default wall seconds per model second. Model phase timeouts are
+/// O(0.1–10 s); at 0.05 wall-s/model-s a whole tier-1 smoke run fits
+/// in single-digit wall seconds while every deadline still clears
+/// [`MIN_TIMER_WALL`].
+const DEFAULT_WALL_PER_MODEL: f64 = 0.05;
+
+fn encode(pkt: &Packet) -> Vec<u8> {
+    let pad = (pkt.size_bytes as usize).min(MAX_PAD_BYTES);
+    let mut buf = vec![0u8; HEADER_BYTES + pad];
+    buf[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    buf[4] = match pkt.kind {
+        PacketKind::Data => 0,
+        PacketKind::Ack => 1,
+    };
+    buf[5..9].copy_from_slice(&(pkt.src as u32).to_le_bytes());
+    buf[9..13].copy_from_slice(&(pkt.dst as u32).to_le_bytes());
+    buf[13..21].copy_from_slice(&pkt.seq.to_le_bytes());
+    buf[21..25].copy_from_slice(&pkt.copy.to_le_bytes());
+    buf[25..33].copy_from_slice(&pkt.size_bytes.to_le_bytes());
+    buf
+}
+
+/// Decode and validate a frame; `None` for anything malformed or
+/// foreign (bad magic, unknown kind, short header, out-of-range node).
+/// Real sockets can hand us traffic we never sent; the protocol layer
+/// must never see it.
+fn decode(buf: &[u8], n_nodes: usize) -> Option<Packet> {
+    if buf.len() < HEADER_BYTES {
+        return None;
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().ok()?);
+    if magic != MAGIC {
+        return None;
+    }
+    let kind = match buf[4] {
+        0 => PacketKind::Data,
+        1 => PacketKind::Ack,
+        _ => return None,
+    };
+    let src = u32::from_le_bytes(buf[5..9].try_into().ok()?) as usize;
+    let dst = u32::from_le_bytes(buf[9..13].try_into().ok()?) as usize;
+    if src >= n_nodes || dst >= n_nodes {
+        return None;
+    }
+    let seq = u64::from_le_bytes(buf[13..21].try_into().ok()?);
+    let copy = u32::from_le_bytes(buf[21..25].try_into().ok()?);
+    let size_bytes = u64::from_le_bytes(buf[25..33].try_into().ok()?);
+    Some(Packet { src, dst, kind, seq, copy, size_bytes })
+}
+
+fn receiver_loop(
+    sock: UdpSocket,
+    n_nodes: usize,
+    tx: Sender<Packet>,
+    stop: Arc<AtomicBool>,
+    received: Arc<AtomicU64>,
+) {
+    let mut buf = [0u8; HEADER_BYTES + MAX_PAD_BYTES];
+    while !stop.load(Ordering::Relaxed) {
+        match sock.recv_from(&mut buf) {
+            Ok((len, _peer)) => {
+                if let Some(pkt) = decode(&buf[..len], n_nodes) {
+                    received.fetch_add(1, Ordering::Relaxed);
+                    if tx.send(pkt).is_err() {
+                        return; // backend dropped mid-flight
+                    }
+                }
+            }
+            // WouldBlock/TimedOut: read timeout expired — re-check stop.
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Loopback UDP transport (module docs). Single-process: all `n` node
+/// sockets live here; `send` writes from the source node's socket to
+/// the destination node's address, so traffic crosses the real kernel
+/// UDP path per directed pair.
+pub struct UdpBackend {
+    topo: Topology,
+    /// Receiver-side loss-injection stream (split-derived seed).
+    rng: Rng,
+    sockets: Vec<UdpSocket>,
+    addrs: Vec<SocketAddr>,
+    rx: Receiver<Packet>,
+    threads: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    received: Arc<AtomicU64>,
+    stats: NetStats,
+    sock: SocketCounters,
+    /// Cumulative (sent, lost) per touched directed pair id `src·n+dst`
+    /// — the estimator feed, same keying as the DES's sparse maps.
+    pairs: BTreeMap<u64, (u64, u64)>,
+    /// Armed wall deadlines: (deadline nanos since start, arm seq) →
+    /// (owner node, token). The seq makes simultaneous deadlines
+    /// distinct and FIFO.
+    timers: BTreeMap<(u64, u64), (NodeId, u64)>,
+    timer_seq: u64,
+    start: Instant,
+    wall_per_model: f64,
+    duplicate_sends: bool,
+}
+
+impl UdpBackend {
+    /// Bind `topo.n()` loopback sockets and spawn their receiver
+    /// threads. `seed` feeds the receiver-side loss-injection stream
+    /// and must come from the caller's split tree, like `Network::new`.
+    pub fn new(topo: Topology, seed: u64) -> std::io::Result<UdpBackend> {
+        let n = topo.n();
+        let mut sockets = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = UdpSocket::bind(("127.0.0.1", 0))?;
+            addrs.push(s.local_addr()?);
+            sockets.push(s);
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let received = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        let mut threads = Vec::with_capacity(n);
+        for s in &sockets {
+            let rsock = s.try_clone()?;
+            rsock.set_read_timeout(Some(POLL))?;
+            let (tx, stop, received) = (tx.clone(), stop.clone(), received.clone());
+            threads.push(std::thread::spawn(move || {
+                receiver_loop(rsock, n, tx, stop, received)
+            }));
+        }
+        drop(tx); // receivers hold the only senders
+        Ok(UdpBackend {
+            topo,
+            // lbsp-lint: allow(rng-hygiene) reason="loss-injection stream: `seed` is the caller's split-derived seed, same contract as Network::new"
+            rng: Rng::new(seed),
+            sockets,
+            addrs,
+            rx,
+            threads,
+            stop,
+            received,
+            stats: NetStats::default(),
+            sock: SocketCounters::default(),
+            pairs: BTreeMap::new(),
+            timers: BTreeMap::new(),
+            timer_seq: 0,
+            start: Instant::now(),
+            wall_per_model: DEFAULT_WALL_PER_MODEL,
+            duplicate_sends: false,
+        })
+    }
+
+    /// Override the wall-per-model time scale (tests / bench tuning).
+    pub fn set_wall_per_model(&mut self, scale: f64) {
+        assert!(scale > 0.0 && scale.is_finite(), "bad time scale {scale}");
+        self.wall_per_model = scale;
+    }
+
+    /// Adversarial knob: emit every datagram twice. Real WANs duplicate;
+    /// loopback never does, so the duplication test forces it here.
+    pub fn force_duplicate_sends(&mut self, on: bool) {
+        self.duplicate_sends = on;
+    }
+
+    fn charge_pair(&mut self, src: NodeId, dst: NodeId, sent: u64, lost: u64) {
+        let id = src as u64 * self.topo.n() as u64 + dst as u64;
+        let e = self.pairs.entry(id).or_insert((0, 0));
+        e.0 += sent;
+        e.1 += lost;
+    }
+
+    fn wall_nanos(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    fn model_now(&self) -> SimTime {
+        SimTime::from_secs_f64(self.start.elapsed().as_secs_f64() / self.wall_per_model)
+    }
+
+    /// Put one decoded frame through the injected loss process; `Some`
+    /// when it survives to become a protocol event.
+    fn admit(&mut self, pkt: Packet) -> Option<(SimTime, NetEvent)> {
+        if self.topo.lose(pkt.src, pkt.dst, &mut self.rng) {
+            self.stats.lost += 1;
+            self.sock.injected_drops += 1;
+            self.charge_pair(pkt.src, pkt.dst, 0, 1);
+            return None;
+        }
+        match pkt.kind {
+            PacketKind::Data => self.stats.data_delivered += 1,
+            PacketKind::Ack => self.stats.acks_delivered += 1,
+        }
+        Some((self.model_now(), NetEvent::Deliver(pkt)))
+    }
+
+    /// Fire the earliest due timer, if any.
+    fn pop_due_timer(&mut self) -> Option<(SimTime, NetEvent)> {
+        let (&key, &(node, token)) = self.timers.iter().next()?;
+        if key.0 > self.wall_nanos() {
+            return None;
+        }
+        self.timers.remove(&key);
+        self.sock.wall_deadline_fires += 1;
+        Some((self.model_now(), NetEvent::Timer { node, token }))
+    }
+
+    /// Wall time until the earliest armed deadline (None = no timers).
+    fn until_next_timer(&self) -> Option<Duration> {
+        let (&(deadline, _), _) = self.timers.iter().next()?;
+        Some(Duration::from_nanos(deadline.saturating_sub(self.wall_nanos())))
+    }
+}
+
+impl Transport for UdpBackend {
+    fn label(&self) -> &'static str {
+        "udp"
+    }
+
+    fn now(&self) -> SimTime {
+        self.model_now()
+    }
+
+    fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    fn set_mean_loss(&mut self, p: f64) {
+        self.topo.set_mean_loss_all(p);
+    }
+
+    fn send(&mut self, pkt: Packet) {
+        match pkt.kind {
+            PacketKind::Data => self.stats.data_sent += 1,
+            PacketKind::Ack => self.stats.acks_sent += 1,
+        }
+        self.stats.bytes_sent += pkt.size_bytes;
+        let copies = if self.duplicate_sends { 2 } else { 1 };
+        self.charge_pair(pkt.src, pkt.dst, copies, 0);
+        let frame = encode(&pkt);
+        for _ in 0..copies {
+            // A refused send (full buffer, teardown race) is just a
+            // lost datagram; retransmission owns recovery.
+            if self.sockets[pkt.src].send_to(&frame, self.addrs[pkt.dst]).is_ok() {
+                self.sock.datagrams_sent += 1;
+            }
+        }
+    }
+
+    fn send_group(&mut self, batch: &[Packet]) {
+        for &pkt in batch {
+            self.send(pkt);
+        }
+    }
+
+    fn flow_send(&mut self, src: NodeId, dst: NodeId, kind: PacketKind, bytes: u64) -> bool {
+        // Flow-level schemes simulate their own timing; this path stays
+        // model-side (no datagrams), mirroring `Network::flow_send` so
+        // the TCP-like baseline behaves identically on both backends.
+        match kind {
+            PacketKind::Data => self.stats.data_sent += 1,
+            PacketKind::Ack => self.stats.acks_sent += 1,
+        }
+        self.stats.bytes_sent += bytes;
+        if self.topo.lose(src, dst, &mut self.rng) {
+            self.stats.lost += 1;
+            self.charge_pair(src, dst, 1, 1);
+            return true;
+        }
+        self.charge_pair(src, dst, 1, 0);
+        match kind {
+            PacketKind::Data => self.stats.data_delivered += 1,
+            PacketKind::Ack => self.stats.acks_delivered += 1,
+        }
+        false
+    }
+
+    fn flow_send_group(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        sizes: &[u64],
+        fates: &mut Vec<bool>,
+    ) {
+        let count = sizes.len();
+        fates.clear();
+        if count == 0 {
+            return;
+        }
+        self.topo.lose_batch(src, dst, count, &mut self.rng, fates);
+        let lost_total = fates.iter().filter(|&&l| l).count() as u64;
+        let delivered = count as u64 - lost_total;
+        match kind {
+            PacketKind::Data => {
+                self.stats.data_sent += count as u64;
+                self.stats.data_delivered += delivered;
+            }
+            PacketKind::Ack => {
+                self.stats.acks_sent += count as u64;
+                self.stats.acks_delivered += delivered;
+            }
+        }
+        self.stats.bytes_sent += sizes.iter().sum::<u64>();
+        self.stats.lost += lost_total;
+        self.charge_pair(src, dst, count as u64, lost_total);
+    }
+
+    fn arm_timer(&mut self, node: NodeId, token: u64, delay_s: f64) {
+        let wall = Duration::from_secs_f64((delay_s * self.wall_per_model).max(0.0))
+            .max(MIN_TIMER_WALL);
+        let deadline = self.wall_nanos() + wall.as_nanos() as u64;
+        self.timer_seq += 1;
+        self.timers.insert((deadline, self.timer_seq), (node, token));
+    }
+
+    fn step(&mut self) -> Option<(SimTime, NetEvent)> {
+        loop {
+            // Drain anything already queued before consulting the clock.
+            match self.rx.try_recv() {
+                Ok(pkt) => match self.admit(pkt) {
+                    Some(ev) => return Some(ev),
+                    None => continue,
+                },
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => return self.pop_due_timer(),
+            }
+            if let Some(ev) = self.pop_due_timer() {
+                return Some(ev);
+            }
+            let wait = match self.until_next_timer() {
+                // Wake at the deadline, but no later than the poll
+                // quantum so a just-armed earlier timer is honored.
+                Some(d) => d.min(POLL).max(Duration::from_micros(100)),
+                // No deadline armed: a phase is not in flight (the
+                // protocol always has a round timer pending while one
+                // is). Wait out a grace window for stragglers, then
+                // report the network permanently idle.
+                None => match self.rx.recv_timeout(IDLE_GRACE) {
+                    Ok(pkt) => match self.admit(pkt) {
+                        Some(ev) => return Some(ev),
+                        None => continue,
+                    },
+                    Err(_) => return None,
+                },
+            };
+            match self.rx.recv_timeout(wait) {
+                Ok(pkt) => match self.admit(pkt) {
+                    Some(ev) => return Some(ev),
+                    None => continue,
+                },
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return self.pop_due_timer(),
+            }
+        }
+    }
+
+    fn stats(&self) -> NetStats {
+        self.stats
+    }
+
+    fn rng_draws(&self) -> u64 {
+        self.rng.draws()
+    }
+
+    fn touched_pairs_snapshot(&self) -> Vec<(usize, u64, u64)> {
+        self.pairs.iter().map(|(&id, &(s, l))| (id as usize, s, l)).collect()
+    }
+
+    fn n_touched_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    fn socket_counters(&self) -> SocketCounters {
+        SocketCounters {
+            datagrams_received: self.received.load(Ordering::Relaxed),
+            ..self.sock
+        }
+    }
+}
+
+impl Drop for UdpBackend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join(); // bounded: receivers poll `stop` every POLL
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::Link;
+
+    fn lossless(n: usize) -> Topology {
+        Topology::uniform(n, Link::from_mbytes(10.0, 0.01), 0.0)
+    }
+
+    #[test]
+    fn frame_roundtrip_all_fields() {
+        for pkt in [
+            Packet::data(0, 1, 7, 2, 65_536),
+            Packet::ack(3, 0, 9, 0),
+            Packet::data(11, 5, u64::MAX, u32::MAX, 0),
+        ] {
+            let buf = encode(&pkt);
+            assert!(buf.len() <= HEADER_BYTES + MAX_PAD_BYTES);
+            assert_eq!(decode(&buf, 12), Some(pkt), "{pkt:?}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_frames() {
+        let good = encode(&Packet::data(0, 1, 1, 0, 100));
+        assert!(decode(&good[..HEADER_BYTES - 1], 2).is_none(), "short header");
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(decode(&bad_magic, 2).is_none(), "bad magic");
+        let mut bad_kind = good.clone();
+        bad_kind[4] = 7;
+        assert!(decode(&bad_kind, 2).is_none(), "unknown kind");
+        assert!(decode(&good, 1).is_none(), "dst out of node range");
+    }
+
+    #[test]
+    fn loopback_delivers_and_counts() {
+        let mut b = UdpBackend::new(lossless(2), 42).expect("bind loopback");
+        for seq in 0..20u64 {
+            Transport::send(&mut b, Packet::data(0, 1, seq, 0, 1024));
+        }
+        let mut got = Vec::new();
+        while got.len() < 20 {
+            match b.step() {
+                Some((_, NetEvent::Deliver(p))) => got.push(p.seq),
+                Some((_, NetEvent::Timer { .. })) => panic!("no timer armed"),
+                None => panic!("went idle with {} of 20 delivered", got.len()),
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+        let st = Transport::stats(&b);
+        assert_eq!(st.data_sent, 20);
+        assert_eq!(st.data_delivered, 20);
+        assert_eq!(st.lost, 0);
+        let sc = b.socket_counters();
+        assert_eq!(sc.datagrams_sent, 20);
+        assert_eq!(sc.datagrams_received, 20);
+        assert_eq!(sc.injected_drops, 0);
+        assert_eq!(b.touched_pairs_snapshot(), vec![(1, 20, 0)]);
+    }
+
+    #[test]
+    fn injected_loss_drops_at_receiver() {
+        let mut b =
+            UdpBackend::new(Topology::uniform(2, Link::from_mbytes(10.0, 0.01), 1.0), 7)
+                .expect("bind loopback");
+        for seq in 0..10u64 {
+            Transport::send(&mut b, Packet::data(0, 1, seq, 0, 512));
+        }
+        // p = 1: everything is admitted-then-dropped; step() goes idle.
+        assert!(b.step().is_none());
+        let st = Transport::stats(&b);
+        assert_eq!(st.data_sent, 10);
+        assert_eq!(st.data_delivered, 0);
+        assert_eq!(st.lost, 10);
+        let sc = b.socket_counters();
+        assert_eq!(sc.injected_drops, 10);
+        assert_eq!(sc.datagrams_received, 10);
+        assert_eq!(b.touched_pairs_snapshot(), vec![(1, 10, 10)]);
+        assert!(b.rng_draws() > 0);
+    }
+
+    #[test]
+    fn timers_fire_in_deadline_order() {
+        let mut b = UdpBackend::new(lossless(2), 1).expect("bind loopback");
+        b.set_wall_per_model(0.001);
+        Transport::arm_timer(&mut b, 1, 77, 30.0);
+        Transport::arm_timer(&mut b, 0, 33, 1.0); // floors to MIN_TIMER_WALL
+        let first = b.step().expect("first deadline");
+        let second = b.step().expect("second deadline");
+        assert!(matches!(first.1, NetEvent::Timer { node: 0, token: 33 }));
+        assert!(matches!(second.1, NetEvent::Timer { node: 1, token: 77 }));
+        assert!(second.0 >= first.0, "model clock is monotone");
+        assert_eq!(b.socket_counters().wall_deadline_fires, 2);
+        assert!(b.step().is_none(), "idle after both fire");
+    }
+
+    #[test]
+    fn duplicate_sends_deliver_each_copy() {
+        let mut b = UdpBackend::new(lossless(2), 3).expect("bind loopback");
+        b.force_duplicate_sends(true);
+        Transport::send(&mut b, Packet::data(0, 1, 5, 0, 256));
+        let mut seen = 0;
+        while let Some((_, ev)) = b.step() {
+            match ev {
+                NetEvent::Deliver(p) => {
+                    assert_eq!((p.src, p.dst, p.seq), (0, 1, 5));
+                    seen += 1;
+                }
+                NetEvent::Timer { .. } => panic!("no timer armed"),
+            }
+        }
+        assert_eq!(seen, 2, "both wire copies admitted");
+        assert_eq!(b.socket_counters().datagrams_sent, 2);
+        assert_eq!(Transport::stats(&b).data_sent, 1, "one model-level send");
+    }
+
+    #[test]
+    fn flow_sends_match_des_accounting() {
+        let topo = Topology::uniform(2, Link::from_mbytes(10.0, 0.01), 0.3);
+        let mut b = UdpBackend::new(topo.clone(), 99).expect("bind loopback");
+        let mut net = crate::net::transport::Network::new(topo, 99);
+        let sizes: Vec<u64> = (0..50).map(|i| 1000 + i).collect();
+        let mut fates_b = Vec::new();
+        let mut fates_n = Vec::new();
+        Transport::flow_send_group(&mut b, 0, 1, PacketKind::Data, &sizes, &mut fates_b);
+        net.flow_send_group(0, 1, PacketKind::Data, &sizes, &mut fates_n);
+        assert_eq!(fates_b, fates_n, "same seed, same draw stream");
+        assert_eq!(Transport::stats(&b), net.stats);
+        assert_eq!(b.touched_pairs_snapshot(), net.touched_pairs().collect::<Vec<_>>());
+        assert_eq!(Transport::rng_draws(&b), net.rng_draws());
+    }
+}

@@ -14,12 +14,19 @@
 //! Gilbert–Elliott bursty channel as an ablation (the paper assumes
 //! independence; the ablation quantifies what burstiness does to ρ̂).
 //!
+//! The protocol and runtime drive the network through the object-safe
+//! [`backend::Transport`] contract: [`backend::SimBackend`] wraps the
+//! DES (`transport::Network` is itself a `Transport`, default
+//! everywhere) and [`backend::UdpBackend`] runs the same protocol over
+//! real loopback `UdpSocket`s — see `rust/src/net/README.md` §Backends.
+//!
 //! The reliability *mechanism* the protocol wraps around a phase is
 //! pluggable ([`scheme`]): k-copy duplication (the paper), RBUDP-style
 //! blast + selective retransmit, XOR parity FEC, and a flow-level TCP
 //! baseline — see `rust/src/net/README.md` for each scheme's cost
 //! derivation and the regimes where each should win.
 
+pub mod backend;
 pub mod link;
 pub mod loss;
 pub mod packet;
@@ -30,6 +37,7 @@ pub mod tcp;
 pub mod topology;
 pub mod transport;
 
+pub use backend::{SimBackend, SocketCounters, Transport, UdpBackend};
 pub use link::Link;
 pub use loss::{Bernoulli, GilbertElliott, LossModel, Perfect, PiecewiseStationary};
 pub use packet::{NodeId, Packet, PacketKind};

@@ -20,9 +20,10 @@
 //! counterpart of the analytic ρ̂ (eq 1 for WholeRound, eq 3 for
 //! Selective) — `rust/tests/sim_vs_model.rs` pins them together.
 
+use super::backend::Transport;
 use super::packet::{NodeId, Packet, PacketKind};
 use super::scheme::{KCopy, ReliabilityScheme};
-use super::transport::{NetEvent, Network};
+use super::transport::NetEvent;
 use crate::obs::{TraceEvent, TraceSink};
 
 /// Retransmission discipline for lost packets.
@@ -195,7 +196,11 @@ impl ParityState {
 /// the paper's k-copy scheme with one copy count for every transfer
 /// (`cfg.copies`). Thin shim over [`run_phase_scheme`], kept for the
 /// many k-copy call sites; new code should pass a scheme explicitly.
-pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -> PhaseReport {
+pub fn run_phase(
+    net: &mut dyn Transport,
+    transfers: &[Transfer],
+    cfg: &PhaseConfig,
+) -> PhaseReport {
     run_phase_scheme(net, transfers, cfg, &KCopy, None)
 }
 
@@ -205,7 +210,7 @@ pub fn run_phase(net: &mut Network, transfers: &[Transfer], cfg: &PhaseConfig) -
 /// link's k, so `p_s^k = (1−p^k)²` holds per link). New code should
 /// pass a scheme explicitly.
 pub fn run_phase_with_copies(
-    net: &mut Network,
+    net: &mut dyn Transport,
     transfers: &[Transfer],
     cfg: &PhaseConfig,
     copies: Option<&[u32]>,
@@ -224,7 +229,7 @@ pub fn run_phase_with_copies(
 /// uniform `cfg.copies`. A flow-level scheme (TCP-like) takes the phase
 /// over entirely and the round loop never starts.
 pub fn run_phase_scheme(
-    net: &mut Network,
+    net: &mut dyn Transport,
     transfers: &[Transfer],
     cfg: &PhaseConfig,
     scheme: &dyn ReliabilityScheme,
@@ -239,7 +244,7 @@ pub fn run_phase_scheme(
 /// `None` path is the exact pre-hook protocol — no allocation, no rng
 /// draws, no reordering (pinned by `tests/trace_invariance.rs`).
 pub fn run_phase_scheme_traced(
-    net: &mut Network,
+    net: &mut dyn Transport,
     transfers: &[Transfer],
     cfg: &PhaseConfig,
     scheme: &dyn ReliabilityScheme,
@@ -261,9 +266,10 @@ pub fn run_phase_scheme_traced(
     );
     let phase = PHASE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let t0 = net.now();
-    let data0 = net.stats.data_sent;
-    let acks0 = net.stats.acks_sent;
-    let bytes0 = net.stats.bytes_sent;
+    let stats_at_entry = net.stats();
+    let data0 = stats_at_entry.data_sent;
+    let acks0 = stats_at_entry.acks_sent;
+    let bytes0 = stats_at_entry.bytes_sent;
 
     let mut unacked: Vec<bool> = vec![true; transfers.len()];
     let mut n_unacked = transfers.len();
@@ -290,7 +296,7 @@ pub fn run_phase_scheme_traced(
     // closure and reused across rounds.
     let mut resend_order: Vec<u32> = Vec::new();
     let mut batch: Vec<Packet> = Vec::new();
-    let mut send_round = move |net: &mut Network,
+    let mut send_round = move |net: &mut dyn Transport,
                                unacked: &[bool],
                                round: u64,
                                parity: &mut Option<ParityState>| {
@@ -365,7 +371,7 @@ pub fn run_phase_scheme_traced(
     // Wire counters at the start of the in-flight round; only the
     // traced path reads or refreshes it (a stack `Copy`, no side
     // effects on the disabled path).
-    let mut round_stats0 = net.stats;
+    let mut round_stats0 = net.stats();
     send_round(net, &unacked, round, &mut parity);
 
     let mut ack_batch: Vec<Packet> = Vec::new();
@@ -393,6 +399,13 @@ pub fn run_phase_scheme_traced(
                                 .expect("parity packets only fly with parity on")
                                 .on_parity(gid, &mut known);
                         } else {
+                            if idx as usize >= transfers.len() {
+                                // A real-socket backend can surface a
+                                // frame this phase never emitted
+                                // (foreign sender, duplicated stale
+                                // traffic); never index with it.
+                                continue;
+                            }
                             if let Some(ps) = parity.as_mut() {
                                 ps.on_data(idx as usize, &mut known);
                             }
@@ -421,6 +434,9 @@ pub fn run_phase_scheme_traced(
                     }
                     PacketKind::Ack => {
                         let i = idx as usize;
+                        if i >= transfers.len() {
+                            continue; // foreign/corrupt seq — see Data arm
+                        }
                         if unacked[i] {
                             unacked[i] = false;
                             n_unacked -= 1;
@@ -438,7 +454,7 @@ pub fn run_phase_scheme_traced(
                     break;
                 }
                 if let Some(t) = trace.as_mut() {
-                    let d = net.stats;
+                    let d = net.stats();
                     t.record(&TraceEvent::PhaseRound {
                         phase,
                         round,
@@ -453,13 +469,14 @@ pub fn run_phase_scheme_traced(
                 }
                 round += 1;
                 if round as u32 >= cfg.max_rounds {
+                    let d = net.stats();
                     return PhaseReport {
                         rounds: cfg.max_rounds,
                         completion_s: (net.now().saturating_sub(t0)).as_secs_f64(),
                         model_duration_s: cfg.max_rounds as f64 * cfg.timeout_s,
-                        data_packets_sent: net.stats.data_sent - data0,
-                        ack_packets_sent: net.stats.acks_sent - acks0,
-                        wire_bytes_sent: net.stats.bytes_sent - bytes0,
+                        data_packets_sent: d.data_sent - data0,
+                        ack_packets_sent: d.acks_sent - acks0,
+                        wire_bytes_sent: d.bytes_sent - bytes0,
                         completed: false,
                     };
                 }
@@ -471,7 +488,7 @@ pub fn run_phase_scheme_traced(
     // The final (in-flight) round never expires through the Timer arm —
     // the loop exits on the last ack — so its delta is emitted here.
     if let Some(t) = trace.as_mut() {
-        let d = net.stats;
+        let d = net.stats();
         t.record(&TraceEvent::PhaseRound {
             phase,
             round,
@@ -485,13 +502,14 @@ pub fn run_phase_scheme_traced(
     }
 
     let rounds = (round + 1) as u32;
+    let d = net.stats();
     PhaseReport {
         rounds,
         completion_s: (last_ack_time.saturating_sub(t0)).as_secs_f64(),
         model_duration_s: rounds as f64 * cfg.timeout_s,
-        data_packets_sent: net.stats.data_sent - data0,
-        ack_packets_sent: net.stats.acks_sent - acks0,
-        wire_bytes_sent: net.stats.bytes_sent - bytes0,
+        data_packets_sent: d.data_sent - data0,
+        ack_packets_sent: d.acks_sent - acks0,
+        wire_bytes_sent: d.bytes_sent - bytes0,
         completed: n_unacked == 0,
     }
 }
@@ -502,6 +520,7 @@ mod tests {
     use crate::net::link::Link;
     use crate::net::scheme::{BlastRetransmit, FecParity, TcpLike};
     use crate::net::topology::Topology;
+    use crate::net::transport::Network;
     use crate::util::stats::Online;
 
     fn net_with_loss(n: usize, p: f64, seed: u64) -> Network {

@@ -51,7 +51,7 @@ use crate::model::rho;
 use super::link::Link;
 use super::packet::{NodeId, PacketKind, ACK_BYTES};
 use super::protocol::{PhaseConfig, PhaseReport, Transfer};
-use super::transport::Network;
+use super::backend::Transport;
 
 /// What a scheme puts on the wire for one still-unacknowledged transfer
 /// in one round: data copies from the sender, ack copies mirrored by
@@ -101,7 +101,7 @@ pub trait ReliabilityScheme: Send {
     /// never starts. `None` (the default) uses the round loop.
     fn run_flow(
         &self,
-        net: &mut Network,
+        net: &mut dyn Transport,
         transfers: &[Transfer],
         cfg: &PhaseConfig,
     ) -> Option<PhaseReport> {
@@ -239,7 +239,7 @@ impl TcpLike {
     /// equivalence reference. Returns (time_s, rounds, completed).
     fn run_pair_flow(
         &self,
-        net: &mut Network,
+        net: &mut dyn Transport,
         src: NodeId,
         dst: NodeId,
         segments: &[u64],
@@ -306,7 +306,7 @@ impl TcpLike {
     /// deterministic. Returns (worst time, worst rounds, all completed).
     fn run_pooled_flows(
         &self,
-        net: &mut Network,
+        net: &mut dyn Transport,
         pair_segments: &std::collections::BTreeMap<(NodeId, NodeId), Vec<u64>>,
         max_rounds: u32,
     ) -> (f64, u64, bool) {
@@ -399,13 +399,14 @@ impl ReliabilityScheme for TcpLike {
 
     fn run_flow(
         &self,
-        net: &mut Network,
+        net: &mut dyn Transport,
         transfers: &[Transfer],
         cfg: &PhaseConfig,
     ) -> Option<PhaseReport> {
-        let data0 = net.stats.data_sent;
-        let acks0 = net.stats.acks_sent;
-        let bytes0 = net.stats.bytes_sent;
+        let stats0 = net.stats();
+        let data0 = stats0.data_sent;
+        let acks0 = stats0.acks_sent;
+        let bytes0 = stats0.bytes_sent;
         // One AIMD flow per directed pair, all pairs concurrent (the
         // fluid approximation ignores uplink sharing between a node's
         // flows, as flow-level TCP models do); the phase completes when
@@ -431,13 +432,14 @@ impl ReliabilityScheme for TcpLike {
         } else {
             self.run_pooled_flows(net, &pair_segments, cfg.max_rounds)
         };
+        let d = net.stats();
         Some(PhaseReport {
             rounds: worst_rounds.min(u64::from(u32::MAX)) as u32,
             completion_s: worst_time,
             model_duration_s: worst_time,
-            data_packets_sent: net.stats.data_sent - data0,
-            ack_packets_sent: net.stats.acks_sent - acks0,
-            wire_bytes_sent: net.stats.bytes_sent - bytes0,
+            data_packets_sent: d.data_sent - data0,
+            ack_packets_sent: d.acks_sent - acks0,
+            wire_bytes_sent: d.bytes_sent - bytes0,
             completed,
         })
     }

@@ -36,6 +36,7 @@
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
+use crate::net::backend::{SocketCounters, Transport};
 use crate::net::transport::Network;
 use crate::util::stats::LogHist;
 
@@ -356,26 +357,42 @@ pub struct MetricsRegistry {
     pub wire_bytes_sent: u64,
     /// Per-phase round counts in the fixed log₂ bins.
     pub rounds_hist: LogHist,
+    /// Socket-layer counters (datagrams, injected drops, wall-deadline
+    /// fires) — identically zero on a DES run, so adding the field
+    /// leaves every DES snapshot value-identical to pre-backend runs.
+    pub socket: SocketCounters,
 }
 
 impl MetricsRegistry {
-    /// Snapshot a network's counters (the histogram starts empty — the
-    /// runtime merges per-phase round counts in as it runs).
+    /// Snapshot a DES network's counters (the histogram starts empty —
+    /// the runtime merges per-phase round counts in as it runs).
     pub fn from_network(net: &Network) -> MetricsRegistry {
+        MetricsRegistry::from_transport(net)
+    }
+
+    /// Snapshot any transport backend's counters — the backend-generic
+    /// [`MetricsRegistry::from_network`]; the DES leaves `socket` at its
+    /// all-zero default.
+    pub fn from_transport(net: &dyn Transport) -> MetricsRegistry {
+        let stats = net.stats();
         MetricsRegistry {
             net_rng_draws: net.rng_draws(),
             touched_pairs: net.n_touched_pairs() as u64,
-            data_packets_sent: net.stats.data_sent,
-            data_packets_delivered: net.stats.data_delivered,
-            acks_sent: net.stats.acks_sent,
-            packets_lost: net.stats.lost,
-            wire_bytes_sent: net.stats.bytes_sent,
+            data_packets_sent: stats.data_sent,
+            data_packets_delivered: stats.data_delivered,
+            acks_sent: stats.acks_sent,
+            packets_lost: stats.lost,
+            wire_bytes_sent: stats.bytes_sent,
             rounds_hist: LogHist::new(),
+            socket: net.socket_counters(),
         }
     }
 
     /// The scalar counters as a named, iterable surface (for tables and
-    /// ad-hoc queries; the histogram is exposed as `rounds_hist`).
+    /// ad-hoc queries; the histogram is exposed as `rounds_hist`, the
+    /// socket-backend counters as `socket` — both outside this array so
+    /// its pinned 7-entry shape, and every artifact derived from it,
+    /// stays byte-identical on DES runs).
     pub fn counters(&self) -> [(&'static str, u64); 7] {
         [
             ("net_rng_draws", self.net_rng_draws),
@@ -523,6 +540,7 @@ mod tests {
             packets_lost: 4,
             wire_bytes_sent: 1024,
             rounds_hist: LogHist::new(),
+            socket: SocketCounters::default(),
         };
         let copy = m; // Copy: ReplicaRun embeds it by value.
         assert_eq!(copy, m);

@@ -49,6 +49,13 @@ use crate::util::stats::{LogHist, Summary};
 /// set is unchanged.
 pub const CAMPAIGN_SCHEMA: &str = "lbsp-campaign/v5";
 
+/// Schema tag of the `lbsp bench-net` loopback-benchmark artifact: one
+/// JSON object with the backend label, topology/workload coordinates
+/// and one entry per reliability scheme (goodput, wire bytes per
+/// payload byte, round count, socket counters). Documented in
+/// ROADMAP.md; the schema-drift lint cross-checks the tag.
+pub const NETBENCH_SCHEMA: &str = "lbsp-netbench/v1";
+
 /// Older schema tags, still accepted by the artifact reader.
 pub const CAMPAIGN_SCHEMA_V1: &str = "lbsp-campaign/v1";
 pub const CAMPAIGN_SCHEMA_V2: &str = "lbsp-campaign/v2";
@@ -421,6 +428,94 @@ fn write_campaign_inner(
     Ok((json_path, csv_path))
 }
 
+// --- `lbsp bench-net` artifact (`lbsp-netbench/v1`) ------------------------
+
+/// One reliability scheme's aggregate over the benchmark's replicas in
+/// the `lbsp-netbench/v1` artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetBenchEntry {
+    /// `SchemeSpec::label()` — the same coordinate campaign CSVs use.
+    pub scheme: String,
+    pub replicas: u64,
+    pub converged_frac: f64,
+    pub validated_frac: f64,
+    /// Mean communication rounds per replica.
+    pub rounds_mean: f64,
+    /// Distinct payload bytes summed over replicas.
+    pub payload_bytes: u64,
+    /// Wire bytes (every copy, acks and parity included) over replicas.
+    pub wire_bytes: u64,
+    /// `wire_bytes / payload_bytes` — the scheme's wire-efficiency
+    /// metric, comparable with the campaign CSV column of this name.
+    pub wire_bytes_per_payload: f64,
+    /// Modeled (DES-accounted) run time summed over replicas.
+    pub model_time_s: f64,
+    /// Host wall-clock summed over replicas — nondeterministic, like
+    /// the campaign v5 `wall_s` extra.
+    pub wall_s: f64,
+    /// `payload_bytes / wall_s`: end-to-end goodput through the real
+    /// socket path.
+    pub goodput_bytes_per_s: f64,
+    /// `SocketCounters` totals in `counters()` order.
+    pub datagrams_sent: u64,
+    pub datagrams_received: u64,
+    pub injected_drops: u64,
+    pub wall_deadline_fires: u64,
+}
+
+fn netbench_entry_json(e: &NetBenchEntry) -> String {
+    format!(
+        "{{\"scheme\":{},\"replicas\":{},\"converged_frac\":{},\
+         \"validated_frac\":{},\"rounds_mean\":{},\"payload_bytes\":{},\
+         \"wire_bytes\":{},\"wire_bytes_per_payload\":{},\
+         \"model_time_s\":{},\"wall_s\":{},\"goodput_bytes_per_s\":{},\
+         \"datagrams_sent\":{},\"datagrams_received\":{},\
+         \"injected_drops\":{},\"wall_deadline_fires\":{}}}",
+        jstr(&e.scheme),
+        e.replicas,
+        jnum(e.converged_frac),
+        jnum(e.validated_frac),
+        jnum(e.rounds_mean),
+        e.payload_bytes,
+        e.wire_bytes,
+        jnum(e.wire_bytes_per_payload),
+        jnum(e.model_time_s),
+        jnum(e.wall_s),
+        jnum(e.goodput_bytes_per_s),
+        e.datagrams_sent,
+        e.datagrams_received,
+        e.injected_drops,
+        e.wall_deadline_fires,
+    )
+}
+
+/// The full `lbsp-netbench/v1` JSON: schema tag, transport backend
+/// label, topology/workload coordinates, and one entry per scheme in
+/// bench order. Goodput and `wall_s` are host-dependent by nature;
+/// everything else is replayable from the coordinates.
+pub fn netbench_json(
+    backend: &str,
+    workload: &str,
+    nodes: usize,
+    p: f64,
+    copies: u32,
+    seed: u64,
+    entries: &[NetBenchEntry],
+) -> String {
+    format!(
+        "{{\"schema\":{},\"backend\":{},\"workload\":{},\"nodes\":{},\
+         \"p\":{},\"copies\":{},\"seed\":{},\"schemes\":{}}}\n",
+        jstr(NETBENCH_SCHEMA),
+        jstr(backend),
+        jstr(workload),
+        nodes,
+        jnum(p),
+        copies,
+        seed,
+        jarr(entries, netbench_entry_json),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -476,6 +571,37 @@ mod tests {
         // DES cells have no closed-form prediction.
         assert_eq!(j.matches("\"speedup_pred\":null").count(), cells.len());
         // Balanced braces (cheap well-formedness smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.ends_with("}\n"));
+    }
+
+    #[test]
+    fn netbench_json_carries_schema_coordinates_and_entries() {
+        let e = NetBenchEntry {
+            scheme: "kcopy".into(),
+            replicas: 2,
+            converged_frac: 1.0,
+            validated_frac: 1.0,
+            rounds_mean: 3.5,
+            payload_bytes: 4096,
+            wire_bytes: 9216,
+            wire_bytes_per_payload: 2.25,
+            model_time_s: 0.5,
+            wall_s: 0.1,
+            goodput_bytes_per_s: 40960.0,
+            datagrams_sent: 24,
+            datagrams_received: 22,
+            injected_drops: 2,
+            wall_deadline_fires: 1,
+        };
+        let j = netbench_json("udp-loopback", "laplace", 8, 0.05, 2, 7, &[e]);
+        assert!(j.starts_with("{\"schema\":\"lbsp-netbench/v1\""));
+        assert!(j.contains("\"backend\":\"udp-loopback\""));
+        assert!(j.contains("\"workload\":\"laplace\",\"nodes\":8"));
+        assert!(j.contains("\"schemes\":[{\"scheme\":\"kcopy\""));
+        assert!(j.contains("\"wire_bytes_per_payload\":2.25"));
+        assert!(j.contains("\"goodput_bytes_per_s\":40960.0"));
+        assert!(j.contains("\"injected_drops\":2,\"wall_deadline_fires\":1"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert!(j.ends_with("}\n"));
     }

@@ -17,8 +17,8 @@ mod figures;
 mod tables;
 
 pub use artifacts::{
-    campaign_csv, campaign_json, campaign_json_with_extras, write_campaign,
-    write_campaign_with_extras, CAMPAIGN_SCHEMA,
+    campaign_csv, campaign_json, campaign_json_with_extras, netbench_json, write_campaign,
+    write_campaign_with_extras, NetBenchEntry, CAMPAIGN_SCHEMA, NETBENCH_SCHEMA,
 };
 pub use diff::{diff_campaigns, diff_json, diff_table, read_campaign_str, CampaignDiff};
 pub use figures::{

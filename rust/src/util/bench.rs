@@ -5,6 +5,7 @@
 //! and optional throughput. Benches under `rust/benches/` are
 //! `harness = false` binaries that drive this.
 
+// lbsp-lint: allow(backend-isolation) reason="the bench timer measures host wall time by definition; results go to stderr/bench artifacts, never into deterministic outputs"
 use std::time::Instant;
 
 use super::stats::Sample;
@@ -73,6 +74,7 @@ pub fn bench_units(
     let mut times = Sample::new();
     let mut min_s = f64::INFINITY;
     for _ in 0..iters {
+        // lbsp-lint: allow(backend-isolation) reason="bench timing is wall-clock by definition"
         let t0 = Instant::now();
         f();
         let dt = t0.elapsed().as_secs_f64();

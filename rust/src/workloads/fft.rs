@@ -219,7 +219,7 @@ impl DistWorkload for FftCell {
                 (0..self.n).all(|j| got[i * self.n + j].sub(want[i][j]).norm() < tol)
             })
         };
-        ReplicaRun::from_report(&rep, self.sequential_s(), rt.network().stats, validated)
+        ReplicaRun::from_report(&rep, self.sequential_s(), rt.net_stats(), validated)
     }
 }
 

@@ -234,7 +234,7 @@ impl DistWorkload for LaplaceCell {
             let want = jacobi_seq(&self.global, rows, self.w, self.sweeps);
             prog.to_global().iter().zip(&want).all(|(g, w)| (g - w).abs() < 1e-5)
         };
-        ReplicaRun::from_report(&rep, self.sequential_s(), rt.network().stats, validated)
+        ReplicaRun::from_report(&rep, self.sequential_s(), rt.net_stats(), validated)
     }
 }
 

@@ -259,7 +259,7 @@ impl DistWorkload for MatmulCell {
             let tol = 1e-3 * n as f32;
             prog.c_global().iter().zip(&want).all(|(g, w)| (g - w).abs() < tol)
         };
-        ReplicaRun::from_report(&rep, self.sequential_s(), rt.network().stats, validated)
+        ReplicaRun::from_report(&rep, self.sequential_s(), rt.net_stats(), validated)
     }
 }
 

@@ -206,7 +206,7 @@ impl DistWorkload for SortCell {
         let mut prog = BitonicSort::new(self.keys, ComputeBackend::Native);
         let rep = rt.run(&mut prog);
         let validated = rep.completed && prog.gathered() == want;
-        ReplicaRun::from_report(&rep, seq, rt.network().stats, validated)
+        ReplicaRun::from_report(&rep, seq, rt.net_stats(), validated)
     }
 }
 

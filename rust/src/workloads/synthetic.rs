@@ -82,7 +82,7 @@ impl DistWorkload for SyntheticExchange {
         // The probe has no output data; the reliability contract is the
         // exact delivered-message count.
         let validated = rep.completed && prog.delivered == expected;
-        ReplicaRun::from_report(&rep, seq, rt.network().stats, validated)
+        ReplicaRun::from_report(&rep, seq, rt.net_stats(), validated)
     }
 }
 

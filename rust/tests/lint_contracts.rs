@@ -114,6 +114,35 @@ fn rng_hygiene_hit_miss_waiver() {
 }
 
 #[test]
+fn backend_isolation_hit_miss_waiver() {
+    // Hit: a real socket outside `net/backend/`.
+    let hit = lint_source("rust/src/net/protocol.rs", "use std::net::UdpSocket;\n");
+    assert_eq!(hit.len(), 1);
+    assert_eq!(hit[0].rule, RuleId::BackendIsolation);
+    assert_eq!((hit[0].file.as_str(), hit[0].line), ("rust/src/net/protocol.rs", 1));
+
+    // Miss: the backend directory itself, test code, and comments.
+    assert!(lint_source("rust/src/net/backend/udp.rs", "use std::net::UdpSocket;\n").is_empty());
+    assert!(lint_source(
+        "rust/src/net/protocol.rs",
+        "#[cfg(test)]\nmod tests { use std::thread; }\n"
+    )
+    .is_empty());
+    assert!(lint_source("rust/src/net/protocol.rs", "// std::net std::thread Instant\n")
+        .is_empty());
+
+    // Waiver: an audited wall-clock site is reported as waived.
+    let waived = lint_source(
+        "rust/src/util/bench.rs",
+        "// lbsp-lint: allow(backend-isolation) reason=\"bench timer is wall-clock by definition\"\n\
+         use std::time::Instant;\n",
+    );
+    assert_eq!(waived.len(), 1);
+    assert_eq!(waived[0].rule, RuleId::BackendIsolation);
+    assert!(waived[0].waived.is_some());
+}
+
+#[test]
 fn target_registration_hit_and_miss() {
     let cargo = "\
         [[test]]\n\
@@ -152,14 +181,15 @@ fn schema_drift_hit_and_miss() {
         campaign_schema: Some("lbsp-campaign/v5".into()),
         diff_schema: Some("lbsp-diff/v1".into()),
         trace_schema: Some("lbsp-trace/v1".into()),
+        netbench_schema: Some("lbsp-netbench/v1".into()),
         csv_base_header: Some("a,b".into()),
         csv_summary_blocks: vec!["x".into()],
         csv_spread_blocks: vec!["z".into()],
         csv_columns: Some(12), // 2 + 7 + 3
         trace_tags: vec!["e1".into(), "e2".into(), "e3".into(), "e4".into(), "e5".into()],
     };
-    let roadmap = "lbsp-campaign/v5 lbsp-diff/v1 lbsp-trace/v1 a,b x z 12 columns \
-                   e1 e2 e3 e4 e5";
+    let roadmap = "lbsp-campaign/v5 lbsp-diff/v1 lbsp-trace/v1 lbsp-netbench/v1 a,b x z \
+                   12 columns e1 e2 e3 e4 e5";
     let readme = "lbsp-trace/v1 e1 e2 e3 e4 e5";
     assert!(check_schema_facts(&facts, roadmap, readme).is_empty());
 
@@ -167,6 +197,11 @@ fn schema_drift_hit_and_miss() {
     let stale = roadmap.replace("lbsp-diff/v1", "lbsp-diff/v0");
     let f = check_schema_facts(&facts, &stale, readme);
     assert!(f.iter().any(|f| f.rule == RuleId::SchemaDrift && f.message.contains("lbsp-diff/v1")));
+    let stale = roadmap.replace("lbsp-netbench/v1", "lbsp-netbench/v0");
+    let f = check_schema_facts(&facts, &stale, readme);
+    assert!(f
+        .iter()
+        .any(|f| f.rule == RuleId::SchemaDrift && f.message.contains("lbsp-netbench/v1")));
 }
 
 #[test]
@@ -243,11 +278,13 @@ fn lint_binary_flags_seeded_violations_with_file_line() {
          pub fn f(seed: u64) {\n\
          let mut rng = Rng::new(seed);\n\
          sink.record(&ev);\n\
+         std::thread::spawn(work);\n\
          }\n",
     );
     w(
         "rust/src/report/artifacts.rs",
         "pub const CAMPAIGN_SCHEMA: &str = \"lbsp-campaign/v5\";\n\
+         pub const NETBENCH_SCHEMA: &str = \"lbsp-netbench/v1\";\n\
          pub const CAMPAIGN_CSV_BASE_HEADER: &str = \"a,b\";\n\
          pub const CAMPAIGN_CSV_SUMMARY_BLOCKS: [&str; 1] = [\"x\"];\n\
          pub const CAMPAIGN_CSV_SPREAD_BLOCKS: [&str; 1] = [\"z\"];\n\
@@ -265,7 +302,8 @@ fn lint_binary_flags_seeded_violations_with_file_line() {
     w("rust/src/obs/README.md", "lbsp-trace/v1 e1 e2 e3 e4 e5\n");
     w(
         "ROADMAP.md",
-        "lbsp-campaign/v5 lbsp-diff/v1 lbsp-trace/v1 a,b x z 12 columns e1 e2 e3 e4 e5\n",
+        "lbsp-campaign/v5 lbsp-diff/v1 lbsp-trace/v1 lbsp-netbench/v1 a,b x z 12 columns \
+         e1 e2 e3 e4 e5\n",
     );
 
     let out = Command::new(env!("CARGO_BIN_EXE_lbsp"))
@@ -279,6 +317,7 @@ fn lint_binary_flags_seeded_violations_with_file_line() {
     assert!(stdout.contains("rust/src/net/bad.rs:1: determinism:"), "{stdout}");
     assert!(stdout.contains("rust/src/net/bad.rs:3: rng-hygiene:"), "{stdout}");
     assert!(stdout.contains("rust/src/net/bad.rs:4: trace-gating:"), "{stdout}");
+    assert!(stdout.contains("rust/src/net/bad.rs:5: backend-isolation:"), "{stdout}");
 
     std::fs::remove_dir_all(&root).ok();
 }

@@ -49,7 +49,7 @@ fn laplace_n2048_completes_with_o_n_touched_pairs() {
     assert!(run.validated, "n={n} output diverged from the sequential reference");
     assert!(run.sequential_s == seq_s);
 
-    let touched = rt.network().n_touched_pairs();
+    let touched = rt.transport().n_touched_pairs();
     assert!(
         touched >= 2 * (n - 1),
         "halo exchange must touch every ring pair: {touched}"
@@ -100,7 +100,7 @@ fn laplace_n10000_campaign_cell_completes_and_validates() {
     .with_copies(2);
     let run = cell.run_replica(&mut rt);
     assert!(run.completed && run.validated, "n={n} direct replica");
-    let touched = rt.network().n_touched_pairs();
+    let touched = rt.transport().n_touched_pairs();
     assert!(
         (2 * (n - 1)..=4 * n).contains(&touched),
         "per-pair state must stay O(n) at n=10⁴, got {touched} touched pairs"

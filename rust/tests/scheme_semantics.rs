@@ -90,7 +90,7 @@ fn kcopy_k1_and_zero_budget_blast_share_netstats_on_the_same_seed() {
                 .with_scheme(scheme.build());
             let wl = Box::new(SyntheticExchange::new(4, 3, 2, 2048, 0.01));
             let run = wl.run_replica(&mut rt);
-            (run, rt.network().stats)
+            (run, rt.net_stats())
         };
         let (run_k, stats_k) = run(SchemeSpec::KCopy);
         let (run_b, stats_b) = run(SchemeSpec::Blast);

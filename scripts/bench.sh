@@ -37,6 +37,15 @@ for bench in campaign_scaling protocol_schemes; do
     fi
 done
 
+# Opt-in socket tail: LBSP_BENCH_NET=1 additionally runs the loopback
+# UDP bench (`lbsp bench-net`) and leaves BENCH_netbench.json at the
+# repo root. Off by default — its goodput numbers are wall-clock
+# through real sockets, so they are only meaningful on quiet machines.
+if [[ "${LBSP_BENCH_NET:-0}" == "1" ]]; then
+    echo "== lbsp bench-net (-> BENCH_netbench.json) =="
+    cargo run -q --release -- bench-net --out BENCH_netbench.json
+fi
+
 echo "== cargo bench campaign_scaling (-> BENCH_campaign.json) =="
 LBSP_BENCH_OUT=BENCH_campaign.json \
     cargo bench --bench campaign_scaling

@@ -7,7 +7,7 @@
 # --check`, seconds) so a style regression is reported before the
 # minutes-long release build, then the build, the in-tree contract
 # linter (`lbsp lint` — determinism / trace-gating / target
-# registration / schema drift / rng hygiene, see
+# registration / schema drift / rng hygiene / backend isolation, see
 # rust/src/analysis/README.md), the full test suite, and finally
 # `cargo clippy -D warnings` (needs the build graph anyway, so it
 # rides the warm cache). fmt/clippy are skipped with a notice when
@@ -102,6 +102,34 @@ head -n 1 "$trace_out" | grep -q 'lbsp-trace/v1' || {
     exit 1
 }
 rm -f "$trace_out"
+
+# Real-socket smoke: the backend-parity suite (SimBackend vs loopback
+# UdpBackend, adversarial duplication/reordering) in release mode, then
+# one bounded `lbsp bench-net` run — n = 8 laplace over real loopback
+# UDP sockets, replica count pinned to 1 from the environment — which
+# must produce a non-empty lbsp-netbench/v1 JSON. Same wall-clock guard
+# idiom as the loops above; environments that refuse loopback sockets
+# are reported by the suite itself (it skips, never hangs).
+echo "== real-socket loopback smoke (release, bounded) =="
+cargo test -q --release --test backend_parity
+netbench_out="$(mktemp /tmp/lbsp-tier1-netbench.XXXXXX.json)"
+netbench_cmd=(env "LBSP_NETBENCH_REPLICAS=${LBSP_NETBENCH_REPLICAS:-1}" \
+    cargo run -q --release -- bench-net --workload laplace --nodes 8 \
+    --p 0.05 --out "$netbench_out")
+if command -v timeout >/dev/null 2>&1; then
+    timeout "${LBSP_SCENARIO_TIMEOUT_S:-900}" "${netbench_cmd[@]}"
+else
+    "${netbench_cmd[@]}"
+fi
+if [[ ! -s "$netbench_out" ]]; then
+    echo "tier1: bench-net smoke wrote no JSON to $netbench_out" >&2
+    exit 1
+fi
+grep -q 'lbsp-netbench/v1' "$netbench_out" || {
+    echo "tier1: bench-net artifact is not lbsp-netbench/v1" >&2
+    exit 1
+}
+rm -f "$netbench_out"
 
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets -- -D warnings =="
